@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable when pytest is
+invoked from the repository root (`pytest python/tests/`) as well as from
+`python/` (`cd python && pytest tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,59 @@
+//! Workflow demo (E8): the Apex-style 3-job optimization run with
+//! per-job tracing — shows `PP_BSF_MAX_JOB_CASE`-style orchestration,
+//! per-job reduce payloads and the JobDispatcher budget.
+//!
+//! ```bash
+//! cargo run --release --example apex_workflow
+//! ```
+
+use std::sync::Arc;
+
+use bsf::problems::apex::{ApexProblem, JOB_FEASIBILITY, JOB_PURSUIT, JOB_VERIFY};
+use bsf::skeleton::{run_threaded, BsfConfig};
+
+fn job_name(j: usize) -> &'static str {
+    match j {
+        JOB_FEASIBILITY => "feasibility",
+        JOB_PURSUIT => "pursuit",
+        JOB_VERIFY => "verify",
+        _ => "?",
+    }
+}
+
+fn main() {
+    let m = 64; // constraints (plus n box caps added by random())
+    let n = 8; // dimensions
+    let p = ApexProblem::random(m, n, 99);
+    let start = vec![0.0; n];
+    println!(
+        "polytope: {} constraints in R^{n}; objective = Σ x_i / √n",
+        p.a.rows
+    );
+    println!("start objective: {:.4}", p.objective(&start));
+
+    let p = Arc::new(p);
+    let report = run_threaded(
+        Arc::clone(&p),
+        &BsfConfig::with_workers(4).max_iter(200_000),
+    );
+
+    let (x, last_step) = &report.param;
+    println!(
+        "finished in {} iterations ({:.3} ms): final objective {:.4}, \
+         violations {}, last pursuit step {:.2e}",
+        report.iterations,
+        report.elapsed * 1e3,
+        p.objective(x),
+        p.violations(x),
+        last_step
+    );
+    println!(
+        "jobs used: 0={} 1={} 2={} (names)",
+        job_name(0),
+        job_name(1),
+        job_name(2)
+    );
+    assert_eq!(p.violations(x), 0);
+    assert!(p.objective(x) > p.objective(&start));
+    println!("OK");
+}

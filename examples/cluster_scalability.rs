@@ -1,0 +1,133 @@
+//! END-TO-END DRIVER (E10): the full BSF stack on a real small workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cluster_scalability
+//! ```
+//!
+//! What it does — all layers composing:
+//! 1. builds a Jacobi system (n=1024) and solves it through the skeleton
+//!    with the **XLA worker map** (L1 Pallas kernel → L2 JAX chunk map →
+//!    AOT HLO → L3 Rust workers via the PJRT service), logging the
+//!    per-iteration residual (the "loss curve" of this domain);
+//! 2. calibrates the BSF cost model and predicts the scalability
+//!    boundary **before** any parallel run;
+//! 3. sweeps K over the simulated cluster (InfiniBand profile) and
+//!    reports model-vs-measured speedup — the paper family's headline
+//!    figure — plus the same sweep for the compute-heavy gravity app.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use bsf::bench::sweep::{print_sweep, speedup_sweep};
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::gravity::GravityProblem;
+use bsf::problems::jacobi::{JacobiProblem, MapBackend};
+use bsf::runtime::service::XlaService;
+use bsf::skeleton::problem::{BsfProblem, IterCtx};
+use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::util::mat::dist2;
+
+/// Wrapper that logs the residual trajectory (iter_output hook).
+struct LoggedJacobi(JacobiProblem);
+
+impl BsfProblem for LoggedJacobi {
+    type Param = Vec<f64>;
+    type MapElem = usize;
+    type ReduceElem = Vec<f64>;
+
+    fn list_size(&self) -> usize {
+        self.0.list_size()
+    }
+    fn map_list_elem(&self, i: usize) -> usize {
+        self.0.map_list_elem(i)
+    }
+    fn init_parameter(&self) -> Vec<f64> {
+        self.0.init_parameter()
+    }
+    fn map_f(
+        &self,
+        e: &usize,
+        p: &Vec<f64>,
+        c: &bsf::skeleton::SkelVars,
+    ) -> Option<Vec<f64>> {
+        self.0.map_f(e, p, c)
+    }
+    fn reduce_f(&self, x: &Vec<f64>, y: &Vec<f64>, job: usize) -> Vec<f64> {
+        self.0.reduce_f(x, y, job)
+    }
+    fn map_sublist(
+        &self,
+        elems: &[usize],
+        param: &Vec<f64>,
+        vars: &bsf::skeleton::SkelVars,
+    ) -> Option<(Option<Vec<f64>>, u64)> {
+        self.0.map_sublist(elems, param, vars)
+    }
+    fn process_results(
+        &self,
+        r: Option<&Vec<f64>>,
+        c: u64,
+        param: &mut Vec<f64>,
+        ctx: &IterCtx,
+    ) -> bsf::skeleton::StepDecision {
+        let before = param.clone();
+        let d = self.0.process_results(r, c, param, ctx);
+        println!(
+            "  iter {:>3}: ||Δx||² = {:.3e}  (elapsed {:.3}s)",
+            ctx.iter_counter,
+            dist2(param, &before),
+            ctx.elapsed
+        );
+        d
+    }
+}
+
+fn main() {
+    println!("=== E10 end-to-end: XLA-backed Jacobi solve (n=1024, K=4) ===");
+    let n = 1024;
+    let (problem, x_star) = JacobiProblem::random(n, 1e-12, 4242);
+    // Keep the service alive for the whole solve; fall back to the native
+    // map when artifacts are missing.
+    let service: Option<XlaService> = match XlaService::start_default() {
+        Ok(s) => {
+            println!("worker map: AOT Pallas kernel jacobi_n1024_c256 via PJRT");
+            Some(s)
+        }
+        Err(e) => {
+            eprintln!("note: XLA unavailable ({e:#}); using native map");
+            None
+        }
+    };
+    let problem = match &service {
+        Some(s) => problem.with_backend(MapBackend::Xla(s.handle())),
+        None => problem,
+    };
+    let report = run_threaded(Arc::new(LoggedJacobi(problem)), &BsfConfig::with_workers(4));
+    println!(
+        "converged in {} iterations, ||x - x*||² = {:.3e}",
+        report.iterations,
+        dist2(&report.param, &x_star)
+    );
+
+    println!("\n=== E1 Jacobi speedup: model vs simulated cluster ===");
+    let ks = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+    let s = speedup_sweep(
+        || JacobiProblem::random(1024, 1e-30, 4242).0,
+        &ks,
+        ClusterProfile::infiniband(),
+        10,
+    );
+    print_sweep("jacobi n=1024, infiniband", &s);
+
+    println!("=== E3 gravity speedup: model vs simulated cluster ===");
+    let s = speedup_sweep(
+        || GravityProblem::random(1024, 1e-3, 3, 4242),
+        &ks,
+        ClusterProfile::infiniband(),
+        3,
+    );
+    print_sweep("gravity N=1024, infiniband", &s);
+
+    println!("OK");
+}

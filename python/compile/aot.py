@@ -1,0 +1,67 @@
+"""AOT pipeline: lower the L2 chunk map functions to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the ``xla`` crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs:
+  artifacts/<name>.hlo.txt   one module per SPECS entry
+  artifacts/manifest.tsv     name \t kind \t n \t c \t out-shape \t file
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit_all(out_dir: str) -> list[tuple[str, dict]]:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for name, fn, args, meta in model.specs():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        rows.append((name, meta))
+        print(f"  {name}: {len(text)} chars -> {path}")
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        for name, meta in rows:
+            f.write(
+                f"{name}\t{meta['kind']}\t{meta['n']}\t{meta['c']}"
+                f"\t{meta['out']}\t{name}.hlo.txt\n"
+            )
+    print(f"wrote {len(rows)} artifacts + {manifest}")
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts",
+                   help="artifact output directory")
+    args = p.parse_args()
+    emit_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the BSF worker map hot-spots.
+
+One module per demo application (jacobi, cimmino, gravity) plus the
+pure-jnp oracle in :mod:`ref`.  All kernels run under ``interpret=True``
+(CPU image; see the module docstrings for the TPU mapping notes).
+"""
+
+from . import cimmino, gravity, jacobi, ref  # noqa: F401

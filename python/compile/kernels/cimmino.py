@@ -1,0 +1,69 @@
+"""Pallas kernel for the Cimmino worker map function (L1).
+
+The Cimmino method is the row-projection iterative solver the BSF papers
+use as a second linear-algebra demo: each map element is one row ``a_i`` of
+A, its image is the scaled projection correction ``w_i (b_i - a_i.x) a_i``,
+and Reduce is vector addition.  A worker's fused Map+local-Reduce over its
+row block is therefore
+
+    out = A_chunk^T @ ((b_chunk - A_chunk @ x) * w_chunk)      # (n,)
+
+The kernel tiles the worker's rows; each grid step computes the residual of
+one row tile and accumulates its correction into the single (n,) output
+block (the output BlockSpec maps every grid step to block 0, a sequential-
+grid accumulation — the standard TPU reduction idiom).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, pref: int) -> int:
+    if n <= pref:
+        return n
+    for b in range(pref, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def cimmino_chunk(a_rows, b_chunk, x, w_chunk, block_c: int = 64):
+    """Fused Cimmino correction ``A^T ((b - A x) * w)`` over a row block.
+
+    Args:
+      a_rows:  (c, n) f32 — the worker's rows of A.
+      b_chunk: (c,)   f32 — matching right-hand sides.
+      x:       (n,)   f32 — full current approximation.
+      w_chunk: (c,)   f32 — per-row weights (relaxation / ||a_i||^2).
+      block_c: preferred row tile height.
+
+    Returns:
+      (n,) f32 partial correction.
+    """
+    c, n = a_rows.shape
+    bc = _pick_block(c, block_c)
+
+    def kernel(a_ref, b_ref, x_ref, w_ref, o_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        r = (b_ref[...] - a_ref[...] @ x_ref[...]) * w_ref[...]   # (bc,)
+        o_ref[...] += r @ a_ref[...]                              # (n,)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(c // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, n), lambda i: (i, 0)),
+            pl.BlockSpec((bc,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((bc,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a_rows.dtype),
+        interpret=True,
+    )(a_rows, b_chunk, x, w_chunk)

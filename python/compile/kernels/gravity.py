@@ -1,0 +1,77 @@
+"""Pallas kernel for the gravity (N-body) worker map function (L1).
+
+This is the BSF-gravity demo application: the map-list is the list of
+bodies; a worker computes the acceleration of each of its bodies against
+*all* bodies (an O(c*N) tile of the O(N^2) interaction matrix).  Reduce is
+not needed (Map-without-Reduce shape, like Algorithm 4) — each worker owns
+its output slice.
+
+The kernel keeps the worker's chunk positions (c, 3) resident and streams
+source-body tiles (block_j, 3) through VMEM, accumulating into the (c, 3)
+output block across the sequential grid — the classic N-body "j-loop
+blocking" mapped to a Pallas grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, pref: int) -> int:
+    if n <= pref:
+        return n
+    for b in range(pref, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def gravity_chunk(p_chunk, p_all, m_all, eps: float = 1e-2, g: float = 1.0,
+                  block_j: int = 256):
+    """Softened pairwise accelerations of a chunk of bodies.
+
+    Args:
+      p_chunk: (c, 3) f32 — positions of the worker's bodies.
+      p_all:   (n, 3) f32 — positions of all bodies.
+      m_all:   (n,)   f32 — masses of all bodies.
+      eps:     Plummer softening (static; the self-pair contributes 0).
+      g:       gravitational constant (static).
+      block_j: preferred source-body tile.
+
+    Returns:
+      (c, 3) f32 accelerations.
+    """
+    c = p_chunk.shape[0]
+    n = p_all.shape[0]
+    bj = _pick_block(n, block_j)
+    eps2 = float(eps) * float(eps)
+    gc = float(g)
+
+    def kernel(pi_ref, p_ref, m_ref, o_ref):
+        j = pl.program_id(0)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        pi = pi_ref[...]                                     # (c, 3)
+        pj = p_ref[...]                                      # (bj, 3)
+        diff = pj[None, :, :] - pi[:, None, :]               # (c, bj, 3)
+        r2 = jnp.sum(diff * diff, axis=-1) + eps2            # (c, bj)
+        w = m_ref[...][None, :] * jax.lax.rsqrt(r2) / r2     # m / r^3
+        o_ref[...] += gc * jnp.sum(w[:, :, None] * diff, axis=1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bj,),
+        in_specs=[
+            pl.BlockSpec((c, 3), lambda j: (0, 0)),
+            pl.BlockSpec((bj, 3), lambda j: (j, 0)),
+            pl.BlockSpec((bj,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((c, 3), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, 3), p_chunk.dtype),
+        interpret=True,
+    )(p_chunk, p_all, m_all)

@@ -1,0 +1,97 @@
+"""Pallas kernels for the Jacobi worker map functions (L1).
+
+Two kernels, matching the two BSF formulations in the paper:
+
+* ``jacobi_chunk``     — Algorithm 3 (Map + Reduce): the worker's fused
+  Map+local-fold over its column sublist, ``sum_j x_j * c_j``.  Tiled over
+  the output dimension n so each grid step holds a ``(block_n, c)`` tile of
+  the column block in VMEM and emits a ``(block_n,)`` slice of the partial
+  sum.
+* ``jacobi_map_chunk`` — Algorithm 4 (Map without Reduce): the worker's
+  rows of the next approximation, ``C_rows @ x + d``.  Tiled over the
+  worker's row count c.
+
+Both are lowered with ``interpret=True`` — on this CPU image a real TPU
+lowering would emit a Mosaic custom-call the CPU PJRT plugin cannot run.
+TPU notes (see DESIGN.md §Hardware-Adaptation): the matvec tiles are laid
+out so the MXU sees a ``(block, c) x (c, 1)`` contraction; ``block_n`` is
+chosen to keep the C tile + x + out slice comfortably inside ~16 MiB VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (falls back to n)."""
+    if n <= pref:
+        return n
+    for b in range(pref, 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def jacobi_chunk(c_cols, x_chunk, block_n: int = 128):
+    """Fused Map+local-Reduce of Algorithm 3: ``c_cols @ x_chunk``.
+
+    Args:
+      c_cols:  (n, c) f32 — the worker's columns of C.
+      x_chunk: (c,)   f32 — matching coordinates of the approximation.
+      block_n: preferred output tile height.
+
+    Returns:
+      (n,) f32 partial sum.
+    """
+    n, c = c_cols.shape
+    bn = _pick_block(n, block_n)
+
+    def kernel(c_ref, x_ref, o_ref):
+        o_ref[...] = c_ref[...] @ x_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), c_cols.dtype),
+        interpret=True,
+    )(c_cols, x_chunk)
+
+
+def jacobi_map_chunk(c_rows, x, d_chunk, block_c: int = 128):
+    """Map-only Jacobi step of Algorithm 4: ``c_rows @ x + d_chunk``.
+
+    Args:
+      c_rows:  (c, n) f32 — the worker's rows of C.
+      x:       (n,)   f32 — full current approximation.
+      d_chunk: (c,)   f32 — matching entries of d.
+      block_c: preferred row tile height.
+
+    Returns:
+      (c,) f32 — the worker's coordinates of the next approximation.
+    """
+    c, n = c_rows.shape
+    bc = _pick_block(c, block_c)
+
+    def kernel(c_ref, x_ref, d_ref, o_ref):
+        o_ref[...] = c_ref[...] @ x_ref[...] + d_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(c // bc,),
+        in_specs=[
+            pl.BlockSpec((bc, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((bc,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), c_rows.dtype),
+        interpret=True,
+    )(c_rows, x, d_chunk)

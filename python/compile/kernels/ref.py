@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Each function here is the *mathematical definition* of the corresponding
+chunk-level map function used by the BSF workers:
+
+* ``jacobi_chunk``      — fused Map+local-Reduce of Algorithm 3: a worker
+  holding columns ``c_j`` of the iteration matrix C and the matching
+  coordinates ``x_j`` of the current approximation computes the partial sum
+  ``sum_j x_j * c_j`` (a column-scaled accumulation == C_chunk @ x_chunk).
+* ``jacobi_map_chunk``  — Map-without-Reduce of Algorithm 4: a worker
+  holding rows of C computes its coordinates of the next approximation
+  ``C_rows @ x + d_chunk``.
+* ``cimmino_chunk``     — fused Map+local-Reduce for the Cimmino row
+  projection method: correction ``A_chunk^T @ ((b - A_chunk x) * w)`` with
+  per-row weights ``w_i = lambda / ||a_i||^2``.
+* ``gravity_chunk``     — per-body acceleration for an N-body chunk with
+  Plummer softening.
+
+The Pallas kernels in this package must match these to ~1e-5 (f32).
+"""
+
+import jax.numpy as jnp
+
+
+def jacobi_chunk(c_cols, x_chunk):
+    """Partial fold of Algorithm 3 on one worker.
+
+    Args:
+      c_cols:  (n, c) — the worker's ``c`` columns of the n x n matrix C.
+      x_chunk: (c,)   — the matching coordinates of the approximation.
+
+    Returns:
+      (n,) partial sum  ``sum_j x_chunk[j] * c_cols[:, j]``.
+    """
+    return c_cols @ x_chunk
+
+
+def jacobi_map_chunk(c_rows, x, d_chunk):
+    """Map-only Jacobi step (Algorithm 4) on one worker.
+
+    Args:
+      c_rows:  (c, n) — the worker's rows of C.
+      x:       (n,)   — full current approximation.
+      d_chunk: (c,)   — matching entries of d.
+
+    Returns:
+      (c,) — the worker's coordinates of the next approximation.
+    """
+    return c_rows @ x + d_chunk
+
+
+def cimmino_chunk(a_rows, b_chunk, x, w_chunk):
+    """Fused Cimmino projection correction for one worker's rows.
+
+    Args:
+      a_rows:  (c, n) — the worker's rows of A.
+      b_chunk: (c,)   — matching right-hand sides.
+      x:       (n,)   — full current approximation.
+      w_chunk: (c,)   — per-row weights (relaxation / ||a_i||^2).
+
+    Returns:
+      (n,) partial correction  ``sum_i w_i (b_i - a_i.x) a_i``.
+    """
+    r = (b_chunk - a_rows @ x) * w_chunk
+    return a_rows.T @ r
+
+
+def gravity_chunk(p_chunk, p_all, m_all, eps=1e-2, g=1.0):
+    """Accelerations of a chunk of bodies under softened Newtonian gravity.
+
+    Args:
+      p_chunk: (c, 3) — positions of the worker's bodies.
+      p_all:   (n, 3) — positions of all bodies.
+      m_all:   (n,)   — masses of all bodies.
+      eps:     Plummer softening (the i==i pair has diff 0 so
+               contributes nothing).
+      g:       gravitational constant.
+
+    Returns:
+      (c, 3) accelerations.
+    """
+    diff = p_all[None, :, :] - p_chunk[:, None, :]          # (c, n, 3)
+    r2 = jnp.sum(diff * diff, axis=-1) + eps * eps          # (c, n)
+    inv_r3 = jnp.power(r2, -1.5)                            # (c, n)
+    w = m_all[None, :] * inv_r3                             # (c, n)
+    return g * jnp.sum(w[:, :, None] * diff, axis=1)        # (c, 3)

@@ -1,0 +1,102 @@
+"""L2: chunk-level JAX map functions for the BSF workers.
+
+Each entry point here is the computation *one BSF worker* performs per
+iteration on its map-sublist (the paper's ``PC_bsf_MapF`` applied to the
+whole sublist, fused with the local Reduce where the algorithm has one).
+They call the Pallas kernels from :mod:`compile.kernels` so that the
+kernel lowers into the same HLO module, and are AOT-lowered once by
+:mod:`compile.aot` into ``artifacts/*.hlo.txt`` for the Rust runtime.
+
+Shapes are static (XLA AOT requirement).  ``SPECS`` enumerates the
+artifact variants the Rust side may load; the runtime pads a worker's
+actual sublist up to the nearest compiled chunk size (padding is exact:
+zero columns / zero-weight rows / zero-mass bodies contribute nothing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cimmino as k_cimmino
+from .kernels import gravity as k_gravity
+from .kernels import jacobi as k_jacobi
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Chunk map functions (the functions that get AOT-compiled).
+# Every function returns a 1-tuple: the rust loader unwraps with to_tuple1.
+# --------------------------------------------------------------------------
+
+# Block-shape note (§Perf, L1): the AOT variants use a SINGLE grid step
+# (block == full chunk). The worker chunks are small enough that the
+# whole tile fits a TPU core's VMEM budget (largest: jacobi n=1024,
+# c=256 -> 1 MiB C-block + 1 KiB x + 4 KiB out), and on the CPU
+# interpret/PJRT path a 1-step grid lowers to one fused contraction
+# instead of a while-loop of dynamic-update-slices (measured 5-10x
+# faster; see EXPERIMENTS.md §Perf). The tiled multi-step path is still
+# exercised by the pytest suite with explicit small block sizes.
+
+def jacobi_chunk(c_cols, x_chunk):
+    """Algorithm 3 worker step: partial sum over a column sublist."""
+    return (k_jacobi.jacobi_chunk(c_cols, x_chunk, block_n=c_cols.shape[0]),)
+
+
+def jacobi_map_chunk(c_rows, x, d_chunk):
+    """Algorithm 4 worker step: the worker's slice of the next x."""
+    return (k_jacobi.jacobi_map_chunk(c_rows, x, d_chunk, block_c=c_rows.shape[0]),)
+
+
+def cimmino_chunk(a_rows, b_chunk, x, w_chunk):
+    """Cimmino worker step: partial projection correction."""
+    return (k_cimmino.cimmino_chunk(a_rows, b_chunk, x, w_chunk,
+                                    block_c=a_rows.shape[0]),)
+
+
+def gravity_chunk(p_chunk, p_all, m_all):
+    """Gravity worker step: accelerations of the worker's bodies."""
+    return (k_gravity.gravity_chunk(p_chunk, p_all, m_all,
+                                    block_j=p_all.shape[0]),)
+
+
+# --------------------------------------------------------------------------
+# AOT specs: (artifact name, function, example-arg shapes)
+# --------------------------------------------------------------------------
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def specs(n_list=(64, 1024), chunk_list=(16, 64, 256)):
+    """Enumerate artifact variants.
+
+    For each problem size n we emit chunk sizes <= n.  n=64/chunk=16 is the
+    fast-test variant; n=1024 are the experiment variants (E1-E4).
+    """
+    out = []
+    for n in n_list:
+        for c in chunk_list:
+            if c > n:
+                continue
+            out.append((
+                f"jacobi_n{n}_c{c}", jacobi_chunk, (_s(n, c), _s(c)),
+                {"kind": "jacobi", "n": n, "c": c, "out": f"f32[{n}]"},
+            ))
+            out.append((
+                f"jacobi_map_n{n}_c{c}", jacobi_map_chunk,
+                (_s(c, n), _s(n), _s(c)),
+                {"kind": "jacobi_map", "n": n, "c": c, "out": f"f32[{c}]"},
+            ))
+            out.append((
+                f"cimmino_n{n}_c{c}", cimmino_chunk,
+                (_s(c, n), _s(c), _s(n), _s(c)),
+                {"kind": "cimmino", "n": n, "c": c, "out": f"f32[{n}]"},
+            ))
+            out.append((
+                f"gravity_n{n}_c{c}", gravity_chunk,
+                (_s(c, 3), _s(n, 3), _s(n)),
+                {"kind": "gravity", "n": n, "c": c, "out": f"f32[{c},3]"},
+            ))
+    return out

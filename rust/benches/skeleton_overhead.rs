@@ -1,0 +1,89 @@
+//! E7 — skeleton overhead: the paper claims the skeleton "completely
+//! encapsulates all aspects associated with parallelizing a program";
+//! the implicit cost claim is that the encapsulation is cheap. Compare a
+//! hand-rolled sequential Jacobi loop against the skeleton with K=1
+//! (same arithmetic plus all skeleton machinery: transport, codec,
+//! extended reduce, phase timers) and against the simulated cluster at
+//! K=1. Workload generation happens once, outside every timed region.
+
+use std::sync::Arc;
+
+use bsf::bench::{bench, fmt_secs, Table};
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::simcluster::{run_simulated, SimConfig};
+use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::util::mat::{gen_diag_dominant, jacobi_cd, Mat};
+
+/// Hand-rolled sequential Jacobi iterations (what a user would write
+/// without the skeleton): same column-order accumulation as the fused
+/// worker map, on prebuilt data.
+fn handrolled(ct: &Mat, d: &[f64], iters: usize) -> Vec<f64> {
+    let n = d.len();
+    let mut x = d.to_vec();
+    for _ in 0..iters {
+        let mut s = vec![0.0f64; n];
+        for j in 0..n {
+            let xj = x[j];
+            let cj = ct.row(j);
+            for i in 0..n {
+                s[i] += cj[i] * xj;
+            }
+        }
+        for i in 0..n {
+            x[i] = s[i] + d[i];
+        }
+    }
+    x
+}
+
+fn main() {
+    let n = 1024;
+    let iters = 8;
+
+    // Build the system once; all variants iterate on equivalent data.
+    let (a, b, _) = gen_diag_dominant(n, 7);
+    let (c, d) = jacobi_cd(&a, &b);
+    let ct = c.transpose();
+    let problem = Arc::new(JacobiProblem::from_system(&a, &b, 1e-30));
+
+    let hr = bench("handrolled", 1, 5, || {
+        std::hint::black_box(handrolled(&ct, &d, iters));
+    });
+
+    let sk = bench("skeleton K=1", 1, 5, || {
+        let _ = run_threaded(
+            Arc::clone(&problem),
+            &BsfConfig::with_workers(1).max_iter(iters),
+        );
+    });
+
+    let sim = bench("simcluster K=1", 1, 5, || {
+        let _ = run_simulated(
+            &*problem,
+            &BsfConfig::with_workers(1).max_iter(iters),
+            &SimConfig::new(ClusterProfile::infiniband()),
+        );
+    });
+
+    let hr_iter = hr.median_secs / iters as f64;
+    let sk_iter = sk.median_secs / iters as f64;
+    let sim_iter = sim.median_secs / iters as f64;
+
+    let mut t = Table::new(&["variant", "per-iter", "overhead vs handrolled"]);
+    t.row(&["handrolled".into(), fmt_secs(hr_iter), "-".into()]);
+    t.row(&[
+        "skeleton K=1".into(),
+        fmt_secs(sk_iter),
+        format!("{:+.1}%", (sk_iter / hr_iter - 1.0) * 100.0),
+    ]);
+    t.row(&[
+        "simcluster K=1 (real secs)".into(),
+        fmt_secs(sim_iter),
+        format!("{:+.1}%", (sim_iter / hr_iter - 1.0) * 100.0),
+    ]);
+    println!("E7 — skeleton overhead (jacobi n={n}, {iters} iters/run)");
+    t.print();
+    println!("\nskeleton overhead = transport + codec (one {n}-vector each way)");
+    println!("+ extended-reduce bookkeeping per iteration, at K=1.");
+}

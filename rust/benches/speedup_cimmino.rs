@@ -1,0 +1,20 @@
+//! E4 — Cimmino (row projections) speedup curve: same Θ(n²)/Θ(n)
+//! structure as Jacobi but a different constant factor in t_map (two
+//! dot products per row), placing its boundary near Jacobi's.
+
+use bsf::bench::sweep::{print_sweep, speedup_sweep};
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::cimmino::CimminoProblem;
+
+fn main() {
+    let ks = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    for &n in &[512usize, 1024] {
+        let s = speedup_sweep(
+            || CimminoProblem::random(n, n, 1e-30, 7).0,
+            &ks,
+            ClusterProfile::infiniband(),
+            5,
+        );
+        print_sweep(&format!("E4 cimmino {n}x{n}, infiniband"), &s);
+    }
+}

@@ -1,0 +1,26 @@
+//! E3 — gravity (N-body) speedup curve: the compute-heavy extreme
+//! (t_map = Θ(N²) per iteration with only Θ(N) communication), so the
+//! scalability boundary sits far to the right of Jacobi's at equal N —
+//! near-linear speedup through the sweep on InfiniBand.
+
+use bsf::bench::sweep::{print_sweep, speedup_sweep};
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::gravity::GravityProblem;
+
+fn main() {
+    let ks = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    for &n in &[512usize, 1024] {
+        for (pname, profile) in [
+            ("infiniband", ClusterProfile::infiniband()),
+            ("gigabit", ClusterProfile::gigabit()),
+        ] {
+            let s = speedup_sweep(
+                || GravityProblem::random(n, 1e-3, 3, 7),
+                &ks,
+                profile,
+                3,
+            );
+            print_sweep(&format!("E3 gravity N={n}, {pname}"), &s);
+        }
+    }
+}

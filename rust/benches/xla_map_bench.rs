@@ -1,0 +1,72 @@
+//! E9 — L1/L2 integration bench: per-iteration worker map cost, native
+//! fused Rust loop vs the AOT Pallas/XLA kernel through the PJRT service
+//! (n=1024, chunk=256 — the largest compiled variant). Also measures the
+//! service round-trip overhead with a tiny kernel.
+//!
+//! Requires `make artifacts`; exits 0 with a note when absent.
+
+use std::sync::Arc;
+
+use bsf::bench::{bench, fmt_secs, Table};
+use bsf::problems::jacobi::{JacobiProblem, MapBackend};
+use bsf::runtime::service::XlaService;
+use bsf::skeleton::{run_threaded, BsfConfig};
+
+fn main() {
+    let service = match XlaService::start_default() {
+        Ok(s) => s,
+        Err(e) => {
+            println!("E9 skipped: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    let n = 1024;
+    let iters = 6;
+    let k = 4;
+
+    // Problems are built once and reused (Arc) so the timed region is
+    // the skeleton iterations, not workload generation.
+    let (p_native, _) = JacobiProblem::random(n, 1e-30, 11);
+    let p_native = Arc::new(p_native);
+    let native = bench("native", 1, 5, || {
+        let _ = run_threaded(
+            Arc::clone(&p_native),
+            &BsfConfig::with_workers(k).max_iter(iters),
+        );
+    });
+
+    let handle = service.handle();
+    let (p_xla, _) = JacobiProblem::random(n, 1e-30, 11);
+    let p_xla = Arc::new(p_xla.with_backend(MapBackend::Xla(handle)));
+    let xla = bench("xla", 1, 5, || {
+        let _ = run_threaded(
+            Arc::clone(&p_xla),
+            &BsfConfig::with_workers(k).max_iter(iters),
+        );
+    });
+
+    // Service round-trip floor: smallest artifact, warm cache.
+    let h2 = service.handle();
+    let cols = vec![0.5f32; 64 * 16];
+    let x = vec![1.0f32; 16];
+    let rt = bench("roundtrip", 3, 50, || {
+        let _ = h2
+            .execute_f32(
+                "jacobi_n64_c16",
+                vec![(cols.clone(), vec![64, 16]), (x.clone(), vec![16])],
+            )
+            .unwrap();
+    });
+
+    let mut t = Table::new(&["worker map backend", "per-iteration (K=4)"]);
+    t.row(&["native fused Rust".into(), fmt_secs(native.median_secs / iters as f64)]);
+    t.row(&["AOT Pallas/XLA via PJRT".into(), fmt_secs(xla.median_secs / iters as f64)]);
+    println!("E9 — worker map backends (jacobi n={n})");
+    t.print();
+    println!(
+        "\nPJRT service round-trip floor (64x16 kernel, warm): {}",
+        fmt_secs(rt.median_secs)
+    );
+    println!("±MAD {}", fmt_secs(rt.mad_secs));
+}

@@ -1,0 +1,148 @@
+//! In-tree micro/macro-benchmark harness (criterion is not available in
+//! the offline dependency universe; see Cargo.toml).
+//!
+//! [`bench`] runs warmup + timed samples of a closure and reports
+//! median/MAD (robust against scheduler noise). [`Table`] prints the
+//! aligned text tables the bench binaries use to regenerate the paper's
+//! figures as rows (EXPERIMENTS.md records them).
+
+pub mod sweep;
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark's samples + robust summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+    pub median_secs: f64,
+    pub mad_secs: f64,
+}
+
+impl BenchResult {
+    pub fn from_samples(name: impl Into<String>, samples_secs: Vec<f64>) -> Self {
+        let median_secs = stats::median(&samples_secs);
+        let mad_secs = stats::mad(&samples_secs);
+        Self { name: name.into(), samples_secs, median_secs, mad_secs }
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `samples` timed repetitions.
+pub fn bench(
+    name: impl Into<String>,
+    warmup: usize,
+    samples: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult::from_samples(name, out)
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Minimal aligned-text table printer.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            (0..ncols)
+                .map(|i| format!("{:>w$}", cells[i], w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 2, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples_secs.len(), 5);
+        assert!(r.median_secs >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_alignment_and_arity() {
+        let mut t = Table::new(&["K", "speedup"]);
+        t.row(&["1".into(), "1.00".into()]);
+        t.row(&["128".into(), "63.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("K  speedup") || s.contains("  K  speedup"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

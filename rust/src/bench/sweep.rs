@@ -1,0 +1,111 @@
+//! Shared speedup-sweep driver used by the bench binaries and the CLI:
+//! calibrate → predict the BSF-model curve → measure the simulated-cluster
+//! curve → report both (the paper family's standard figure).
+
+use crate::costmodel::{calibrate, Calibration, ClusterProfile};
+use crate::simcluster::{run_simulated, SimConfig};
+use crate::skeleton::{BsfConfig, BsfProblem};
+
+/// One K point of a speedup sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRow {
+    pub k: usize,
+    /// BSF-model predicted iteration time / speedup.
+    pub t_model: f64,
+    pub a_model: f64,
+    /// Simulated-cluster measured iteration time / speedup.
+    pub t_sim: f64,
+    pub a_sim: f64,
+}
+
+/// Full sweep result.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub calibration: Calibration,
+    pub rows: Vec<SweepRow>,
+    /// Analytic boundary from the calibrated model.
+    pub k_max_model: f64,
+    /// argmax of the *simulated* speedup over the sweep grid.
+    pub k_peak_sim: usize,
+}
+
+/// Run a calibrate+predict+simulate sweep. `mk` builds a fresh problem
+/// instance per run (instances are consumed by the master-side state).
+pub fn speedup_sweep<P: BsfProblem>(
+    mk: impl Fn() -> P,
+    ks: &[usize],
+    profile: ClusterProfile,
+    max_iter: usize,
+) -> Sweep {
+    let calibration = calibrate(&mk(), profile, 3);
+    let model = calibration.params;
+    let mut rows = Vec::with_capacity(ks.len());
+    let mut t1_sim = None;
+    for &k in ks {
+        let cfg = BsfConfig::with_workers(k).max_iter(max_iter);
+        let sim = SimConfig::new(profile);
+        let r = run_simulated(&mk(), &cfg, &sim);
+        let t_sim = r.virtual_seconds / r.iterations as f64;
+        let t1 = *t1_sim.get_or_insert(t_sim);
+        rows.push(SweepRow {
+            k,
+            t_model: model.iteration_time(k),
+            a_model: model.speedup(k),
+            t_sim,
+            a_sim: t1 / t_sim,
+        });
+    }
+    let k_peak_sim = rows
+        .iter()
+        .max_by(|a, b| a.a_sim.partial_cmp(&b.a_sim).unwrap())
+        .map(|r| r.k)
+        .unwrap_or(1);
+    Sweep { calibration, rows, k_max_model: model.k_max(), k_peak_sim }
+}
+
+/// Print a sweep as the standard table.
+pub fn print_sweep(title: &str, sweep: &Sweep) {
+    let cal = &sweep.calibration;
+    println!("== {title}");
+    println!(
+        "calibrated: t_map={:.3e}s t_op={:.3e}s t_proc={:.3e}s order={}B fold={}B",
+        cal.params.t_map, cal.params.t_op, cal.params.t_proc,
+        cal.order_bytes, cal.fold_bytes
+    );
+    println!(
+        "boundary: model K_max={:.1}, simulated peak K={}",
+        sweep.k_max_model, sweep.k_peak_sim
+    );
+    let mut t = super::Table::new(&["K", "T_model", "a_model", "T_sim", "a_sim"]);
+    for r in &sweep.rows {
+        t.row(&[
+            r.k.to_string(),
+            format!("{:.3e}", r.t_model),
+            format!("{:.2}", r.a_model),
+            format!("{:.3e}", r.t_sim),
+            format!("{:.2}", r.a_sim),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::jacobi::JacobiProblem;
+
+    #[test]
+    fn sweep_produces_rows_and_speedup_one_at_k1() {
+        let s = speedup_sweep(
+            || JacobiProblem::random(48, 1e-30, 9).0,
+            &[1, 2, 4],
+            ClusterProfile::infiniband(),
+            5,
+        );
+        assert_eq!(s.rows.len(), 3);
+        assert!((s.rows[0].a_sim - 1.0).abs() < 1e-9);
+        assert!((s.rows[0].a_model - 1.0).abs() < 1e-9);
+        assert!(s.rows.iter().all(|r| r.t_sim > 0.0 && r.t_model > 0.0));
+    }
+}

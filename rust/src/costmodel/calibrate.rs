@@ -1,0 +1,105 @@
+//! Calibration: measure a problem's per-iteration cost parameters on this
+//! machine, so the BSF model can predict the scalability boundary
+//! *before* any parallel run (the model's advertised use-case).
+//!
+//! What is measured vs. taken from the cluster profile:
+//! * `t_map` (+ fused local reduce) — timed by running the worker map
+//!   over the whole list once (exactly what a K=1 worker does);
+//! * `t_op` — timed by folding two representative partial folds;
+//! * `t_proc` — timed by running `process_results` on a scratch param;
+//! * payload sizes — taken from the actual `Codec` encodings;
+//! * `latency` / `byte_time` — from the [`ClusterProfile`] (they describe
+//!   the *target* cluster, not this machine).
+
+use std::time::Instant;
+
+use crate::costmodel::{ClusterProfile, CostParams};
+use crate::skeleton::problem::{BsfProblem, IterCtx};
+use crate::skeleton::worker::map_and_fold;
+use crate::util::codec::Codec;
+
+/// Calibration result: the cost parameters plus the raw measurements.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub params: CostParams,
+    /// Bytes of one order message (job + param).
+    pub order_bytes: usize,
+    /// Bytes of one partial-fold message.
+    pub fold_bytes: usize,
+    /// Measured map time per list element (s).
+    pub t_map_per_elem: f64,
+}
+
+/// Measure `problem`'s cost parameters, assuming the interconnect in
+/// `profile`. `reps` repeats the map measurement and keeps the minimum
+/// (standard noise suppression for micro-measurements).
+pub fn calibrate<P: BsfProblem>(
+    problem: &P,
+    profile: ClusterProfile,
+    reps: usize,
+) -> Calibration {
+    let n = problem.list_size();
+    let param = problem.init_parameter();
+    let elems: Vec<P::MapElem> = (0..n).map(|i| problem.map_list_elem(i)).collect();
+
+    // t_map: whole-list map + local fold, as a K=1 worker would run it.
+    let mut t_map = f64::INFINITY;
+    let mut fold = None;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let f = map_and_fold(problem, &elems, &param, 0, 1, 0, 0, 0, 1);
+        t_map = t_map.min(t0.elapsed().as_secs_f64());
+        fold = Some(f);
+    }
+    let fold = fold.expect("at least one rep");
+
+    // t_op: one ⊕ of two representative partial folds.
+    let t_op = match &fold.value {
+        None => 0.0,
+        Some(v) => {
+            let t0 = Instant::now();
+            let reps_op = 16;
+            let mut acc = v.clone();
+            for _ in 0..reps_op {
+                acc = problem.reduce_f(&acc, v, 0);
+            }
+            std::hint::black_box(&acc);
+            t0.elapsed().as_secs_f64() / reps_op as f64
+        }
+    };
+
+    // t_proc: one process_results on a scratch parameter.
+    let t_proc = {
+        let mut scratch = param.clone();
+        let ctx = IterCtx {
+            iter_counter: 1,
+            job_case: 0,
+            num_of_workers: 1,
+            elapsed: 0.0,
+        };
+        let t0 = Instant::now();
+        let _ = problem.process_results(fold.value.as_ref(), fold.counter, &mut scratch, &ctx);
+        t0.elapsed().as_secs_f64()
+    };
+
+    // Payload sizes from the real encodings.
+    let order_bytes = (0usize, param.clone()).to_bytes().len();
+    let fold_bytes = (fold.value.clone(), fold.counter).to_bytes().len();
+
+    let params = CostParams {
+        latency: profile.latency,
+        t_send: order_bytes as f64 * profile.byte_time,
+        t_recv: fold_bytes as f64 * profile.byte_time,
+        t_map,
+        t_red: 0.0, // fused into t_map by map_and_fold
+        t_op,
+        t_proc,
+    };
+
+    Calibration {
+        params,
+        order_bytes,
+        fold_bytes,
+        t_map_per_elem: if n > 0 { t_map / n as f64 } else { 0.0 },
+    }
+}

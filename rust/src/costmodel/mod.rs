@@ -1,0 +1,253 @@
+//! The BSF analytic cost model (Sokolinsky, JPDC 149 (2021) 193-206).
+//!
+//! The headline capability the skeleton inherits from the BSF model: the
+//! **scalability boundary of an algorithm can be estimated before its
+//! implementation** from a handful of per-iteration cost parameters.
+//!
+//! Per iteration with K workers (master sends K orders sequentially,
+//! workers compute in parallel, master receives K partial folds and folds
+//! them with K-1 applications of ⊕):
+//!
+//! ```text
+//! T(K)  = 2·K·L + K·(t_send + t_recv) + (t_map + t_red)/K + (K-1)·t_op + t_proc
+//! a(K)  = T(1) / T(K)                                  (speedup)
+//! K_max = sqrt( (t_map + t_red) / (2L + t_send + t_recv + t_op) )
+//! ```
+//!
+//! `K_max` solves `dT/dK = 0` and is the *scalability boundary*: adding
+//! workers beyond it slows the program down. For Jacobi, `t_map = Θ(n²)`
+//! and per-iteration communication is `Θ(n)`, giving the paper's
+//! signature `K_max = Θ(√n)` law.
+
+pub mod calibrate;
+
+pub use calibrate::{calibrate, Calibration};
+
+/// Cluster interconnect profile (latency + inverse bandwidth).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterProfile {
+    /// One-way message latency L, seconds.
+    pub latency: f64,
+    /// Seconds per payload byte (1 / bandwidth).
+    pub byte_time: f64,
+}
+
+impl ClusterProfile {
+    /// InfiniBand QDR-class interconnect (the companion paper's testbed
+    /// is the "Tornado SUSU" cluster): ~2 µs latency, ~4 GB/s effective.
+    pub fn infiniband() -> Self {
+        Self { latency: 2.0e-6, byte_time: 1.0 / 4.0e9 }
+    }
+
+    /// Commodity gigabit Ethernet: ~50 µs latency, ~125 MB/s.
+    pub fn gigabit() -> Self {
+        Self { latency: 50.0e-6, byte_time: 1.0 / 1.25e8 }
+    }
+
+    /// Zero-cost interconnect (isolates compute scaling in tests).
+    pub fn ideal() -> Self {
+        Self { latency: 0.0, byte_time: 0.0 }
+    }
+}
+
+/// Per-iteration cost parameters of one problem instance on one cluster.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostParams {
+    /// One-way message latency L (s).
+    pub latency: f64,
+    /// Transfer time of one order payload, master → one worker (s).
+    pub t_send: f64,
+    /// Transfer time of one partial-fold payload, worker → master (s).
+    pub t_recv: f64,
+    /// Map over the whole list on one worker (s).
+    pub t_map: f64,
+    /// Local Reduce over the whole reduce-list (s); often folded into
+    /// `t_map` by calibration (the worker fuses map+fold).
+    pub t_red: f64,
+    /// One application of ⊕ on the master (s).
+    pub t_op: f64,
+    /// `process_results` + dispatcher on the master (s).
+    pub t_proc: f64,
+}
+
+impl CostParams {
+    /// Predicted time of one iteration with K workers.
+    pub fn iteration_time(&self, k: usize) -> f64 {
+        assert!(k >= 1);
+        let kf = k as f64;
+        2.0 * kf * self.latency
+            + kf * (self.t_send + self.t_recv)
+            + (self.t_map + self.t_red) / kf
+            + (kf - 1.0) * self.t_op
+            + self.t_proc
+    }
+
+    /// Predicted speedup a(K) = T(1)/T(K).
+    pub fn speedup(&self, k: usize) -> f64 {
+        self.iteration_time(1) / self.iteration_time(k)
+    }
+
+    /// Analytic scalability boundary (may be fractional; the integer
+    /// optimum is one of its two neighbours).
+    pub fn k_max(&self) -> f64 {
+        let comm = 2.0 * self.latency + self.t_send + self.t_recv + self.t_op;
+        if comm <= 0.0 {
+            return f64::INFINITY;
+        }
+        ((self.t_map + self.t_red) / comm).sqrt()
+    }
+
+    /// Integer argmax of a(K) on 1..=limit (brute force, for validation
+    /// of the closed form and for reporting).
+    pub fn k_max_argmax(&self, limit: usize) -> usize {
+        (1..=limit.max(1))
+            .min_by(|&a, &b| {
+                self.iteration_time(a)
+                    .partial_cmp(&self.iteration_time(b))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Predicted speedup curve over the given worker counts.
+    pub fn curve(&self, ks: &[usize]) -> Vec<f64> {
+        ks.iter().map(|&k| self.speedup(k)).collect()
+    }
+
+    /// Multicore extension (the paper's OpenMP mode, `PP_BSF_OMP`): with
+    /// `threads` cores per worker node the Map loop divides, communication
+    /// does not. Returns the adjusted parameters.
+    ///
+    /// Corollary (tested below): the scalability boundary *shrinks* by
+    /// `√threads` — intra-node parallelism trades cluster-level
+    /// scalability for per-node speed, one of the BSF model's
+    /// less-obvious predictions.
+    pub fn with_openmp(&self, threads: usize) -> CostParams {
+        let t = threads.max(1) as f64;
+        CostParams { t_map: self.t_map / t, t_red: self.t_red / t, ..*self }
+    }
+
+    /// Iteration time with the multicore extension.
+    pub fn iteration_time_openmp(&self, k: usize, threads: usize) -> f64 {
+        self.with_openmp(threads).iteration_time(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::qcheck;
+
+    fn sample() -> CostParams {
+        CostParams {
+            latency: 1e-6,
+            t_send: 5e-6,
+            t_recv: 5e-6,
+            t_map: 1e-2,
+            t_red: 0.0,
+            t_op: 1e-6,
+            t_proc: 1e-5,
+        }
+    }
+
+    #[test]
+    fn t1_is_serial_plus_one_round_trip() {
+        let p = sample();
+        let expected = 2.0 * p.latency + p.t_send + p.t_recv + p.t_map + p.t_proc;
+        assert!((p.iteration_time(1) - expected).abs() < 1e-15);
+    }
+
+    #[test]
+    fn speedup_at_one_is_one() {
+        assert!((sample().speedup(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_form_matches_brute_force() {
+        let p = sample();
+        let analytic = p.k_max();
+        let brute = p.k_max_argmax(10_000);
+        // integer optimum is floor or ceil of the analytic boundary
+        assert!(
+            brute == analytic.floor() as usize || brute == analytic.ceil() as usize,
+            "analytic {analytic}, brute {brute}"
+        );
+    }
+
+    #[test]
+    fn k_max_scales_as_sqrt_of_map_cost() {
+        // quadrupling t_map doubles the boundary — the paper's √ law.
+        let p = sample();
+        let mut p4 = p;
+        p4.t_map *= 4.0;
+        assert!((p4.k_max() / p.k_max() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ideal_comm_has_unbounded_scalability() {
+        let p = CostParams {
+            latency: 0.0,
+            t_send: 0.0,
+            t_recv: 0.0,
+            t_map: 1.0,
+            t_red: 0.0,
+            t_op: 0.0,
+            t_proc: 0.0,
+        };
+        assert!(p.k_max().is_infinite());
+        assert!(p.speedup(64) > 63.9);
+    }
+
+    #[test]
+    fn property_speedup_unimodal_around_boundary() {
+        qcheck(100, |rng| {
+            let p = CostParams {
+                latency: rng.range(1e-7, 1e-4),
+                t_send: rng.range(1e-7, 1e-4),
+                t_recv: rng.range(1e-7, 1e-4),
+                t_map: rng.range(1e-4, 1.0),
+                t_red: rng.range(0.0, 1e-3),
+                t_op: rng.range(1e-8, 1e-5),
+                t_proc: rng.range(0.0, 1e-4),
+            };
+            let peak = p.k_max_argmax(4096);
+            // increasing before the peak, decreasing after (unimodal)
+            if peak > 2 {
+                assert!(p.iteration_time(peak - 1) >= p.iteration_time(peak));
+                assert!(p.iteration_time(1) >= p.iteration_time(peak - 1));
+            }
+            assert!(p.iteration_time(peak + 1) >= p.iteration_time(peak));
+            assert!(p.iteration_time(2 * peak + 4) >= p.iteration_time(peak + 1));
+        });
+    }
+
+    #[test]
+    fn openmp_extension_divides_map_not_comm() {
+        let p = sample();
+        let q = p.with_openmp(4);
+        assert_eq!(q.t_map, p.t_map / 4.0);
+        assert_eq!(q.t_send, p.t_send);
+        assert_eq!(q.latency, p.latency);
+        // boundary shrinks by √threads
+        assert!((q.k_max() / p.k_max() - 0.5).abs() < 1e-9);
+        // one-worker iteration gets faster
+        assert!(q.iteration_time(1) < p.iteration_time(1));
+    }
+
+    #[test]
+    fn openmp_threads_floor_is_one() {
+        let p = sample();
+        assert_eq!(p.with_openmp(0), p.with_openmp(1));
+        assert_eq!(p.iteration_time_openmp(4, 1), p.iteration_time(4));
+    }
+
+    #[test]
+    fn curve_matches_pointwise_speedup() {
+        let p = sample();
+        let ks = [1usize, 2, 8, 64];
+        let c = p.curve(&ks);
+        for (i, &k) in ks.iter().enumerate() {
+            assert_eq!(c[i], p.speedup(k));
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! # BSF-skeleton — Bulk Synchronous Farm parallel skeleton
+//!
+//! A Rust reproduction of the BSF-skeleton (Sokolinsky, 2020/2021): a
+//! template for parallelizing **iterative numerical algorithms** on
+//! cluster computing systems using the master/worker paradigm and
+//! Map/Reduce over lists, together with the BSF analytic cost model that
+//! predicts an algorithm's **scalability boundary before implementation**.
+//!
+//! ## Layers
+//!
+//! * [`skeleton`] — the skeleton itself: the [`skeleton::BsfProblem`]
+//!   customization trait (the paper's `PC_bsf_*` API), the master and
+//!   worker loops (the paper's Algorithm 2), the extended reduce-list,
+//!   workflow (multi-job) support and the OpenMP-analog intra-worker
+//!   parallel map.
+//! * [`transport`] — an MPI-like message-passing substrate over OS
+//!   threads (the cluster-interconnect substitution; see DESIGN.md §2).
+//! * [`simcluster`] — a virtual-time cluster simulator that scales the
+//!   worker count far beyond physical cores to reproduce the paper's
+//!   speedup curves.
+//! * [`costmodel`] — the BSF analytic model: iteration time `T(K)`,
+//!   speedup `a(K)` and the scalability boundary `K_max`.
+//! * [`runtime`] — the PJRT/XLA runtime that loads the AOT artifacts
+//!   produced by `python/compile/aot.py` (L2 JAX + L1 Pallas) and runs
+//!   them inside worker map functions.
+//! * [`problems`] — the paper's demo applications implemented on the
+//!   skeleton: Jacobi (Algorithm 3), Jacobi-Map (Algorithm 4), Cimmino,
+//!   gravity N-body, Monte-Carlo, LPP feasibility and the Apex-style
+//!   multi-job workflow.
+//! * [`bench`], [`metrics`], [`util`] — in-tree bench harness, phase
+//!   timers and support code (the offline build has no criterion/clap/
+//!   proptest; see Cargo.toml).
+
+pub mod bench;
+pub mod costmodel;
+pub mod metrics;
+pub mod problems;
+pub mod runtime;
+pub mod simcluster;
+pub mod skeleton;
+pub mod transport;
+pub mod util;
+
+pub use skeleton::{BsfConfig, BsfProblem, RunReport};

@@ -1,0 +1,310 @@
+//! `bsf` — CLI launcher for the BSF-skeleton reproduction.
+//!
+//! Subcommands:
+//! * `run <problem>`     — solve on the threaded skeleton (real workers)
+//! * `sim <problem>`     — solve on the simulated cluster (virtual time)
+//! * `sweep <problem>`   — speedup curve over K: model vs simulation
+//! * `predict <problem>` — calibrate + print the BSF model parameters and
+//!                          the predicted scalability boundary
+//! * `artifacts`         — list the AOT XLA artifacts
+//!
+//! Problems: `jacobi`, `jacobi-map`, `cimmino`, `gravity`, `montecarlo`,
+//! `lpp`, `apex`. Common options: `--n`, `--k`, `--omp`, `--seed`,
+//! `--eps`, `--profile infiniband|gigabit`, `--backend native|xla`.
+
+use std::sync::Arc;
+
+use bsf::costmodel::{calibrate, ClusterProfile};
+use bsf::problems::cimmino::CimminoProblem;
+use bsf::problems::gravity::GravityProblem;
+use bsf::problems::jacobi::{JacobiProblem, MapBackend};
+use bsf::problems::jacobi_map::JacobiMapProblem;
+use bsf::problems::lpp::LppProblem;
+use bsf::problems::montecarlo::MonteCarloProblem;
+use bsf::problems::apex::ApexProblem;
+use bsf::runtime::service::XlaService;
+use bsf::runtime::XlaRuntime;
+use bsf::simcluster::{run_simulated, SimConfig};
+use bsf::skeleton::{run_threaded, BsfConfig, BsfProblem};
+use bsf::util::cli::Args;
+
+fn profile_from(args: &Args) -> ClusterProfile {
+    match args.get_str("profile", "infiniband") {
+        "infiniband" => ClusterProfile::infiniband(),
+        "gigabit" => ClusterProfile::gigabit(),
+        "ideal" => ClusterProfile::ideal(),
+        other => panic!("unknown --profile {other}"),
+    }
+}
+
+fn config_from(args: &Args) -> BsfConfig {
+    BsfConfig::with_workers(args.get_usize("k", 4))
+        .openmp(args.get_usize("omp", 1))
+        .trace(args.get_usize("trace", 0))
+        .max_iter(args.get_usize("max-iter", 100_000))
+}
+
+/// Run one problem generically and print the standard summary.
+fn run_and_report<P: BsfProblem>(problem: Arc<P>, cfg: &BsfConfig, describe: impl Fn(&P::Param) -> String) {
+    let r = run_threaded(problem, cfg);
+    println!(
+        "done: iterations={} elapsed={:.6}s msgs={} bytes={}",
+        r.iterations, r.elapsed, r.messages, r.bytes
+    );
+    println!("phases: {}", r.timers.summary());
+    println!("result: {}", describe(&r.param));
+}
+
+fn sim_and_report<P: BsfProblem>(
+    problem: &P,
+    cfg: &BsfConfig,
+    sim: &SimConfig,
+    describe: impl Fn(&P::Param) -> String,
+) {
+    let r = run_simulated(problem, cfg, sim);
+    println!(
+        "done: iterations={} virtual={:.6}s real={:.3}s msgs={} bytes={}",
+        r.iterations, r.virtual_seconds, r.real_seconds, r.messages, r.bytes
+    );
+    let b = r.breakdown;
+    println!(
+        "per-iter virtual: send={:.2e}s compute+gather={:.2e}s reduce={:.2e}s process+exit={:.2e}s",
+        b.send, b.compute_and_gather, b.master_reduce, b.process_and_exit
+    );
+    println!("result: {}", describe(&r.param));
+}
+
+fn head(xs: &[f64]) -> String {
+    let k = xs.len().min(4);
+    let parts: Vec<String> = xs[..k].iter().map(|v| format!("{v:.6}")).collect();
+    format!("[{}{}] (n={})", parts.join(", "), if xs.len() > k { ", ..." } else { "" }, xs.len())
+}
+
+fn cmd_run(args: &Args) {
+    let cfg = config_from(args);
+    let n = args.get_usize("n", 256);
+    let seed = args.get_u64("seed", 7);
+    let eps = args.get_f64("eps", 1e-12);
+    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
+    let use_xla = args.get_str("backend", "native") == "xla";
+    let service = if use_xla {
+        Some(XlaService::start_default().expect("start XLA service (make artifacts?)"))
+    } else {
+        None
+    };
+    match name {
+        "jacobi" => {
+            let (p, _) = JacobiProblem::random(n, eps, seed);
+            let p = match &service {
+                Some(s) => p.with_backend(MapBackend::Xla(s.handle())),
+                None => p,
+            };
+            run_and_report(Arc::new(p), &cfg, |x| head(x));
+        }
+        "jacobi-map" => {
+            let (p, _) = JacobiMapProblem::random(n, eps, seed);
+            let p = match &service {
+                Some(s) => p.with_backend(
+                    bsf::problems::jacobi_map::MapMapBackend::Xla(s.handle()),
+                ),
+                None => p,
+            };
+            run_and_report(Arc::new(p), &cfg, |x| head(x));
+        }
+        "cimmino" => {
+            let (p, _) = CimminoProblem::random(n, n, eps, seed);
+            let p = match &service {
+                Some(s) => p.with_backend(
+                    bsf::problems::cimmino::CimminoBackend::Xla(s.handle()),
+                ),
+                None => p,
+            };
+            run_and_report(Arc::new(p), &cfg, |x| head(x));
+        }
+        "gravity" => {
+            let steps = args.get_usize("steps", 50);
+            let p = GravityProblem::random(n, 1e-3, steps, seed);
+            let p = match &service {
+                Some(s) => p.with_backend(
+                    bsf::problems::gravity::GravityBackend::Xla(s.handle()),
+                ),
+                None => p,
+            };
+            run_and_report(Arc::new(p), &cfg, |x| head(x));
+        }
+        "montecarlo" => {
+            let p = MonteCarloProblem::new(n, args.get_usize("samples", 10_000), 1e-3);
+            run_and_report(Arc::new(p), &cfg, |t| {
+                format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1)
+            });
+        }
+        "lpp" => {
+            let p = LppProblem::random(4 * n, n, seed);
+            run_and_report(Arc::new(p), &cfg, |x| head(x));
+        }
+        "apex" => {
+            let p = ApexProblem::random(4 * n, n, seed);
+            run_and_report(Arc::new(p), &cfg, |(x, _)| head(x));
+        }
+        other => panic!("unknown problem {other}"),
+    }
+}
+
+fn cmd_sim(args: &Args) {
+    let cfg = config_from(args);
+    let sim = SimConfig::new(profile_from(args));
+    let n = args.get_usize("n", 256);
+    let seed = args.get_u64("seed", 7);
+    let eps = args.get_f64("eps", 1e-12);
+    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
+    match name {
+        "jacobi" => {
+            let (p, _) = JacobiProblem::random(n, eps, seed);
+            sim_and_report(&p, &cfg, &sim, |x| head(x));
+        }
+        "jacobi-map" => {
+            let (p, _) = JacobiMapProblem::random(n, eps, seed);
+            sim_and_report(&p, &cfg, &sim, |x| head(x));
+        }
+        "cimmino" => {
+            let (p, _) = CimminoProblem::random(n, n, eps, seed);
+            sim_and_report(&p, &cfg, &sim, |x| head(x));
+        }
+        "gravity" => {
+            let steps = args.get_usize("steps", 50);
+            let p = GravityProblem::random(n, 1e-3, steps, seed);
+            sim_and_report(&p, &cfg, &sim, |x| head(x));
+        }
+        "montecarlo" => {
+            let p = MonteCarloProblem::new(n, args.get_usize("samples", 10_000), 1e-3);
+            sim_and_report(&p, &cfg, &sim, |t| {
+                format!("pi ≈ {:.6}", MonteCarloProblem::estimate(t))
+            });
+        }
+        "lpp" => {
+            let p = LppProblem::random(4 * n, n, seed);
+            sim_and_report(&p, &cfg, &sim, |x| head(x));
+        }
+        other => panic!("unknown problem {other} (sim)"),
+    }
+}
+
+/// Speedup sweep: BSF-model prediction vs simulated cluster, one table.
+fn cmd_sweep(args: &Args) {
+    let n = args.get_usize("n", 512);
+    let seed = args.get_u64("seed", 7);
+    let profile = profile_from(args);
+    let ks = args.get_usize_list("k", &[1, 2, 4, 8, 16, 32, 64, 128, 256]);
+    let max_iter = args.get_usize("max-iter", 30);
+    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
+
+    // All problems go through the shared library sweep driver.
+    fn sweep<P: BsfProblem>(
+        mk: impl Fn() -> P,
+        ks: &[usize],
+        profile: ClusterProfile,
+        max_iter: usize,
+    ) {
+        let s = bsf::bench::sweep::speedup_sweep(mk, ks, profile, max_iter);
+        bsf::bench::sweep::print_sweep("sweep", &s);
+    }
+
+    match name {
+        "jacobi" => sweep(
+            || JacobiProblem::random(n, 1e-30, seed).0,
+            &ks,
+            profile,
+            max_iter,
+        ),
+        "jacobi-map" => sweep(
+            || JacobiMapProblem::random(n, 1e-30, seed).0,
+            &ks,
+            profile,
+            max_iter,
+        ),
+        "cimmino" => sweep(
+            || CimminoProblem::random(n, n, 1e-30, seed).0,
+            &ks,
+            profile,
+            max_iter,
+        ),
+        "gravity" => sweep(
+            || GravityProblem::random(n, 1e-3, max_iter, seed),
+            &ks,
+            profile,
+            max_iter,
+        ),
+        "montecarlo" => sweep(
+            || MonteCarloProblem::new(n, 10_000, 1e-12),
+            &ks,
+            profile,
+            max_iter,
+        ),
+        other => panic!("unknown problem {other} (sweep)"),
+    }
+}
+
+fn cmd_predict(args: &Args) {
+    let n = args.get_usize("n", 512);
+    let seed = args.get_u64("seed", 7);
+    let profile = profile_from(args);
+    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
+    fn predict<P: BsfProblem>(p: &P, profile: ClusterProfile) {
+        let cal = calibrate(p, profile, 5);
+        let m = cal.params;
+        println!("latency        L = {:.3e} s", m.latency);
+        println!("order transfer   = {:.3e} s ({} B)", m.t_send, cal.order_bytes);
+        println!("fold transfer    = {:.3e} s ({} B)", m.t_recv, cal.fold_bytes);
+        println!("t_map (1 worker) = {:.3e} s  ({:.3e} s/elem)", m.t_map, cal.t_map_per_elem);
+        println!("t_op  (master ⊕) = {:.3e} s", m.t_op);
+        println!("t_proc           = {:.3e} s", m.t_proc);
+        println!("T(1)             = {:.3e} s", m.iteration_time(1));
+        println!("K_max (analytic) = {:.1}", m.k_max());
+        println!("K_max (argmax)   = {}", m.k_max_argmax(16384));
+        println!("a(K_max)         = {:.1}", m.speedup(m.k_max_argmax(16384)));
+    }
+    match name {
+        "jacobi" => predict(&JacobiProblem::random(n, 1e-30, seed).0, profile),
+        "jacobi-map" => predict(&JacobiMapProblem::random(n, 1e-30, seed).0, profile),
+        "cimmino" => predict(&CimminoProblem::random(n, n, 1e-30, seed).0, profile),
+        "gravity" => predict(&GravityProblem::random(n, 1e-3, 10, seed), profile),
+        "montecarlo" => predict(&MonteCarloProblem::new(n, 10_000, 1e-12), profile),
+        "lpp" => predict(&LppProblem::random(4 * n, n, seed), profile),
+        other => panic!("unknown problem {other} (predict)"),
+    }
+}
+
+fn cmd_artifacts() {
+    match XlaRuntime::open_default() {
+        Ok(rt) => {
+            println!("{} artifacts:", rt.names().len());
+            for name in rt.names() {
+                let m = rt.meta(name).unwrap();
+                println!("  {name}  kind={} n={} c={} out={:?}", m.kind, m.n, m.c, m.out_dims);
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot open artifacts: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            eprintln!(
+                "usage: bsf <run|sim|sweep|predict|artifacts> [problem] [--n N] [--k K] \
+                 [--omp T] [--seed S] [--eps E] [--profile infiniband|gigabit|ideal] \
+                 [--backend native|xla] [--max-iter I] [--trace T]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

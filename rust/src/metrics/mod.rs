@@ -1,0 +1,138 @@
+//! Phase timers and iteration metrics for the skeleton runtime.
+//!
+//! The master loop attributes wall time to the phases of Algorithm 2
+//! (send-order / worker-compute+gather / master-reduce / process-results)
+//! so the cost-model calibration and the §Perf pass can see where an
+//! iteration goes.
+
+use std::time::{Duration, Instant};
+
+/// Phases of one BSF iteration (master's view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Master sends the order to all workers (steps 2/10 of Alg. 2).
+    SendOrder,
+    /// Master waits for + receives all partial folds (step 5).
+    Gather,
+    /// Master folds the K partial results (step 6).
+    MasterReduce,
+    /// ProcessResults + StopCond + JobDispatcher (steps 7-9).
+    Process,
+}
+
+pub const ALL_PHASES: [Phase; 4] =
+    [Phase::SendOrder, Phase::Gather, Phase::MasterReduce, Phase::Process];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::SendOrder => "send_order",
+            Phase::Gather => "gather",
+            Phase::MasterReduce => "master_reduce",
+            Phase::Process => "process",
+        }
+    }
+}
+
+/// Accumulated per-phase durations.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimers {
+    totals: [Duration; 4],
+    counts: [u64; 4],
+}
+
+fn idx(p: Phase) -> usize {
+    match p {
+        Phase::SendOrder => 0,
+        Phase::Gather => 1,
+        Phase::MasterReduce => 2,
+        Phase::Process => 3,
+    }
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, attributing its duration to `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.totals[idx(phase)] += d;
+        self.counts[idx(phase)] += 1;
+    }
+
+    pub fn total(&self, phase: Phase) -> Duration {
+        self.totals[idx(phase)]
+    }
+
+    pub fn count(&self, phase: Phase) -> u64 {
+        self.counts[idx(phase)]
+    }
+
+    pub fn total_secs(&self, phase: Phase) -> f64 {
+        self.total(phase).as_secs_f64()
+    }
+
+    /// Merge another timer set into this one.
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for p in ALL_PHASES {
+            self.totals[idx(p)] += other.totals[idx(p)];
+            self.counts[idx(p)] += other.counts[idx(p)];
+        }
+    }
+
+    /// One-line human summary (secs per phase).
+    pub fn summary(&self) -> String {
+        ALL_PHASES
+            .iter()
+            .map(|&p| format!("{}={:.6}s", p.name(), self.total_secs(p)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_attributes_to_phase() {
+        let mut t = PhaseTimers::new();
+        let v = t.time(Phase::Gather, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(t.total(Phase::Gather) >= Duration::from_millis(4));
+        assert_eq!(t.total(Phase::SendOrder), Duration::ZERO);
+        assert_eq!(t.count(Phase::Gather), 1);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = PhaseTimers::new();
+        a.add(Phase::Process, Duration::from_millis(10));
+        let mut b = PhaseTimers::new();
+        b.add(Phase::Process, Duration::from_millis(20));
+        b.add(Phase::Gather, Duration::from_millis(5));
+        a.merge(&b);
+        assert_eq!(a.total(Phase::Process), Duration::from_millis(30));
+        assert_eq!(a.total(Phase::Gather), Duration::from_millis(5));
+        assert_eq!(a.count(Phase::Process), 2);
+    }
+
+    #[test]
+    fn summary_mentions_all_phases() {
+        let s = PhaseTimers::new().summary();
+        for p in ALL_PHASES {
+            assert!(s.contains(p.name()));
+        }
+    }
+}

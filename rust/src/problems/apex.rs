@@ -1,0 +1,336 @@
+//! Apex-style multi-job workflow (the paper's "Workflow support" section;
+//! modeled on the companion `leonid-sokolinsky/Apex-method` repo).
+//!
+//! A simplified apex method for `max c·x  s.t.  A x ≤ b`, organized as
+//! three orchestrated jobs with distinct reduce-element payloads:
+//!
+//! * **job 0 — feasibility**: Agmon-Motzkin projection step; reduce
+//!   element is the correction vector sum (violated constraints only, so
+//!   the reduce counter is the violation count).
+//! * **job 1 — pursuit**: move along the objective direction; each map
+//!   element computes the max step its constraint allows
+//!   (`α_i = (b_i - a_i·x)/(a_i·c)` for `a_i·c > 0`), ⊕ = min.
+//! * **job 2 — verify**: ⊕ = max over constraint violations; feasible +
+//!   tiny last step ⇒ stop.
+//!
+//! Where the C++ skeleton uses the types `PT_bsf_reduceElem_T[_1.._2]`,
+//! the Rust port uses the [`ApexReduce`] enum. The transition logic that
+//! the paper splits between `PC_bsf_ProcessResults_*` and
+//! `PC_bsf_JobDispatcher` is implemented in the same split: process sets
+//! the natural next job, the dispatcher enforces the global pursuit
+//! budget (its "state machine with more states than jobs").
+
+use std::sync::Mutex;
+
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::util::codec::Codec;
+use crate::util::mat::{dot, gen_feasible_halfspaces, norm2, Mat};
+
+/// Per-job reduce payloads (`PT_bsf_reduceElem_T`, `_1`, `_2`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApexReduce {
+    /// Job 0: sum of projection corrections.
+    Corr(Vec<f64>),
+    /// Job 1: minimum allowed step along the objective.
+    MinStep(f64),
+    /// Job 2: maximum violation.
+    MaxViol(f64),
+}
+
+impl Codec for ApexReduce {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            ApexReduce::Corr(v) => {
+                buf.push(0);
+                v.encode(buf);
+            }
+            ApexReduce::MinStep(s) => {
+                buf.push(1);
+                s.encode(buf);
+            }
+            ApexReduce::MaxViol(m) => {
+                buf.push(2);
+                m.encode(buf);
+            }
+        }
+    }
+
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        let tag = buf[*pos];
+        *pos += 1;
+        match tag {
+            0 => ApexReduce::Corr(Vec::decode(buf, pos)),
+            1 => ApexReduce::MinStep(f64::decode(buf, pos)),
+            2 => ApexReduce::MaxViol(f64::decode(buf, pos)),
+            t => panic!("bad ApexReduce tag {t}"),
+        }
+    }
+}
+
+/// Jobs, named.
+pub const JOB_FEASIBILITY: usize = 0;
+pub const JOB_PURSUIT: usize = 1;
+pub const JOB_VERIFY: usize = 2;
+
+pub struct ApexProblem {
+    pub a: Mat,
+    pub b: Vec<f64>,
+    /// Unit objective direction.
+    pub c_dir: Vec<f64>,
+    w: Vec<f64>,
+    pub relax: f64,
+    pub tol: f64,
+    /// Stop when a pursuit step is shorter than this.
+    pub step_tol: f64,
+    /// Master-side FSM state: pursuit steps taken (the dispatcher's
+    /// extra state beyond the job number).
+    pursuits: Mutex<usize>,
+    pub max_pursuits: usize,
+    x0: Vec<f64>,
+}
+
+impl ApexProblem {
+    pub fn new(a: Mat, b: Vec<f64>, c: Vec<f64>, x0: Vec<f64>) -> Self {
+        assert_eq!(a.rows, b.len());
+        assert_eq!(a.cols, c.len());
+        let w = (0..a.rows)
+            .map(|i| {
+                let n2 = dot(a.row(i), a.row(i));
+                if n2 > 0.0 {
+                    1.0 / n2
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let nc = norm2(&c);
+        let c_dir = c.iter().map(|v| v / nc).collect();
+        Self {
+            a,
+            b,
+            c_dir,
+            w,
+            relax: 1.5,
+            tol: 1e-9,
+            step_tol: 1e-10,
+            pursuits: Mutex::new(0),
+            max_pursuits: 10_000,
+            x0,
+        }
+    }
+
+    /// Random bounded feasible LPP: a polytope around the origin plus a
+    /// box cap so the objective is bounded. Objective = all-ones.
+    pub fn random(m: usize, n: usize, seed: u64) -> Self {
+        let center = vec![0.0; n];
+        let (mut a, mut b) = gen_feasible_halfspaces(m, n, &center, 0.5, seed);
+        // cap: x_i <= 10 for each coordinate (bounds the objective)
+        for i in 0..n {
+            let mut row = vec![0.0; n];
+            row[i] = 1.0;
+            a.data.extend_from_slice(&row);
+            a.rows += 1;
+            b.push(10.0);
+        }
+        let c = vec![1.0; n];
+        let x0 = vec![0.0; n];
+        Self::new(a, b, c, x0)
+    }
+
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        dot(&self.c_dir, x)
+    }
+
+    pub fn violations(&self, x: &[f64]) -> usize {
+        (0..self.a.rows)
+            .filter(|&i| dot(self.a.row(i), x) - self.b[i] > self.tol)
+            .count()
+    }
+}
+
+/// Param: (x, last pursuit step length).
+type Param = (Vec<f64>, f64);
+
+impl BsfProblem for ApexProblem {
+    type Param = Param;
+    type MapElem = usize;
+    type ReduceElem = ApexReduce;
+
+    fn list_size(&self) -> usize {
+        self.a.rows
+    }
+
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+
+    fn init_parameter(&self) -> Param {
+        (self.x0.clone(), f64::INFINITY)
+    }
+
+    fn job_count(&self) -> usize {
+        3
+    }
+
+    fn map_f(&self, &i: &usize, param: &Param, ctx: &MapCtx) -> Option<ApexReduce> {
+        let (x, _) = param;
+        let row = self.a.row(i);
+        match ctx.job_case {
+            JOB_FEASIBILITY => {
+                let viol = dot(row, x) - self.b[i];
+                if viol <= self.tol {
+                    return None;
+                }
+                let scale = -viol * self.w[i];
+                Some(ApexReduce::Corr(row.iter().map(|&aij| scale * aij).collect()))
+            }
+            JOB_PURSUIT => {
+                let denom = dot(row, &self.c_dir);
+                if denom <= 1e-12 {
+                    return None; // constraint never blocks this direction
+                }
+                let slack = self.b[i] - dot(row, x);
+                Some(ApexReduce::MinStep((slack / denom).max(0.0)))
+            }
+            JOB_VERIFY => {
+                let viol = dot(row, x) - self.b[i];
+                if viol <= self.tol {
+                    return None;
+                }
+                Some(ApexReduce::MaxViol(viol))
+            }
+            j => panic!("unknown job {j}"),
+        }
+    }
+
+    fn reduce_f(&self, x: &ApexReduce, y: &ApexReduce, job: usize) -> ApexReduce {
+        match (job, x, y) {
+            (JOB_FEASIBILITY, ApexReduce::Corr(a), ApexReduce::Corr(b)) => {
+                let mut out = a.clone();
+                for (o, v) in out.iter_mut().zip(b) {
+                    *o += v;
+                }
+                ApexReduce::Corr(out)
+            }
+            (JOB_PURSUIT, ApexReduce::MinStep(a), ApexReduce::MinStep(b)) => {
+                ApexReduce::MinStep(a.min(*b))
+            }
+            (JOB_VERIFY, ApexReduce::MaxViol(a), ApexReduce::MaxViol(b)) => {
+                ApexReduce::MaxViol(a.max(*b))
+            }
+            (j, a, b) => panic!("reduce payload mismatch in job {j}: {a:?} vs {b:?}"),
+        }
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&ApexReduce>,
+        reduce_counter: u64,
+        param: &mut Param,
+        ctx: &IterCtx,
+    ) -> StepDecision {
+        let (x, last_step) = param;
+        match ctx.job_case {
+            JOB_FEASIBILITY => match reduce_result {
+                None => StepDecision::goto(JOB_PURSUIT), // feasible now
+                Some(ApexReduce::Corr(s)) => {
+                    let scale = self.relax / reduce_counter as f64;
+                    for (xi, si) in x.iter_mut().zip(s) {
+                        *xi += scale * si;
+                    }
+                    StepDecision::stay(JOB_FEASIBILITY)
+                }
+                Some(other) => panic!("wrong payload for job 0: {other:?}"),
+            },
+            JOB_PURSUIT => {
+                let step = match reduce_result {
+                    // no constraint blocks: unbounded — cap with a unit step
+                    None => 1.0,
+                    Some(ApexReduce::MinStep(s)) => *s,
+                    Some(other) => panic!("wrong payload for job 1: {other:?}"),
+                };
+                for (xi, ci) in x.iter_mut().zip(&self.c_dir) {
+                    *xi += step * ci;
+                }
+                *last_step = step;
+                *self.pursuits.lock().unwrap() += 1;
+                StepDecision::goto(JOB_VERIFY)
+            }
+            JOB_VERIFY => {
+                let feasible = reduce_result.is_none();
+                if feasible && *last_step < self.step_tol {
+                    StepDecision::exit()
+                } else if feasible {
+                    StepDecision::goto(JOB_PURSUIT)
+                } else {
+                    StepDecision::goto(JOB_FEASIBILITY)
+                }
+            }
+            j => panic!("unknown job {j}"),
+        }
+    }
+
+    fn job_dispatcher(
+        &self,
+        _param: &mut Param,
+        decision: StepDecision,
+        _ctx: &IterCtx,
+    ) -> Option<StepDecision> {
+        // The dispatcher's extra state: a global pursuit budget.
+        if *self.pursuits.lock().unwrap() >= self.max_pursuits && !decision.exit {
+            Some(StepDecision::exit())
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::{run_threaded, BsfConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn codec_roundtrip_all_variants() {
+        for v in [
+            ApexReduce::Corr(vec![1.0, -2.0]),
+            ApexReduce::MinStep(0.5),
+            ApexReduce::MaxViol(3.25),
+        ] {
+            assert_eq!(ApexReduce::from_bytes(&v.to_bytes()), v);
+        }
+    }
+
+    #[test]
+    fn workflow_reaches_feasible_optimum_face() {
+        let p = ApexProblem::random(24, 4, 51);
+        let p = Arc::new(p);
+        let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(3).max_iter(100_000));
+        let (x, _) = &r.param;
+        assert_eq!(p.violations(x), 0, "final point feasible");
+        // pursuit must have improved the objective over the start
+        assert!(p.objective(x) > p.objective(&p.x0) + 1.0);
+    }
+
+    #[test]
+    fn result_independent_of_worker_count() {
+        let mk = || ApexProblem::random(20, 3, 52);
+        let r1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1).max_iter(100_000));
+        let r4 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(4).max_iter(100_000));
+        assert_eq!(r1.iterations, r4.iterations);
+        for (a, b) in r1.param.0.iter().zip(&r4.param.0) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dispatcher_enforces_pursuit_budget() {
+        let mut p = ApexProblem::random(20, 3, 53);
+        p.max_pursuits = 1;
+        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(2).max_iter(100_000));
+        // with a 1-pursuit budget the run must end early (well under the
+        // unbudgeted iteration count, which is > 10)
+        assert!(r.iterations <= 10, "iterations {}", r.iterations);
+    }
+}

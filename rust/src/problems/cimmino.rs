@@ -1,0 +1,268 @@
+//! BSF-Cimmino: row-projection iterative solver (companion repo
+//! `leonid-sokolinsky/BSF-Cimmino`).
+//!
+//! For a consistent system `A x = b`, each map element is a row index;
+//! `F_x(i)` is the scaled reflection/projection correction
+//! `w_i (b_i - a_i·x) a_i` with `w_i = 1/||a_i||²`; ⊕ is vector addition;
+//! the master applies `x' = x + (λ/m) Σ corrections` (λ ∈ (0, 2) — we use
+//! the standard λ = m·relax/count normalization via the reduce counter).
+//! Stops when `||x' - x||² < ε`.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::problems::jacobi::pick_artifact;
+use crate::runtime::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::skeleton::variables::SkelVars;
+use crate::util::mat::{dist2, dot, gen_consistent, Mat};
+
+/// Worker map backend.
+#[derive(Clone, Default)]
+pub enum CimminoBackend {
+    #[default]
+    Native,
+    Xla(XlaHandle),
+}
+
+/// Cimmino problem instance.
+pub struct CimminoProblem {
+    a: Mat,
+    b: Vec<f64>,
+    /// Per-row weights 1/||a_i||².
+    w: Vec<f64>,
+    /// Relaxation λ (0 < λ < 2; 1.0 = classic Cimmino with averaging).
+    pub relax: f64,
+    pub eps: f64,
+    backend: CimminoBackend,
+    xla_chunks: Mutex<HashMap<(usize, usize), XlaRows>>,
+}
+
+#[derive(Clone)]
+struct XlaRows {
+    artifact: String,
+    /// Service-side cache keys of the static blocks (§Perf).
+    rows_key: u64,
+    b_key: u64,
+    w_key: u64,
+}
+
+impl CimminoProblem {
+    pub fn new(a: Mat, b: Vec<f64>, relax: f64, eps: f64) -> Self {
+        assert_eq!(a.rows, b.len());
+        let w = (0..a.rows)
+            .map(|i| {
+                let nrm2 = dot(a.row(i), a.row(i));
+                if nrm2 > 0.0 {
+                    1.0 / nrm2
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Self {
+            a,
+            b,
+            w,
+            relax,
+            eps,
+            backend: CimminoBackend::Native,
+            xla_chunks: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Random consistent m x n system; returns (problem, x_star).
+    pub fn random(m: usize, n: usize, eps: f64, seed: u64) -> (Self, Vec<f64>) {
+        let (a, b, x_star) = gen_consistent(m, n, seed);
+        (Self::new(a, b, 1.0, eps), x_star)
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.a.rows, self.a.cols)
+    }
+
+    pub fn with_backend(mut self, backend: CimminoBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// ||A x - b||² — validation helper.
+    pub fn residual2(&self, x: &[f64]) -> f64 {
+        let ax = self.a.matvec(x);
+        dist2(&ax, &self.b)
+    }
+
+    fn xla_map(
+        &self,
+        handle: &XlaHandle,
+        param: &[f64],
+        offset: usize,
+        len: usize,
+    ) -> Option<Vec<f64>> {
+        let n = self.a.cols;
+        // Note: the AOT variants are square (m == n artifacts); only used
+        // when dims match a compiled spec.
+        if self.a.rows != n {
+            return None;
+        }
+        let key = (offset, len);
+        let chunk = {
+            let mut cache = self.xla_chunks.lock().unwrap();
+            match cache.get(&key) {
+                Some(c) => c.clone(),
+                None => {
+                    let (artifact, c_pad) = pick_artifact("cimmino", n, len)?;
+                    let mut rows = vec![0f32; c_pad * n];
+                    let mut b_chunk = vec![0f32; c_pad];
+                    let mut w_chunk = vec![0f32; c_pad]; // pad rows get w=0
+                    for (ii, i) in (offset..offset + len).enumerate() {
+                        for j in 0..n {
+                            rows[ii * n + j] = self.a.at(i, j) as f32;
+                        }
+                        b_chunk[ii] = self.b[i] as f32;
+                        w_chunk[ii] = self.w[i] as f32;
+                    }
+                    let rows_key = fresh_input_key();
+                    let b_key = fresh_input_key();
+                    let w_key = fresh_input_key();
+                    handle
+                        .register_input(rows_key, rows, vec![c_pad as i64, n as i64])
+                        .ok()?;
+                    handle.register_input(b_key, b_chunk, vec![c_pad as i64]).ok()?;
+                    handle.register_input(w_key, w_chunk, vec![c_pad as i64]).ok()?;
+                    let ch = XlaRows { artifact, rows_key, b_key, w_key };
+                    cache.insert(key, ch.clone());
+                    ch
+                }
+            }
+        };
+        let x: Vec<f32> = param.iter().map(|&v| v as f32).collect();
+        let out = handle
+            .execute_spec(
+                &chunk.artifact,
+                vec![
+                    ArgSpec::Cached(chunk.rows_key),
+                    ArgSpec::Cached(chunk.b_key),
+                    ArgSpec::Dyn(x, vec![n as i64]),
+                    ArgSpec::Cached(chunk.w_key),
+                ],
+            )
+            .ok()?;
+        Some(out.into_iter().map(|v| v as f64).collect())
+    }
+}
+
+impl BsfProblem for CimminoProblem {
+    type Param = Vec<f64>;
+    type MapElem = usize;
+    type ReduceElem = Vec<f64>;
+
+    fn list_size(&self) -> usize {
+        self.a.rows
+    }
+
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+
+    fn init_parameter(&self) -> Vec<f64> {
+        vec![0.0; self.a.cols]
+    }
+
+    fn map_f(&self, &i: &usize, param: &Vec<f64>, _ctx: &MapCtx) -> Option<Vec<f64>> {
+        let row = self.a.row(i);
+        let r = (self.b[i] - dot(row, param)) * self.w[i];
+        Some(row.iter().map(|&aij| r * aij).collect())
+    }
+
+    fn reduce_f(&self, x: &Vec<f64>, y: &Vec<f64>, _job: usize) -> Vec<f64> {
+        let mut out = x.clone();
+        for (o, v) in out.iter_mut().zip(y) {
+            *o += v;
+        }
+        out
+    }
+
+    fn map_sublist(
+        &self,
+        elems: &[usize],
+        param: &Vec<f64>,
+        vars: &SkelVars,
+    ) -> Option<(Option<Vec<f64>>, u64)> {
+        match &self.backend {
+            CimminoBackend::Native => None,
+            CimminoBackend::Xla(handle) => {
+                if elems.is_empty() {
+                    return Some((None, 0));
+                }
+                let s = self.xla_map(handle, param, vars.address_offset, elems.len())?;
+                Some((Some(s), elems.len() as u64))
+            }
+        }
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&Vec<f64>>,
+        reduce_counter: u64,
+        param: &mut Vec<f64>,
+        _ctx: &IterCtx,
+    ) -> StepDecision {
+        let s = reduce_result.expect("Cimmino maps every row");
+        debug_assert_eq!(reduce_counter as usize, self.a.rows);
+        // x' = x + λ · mean(corrections)
+        let scale = self.relax * (self.a.rows as f64 / reduce_counter as f64)
+            / self.a.rows as f64;
+        let mut delta = 0.0;
+        for (xi, si) in param.iter_mut().zip(s) {
+            let step = scale * si;
+            delta += step * step;
+            *xi += step;
+        }
+        if delta < self.eps {
+            StepDecision::exit()
+        } else {
+            StepDecision::stay(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::{run_threaded, BsfConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn residual_decreases_to_tolerance() {
+        let (p, _) = CimminoProblem::random(48, 16, 1e-12, 21);
+        let r0 = p.residual2(&p.init_parameter());
+        let p = Arc::new(p);
+        let report =
+            run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(20_000));
+        let r1 = p.residual2(&report.param);
+        assert!(r1 < r0 * 1e-6, "residual² {r0} -> {r1}");
+    }
+
+    #[test]
+    fn result_independent_of_worker_count() {
+        let (p1, _) = CimminoProblem::random(30, 10, 1e-14, 22);
+        let (p6, _) = CimminoProblem::random(30, 10, 1e-14, 22);
+        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(1).max_iter(20_000));
+        let r6 = run_threaded(Arc::new(p6), &BsfConfig::with_workers(6).max_iter(20_000));
+        assert_eq!(r1.iterations, r6.iterations);
+        for (a, b) in r1.param.iter().zip(&r6.param) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn exact_start_exits_immediately() {
+        // b = A·0 = 0 ⇒ x=0 is already the solution ⇒ first step is ~0.
+        let a = Mat::from_fn(8, 8, |i, j| ((i + 2 * j) % 5) as f64 - 2.0);
+        let b = vec![0.0; 8];
+        let p = CimminoProblem::new(a, b, 1.0, 1e-12);
+        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(2));
+        assert_eq!(r.iterations, 1);
+    }
+}

@@ -1,0 +1,333 @@
+//! BSF-gravity: N-body simulation (companion repo
+//! `leonid-sokolinsky/BSF-gravity`).
+//!
+//! Each iteration is one leapfrog (kick-drift) time step. The map-list is
+//! the body index list; `F_x(i)` computes body i's acceleration against
+//! all bodies (an O(N) tile of the O(N²) interaction work — the
+//! compute-heavy extreme of the BSF cost model: `t_map = Θ(N²)` against
+//! `Θ(N)` communication, so the scalability boundary is late, E3).
+//!
+//! Like Algorithm 4 this is Map-without-Reduce: the reduce element is the
+//! list of `(body, acceleration)` pairs and ⊕ is concatenation.
+//! Velocities are master-side state (the workers only ever need
+//! positions, which travel as the order parameter).
+
+use std::sync::Mutex;
+
+use crate::problems::jacobi::pick_artifact;
+use crate::runtime::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::skeleton::variables::SkelVars;
+use crate::util::rng::SplitMix64;
+
+/// Worker map backend.
+#[derive(Clone, Default)]
+pub enum GravityBackend {
+    #[default]
+    Native,
+    Xla(XlaHandle),
+}
+
+/// N-body instance. Positions travel as the order parameter (flat
+/// `[x0,y0,z0, x1,...]`); masses are static problem data.
+pub struct GravityProblem {
+    pub masses: Vec<f64>,
+    init_positions: Vec<f64>,
+    /// Master-side velocities (kick-drift state).
+    velocities: Mutex<Vec<f64>>,
+    /// Plummer softening ε (matches the Pallas kernel's constant).
+    pub softening: f64,
+    /// Gravitational constant.
+    pub g: f64,
+    /// Time step.
+    pub dt: f64,
+    /// Number of leapfrog steps to run (the stop condition).
+    pub steps: usize,
+    backend: GravityBackend,
+    /// Cached f32 masses (XLA path).
+    m_f32: Vec<f32>,
+    /// Service-side cache key of the mass vector (§Perf; lazily set).
+    m_key: Mutex<Option<u64>>,
+}
+
+impl GravityProblem {
+    pub fn new(
+        masses: Vec<f64>,
+        positions: Vec<f64>,
+        velocities: Vec<f64>,
+        dt: f64,
+        steps: usize,
+    ) -> Self {
+        let n = masses.len();
+        assert_eq!(positions.len(), 3 * n);
+        assert_eq!(velocities.len(), 3 * n);
+        let m_f32 = masses.iter().map(|&m| m as f32).collect();
+        Self {
+            masses,
+            init_positions: positions,
+            velocities: Mutex::new(velocities),
+            softening: 1e-2,
+            g: 1.0,
+            dt,
+            steps,
+            backend: GravityBackend::Native,
+            m_f32,
+            m_key: Mutex::new(None),
+        }
+    }
+
+    /// Random Plummer-ish cloud of `n` bodies; deterministic in `seed`.
+    pub fn random(n: usize, dt: f64, steps: usize, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let masses: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64()).collect();
+        let positions: Vec<f64> = (0..3 * n).map(|_| rng.normal()).collect();
+        let velocities: Vec<f64> = (0..3 * n).map(|_| 0.1 * rng.normal()).collect();
+        Self::new(masses, positions, velocities, dt, steps)
+    }
+
+    pub fn n_bodies(&self) -> usize {
+        self.masses.len()
+    }
+
+    pub fn with_backend(mut self, backend: GravityBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Acceleration of body `i` given flat positions (the native kernel;
+    /// mirrors `python/compile/kernels/ref.py::gravity_chunk`).
+    fn accel(&self, i: usize, pos: &[f64]) -> [f64; 3] {
+        let eps2 = self.softening * self.softening;
+        let pi = &pos[3 * i..3 * i + 3];
+        let mut acc = [0.0f64; 3];
+        for j in 0..self.n_bodies() {
+            let pj = &pos[3 * j..3 * j + 3];
+            let d = [pj[0] - pi[0], pj[1] - pi[1], pj[2] - pi[2]];
+            let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2] + eps2;
+            let w = self.masses[j] / (r2 * r2.sqrt());
+            acc[0] += w * d[0];
+            acc[1] += w * d[1];
+            acc[2] += w * d[2];
+        }
+        [acc[0] * self.g, acc[1] * self.g, acc[2] * self.g]
+    }
+
+    /// Total kinetic + potential energy (drift check for tests).
+    pub fn energy(&self, pos: &[f64]) -> f64 {
+        let vel = self.velocities.lock().unwrap();
+        let n = self.n_bodies();
+        let mut e = 0.0;
+        for i in 0..n {
+            let v = &vel[3 * i..3 * i + 3];
+            e += 0.5 * self.masses[i] * (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]);
+        }
+        let eps2 = self.softening * self.softening;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let pi = &pos[3 * i..3 * i + 3];
+                let pj = &pos[3 * j..3 * j + 3];
+                let d = [pj[0] - pi[0], pj[1] - pi[1], pj[2] - pi[2]];
+                let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2] + eps2).sqrt();
+                e -= self.g * self.masses[i] * self.masses[j] / r;
+            }
+        }
+        e
+    }
+
+    fn xla_map(
+        &self,
+        handle: &XlaHandle,
+        pos: &[f64],
+        offset: usize,
+        len: usize,
+    ) -> Option<Vec<(u64, [f64; 3])>> {
+        let n = self.n_bodies();
+        let (artifact, c_pad) = pick_artifact("gravity", n, len)?;
+        let m_key = {
+            let mut guard = self.m_key.lock().unwrap();
+            match *guard {
+                Some(k) => k,
+                None => {
+                    let k = fresh_input_key();
+                    handle
+                        .register_input(k, self.m_f32.clone(), vec![n as i64])
+                        .ok()?;
+                    *guard = Some(k);
+                    k
+                }
+            }
+        };
+        let mut p_chunk = vec![0f32; c_pad * 3];
+        for (ii, i) in (offset..offset + len).enumerate() {
+            for k in 0..3 {
+                p_chunk[ii * 3 + k] = pos[3 * i + k] as f32;
+            }
+        }
+        let p_all: Vec<f32> = pos.iter().map(|&v| v as f32).collect();
+        let out = handle
+            .execute_spec(
+                &artifact,
+                vec![
+                    ArgSpec::Dyn(p_chunk, vec![c_pad as i64, 3]),
+                    ArgSpec::Dyn(p_all, vec![n as i64, 3]),
+                    ArgSpec::Cached(m_key),
+                ],
+            )
+            .ok()?;
+        Some(
+            (0..len)
+                .map(|ii| {
+                    (
+                        (offset + ii) as u64,
+                        [
+                            out[ii * 3] as f64,
+                            out[ii * 3 + 1] as f64,
+                            out[ii * 3 + 2] as f64,
+                        ],
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+impl BsfProblem for GravityProblem {
+    type Param = Vec<f64>;
+    type MapElem = usize;
+    /// `(body index, acceleration)` pairs; ⊕ = concatenation.
+    type ReduceElem = Vec<(u64, [f64; 3])>;
+
+    fn list_size(&self) -> usize {
+        self.n_bodies()
+    }
+
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+
+    fn init_parameter(&self) -> Vec<f64> {
+        self.init_positions.clone()
+    }
+
+    fn map_f(
+        &self,
+        &i: &usize,
+        param: &Vec<f64>,
+        _ctx: &MapCtx,
+    ) -> Option<Vec<(u64, [f64; 3])>> {
+        Some(vec![(i as u64, self.accel(i, param))])
+    }
+
+    fn reduce_f(
+        &self,
+        x: &Vec<(u64, [f64; 3])>,
+        y: &Vec<(u64, [f64; 3])>,
+        _job: usize,
+    ) -> Vec<(u64, [f64; 3])> {
+        let mut out = x.clone();
+        out.extend_from_slice(y);
+        out
+    }
+
+    fn map_sublist(
+        &self,
+        elems: &[usize],
+        param: &Vec<f64>,
+        vars: &SkelVars,
+    ) -> Option<(Option<Vec<(u64, [f64; 3])>>, u64)> {
+        match &self.backend {
+            GravityBackend::Native => None,
+            GravityBackend::Xla(handle) => {
+                if elems.is_empty() {
+                    return Some((None, 0));
+                }
+                let pairs =
+                    self.xla_map(handle, param, vars.address_offset, elems.len())?;
+                let count = pairs.len() as u64;
+                Some((Some(pairs), count))
+            }
+        }
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&Vec<(u64, [f64; 3])>>,
+        reduce_counter: u64,
+        param: &mut Vec<f64>,
+        ctx: &IterCtx,
+    ) -> StepDecision {
+        let accs = reduce_result.expect("gravity maps every body");
+        debug_assert_eq!(reduce_counter as usize, self.n_bodies());
+        let mut vel = self.velocities.lock().unwrap();
+        // kick-drift: v += a·dt; x += v·dt
+        for &(i, a) in accs {
+            let i = i as usize;
+            for k in 0..3 {
+                vel[3 * i + k] += a[k] * self.dt;
+                param[3 * i + k] += vel[3 * i + k] * self.dt;
+            }
+        }
+        if ctx.iter_counter >= self.steps {
+            StepDecision::exit()
+        } else {
+            StepDecision::stay(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::{run_threaded, BsfConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn runs_fixed_number_of_steps() {
+        let p = GravityProblem::random(12, 1e-3, 25, 31);
+        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(3));
+        assert_eq!(r.iterations, 25);
+    }
+
+    #[test]
+    fn result_independent_of_worker_count() {
+        let p1 = GravityProblem::random(16, 1e-3, 10, 32);
+        let p4 = GravityProblem::random(16, 1e-3, 10, 32);
+        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(1));
+        let r4 = run_threaded(Arc::new(p4), &BsfConfig::with_workers(4));
+        for (a, b) in r1.param.iter().zip(&r4.param) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn two_body_momentum_conserved() {
+        // Two equal masses, opposite velocities: total momentum stays ~0.
+        let p = GravityProblem::new(
+            vec![1.0, 1.0],
+            vec![-1.0, 0.0, 0.0, 1.0, 0.0, 0.0],
+            vec![0.0, 0.1, 0.0, 0.0, -0.1, 0.0],
+            1e-3,
+            200,
+        );
+        let p = Arc::new(p);
+        let _ = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(2));
+        let vel = p.velocities.lock().unwrap();
+        for k in 0..3 {
+            let total = vel[k] + vel[3 + k];
+            assert!(total.abs() < 1e-9, "momentum axis {k}: {total}");
+        }
+    }
+
+    #[test]
+    fn energy_roughly_conserved_small_dt() {
+        let p = GravityProblem::random(8, 1e-4, 100, 33);
+        let e0 = p.energy(&p.init_parameter());
+        let p = Arc::new(p);
+        let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(2));
+        let e1 = p.energy(&r.param);
+        assert!(
+            (e1 - e0).abs() < 0.05 * e0.abs().max(1.0),
+            "energy drift {e0} -> {e1}"
+        );
+    }
+}

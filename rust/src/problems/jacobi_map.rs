@@ -1,0 +1,260 @@
+//! BSF-Jacobi-Map: "Using Map without Reduce" (Algorithm 4).
+//!
+//! The map-list is the row index list `G = [0, ..., n-1]`; `Φ_x(i)`
+//! computes the *i-th coordinate* of the next approximation
+//! (`d_i + Σ_j c_ij x_j`). There is nothing to fold — the reduce-list *is*
+//! the next approximation — so the reduce element is a list of
+//! `(global index, value)` pairs and ⊕ is concatenation (associative, so
+//! the skeleton machinery is reused unchanged; this mirrors the paper's
+//! remark that the implementation needs the `BSF_sv_numberInSublist` /
+//! `BSF_sv_addressOffset` / `BSF_sv_sublistLength` tricks, which here is
+//! `ctx.global_index()`).
+//!
+//! Compared to Algorithm 3 the per-iteration result traffic per worker
+//! shrinks from a full n-vector to the worker's coordinate block while
+//! the per-worker compute stays `Θ(n²/K)` — the cost model sees a
+//! different `t_recv`, which is exactly the E2 experiment.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::problems::jacobi::pick_artifact;
+use crate::runtime::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::skeleton::variables::SkelVars;
+use crate::util::mat::{dist2, dot, gen_diag_dominant, jacobi_cd, Mat};
+
+/// Map backend (native loop or the `jacobi_map_*` AOT artifact).
+#[derive(Clone, Default)]
+pub enum MapMapBackend {
+    #[default]
+    Native,
+    Xla(XlaHandle),
+}
+
+/// Jacobi with Map only: workers own row blocks of C.
+pub struct JacobiMapProblem {
+    /// C in row-major (rows are the worker's unit of work here).
+    c: Mat,
+    d: Vec<f64>,
+    pub eps: f64,
+    backend: MapMapBackend,
+    /// Cached f32 row blocks keyed by (offset, len), padded to the
+    /// artifact chunk size.
+    xla_chunks: Mutex<HashMap<(usize, usize), XlaRows>>,
+}
+
+#[derive(Clone)]
+struct XlaRows {
+    artifact: String,
+    /// Service-side cache keys of the static blocks (§Perf).
+    rows_key: u64,
+    d_key: u64,
+}
+
+impl JacobiMapProblem {
+    pub fn from_system(a: &Mat, b: &[f64], eps: f64) -> Self {
+        let (c, d) = jacobi_cd(a, b);
+        Self {
+            c,
+            d,
+            eps,
+            backend: MapMapBackend::Native,
+            xla_chunks: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn random(n: usize, eps: f64, seed: u64) -> (Self, Vec<f64>) {
+        let (a, b, x_star) = gen_diag_dominant(n, seed);
+        (Self::from_system(&a, &b, eps), x_star)
+    }
+
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    pub fn with_backend(mut self, backend: MapMapBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    fn xla_map(
+        &self,
+        handle: &XlaHandle,
+        param: &[f64],
+        offset: usize,
+        len: usize,
+    ) -> Option<Vec<(u64, f64)>> {
+        let n = self.n();
+        let key = (offset, len);
+        let chunk = {
+            let mut cache = self.xla_chunks.lock().unwrap();
+            match cache.get(&key) {
+                Some(c) => c.clone(),
+                None => {
+                    let (artifact, c_pad) = pick_artifact("jacobi_map", n, len)?;
+                    let mut rows = vec![0f32; c_pad * n];
+                    let mut d_chunk = vec![0f32; c_pad];
+                    for (ii, i) in (offset..offset + len).enumerate() {
+                        for j in 0..n {
+                            rows[ii * n + j] = self.c.at(i, j) as f32;
+                        }
+                        d_chunk[ii] = self.d[i] as f32;
+                    }
+                    let rows_key = fresh_input_key();
+                    let d_key = fresh_input_key();
+                    handle
+                        .register_input(rows_key, rows, vec![c_pad as i64, n as i64])
+                        .ok()?;
+                    handle.register_input(d_key, d_chunk, vec![c_pad as i64]).ok()?;
+                    let ch = XlaRows { artifact, rows_key, d_key };
+                    cache.insert(key, ch.clone());
+                    ch
+                }
+            }
+        };
+        let x: Vec<f32> = param.iter().map(|&v| v as f32).collect();
+        let out = handle
+            .execute_spec(
+                &chunk.artifact,
+                vec![
+                    ArgSpec::Cached(chunk.rows_key),
+                    ArgSpec::Dyn(x, vec![n as i64]),
+                    ArgSpec::Cached(chunk.d_key),
+                ],
+            )
+            .ok()?;
+        Some(
+            (0..len)
+                .map(|ii| ((offset + ii) as u64, out[ii] as f64))
+                .collect(),
+        )
+    }
+}
+
+impl BsfProblem for JacobiMapProblem {
+    type Param = Vec<f64>;
+    type MapElem = usize;
+    /// `(global row index, coordinate value)` pairs; ⊕ = concatenation.
+    type ReduceElem = Vec<(u64, f64)>;
+
+    fn list_size(&self) -> usize {
+        self.n()
+    }
+
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+
+    fn init_parameter(&self) -> Vec<f64> {
+        self.d.clone()
+    }
+
+    fn map_f(
+        &self,
+        &i: &usize,
+        param: &Vec<f64>,
+        ctx: &MapCtx,
+    ) -> Option<Vec<(u64, f64)>> {
+        debug_assert_eq!(ctx.global_index(), i, "map-list is the identity list");
+        // Φ_x(i) = d_i + Σ_j c_ij x_j  (formula (2) of the paper)
+        let v = self.d[i] + dot(self.c.row(i), param);
+        Some(vec![(i as u64, v)])
+    }
+
+    fn reduce_f(
+        &self,
+        x: &Vec<(u64, f64)>,
+        y: &Vec<(u64, f64)>,
+        _job: usize,
+    ) -> Vec<(u64, f64)> {
+        let mut out = x.clone();
+        out.extend_from_slice(y);
+        out
+    }
+
+    fn map_sublist(
+        &self,
+        elems: &[usize],
+        param: &Vec<f64>,
+        vars: &SkelVars,
+    ) -> Option<(Option<Vec<(u64, f64)>>, u64)> {
+        match &self.backend {
+            MapMapBackend::Native => None,
+            MapMapBackend::Xla(handle) => {
+                if elems.is_empty() {
+                    return Some((None, 0));
+                }
+                let pairs =
+                    self.xla_map(handle, param, vars.address_offset, elems.len())?;
+                let count = pairs.len() as u64;
+                Some((Some(pairs), count))
+            }
+        }
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&Vec<(u64, f64)>>,
+        reduce_counter: u64,
+        param: &mut Vec<f64>,
+        _ctx: &IterCtx,
+    ) -> StepDecision {
+        let pairs = reduce_result.expect("map-only Jacobi maps every row");
+        assert_eq!(reduce_counter as usize, self.n(), "every coordinate mapped");
+        let mut next = vec![0.0; self.n()];
+        for &(i, v) in pairs {
+            next[i as usize] = v;
+        }
+        let delta = dist2(&next, param);
+        *param = next;
+        if delta < self.eps {
+            StepDecision::exit()
+        } else {
+            StepDecision::stay(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::{run_threaded, BsfConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn converges_to_known_solution() {
+        let (p, x_star) = JacobiMapProblem::random(24, 1e-20, 11);
+        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(3));
+        for (a, b) in r.param.iter().zip(&x_star) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn agrees_with_map_reduce_variant() {
+        use crate::problems::jacobi::JacobiProblem;
+        let (p_map, _) = JacobiMapProblem::random(20, 1e-18, 12);
+        let (p_red, _) = JacobiProblem::random(20, 1e-18, 12);
+        let r_map = run_threaded(Arc::new(p_map), &BsfConfig::with_workers(4));
+        let r_red = run_threaded(Arc::new(p_red), &BsfConfig::with_workers(4));
+        // Same iteration count and same fixed point: the two formulations
+        // compute the same operator.
+        assert_eq!(r_map.iterations, r_red.iterations);
+        for (a, b) in r_map.param.iter().zip(&r_red.param) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn result_independent_of_worker_count() {
+        let (p1, _) = JacobiMapProblem::random(17, 1e-18, 13);
+        let (p4, _) = JacobiMapProblem::random(17, 1e-18, 13);
+        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(1));
+        let r4 = run_threaded(Arc::new(p4), &BsfConfig::with_workers(4));
+        assert_eq!(r1.iterations, r4.iterations);
+        for (a, b) in r1.param.iter().zip(&r4.param) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

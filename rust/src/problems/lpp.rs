@@ -1,0 +1,166 @@
+//! LPP feasibility via Agmon-Motzkin relaxation projections (mirrors the
+//! companion repos `BSF-LPP-Generator` / `NSLP-Quest`).
+//!
+//! Given half-spaces `a_i·x ≤ b_i`, each map element is one constraint;
+//! `F_x(i)` returns the projection correction `((b_i - a_i·x)/||a_i||²)a_i`
+//! **only if the constraint is violated** — satisfied constraints return
+//! "success = 0" (`None`), so this problem exercises the paper's extended
+//! reduce-list: the reduce counter equals the number of violated
+//! constraints, and the master both averages corrections over it and uses
+//! `counter == 0` as the feasibility stop condition.
+
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::util::mat::{dot, gen_feasible_halfspaces, Mat};
+
+pub struct LppProblem {
+    pub a: Mat,
+    pub b: Vec<f64>,
+    /// 1/||a_i||² per constraint.
+    w: Vec<f64>,
+    /// Relaxation factor λ ∈ (0, 2); >1 over-projects (faster here).
+    pub relax: f64,
+    /// Violation tolerance: `a_i·x - b_i <= tol` counts as satisfied.
+    pub tol: f64,
+    /// Starting point.
+    pub x0: Vec<f64>,
+}
+
+impl LppProblem {
+    pub fn new(a: Mat, b: Vec<f64>, x0: Vec<f64>, relax: f64, tol: f64) -> Self {
+        assert_eq!(a.rows, b.len());
+        assert_eq!(a.cols, x0.len());
+        let w = (0..a.rows)
+            .map(|i| {
+                let n2 = dot(a.row(i), a.row(i));
+                if n2 > 0.0 {
+                    1.0 / n2
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Self { a, b, w, relax, tol, x0 }
+    }
+
+    /// Random feasible polytope (contains a margin-ball around `center`),
+    /// with a far-away start so the projections have work to do.
+    pub fn random(m: usize, n: usize, seed: u64) -> Self {
+        let center = vec![0.0; n];
+        let (a, b) = gen_feasible_halfspaces(m, n, &center, 0.5, seed);
+        let x0 = vec![25.0; n];
+        Self::new(a, b, x0, 1.5, 1e-9)
+    }
+
+    /// Number of violated constraints at `x` (validation helper).
+    pub fn violations(&self, x: &[f64]) -> usize {
+        (0..self.a.rows)
+            .filter(|&i| dot(self.a.row(i), x) - self.b[i] > self.tol)
+            .count()
+    }
+}
+
+impl BsfProblem for LppProblem {
+    type Param = Vec<f64>;
+    type MapElem = usize;
+    type ReduceElem = Vec<f64>;
+
+    fn list_size(&self) -> usize {
+        self.a.rows
+    }
+
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+
+    fn init_parameter(&self) -> Vec<f64> {
+        self.x0.clone()
+    }
+
+    fn map_f(&self, &i: &usize, param: &Vec<f64>, _ctx: &MapCtx) -> Option<Vec<f64>> {
+        let row = self.a.row(i);
+        let viol = dot(row, param) - self.b[i];
+        if viol <= self.tol {
+            return None; // satisfied → success = 0, skipped by Reduce
+        }
+        let scale = -viol * self.w[i];
+        Some(row.iter().map(|&aij| scale * aij).collect())
+    }
+
+    fn reduce_f(&self, x: &Vec<f64>, y: &Vec<f64>, _job: usize) -> Vec<f64> {
+        let mut out = x.clone();
+        for (o, v) in out.iter_mut().zip(y) {
+            *o += v;
+        }
+        out
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&Vec<f64>>,
+        reduce_counter: u64,
+        param: &mut Vec<f64>,
+        _ctx: &IterCtx,
+    ) -> StepDecision {
+        match reduce_result {
+            None => {
+                debug_assert_eq!(reduce_counter, 0);
+                StepDecision::exit() // no violated constraints: feasible
+            }
+            Some(s) => {
+                let scale = self.relax / reduce_counter as f64;
+                for (xi, si) in param.iter_mut().zip(s) {
+                    *xi += scale * si;
+                }
+                StepDecision::stay(0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::{run_threaded, BsfConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn finds_feasible_point() {
+        let p = LppProblem::random(64, 8, 41);
+        assert!(p.violations(&p.x0) > 0, "start must be infeasible");
+        let p = Arc::new(p);
+        let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(50_000));
+        assert_eq!(p.violations(&r.param), 0, "after {} iters", r.iterations);
+    }
+
+    #[test]
+    fn feasible_start_exits_in_one_iteration() {
+        let center = vec![0.0; 5];
+        let (a, b) = gen_feasible_halfspaces(32, 5, &center, 0.5, 42);
+        let p = LppProblem::new(a, b, center, 1.5, 1e-9);
+        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(3));
+        assert_eq!(r.iterations, 1);
+    }
+
+    #[test]
+    fn result_independent_of_worker_count() {
+        let mk = || LppProblem::random(40, 6, 43);
+        let r1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1).max_iter(50_000));
+        let r5 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(5).max_iter(50_000));
+        assert_eq!(r1.iterations, r5.iterations);
+        for (a, b) in r1.param.iter().zip(&r5.param) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn reduce_counter_counts_violations_only() {
+        // Directly check the extended-reduce semantics through map_f.
+        let p = LppProblem::random(20, 4, 44);
+        let x = p.x0.clone();
+        let ctx = crate::skeleton::SkelVars::for_worker(0, 1, 0, 20, 0, 0);
+        let some_count = (0..20)
+            .filter(|&i| p.map_f(&i, &x, &ctx).is_some())
+            .count();
+        assert_eq!(some_count, p.violations(&x));
+    }
+}

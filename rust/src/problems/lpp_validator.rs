@@ -1,0 +1,214 @@
+//! LPP solution validator (mirrors the companion repo
+//! `leonid-sokolinsky/BSF-LPP-Validator`).
+//!
+//! Given a candidate solution x̂ for `max c·x s.t. A x ≤ b`, the validator
+//! is itself a (one-shot) BSF program: the map-list is the constraint
+//! list; `F_x̂(i)` reports constraint i's violation if any (`None` when
+//! satisfied — extended reduce-list again), and ⊕ keeps the *worst*
+//! violation plus an on-boundary count. One iteration, then exit: the
+//! master classifies the point as interior / boundary / infeasible.
+//!
+//! Validation of an LP optimum needs the boundary count: an optimal
+//! vertex of a non-degenerate LP lies on ≥ dim active constraints.
+
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::util::codec::Codec;
+use crate::util::mat::{dot, Mat};
+
+/// Verdict the validator computes (stored into the Param).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// All constraints satisfied with slack > tol everywhere.
+    Interior,
+    /// Feasible, with `active` constraints within tol of equality.
+    OnBoundary,
+    /// At least one constraint violated by more than tol.
+    Infeasible,
+}
+
+/// Per-constraint report: (worst violation, #violated, #active).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ViolationReport {
+    pub worst: f64,
+    pub violated: u64,
+    pub active: u64,
+}
+
+impl Codec for ViolationReport {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.worst.encode(buf);
+        self.violated.encode(buf);
+        self.active.encode(buf);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        Self {
+            worst: f64::decode(buf, pos),
+            violated: u64::decode(buf, pos),
+            active: u64::decode(buf, pos),
+        }
+    }
+}
+
+/// One-shot validator problem.
+pub struct LppValidator {
+    pub a: Mat,
+    pub b: Vec<f64>,
+    /// The candidate solution being validated.
+    pub x_hat: Vec<f64>,
+    /// |a_i·x - b_i| <= tol counts as "active" (on the boundary).
+    pub tol: f64,
+}
+
+impl LppValidator {
+    pub fn new(a: Mat, b: Vec<f64>, x_hat: Vec<f64>, tol: f64) -> Self {
+        assert_eq!(a.rows, b.len());
+        assert_eq!(a.cols, x_hat.len());
+        Self { a, b, x_hat, tol }
+    }
+
+    /// Classify a finished run's parameter.
+    pub fn verdict(param: &(f64, u64, u64)) -> Verdict {
+        let (worst, violated, active) = *param;
+        if violated > 0 && worst > 0.0 {
+            Verdict::Infeasible
+        } else if active > 0 {
+            Verdict::OnBoundary
+        } else {
+            Verdict::Interior
+        }
+    }
+}
+
+impl BsfProblem for LppValidator {
+    /// (worst violation, #violated, #active) — filled by the single step.
+    type Param = (f64, u64, u64);
+    type MapElem = usize;
+    type ReduceElem = ViolationReport;
+
+    fn list_size(&self) -> usize {
+        self.a.rows
+    }
+
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+
+    fn init_parameter(&self) -> (f64, u64, u64) {
+        (0.0, 0, 0)
+    }
+
+    fn map_f(
+        &self,
+        &i: &usize,
+        _param: &(f64, u64, u64),
+        _ctx: &MapCtx,
+    ) -> Option<ViolationReport> {
+        let slack = self.b[i] - dot(self.a.row(i), &self.x_hat);
+        if slack > self.tol {
+            None // satisfied with slack: contributes nothing
+        } else if slack >= -self.tol {
+            Some(ViolationReport { worst: 0.0, violated: 0, active: 1 })
+        } else {
+            Some(ViolationReport { worst: -slack, violated: 1, active: 0 })
+        }
+    }
+
+    fn reduce_f(
+        &self,
+        x: &ViolationReport,
+        y: &ViolationReport,
+        _job: usize,
+    ) -> ViolationReport {
+        ViolationReport {
+            worst: x.worst.max(y.worst),
+            violated: x.violated + y.violated,
+            active: x.active + y.active,
+        }
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&ViolationReport>,
+        _reduce_counter: u64,
+        param: &mut (f64, u64, u64),
+        _ctx: &IterCtx,
+    ) -> StepDecision {
+        if let Some(r) = reduce_result {
+            *param = (r.worst, r.violated, r.active);
+        } // None ⇒ every constraint had slack: param stays (0, 0, 0)
+        StepDecision::exit() // one-shot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::{run_threaded, BsfConfig};
+    use crate::util::mat::gen_feasible_halfspaces;
+    use std::sync::Arc;
+
+    fn box_2d() -> (Mat, Vec<f64>) {
+        // x <= 1, y <= 1, -x <= 0, -y <= 0  (unit box)
+        let a = Mat {
+            rows: 4,
+            cols: 2,
+            data: vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0, 0.0, -1.0],
+        };
+        (a, vec![1.0, 1.0, 0.0, 0.0])
+    }
+
+    #[test]
+    fn interior_point() {
+        let (a, b) = box_2d();
+        let v = LppValidator::new(a, b, vec![0.5, 0.5], 1e-9);
+        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(2));
+        assert_eq!(r.iterations, 1);
+        assert_eq!(LppValidator::verdict(&r.param), Verdict::Interior);
+    }
+
+    #[test]
+    fn vertex_has_dim_active_constraints() {
+        let (a, b) = box_2d();
+        let v = LppValidator::new(a, b, vec![1.0, 1.0], 1e-9);
+        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(3));
+        assert_eq!(LppValidator::verdict(&r.param), Verdict::OnBoundary);
+        assert_eq!(r.param.2, 2, "corner of the box = 2 active constraints");
+    }
+
+    #[test]
+    fn infeasible_point_reports_worst_violation() {
+        let (a, b) = box_2d();
+        let v = LppValidator::new(a, b, vec![3.0, 0.5], 1e-9);
+        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(2));
+        assert_eq!(LppValidator::verdict(&r.param), Verdict::Infeasible);
+        assert!((r.param.0 - 2.0).abs() < 1e-12, "worst = 3 - 1 = 2");
+        assert_eq!(r.param.1, 1);
+    }
+
+    #[test]
+    fn validates_lpp_solver_output() {
+        // End-to-end companion-repo pipeline: solve feasibility with the
+        // LPP problem, then validate its output with the validator.
+        use crate::problems::lpp::LppProblem;
+        let p = LppProblem::random(48, 6, 61);
+        let a = p.a.clone();
+        let b = p.b.clone();
+        let p = Arc::new(p);
+        let solved =
+            run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(50_000));
+        let v = LppValidator::new(a, b, solved.param.clone(), 1e-6);
+        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(4));
+        assert_ne!(LppValidator::verdict(&r.param), Verdict::Infeasible);
+    }
+
+    #[test]
+    fn verdict_independent_of_worker_count() {
+        let center = vec![0.0; 4];
+        let (a, b) = gen_feasible_halfspaces(30, 4, &center, 0.3, 62);
+        for k in [1usize, 3, 7] {
+            let v = LppValidator::new(a.clone(), b.clone(), center.clone(), 1e-9);
+            let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(k));
+            assert_eq!(LppValidator::verdict(&r.param), Verdict::Interior, "K={k}");
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's demo applications, each implemented on the skeleton
+//! (mirrors the author's companion GitHub repos):
+//!
+//! * [`jacobi`] — BSF-Jacobi: Algorithm 3 (Map + Reduce).
+//! * [`jacobi_map`] — BSF-Jacobi-Map: Algorithm 4 (Map without Reduce).
+//! * [`cimmino`] — BSF-Cimmino: row-projection linear solver.
+//! * [`gravity`] — BSF-gravity: N-body leapfrog integration.
+//! * [`montecarlo`] — Monte-Carlo integration (compute-light reduce-heavy
+//!   extreme of the cost model).
+//! * [`lpp`] — LPP feasibility via Agmon-Motzkin projections (exercises
+//!   the extended reduce-list: satisfied constraints return success=0).
+//! * [`lpp_validator`] — one-shot solution validator (BSF-LPP-Validator).
+//! * [`apex`] — Apex-style 3-job workflow (feasibility → pursuit →
+//!   verify), the multi-job `JobDispatcher` demo.
+
+pub mod apex;
+pub mod cimmino;
+pub mod gravity;
+pub mod jacobi;
+pub mod jacobi_map;
+pub mod lpp;
+pub mod lpp_validator;
+pub mod montecarlo;

@@ -1,0 +1,150 @@
+//! Monte-Carlo π estimation on the skeleton.
+//!
+//! The communication-light / compute-tunable extreme of the cost model:
+//! each map element is a seed block that draws `samples_per_elem` points
+//! in the unit square and counts hits inside the quarter circle; ⊕ adds
+//! `(hits, total)` pairs. The master folds rounds into a running estimate
+//! and stops when the binomial standard error drops below `tol` (or after
+//! `max_rounds`). Because the reduce element is 16 bytes regardless of
+//! problem size, the predicted scalability boundary is enormous — the
+//! model's "embarrassingly parallel" corner case.
+
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::util::rng::SplitMix64;
+
+pub struct MonteCarloProblem {
+    /// Number of seed blocks (the map-list length).
+    pub blocks: usize,
+    /// Points drawn per block per iteration.
+    pub samples_per_elem: usize,
+    /// Target standard error of the π estimate.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_rounds: usize,
+    /// Base seed (varied per iteration so rounds are independent).
+    pub seed: u64,
+}
+
+impl MonteCarloProblem {
+    pub fn new(blocks: usize, samples_per_elem: usize, tol: f64) -> Self {
+        Self { blocks, samples_per_elem, tol, max_rounds: 10_000, seed: 0x5EED }
+    }
+
+    /// Current π estimate from accumulated (hits, total).
+    pub fn estimate(param: &(u64, u64)) -> f64 {
+        if param.1 == 0 {
+            return 0.0;
+        }
+        4.0 * param.0 as f64 / param.1 as f64
+    }
+
+    /// Binomial standard error of the current estimate.
+    pub fn stderr(param: &(u64, u64)) -> f64 {
+        if param.1 == 0 {
+            return f64::INFINITY;
+        }
+        let p = param.0 as f64 / param.1 as f64;
+        4.0 * (p * (1.0 - p) / param.1 as f64).sqrt()
+    }
+}
+
+impl BsfProblem for MonteCarloProblem {
+    /// Accumulated (hits, total) — the workers re-derive their stream
+    /// seeds from block index + iteration, so the order parameter is the
+    /// running tally (small, constant-size traffic).
+    type Param = (u64, u64);
+    type MapElem = u64;
+    type ReduceElem = (u64, u64);
+
+    fn list_size(&self) -> usize {
+        self.blocks
+    }
+
+    fn map_list_elem(&self, i: usize) -> u64 {
+        i as u64
+    }
+
+    fn init_parameter(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    fn map_f(&self, &block: &u64, _param: &(u64, u64), ctx: &MapCtx) -> Option<(u64, u64)> {
+        // Independent stream per (block, iteration).
+        let mut rng = SplitMix64::new(
+            self.seed ^ block.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (ctx.iter_counter as u64).wrapping_mul(0xD1B54A32D192ED03),
+        );
+        let mut hits = 0u64;
+        for _ in 0..self.samples_per_elem {
+            let x = rng.f64();
+            let y = rng.f64();
+            if x * x + y * y <= 1.0 {
+                hits += 1;
+            }
+        }
+        Some((hits, self.samples_per_elem as u64))
+    }
+
+    fn reduce_f(&self, x: &(u64, u64), y: &(u64, u64), _job: usize) -> (u64, u64) {
+        (x.0 + y.0, x.1 + y.1)
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&(u64, u64)>,
+        _reduce_counter: u64,
+        param: &mut (u64, u64),
+        ctx: &IterCtx,
+    ) -> StepDecision {
+        let (h, t) = reduce_result.copied().expect("every block samples");
+        param.0 += h;
+        param.1 += t;
+        if Self::stderr(param) < self.tol || ctx.iter_counter >= self.max_rounds {
+            StepDecision::exit()
+        } else {
+            StepDecision::stay(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::{run_threaded, BsfConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn estimates_pi() {
+        let p = MonteCarloProblem::new(16, 2_000, 5e-3);
+        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(4));
+        let pi = MonteCarloProblem::estimate(&r.param);
+        assert!((pi - std::f64::consts::PI).abs() < 0.05, "pi ≈ {pi}");
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        // Streams are keyed by (block, iter), not by worker — the tally
+        // must be identical for any K.
+        let mk = || MonteCarloProblem::new(12, 500, 1e-9).max_rounds_(3);
+        let r1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1));
+        let r3 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(3));
+        assert_eq!(r1.param, r3.param);
+        assert_eq!(r1.iterations, 3);
+    }
+
+    #[test]
+    fn stderr_decreases_with_samples() {
+        assert!(
+            MonteCarloProblem::stderr(&(780, 1000))
+                > MonteCarloProblem::stderr(&(7800, 10000))
+        );
+        assert!(MonteCarloProblem::stderr(&(0, 0)).is_infinite());
+    }
+
+    impl MonteCarloProblem {
+        fn max_rounds_(mut self, r: usize) -> Self {
+            self.max_rounds = r;
+            self
+        }
+    }
+}

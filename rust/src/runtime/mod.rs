@@ -1,0 +1,212 @@
+//! PJRT/XLA runtime: load the AOT artifacts produced by
+//! `python/compile/aot.py` and execute them from the worker hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the Rust binary self-contained afterwards: it parses
+//! `artifacts/manifest.tsv`, lazily compiles each `*.hlo.txt` module on
+//! the PJRT CPU client (HLO *text* interchange — see the AOT recipe and
+//! /opt/xla-example/README.md), caches the executables, and exposes a
+//! typed `execute_f32`.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so
+//! [`service::XlaService`] wraps a runtime in a dedicated owner thread
+//! and hands out cloneable, `Send` handles for the skeleton's worker
+//! threads (Python-free request path, single compiled executable per
+//! model variant).
+
+pub mod service;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One artifact (= one AOT-compiled chunk map variant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Unique artifact name, e.g. `jacobi_n1024_c256`.
+    pub name: String,
+    /// Problem kind: `jacobi`, `jacobi_map`, `cimmino`, `gravity`.
+    pub kind: String,
+    /// Problem dimension n the module was compiled for.
+    pub n: usize,
+    /// Chunk (sublist) size c the module was compiled for.
+    pub c: usize,
+    /// Output shape, e.g. `[1024]` or `[256, 3]`.
+    pub out_dims: Vec<usize>,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    pub fn out_len(&self) -> usize {
+        self.out_dims.iter().product()
+    }
+}
+
+/// Artifact registry + compiled-executable cache on the PJRT CPU client.
+pub struct XlaRuntime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: HashMap<String, ArtifactMeta>,
+    cache: Mutex<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+fn parse_out_dims(spec: &str) -> Result<Vec<usize>> {
+    // "f32[1024]" or "f32[256,3]"
+    let inner = spec
+        .strip_prefix("f32[")
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("bad output shape spec {spec:?}"))?;
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let mut manifest = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let meta = ArtifactMeta {
+                name: cols[0].to_string(),
+                kind: cols[1].to_string(),
+                n: cols[2].parse().context("manifest n")?,
+                c: cols[3].parse().context("manifest c")?,
+                out_dims: parse_out_dims(cols[4])?,
+                file: cols[5].to_string(),
+            };
+            manifest.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { dir, client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact directory: `$BSF_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("BSF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Pick the best artifact of `kind` for dimension `n` and a sublist of
+    /// `len` elements: the smallest compiled chunk size `c >= len`
+    /// (the runtime zero-pads the sublist up to `c`; padding is exact for
+    /// all our kernels). Returns `None` if no variant fits.
+    pub fn best_chunk(&self, kind: &str, n: usize, len: usize) -> Option<&ArtifactMeta> {
+        self.manifest
+            .values()
+            .filter(|m| m.kind == kind && m.n == n && m.c >= len)
+            .min_by_key(|m| m.c)
+    }
+
+    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` with f32 inputs (`(flat data, dims)` per
+    /// argument). Returns the flattened f32 output (modules are lowered
+    /// with `return_tuple=True`, so the 1-tuple is unwrapped here).
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() <= 1 {
+                    Ok(lit)
+                } else {
+                    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute_literals_f32(name, &refs)
+    }
+
+    /// Execute with pre-built literals (the service's static-input cache
+    /// path — avoids re-materializing big constant blocks per call).
+    pub fn execute_literals_f32(
+        &self,
+        name: &str,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_out_dims_ok() {
+        assert_eq!(parse_out_dims("f32[1024]").unwrap(), vec![1024]);
+        assert_eq!(parse_out_dims("f32[256,3]").unwrap(), vec![256, 3]);
+        assert!(parse_out_dims("i32[4]").is_err());
+        assert!(parse_out_dims("f32[").is_err());
+    }
+
+    #[test]
+    fn artifact_out_len() {
+        let m = ArtifactMeta {
+            name: "x".into(),
+            kind: "gravity".into(),
+            n: 64,
+            c: 16,
+            out_dims: vec![16, 3],
+            file: "x.hlo.txt".into(),
+        };
+        assert_eq!(m.out_len(), 48);
+    }
+}

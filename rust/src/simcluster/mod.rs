@@ -1,0 +1,244 @@
+//! Virtual-time cluster simulator — the "hundreds of nodes" substitution.
+//!
+//! The original evaluation runs on a physical cluster; we have one box.
+//! This module runs the skeleton's *exact* computation (every worker's
+//! Map + local Reduce is really executed, so results and convergence are
+//! bit-identical to a threaded run) while charging **virtual time** from
+//! an explicit event calculation that mirrors Algorithm 2's structure:
+//!
+//! 1. the master sends K orders *sequentially* (each `L + bytes·β`);
+//! 2. worker j starts when its order lands and computes for `t_map_j`
+//!    (wall-clock measured on this machine — one core ≈ one cluster node);
+//! 3. partial folds travel back (`L + bytes·β`) and the master folds them
+//!    in arrival order (`t_op` each, serialized with arrivals);
+//! 4. `process_results` runs (`t_proc`), then the exit flag is broadcast
+//!    sequentially.
+//!
+//! This reproduces the max-of-stragglers and master-serialization effects
+//! the analytic model idealizes, so model-vs-simulation disagreement is a
+//! meaningful quantity (reported in E5).
+
+use std::time::Instant;
+
+use crate::costmodel::ClusterProfile;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::problem::{BsfProblem, IterCtx};
+use crate::skeleton::reduce::{merge_folds, ExtendedFold};
+use crate::skeleton::split::all_ranges;
+use crate::skeleton::worker::map_and_fold;
+use crate::skeleton::workflow::validate_job_count;
+use crate::util::codec::Codec;
+
+/// How the simulator charges worker compute time.
+#[derive(Debug, Clone, Copy)]
+pub enum ComputeTime {
+    /// Wall-clock of each worker's real chunk execution on this machine.
+    Measured,
+    /// `sublist_len · t_elem` (deterministic; `t_elem` from calibration).
+    PerElement(f64),
+}
+
+/// Simulated-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub profile: ClusterProfile,
+    pub compute: ComputeTime,
+}
+
+impl SimConfig {
+    pub fn new(profile: ClusterProfile) -> Self {
+        Self { profile, compute: ComputeTime::Measured }
+    }
+
+    pub fn per_element(mut self, t_elem: f64) -> Self {
+        self.compute = ComputeTime::PerElement(t_elem);
+        self
+    }
+}
+
+/// Per-iteration virtual-time breakdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterBreakdown {
+    /// Master order-send serialization (phase 1).
+    pub send: f64,
+    /// From last order sent to last fold arrived (compute + return comm).
+    pub compute_and_gather: f64,
+    /// Master-side folding serialized after arrivals.
+    pub master_reduce: f64,
+    /// process_results + exit broadcast.
+    pub process_and_exit: f64,
+}
+
+impl IterBreakdown {
+    pub fn total(&self) -> f64 {
+        self.send + self.compute_and_gather + self.master_reduce + self.process_and_exit
+    }
+}
+
+/// Result of a simulated run.
+#[derive(Debug, Clone)]
+pub struct SimReport<Param> {
+    pub param: Param,
+    pub iterations: usize,
+    /// Total virtual seconds on the simulated cluster.
+    pub virtual_seconds: f64,
+    /// Real wall seconds this simulation took to execute.
+    pub real_seconds: f64,
+    /// Mean per-iteration breakdown.
+    pub breakdown: IterBreakdown,
+    /// Total messages / bytes the simulated transport carried.
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+/// Run `problem` on a simulated cluster of `cfg.workers` nodes.
+pub fn run_simulated<P: BsfProblem>(
+    problem: &P,
+    cfg: &BsfConfig,
+    sim: &SimConfig,
+) -> SimReport<P::Param> {
+    let k = cfg.workers;
+    assert!(k >= 1, "need at least one worker");
+    validate_job_count(problem.job_count());
+
+    let n = problem.list_size();
+    let ranges = all_ranges(n, k);
+    // Workers construct their static sublists once (step 1 of Alg. 2).
+    let sublists: Vec<Vec<P::MapElem>> = ranges
+        .iter()
+        .map(|&(off, len)| (off..off + len).map(|i| problem.map_list_elem(i)).collect())
+        .collect();
+
+    let lat = sim.profile.latency;
+    let beta = sim.profile.byte_time;
+
+    let mut param = problem.init_parameter();
+    problem.parameters_output(&param);
+
+    let wall0 = Instant::now();
+    let mut vtime = 0.0f64;
+    let mut job = 0usize;
+    let mut iter = 0usize;
+    let mut messages = 0u64;
+    let mut bytes = 0u64;
+    let mut acc = IterBreakdown::default();
+
+    loop {
+        let order_payload = (job, param.clone()).to_bytes();
+        let order_bytes = order_payload.len();
+
+        // Phase 1: sequential order sends; order j lands at (j+1)·(L+sβ).
+        let send_cost = lat + order_bytes as f64 * beta;
+        let send_all = k as f64 * send_cost;
+        messages += k as u64;
+        bytes += (k * order_bytes) as u64;
+
+        // Phase 2: execute every worker's real map, measure/charge time.
+        let mut arrivals: Vec<(f64, ExtendedFold<P::ReduceElem>, usize)> =
+            Vec::with_capacity(k);
+        for (rank, elems) in sublists.iter().enumerate() {
+            let (off, len) = ranges[rank];
+            let t0 = Instant::now();
+            let fold = map_and_fold(
+                problem,
+                elems,
+                &param,
+                rank,
+                k,
+                off,
+                iter,
+                job,
+                cfg.openmp_threads,
+            );
+            let t_map = match sim.compute {
+                ComputeTime::Measured => t0.elapsed().as_secs_f64(),
+                ComputeTime::PerElement(te) => len as f64 * te,
+            };
+            let fold_len = (fold.value.clone(), fold.counter).to_bytes().len();
+            let start = (rank + 1) as f64 * send_cost;
+            let arrive = start + t_map + lat + fold_len as f64 * beta;
+            messages += 1;
+            bytes += fold_len as u64;
+            arrivals.push((arrive, fold, fold_len));
+        }
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let last_arrival = arrivals.last().map(|a| a.0).unwrap_or(send_all);
+
+        // Phase 3: master folds the partial results. The fold happens in
+        // arrival order (the real `merge_folds` below), and its cost is
+        // the measured wall time of that merge — charged after the last
+        // arrival (⊕ is cheap relative to comm, so overlapping it with
+        // still-in-flight folds changes virtual time by < t_op · K).
+        let folds: Vec<ExtendedFold<P::ReduceElem>> =
+            arrivals.into_iter().map(|(_, f, _)| f).collect();
+        let t0 = Instant::now();
+        let merged = merge_folds(folds, |a, b| problem.reduce_f(a, b, job));
+        let reduce_wall = t0.elapsed().as_secs_f64();
+
+        // Phase 4: process_results (+dispatcher), timed for real.
+        iter += 1;
+        let ctx = IterCtx {
+            iter_counter: iter,
+            job_case: job,
+            num_of_workers: k,
+            elapsed: vtime,
+        };
+        let t0 = Instant::now();
+        let mut decision =
+            problem.process_results(merged.value.as_ref(), merged.counter, &mut param, &ctx);
+        if let Some(over) = problem.job_dispatcher(&mut param, decision, &ctx) {
+            decision = over;
+        }
+        let proc_wall = t0.elapsed().as_secs_f64();
+
+        if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
+            problem.iter_output(
+                merged.value.as_ref(),
+                merged.counter,
+                &param,
+                &ctx,
+                decision.next_job,
+            );
+        }
+        if iter >= cfg.max_iter {
+            decision.exit = true;
+        }
+
+        // Exit broadcast: K sequential small messages (1 byte payload).
+        let exit_cost = k as f64 * (lat + beta);
+        messages += k as u64;
+        bytes += k as u64;
+
+        let b = IterBreakdown {
+            send: send_all,
+            compute_and_gather: last_arrival - send_all,
+            master_reduce: reduce_wall,
+            process_and_exit: proc_wall + exit_cost,
+        };
+        vtime += b.total();
+        acc.send += b.send;
+        acc.compute_and_gather += b.compute_and_gather;
+        acc.master_reduce += b.master_reduce;
+        acc.process_and_exit += b.process_and_exit;
+
+        if decision.exit {
+            problem.problem_output(merged.value.as_ref(), merged.counter, &param, vtime);
+            let inv = 1.0 / iter as f64;
+            return SimReport {
+                param,
+                iterations: iter,
+                virtual_seconds: vtime,
+                real_seconds: wall0.elapsed().as_secs_f64(),
+                breakdown: IterBreakdown {
+                    send: acc.send * inv,
+                    compute_and_gather: acc.compute_and_gather * inv,
+                    master_reduce: acc.master_reduce * inv,
+                    process_and_exit: acc.process_and_exit * inv,
+                },
+                messages,
+                bytes,
+            };
+        }
+        job = decision.next_job;
+    }
+}

@@ -1,0 +1,72 @@
+//! Skeleton parameters (the paper's `Problem-bsfParameters.h`, Table 2).
+//!
+//! Macro ↔ field mapping:
+//! * `PP_BSF_MAX_MPI_SIZE`  → `workers` (+1 master) is explicit per run
+//! * `PP_BSF_ITER_OUTPUT` / `PP_BSF_TRACE_COUNT` → `trace_count`
+//! * `PP_BSF_OMP` / `PP_BSF_NUM_THREADS` → `openmp_threads`
+//! * `PP_BSF_MAX_JOB_CASE`  → `BsfProblem::job_count()` (type-level)
+//! * `PP_BSF_PRECISION`     → left to the problem's output callbacks
+//!
+//! `max_iter` is a safety net the C++ skeleton leaves to the user; a
+//! Rust library should not loop forever on a diverging problem.
+
+/// Runtime configuration of one skeleton run.
+#[derive(Debug, Clone)]
+pub struct BsfConfig {
+    /// Number of worker processes K (the master is implicit, rank K).
+    pub workers: usize,
+    /// Intra-worker parallelism for the map loop (the paper's OpenMP
+    /// support, `PP_BSF_OMP` + `PP_BSF_NUM_THREADS`). 1 = off.
+    pub openmp_threads: usize,
+    /// Invoke `iter_output` every `trace_count` iterations
+    /// (`PP_BSF_ITER_OUTPUT` + `PP_BSF_TRACE_COUNT`); 0 disables tracing.
+    pub trace_count: usize,
+    /// Hard iteration cap (guards non-converging configurations).
+    pub max_iter: usize,
+}
+
+impl Default for BsfConfig {
+    fn default() -> Self {
+        Self { workers: 1, openmp_threads: 1, trace_count: 0, max_iter: 100_000 }
+    }
+}
+
+impl BsfConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers, ..Self::default() }
+    }
+
+    pub fn openmp(mut self, threads: usize) -> Self {
+        self.openmp_threads = threads.max(1);
+        self
+    }
+
+    pub fn trace(mut self, every: usize) -> Self {
+        self.trace_count = every;
+        self
+    }
+
+    pub fn max_iter(mut self, cap: usize) -> Self {
+        self.max_iter = cap;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let c = BsfConfig::with_workers(4).openmp(2).trace(10).max_iter(99);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.openmp_threads, 2);
+        assert_eq!(c.trace_count, 10);
+        assert_eq!(c.max_iter, 99);
+    }
+
+    #[test]
+    fn openmp_floor_is_one() {
+        assert_eq!(BsfConfig::default().openmp(0).openmp_threads, 1);
+    }
+}

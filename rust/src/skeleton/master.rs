@@ -1,0 +1,151 @@
+//! The master process (`BC_Master`, left column of Algorithm 2).
+//!
+//! Per iteration the master: broadcasts the order (current approximation
+//! + job number) to all workers, gathers the K partial folds in
+//! completion order, folds them with ⊕ (`BC_MasterReduce` /
+//! `BC_ProcessExtendedReduceList`), runs `process_results` +
+//! `job_dispatcher`, and broadcasts the exit flag. Steps 2 and 10 are the
+//! implicit global synchronization points the paper notes.
+
+use std::time::Instant;
+
+use crate::metrics::{Phase, PhaseTimers};
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::problem::{BsfProblem, IterCtx};
+use crate::skeleton::reduce::{merge_folds, ExtendedFold};
+use crate::skeleton::workflow::validate_job_count;
+use crate::transport::{Communicator, Tag};
+use crate::util::codec::Codec;
+
+/// Result of a master run.
+#[derive(Debug, Clone)]
+pub struct MasterOutcome<Param> {
+    /// The final approximation (the algorithm's output, step 12).
+    pub param: Param,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Wall seconds for the whole iterative process.
+    pub elapsed: f64,
+    /// Per-phase attribution of master wall time.
+    pub timers: PhaseTimers,
+}
+
+/// Run the master loop over `comm` until the stop condition holds.
+///
+/// `comm.rank()` must be the master rank (== `cfg.workers`).
+pub fn run_master<P: BsfProblem, C: Communicator>(
+    problem: &P,
+    comm: &C,
+    cfg: &BsfConfig,
+) -> MasterOutcome<P::Param> {
+    let k = cfg.workers;
+    assert_eq!(comm.rank(), comm.master_rank(), "master must run on rank K");
+    assert_eq!(comm.size(), k + 1, "transport size must be workers+1");
+    validate_job_count(problem.job_count());
+    assert!(
+        problem.list_size() >= 1,
+        "PC_bsf_SetListSize must return a positive list size"
+    );
+
+    let mut param = problem.init_parameter();
+    problem.parameters_output(&param);
+
+    let t0 = Instant::now();
+    let mut timers = PhaseTimers::new();
+    let mut job = 0usize;
+    let mut iter = 0usize;
+
+    loop {
+        // Step 2: SendToAllWorkers(x^(i)) — the order carries (job, param).
+        timers.time(Phase::SendOrder, || {
+            let payload = (job, param.clone()).to_bytes();
+            for w in 0..k {
+                comm.send(w, Tag::Order, payload.clone());
+            }
+        });
+
+        // Step 5: RecvFromWorkers(s_0, ..., s_{K-1}). Messages arrive in
+        // completion order (recv_any ≈ MPI_Waitany) but are folded in
+        // *rank order*, exactly as Algorithm 2 writes the list
+        // [s_0, ..., s_{K-1}] — this keeps the fold deterministic (no
+        // run-to-run float reassociation from thread scheduling).
+        let folds: Vec<ExtendedFold<P::ReduceElem>> = timers.time(Phase::Gather, || {
+            let mut by_rank: Vec<Option<ExtendedFold<P::ReduceElem>>> =
+                (0..k).map(|_| None).collect();
+            for _ in 0..k {
+                let m = comm.recv_any(Tag::Fold);
+                let (value, counter) =
+                    <(Option<P::ReduceElem>, u64)>::from_bytes(&m.payload);
+                by_rank[m.from] = Some(ExtendedFold { value, counter });
+            }
+            by_rank.into_iter().map(|f| f.expect("one fold per worker")).collect()
+        });
+
+        // Step 6: s := Reduce(⊕, [s_0, ..., s_{K-1}]).
+        let merged = timers.time(Phase::MasterReduce, || {
+            merge_folds(folds, |a, b| problem.reduce_f(a, b, job))
+        });
+
+        // Steps 7-9: Compute / StopCond via process_results + dispatcher.
+        iter += 1;
+        let ctx = IterCtx {
+            iter_counter: iter,
+            job_case: job,
+            num_of_workers: k,
+            elapsed: t0.elapsed().as_secs_f64(),
+        };
+        let mut decision = timers.time(Phase::Process, || {
+            let mut d = problem.process_results(
+                merged.value.as_ref(),
+                merged.counter,
+                &mut param,
+                &ctx,
+            );
+            if let Some(over) = problem.job_dispatcher(&mut param, d, &ctx) {
+                d = over;
+            }
+            d
+        });
+
+        if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
+            problem.iter_output(
+                merged.value.as_ref(),
+                merged.counter,
+                &param,
+                &ctx,
+                decision.next_job,
+            );
+        }
+
+        if iter >= cfg.max_iter {
+            decision.exit = true;
+        }
+
+        // Step 10: SendToAllWorkers(exit).
+        timers.time(Phase::SendOrder, || {
+            let payload = decision.exit.to_bytes();
+            for w in 0..k {
+                comm.send(w, Tag::Exit, payload.clone());
+            }
+        });
+
+        if decision.exit {
+            let elapsed = t0.elapsed().as_secs_f64();
+            problem.problem_output(
+                merged.value.as_ref(),
+                merged.counter,
+                &param,
+                elapsed,
+            );
+            return MasterOutcome { param, iterations: iter, elapsed, timers };
+        }
+
+        assert!(
+            decision.next_job < problem.job_count(),
+            "next_job {} out of range (job_count {})",
+            decision.next_job,
+            problem.job_count()
+        );
+        job = decision.next_job;
+    }
+}

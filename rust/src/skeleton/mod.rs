@@ -1,0 +1,35 @@
+//! The BSF skeleton: the paper's system contribution.
+//!
+//! Maps the C++/MPI source files of the original skeleton onto Rust
+//! modules (see Table 1 of the paper):
+//!
+//! | paper file(s)                  | here |
+//! |--------------------------------|------|
+//! | `Problem-bsfCode.cpp` (the `PC_bsf_*` fill-ins), `Problem-bsfTypes.h` | the [`BsfProblem`] trait |
+//! | `BSF-SkeletonVariables.h`      | [`variables::SkelVars`] (passed by reference — Rust has no blessed mutable globals) |
+//! | `BSF-Code.cpp` `BC_Master*`    | [`master`] |
+//! | `BSF-Code.cpp` `BC_Worker*`    | [`worker`] |
+//! | `BSF-Code.cpp` `BC_ProcessExtendedReduceList` | [`reduce`] |
+//! | list splitting in `BC_Init`    | [`split`] |
+//! | `Problem-bsfParameters.h` (`PP_BSF_*` macros) | [`BsfConfig`] |
+//! | workflow (`PP_BSF_MAX_JOB_CASE`, `PC_bsf_JobDispatcher`) | [`workflow`] + trait hooks |
+//!
+//! [`runner::run_threaded`] wires master + K workers over the thread
+//! transport and is the entry point analogous to "build and run the
+//! solution in the MPI environment" (Step 8 of the paper's instruction).
+
+pub mod config;
+pub mod master;
+pub mod problem;
+pub mod reduce;
+pub mod runner;
+pub mod split;
+pub mod variables;
+pub mod worker;
+pub mod workflow;
+
+pub use config::BsfConfig;
+pub use problem::{BsfProblem, MapCtx, StepDecision};
+pub use runner::{run_threaded, RunReport};
+pub use variables::SkelVars;
+pub use workflow::JobDecision;

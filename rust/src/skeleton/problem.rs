@@ -1,0 +1,175 @@
+//! The problem customization surface — the paper's `PC_bsf_*` API
+//! (Tables 3 and 5, and the per-function reference section).
+//!
+//! The C++ skeleton is a set of files the user fills in; the Rust port is
+//! a trait the user implements. Correspondence:
+//!
+//! | `PC_bsf_*` function            | trait item |
+//! |--------------------------------|------------|
+//! | `SetListSize`                  | [`BsfProblem::list_size`] |
+//! | `SetMapListElem`               | [`BsfProblem::map_list_elem`] |
+//! | `SetInitParameter`             | [`BsfProblem::init_parameter`] |
+//! | `MapF` / `MapF_1..3`           | [`BsfProblem::map_f`] (job in [`MapCtx`]) |
+//! | `ReduceF` / `ReduceF_1..3`     | [`BsfProblem::reduce_f`] |
+//! | `ProcessResults[_1..3]`        | [`BsfProblem::process_results`] |
+//! | `JobDispatcher`                | [`BsfProblem::job_dispatcher`] |
+//! | `CopyParameter`                | `Param: Clone` |
+//! | `Init`                         | problem constructor |
+//! | `ParametersOutput`             | [`BsfProblem::parameters_output`] |
+//! | `IterOutput[_1..3]`            | [`BsfProblem::iter_output`] |
+//! | `ProblemOutput[_1..3]`         | [`BsfProblem::problem_output`] |
+//!
+//! One extension beyond the paper: [`BsfProblem::map_sublist`] lets a
+//! problem replace the element-by-element map loop with a *fused* kernel
+//! over its whole sublist — this is where the AOT-compiled XLA executables
+//! (L2 JAX + L1 Pallas) plug into the worker hot path. The default
+//! (`None`) falls back to the faithful per-element loop.
+
+use crate::skeleton::variables::SkelVars;
+use crate::skeleton::workflow::JobDecision;
+use crate::util::codec::Codec;
+
+/// Per-element map context: the skeleton variables as seen inside
+/// `PC_bsf_MapF` (rank, offsets, current element index, job, ...).
+pub type MapCtx = SkelVars;
+
+/// Outcome of `process_results` (combines the paper's `*nextJob` and
+/// `*exit` out-parameters; `StopCond` of Algorithm 1 is folded into
+/// `exit`, exactly as in the C++ skeleton).
+pub type StepDecision = JobDecision;
+
+/// Iteration context handed to the master-side callbacks.
+#[derive(Debug, Clone, Copy)]
+pub struct IterCtx {
+    /// Iterations completed so far (`BSF_sv_iterCounter`).
+    pub iter_counter: usize,
+    /// Current job (`BSF_sv_jobCase`).
+    pub job_case: usize,
+    /// Number of workers (K).
+    pub num_of_workers: usize,
+    /// Wall-clock seconds since the run started (the paper's `elapsedTime`
+    /// parameter of `IterOutput`; virtual time in simulated runs).
+    pub elapsed: f64,
+}
+
+/// An iterative numerical algorithm expressed as Map/Reduce over a list
+/// (Algorithm 1), parallelizable by the BSF skeleton (Algorithm 2).
+pub trait BsfProblem: Send + Sync + 'static {
+    /// Order parameters broadcast to workers each iteration
+    /// (`PT_bsf_parameter_T`; usually the current approximation).
+    type Param: Clone + Codec + Send + Sync + 'static;
+    /// Map-list element (`PT_bsf_mapElem_T`).
+    type MapElem: Clone + Send + Sync + 'static;
+    /// Reduce-list element (`PT_bsf_reduceElem_T`; for multi-job
+    /// workflows, an enum over the per-job payload types).
+    type ReduceElem: Clone + Codec + Send + 'static;
+
+    /// Length of the map-list (`PC_bsf_SetListSize`). Should be >= the
+    /// number of workers (the paper's remark).
+    fn list_size(&self) -> usize;
+
+    /// The i-th map-list element, 0-based (`PC_bsf_SetMapListElem`).
+    fn map_list_elem(&self, i: usize) -> Self::MapElem;
+
+    /// Initial order parameters (`PC_bsf_SetInitParameter`).
+    fn init_parameter(&self) -> Self::Param;
+
+    /// The user function F applied to one map-list element
+    /// (`PC_bsf_MapF`). Return `None` for "success = 0": the element is
+    /// ignored by Reduce and not counted (extended reduce-list).
+    ///
+    /// For multi-job workflows, dispatch on `ctx.job_case`
+    /// (`PC_bsf_MapF_1..3`).
+    fn map_f(
+        &self,
+        elem: &Self::MapElem,
+        param: &Self::Param,
+        ctx: &MapCtx,
+    ) -> Option<Self::ReduceElem>;
+
+    /// The associative operation ⊕ (`PC_bsf_ReduceF`). For multi-job
+    /// workflows dispatch on `job`.
+    fn reduce_f(
+        &self,
+        x: &Self::ReduceElem,
+        y: &Self::ReduceElem,
+        job: usize,
+    ) -> Self::ReduceElem;
+
+    /// Master-side processing of the iteration's reduce result
+    /// (`PC_bsf_ProcessResults[_1..3]`): update the order parameters for
+    /// the next iteration, decide the next job, and check the stop
+    /// condition. `reduce_result` is `None` when every map element
+    /// returned `None` (reduce counter 0).
+    fn process_results(
+        &self,
+        reduce_result: Option<&Self::ReduceElem>,
+        reduce_counter: u64,
+        param: &mut Self::Param,
+        ctx: &IterCtx,
+    ) -> StepDecision;
+
+    // ------------------------------------------------------- workflow --
+
+    /// Number of jobs (`PP_BSF_MAX_JOB_CASE` + 1). Default: 1 (no
+    /// workflow).
+    fn job_count(&self) -> usize {
+        1
+    }
+
+    /// The master's workflow state machine (`PC_bsf_JobDispatcher`),
+    /// invoked after `process_results`, before the next iteration.
+    /// Returning `None` keeps `process_results`'s decision; returning
+    /// `Some` overrides it. Default: no workflow management.
+    fn job_dispatcher(
+        &self,
+        _param: &mut Self::Param,
+        _decision: StepDecision,
+        _ctx: &IterCtx,
+    ) -> Option<StepDecision> {
+        None
+    }
+
+    // ----------------------------------------------- fused map (XLA) --
+
+    /// Optional fused map over the worker's whole sublist. Returning
+    /// `Some((fold, counter))` replaces the per-element `map_f` loop +
+    /// local reduce; `fold == None` means every element was skipped.
+    /// This is the integration point for the AOT XLA executables.
+    fn map_sublist(
+        &self,
+        _elems: &[Self::MapElem],
+        _param: &Self::Param,
+        _vars: &SkelVars,
+    ) -> Option<(Option<Self::ReduceElem>, u64)> {
+        None
+    }
+
+    // ------------------------------------------------------- outputs --
+
+    /// `PC_bsf_ParametersOutput`: called once on the master before the
+    /// iterative process starts. Default: silent.
+    fn parameters_output(&self, _param: &Self::Param) {}
+
+    /// `PC_bsf_IterOutput[_1..3]`: intermediate results, called every
+    /// `trace_count` iterations (when tracing is enabled).
+    fn iter_output(
+        &self,
+        _reduce_result: Option<&Self::ReduceElem>,
+        _reduce_counter: u64,
+        _param: &Self::Param,
+        _ctx: &IterCtx,
+        _next_job: usize,
+    ) {
+    }
+
+    /// `PC_bsf_ProblemOutput[_1..3]`: final results. Default: silent.
+    fn problem_output(
+        &self,
+        _reduce_result: Option<&Self::ReduceElem>,
+        _reduce_counter: u64,
+        _param: &Self::Param,
+        _elapsed: f64,
+    ) {
+    }
+}

@@ -1,0 +1,138 @@
+//! Extended reduce-list processing (`BC_ProcessExtendedReduceList`).
+//!
+//! The paper appends a `reduceCounter` field to every reduce element:
+//! elements whose counter is 0 are *ignored* by Reduce, and the counters
+//! of the participating elements are summed. `BC_WorkerMap` sets the
+//! counter to 1 by default; the user's map function sets it to 0 by
+//! returning "success = false" (here: `None`).
+//!
+//! We represent an extended reduce element as `Option<R>` + its counter is
+//! implicit (`Some` == 1, `None` == 0) at map time, and as
+//! [`ExtendedFold`] (= partial fold + summed counter) after folding.
+
+/// A partial fold: the ⊕-sum of the participating elements (if any) and
+/// the number of elements that participated (the summed reduce counters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExtendedFold<R> {
+    pub value: Option<R>,
+    pub counter: u64,
+}
+
+impl<R> ExtendedFold<R> {
+    pub fn empty() -> Self {
+        Self { value: None, counter: 0 }
+    }
+
+    pub fn single(value: R) -> Self {
+        Self { value: Some(value), counter: 1 }
+    }
+
+    /// Fold another extended element into this one using ⊕.
+    pub fn absorb(&mut self, other: ExtendedFold<R>, op: impl Fn(&R, &R) -> R) {
+        self.counter += other.counter;
+        self.value = match (self.value.take(), other.value) {
+            (None, v) | (v, None) => v,
+            (Some(a), Some(b)) => Some(op(&a, &b)),
+        };
+    }
+}
+
+/// Fold an iterator of extended elements (`None` == skipped, counter 0).
+///
+/// This is the worker-side local Reduce (`BC_WorkerReduce`) and, applied
+/// to the gathered partial folds, the master-side Reduce
+/// (`BC_MasterReduce` / `BC_ProcessExtendedReduceList`).
+pub fn fold_extended<R>(
+    items: impl IntoIterator<Item = Option<R>>,
+    op: impl Fn(&R, &R) -> R,
+) -> ExtendedFold<R> {
+    let mut acc = ExtendedFold::empty();
+    for item in items {
+        match item {
+            None => {}
+            Some(v) => acc.absorb(ExtendedFold::single(v), &op),
+        }
+    }
+    acc
+}
+
+/// Merge K partial folds (the master's step 6 of Algorithm 2).
+pub fn merge_folds<R>(
+    folds: impl IntoIterator<Item = ExtendedFold<R>>,
+    op: impl Fn(&R, &R) -> R,
+) -> ExtendedFold<R> {
+    let mut acc = ExtendedFold::empty();
+    for f in folds {
+        acc.absorb(f, &op);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::{qcheck, size_in};
+
+    fn add(a: &f64, b: &f64) -> f64 {
+        a + b
+    }
+
+    #[test]
+    fn all_skipped_gives_empty() {
+        let f = fold_extended::<f64>(vec![None, None, None], add);
+        assert_eq!(f.value, None);
+        assert_eq!(f.counter, 0);
+    }
+
+    #[test]
+    fn counter_counts_participants_only() {
+        let f = fold_extended(vec![Some(1.0), None, Some(2.0), Some(4.0), None], add);
+        assert_eq!(f.value, Some(7.0));
+        assert_eq!(f.counter, 3);
+    }
+
+    #[test]
+    fn single_element() {
+        let f = fold_extended(vec![Some(5.0)], add);
+        assert_eq!(f.value, Some(5.0));
+        assert_eq!(f.counter, 1);
+    }
+
+    #[test]
+    fn merge_sums_counters() {
+        let a = fold_extended(vec![Some(1.0), Some(2.0)], add);
+        let b = fold_extended::<f64>(vec![None], add);
+        let c = fold_extended(vec![Some(10.0)], add);
+        let m = merge_folds(vec![a, b, c], add);
+        assert_eq!(m.value, Some(13.0));
+        assert_eq!(m.counter, 3);
+    }
+
+    #[test]
+    fn property_split_fold_equals_whole_fold() {
+        // The BSF correctness core: fold(concat) == merge(folds of parts)
+        // for an associative ⊕ (here: f64 sum of integers, exact).
+        qcheck(200, |rng| {
+            let n = size_in(rng, 0, 60);
+            let items: Vec<Option<f64>> = (0..n)
+                .map(|_| {
+                    if rng.f64() < 0.25 {
+                        None
+                    } else {
+                        Some(rng.below(1000) as f64)
+                    }
+                })
+                .collect();
+            let whole = fold_extended(items.clone(), add);
+            let k = size_in(rng, 1, 8);
+            let parts = crate::skeleton::split::all_ranges(n, k);
+            let merged = merge_folds(
+                parts.iter().map(|&(off, len)| {
+                    fold_extended(items[off..off + len].iter().cloned(), add)
+                }),
+                add,
+            );
+            assert_eq!(whole, merged);
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! Orchestration: wire one master + K workers over the thread transport
+//! and run the skeleton to completion ("build and run the solution in the
+//! MPI environment", Step 8 of the paper's instruction).
+
+use std::sync::Arc;
+
+use crate::metrics::PhaseTimers;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::master::run_master;
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::worker::{run_worker, WorkerReport};
+use crate::transport::build_thread_transport;
+use crate::transport::Communicator;
+
+/// Full report of a threaded skeleton run.
+#[derive(Debug, Clone)]
+pub struct RunReport<Param> {
+    /// Final approximation.
+    pub param: Param,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Master wall seconds for the iterative process.
+    pub elapsed: f64,
+    /// Master per-phase timers.
+    pub timers: PhaseTimers,
+    /// Per-worker summaries (rank order).
+    pub workers: Vec<WorkerReport>,
+    /// Transport totals for the whole run.
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+impl<Param> RunReport<Param> {
+    /// Mean seconds one worker spends in Map+local-Reduce per iteration.
+    pub fn mean_worker_map_secs_per_iter(&self) -> f64 {
+        if self.iterations == 0 || self.workers.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.workers.iter().map(|w| w.map_seconds).sum();
+        total / (self.workers.len() as f64 * self.iterations as f64)
+    }
+}
+
+/// Run `problem` on K worker threads + the calling thread as master.
+pub fn run_threaded<P: BsfProblem>(problem: Arc<P>, cfg: &BsfConfig) -> RunReport<P::Param> {
+    assert!(cfg.workers >= 1, "need at least one worker");
+    let mut endpoints = build_thread_transport(cfg.workers);
+    let master_ep = endpoints.pop().expect("master endpoint");
+    let stats = master_ep.stats();
+
+    let handles: Vec<std::thread::JoinHandle<WorkerReport>> = endpoints
+        .into_iter()
+        .map(|ep| {
+            let p = Arc::clone(&problem);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("bsf-worker-{}", ep.rank()))
+                .spawn(move || run_worker(&*p, &ep, &cfg))
+                .expect("spawn worker thread")
+        })
+        .collect();
+
+    let outcome = run_master(&*problem, &master_ep, cfg);
+
+    let mut workers: Vec<WorkerReport> = handles
+        .into_iter()
+        .map(|h| h.join().expect("worker thread panicked"))
+        .collect();
+    workers.sort_by_key(|w| w.rank);
+
+    RunReport {
+        param: outcome.param,
+        iterations: outcome.iterations,
+        elapsed: outcome.elapsed,
+        timers: outcome.timers,
+        workers,
+        messages: stats.message_count(),
+        bytes: stats.byte_count(),
+    }
+}

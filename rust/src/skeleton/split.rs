@@ -1,0 +1,72 @@
+//! Map-list splitting: `A = A_0 ++ ... ++ A_{K-1}` with equal length ±1.
+//!
+//! The paper's parallelization schema (Fig. 2): the skeleton statically
+//! splits the map-list into K contiguous sublists of equal length (±1).
+//! The first `list_len % k` workers get the extra element, matching the
+//! usual block distribution.
+
+/// Range (offset, length) of worker `rank`'s sublist.
+pub fn sublist_range(list_len: usize, workers: usize, rank: usize) -> (usize, usize) {
+    assert!(workers > 0, "need at least one worker");
+    assert!(rank < workers, "rank {rank} out of range for {workers} workers");
+    let base = list_len / workers;
+    let extra = list_len % workers;
+    let len = base + usize::from(rank < extra);
+    let offset = rank * base + rank.min(extra);
+    (offset, len)
+}
+
+/// All K ranges, in rank order.
+pub fn all_ranges(list_len: usize, workers: usize) -> Vec<(usize, usize)> {
+    (0..workers).map(|r| sublist_range(list_len, workers, r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::{qcheck, size_in};
+
+    #[test]
+    fn exact_division() {
+        assert_eq!(all_ranges(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+    }
+
+    #[test]
+    fn remainder_goes_to_first_workers() {
+        // 10 over 4: lengths 3,3,2,2
+        assert_eq!(all_ranges(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        assert_eq!(all_ranges(7, 1), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn more_workers_than_elements() {
+        // paper: "list size should be >= number of workers", but the split
+        // itself must still be well-formed (zero-length tails).
+        assert_eq!(all_ranges(2, 4), vec![(0, 1), (1, 1), (2, 0), (2, 0)]);
+    }
+
+    #[test]
+    fn property_partition_is_exact_and_balanced() {
+        qcheck(200, |rng| {
+            let len = size_in(rng, 0, 500);
+            let k = size_in(rng, 1, 64);
+            let ranges = all_ranges(len, k);
+            // contiguous coverage, no gaps/overlaps
+            let mut next = 0;
+            for &(off, l) in &ranges {
+                assert_eq!(off, next);
+                next = off + l;
+            }
+            assert_eq!(next, len);
+            // balance: lengths differ by at most 1
+            let lens: Vec<usize> = ranges.iter().map(|&(_, l)| l).collect();
+            let min = *lens.iter().min().unwrap();
+            let max = *lens.iter().max().unwrap();
+            assert!(max - min <= 1, "unbalanced: {lens:?}");
+        });
+    }
+}

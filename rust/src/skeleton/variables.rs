@@ -1,0 +1,92 @@
+//! Skeleton variables (the paper's `BSF-SkeletonVariables.h`, Table 4).
+//!
+//! The original exposes mutable globals (`BSF_sv_*`) that the user may
+//! read but must not write. Rust's equivalent is a read-only struct the
+//! skeleton fills in and hands to the problem callbacks: [`SkelVars`] is
+//! what a worker's map function sees; the `PC_bsfAssign*` setter family
+//! of the paper corresponds to the skeleton constructing this struct.
+
+/// Read-only skeleton state visible to problem callbacks.
+///
+/// Field ↔ paper variable:
+/// * `address_offset`    ↔ `BSF_sv_addressOffset`
+/// * `iter_counter`      ↔ `BSF_sv_iterCounter`
+/// * `job_case`          ↔ `BSF_sv_jobCase`
+/// * `mpi_master`        ↔ `BSF_sv_mpiMaster`
+/// * `mpi_rank`          ↔ `BSF_sv_mpiRank`
+/// * `number_in_sublist` ↔ `BSF_sv_numberInSublist`
+/// * `num_of_workers`    ↔ `BSF_sv_numOfWorkers`
+/// * `sublist_length`    ↔ `BSF_sv_sublistLength`
+///
+/// (`BSF_sv_parameter` is passed separately as `&P::Param` — it is typed.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SkelVars {
+    /// Global index of the first element of this worker's map-sublist.
+    pub address_offset: usize,
+    /// Iterations performed so far.
+    pub iter_counter: usize,
+    /// Current workflow job (0 when no workflow is used).
+    pub job_case: usize,
+    /// Rank of the master process (== `num_of_workers`).
+    pub mpi_master: usize,
+    /// Rank of the current process.
+    pub mpi_rank: usize,
+    /// Relative index (within the sublist) of the element currently being
+    /// mapped. Only meaningful inside `map_f`.
+    pub number_in_sublist: usize,
+    /// Total number of worker processes (K).
+    pub num_of_workers: usize,
+    /// Length of this worker's map-sublist.
+    pub sublist_length: usize,
+}
+
+impl SkelVars {
+    /// Variables for worker `rank` of `workers`, holding `sublist_length`
+    /// elements starting at `address_offset`, at iteration `iter`, job `job`.
+    pub fn for_worker(
+        rank: usize,
+        workers: usize,
+        address_offset: usize,
+        sublist_length: usize,
+        iter: usize,
+        job: usize,
+    ) -> Self {
+        Self {
+            address_offset,
+            iter_counter: iter,
+            job_case: job,
+            mpi_master: workers,
+            mpi_rank: rank,
+            number_in_sublist: 0,
+            num_of_workers: workers,
+            sublist_length,
+        }
+    }
+
+    /// Global index of the element currently being mapped
+    /// (`address_offset + number_in_sublist` — the paper's tricks for
+    /// Map-without-Reduce, see "Using Map without Reduce").
+    pub fn global_index(&self) -> usize {
+        self.address_offset + self.number_in_sublist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn master_rank_convention() {
+        let v = SkelVars::for_worker(2, 5, 10, 4, 7, 0);
+        assert_eq!(v.mpi_master, 5);
+        assert_eq!(v.num_of_workers, 5);
+        assert_eq!(v.mpi_rank, 2);
+    }
+
+    #[test]
+    fn global_index_combines_offset_and_relative() {
+        let mut v = SkelVars::for_worker(0, 1, 100, 10, 0, 0);
+        v.number_in_sublist = 7;
+        assert_eq!(v.global_index(), 107);
+    }
+}

@@ -1,0 +1,157 @@
+//! A worker process (`BC_Worker`, right column of Algorithm 2).
+//!
+//! On start a worker inputs its static sublist `A_j` (it constructs the
+//! elements itself via `map_list_elem`, as in the paper where each worker
+//! reads its part of the source data). Per iteration it receives the
+//! order, applies Map + local Reduce to its sublist (`BC_WorkerMap` +
+//! `BC_WorkerReduce`), sends the partial fold, and waits for the exit
+//! flag.
+//!
+//! The map loop supports the paper's OpenMP mode (`PP_BSF_OMP` /
+//! `PP_BSF_NUM_THREADS`): with `openmp_threads > 1` the sublist is
+//! block-split over scoped threads, each producing a partial fold that is
+//! then folded locally — semantically identical because ⊕ is associative.
+
+use std::time::Instant;
+
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::reduce::{fold_extended, merge_folds, ExtendedFold};
+use crate::skeleton::split::{all_ranges, sublist_range};
+use crate::skeleton::variables::SkelVars;
+use crate::transport::{Communicator, Tag};
+use crate::util::codec::Codec;
+
+/// Per-worker run summary (used by cost-model calibration).
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub rank: usize,
+    pub iterations: usize,
+    /// Total seconds spent in Map + local Reduce across all iterations.
+    pub map_seconds: f64,
+    /// Sublist length this worker was appointed.
+    pub sublist_length: usize,
+}
+
+/// Run the worker loop over `comm` until the master signals exit.
+pub fn run_worker<P: BsfProblem, C: Communicator>(
+    problem: &P,
+    comm: &C,
+    cfg: &BsfConfig,
+) -> WorkerReport {
+    let rank = comm.rank();
+    let k = cfg.workers;
+    assert!(rank < k, "worker rank {rank} must be < {k}");
+    let master = comm.master_rank();
+
+    // Step 1: input A_j (the worker's static sublist).
+    let (offset, len) = sublist_range(problem.list_size(), k, rank);
+    let elems: Vec<P::MapElem> =
+        (offset..offset + len).map(|i| problem.map_list_elem(i)).collect();
+
+    let mut map_seconds = 0.0;
+    let mut iterations = 0usize;
+
+    loop {
+        // Step 2: RecvFromMaster(x^(i)).
+        let m = comm.recv(master, Tag::Order);
+        let (job, param) = <(usize, P::Param)>::from_bytes(&m.payload);
+
+        // Steps 3-4: B_j := Map(F, A_j); s_j := Reduce(⊕, B_j).
+        let t0 = Instant::now();
+        let fold = map_and_fold(
+            problem,
+            &elems,
+            &param,
+            rank,
+            k,
+            offset,
+            iterations,
+            job,
+            cfg.openmp_threads,
+        );
+        map_seconds += t0.elapsed().as_secs_f64();
+        iterations += 1;
+
+        // Step 5: SendToMaster(s_j).
+        comm.send(master, Tag::Fold, (fold.value, fold.counter).to_bytes());
+
+        // Step 10: RecvFromMaster(exit).
+        let exit = bool::from_bytes(&comm.recv(master, Tag::Exit).payload);
+        if exit {
+            return WorkerReport {
+                rank,
+                iterations,
+                map_seconds,
+                sublist_length: len,
+            };
+        }
+    }
+}
+
+/// `BC_WorkerMap` + `BC_WorkerReduce`: map the sublist and fold locally.
+///
+/// Public (crate-wide) because the simulated cluster executes exactly the
+/// same worker computation under a virtual clock.
+#[allow(clippy::too_many_arguments)]
+pub fn map_and_fold<P: BsfProblem>(
+    problem: &P,
+    elems: &[P::MapElem],
+    param: &P::Param,
+    rank: usize,
+    workers: usize,
+    offset: usize,
+    iter: usize,
+    job: usize,
+    threads: usize,
+) -> ExtendedFold<P::ReduceElem> {
+    let vars = SkelVars::for_worker(rank, workers, offset, elems.len(), iter, job);
+
+    // Fused path: the problem may map its whole sublist in one XLA call.
+    if let Some((value, counter)) = problem.map_sublist(elems, param, &vars) {
+        return ExtendedFold { value, counter };
+    }
+
+    if threads <= 1 || elems.len() < 2 {
+        return fold_chunk(problem, elems, param, vars, 0, job);
+    }
+
+    // OpenMP-analog: block-split the sublist over scoped threads.
+    let ranges = all_ranges(elems.len(), threads.min(elems.len()));
+    let partials: Vec<ExtendedFold<P::ReduceElem>> = std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .filter(|&&(_, l)| l > 0)
+            .map(|&(off, l)| {
+                s.spawn(move || {
+                    fold_chunk(problem, &elems[off..off + l], param, vars, off, job)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("map thread panicked")).collect()
+    });
+    merge_folds(partials, |a, b| problem.reduce_f(a, b, job))
+}
+
+/// Serial map+fold over a chunk; `rel_base` is the chunk's offset within
+/// the worker's sublist so `number_in_sublist` matches the paper's
+/// sublist-relative numbering even under intra-worker threading.
+fn fold_chunk<P: BsfProblem>(
+    problem: &P,
+    elems: &[P::MapElem],
+    param: &P::Param,
+    base_vars: SkelVars,
+    rel_base: usize,
+    job: usize,
+) -> ExtendedFold<P::ReduceElem> {
+    let mut i = 0usize;
+    fold_extended(
+        elems.iter().map(|e| {
+            let mut vars = base_vars;
+            vars.number_in_sublist = rel_base + i;
+            i += 1;
+            problem.map_f(e, param, &vars)
+        }),
+        |a, b| problem.reduce_f(a, b, job),
+    )
+}

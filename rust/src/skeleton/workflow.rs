@@ -1,0 +1,78 @@
+//! Workflow support (the paper's "Workflow support" section).
+//!
+//! A workflow is a set of up to four repeatable activities (jobs 0..=3),
+//! each with its own map/reduce/process functions, orchestrated by a
+//! state machine on the master (`PC_bsf_JobDispatcher`). The job number
+//! travels to the workers inside the order message and is visible to map
+//! functions as `SkelVars::job_case`.
+//!
+//! Where the C++ skeleton uses four distinct reduce-element *types*
+//! (`PT_bsf_reduceElem_T[_1..3]`), the Rust port uses one associated type
+//! per problem — a problem with a real multi-type workflow makes
+//! `ReduceElem` an enum over its per-job payloads (see
+//! `problems::apex` for the worked example).
+
+/// Maximum number of jobs the skeleton supports (`PP_BSF_MAX_JOB_CASE`+1).
+pub const MAX_JOBS: usize = 4;
+
+/// Decision returned by `process_results*` / `job_dispatcher`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobDecision {
+    /// Job to run next iteration (must be < the problem's `job_count`).
+    pub next_job: usize,
+    /// Stop the whole computation.
+    pub exit: bool,
+}
+
+impl JobDecision {
+    pub fn stay(job: usize) -> Self {
+        Self { next_job: job, exit: false }
+    }
+
+    pub fn goto(job: usize) -> Self {
+        Self { next_job: job, exit: false }
+    }
+
+    pub fn exit() -> Self {
+        Self { next_job: 0, exit: true }
+    }
+}
+
+/// Validate a problem's job configuration at run start.
+pub fn validate_job_count(job_count: usize) {
+    assert!(
+        (1..=MAX_JOBS).contains(&job_count),
+        "job_count must be 1..={MAX_JOBS}, got {job_count} \
+         (PP_BSF_MAX_JOB_CASE supports at most 4 activities)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions() {
+        assert_eq!(JobDecision::stay(2), JobDecision { next_job: 2, exit: false });
+        assert!(JobDecision::exit().exit);
+    }
+
+    #[test]
+    fn valid_job_counts() {
+        for jc in 1..=4 {
+            validate_job_count(jc);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "job_count")]
+    fn zero_jobs_invalid() {
+        validate_job_count(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "job_count")]
+    fn five_jobs_invalid() {
+        validate_job_count(5);
+    }
+}

@@ -1,0 +1,88 @@
+//! MPI-like message-passing substrate (the cluster-interconnect
+//! substitution — DESIGN.md §2).
+//!
+//! The paper's skeleton runs K+1 MPI processes where workers exchange
+//! messages only with the master (Fig. 1). This module provides the same
+//! communication surface over OS threads:
+//!
+//! * [`Communicator`] — per-process endpoint: `send`/`recv` by rank+tag,
+//!   plus `recv_any` (the master gathers partial folds in completion
+//!   order, like `MPI_Waitany`).
+//! * [`ThreadTransport`] — builds the K+1 endpoints over
+//!   `std::sync::mpsc` channels.
+//! * [`TransportStats`] — message/byte counters, used by the cost-model
+//!   calibration to attribute communication volume.
+//!
+//! Ranks follow the paper's `BC_MpiRun` convention: workers are
+//! `0..K-1`, the **master is rank K** (`MPI_Comm_size - 1`).
+
+mod thread;
+
+pub use thread::{build as build_thread_transport, ThreadEndpoint};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Message tags used by the BSF skeleton (Algorithm 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tag {
+    /// Master → worker: the order (current approximation + job number).
+    Order,
+    /// Worker → master: the partial fold (extended reduce element).
+    Fold,
+    /// Master → worker: the exit flag.
+    Exit,
+    /// Free-form (tests, extensions).
+    User(u16),
+}
+
+/// A single in-flight message.
+#[derive(Debug)]
+pub struct Message {
+    pub from: usize,
+    pub tag: Tag,
+    pub payload: Vec<u8>,
+}
+
+/// One process's view of the transport.
+pub trait Communicator: Send {
+    /// This endpoint's rank (workers `0..K-1`, master `K`).
+    fn rank(&self) -> usize;
+    /// Total number of processes, `K + 1`.
+    fn size(&self) -> usize;
+    /// Rank of the master process (`size() - 1`, per `BC_MpiRun`).
+    fn master_rank(&self) -> usize {
+        self.size() - 1
+    }
+    /// Send `payload` to `to`. Never blocks (buffered channels).
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>);
+    /// Blocking receive of the next message from `from` with `tag`
+    /// (out-of-order arrivals from other peers/tags are buffered).
+    fn recv(&self, from: usize, tag: Tag) -> Message;
+    /// Blocking receive of the next message with `tag` from *any* peer.
+    fn recv_any(&self, tag: Tag) -> Message;
+    /// Shared counters.
+    fn stats(&self) -> Arc<TransportStats>;
+}
+
+/// Global transport counters (shared across all endpoints of one run).
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl TransportStats {
+    pub fn record(&self, payload_len: usize) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(payload_len as u64, Ordering::Relaxed);
+    }
+
+    pub fn message_count(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn byte_count(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,203 @@
+//! Thread-backed transport: K+1 endpoints over `std::sync::mpsc`.
+//!
+//! Each endpoint owns one unbounded receiver; every peer holds a cloned
+//! sender to it. `recv(from, tag)` provides MPI-style selective receive
+//! by buffering out-of-order arrivals in a pending queue (messages from
+//! the same peer+tag stay FIFO, matching MPI's non-overtaking guarantee).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use super::{Communicator, Message, Tag, TransportStats};
+
+/// One process's endpoint of the thread transport.
+pub struct ThreadEndpoint {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Message>>,
+    // Mutex (not &mut) so worker threads can share the endpoint immutably.
+    inbox: Mutex<Inbox>,
+    stats: Arc<TransportStats>,
+}
+
+struct Inbox {
+    rx: Receiver<Message>,
+    pending: VecDeque<Message>,
+}
+
+/// Build a transport with `workers + 1` endpoints (master is the last).
+pub fn build(workers: usize) -> Vec<ThreadEndpoint> {
+    let size = workers + 1;
+    let stats = Arc::new(TransportStats::default());
+    let mut txs = Vec::with_capacity(size);
+    let mut rxs = Vec::with_capacity(size);
+    for _ in 0..size {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| ThreadEndpoint {
+            rank,
+            size,
+            senders: txs.clone(),
+            inbox: Mutex::new(Inbox { rx, pending: VecDeque::new() }),
+            stats: stats.clone(),
+        })
+        .collect()
+}
+
+impl ThreadEndpoint {
+    fn matchers(
+        pending: &mut VecDeque<Message>,
+        from: Option<usize>,
+        tag: Tag,
+    ) -> Option<Message> {
+        let idx = pending
+            .iter()
+            .position(|m| m.tag == tag && from.map(|f| m.from == f).unwrap_or(true))?;
+        pending.remove(idx)
+    }
+
+    fn recv_matching(&self, from: Option<usize>, tag: Tag) -> Message {
+        let mut inbox = self.inbox.lock().expect("inbox poisoned");
+        if let Some(m) = Self::matchers(&mut inbox.pending, from, tag) {
+            return m;
+        }
+        loop {
+            let m = inbox
+                .rx
+                .recv()
+                .expect("transport channel closed while receiving");
+            let matches =
+                m.tag == tag && from.map(|f| m.from == f).unwrap_or(true);
+            if matches {
+                return m;
+            }
+            inbox.pending.push_back(m);
+        }
+    }
+}
+
+impl Communicator for ThreadEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) {
+        self.stats.record(payload.len());
+        self.senders[to]
+            .send(Message { from: self.rank, tag, payload })
+            .expect("transport channel closed while sending");
+    }
+
+    fn recv(&self, from: usize, tag: Tag) -> Message {
+        self.recv_matching(Some(from), tag)
+    }
+
+    fn recv_any(&self, tag: Tag) -> Message {
+        self.recv_matching(None, tag)
+    }
+
+    fn stats(&self) -> Arc<TransportStats> {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn ranks_and_master_convention() {
+        let eps = build(3);
+        assert_eq!(eps.len(), 4);
+        for (i, ep) in eps.iter().enumerate() {
+            assert_eq!(ep.rank(), i);
+            assert_eq!(ep.size(), 4);
+            assert_eq!(ep.master_rank(), 3);
+        }
+    }
+
+    #[test]
+    fn point_to_point_roundtrip() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            let m = worker.recv(1, Tag::Order);
+            assert_eq!(m.payload, vec![1, 2, 3]);
+            worker.send(1, Tag::Fold, vec![9]);
+        });
+        master.send(0, Tag::Order, vec![1, 2, 3]);
+        let m = master.recv(0, Tag::Fold);
+        assert_eq!(m.payload, vec![9]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn selective_receive_buffers_other_tags() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        worker.send(1, Tag::Fold, vec![1]);
+        worker.send(1, Tag::Exit, vec![2]);
+        // ask for Exit first: Fold must be buffered, not lost
+        assert_eq!(master.recv(0, Tag::Exit).payload, vec![2]);
+        assert_eq!(master.recv(0, Tag::Fold).payload, vec![1]);
+    }
+
+    #[test]
+    fn fifo_per_peer_and_tag() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        for i in 0..10u8 {
+            worker.send(1, Tag::Fold, vec![i]);
+        }
+        for i in 0..10u8 {
+            assert_eq!(master.recv(0, Tag::Fold).payload, vec![i]);
+        }
+    }
+
+    #[test]
+    fn recv_any_gathers_from_all_workers() {
+        let mut eps = build(3);
+        let master = eps.pop().unwrap();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|w| {
+                thread::spawn(move || {
+                    let rank = w.rank();
+                    w.send(3, Tag::Fold, vec![rank as u8]);
+                })
+            })
+            .collect();
+        let mut seen: Vec<u8> =
+            (0..3).map(|_| master.recv_any(Tag::Fold).payload[0]).collect();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2]);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stats_count_messages_and_bytes() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        master.send(0, Tag::Order, vec![0; 16]);
+        worker.send(1, Tag::Fold, vec![0; 4]);
+        let st = master.stats();
+        assert_eq!(st.message_count(), 2);
+        assert_eq!(st.byte_count(), 20);
+    }
+}

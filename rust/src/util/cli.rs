@@ -1,0 +1,145 @@
+//! Tiny CLI argument parser (the offline build has no clap).
+//!
+//! Supports `program <subcommand> [--key value] [--key=value] [--flag]`.
+//! Typed getters with defaults; unknown-key detection for typo safety.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| {
+            panic!("--{key} expects an integer, got {v:?}")
+        })).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| {
+            panic!("--{key} expects an integer, got {v:?}")
+        })).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| {
+            panic!("--{key} expects a number, got {v:?}")
+        })).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--k 1,2,4,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects comma-separated integers, got {v:?}")
+                }))
+                .collect(),
+        }
+    }
+
+    /// Panic if any option key is not in `known` (typo guard).
+    pub fn expect_known(&self, known: &[&str]) {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                panic!("unknown option --{k}; known: {known:?}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: positionals come before flags — a bare positional after a
+        // flag would be consumed as that flag's value (documented quirk).
+        let a = parse("run jacobi --n 128 --mode=sim --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_usize("n", 0), 128);
+        assert_eq!(a.get_str("mode", ""), "sim");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["jacobi"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_f64("eps", 0.5), 0.5);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse("sweep --k 1,2,4,");
+        assert_eq!(a.get_usize_list("k", &[]), vec![1, 2, 4]);
+        assert_eq!(a.get_usize_list("missing", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("run --check");
+        assert!(a.get_bool("check"));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown option")]
+    fn unknown_key_panics() {
+        parse("run --typo 3").expect_known(&["n"]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Byte-level codec for message payloads on the MPI-like transport.
+//!
+//! The paper's skeleton sends raw C structs over MPI; our transport
+//! carries `Vec<u8>`, so every order parameter / reduce element type
+//! implements [`Codec`]: little-endian, length-prefixed where variable.
+//! Kept deliberately tiny — no serde in the offline dependency universe.
+
+/// Encode/decode a value to/from a byte stream.
+pub trait Codec: Sized {
+    /// Append the encoding of `self` to `buf`.
+    fn encode(&self, buf: &mut Vec<u8>);
+    /// Decode a value from `buf` starting at `*pos`, advancing `*pos`.
+    fn decode(buf: &[u8], pos: &mut usize) -> Self;
+
+    /// Convenience: encode to a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.encode(&mut buf);
+        buf
+    }
+
+    /// Convenience: decode a whole buffer.
+    fn from_bytes(buf: &[u8]) -> Self {
+        let mut pos = 0;
+        let v = Self::decode(buf, &mut pos);
+        debug_assert_eq!(pos, buf.len(), "trailing bytes after decode");
+        v
+    }
+}
+
+macro_rules! impl_codec_prim {
+    ($($t:ty),*) => {$(
+        impl Codec for $t {
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+            fn decode(buf: &[u8], pos: &mut usize) -> Self {
+                const N: usize = std::mem::size_of::<$t>();
+                let mut b = [0u8; N];
+                b.copy_from_slice(&buf[*pos..*pos + N]);
+                *pos += N;
+                <$t>::from_le_bytes(b)
+            }
+        }
+    )*};
+}
+
+impl_codec_prim!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64);
+
+impl Codec for usize {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (*self as u64).encode(buf);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        u64::decode(buf, pos) as usize
+    }
+}
+
+impl Codec for bool {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(*self as u8);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        let v = buf[*pos] != 0;
+        *pos += 1;
+        v
+    }
+}
+
+impl Codec for () {
+    fn encode(&self, _buf: &mut Vec<u8>) {}
+    fn decode(_buf: &[u8], _pos: &mut usize) -> Self {}
+}
+
+impl<T: Codec> Codec for Vec<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.len().encode(buf);
+        for v in self {
+            v.encode(buf);
+        }
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        let n = usize::decode(buf, pos);
+        (0..n).map(|_| T::decode(buf, pos)).collect()
+    }
+}
+
+impl<T: Codec, U: Codec> Codec for (T, U) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        (T::decode(buf, pos), U::decode(buf, pos))
+    }
+}
+
+impl<T: Codec, U: Codec, V: Codec> Codec for (T, U, V) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+        self.2.encode(buf);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        (T::decode(buf, pos), U::decode(buf, pos), V::decode(buf, pos))
+    }
+}
+
+impl<T: Codec> Codec for Option<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            None => buf.push(0),
+            Some(v) => {
+                buf.push(1);
+                v.encode(buf);
+            }
+        }
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        let tag = buf[*pos];
+        *pos += 1;
+        match tag {
+            0 => None,
+            _ => Some(T::decode(buf, pos)),
+        }
+    }
+}
+
+impl<const N: usize> Codec for [f64; N] {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        for v in self {
+            v.encode(buf);
+        }
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        let mut out = [0.0; N];
+        for o in &mut out {
+            *o = f64::decode(buf, pos);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Codec + PartialEq + std::fmt::Debug>(v: T) {
+        assert_eq!(T::from_bytes(&v.to_bytes()), v);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(42u64);
+        roundtrip(-7i32);
+        roundtrip(3.25f64);
+        roundtrip(true);
+        roundtrip(false);
+        roundtrip(usize::MAX >> 1);
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        roundtrip(vec![1.0f64, -2.5, 3.75]);
+        roundtrip(Vec::<f64>::new());
+        roundtrip((1u32, 2.0f64));
+        roundtrip((1usize, vec![0.5f64], true));
+        roundtrip(Some(vec![1u8, 2, 3]));
+        roundtrip(Option::<f64>::None);
+        roundtrip([1.0f64, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn nested_vec_roundtrip() {
+        roundtrip(vec![vec![1.0f64, 2.0], vec![], vec![3.0]]);
+    }
+
+    #[test]
+    fn encoding_is_compact_le() {
+        assert_eq!(1.0f64.to_bytes(), 1.0f64.to_le_bytes().to_vec());
+        // Vec: 8-byte length prefix + payload
+        assert_eq!(vec![0u8; 3].to_bytes().len(), 8 + 3);
+    }
+}

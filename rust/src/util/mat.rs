@@ -1,0 +1,241 @@
+//! Dense row-major f64 matrices + generators for the demo problems.
+//!
+//! Small on purpose: the skeleton's problems need matvec, column/row
+//! slicing, norms, and synthetic system generators (diagonally dominant
+//! for Jacobi convergence; random consistent systems for Cimmino; random
+//! feasible polytopes for the LPP problems).
+
+use crate::util::rng::SplitMix64;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// j-th column as a fresh vector (rows are contiguous, columns not).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Rows [lo, hi) as a new matrix.
+    pub fn row_block(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared Euclidean distance ||a - b||^2 (the paper's stop criterion).
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// axpy: y += alpha * x.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Generate a strictly diagonally dominant system `A x* = b` with a known
+/// solution `x*` (sufficient condition for Jacobi convergence, per the
+/// paper's example section). Returns (A, b, x*).
+pub fn gen_diag_dominant(n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+    let mut rng = SplitMix64::new(seed);
+    let mut a = Mat::from_fn(n, n, |_, _| rng.range(-1.0, 1.0));
+    for i in 0..n {
+        let off: f64 = (0..n).filter(|&j| j != i).map(|j| a.at(i, j).abs()).sum();
+        // strictly dominant with margin so convergence is comfortably fast
+        let sign = if a.at(i, i) >= 0.0 { 1.0 } else { -1.0 };
+        *a.at_mut(i, i) = sign * (off + 1.0 + rng.f64());
+    }
+    let x_star: Vec<f64> = (0..n).map(|_| rng.range(-5.0, 5.0)).collect();
+    let b = a.matvec(&x_star);
+    (a, b, x_star)
+}
+
+/// Jacobi iteration data: C (zero diagonal, c_ij = -a_ij/a_ii) and
+/// d (d_i = b_i / a_ii), per the paper's "Example" section.
+pub fn jacobi_cd(a: &Mat, b: &[f64]) -> (Mat, Vec<f64>) {
+    let n = a.rows;
+    let c = Mat::from_fn(n, n, |i, j| {
+        if i == j { 0.0 } else { -a.at(i, j) / a.at(i, i) }
+    });
+    let d = (0..n).map(|i| b[i] / a.at(i, i)).collect();
+    (c, d)
+}
+
+/// Generate a consistent (solvable) random system for Cimmino: rows are
+/// random unit-ish vectors, b = A x*. Returns (A, b, x*).
+pub fn gen_consistent(m: usize, n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+    let mut rng = SplitMix64::new(seed);
+    let a = Mat::from_fn(m, n, |_, _| rng.normal());
+    let x_star: Vec<f64> = (0..n).map(|_| rng.range(-2.0, 2.0)).collect();
+    let b = a.matvec(&x_star);
+    (a, b, x_star)
+}
+
+/// Generate a feasible system of half-spaces `a_i . x <= b_i` that all
+/// contain the ball of radius `margin` around `center` (used by the LPP
+/// feasibility problem; mirrors the BSF-LPP-Generator companion repo).
+pub fn gen_feasible_halfspaces(
+    m: usize,
+    n: usize,
+    center: &[f64],
+    margin: f64,
+    seed: u64,
+) -> (Mat, Vec<f64>) {
+    let mut rng = SplitMix64::new(seed);
+    let a = Mat::from_fn(m, n, |_, _| rng.normal());
+    let mut b = vec![0.0; m];
+    for i in 0..m {
+        let row = a.row(i);
+        // a_i . center + margin * ||a_i|| <= b_i  ⇒ ball inside half-space
+        b[i] = dot(row, center) + margin * norm2(row) + rng.f64();
+    }
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let a = Mat::eye(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(a.matvec(&x), x);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 5 + j) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn row_col_consistent() {
+        let m = Mat::from_fn(3, 4, |i, j| (10 * i + j) as f64);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn row_block_slices() {
+        let m = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
+        let b = m.row_block(1, 3);
+        assert_eq!(b.rows, 2);
+        assert_eq!(b.row(0), m.row(1));
+        assert_eq!(b.row(1), m.row(2));
+    }
+
+    #[test]
+    fn diag_dominant_is_dominant_and_consistent() {
+        let (a, b, x_star) = gen_diag_dominant(24, 3);
+        for i in 0..24 {
+            let off: f64 = (0..24).filter(|&j| j != i).map(|j| a.at(i, j).abs()).sum();
+            assert!(a.at(i, i).abs() > off, "row {i} not dominant");
+        }
+        let r = a.matvec(&x_star);
+        for i in 0..24 {
+            assert!((r[i] - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn jacobi_cd_zero_diag() {
+        let (a, b, _) = gen_diag_dominant(8, 5);
+        let (c, d) = jacobi_cd(&a, &b);
+        for i in 0..8 {
+            assert_eq!(c.at(i, i), 0.0);
+            assert!((d[i] - b[i] / a.at(i, i)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn feasible_halfspaces_contain_center() {
+        let center = vec![0.5; 6];
+        let (a, b) = gen_feasible_halfspaces(40, 6, &center, 0.1, 7);
+        for i in 0..40 {
+            assert!(dot(a.row(i), &center) <= b[i] + 1e-9, "row {i} violated");
+        }
+    }
+
+    #[test]
+    fn norms_and_axpy() {
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        assert_eq!(dist2(&[1.0, 1.0], &[0.0, 0.0]), 2.0);
+        let mut y = vec![1.0, 2.0];
+        axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 42.0]);
+    }
+}

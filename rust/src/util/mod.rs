@@ -1,0 +1,9 @@
+//! Support code: PRNG, codec, dense matrices, stats, CLI parsing and the
+//! in-tree property-testing harness.
+
+pub mod cli;
+pub mod codec;
+pub mod mat;
+pub mod qcheck;
+pub mod rng;
+pub mod stats;

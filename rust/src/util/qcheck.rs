@@ -1,0 +1,83 @@
+//! Minimal property-testing harness (the offline build has no proptest).
+//!
+//! [`qcheck`] runs a property over `cases` deterministic PRNG streams; on
+//! failure it panics with the failing case index and seed so the case can
+//! be replayed exactly with [`qcheck_seed`]. No shrinking — properties in
+//! this repo draw small sizes to keep counterexamples readable.
+
+use crate::util::rng::SplitMix64;
+
+/// Base seed mixed with the case index (stable across runs).
+pub const BASE_SEED: u64 = 0xB5F_5EED;
+
+/// Run `prop` over `cases` independent PRNGs. Panics on the first failure
+/// with a replayable seed.
+pub fn qcheck(cases: usize, prop: impl Fn(&mut SplitMix64)) {
+    for case in 0..cases {
+        let seed = BASE_SEED ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = SplitMix64::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one property case with an explicit seed.
+pub fn qcheck_seed(seed: u64, mut prop: impl FnMut(&mut SplitMix64)) {
+    let mut rng = SplitMix64::new(seed);
+    prop(&mut rng);
+}
+
+/// Draw a size in [lo, hi] (inclusive) — the common generator shape.
+pub fn size_in(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0usize);
+        qcheck(25, |_rng| {
+            count.set(count.get() + 1);
+        });
+        assert_eq!(count.get(), 25);
+        let _ = &mut count;
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failing_property_reports_case() {
+        qcheck(10, |rng| {
+            // fails eventually: not every u64 is even
+            assert_eq!(rng.next() % 2, 0);
+        });
+    }
+
+    #[test]
+    fn size_in_respects_bounds() {
+        qcheck(50, |rng| {
+            let s = size_in(rng, 3, 9);
+            assert!((3..=9).contains(&s));
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        qcheck_seed(0xDEAD, |rng| seen.push(rng.next()));
+        let mut seen2 = Vec::new();
+        qcheck_seed(0xDEAD, |rng| seen2.push(rng.next()));
+        assert_eq!(seen, seen2);
+    }
+}

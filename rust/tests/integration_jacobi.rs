@@ -1,0 +1,134 @@
+//! Integration: the full skeleton solving Jacobi end-to-end, across
+//! worker counts, backends, OpenMP settings and the simulated cluster.
+
+use std::sync::Arc;
+
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::jacobi::{JacobiProblem, MapBackend};
+use bsf::simcluster::{run_simulated, SimConfig};
+use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::util::mat::dist2;
+
+#[test]
+fn threaded_solution_matches_truth_many_ks() {
+    for k in [1usize, 2, 3, 7, 16] {
+        let (p, x_star) = JacobiProblem::random(64, 1e-22, 100 + k as u64);
+        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(k));
+        assert!(
+            dist2(&r.param, &x_star) < 1e-10,
+            "K={k}: dist² {}",
+            dist2(&r.param, &x_star)
+        );
+    }
+}
+
+#[test]
+fn message_count_matches_algorithm_2() {
+    // Per iteration: K orders + K folds + K exits = 3K messages.
+    let k = 5;
+    let (p, _) = JacobiProblem::random(32, 1e-16, 3);
+    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(k));
+    assert_eq!(r.messages, (3 * k * r.iterations) as u64);
+}
+
+#[test]
+fn simulated_cluster_same_numerics_as_threaded() {
+    let (pt, _) = JacobiProblem::random(48, 1e-18, 4);
+    let (ps, _) = JacobiProblem::random(48, 1e-18, 4);
+    let rt = run_threaded(Arc::new(pt), &BsfConfig::with_workers(6));
+    let rs = run_simulated(
+        &ps,
+        &BsfConfig::with_workers(6),
+        &SimConfig::new(ClusterProfile::infiniband()),
+    );
+    assert_eq!(rt.iterations, rs.iterations);
+    for (a, b) in rt.param.iter().zip(&rs.param) {
+        assert!((a - b).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn simulated_virtual_time_has_scalability_peak_shape() {
+    // With a slow interconnect and a small problem, K=64 must be slower
+    // per iteration than the best small K — the boundary exists.
+    let profile = ClusterProfile::gigabit();
+    let per_iter = |k: usize| {
+        let (p, _) = JacobiProblem::random(96, 1e-30, 5);
+        let r = run_simulated(
+            &p,
+            &BsfConfig::with_workers(k).max_iter(8),
+            // 50µs/elem ⇒ t_map = 4.8ms ≫ per-message cost (~56µs), so a
+            // boundary exists between K=4 and K=96.
+            &SimConfig::new(profile).per_element(50e-6),
+        );
+        r.virtual_seconds / r.iterations as f64
+    };
+    let t1 = per_iter(1);
+    let t4 = per_iter(4);
+    let t96 = per_iter(96);
+    assert!(t4 < t1, "t4 {t4} should beat t1 {t1}");
+    assert!(t96 > t4, "t96 {t96} should be past the boundary vs t4 {t4}");
+}
+
+#[test]
+fn openmp_and_plain_agree_at_scale() {
+    let (p1, _) = JacobiProblem::random(128, 1e-16, 6);
+    let (p2, _) = JacobiProblem::random(128, 1e-16, 6);
+    let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(2));
+    let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(2).openmp(4));
+    assert_eq!(r1.iterations, r2.iterations);
+    for (a, b) in r1.param.iter().zip(&r2.param) {
+        assert!((a - b).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn per_element_backend_matches_fused() {
+    let (p1, _) = JacobiProblem::random(40, 1e-18, 7);
+    let (p2, _) = JacobiProblem::random(40, 1e-18, 7);
+    let r1 = run_threaded(
+        Arc::new(p1.with_backend(MapBackend::PerElement)),
+        &BsfConfig::with_workers(4),
+    );
+    let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(4));
+    assert_eq!(r1.iterations, r2.iterations);
+    for (a, b) in r1.param.iter().zip(&r2.param) {
+        assert!((a - b).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn trace_output_does_not_change_results() {
+    let (p1, _) = JacobiProblem::random(32, 1e-16, 8);
+    let (p2, _) = JacobiProblem::random(32, 1e-16, 8);
+    let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(3));
+    let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(3).trace(2));
+    assert_eq!(r1.iterations, r2.iterations);
+    assert_eq!(r1.param, r2.param);
+}
+
+#[test]
+fn max_iter_caps_divergence_guard() {
+    let (p, _) = JacobiProblem::random(32, 1e-300, 9); // unreachable eps
+    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(2).max_iter(17));
+    assert_eq!(r.iterations, 17);
+}
+
+#[test]
+fn more_workers_than_list_elements() {
+    // The paper says list size *should* be >= K, but the skeleton must
+    // still function: surplus workers hold empty sublists and contribute
+    // empty folds (counter 0) that the extended reduce skips.
+    let (p, x_star) = JacobiProblem::random(6, 1e-20, 10);
+    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(9));
+    assert!(dist2(&r.param, &x_star) < 1e-10);
+}
+
+#[test]
+fn single_element_list() {
+    // n=1: C = [0], d = b/a, converges in one step.
+    let (p, x_star) = JacobiProblem::random(1, 1e-20, 11);
+    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(1));
+    assert!((r.param[0] - x_star[0]).abs() < 1e-10);
+    assert!(r.iterations <= 3);
+}

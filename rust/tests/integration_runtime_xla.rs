@@ -1,0 +1,167 @@
+//! Integration: the PJRT runtime executing the AOT Pallas/JAX artifacts,
+//! and the XLA-backed worker map inside full skeleton runs.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they are skipped
+//! with a message when it is absent so `cargo test` works standalone.
+
+use std::sync::Arc;
+
+use bsf::problems::cimmino::{CimminoBackend, CimminoProblem};
+use bsf::problems::gravity::{GravityBackend, GravityProblem};
+use bsf::problems::jacobi::{JacobiProblem, MapBackend};
+use bsf::problems::jacobi_map::{JacobiMapProblem, MapMapBackend};
+use bsf::runtime::service::XlaService;
+use bsf::runtime::XlaRuntime;
+use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::util::mat::dist2;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("BSF_ARTIFACTS").unwrap_or_else(|_| {
+        // tests run from the crate root
+        "artifacts".into()
+    });
+    if std::path::Path::new(&dir).join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir}; run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_lists_all_kinds() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(&dir).unwrap();
+    for kind in ["jacobi", "jacobi_map", "cimmino", "gravity"] {
+        assert!(
+            rt.names().iter().any(|n| n.starts_with(kind)),
+            "missing {kind} artifacts"
+        );
+    }
+}
+
+#[test]
+fn best_chunk_picks_smallest_fitting() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(&dir).unwrap();
+    let m = rt.best_chunk("jacobi", 64, 10).expect("fits in c=16");
+    assert_eq!(m.c, 16);
+    let m = rt.best_chunk("jacobi", 64, 17).expect("fits in c=64");
+    assert_eq!(m.c, 64);
+    assert!(rt.best_chunk("jacobi", 64, 65).is_none());
+}
+
+#[test]
+fn jacobi_artifact_matches_native_matvec() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(&dir).unwrap();
+    // jacobi_n64_c16: (64,16) @ (16,) -> (64,)
+    let n = 64;
+    let c = 16;
+    let cols: Vec<f32> = (0..n * c).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let x: Vec<f32> = (0..c).map(|j| (j as f32 - 8.0) * 0.25).collect();
+    let out = rt
+        .execute_f32("jacobi_n64_c16", &[(&cols, &[n as i64, c as i64]), (&x, &[c as i64])])
+        .unwrap();
+    assert_eq!(out.len(), n);
+    for i in 0..n {
+        let want: f32 = (0..c).map(|j| cols[i * c + j] * x[j]).sum();
+        assert!((out[i] - want).abs() < 1e-4, "row {i}: {} vs {want}", out[i]);
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(&dir).unwrap();
+    let cols = vec![0.5f32; 64 * 16];
+    let x = vec![1.0f32; 16];
+    let t0 = std::time::Instant::now();
+    let _ = rt
+        .execute_f32("jacobi_n64_c16", &[(&cols, &[64, 16]), (&x, &[16])])
+        .unwrap();
+    let first = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    for _ in 0..5 {
+        let _ = rt
+            .execute_f32("jacobi_n64_c16", &[(&cols, &[64, 16]), (&x, &[16])])
+            .unwrap();
+    }
+    let warm = t0.elapsed() / 5;
+    assert!(warm < first, "warm {warm:?} should beat cold {first:?}");
+}
+
+#[test]
+fn xla_backed_jacobi_solves_like_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let service = XlaService::start(&dir).unwrap();
+    // n must be an AOT dimension (64) for the XLA path to engage.
+    let (native, x_star) = JacobiProblem::random(64, 1e-10, 401);
+    let (xla_p, _) = JacobiProblem::random(64, 1e-10, 401);
+    let xla_p = xla_p.with_backend(MapBackend::Xla(service.handle()));
+    let rn = run_threaded(Arc::new(native), &BsfConfig::with_workers(4));
+    let rx = run_threaded(Arc::new(xla_p), &BsfConfig::with_workers(4));
+    // f32 kernel vs f64 native: same fixed point to f32 accuracy.
+    assert!(dist2(&rx.param, &x_star) < 1e-4, "dist² {}", dist2(&rx.param, &x_star));
+    assert!(dist2(&rn.param, &rx.param) < 1e-4);
+}
+
+#[test]
+fn xla_backed_jacobi_map_solves() {
+    let Some(dir) = artifacts_dir() else { return };
+    let service = XlaService::start(&dir).unwrap();
+    let (p, x_star) = JacobiMapProblem::random(64, 1e-10, 402);
+    let p = p.with_backend(MapMapBackend::Xla(service.handle()));
+    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(4));
+    assert!(dist2(&r.param, &x_star) < 1e-4);
+}
+
+#[test]
+fn xla_backed_cimmino_converges() {
+    let Some(dir) = artifacts_dir() else { return };
+    let service = XlaService::start(&dir).unwrap();
+    let (p, _) = CimminoProblem::random(64, 64, 1e-10, 403);
+    let p = Arc::new(p.with_backend(CimminoBackend::Xla(service.handle())));
+    let r0 = p.residual2(&vec![0.0; 64]);
+    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(20_000));
+    assert!(p.residual2(&r.param) < r0 * 1e-4);
+}
+
+#[test]
+fn xla_backed_gravity_matches_native_trajectory() {
+    let Some(dir) = artifacts_dir() else { return };
+    let service = XlaService::start(&dir).unwrap();
+    let native = GravityProblem::random(64, 1e-3, 5, 404);
+    let xla_p = GravityProblem::random(64, 1e-3, 5, 404)
+        .with_backend(GravityBackend::Xla(service.handle()));
+    let rn = run_threaded(Arc::new(native), &BsfConfig::with_workers(4));
+    let rx = run_threaded(Arc::new(xla_p), &BsfConfig::with_workers(4));
+    for (a, b) in rn.param.iter().zip(&rx.param) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn service_handles_work_from_many_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let service = XlaService::start(&dir).unwrap();
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let h = service.handle();
+            std::thread::spawn(move || {
+                let cols = vec![t as f32; 64 * 16];
+                let x = vec![1.0f32; 16];
+                let out = h
+                    .execute_f32(
+                        "jacobi_n64_c16",
+                        vec![(cols, vec![64, 16]), (x, vec![16])],
+                    )
+                    .unwrap();
+                assert!((out[0] - 16.0 * t as f32).abs() < 1e-3);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration: workflow (multi-job) support through the Apex problem and
+//! a purpose-built 2-job toy that checks job plumbing exactly.
+
+use std::sync::Arc;
+
+use bsf::problems::apex::{ApexProblem, ApexReduce, JOB_FEASIBILITY, JOB_PURSUIT, JOB_VERIFY};
+use bsf::skeleton::problem::{BsfProblem, IterCtx, MapCtx};
+use bsf::skeleton::{run_threaded, BsfConfig, StepDecision};
+use bsf::util::codec::Codec;
+
+/// Toy 2-job workflow: job 0 sums elements, job 1 counts them; the
+/// dispatcher alternates jobs and exits after 6 iterations. Verifies the
+/// job number travels to workers and the per-job reduce dispatch works.
+struct TwoJob {
+    n: usize,
+}
+
+impl BsfProblem for TwoJob {
+    type Param = Vec<f64>; // [iterations_done, sum_acc, count_acc]
+    type MapElem = usize;
+    type ReduceElem = (u64, f64);
+
+    fn list_size(&self) -> usize {
+        self.n
+    }
+
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+
+    fn init_parameter(&self) -> Vec<f64> {
+        vec![0.0, 0.0, 0.0]
+    }
+
+    fn job_count(&self) -> usize {
+        2
+    }
+
+    fn map_f(&self, &i: &usize, _param: &Vec<f64>, ctx: &MapCtx) -> Option<(u64, f64)> {
+        match ctx.job_case {
+            0 => Some((0, i as f64)),  // sum job
+            1 => Some((1, 1.0)),       // count job
+            j => panic!("job {j}"),
+        }
+    }
+
+    fn reduce_f(&self, x: &(u64, f64), y: &(u64, f64), job: usize) -> (u64, f64) {
+        assert_eq!(x.0 as usize, job, "payload tagged with wrong job");
+        assert_eq!(y.0 as usize, job);
+        (x.0, x.1 + y.1)
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&(u64, f64)>,
+        reduce_counter: u64,
+        param: &mut Vec<f64>,
+        ctx: &IterCtx,
+    ) -> StepDecision {
+        let (tag, val) = reduce_result.copied().unwrap();
+        assert_eq!(reduce_counter as usize, self.n);
+        assert_eq!(tag as usize, ctx.job_case);
+        param[0] += 1.0;
+        if ctx.job_case == 0 {
+            param[1] = val;
+            StepDecision::goto(1)
+        } else {
+            param[2] = val;
+            StepDecision::goto(0)
+        }
+    }
+
+    fn job_dispatcher(
+        &self,
+        param: &mut Vec<f64>,
+        decision: StepDecision,
+        _ctx: &IterCtx,
+    ) -> Option<StepDecision> {
+        if param[0] >= 6.0 && !decision.exit {
+            Some(StepDecision::exit())
+        } else {
+            None
+        }
+    }
+}
+
+#[test]
+fn two_job_workflow_alternates_and_dispatcher_exits() {
+    let n = 10;
+    let r = run_threaded(Arc::new(TwoJob { n }), &BsfConfig::with_workers(3));
+    assert_eq!(r.iterations, 6);
+    assert_eq!(r.param[1], (0..n).sum::<usize>() as f64); // sum job result
+    assert_eq!(r.param[2], n as f64); // count job result
+}
+
+#[test]
+fn two_job_result_independent_of_workers() {
+    let r1 = run_threaded(Arc::new(TwoJob { n: 12 }), &BsfConfig::with_workers(1));
+    let r4 = run_threaded(Arc::new(TwoJob { n: 12 }), &BsfConfig::with_workers(4));
+    assert_eq!(r1.param, r4.param);
+    assert_eq!(r1.iterations, r4.iterations);
+}
+
+#[test]
+fn apex_three_jobs_run_and_converge() {
+    let p = ApexProblem::random(32, 5, 301);
+    let p = Arc::new(p);
+    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(200_000));
+    let (x, last_step) = &r.param;
+    assert_eq!(p.violations(x), 0);
+    assert!(*last_step < 1e-9, "final pursuit step {last_step}");
+}
+
+#[test]
+fn apex_reduce_codec_is_stable_across_jobs() {
+    for (job, elem) in [
+        (JOB_FEASIBILITY, ApexReduce::Corr(vec![0.25; 7])),
+        (JOB_PURSUIT, ApexReduce::MinStep(1.5)),
+        (JOB_VERIFY, ApexReduce::MaxViol(2.5)),
+    ] {
+        let bytes = (Some(elem.clone()), 3u64).to_bytes();
+        let (decoded, counter) = <(Option<ApexReduce>, u64)>::from_bytes(&bytes);
+        assert_eq!(decoded, Some(elem), "job {job}");
+        assert_eq!(counter, 3);
+    }
+}
+
+#[test]
+fn apex_objective_monotone_improvement_over_start() {
+    let p = ApexProblem::random(40, 6, 302);
+    let start_obj = p.objective(&vec![0.0; 6]);
+    let p = Arc::new(p);
+    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(2).max_iter(200_000));
+    assert!(p.objective(&r.param.0) > start_obj);
+}

@@ -1,0 +1,224 @@
+//! Cross-module property tests (the repo's proptest substitute —
+//! `bsf::util::qcheck`): the invariants that make the BSF skeleton
+//! correct-by-construction.
+
+use std::sync::Arc;
+
+use bsf::costmodel::{CostParams, ClusterProfile};
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::problems::lpp::LppProblem;
+use bsf::simcluster::{run_simulated, SimConfig};
+use bsf::skeleton::reduce::{fold_extended, merge_folds};
+use bsf::skeleton::split::all_ranges;
+use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::util::codec::Codec;
+use bsf::util::qcheck::{qcheck, size_in};
+
+#[test]
+fn prop_skeleton_result_is_k_invariant_jacobi() {
+    // The skeleton's core contract: for associative exact ⊕ the result
+    // does not depend on how the list is split over workers.
+    qcheck(12, |rng| {
+        let n = size_in(rng, 8, 40);
+        let seed = rng.next();
+        let k1 = 1;
+        let k2 = size_in(rng, 2, 8);
+        let (p1, _) = JacobiProblem::random(n, 1e-14, seed);
+        let (p2, _) = JacobiProblem::random(n, 1e-14, seed);
+        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(k1).max_iter(500));
+        let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(k2).max_iter(500));
+        assert_eq!(r1.iterations, r2.iterations);
+        for (a, b) in r1.param.iter().zip(&r2.param) {
+            assert!((a - b).abs() < 1e-8, "K-invariance broke: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_and_simulated_numerics_agree() {
+    qcheck(8, |rng| {
+        let n = size_in(rng, 8, 32);
+        let k = size_in(rng, 1, 6);
+        let seed = rng.next();
+        let (pt, _) = JacobiProblem::random(n, 1e-12, seed);
+        let (ps, _) = JacobiProblem::random(n, 1e-12, seed);
+        let rt = run_threaded(Arc::new(pt), &BsfConfig::with_workers(k).max_iter(300));
+        let rs = run_simulated(
+            &ps,
+            &BsfConfig::with_workers(k).max_iter(300),
+            &SimConfig::new(ClusterProfile::gigabit()),
+        );
+        assert_eq!(rt.iterations, rs.iterations);
+        for (a, b) in rt.param.iter().zip(&rs.param) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_extended_reduce_counter_equals_participants() {
+    qcheck(100, |rng| {
+        let n = size_in(rng, 0, 80);
+        let items: Vec<Option<u64>> = (0..n)
+            .map(|_| if rng.f64() < 0.4 { None } else { Some(rng.below(100) as u64) })
+            .collect();
+        let participants = items.iter().filter(|i| i.is_some()).count() as u64;
+        let fold = fold_extended(items.clone(), |a, b| a + b);
+        assert_eq!(fold.counter, participants);
+        let expect_sum: u64 = items.iter().flatten().sum();
+        match fold.value {
+            None => assert_eq!(participants, 0),
+            Some(v) => assert_eq!(v, expect_sum),
+        }
+    });
+}
+
+#[test]
+fn prop_merge_of_split_folds_equals_whole() {
+    qcheck(100, |rng| {
+        let n = size_in(rng, 1, 60);
+        let k = size_in(rng, 1, 10);
+        let items: Vec<Option<i64>> = (0..n)
+            .map(|_| if rng.f64() < 0.3 { None } else { Some(rng.below(50) as i64 - 25) })
+            .collect();
+        let whole = fold_extended(items.clone(), |a, b| a + b);
+        let parts = all_ranges(n, k);
+        let merged = merge_folds(
+            parts
+                .iter()
+                .map(|&(o, l)| fold_extended(items[o..o + l].iter().cloned(), |a, b| a + b)),
+            |a, b| a + b,
+        );
+        assert_eq!(whole, merged);
+    });
+}
+
+#[test]
+fn prop_codec_roundtrip_fold_messages() {
+    // The exact payload shape the master/worker exchange.
+    qcheck(100, |rng| {
+        let n = size_in(rng, 0, 30);
+        let value: Option<Vec<f64>> = if rng.f64() < 0.2 {
+            None
+        } else {
+            Some((0..n).map(|_| rng.normal()).collect())
+        };
+        let counter = rng.below(1000) as u64;
+        let msg = (value.clone(), counter);
+        let back = <(Option<Vec<f64>>, u64)>::from_bytes(&msg.to_bytes());
+        assert_eq!(back, msg);
+    });
+}
+
+#[test]
+fn prop_cost_model_t1_consistency_and_positive() {
+    qcheck(200, |rng| {
+        let p = CostParams {
+            latency: rng.range(0.0, 1e-4),
+            t_send: rng.range(0.0, 1e-3),
+            t_recv: rng.range(0.0, 1e-3),
+            t_map: rng.range(1e-6, 1.0),
+            t_red: rng.range(0.0, 1e-2),
+            t_op: rng.range(0.0, 1e-5),
+            t_proc: rng.range(0.0, 1e-3),
+        };
+        for k in [1usize, 2, 7, 33, 512] {
+            assert!(p.iteration_time(k) > 0.0);
+        }
+        // T(1) == the sum of all serial parts
+        let t1 = 2.0 * p.latency + p.t_send + p.t_recv + p.t_map + p.t_red + p.t_proc;
+        assert!((p.iteration_time(1) - t1).abs() < 1e-12);
+        // the analytic boundary is a stationary point of T
+        let km = p.k_max();
+        if km.is_finite() && km >= 2.0 {
+            let k = km.round() as usize;
+            assert!(p.iteration_time(k) <= p.iteration_time(k * 4) + 1e-12);
+            assert!(p.iteration_time(k) <= p.iteration_time(1.max(k / 4)) + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_lpp_feasibility_reached_for_random_polytopes() {
+    qcheck(10, |rng| {
+        let m = size_in(rng, 12, 60);
+        let n = size_in(rng, 2, 8);
+        let p = LppProblem::random(m, n, rng.next());
+        let p = Arc::new(p);
+        let r = run_threaded(
+            Arc::clone(&p),
+            &BsfConfig::with_workers(size_in(rng, 1, 6)).max_iter(100_000),
+        );
+        assert_eq!(p.violations(&r.param), 0, "infeasible after {}", r.iterations);
+    });
+}
+
+#[test]
+fn prop_sim_virtual_time_monotone_in_latency() {
+    qcheck(8, |rng| {
+        let n = size_in(rng, 12, 32);
+        let k = size_in(rng, 2, 8);
+        let seed = rng.next();
+        let vt = |latency: f64| {
+            let (p, _) = JacobiProblem::random(n, 1e-30, seed);
+            let sim = SimConfig {
+                profile: ClusterProfile { latency, byte_time: 1e-9 },
+                compute: bsf::simcluster::ComputeTime::PerElement(1e-6),
+            };
+            let r = run_simulated(&p, &BsfConfig::with_workers(k).max_iter(5), &sim);
+            r.virtual_seconds
+        };
+        let a = vt(1e-6);
+        let b = vt(1e-3);
+        assert!(b > a, "higher latency must cost virtual time: {a} vs {b}");
+    });
+}
+
+#[test]
+fn prop_transport_byte_accounting_matches_payloads() {
+    use bsf::transport::{build_thread_transport, Communicator, Tag};
+    qcheck(30, |rng| {
+        let k = size_in(rng, 1, 5);
+        let mut eps = build_thread_transport(k);
+        let master = eps.pop().unwrap();
+        let mut total = 0u64;
+        let sizes: Vec<usize> = (0..k).map(|_| rng.below(2000)).collect();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(sizes.clone())
+            .map(|(w, sz)| {
+                std::thread::spawn(move || {
+                    w.send(w.master_rank(), Tag::Fold, vec![7u8; sz]);
+                })
+            })
+            .collect();
+        for _ in 0..k {
+            total += master.recv_any(Tag::Fold).payload.len() as u64;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total, sizes.iter().sum::<usize>() as u64);
+        assert_eq!(master.stats().byte_count(), total);
+        assert_eq!(master.stats().message_count(), k as u64);
+    });
+}
+
+#[test]
+fn prop_montecarlo_tally_k_invariant() {
+    use bsf::problems::montecarlo::MonteCarloProblem;
+    qcheck(6, |rng| {
+        let blocks = size_in(rng, 2, 20);
+        let mk = || {
+            let mut p = MonteCarloProblem::new(blocks, 200, 1e-12);
+            p.max_rounds = 2;
+            p
+        };
+        let k1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1));
+        let kn = run_threaded(
+            Arc::new(mk()),
+            &BsfConfig::with_workers(size_in(rng, 2, 6)),
+        );
+        assert_eq!(k1.param, kn.param, "tallies must not depend on K");
+    });
+}
