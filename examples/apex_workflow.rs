@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use bsf::problems::apex::{ApexProblem, JOB_FEASIBILITY, JOB_PURSUIT, JOB_VERIFY};
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::{Bsf, BsfConfig, BsfError};
 
 fn job_name(j: usize) -> &'static str {
     match j {
@@ -20,7 +20,7 @@ fn job_name(j: usize) -> &'static str {
     }
 }
 
-fn main() {
+fn main() -> Result<(), BsfError> {
     let m = 64; // constraints (plus n box caps added by random())
     let n = 8; // dimensions
     let p = ApexProblem::random(m, n, 99);
@@ -32,10 +32,9 @@ fn main() {
     println!("start objective: {:.4}", p.objective(&start));
 
     let p = Arc::new(p);
-    let report = run_threaded(
-        Arc::clone(&p),
-        &BsfConfig::with_workers(4).max_iter(200_000),
-    );
+    let report = Bsf::from_arc(Arc::clone(&p))
+        .config(BsfConfig::with_workers(4).max_iter(200_000))
+        .run()?;
 
     let (x, last_step) = &report.param;
     println!(
@@ -56,4 +55,5 @@ fn main() {
     assert_eq!(p.violations(x), 0);
     assert!(p.objective(x) > p.objective(&start));
     println!("OK");
+    Ok(())
 }

@@ -4,11 +4,13 @@
 //! make artifacts && cargo run --release --example cluster_scalability
 //! ```
 //!
-//! What it does — all layers composing:
+//! What it does — all layers composing through the session API:
 //! 1. builds a Jacobi system (n=1024) and solves it through the skeleton
 //!    with the **XLA worker map** (L1 Pallas kernel → L2 JAX chunk map →
 //!    AOT HLO → L3 Rust workers via the PJRT service), logging the
-//!    per-iteration residual (the "loss curve" of this domain);
+//!    per-iteration residual (the "loss curve" of this domain); the XLA
+//!    backend degrades to the native map with a warning when artifacts or
+//!    the PJRT binding are missing;
 //! 2. calibrates the BSF cost model and predicts the scalability
 //!    boundary **before** any parallel run;
 //! 3. sweeps K over the simulated cluster (InfiniBand profile) and
@@ -17,18 +19,18 @@
 //!
 //! Results are recorded in EXPERIMENTS.md.
 
-use std::sync::Arc;
-
 use bsf::bench::sweep::{print_sweep, speedup_sweep};
 use bsf::costmodel::ClusterProfile;
 use bsf::problems::gravity::GravityProblem;
-use bsf::problems::jacobi::{JacobiProblem, MapBackend};
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::runtime::backend::{PositionedArg, XlaMapSpec};
 use bsf::runtime::service::XlaService;
 use bsf::skeleton::problem::{BsfProblem, IterCtx};
-use bsf::skeleton::{run_threaded, BsfConfig};
 use bsf::util::mat::dist2;
+use bsf::{Bsf, BsfConfig, BsfError};
 
-/// Wrapper that logs the residual trajectory (iter_output hook).
+/// Wrapper that logs the residual trajectory (iter_output hook). Also
+/// shows that `XlaMapSpec` delegates cleanly through wrappers.
 struct LoggedJacobi(JacobiProblem);
 
 impl BsfProblem for LoggedJacobi {
@@ -83,27 +85,63 @@ impl BsfProblem for LoggedJacobi {
     }
 }
 
-fn main() {
+impl XlaMapSpec for LoggedJacobi {
+    fn artifact_kind(&self) -> &'static str {
+        self.0.artifact_kind()
+    }
+    fn artifact_dim(&self) -> Option<usize> {
+        self.0.artifact_dim()
+    }
+    fn static_args(&self, offset: usize, len: usize, c_pad: usize) -> Vec<PositionedArg> {
+        self.0.static_args(offset, len, c_pad)
+    }
+    fn dyn_args(
+        &self,
+        param: &Vec<f64>,
+        offset: usize,
+        len: usize,
+        c_pad: usize,
+    ) -> Vec<PositionedArg> {
+        self.0.dyn_args(param, offset, len, c_pad)
+    }
+    fn decode_output(
+        &self,
+        out: Vec<f32>,
+        offset: usize,
+        len: usize,
+    ) -> (Option<Vec<f64>>, u64) {
+        self.0.decode_output(out, offset, len)
+    }
+}
+
+fn main() -> Result<(), BsfError> {
     println!("=== E10 end-to-end: XLA-backed Jacobi solve (n=1024, K=4) ===");
     let n = 1024;
     let (problem, x_star) = JacobiProblem::random(n, 1e-12, 4242);
-    // Keep the service alive for the whole solve; fall back to the native
-    // map when artifacts are missing.
-    let service: Option<XlaService> = match XlaService::start_default() {
-        Ok(s) => {
-            println!("worker map: AOT Pallas kernel jacobi_n1024_c256 via PJRT");
-            Some(s)
-        }
-        Err(e) => {
-            eprintln!("note: XLA unavailable ({e:#}); using native map");
-            None
+    // Keep the service alive for the whole solve; the session degrades to
+    // the native map when artifacts or the PJRT backend are missing. The
+    // service can start registry-only, so gate the "AOT kernels" claim on
+    // a linked backend.
+    let service: Option<XlaService> = if !bsf::runtime::XlaRuntime::backend_available() {
+        eprintln!("note: no PJRT backend linked into this build; using native map");
+        None
+    } else {
+        match XlaService::start_default() {
+            Ok(s) => {
+                println!("worker map: AOT kernels via the PJRT service registry");
+                Some(s)
+            }
+            Err(e) => {
+                eprintln!("note: XLA unavailable ({e}); using native map");
+                None
+            }
         }
     };
-    let problem = match &service {
-        Some(s) => problem.with_backend(MapBackend::Xla(s.handle())),
-        None => problem,
-    };
-    let report = run_threaded(Arc::new(LoggedJacobi(problem)), &BsfConfig::with_workers(4));
+    let mut session = Bsf::new(LoggedJacobi(problem)).config(BsfConfig::with_workers(4));
+    if let Some(s) = &service {
+        session = session.map_backend(bsf::runtime::backend::XlaMapBackend::new(s.handle()));
+    }
+    let report = session.run()?;
     println!(
         "converged in {} iterations, ||x - x*||² = {:.3e}",
         report.iterations,
@@ -117,7 +155,7 @@ fn main() {
         &ks,
         ClusterProfile::infiniband(),
         10,
-    );
+    )?;
     print_sweep("jacobi n=1024, infiniband", &s);
 
     println!("=== E3 gravity speedup: model vs simulated cluster ===");
@@ -126,8 +164,9 @@ fn main() {
         &ks,
         ClusterProfile::infiniband(),
         3,
-    );
+    )?;
     print_sweep("gravity N=1024, infiniband", &s);
 
     println!("OK");
+    Ok(())
 }

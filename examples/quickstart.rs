@@ -5,15 +5,14 @@
 //! ```
 //!
 //! Mirrors the paper's step-by-step instruction: define the problem
-//! (Jacobi over a diagonally dominant system), pick a worker count, run.
-
-use std::sync::Arc;
+//! (Jacobi over a diagonally dominant system), pick a worker count, run —
+//! all through the unified `Bsf` session API.
 
 use bsf::problems::jacobi::JacobiProblem;
-use bsf::skeleton::{run_threaded, BsfConfig};
 use bsf::util::mat::dist2;
+use bsf::{Bsf, BsfConfig, BsfError};
 
-fn main() {
+fn main() -> Result<(), BsfError> {
     // 1. A random strictly diagonally dominant system A x = b with a
     //    known solution x* (so we can check ourselves).
     let n = 256;
@@ -23,23 +22,27 @@ fn main() {
     //    5 iterations (the paper's PP_BSF_ITER_OUTPUT / TRACE_COUNT).
     let cfg = BsfConfig::with_workers(4).trace(5);
 
-    // 3. Run. The skeleton handles everything parallel: list splitting,
+    // 3. Run. The session handles everything parallel: list splitting,
     //    order broadcast, Map+Reduce on workers, the stop condition.
-    let report = run_threaded(Arc::new(problem), &cfg);
+    //    (Engine and map backend are pluggable; the defaults pick the
+    //    threaded engine and the fused native map.)
+    let report = Bsf::new(problem).config(cfg).run()?;
 
     println!(
-        "solved n={n} in {} iterations ({:.3} ms wall)",
+        "solved n={n} in {} iterations ({:.3} ms wall, engine={})",
         report.iterations,
-        report.elapsed * 1e3
+        report.elapsed * 1e3,
+        report.engine
     );
     println!(
         "transport: {} messages, {} bytes; master phases: {}",
         report.messages,
         report.bytes,
-        report.timers.summary()
+        report.phases.summary()
     );
     let err = dist2(&report.param, &x_star);
     println!("||x - x*||² = {err:.3e}");
     assert!(err < 1e-10, "did not converge to the known solution");
     println!("OK");
+    Ok(())
 }

@@ -21,7 +21,8 @@ fn main() {
         "app", "n", "K_max model", "K peak sim", "a(peak) model", "a(peak) sim", "ratio",
     ]);
 
-    let mut add = |app: &str, n: usize, s: bsf::bench::sweep::Sweep| {
+    let mut add = |app: &str, n: usize, s: Result<bsf::bench::sweep::Sweep, bsf::BsfError>| {
+        let s = s.expect("sweep");
         let peak_row = s.rows.iter().find(|r| r.k == s.k_peak_sim).unwrap();
         let ratio = if s.k_max_model.is_finite() && s.k_max_model > 0.0 {
             s.k_peak_sim as f64 / s.k_max_model

@@ -12,8 +12,8 @@ use std::sync::Arc;
 
 use bsf::bench::{bench, fmt_secs, Table};
 use bsf::problems::gravity::GravityProblem;
-use bsf::problems::jacobi::{JacobiProblem, MapBackend};
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::skeleton::{Bsf, BsfConfig, PerElementBackend};
 
 fn main() {
     let iters = 4;
@@ -27,7 +27,11 @@ fn main() {
     for threads in [1usize, 2, 4, 8] {
         let r = bench(format!("grav omp{threads}"), 1, 3, || {
             let cfg = BsfConfig::with_workers(2).openmp(threads).max_iter(iters);
-            let _ = run_threaded(Arc::clone(&grav), &cfg);
+            let _ = Bsf::from_arc(Arc::clone(&grav))
+                .config(cfg)
+                .map_backend(PerElementBackend)
+                .run()
+                .expect("gravity run");
         });
         let per_iter = r.median_secs / iters as f64;
         let b = *base.get_or_insert(per_iter);
@@ -41,14 +45,17 @@ fn main() {
     t.print();
 
     // Allocation-heavy map: jacobi per-element (adversarial case).
-    let (p, _) = JacobiProblem::random(1536, 1e-30, 7);
-    let jac = Arc::new(p.with_backend(MapBackend::PerElement));
+    let jac = Arc::new(JacobiProblem::random(1536, 1e-30, 7).0);
     let mut t = Table::new(&["omp threads", "wall/iter", "speedup vs 1"]);
     let mut base = None;
     for threads in [1usize, 2, 4, 8] {
         let r = bench(format!("jac omp{threads}"), 1, 3, || {
             let cfg = BsfConfig::with_workers(2).openmp(threads).max_iter(iters);
-            let _ = run_threaded(Arc::clone(&jac), &cfg);
+            let _ = Bsf::from_arc(Arc::clone(&jac))
+                .config(cfg)
+                .map_backend(PerElementBackend)
+                .run()
+                .expect("jacobi run");
         });
         let per_iter = r.median_secs / iters as f64;
         let b = *base.get_or_insert(per_iter);

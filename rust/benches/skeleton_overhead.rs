@@ -1,18 +1,18 @@
 //! E7 — skeleton overhead: the paper claims the skeleton "completely
 //! encapsulates all aspects associated with parallelizing a program";
 //! the implicit cost claim is that the encapsulation is cheap. Compare a
-//! hand-rolled sequential Jacobi loop against the skeleton with K=1
-//! (same arithmetic plus all skeleton machinery: transport, codec,
-//! extended reduce, phase timers) and against the simulated cluster at
-//! K=1. Workload generation happens once, outside every timed region.
+//! hand-rolled sequential Jacobi loop against the session API's three
+//! engines at K=1: the serial fast path (no transport), the threaded
+//! engine (full transport + codec + extended reduce + phase timers) and
+//! the simulated cluster. Workload generation happens once, outside
+//! every timed region.
 
 use std::sync::Arc;
 
 use bsf::bench::{bench, fmt_secs, Table};
 use bsf::costmodel::ClusterProfile;
 use bsf::problems::jacobi::JacobiProblem;
-use bsf::simcluster::{run_simulated, SimConfig};
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::skeleton::{Bsf, BsfConfig, SerialEngine, SimulatedEngine, ThreadedEngine};
 use bsf::util::mat::{gen_diag_dominant, jacobi_cd, Mat};
 
 /// Hand-rolled sequential Jacobi iterations (what a user would write
@@ -46,44 +46,55 @@ fn main() {
     let (c, d) = jacobi_cd(&a, &b);
     let ct = c.transpose();
     let problem = Arc::new(JacobiProblem::from_system(&a, &b, 1e-30));
+    let cfg = || BsfConfig::with_workers(1).max_iter(iters);
 
     let hr = bench("handrolled", 1, 5, || {
         std::hint::black_box(handrolled(&ct, &d, iters));
     });
 
-    let sk = bench("skeleton K=1", 1, 5, || {
-        let _ = run_threaded(
-            Arc::clone(&problem),
-            &BsfConfig::with_workers(1).max_iter(iters),
-        );
+    let serial = bench("serial K=1", 1, 5, || {
+        let _ = Bsf::from_arc(Arc::clone(&problem))
+            .config(cfg())
+            .engine(SerialEngine)
+            .run()
+            .expect("serial run");
+    });
+
+    let threaded = bench("threaded K=1", 1, 5, || {
+        let _ = Bsf::from_arc(Arc::clone(&problem))
+            .config(cfg())
+            .engine(ThreadedEngine)
+            .run()
+            .expect("threaded run");
     });
 
     let sim = bench("simcluster K=1", 1, 5, || {
-        let _ = run_simulated(
-            &*problem,
-            &BsfConfig::with_workers(1).max_iter(iters),
-            &SimConfig::new(ClusterProfile::infiniband()),
-        );
+        let _ = Bsf::from_arc(Arc::clone(&problem))
+            .config(cfg())
+            .engine(SimulatedEngine::new(ClusterProfile::infiniband()))
+            .run()
+            .expect("simulated run");
     });
 
-    let hr_iter = hr.median_secs / iters as f64;
-    let sk_iter = sk.median_secs / iters as f64;
-    let sim_iter = sim.median_secs / iters as f64;
+    let per_iter = |r: &bsf::bench::BenchResult| r.median_secs / iters as f64;
+    let hr_iter = per_iter(&hr);
 
     let mut t = Table::new(&["variant", "per-iter", "overhead vs handrolled"]);
     t.row(&["handrolled".into(), fmt_secs(hr_iter), "-".into()]);
-    t.row(&[
-        "skeleton K=1".into(),
-        fmt_secs(sk_iter),
-        format!("{:+.1}%", (sk_iter / hr_iter - 1.0) * 100.0),
-    ]);
-    t.row(&[
-        "simcluster K=1 (real secs)".into(),
-        fmt_secs(sim_iter),
-        format!("{:+.1}%", (sim_iter / hr_iter - 1.0) * 100.0),
-    ]);
+    for (name, r) in [
+        ("serial engine K=1", &serial),
+        ("threaded engine K=1", &threaded),
+        ("simcluster K=1 (real secs)", &sim),
+    ] {
+        t.row(&[
+            name.into(),
+            fmt_secs(per_iter(r)),
+            format!("{:+.1}%", (per_iter(r) / hr_iter - 1.0) * 100.0),
+        ]);
+    }
     println!("E7 — skeleton overhead (jacobi n={n}, {iters} iters/run)");
     t.print();
-    println!("\nskeleton overhead = transport + codec (one {n}-vector each way)");
-    println!("+ extended-reduce bookkeeping per iteration, at K=1.");
+    println!("\nthreaded overhead = transport + codec (one {n}-vector each way)");
+    println!("+ extended-reduce bookkeeping per iteration; the serial engine");
+    println!("shows the session API's K=1 fast path skipping all of it.");
 }

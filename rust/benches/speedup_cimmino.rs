@@ -14,7 +14,8 @@ fn main() {
             &ks,
             ClusterProfile::infiniband(),
             5,
-        );
+        )
+        .expect("sweep");
         print_sweep(&format!("E4 cimmino {n}x{n}, infiniband"), &s);
     }
 }

@@ -19,7 +19,8 @@ fn main() {
                 &ks,
                 profile,
                 3,
-            );
+            )
+            .expect("sweep");
             print_sweep(&format!("E3 gravity N={n}, {pname}"), &s);
         }
     }

@@ -19,7 +19,8 @@ fn main() {
                 &ks,
                 profile,
                 5,
-            );
+            )
+            .expect("sweep");
             print_sweep(&format!("E1 jacobi n={n}, {pname}"), &s);
         }
     }

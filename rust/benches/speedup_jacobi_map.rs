@@ -14,7 +14,8 @@ fn main() {
             &ks,
             ClusterProfile::infiniband(),
             5,
-        );
+        )
+        .expect("sweep");
         print_sweep(&format!("E2 jacobi-map n={n}, infiniband"), &s);
     }
 }

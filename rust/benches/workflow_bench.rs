@@ -8,7 +8,7 @@ use std::sync::Arc;
 use bsf::bench::{bench, fmt_secs, Table};
 use bsf::problems::apex::ApexProblem;
 use bsf::problems::lpp::LppProblem;
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::skeleton::{Bsf, BsfConfig};
 
 fn main() {
     let m = 256;
@@ -20,20 +20,20 @@ fn main() {
     let p_apex = Arc::new(ApexProblem::random(m, n, 9));
     let mut apex_iters = 0usize;
     let apex = bench("apex 3-job", 1, 5, || {
-        let r = run_threaded(
-            Arc::clone(&p_apex),
-            &BsfConfig::with_workers(k).max_iter(200_000),
-        );
+        let r = Bsf::from_arc(Arc::clone(&p_apex))
+            .config(BsfConfig::with_workers(k).max_iter(200_000))
+            .run()
+            .expect("apex run");
         apex_iters = r.iterations;
     });
 
     let p_lpp = Arc::new(LppProblem::random(m, n, 9));
     let mut lpp_iters = 0usize;
     let lpp = bench("lpp 1-job", 1, 5, || {
-        let r = run_threaded(
-            Arc::clone(&p_lpp),
-            &BsfConfig::with_workers(k).max_iter(200_000),
-        );
+        let r = Bsf::from_arc(Arc::clone(&p_lpp))
+            .config(BsfConfig::with_workers(k).max_iter(200_000))
+            .run()
+            .expect("lpp run");
         lpp_iters = r.iterations;
     });
 

@@ -1,10 +1,15 @@
 //! Shared speedup-sweep driver used by the bench binaries and the CLI:
 //! calibrate → predict the BSF-model curve → measure the simulated-cluster
 //! curve → report both (the paper family's standard figure).
+//!
+//! Runs through the unified session API (`Bsf` + `SimulatedEngine`), so
+//! sweeps exercise exactly the engine code real callers use and report
+//! typed errors instead of panicking.
 
 use crate::costmodel::{calibrate, Calibration, ClusterProfile};
-use crate::simcluster::{run_simulated, SimConfig};
-use crate::skeleton::{BsfConfig, BsfProblem};
+use crate::error::BsfError;
+use crate::simcluster::SimConfig;
+use crate::skeleton::{Bsf, BsfConfig, BsfProblem, SimulatedEngine};
 
 /// One K point of a speedup sweep.
 #[derive(Debug, Clone, Copy)]
@@ -36,16 +41,17 @@ pub fn speedup_sweep<P: BsfProblem>(
     ks: &[usize],
     profile: ClusterProfile,
     max_iter: usize,
-) -> Sweep {
+) -> Result<Sweep, BsfError> {
     let calibration = calibrate(&mk(), profile, 3);
     let model = calibration.params;
     let mut rows = Vec::with_capacity(ks.len());
     let mut t1_sim = None;
     for &k in ks {
-        let cfg = BsfConfig::with_workers(k).max_iter(max_iter);
-        let sim = SimConfig::new(profile);
-        let r = run_simulated(&mk(), &cfg, &sim);
-        let t_sim = r.virtual_seconds / r.iterations as f64;
+        let r = Bsf::new(mk())
+            .config(BsfConfig::with_workers(k).max_iter(max_iter))
+            .engine(SimulatedEngine::with_config(SimConfig::new(profile)))
+            .run()?;
+        let t_sim = r.elapsed / r.iterations as f64;
         let t1 = *t1_sim.get_or_insert(t_sim);
         rows.push(SweepRow {
             k,
@@ -57,10 +63,10 @@ pub fn speedup_sweep<P: BsfProblem>(
     }
     let k_peak_sim = rows
         .iter()
-        .max_by(|a, b| a.a_sim.partial_cmp(&b.a_sim).unwrap())
+        .max_by(|a, b| a.a_sim.total_cmp(&b.a_sim))
         .map(|r| r.k)
         .unwrap_or(1);
-    Sweep { calibration, rows, k_max_model: model.k_max(), k_peak_sim }
+    Ok(Sweep { calibration, rows, k_max_model: model.k_max(), k_peak_sim })
 }
 
 /// Print a sweep as the standard table.
@@ -102,7 +108,8 @@ mod tests {
             &[1, 2, 4],
             ClusterProfile::infiniband(),
             5,
-        );
+        )
+        .unwrap();
         assert_eq!(s.rows.len(), 3);
         assert!((s.rows[0].a_sim - 1.0).abs() < 1e-9);
         assert!((s.rows[0].a_model - 1.0).abs() < 1e-9);

@@ -4,7 +4,8 @@
 //!
 //! What is measured vs. taken from the cluster profile:
 //! * `t_map` (+ fused local reduce) — timed by running the worker map
-//!   over the whole list once (exactly what a K=1 worker does);
+//!   over the whole list once (exactly what a K=1 worker does), through
+//!   the same [`MapBackend`] the real run will use;
 //! * `t_op` — timed by folding two representative partial folds;
 //! * `t_proc` — timed by running `process_results` on a scratch param;
 //! * payload sizes — taken from the actual `Codec` encodings;
@@ -14,7 +15,9 @@
 use std::time::Instant;
 
 use crate::costmodel::{ClusterProfile, CostParams};
+use crate::skeleton::backend::{FusedNativeBackend, MapBackend};
 use crate::skeleton::problem::{BsfProblem, IterCtx};
+use crate::skeleton::variables::SkelVars;
 use crate::skeleton::worker::map_and_fold;
 use crate::util::codec::Codec;
 
@@ -30,11 +33,24 @@ pub struct Calibration {
     pub t_map_per_elem: f64,
 }
 
-/// Measure `problem`'s cost parameters, assuming the interconnect in
-/// `profile`. `reps` repeats the map measurement and keeps the minimum
-/// (standard noise suppression for micro-measurements).
+/// Measure `problem`'s cost parameters with the default fused-native
+/// map backend (see [`calibrate_with_backend`]).
 pub fn calibrate<P: BsfProblem>(
     problem: &P,
+    profile: ClusterProfile,
+    reps: usize,
+) -> Calibration {
+    calibrate_with_backend(problem, &FusedNativeBackend, profile, reps)
+}
+
+/// Measure `problem`'s cost parameters, assuming the interconnect in
+/// `profile` and mapping through `backend` (so an XLA-backed run can be
+/// predicted with XLA-backed timings). `reps` repeats the map
+/// measurement and keeps the minimum (standard noise suppression for
+/// micro-measurements).
+pub fn calibrate_with_backend<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
     profile: ClusterProfile,
     reps: usize,
 ) -> Calibration {
@@ -43,15 +59,20 @@ pub fn calibrate<P: BsfProblem>(
     let elems: Vec<P::MapElem> = (0..n).map(|i| problem.map_list_elem(i)).collect();
 
     // t_map: whole-list map + local fold, as a K=1 worker would run it.
+    let vars = SkelVars::for_worker(0, 1, 0, n, 0, 0);
     let mut t_map = f64::INFINITY;
     let mut fold = None;
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        let f = map_and_fold(problem, &elems, &param, 0, 1, 0, 0, 0, 1);
+        let f = map_and_fold(problem, backend, &elems, &param, vars, 1);
         t_map = t_map.min(t0.elapsed().as_secs_f64());
         fold = Some(f);
     }
-    let fold = fold.expect("at least one rep");
+    let fold = match fold {
+        Some(f) => f,
+        // Unreachable (reps.max(1) >= 1); an empty fold keeps this total.
+        None => crate::skeleton::reduce::ExtendedFold::empty(),
+    };
 
     // t_op: one ⊕ of two representative partial folds.
     let t_op = match &fold.value {

@@ -21,7 +21,7 @@
 
 pub mod calibrate;
 
-pub use calibrate::{calibrate, Calibration};
+pub use calibrate::{calibrate, calibrate_with_backend, Calibration};
 
 /// Cluster interconnect profile (latency + inverse bandwidth).
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,0 +1,133 @@
+//! Typed errors for the whole skeleton (`BsfError`).
+//!
+//! The seed port failed by `panic!`/`expect` everywhere; every public
+//! entry point now returns `Result<_, BsfError>` instead, so embedders
+//! can react to a mis-configured run, a torn transport or a missing AOT
+//! artifact without aborting the process. The enum is written in the
+//! `thiserror` style by hand — the offline dependency universe has no
+//! proc-macro crates (see Cargo.toml).
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Everything that can go wrong inside the BSF skeleton.
+#[derive(Debug)]
+pub enum BsfError {
+    /// Invalid run configuration or problem wiring (zero workers, a
+    /// `job_count` outside `1..=MAX_JOBS`, an empty map-list, a
+    /// `next_job` out of range, ...).
+    Config(String),
+    /// The message-passing substrate failed (endpoint hung up, rank out
+    /// of range, poisoned inbox).
+    Transport(String),
+    /// A worker thread panicked inside user map/reduce code.
+    WorkerPanic {
+        /// Rank of the worker whose thread died.
+        rank: usize,
+    },
+    /// Artifact registry problems: malformed `manifest.tsv`, unknown
+    /// artifact name, output-shape mismatch.
+    Artifact(String),
+    /// A PJRT/XLA operation failed (compile, execute, reshape).
+    Xla(String),
+    /// No PJRT backend is linked into this build (see `runtime::pjrt`).
+    XlaUnavailable(String),
+    /// Filesystem error while reading artifacts.
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    /// CLI usage error (unknown subcommand/option, unparsable value).
+    Usage(String),
+}
+
+impl BsfError {
+    /// Shorthand constructors keep call sites one line long.
+    pub fn config(msg: impl Into<String>) -> Self {
+        BsfError::Config(msg.into())
+    }
+
+    pub fn transport(msg: impl Into<String>) -> Self {
+        BsfError::Transport(msg.into())
+    }
+
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        BsfError::Artifact(msg.into())
+    }
+
+    pub fn xla(msg: impl Into<String>) -> Self {
+        BsfError::Xla(msg.into())
+    }
+
+    pub fn usage(msg: impl Into<String>) -> Self {
+        BsfError::Usage(msg.into())
+    }
+
+    /// Conventional process exit code for this error (CLI use).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            BsfError::Usage(_) => 2,
+            _ => 1,
+        }
+    }
+}
+
+impl fmt::Display for BsfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BsfError::Config(msg) => write!(f, "configuration error: {msg}"),
+            BsfError::Transport(msg) => write!(f, "transport error: {msg}"),
+            BsfError::WorkerPanic { rank } => {
+                write!(f, "worker {rank} panicked in user map/reduce code")
+            }
+            BsfError::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            BsfError::Xla(msg) => write!(f, "xla error: {msg}"),
+            BsfError::XlaUnavailable(msg) => write!(f, "xla unavailable: {msg}"),
+            BsfError::Io { path, source } => {
+                write!(f, "io error at {}: {source}", path.display())
+            }
+            BsfError::Usage(msg) => write!(f, "usage error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for BsfError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BsfError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Crate-wide result alias.
+pub type BsfResult<T> = std::result::Result<T, BsfError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_context() {
+        let e = BsfError::config("need at least one worker");
+        assert!(e.to_string().contains("configuration error"));
+        assert!(e.to_string().contains("one worker"));
+    }
+
+    #[test]
+    fn io_error_has_source() {
+        use std::error::Error;
+        let e = BsfError::Io {
+            path: PathBuf::from("/nope/manifest.tsv"),
+            source: std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        };
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("manifest.tsv"));
+    }
+
+    #[test]
+    fn usage_errors_exit_2() {
+        assert_eq!(BsfError::usage("bad flag").exit_code(), 2);
+        assert_eq!(BsfError::config("x").exit_code(), 1);
+    }
+}

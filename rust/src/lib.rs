@@ -6,13 +6,46 @@
 //! Map/Reduce over lists, together with the BSF analytic cost model that
 //! predicts an algorithm's **scalability boundary before implementation**.
 //!
+//! ## The session API
+//!
+//! Everything runs through one entry point, the [`Bsf`] session builder:
+//!
+//! ```no_run
+//! use bsf::problems::jacobi::JacobiProblem;
+//! use bsf::{Bsf, BsfConfig};
+//!
+//! let (problem, _) = JacobiProblem::random(1024, 1e-12, 7);
+//! let report = Bsf::new(problem)
+//!     .config(BsfConfig::with_workers(8))
+//!     .run()?;
+//! println!("{} in {} iterations", report.summary(), report.iterations);
+//! # Ok::<(), bsf::BsfError>(())
+//! ```
+//!
+//! A session owns three pluggable pieces:
+//!
+//! * an **engine** ([`skeleton::Engine`]) — [`skeleton::ThreadedEngine`]
+//!   (real worker threads), [`skeleton::SerialEngine`] (the K=1 fast
+//!   path) or [`skeleton::SimulatedEngine`] (the virtual-time cluster,
+//!   for scalability curves far beyond physical cores);
+//! * a **map backend** ([`skeleton::MapBackend`]) —
+//!   [`skeleton::PerElementBackend`], [`skeleton::FusedNativeBackend`]
+//!   (default) or the problem-agnostic
+//!   [`runtime::backend::XlaMapBackend`], which resolves AOT-compiled
+//!   XLA artifacts from the manifest registry by `ArtifactMeta.kind` and
+//!   falls back to the native map when nothing fits;
+//! * a [`BsfConfig`] (the paper's `PP_BSF_*` parameters).
+//!
+//! Every entry point returns `Result<_, `[`BsfError`]`>` — no panics on
+//! the run paths.
+//!
 //! ## Layers
 //!
 //! * [`skeleton`] — the skeleton itself: the [`skeleton::BsfProblem`]
 //!   customization trait (the paper's `PC_bsf_*` API), the master and
 //!   worker loops (the paper's Algorithm 2), the extended reduce-list,
-//!   workflow (multi-job) support and the OpenMP-analog intra-worker
-//!   parallel map.
+//!   workflow (multi-job) support, the OpenMP-analog intra-worker
+//!   parallel map, and the session/engine/backend layer described above.
 //! * [`transport`] — an MPI-like message-passing substrate over OS
 //!   threads (the cluster-interconnect substitution; see DESIGN.md §2).
 //! * [`simcluster`] — a virtual-time cluster simulator that scales the
@@ -20,9 +53,11 @@
 //!   speedup curves.
 //! * [`costmodel`] — the BSF analytic model: iteration time `T(K)`,
 //!   speedup `a(K)` and the scalability boundary `K_max`.
-//! * [`runtime`] — the PJRT/XLA runtime that loads the AOT artifacts
-//!   produced by `python/compile/aot.py` (L2 JAX + L1 Pallas) and runs
-//!   them inside worker map functions.
+//! * [`runtime`] — the artifact registry + PJRT service that loads the
+//!   AOT artifacts produced by `python/compile/aot.py` (L2 JAX + L1
+//!   Pallas). The device binding sits behind the [`runtime::pjrt`] seam;
+//!   offline builds carry a no-backend substitute there.
+//! * [`error`] — the [`BsfError`] type every layer reports through.
 //! * [`problems`] — the paper's demo applications implemented on the
 //!   skeleton: Jacobi (Algorithm 3), Jacobi-Map (Algorithm 4), Cimmino,
 //!   gravity N-body, Monte-Carlo, LPP feasibility and the Apex-style
@@ -30,9 +65,14 @@
 //! * [`bench`], [`metrics`], [`util`] — in-tree bench harness, phase
 //!   timers and support code (the offline build has no criterion/clap/
 //!   proptest; see Cargo.toml).
+//!
+//! See README.md for the migration table from the seed-era entry points
+//! (`run_threaded` / `run_simulated` / `bench::sweep`) to the session
+//! API.
 
 pub mod bench;
 pub mod costmodel;
+pub mod error;
 pub mod metrics;
 pub mod problems;
 pub mod runtime;
@@ -41,4 +81,9 @@ pub mod skeleton;
 pub mod transport;
 pub mod util;
 
-pub use skeleton::{BsfConfig, BsfProblem, RunReport};
+pub use error::{BsfError, BsfResult};
+pub use skeleton::{
+    Bsf, BsfConfig, BsfProblem, Clock, Engine, FusedNativeBackend, MapBackend,
+    PerElementBackend, PhaseBreakdown, RunReport, SerialEngine, SimulatedEngine,
+    ThreadedEngine,
+};

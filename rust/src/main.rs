@@ -1,8 +1,12 @@
-//! `bsf` — CLI launcher for the BSF-skeleton reproduction.
+//! `bsf` — CLI launcher for the BSF-skeleton reproduction, built on the
+//! unified `Bsf` session API.
 //!
-//! Subcommands:
-//! * `run <problem>`     — solve on the threaded skeleton (real workers)
-//! * `sim <problem>`     — solve on the simulated cluster (virtual time)
+//! Subcommands (clap-style; the offline universe has no clap, so
+//! `util::cli::ArgMap` supplies the typed option layer):
+//!
+//! * `run <problem>`     — solve via the session API; `--engine`
+//!                          auto|serial|threaded|sim picks the engine
+//! * `sim <problem>`     — shorthand for `run --engine sim` (virtual time)
 //! * `sweep <problem>`   — speedup curve over K: model vs simulation
 //! * `predict <problem>` — calibrate + print the BSF model parameters and
 //!                          the predicted scalability boundary
@@ -10,245 +14,338 @@
 //!
 //! Problems: `jacobi`, `jacobi-map`, `cimmino`, `gravity`, `montecarlo`,
 //! `lpp`, `apex`. Common options: `--n`, `--k`, `--omp`, `--seed`,
-//! `--eps`, `--profile infiniband|gigabit`, `--backend native|xla`.
+//! `--eps`, `--profile infiniband|gigabit|ideal`,
+//! `--backend native|per-element|xla`.
+//!
+//! Every failure path is a typed `BsfError`: usage errors exit 2 with
+//! help, runtime errors exit 1 — no panics. `--backend xla` degrades to
+//! the native map with a warning when the service or artifacts are
+//! missing.
 
-use std::sync::Arc;
-
+use bsf::bench::sweep::{print_sweep, speedup_sweep};
 use bsf::costmodel::{calibrate, ClusterProfile};
+use bsf::error::BsfError;
+use bsf::problems::apex::ApexProblem;
 use bsf::problems::cimmino::CimminoProblem;
 use bsf::problems::gravity::GravityProblem;
-use bsf::problems::jacobi::{JacobiProblem, MapBackend};
+use bsf::problems::jacobi::JacobiProblem;
 use bsf::problems::jacobi_map::JacobiMapProblem;
 use bsf::problems::lpp::LppProblem;
 use bsf::problems::montecarlo::MonteCarloProblem;
-use bsf::problems::apex::ApexProblem;
+use bsf::runtime::backend::{XlaMapBackend, XlaMapSpec};
 use bsf::runtime::service::XlaService;
 use bsf::runtime::XlaRuntime;
-use bsf::simcluster::{run_simulated, SimConfig};
-use bsf::skeleton::{run_threaded, BsfConfig, BsfProblem};
-use bsf::util::cli::Args;
+use bsf::skeleton::{
+    Bsf, BsfConfig, BsfProblem, PerElementBackend, RunReport, SerialEngine,
+    SimulatedEngine, ThreadedEngine,
+};
+use bsf::util::cli::ArgMap;
 
-fn profile_from(args: &Args) -> ClusterProfile {
-    match args.get_str("profile", "infiniband") {
-        "infiniband" => ClusterProfile::infiniband(),
-        "gigabit" => ClusterProfile::gigabit(),
-        "ideal" => ClusterProfile::ideal(),
-        other => panic!("unknown --profile {other}"),
+const USAGE: &str = "\
+usage: bsf <run|sim|sweep|predict|artifacts> [problem] [options]
+
+problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | lpp | apex
+
+options by subcommand:
+  run / sim:
+    --n N          problem size (default 256)
+    --k K          number of workers (default 4)
+    --omp T        intra-worker map threads (default 1)
+    --seed S       RNG seed (default 7)
+    --eps E        stop threshold (default 1e-12)
+    --trace T      print intermediate results every T iterations
+    --max-iter I   iteration cap (default 100000)
+    --engine E     auto | serial | threaded | sim   (run only)
+    --backend B    native | per-element | xla
+    --profile P    infiniband | gigabit | ideal    (sim)
+    --steps S      leapfrog steps (gravity; default 50)
+    --samples S    samples per block (montecarlo; default 10000)
+  sweep:
+    --n N (default 512)  --k 1,2,4,...  --seed S  --profile P
+    --max-iter I (default 30)  --steps S (gravity; default: max-iter)
+    --samples S (montecarlo)
+  predict:
+    --n N (default 512)  --seed S  --profile P
+    --steps S (gravity; default 10)  --samples S (montecarlo)";
+
+/// Options shared by run/sim.
+struct Common {
+    n: usize,
+    seed: u64,
+    eps: f64,
+    steps: usize,
+    samples: usize,
+    cfg: BsfConfig,
+}
+
+#[derive(Clone, Copy)]
+enum EngineOpt {
+    Auto,
+    Serial,
+    Threaded,
+    Simulated(ClusterProfile),
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum BackendOpt {
+    FusedNative,
+    PerElement,
+    Xla,
+}
+
+fn profile_from(args: &ArgMap) -> Result<ClusterProfile, BsfError> {
+    match args.str_or("profile", "infiniband") {
+        "infiniband" => Ok(ClusterProfile::infiniband()),
+        "gigabit" => Ok(ClusterProfile::gigabit()),
+        "ideal" => Ok(ClusterProfile::ideal()),
+        other => Err(BsfError::usage(format!(
+            "unknown --profile {other:?} (infiniband|gigabit|ideal)"
+        ))),
     }
 }
 
-fn config_from(args: &Args) -> BsfConfig {
-    BsfConfig::with_workers(args.get_usize("k", 4))
-        .openmp(args.get_usize("omp", 1))
-        .trace(args.get_usize("trace", 0))
-        .max_iter(args.get_usize("max-iter", 100_000))
+fn engine_from(args: &ArgMap) -> Result<EngineOpt, BsfError> {
+    match args.str_or("engine", "auto") {
+        "auto" => Ok(EngineOpt::Auto),
+        "serial" => Ok(EngineOpt::Serial),
+        "threaded" => Ok(EngineOpt::Threaded),
+        "sim" | "simulated" => Ok(EngineOpt::Simulated(profile_from(args)?)),
+        other => Err(BsfError::usage(format!(
+            "unknown --engine {other:?} (auto|serial|threaded|sim)"
+        ))),
+    }
 }
 
-/// Run one problem generically and print the standard summary.
-fn run_and_report<P: BsfProblem>(problem: Arc<P>, cfg: &BsfConfig, describe: impl Fn(&P::Param) -> String) {
-    let r = run_threaded(problem, cfg);
-    println!(
-        "done: iterations={} elapsed={:.6}s msgs={} bytes={}",
-        r.iterations, r.elapsed, r.messages, r.bytes
-    );
-    println!("phases: {}", r.timers.summary());
-    println!("result: {}", describe(&r.param));
+fn backend_from(args: &ArgMap) -> Result<BackendOpt, BsfError> {
+    match args.str_or("backend", "native") {
+        "native" | "fused" => Ok(BackendOpt::FusedNative),
+        "per-element" => Ok(BackendOpt::PerElement),
+        "xla" => Ok(BackendOpt::Xla),
+        other => Err(BsfError::usage(format!(
+            "unknown --backend {other:?} (native|per-element|xla)"
+        ))),
+    }
 }
 
-fn sim_and_report<P: BsfProblem>(
-    problem: &P,
-    cfg: &BsfConfig,
-    sim: &SimConfig,
-    describe: impl Fn(&P::Param) -> String,
-) {
-    let r = run_simulated(problem, cfg, sim);
-    println!(
-        "done: iterations={} virtual={:.6}s real={:.3}s msgs={} bytes={}",
-        r.iterations, r.virtual_seconds, r.real_seconds, r.messages, r.bytes
-    );
-    let b = r.breakdown;
-    println!(
-        "per-iter virtual: send={:.2e}s compute+gather={:.2e}s reduce={:.2e}s process+exit={:.2e}s",
-        b.send, b.compute_and_gather, b.master_reduce, b.process_and_exit
-    );
-    println!("result: {}", describe(&r.param));
+fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
+    let cfg = BsfConfig::with_workers(args.usize_or("k", 4)?)
+        .openmp(args.usize_or("omp", 1)?)
+        .trace(args.usize_or("trace", 0)?)
+        .max_iter(args.usize_or("max-iter", 100_000)?);
+    Ok(Common {
+        n: args.usize_or("n", 256)?,
+        seed: args.u64_or("seed", 7)?,
+        eps: args.f64_or("eps", 1e-12)?,
+        steps: args.usize_or("steps", 50)?,
+        samples: args.usize_or("samples", 10_000)?,
+        cfg,
+    })
+}
+
+fn apply_engine<P: BsfProblem>(b: Bsf<P>, engine: EngineOpt) -> Bsf<P> {
+    match engine {
+        EngineOpt::Auto => b,
+        EngineOpt::Serial => b.engine(SerialEngine),
+        EngineOpt::Threaded => b.engine(ThreadedEngine),
+        EngineOpt::Simulated(profile) => b.engine(SimulatedEngine::new(profile)),
+    }
+}
+
+/// Start the XLA service, or warn and fall back to the native map
+/// (missing artifacts or a backend-less build must degrade, not panic).
+fn start_xla_or_warn() -> Option<XlaService> {
+    if !XlaRuntime::backend_available() {
+        eprintln!(
+            "bsf: warning: no PJRT backend linked into this build \
+             (see runtime::pjrt); falling back to the native map"
+        );
+        return None;
+    }
+    match XlaService::start_default() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!(
+                "bsf: warning: XLA backend unavailable ({e}); \
+                 falling back to the native map"
+            );
+            None
+        }
+    }
+}
+
+/// Attach the chosen backend to a session over an XLA-capable problem.
+fn attach_xla_capable<P: XlaMapSpec>(
+    b: Bsf<P>,
+    backend: BackendOpt,
+    service: &Option<XlaService>,
+) -> Bsf<P> {
+    match backend {
+        BackendOpt::FusedNative => b,
+        BackendOpt::PerElement => b.map_backend(PerElementBackend),
+        BackendOpt::Xla => match service {
+            Some(s) => b.map_backend(XlaMapBackend::new(s.handle())),
+            None => b, // warning already printed by start_xla_or_warn
+        },
+    }
+}
+
+/// Attach the chosen backend to a session over a problem without AOT
+/// artifacts (xla degrades to native with a note).
+fn attach_native_only<P: BsfProblem>(b: Bsf<P>, backend: BackendOpt, name: &str) -> Bsf<P> {
+    match backend {
+        BackendOpt::FusedNative => b,
+        BackendOpt::PerElement => b.map_backend(PerElementBackend),
+        BackendOpt::Xla => {
+            eprintln!(
+                "bsf: warning: {name} has no AOT artifacts; using the native map"
+            );
+            b
+        }
+    }
 }
 
 fn head(xs: &[f64]) -> String {
     let k = xs.len().min(4);
     let parts: Vec<String> = xs[..k].iter().map(|v| format!("{v:.6}")).collect();
-    format!("[{}{}] (n={})", parts.join(", "), if xs.len() > k { ", ..." } else { "" }, xs.len())
+    format!(
+        "[{}{}] (n={})",
+        parts.join(", "),
+        if xs.len() > k { ", ..." } else { "" },
+        xs.len()
+    )
 }
 
-fn cmd_run(args: &Args) {
-    let cfg = config_from(args);
-    let n = args.get_usize("n", 256);
-    let seed = args.get_u64("seed", 7);
-    let eps = args.get_f64("eps", 1e-12);
-    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
-    let use_xla = args.get_str("backend", "native") == "xla";
-    let service = if use_xla {
-        Some(XlaService::start_default().expect("start XLA service (make artifacts?)"))
+fn finish<Param>(
+    r: RunReport<Param>,
+    describe: impl Fn(&Param) -> String,
+) -> Result<(), BsfError> {
+    println!("done: {}", r.summary());
+    println!("phases: {}", r.phases.summary());
+    println!("result: {}", describe(&r.param));
+    Ok(())
+}
+
+const RUN_OPTS: &[&str] = &[
+    "n", "k", "omp", "seed", "eps", "trace", "max-iter", "engine", "backend",
+    "profile", "steps", "samples",
+];
+
+fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
+    args.ensure_known(RUN_OPTS)?;
+    let c = common_from(args)?;
+    let backend = backend_from(args)?;
+    // One service outlives the whole run (worker handles clone from it).
+    let service = if backend == BackendOpt::Xla {
+        start_xla_or_warn()
     } else {
         None
     };
+    let name = args.positional(0).unwrap_or("jacobi");
     match name {
         "jacobi" => {
-            let (p, _) = JacobiProblem::random(n, eps, seed);
-            let p = match &service {
-                Some(s) => p.with_backend(MapBackend::Xla(s.handle())),
-                None => p,
-            };
-            run_and_report(Arc::new(p), &cfg, |x| head(x));
+            let (p, _) = JacobiProblem::random(c.n, c.eps, c.seed);
+            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = attach_xla_capable(b, backend, &service);
+            finish(b.run()?, |x| head(x))
         }
         "jacobi-map" => {
-            let (p, _) = JacobiMapProblem::random(n, eps, seed);
-            let p = match &service {
-                Some(s) => p.with_backend(
-                    bsf::problems::jacobi_map::MapMapBackend::Xla(s.handle()),
-                ),
-                None => p,
-            };
-            run_and_report(Arc::new(p), &cfg, |x| head(x));
+            let (p, _) = JacobiMapProblem::random(c.n, c.eps, c.seed);
+            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = attach_xla_capable(b, backend, &service);
+            finish(b.run()?, |x| head(x))
         }
         "cimmino" => {
-            let (p, _) = CimminoProblem::random(n, n, eps, seed);
-            let p = match &service {
-                Some(s) => p.with_backend(
-                    bsf::problems::cimmino::CimminoBackend::Xla(s.handle()),
-                ),
-                None => p,
-            };
-            run_and_report(Arc::new(p), &cfg, |x| head(x));
+            let (p, _) = CimminoProblem::random(c.n, c.n, c.eps, c.seed);
+            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = attach_xla_capable(b, backend, &service);
+            finish(b.run()?, |x| head(x))
         }
         "gravity" => {
-            let steps = args.get_usize("steps", 50);
-            let p = GravityProblem::random(n, 1e-3, steps, seed);
-            let p = match &service {
-                Some(s) => p.with_backend(
-                    bsf::problems::gravity::GravityBackend::Xla(s.handle()),
-                ),
-                None => p,
-            };
-            run_and_report(Arc::new(p), &cfg, |x| head(x));
+            let p = GravityProblem::random(c.n, 1e-3, c.steps, c.seed);
+            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = attach_xla_capable(b, backend, &service);
+            finish(b.run()?, |x| head(x))
         }
         "montecarlo" => {
-            let p = MonteCarloProblem::new(n, args.get_usize("samples", 10_000), 1e-3);
-            run_and_report(Arc::new(p), &cfg, |t| {
+            let p = MonteCarloProblem::new(c.n, c.samples, 1e-3);
+            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = attach_native_only(b, backend, "montecarlo");
+            finish(b.run()?, |t| {
                 format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1)
-            });
+            })
         }
         "lpp" => {
-            let p = LppProblem::random(4 * n, n, seed);
-            run_and_report(Arc::new(p), &cfg, |x| head(x));
+            let p = LppProblem::random(4 * c.n, c.n, c.seed);
+            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = attach_native_only(b, backend, "lpp");
+            finish(b.run()?, |x| head(x))
         }
         "apex" => {
-            let p = ApexProblem::random(4 * n, n, seed);
-            run_and_report(Arc::new(p), &cfg, |(x, _)| head(x));
+            let p = ApexProblem::random(4 * c.n, c.n, c.seed);
+            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = attach_native_only(b, backend, "apex");
+            finish(b.run()?, |(x, _)| head(x))
         }
-        other => panic!("unknown problem {other}"),
+        other => Err(BsfError::usage(format!("unknown problem {other:?}"))),
     }
 }
 
-fn cmd_sim(args: &Args) {
-    let cfg = config_from(args);
-    let sim = SimConfig::new(profile_from(args));
-    let n = args.get_usize("n", 256);
-    let seed = args.get_u64("seed", 7);
-    let eps = args.get_f64("eps", 1e-12);
-    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
-    match name {
+fn cmd_sweep(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(&["n", "k", "seed", "profile", "max-iter", "samples", "steps"])?;
+    let n = args.usize_or("n", 512)?;
+    let seed = args.u64_or("seed", 7)?;
+    let profile = profile_from(args)?;
+    let ks = args.usize_list_or("k", &[1, 2, 4, 8, 16, 32, 64, 128, 256])?;
+    let max_iter = args.usize_or("max-iter", 30)?;
+    let samples = args.usize_or("samples", 10_000)?;
+    // Gravity stops after `steps` leapfrog iterations; default to the
+    // sweep's iteration budget so runs don't end early.
+    let steps = args.usize_or("steps", max_iter)?;
+    let name = args.positional(0).unwrap_or("jacobi");
+
+    let sweep = match name {
         "jacobi" => {
-            let (p, _) = JacobiProblem::random(n, eps, seed);
-            sim_and_report(&p, &cfg, &sim, |x| head(x));
+            speedup_sweep(|| JacobiProblem::random(n, 1e-30, seed).0, &ks, profile, max_iter)?
         }
-        "jacobi-map" => {
-            let (p, _) = JacobiMapProblem::random(n, eps, seed);
-            sim_and_report(&p, &cfg, &sim, |x| head(x));
-        }
-        "cimmino" => {
-            let (p, _) = CimminoProblem::random(n, n, eps, seed);
-            sim_and_report(&p, &cfg, &sim, |x| head(x));
-        }
-        "gravity" => {
-            let steps = args.get_usize("steps", 50);
-            let p = GravityProblem::random(n, 1e-3, steps, seed);
-            sim_and_report(&p, &cfg, &sim, |x| head(x));
-        }
-        "montecarlo" => {
-            let p = MonteCarloProblem::new(n, args.get_usize("samples", 10_000), 1e-3);
-            sim_and_report(&p, &cfg, &sim, |t| {
-                format!("pi ≈ {:.6}", MonteCarloProblem::estimate(t))
-            });
-        }
-        "lpp" => {
-            let p = LppProblem::random(4 * n, n, seed);
-            sim_and_report(&p, &cfg, &sim, |x| head(x));
-        }
-        other => panic!("unknown problem {other} (sim)"),
-    }
-}
-
-/// Speedup sweep: BSF-model prediction vs simulated cluster, one table.
-fn cmd_sweep(args: &Args) {
-    let n = args.get_usize("n", 512);
-    let seed = args.get_u64("seed", 7);
-    let profile = profile_from(args);
-    let ks = args.get_usize_list("k", &[1, 2, 4, 8, 16, 32, 64, 128, 256]);
-    let max_iter = args.get_usize("max-iter", 30);
-    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
-
-    // All problems go through the shared library sweep driver.
-    fn sweep<P: BsfProblem>(
-        mk: impl Fn() -> P,
-        ks: &[usize],
-        profile: ClusterProfile,
-        max_iter: usize,
-    ) {
-        let s = bsf::bench::sweep::speedup_sweep(mk, ks, profile, max_iter);
-        bsf::bench::sweep::print_sweep("sweep", &s);
-    }
-
-    match name {
-        "jacobi" => sweep(
-            || JacobiProblem::random(n, 1e-30, seed).0,
-            &ks,
-            profile,
-            max_iter,
-        ),
-        "jacobi-map" => sweep(
+        "jacobi-map" => speedup_sweep(
             || JacobiMapProblem::random(n, 1e-30, seed).0,
             &ks,
             profile,
             max_iter,
-        ),
-        "cimmino" => sweep(
+        )?,
+        "cimmino" => speedup_sweep(
             || CimminoProblem::random(n, n, 1e-30, seed).0,
             &ks,
             profile,
             max_iter,
-        ),
-        "gravity" => sweep(
-            || GravityProblem::random(n, 1e-3, max_iter, seed),
+        )?,
+        "gravity" => speedup_sweep(
+            || GravityProblem::random(n, 1e-3, steps, seed),
             &ks,
             profile,
             max_iter,
-        ),
-        "montecarlo" => sweep(
-            || MonteCarloProblem::new(n, 10_000, 1e-12),
+        )?,
+        "montecarlo" => speedup_sweep(
+            || MonteCarloProblem::new(n, samples, 1e-12),
             &ks,
             profile,
             max_iter,
-        ),
-        other => panic!("unknown problem {other} (sweep)"),
-    }
+        )?,
+        other => return Err(BsfError::usage(format!("unknown problem {other:?} (sweep)"))),
+    };
+    print_sweep(&format!("sweep {name} n={n}"), &sweep);
+    Ok(())
 }
 
-fn cmd_predict(args: &Args) {
-    let n = args.get_usize("n", 512);
-    let seed = args.get_u64("seed", 7);
-    let profile = profile_from(args);
-    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("jacobi");
+fn cmd_predict(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(&["n", "seed", "profile", "samples", "steps"])?;
+    let n = args.usize_or("n", 512)?;
+    let seed = args.u64_or("seed", 7)?;
+    let profile = profile_from(args)?;
+    let samples = args.usize_or("samples", 10_000)?;
+    let steps = args.usize_or("steps", 10)?;
+    let name = args.positional(0).unwrap_or("jacobi");
+
     fn predict<P: BsfProblem>(p: &P, profile: ClusterProfile) {
         let cal = calibrate(p, profile, 5);
         let m = cal.params;
@@ -267,44 +364,61 @@ fn cmd_predict(args: &Args) {
         "jacobi" => predict(&JacobiProblem::random(n, 1e-30, seed).0, profile),
         "jacobi-map" => predict(&JacobiMapProblem::random(n, 1e-30, seed).0, profile),
         "cimmino" => predict(&CimminoProblem::random(n, n, 1e-30, seed).0, profile),
-        "gravity" => predict(&GravityProblem::random(n, 1e-3, 10, seed), profile),
-        "montecarlo" => predict(&MonteCarloProblem::new(n, 10_000, 1e-12), profile),
+        "gravity" => predict(&GravityProblem::random(n, 1e-3, steps, seed), profile),
+        "montecarlo" => predict(&MonteCarloProblem::new(n, samples, 1e-12), profile),
         "lpp" => predict(&LppProblem::random(4 * n, n, seed), profile),
-        other => panic!("unknown problem {other} (predict)"),
+        other => {
+            return Err(BsfError::usage(format!("unknown problem {other:?} (predict)")))
+        }
     }
+    Ok(())
 }
 
-fn cmd_artifacts() {
-    match XlaRuntime::open_default() {
-        Ok(rt) => {
-            println!("{} artifacts:", rt.names().len());
-            for name in rt.names() {
-                let m = rt.meta(name).unwrap();
-                println!("  {name}  kind={} n={} c={} out={:?}", m.kind, m.n, m.c, m.out_dims);
+fn cmd_artifacts() -> Result<(), BsfError> {
+    let rt = XlaRuntime::open_default()?;
+    println!(
+        "{} artifacts (PJRT backend {}):",
+        rt.names().len(),
+        if XlaRuntime::backend_available() { "linked" } else { "not linked" }
+    );
+    for name in rt.names() {
+        if let Some(m) = rt.meta(name) {
+            println!("  {name}  kind={} n={} c={} out={:?}", m.kind, m.n, m.c, m.out_dims);
+        }
+    }
+    Ok(())
+}
+
+fn dispatch(args: &ArgMap) -> Result<(), BsfError> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(args, engine_from(args)?),
+        Some("sim") => {
+            if args.get("engine").is_some() {
+                return Err(BsfError::usage(
+                    "--engine conflicts with the sim subcommand (sim always \
+                     uses the simulated engine; use `run --engine ...` instead)",
+                ));
             }
+            cmd_run(args, EngineOpt::Simulated(profile_from(args)?))
         }
-        Err(e) => {
-            eprintln!("cannot open artifacts: {e:#}");
-            std::process::exit(1);
+        Some("sweep") => cmd_sweep(args),
+        Some("predict") => cmd_predict(args),
+        Some("artifacts") => cmd_artifacts(),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
         }
+        Some(other) => Err(BsfError::usage(format!("unknown subcommand {other:?}"))),
     }
 }
 
 fn main() {
-    let args = Args::from_env();
-    match args.subcommand.as_deref() {
-        Some("run") => cmd_run(&args),
-        Some("sim") => cmd_sim(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("predict") => cmd_predict(&args),
-        Some("artifacts") => cmd_artifacts(),
-        _ => {
-            eprintln!(
-                "usage: bsf <run|sim|sweep|predict|artifacts> [problem] [--n N] [--k K] \
-                 [--omp T] [--seed S] [--eps E] [--profile infiniband|gigabit|ideal] \
-                 [--backend native|xla] [--max-iter I] [--trace T]"
-            );
-            std::process::exit(2);
+    let args = ArgMap::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("bsf: {e}");
+        if matches!(e, BsfError::Usage(_)) {
+            eprintln!("\n{USAGE}");
         }
+        std::process::exit(e.exit_code());
     }
 }

@@ -253,7 +253,7 @@ impl BsfProblem for ApexProblem {
                     *xi += step * ci;
                 }
                 *last_step = step;
-                *self.pursuits.lock().unwrap() += 1;
+                *self.pursuits.lock().unwrap_or_else(|e| e.into_inner()) += 1;
                 StepDecision::goto(JOB_VERIFY)
             }
             JOB_VERIFY => {
@@ -277,7 +277,8 @@ impl BsfProblem for ApexProblem {
         _ctx: &IterCtx,
     ) -> Option<StepDecision> {
         // The dispatcher's extra state: a global pursuit budget.
-        if *self.pursuits.lock().unwrap() >= self.max_pursuits && !decision.exit {
+        let pursuits = *self.pursuits.lock().unwrap_or_else(|e| e.into_inner());
+        if pursuits >= self.max_pursuits && !decision.exit {
             Some(StepDecision::exit())
         } else {
             None
@@ -288,7 +289,7 @@ impl BsfProblem for ApexProblem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
+    use crate::skeleton::Bsf;
     use std::sync::Arc;
 
     #[test]
@@ -306,7 +307,11 @@ mod tests {
     fn workflow_reaches_feasible_optimum_face() {
         let p = ApexProblem::random(24, 4, 51);
         let p = Arc::new(p);
-        let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(3).max_iter(100_000));
+        let r = Bsf::from_arc(Arc::clone(&p))
+            .workers(3)
+            .max_iter(100_000)
+            .run()
+            .unwrap();
         let (x, _) = &r.param;
         assert_eq!(p.violations(x), 0, "final point feasible");
         // pursuit must have improved the objective over the start
@@ -316,8 +321,8 @@ mod tests {
     #[test]
     fn result_independent_of_worker_count() {
         let mk = || ApexProblem::random(20, 3, 52);
-        let r1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1).max_iter(100_000));
-        let r4 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(4).max_iter(100_000));
+        let r1 = Bsf::new(mk()).workers(1).max_iter(100_000).run().unwrap();
+        let r4 = Bsf::new(mk()).workers(4).max_iter(100_000).run().unwrap();
         assert_eq!(r1.iterations, r4.iterations);
         for (a, b) in r1.param.0.iter().zip(&r4.param.0) {
             assert!((a - b).abs() < 1e-9);
@@ -328,7 +333,7 @@ mod tests {
     fn dispatcher_enforces_pursuit_budget() {
         let mut p = ApexProblem::random(20, 3, 53);
         p.max_pursuits = 1;
-        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(2).max_iter(100_000));
+        let r = Bsf::new(p).workers(2).max_iter(100_000).run().unwrap();
         // with a 1-pursuit budget the run must end early (well under the
         // unbudgeted iteration count, which is > 10)
         assert!(r.iterations <= 10, "iterations {}", r.iterations);

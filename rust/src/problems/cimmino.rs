@@ -7,23 +7,14 @@
 //! the master applies `x' = x + (λ/m) Σ corrections` (λ ∈ (0, 2) — we use
 //! the standard λ = m·relax/count normalization via the reduce counter).
 //! Stops when `||x' - x||² < ε`.
+//!
+//! XLA acceleration comes from the [`XlaMapSpec`] impl. The AOT variants
+//! are square (m == n), so `artifact_dim` reports `None` for non-square
+//! instances and the generic backend silently keeps the native map.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-use crate::problems::jacobi::pick_artifact;
-use crate::runtime::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::runtime::backend::{PositionedArg, XlaMapSpec};
 use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
-use crate::skeleton::variables::SkelVars;
 use crate::util::mat::{dist2, dot, gen_consistent, Mat};
-
-/// Worker map backend.
-#[derive(Clone, Default)]
-pub enum CimminoBackend {
-    #[default]
-    Native,
-    Xla(XlaHandle),
-}
 
 /// Cimmino problem instance.
 pub struct CimminoProblem {
@@ -34,17 +25,6 @@ pub struct CimminoProblem {
     /// Relaxation λ (0 < λ < 2; 1.0 = classic Cimmino with averaging).
     pub relax: f64,
     pub eps: f64,
-    backend: CimminoBackend,
-    xla_chunks: Mutex<HashMap<(usize, usize), XlaRows>>,
-}
-
-#[derive(Clone)]
-struct XlaRows {
-    artifact: String,
-    /// Service-side cache keys of the static blocks (§Perf).
-    rows_key: u64,
-    b_key: u64,
-    w_key: u64,
 }
 
 impl CimminoProblem {
@@ -60,15 +40,7 @@ impl CimminoProblem {
                 }
             })
             .collect();
-        Self {
-            a,
-            b,
-            w,
-            relax,
-            eps,
-            backend: CimminoBackend::Native,
-            xla_chunks: Mutex::new(HashMap::new()),
-        }
+        Self { a, b, w, relax, eps }
     }
 
     /// Random consistent m x n system; returns (problem, x_star).
@@ -81,74 +53,10 @@ impl CimminoProblem {
         (self.a.rows, self.a.cols)
     }
 
-    pub fn with_backend(mut self, backend: CimminoBackend) -> Self {
-        self.backend = backend;
-        self
-    }
-
     /// ||A x - b||² — validation helper.
     pub fn residual2(&self, x: &[f64]) -> f64 {
         let ax = self.a.matvec(x);
         dist2(&ax, &self.b)
-    }
-
-    fn xla_map(
-        &self,
-        handle: &XlaHandle,
-        param: &[f64],
-        offset: usize,
-        len: usize,
-    ) -> Option<Vec<f64>> {
-        let n = self.a.cols;
-        // Note: the AOT variants are square (m == n artifacts); only used
-        // when dims match a compiled spec.
-        if self.a.rows != n {
-            return None;
-        }
-        let key = (offset, len);
-        let chunk = {
-            let mut cache = self.xla_chunks.lock().unwrap();
-            match cache.get(&key) {
-                Some(c) => c.clone(),
-                None => {
-                    let (artifact, c_pad) = pick_artifact("cimmino", n, len)?;
-                    let mut rows = vec![0f32; c_pad * n];
-                    let mut b_chunk = vec![0f32; c_pad];
-                    let mut w_chunk = vec![0f32; c_pad]; // pad rows get w=0
-                    for (ii, i) in (offset..offset + len).enumerate() {
-                        for j in 0..n {
-                            rows[ii * n + j] = self.a.at(i, j) as f32;
-                        }
-                        b_chunk[ii] = self.b[i] as f32;
-                        w_chunk[ii] = self.w[i] as f32;
-                    }
-                    let rows_key = fresh_input_key();
-                    let b_key = fresh_input_key();
-                    let w_key = fresh_input_key();
-                    handle
-                        .register_input(rows_key, rows, vec![c_pad as i64, n as i64])
-                        .ok()?;
-                    handle.register_input(b_key, b_chunk, vec![c_pad as i64]).ok()?;
-                    handle.register_input(w_key, w_chunk, vec![c_pad as i64]).ok()?;
-                    let ch = XlaRows { artifact, rows_key, b_key, w_key };
-                    cache.insert(key, ch.clone());
-                    ch
-                }
-            }
-        };
-        let x: Vec<f32> = param.iter().map(|&v| v as f32).collect();
-        let out = handle
-            .execute_spec(
-                &chunk.artifact,
-                vec![
-                    ArgSpec::Cached(chunk.rows_key),
-                    ArgSpec::Cached(chunk.b_key),
-                    ArgSpec::Dyn(x, vec![n as i64]),
-                    ArgSpec::Cached(chunk.w_key),
-                ],
-            )
-            .ok()?;
-        Some(out.into_iter().map(|v| v as f64).collect())
     }
 }
 
@@ -183,24 +91,6 @@ impl BsfProblem for CimminoProblem {
         out
     }
 
-    fn map_sublist(
-        &self,
-        elems: &[usize],
-        param: &Vec<f64>,
-        vars: &SkelVars,
-    ) -> Option<(Option<Vec<f64>>, u64)> {
-        match &self.backend {
-            CimminoBackend::Native => None,
-            CimminoBackend::Xla(handle) => {
-                if elems.is_empty() {
-                    return Some((None, 0));
-                }
-                let s = self.xla_map(handle, param, vars.address_offset, elems.len())?;
-                Some((Some(s), elems.len() as u64))
-            }
-        }
-    }
-
     fn process_results(
         &self,
         reduce_result: Option<&Vec<f64>>,
@@ -208,8 +98,12 @@ impl BsfProblem for CimminoProblem {
         param: &mut Vec<f64>,
         _ctx: &IterCtx,
     ) -> StepDecision {
-        let s = reduce_result.expect("Cimmino maps every row");
         debug_assert_eq!(reduce_counter as usize, self.a.rows);
+        let Some(s) = reduce_result else {
+            // Empty fold (only possible on a degenerate empty split):
+            // nothing moved, so the step is zero and we are done.
+            return StepDecision::exit();
+        };
         // x' = x + λ · mean(corrections)
         let scale = self.relax * (self.a.rows as f64 / reduce_counter as f64)
             / self.a.rows as f64;
@@ -227,10 +121,69 @@ impl BsfProblem for CimminoProblem {
     }
 }
 
+impl XlaMapSpec for CimminoProblem {
+    fn artifact_kind(&self) -> &'static str {
+        "cimmino"
+    }
+
+    /// Only square systems have compiled variants.
+    fn artifact_dim(&self) -> Option<usize> {
+        if self.a.rows == self.a.cols {
+            Some(self.a.cols)
+        } else {
+            None
+        }
+    }
+
+    /// Arg 0: the (c_pad, n) row block; arg 1: the b-chunk; arg 3: the
+    /// w-chunk (pad rows get w = 0, so they contribute nothing).
+    fn static_args(&self, offset: usize, len: usize, c_pad: usize) -> Vec<PositionedArg> {
+        let n = self.a.cols;
+        let mut rows = vec![0f32; c_pad * n];
+        let mut b_chunk = vec![0f32; c_pad];
+        let mut w_chunk = vec![0f32; c_pad];
+        for (ii, i) in (offset..offset + len).enumerate() {
+            for j in 0..n {
+                rows[ii * n + j] = self.a.at(i, j) as f32;
+            }
+            b_chunk[ii] = self.b[i] as f32;
+            w_chunk[ii] = self.w[i] as f32;
+        }
+        vec![
+            (0, rows, vec![c_pad as i64, n as i64]),
+            (1, b_chunk, vec![c_pad as i64]),
+            (3, w_chunk, vec![c_pad as i64]),
+        ]
+    }
+
+    /// Arg 2: the full current approximation x.
+    fn dyn_args(
+        &self,
+        param: &Vec<f64>,
+        _offset: usize,
+        _len: usize,
+        _c_pad: usize,
+    ) -> Vec<PositionedArg> {
+        let n = self.a.cols;
+        let x: Vec<f32> = param.iter().map(|&v| v as f32).collect();
+        vec![(2, x, vec![n as i64])]
+    }
+
+    fn decode_output(
+        &self,
+        out: Vec<f32>,
+        _offset: usize,
+        len: usize,
+    ) -> (Option<Vec<f64>>, u64) {
+        let s: Vec<f64> = out.into_iter().map(|v| v as f64).collect();
+        (Some(s), len as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
+    use crate::skeleton::{Bsf, BsfConfig};
     use std::sync::Arc;
 
     #[test]
@@ -238,8 +191,10 @@ mod tests {
         let (p, _) = CimminoProblem::random(48, 16, 1e-12, 21);
         let r0 = p.residual2(&p.init_parameter());
         let p = Arc::new(p);
-        let report =
-            run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(20_000));
+        let report = Bsf::from_arc(Arc::clone(&p))
+            .config(BsfConfig::with_workers(4).max_iter(20_000))
+            .run()
+            .unwrap();
         let r1 = p.residual2(&report.param);
         assert!(r1 < r0 * 1e-6, "residual² {r0} -> {r1}");
     }
@@ -248,8 +203,14 @@ mod tests {
     fn result_independent_of_worker_count() {
         let (p1, _) = CimminoProblem::random(30, 10, 1e-14, 22);
         let (p6, _) = CimminoProblem::random(30, 10, 1e-14, 22);
-        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(1).max_iter(20_000));
-        let r6 = run_threaded(Arc::new(p6), &BsfConfig::with_workers(6).max_iter(20_000));
+        let r1 = Bsf::new(p1)
+            .config(BsfConfig::with_workers(1).max_iter(20_000))
+            .run()
+            .unwrap();
+        let r6 = Bsf::new(p6)
+            .config(BsfConfig::with_workers(6).max_iter(20_000))
+            .run()
+            .unwrap();
         assert_eq!(r1.iterations, r6.iterations);
         for (a, b) in r1.param.iter().zip(&r6.param) {
             assert!((a - b).abs() < 1e-8);
@@ -262,7 +223,15 @@ mod tests {
         let a = Mat::from_fn(8, 8, |i, j| ((i + 2 * j) % 5) as f64 - 2.0);
         let b = vec![0.0; 8];
         let p = CimminoProblem::new(a, b, 1.0, 1e-12);
-        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(2));
+        let r = Bsf::new(p).workers(2).run().unwrap();
         assert_eq!(r.iterations, 1);
+    }
+
+    #[test]
+    fn non_square_instances_opt_out_of_xla() {
+        let (square, _) = CimminoProblem::random(12, 12, 1e-12, 23);
+        let (rect, _) = CimminoProblem::random(24, 12, 1e-12, 23);
+        assert_eq!(square.artifact_dim(), Some(12));
+        assert_eq!(rect.artifact_dim(), None);
     }
 }

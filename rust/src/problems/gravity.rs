@@ -11,22 +11,15 @@
 //! list of `(body, acceleration)` pairs and ⊕ is concatenation.
 //! Velocities are master-side state (the workers only ever need
 //! positions, which travel as the order parameter).
+//!
+//! XLA acceleration comes from the [`XlaMapSpec`] impl (the
+//! `gravity_n{n}_c{c}` Pallas-kernel artifacts).
 
 use std::sync::Mutex;
 
-use crate::problems::jacobi::pick_artifact;
-use crate::runtime::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::runtime::backend::{PositionedArg, XlaMapSpec};
 use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
-use crate::skeleton::variables::SkelVars;
 use crate::util::rng::SplitMix64;
-
-/// Worker map backend.
-#[derive(Clone, Default)]
-pub enum GravityBackend {
-    #[default]
-    Native,
-    Xla(XlaHandle),
-}
 
 /// N-body instance. Positions travel as the order parameter (flat
 /// `[x0,y0,z0, x1,...]`); masses are static problem data.
@@ -43,11 +36,8 @@ pub struct GravityProblem {
     pub dt: f64,
     /// Number of leapfrog steps to run (the stop condition).
     pub steps: usize,
-    backend: GravityBackend,
     /// Cached f32 masses (XLA path).
     m_f32: Vec<f32>,
-    /// Service-side cache key of the mass vector (§Perf; lazily set).
-    m_key: Mutex<Option<u64>>,
 }
 
 impl GravityProblem {
@@ -70,9 +60,7 @@ impl GravityProblem {
             g: 1.0,
             dt,
             steps,
-            backend: GravityBackend::Native,
             m_f32,
-            m_key: Mutex::new(None),
         }
     }
 
@@ -87,11 +75,6 @@ impl GravityProblem {
 
     pub fn n_bodies(&self) -> usize {
         self.masses.len()
-    }
-
-    pub fn with_backend(mut self, backend: GravityBackend) -> Self {
-        self.backend = backend;
-        self
     }
 
     /// Acceleration of body `i` given flat positions (the native kernel;
@@ -114,7 +97,9 @@ impl GravityProblem {
 
     /// Total kinetic + potential energy (drift check for tests).
     pub fn energy(&self, pos: &[f64]) -> f64 {
-        let vel = self.velocities.lock().unwrap();
+        // Poison recovery: the data is still consistent (updates are
+        // whole-iteration, master-side only).
+        let vel = self.velocities.lock().unwrap_or_else(|e| e.into_inner());
         let n = self.n_bodies();
         let mut e = 0.0;
         for i in 0..n {
@@ -134,60 +119,9 @@ impl GravityProblem {
         e
     }
 
-    fn xla_map(
-        &self,
-        handle: &XlaHandle,
-        pos: &[f64],
-        offset: usize,
-        len: usize,
-    ) -> Option<Vec<(u64, [f64; 3])>> {
-        let n = self.n_bodies();
-        let (artifact, c_pad) = pick_artifact("gravity", n, len)?;
-        let m_key = {
-            let mut guard = self.m_key.lock().unwrap();
-            match *guard {
-                Some(k) => k,
-                None => {
-                    let k = fresh_input_key();
-                    handle
-                        .register_input(k, self.m_f32.clone(), vec![n as i64])
-                        .ok()?;
-                    *guard = Some(k);
-                    k
-                }
-            }
-        };
-        let mut p_chunk = vec![0f32; c_pad * 3];
-        for (ii, i) in (offset..offset + len).enumerate() {
-            for k in 0..3 {
-                p_chunk[ii * 3 + k] = pos[3 * i + k] as f32;
-            }
-        }
-        let p_all: Vec<f32> = pos.iter().map(|&v| v as f32).collect();
-        let out = handle
-            .execute_spec(
-                &artifact,
-                vec![
-                    ArgSpec::Dyn(p_chunk, vec![c_pad as i64, 3]),
-                    ArgSpec::Dyn(p_all, vec![n as i64, 3]),
-                    ArgSpec::Cached(m_key),
-                ],
-            )
-            .ok()?;
-        Some(
-            (0..len)
-                .map(|ii| {
-                    (
-                        (offset + ii) as u64,
-                        [
-                            out[ii * 3] as f64,
-                            out[ii * 3 + 1] as f64,
-                            out[ii * 3 + 2] as f64,
-                        ],
-                    )
-                })
-                .collect(),
-        )
+    /// Test hook: a copy of the current velocities.
+    pub fn velocities_snapshot(&self) -> Vec<f64> {
+        self.velocities.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 }
 
@@ -229,26 +163,6 @@ impl BsfProblem for GravityProblem {
         out
     }
 
-    fn map_sublist(
-        &self,
-        elems: &[usize],
-        param: &Vec<f64>,
-        vars: &SkelVars,
-    ) -> Option<(Option<Vec<(u64, [f64; 3])>>, u64)> {
-        match &self.backend {
-            GravityBackend::Native => None,
-            GravityBackend::Xla(handle) => {
-                if elems.is_empty() {
-                    return Some((None, 0));
-                }
-                let pairs =
-                    self.xla_map(handle, param, vars.address_offset, elems.len())?;
-                let count = pairs.len() as u64;
-                Some((Some(pairs), count))
-            }
-        }
-    }
-
     fn process_results(
         &self,
         reduce_result: Option<&Vec<(u64, [f64; 3])>>,
@@ -256,15 +170,16 @@ impl BsfProblem for GravityProblem {
         param: &mut Vec<f64>,
         ctx: &IterCtx,
     ) -> StepDecision {
-        let accs = reduce_result.expect("gravity maps every body");
         debug_assert_eq!(reduce_counter as usize, self.n_bodies());
-        let mut vel = self.velocities.lock().unwrap();
-        // kick-drift: v += a·dt; x += v·dt
-        for &(i, a) in accs {
-            let i = i as usize;
-            for k in 0..3 {
-                vel[3 * i + k] += a[k] * self.dt;
-                param[3 * i + k] += vel[3 * i + k] * self.dt;
+        if let Some(accs) = reduce_result {
+            let mut vel = self.velocities.lock().unwrap_or_else(|e| e.into_inner());
+            // kick-drift: v += a·dt; x += v·dt
+            for &(i, a) in accs {
+                let i = i as usize;
+                for k in 0..3 {
+                    vel[3 * i + k] += a[k] * self.dt;
+                    param[3 * i + k] += vel[3 * i + k] * self.dt;
+                }
             }
         }
         if ctx.iter_counter >= self.steps {
@@ -275,16 +190,78 @@ impl BsfProblem for GravityProblem {
     }
 }
 
+impl XlaMapSpec for GravityProblem {
+    fn artifact_kind(&self) -> &'static str {
+        "gravity"
+    }
+
+    fn artifact_dim(&self) -> Option<usize> {
+        Some(self.n_bodies())
+    }
+
+    /// Arg 2: the mass vector (global static — identical for every
+    /// chunk, but cached per chunk by the generic backend; n floats, so
+    /// the duplication is negligible).
+    fn static_args(&self, _offset: usize, _len: usize, _c_pad: usize) -> Vec<PositionedArg> {
+        let n = self.n_bodies();
+        vec![(2, self.m_f32.clone(), vec![n as i64])]
+    }
+
+    /// Arg 0: the chunk's positions (c_pad, 3); arg 1: all positions
+    /// (n, 3) — both change every iteration.
+    fn dyn_args(
+        &self,
+        param: &Vec<f64>,
+        offset: usize,
+        len: usize,
+        c_pad: usize,
+    ) -> Vec<PositionedArg> {
+        let n = self.n_bodies();
+        let mut p_chunk = vec![0f32; c_pad * 3];
+        for (ii, i) in (offset..offset + len).enumerate() {
+            for k in 0..3 {
+                p_chunk[ii * 3 + k] = param[3 * i + k] as f32;
+            }
+        }
+        let p_all: Vec<f32> = param.iter().map(|&v| v as f32).collect();
+        vec![
+            (0, p_chunk, vec![c_pad as i64, 3]),
+            (1, p_all, vec![n as i64, 3]),
+        ]
+    }
+
+    fn decode_output(
+        &self,
+        out: Vec<f32>,
+        offset: usize,
+        len: usize,
+    ) -> (Option<Vec<(u64, [f64; 3])>>, u64) {
+        let pairs: Vec<(u64, [f64; 3])> = (0..len)
+            .map(|ii| {
+                (
+                    (offset + ii) as u64,
+                    [
+                        out[ii * 3] as f64,
+                        out[ii * 3 + 1] as f64,
+                        out[ii * 3 + 2] as f64,
+                    ],
+                )
+            })
+            .collect();
+        (Some(pairs), len as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
+    use crate::skeleton::Bsf;
     use std::sync::Arc;
 
     #[test]
     fn runs_fixed_number_of_steps() {
         let p = GravityProblem::random(12, 1e-3, 25, 31);
-        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(3));
+        let r = Bsf::new(p).workers(3).run().unwrap();
         assert_eq!(r.iterations, 25);
     }
 
@@ -292,8 +269,8 @@ mod tests {
     fn result_independent_of_worker_count() {
         let p1 = GravityProblem::random(16, 1e-3, 10, 32);
         let p4 = GravityProblem::random(16, 1e-3, 10, 32);
-        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(1));
-        let r4 = run_threaded(Arc::new(p4), &BsfConfig::with_workers(4));
+        let r1 = Bsf::new(p1).workers(1).run().unwrap();
+        let r4 = Bsf::new(p4).workers(4).run().unwrap();
         for (a, b) in r1.param.iter().zip(&r4.param) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
@@ -310,8 +287,8 @@ mod tests {
             200,
         );
         let p = Arc::new(p);
-        let _ = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(2));
-        let vel = p.velocities.lock().unwrap();
+        let _ = Bsf::from_arc(Arc::clone(&p)).workers(2).run().unwrap();
+        let vel = p.velocities_snapshot();
         for k in 0..3 {
             let total = vel[k] + vel[3 + k];
             assert!(total.abs() < 1e-9, "momentum axis {k}: {total}");
@@ -323,11 +300,24 @@ mod tests {
         let p = GravityProblem::random(8, 1e-4, 100, 33);
         let e0 = p.energy(&p.init_parameter());
         let p = Arc::new(p);
-        let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(2));
+        let r = Bsf::from_arc(Arc::clone(&p)).workers(2).run().unwrap();
         let e1 = p.energy(&r.param);
         assert!(
             (e1 - e0).abs() < 0.05 * e0.abs().max(1.0),
             "energy drift {e0} -> {e1}"
         );
+    }
+
+    #[test]
+    fn xla_spec_pads_chunk_positions() {
+        let p = GravityProblem::random(4, 1e-3, 1, 34);
+        let pos = p.init_parameter();
+        let dyns = p.dyn_args(&pos, 1, 2, 3);
+        assert_eq!(dyns.len(), 2);
+        let (_, p_chunk, dims) = &dyns[0];
+        assert_eq!(dims.as_slice(), &[3, 3]);
+        assert_eq!(p_chunk.len(), 9);
+        // pad row (ii = 2) is zero
+        assert_eq!(&p_chunk[6..9], &[0.0, 0.0, 0.0]);
     }
 }

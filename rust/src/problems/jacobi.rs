@@ -5,32 +5,21 @@
 //! (returning an n-vector), ⊕ is vector addition, and the master computes
 //! `x' = s + d`, stopping when `||x' - x||² < ε`.
 //!
-//! Two worker map backends:
-//! * **native** — the per-element `map_f` loop (or a fused Rust matvec
-//!   over the sublist, used by default because it is what a C++ user
-//!   would write inside `PC_bsf_MapF`);
-//! * **XLA** — `map_sublist` calls the AOT-compiled Pallas kernel
-//!   (`jacobi_n{n}_c{c}` artifact) through the [`XlaHandle`] service:
-//!   the L1/L2/L3 integration point.
+//! Execution backends are a *session* concern, not a problem concern
+//! (see `skeleton::backend`): this file only provides
+//!
+//! * the faithful per-element `map_f` (what `PC_bsf_MapF` would be);
+//! * a fused native sublist kernel via [`BsfProblem::map_sublist`]
+//!   (one matvec pass, no per-element allocs — used by the default
+//!   `FusedNativeBackend`);
+//! * an [`XlaMapSpec`] implementation describing the `jacobi_n{n}_c{c}`
+//!   AOT artifacts, which the generic `XlaMapBackend` drives through the
+//!   PJRT service.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-use crate::runtime::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::runtime::backend::{PositionedArg, XlaMapSpec};
 use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
 use crate::skeleton::variables::SkelVars;
 use crate::util::mat::{dist2, gen_diag_dominant, jacobi_cd, Mat};
-
-/// Which implementation the worker map uses.
-#[derive(Clone)]
-pub enum MapBackend {
-    /// Faithful per-element `PC_bsf_MapF` loop.
-    PerElement,
-    /// Fused Rust loop over the sublist (same arithmetic, fewer allocs).
-    FusedNative,
-    /// Fused AOT XLA executable (Pallas kernel under the hood).
-    Xla(XlaHandle),
-}
 
 /// The Jacobi problem instance (the paper's `Problem-Data.h` contents).
 pub struct JacobiProblem {
@@ -41,19 +30,6 @@ pub struct JacobiProblem {
     d: Vec<f64>,
     /// Stop threshold ε for ||x' - x||².
     pub eps: f64,
-    backend: MapBackend,
-    /// Per-(offset,len) cache of the f32 column block, padded to the
-    /// artifact chunk size, in the (n, c) layout the kernel expects.
-    xla_chunks: Mutex<HashMap<(usize, usize), XlaChunk>>,
-}
-
-#[derive(Clone)]
-struct XlaChunk {
-    artifact: String,
-    c_pad: usize,
-    /// Service-side cache key of the (n, c_pad) column block (§Perf:
-    /// uploaded once via `register_input`, not shipped per iteration).
-    cols_key: u64,
 }
 
 impl JacobiProblem {
@@ -61,13 +37,7 @@ impl JacobiProblem {
     /// paper's example section).
     pub fn from_system(a: &Mat, b: &[f64], eps: f64) -> Self {
         let (c, d) = jacobi_cd(a, b);
-        Self {
-            ct: c.transpose(),
-            d,
-            eps,
-            backend: MapBackend::FusedNative,
-            xla_chunks: Mutex::new(HashMap::new()),
-        }
+        Self { ct: c.transpose(), d, eps }
     }
 
     /// Random strictly-diagonally-dominant instance with known solution.
@@ -79,11 +49,6 @@ impl JacobiProblem {
 
     pub fn n(&self) -> usize {
         self.d.len()
-    }
-
-    pub fn with_backend(mut self, backend: MapBackend) -> Self {
-        self.backend = backend;
-        self
     }
 
     /// Residual proxy: ||x' - x||² of the final step is < eps by
@@ -99,69 +64,6 @@ impl JacobiProblem {
         }
         dist2(&next, x)
     }
-
-    /// The worker's fused XLA map over its sublist.
-    fn xla_map(
-        &self,
-        handle: &XlaHandle,
-        param: &[f64],
-        offset: usize,
-        len: usize,
-    ) -> Option<Vec<f64>> {
-        let n = self.n();
-        let key = (offset, len);
-        let chunk = {
-            let mut cache = self.xla_chunks.lock().unwrap();
-            match cache.get(&key) {
-                Some(c) => c.clone(),
-                None => {
-                    // Smallest compiled chunk >= len; the padded columns
-                    // are zero so they contribute nothing to the fold.
-                    let (artifact, c_pad) = pick_artifact("jacobi", n, len)?;
-                    let mut cols = vec![0f32; n * c_pad];
-                    for (jj, j) in (offset..offset + len).enumerate() {
-                        let cj = self.ct.row(j);
-                        for i in 0..n {
-                            cols[i * c_pad + jj] = cj[i] as f32;
-                        }
-                    }
-                    let cols_key = fresh_input_key();
-                    handle
-                        .register_input(cols_key, cols, vec![n as i64, c_pad as i64])
-                        .ok()?;
-                    let ch = XlaChunk { artifact, c_pad, cols_key };
-                    cache.insert(key, ch.clone());
-                    ch
-                }
-            }
-        };
-        let mut x_chunk = vec![0f32; chunk.c_pad];
-        for (jj, j) in (offset..offset + len).enumerate() {
-            x_chunk[jj] = param[j] as f32;
-        }
-        let out = handle
-            .execute_spec(
-                &chunk.artifact,
-                vec![
-                    ArgSpec::Cached(chunk.cols_key),
-                    ArgSpec::Dyn(x_chunk, vec![chunk.c_pad as i64]),
-                ],
-            )
-            .ok()?;
-        Some(out.into_iter().map(|v| v as f64).collect())
-    }
-}
-
-/// Pick the smallest AOT chunk variant that fits `len` elements.
-/// Returns `None` (→ fall back to the native loop) when nothing fits.
-pub(crate) fn pick_artifact(kind: &str, n: usize, len: usize) -> Option<(String, usize)> {
-    // Chunk sizes emitted by python/compile/model.py; keep in sync.
-    const CHUNKS: [usize; 3] = [16, 64, 256];
-    if ![64usize, 1024].contains(&n) {
-        return None; // only these dimensions are AOT-compiled
-    }
-    let c = CHUNKS.iter().copied().find(|&c| c >= len && c <= n)?;
-    Some((format!("{kind}_n{n}_c{c}"), c))
 }
 
 impl BsfProblem for JacobiProblem {
@@ -196,36 +98,28 @@ impl BsfProblem for JacobiProblem {
         out
     }
 
+    /// Fused native sublist kernel: one pass `s = Σ_j x_j · c_j` without
+    /// per-element allocs (what a careful C++ user would write inside
+    /// `PC_bsf_MapF`'s caller).
     fn map_sublist(
         &self,
         elems: &[usize],
         param: &Vec<f64>,
-        vars: &SkelVars,
+        _vars: &SkelVars,
     ) -> Option<(Option<Vec<f64>>, u64)> {
         if elems.is_empty() {
             return Some((None, 0));
         }
-        match &self.backend {
-            MapBackend::PerElement => None,
-            MapBackend::FusedNative => {
-                // One pass: s = Σ_j x_j · c_j without per-element allocs.
-                let n = self.n();
-                let mut s = vec![0.0f64; n];
-                for &j in elems {
-                    let xj = param[j];
-                    let cj = self.ct.row(j);
-                    for i in 0..n {
-                        s[i] += cj[i] * xj;
-                    }
-                }
-                Some((Some(s), elems.len() as u64))
-            }
-            MapBackend::Xla(handle) => {
-                let s =
-                    self.xla_map(handle, param, vars.address_offset, elems.len())?;
-                Some((Some(s), elems.len() as u64))
+        let n = self.n();
+        let mut s = vec![0.0f64; n];
+        for &j in elems {
+            let xj = param[j];
+            let cj = self.ct.row(j);
+            for i in 0..n {
+                s[i] += cj[i] * xj;
             }
         }
+        Some((Some(s), elems.len() as u64))
     }
 
     fn process_results(
@@ -235,9 +129,12 @@ impl BsfProblem for JacobiProblem {
         param: &mut Vec<f64>,
         _ctx: &IterCtx,
     ) -> StepDecision {
-        let s = reduce_result.expect("Jacobi always reduces n elements");
-        // x^(i+1) := s + d  (Algorithm 3, line 5)
-        let next: Vec<f64> = s.iter().zip(&self.d).map(|(si, di)| si + di).collect();
+        // x^(i+1) := s + d  (Algorithm 3, line 5). A None reduce result
+        // can only mean an empty fold (s = 0), so x' = d.
+        let next: Vec<f64> = match reduce_result {
+            Some(s) => s.iter().zip(&self.d).map(|(si, di)| si + di).collect(),
+            None => self.d.clone(),
+        };
         let delta = dist2(&next, param);
         *param = next;
         if delta < self.eps {
@@ -248,16 +145,65 @@ impl BsfProblem for JacobiProblem {
     }
 }
 
+impl XlaMapSpec for JacobiProblem {
+    fn artifact_kind(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn artifact_dim(&self) -> Option<usize> {
+        Some(self.n())
+    }
+
+    /// Arg 0: the (n, c_pad) column block, zero-padded (padded columns
+    /// contribute nothing to the fold).
+    fn static_args(&self, offset: usize, len: usize, c_pad: usize) -> Vec<PositionedArg> {
+        let n = self.n();
+        let mut cols = vec![0f32; n * c_pad];
+        for (jj, j) in (offset..offset + len).enumerate() {
+            let cj = self.ct.row(j);
+            for i in 0..n {
+                cols[i * c_pad + jj] = cj[i] as f32;
+            }
+        }
+        vec![(0, cols, vec![n as i64, c_pad as i64])]
+    }
+
+    /// Arg 1: the worker's x-chunk, zero-padded to c_pad.
+    fn dyn_args(
+        &self,
+        param: &Vec<f64>,
+        offset: usize,
+        len: usize,
+        c_pad: usize,
+    ) -> Vec<PositionedArg> {
+        let mut x_chunk = vec![0f32; c_pad];
+        for (jj, j) in (offset..offset + len).enumerate() {
+            x_chunk[jj] = param[j] as f32;
+        }
+        vec![(1, x_chunk, vec![c_pad as i64])]
+    }
+
+    fn decode_output(
+        &self,
+        out: Vec<f32>,
+        _offset: usize,
+        len: usize,
+    ) -> (Option<Vec<f64>>, u64) {
+        let s: Vec<f64> = out.into_iter().map(|v| v as f64).collect();
+        (Some(s), len as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
+    use crate::skeleton::{Bsf, BsfConfig, PerElementBackend};
     use std::sync::Arc;
 
     #[test]
     fn converges_to_known_solution_one_worker() {
         let (p, x_star) = JacobiProblem::random(32, 1e-20, 1);
-        let report = run_threaded(Arc::new(p), &BsfConfig::with_workers(1));
+        let report = Bsf::new(p).workers(1).run().unwrap();
         for (a, b) in report.param.iter().zip(&x_star) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
@@ -267,8 +213,8 @@ mod tests {
     fn result_independent_of_worker_count() {
         let (p1, _) = JacobiProblem::random(40, 1e-18, 2);
         let (p5, _) = JacobiProblem::random(40, 1e-18, 2);
-        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(1));
-        let r5 = run_threaded(Arc::new(p5), &BsfConfig::with_workers(5));
+        let r1 = Bsf::new(p1).workers(1).run().unwrap();
+        let r5 = Bsf::new(p5).workers(5).run().unwrap();
         assert_eq!(r1.iterations, r5.iterations);
         for (a, b) in r1.param.iter().zip(&r5.param) {
             // identical split-independent math up to float reassociation
@@ -279,10 +225,13 @@ mod tests {
     #[test]
     fn per_element_and_fused_agree() {
         let (pe, _) = JacobiProblem::random(24, 1e-16, 3);
-        let pe = pe.with_backend(MapBackend::PerElement);
         let (fu, _) = JacobiProblem::random(24, 1e-16, 3);
-        let r1 = run_threaded(Arc::new(pe), &BsfConfig::with_workers(3));
-        let r2 = run_threaded(Arc::new(fu), &BsfConfig::with_workers(3));
+        let r1 = Bsf::new(pe)
+            .workers(3)
+            .map_backend(PerElementBackend)
+            .run()
+            .unwrap();
+        let r2 = Bsf::new(fu).workers(3).run().unwrap();
         assert_eq!(r1.iterations, r2.iterations);
         for (a, b) in r1.param.iter().zip(&r2.param) {
             assert!((a - b).abs() < 1e-9);
@@ -292,11 +241,17 @@ mod tests {
     #[test]
     fn openmp_threads_preserve_result() {
         let (p, _) = JacobiProblem::random(30, 1e-16, 4);
-        let p = p.with_backend(MapBackend::PerElement);
         let (q, _) = JacobiProblem::random(30, 1e-16, 4);
-        let q = q.with_backend(MapBackend::PerElement);
-        let r1 = run_threaded(Arc::new(p), &BsfConfig::with_workers(2));
-        let r2 = run_threaded(Arc::new(q), &BsfConfig::with_workers(2).openmp(4));
+        let r1 = Bsf::new(p)
+            .workers(2)
+            .map_backend(PerElementBackend)
+            .run()
+            .unwrap();
+        let r2 = Bsf::new(q)
+            .config(BsfConfig::with_workers(2).openmp(4))
+            .map_backend(PerElementBackend)
+            .run()
+            .unwrap();
         assert_eq!(r1.iterations, r2.iterations);
         for (a, b) in r1.param.iter().zip(&r2.param) {
             assert!((a - b).abs() < 1e-9);
@@ -307,5 +262,25 @@ mod tests {
     fn fixed_point_error_small_at_solution() {
         let (p, x_star) = JacobiProblem::random(16, 1e-22, 5);
         assert!(p.fixed_point_error(&x_star) < 1e-18);
+    }
+
+    #[test]
+    fn xla_spec_packs_args_in_kernel_layout() {
+        let (p, _) = JacobiProblem::random(8, 1e-12, 6);
+        let statics = p.static_args(2, 3, 4);
+        assert_eq!(statics.len(), 1);
+        let (pos, cols, dims) = &statics[0];
+        assert_eq!(*pos, 0);
+        assert_eq!(dims.as_slice(), &[8, 4]);
+        assert_eq!(cols.len(), 32);
+        // padded column (jj = 3) must be all zeros
+        for i in 0..8 {
+            assert_eq!(cols[i * 4 + 3], 0.0);
+        }
+        let dyns = p.dyn_args(&vec![1.0; 8], 2, 3, 4);
+        assert_eq!(dyns.len(), 1);
+        assert_eq!(dyns[0].0, 1);
+        assert_eq!(dyns[0].1, vec![1.0, 1.0, 1.0, 0.0]);
+        let _ = Arc::new(p); // problems stay shareable
     }
 }

@@ -14,23 +14,14 @@
 //! shrinks from a full n-vector to the worker's coordinate block while
 //! the per-worker compute stays `Θ(n²/K)` — the cost model sees a
 //! different `t_recv`, which is exactly the E2 experiment.
+//!
+//! XLA acceleration comes from the [`XlaMapSpec`] impl (the
+//! `jacobi_map_n{n}_c{c}` artifacts); backend choice is a session
+//! concern.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
-use crate::problems::jacobi::pick_artifact;
-use crate::runtime::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::runtime::backend::{PositionedArg, XlaMapSpec};
 use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
-use crate::skeleton::variables::SkelVars;
 use crate::util::mat::{dist2, dot, gen_diag_dominant, jacobi_cd, Mat};
-
-/// Map backend (native loop or the `jacobi_map_*` AOT artifact).
-#[derive(Clone, Default)]
-pub enum MapMapBackend {
-    #[default]
-    Native,
-    Xla(XlaHandle),
-}
 
 /// Jacobi with Map only: workers own row blocks of C.
 pub struct JacobiMapProblem {
@@ -38,30 +29,12 @@ pub struct JacobiMapProblem {
     c: Mat,
     d: Vec<f64>,
     pub eps: f64,
-    backend: MapMapBackend,
-    /// Cached f32 row blocks keyed by (offset, len), padded to the
-    /// artifact chunk size.
-    xla_chunks: Mutex<HashMap<(usize, usize), XlaRows>>,
-}
-
-#[derive(Clone)]
-struct XlaRows {
-    artifact: String,
-    /// Service-side cache keys of the static blocks (§Perf).
-    rows_key: u64,
-    d_key: u64,
 }
 
 impl JacobiMapProblem {
     pub fn from_system(a: &Mat, b: &[f64], eps: f64) -> Self {
         let (c, d) = jacobi_cd(a, b);
-        Self {
-            c,
-            d,
-            eps,
-            backend: MapMapBackend::Native,
-            xla_chunks: Mutex::new(HashMap::new()),
-        }
+        Self { c, d, eps }
     }
 
     pub fn random(n: usize, eps: f64, seed: u64) -> (Self, Vec<f64>) {
@@ -71,64 +44,6 @@ impl JacobiMapProblem {
 
     pub fn n(&self) -> usize {
         self.d.len()
-    }
-
-    pub fn with_backend(mut self, backend: MapMapBackend) -> Self {
-        self.backend = backend;
-        self
-    }
-
-    fn xla_map(
-        &self,
-        handle: &XlaHandle,
-        param: &[f64],
-        offset: usize,
-        len: usize,
-    ) -> Option<Vec<(u64, f64)>> {
-        let n = self.n();
-        let key = (offset, len);
-        let chunk = {
-            let mut cache = self.xla_chunks.lock().unwrap();
-            match cache.get(&key) {
-                Some(c) => c.clone(),
-                None => {
-                    let (artifact, c_pad) = pick_artifact("jacobi_map", n, len)?;
-                    let mut rows = vec![0f32; c_pad * n];
-                    let mut d_chunk = vec![0f32; c_pad];
-                    for (ii, i) in (offset..offset + len).enumerate() {
-                        for j in 0..n {
-                            rows[ii * n + j] = self.c.at(i, j) as f32;
-                        }
-                        d_chunk[ii] = self.d[i] as f32;
-                    }
-                    let rows_key = fresh_input_key();
-                    let d_key = fresh_input_key();
-                    handle
-                        .register_input(rows_key, rows, vec![c_pad as i64, n as i64])
-                        .ok()?;
-                    handle.register_input(d_key, d_chunk, vec![c_pad as i64]).ok()?;
-                    let ch = XlaRows { artifact, rows_key, d_key };
-                    cache.insert(key, ch.clone());
-                    ch
-                }
-            }
-        };
-        let x: Vec<f32> = param.iter().map(|&v| v as f32).collect();
-        let out = handle
-            .execute_spec(
-                &chunk.artifact,
-                vec![
-                    ArgSpec::Cached(chunk.rows_key),
-                    ArgSpec::Dyn(x, vec![n as i64]),
-                    ArgSpec::Cached(chunk.d_key),
-                ],
-            )
-            .ok()?;
-        Some(
-            (0..len)
-                .map(|ii| ((offset + ii) as u64, out[ii] as f64))
-                .collect(),
-        )
     }
 }
 
@@ -173,26 +88,6 @@ impl BsfProblem for JacobiMapProblem {
         out
     }
 
-    fn map_sublist(
-        &self,
-        elems: &[usize],
-        param: &Vec<f64>,
-        vars: &SkelVars,
-    ) -> Option<(Option<Vec<(u64, f64)>>, u64)> {
-        match &self.backend {
-            MapMapBackend::Native => None,
-            MapMapBackend::Xla(handle) => {
-                if elems.is_empty() {
-                    return Some((None, 0));
-                }
-                let pairs =
-                    self.xla_map(handle, param, vars.address_offset, elems.len())?;
-                let count = pairs.len() as u64;
-                Some((Some(pairs), count))
-            }
-        }
-    }
-
     fn process_results(
         &self,
         reduce_result: Option<&Vec<(u64, f64)>>,
@@ -200,11 +95,12 @@ impl BsfProblem for JacobiMapProblem {
         param: &mut Vec<f64>,
         _ctx: &IterCtx,
     ) -> StepDecision {
-        let pairs = reduce_result.expect("map-only Jacobi maps every row");
-        assert_eq!(reduce_counter as usize, self.n(), "every coordinate mapped");
+        debug_assert_eq!(reduce_counter as usize, self.n(), "every coordinate mapped");
         let mut next = vec![0.0; self.n()];
-        for &(i, v) in pairs {
-            next[i as usize] = v;
+        if let Some(pairs) = reduce_result {
+            for &(i, v) in pairs {
+                next[i as usize] = v;
+            }
         }
         let delta = dist2(&next, param);
         *param = next;
@@ -216,16 +112,67 @@ impl BsfProblem for JacobiMapProblem {
     }
 }
 
+impl XlaMapSpec for JacobiMapProblem {
+    fn artifact_kind(&self) -> &'static str {
+        "jacobi_map"
+    }
+
+    fn artifact_dim(&self) -> Option<usize> {
+        Some(self.n())
+    }
+
+    /// Arg 0: the (c_pad, n) row block; arg 2: the d-chunk.
+    fn static_args(&self, offset: usize, len: usize, c_pad: usize) -> Vec<PositionedArg> {
+        let n = self.n();
+        let mut rows = vec![0f32; c_pad * n];
+        let mut d_chunk = vec![0f32; c_pad];
+        for (ii, i) in (offset..offset + len).enumerate() {
+            for j in 0..n {
+                rows[ii * n + j] = self.c.at(i, j) as f32;
+            }
+            d_chunk[ii] = self.d[i] as f32;
+        }
+        vec![
+            (0, rows, vec![c_pad as i64, n as i64]),
+            (2, d_chunk, vec![c_pad as i64]),
+        ]
+    }
+
+    /// Arg 1: the full current approximation x.
+    fn dyn_args(
+        &self,
+        param: &Vec<f64>,
+        _offset: usize,
+        _len: usize,
+        _c_pad: usize,
+    ) -> Vec<PositionedArg> {
+        let n = self.n();
+        let x: Vec<f32> = param.iter().map(|&v| v as f32).collect();
+        vec![(1, x, vec![n as i64])]
+    }
+
+    fn decode_output(
+        &self,
+        out: Vec<f32>,
+        offset: usize,
+        len: usize,
+    ) -> (Option<Vec<(u64, f64)>>, u64) {
+        let pairs: Vec<(u64, f64)> = (0..len)
+            .map(|ii| ((offset + ii) as u64, out[ii] as f64))
+            .collect();
+        (Some(pairs), len as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
-    use std::sync::Arc;
+    use crate::skeleton::Bsf;
 
     #[test]
     fn converges_to_known_solution() {
         let (p, x_star) = JacobiMapProblem::random(24, 1e-20, 11);
-        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(3));
+        let r = Bsf::new(p).workers(3).run().unwrap();
         for (a, b) in r.param.iter().zip(&x_star) {
             assert!((a - b).abs() < 1e-6);
         }
@@ -236,8 +183,8 @@ mod tests {
         use crate::problems::jacobi::JacobiProblem;
         let (p_map, _) = JacobiMapProblem::random(20, 1e-18, 12);
         let (p_red, _) = JacobiProblem::random(20, 1e-18, 12);
-        let r_map = run_threaded(Arc::new(p_map), &BsfConfig::with_workers(4));
-        let r_red = run_threaded(Arc::new(p_red), &BsfConfig::with_workers(4));
+        let r_map = Bsf::new(p_map).workers(4).run().unwrap();
+        let r_red = Bsf::new(p_red).workers(4).run().unwrap();
         // Same iteration count and same fixed point: the two formulations
         // compute the same operator.
         assert_eq!(r_map.iterations, r_red.iterations);
@@ -250,11 +197,25 @@ mod tests {
     fn result_independent_of_worker_count() {
         let (p1, _) = JacobiMapProblem::random(17, 1e-18, 13);
         let (p4, _) = JacobiMapProblem::random(17, 1e-18, 13);
-        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(1));
-        let r4 = run_threaded(Arc::new(p4), &BsfConfig::with_workers(4));
+        let r1 = Bsf::new(p1).workers(1).run().unwrap();
+        let r4 = Bsf::new(p4).workers(4).run().unwrap();
         assert_eq!(r1.iterations, r4.iterations);
         for (a, b) in r1.param.iter().zip(&r4.param) {
             assert!((a - b).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn xla_spec_positions_interleave() {
+        let (p, _) = JacobiMapProblem::random(6, 1e-12, 14);
+        let statics = p.static_args(0, 3, 4);
+        let dyns = p.dyn_args(&vec![0.5; 6], 0, 3, 4);
+        let mut positions: Vec<usize> = statics
+            .iter()
+            .map(|(pos, _, _)| *pos)
+            .chain(dyns.iter().map(|(pos, _, _)| *pos))
+            .collect();
+        positions.sort();
+        assert_eq!(positions, vec![0, 1, 2], "args must fill 0..arity");
     }
 }

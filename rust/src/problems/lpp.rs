@@ -120,7 +120,7 @@ impl BsfProblem for LppProblem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
+    use crate::skeleton::Bsf;
     use std::sync::Arc;
 
     #[test]
@@ -128,7 +128,11 @@ mod tests {
         let p = LppProblem::random(64, 8, 41);
         assert!(p.violations(&p.x0) > 0, "start must be infeasible");
         let p = Arc::new(p);
-        let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(50_000));
+        let r = Bsf::from_arc(Arc::clone(&p))
+            .workers(4)
+            .max_iter(50_000)
+            .run()
+            .unwrap();
         assert_eq!(p.violations(&r.param), 0, "after {} iters", r.iterations);
     }
 
@@ -137,15 +141,15 @@ mod tests {
         let center = vec![0.0; 5];
         let (a, b) = gen_feasible_halfspaces(32, 5, &center, 0.5, 42);
         let p = LppProblem::new(a, b, center, 1.5, 1e-9);
-        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(3));
+        let r = Bsf::new(p).workers(3).run().unwrap();
         assert_eq!(r.iterations, 1);
     }
 
     #[test]
     fn result_independent_of_worker_count() {
         let mk = || LppProblem::random(40, 6, 43);
-        let r1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1).max_iter(50_000));
-        let r5 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(5).max_iter(50_000));
+        let r1 = Bsf::new(mk()).workers(1).max_iter(50_000).run().unwrap();
+        let r5 = Bsf::new(mk()).workers(5).max_iter(50_000).run().unwrap();
         assert_eq!(r1.iterations, r5.iterations);
         for (a, b) in r1.param.iter().zip(&r5.param) {
             assert!((a - b).abs() < 1e-9);

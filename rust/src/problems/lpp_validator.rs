@@ -143,7 +143,7 @@ impl BsfProblem for LppValidator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
+    use crate::skeleton::Bsf;
     use crate::util::mat::gen_feasible_halfspaces;
     use std::sync::Arc;
 
@@ -161,7 +161,7 @@ mod tests {
     fn interior_point() {
         let (a, b) = box_2d();
         let v = LppValidator::new(a, b, vec![0.5, 0.5], 1e-9);
-        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(2));
+        let r = Bsf::new(v).workers(2).run().unwrap();
         assert_eq!(r.iterations, 1);
         assert_eq!(LppValidator::verdict(&r.param), Verdict::Interior);
     }
@@ -170,7 +170,7 @@ mod tests {
     fn vertex_has_dim_active_constraints() {
         let (a, b) = box_2d();
         let v = LppValidator::new(a, b, vec![1.0, 1.0], 1e-9);
-        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(3));
+        let r = Bsf::new(v).workers(3).run().unwrap();
         assert_eq!(LppValidator::verdict(&r.param), Verdict::OnBoundary);
         assert_eq!(r.param.2, 2, "corner of the box = 2 active constraints");
     }
@@ -179,7 +179,7 @@ mod tests {
     fn infeasible_point_reports_worst_violation() {
         let (a, b) = box_2d();
         let v = LppValidator::new(a, b, vec![3.0, 0.5], 1e-9);
-        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(2));
+        let r = Bsf::new(v).workers(2).run().unwrap();
         assert_eq!(LppValidator::verdict(&r.param), Verdict::Infeasible);
         assert!((r.param.0 - 2.0).abs() < 1e-12, "worst = 3 - 1 = 2");
         assert_eq!(r.param.1, 1);
@@ -194,10 +194,13 @@ mod tests {
         let a = p.a.clone();
         let b = p.b.clone();
         let p = Arc::new(p);
-        let solved =
-            run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(50_000));
+        let solved = Bsf::from_arc(Arc::clone(&p))
+            .workers(4)
+            .max_iter(50_000)
+            .run()
+            .unwrap();
         let v = LppValidator::new(a, b, solved.param.clone(), 1e-6);
-        let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(4));
+        let r = Bsf::new(v).workers(4).run().unwrap();
         assert_ne!(LppValidator::verdict(&r.param), Verdict::Infeasible);
     }
 
@@ -207,7 +210,7 @@ mod tests {
         let (a, b) = gen_feasible_halfspaces(30, 4, &center, 0.3, 62);
         for k in [1usize, 3, 7] {
             let v = LppValidator::new(a.clone(), b.clone(), center.clone(), 1e-9);
-            let r = run_threaded(Arc::new(v), &BsfConfig::with_workers(k));
+            let r = Bsf::new(v).workers(k).run().unwrap();
             assert_eq!(LppValidator::verdict(&r.param), Verdict::Interior, "K={k}");
         }
     }

@@ -96,7 +96,9 @@ impl BsfProblem for MonteCarloProblem {
         param: &mut (u64, u64),
         ctx: &IterCtx,
     ) -> StepDecision {
-        let (h, t) = reduce_result.copied().expect("every block samples");
+        // None only for an empty map-list (rejected at session start);
+        // treat it as a zero-sample round.
+        let (h, t) = reduce_result.copied().unwrap_or((0, 0));
         param.0 += h;
         param.1 += t;
         if Self::stderr(param) < self.tol || ctx.iter_counter >= self.max_rounds {
@@ -110,13 +112,12 @@ impl BsfProblem for MonteCarloProblem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::skeleton::{run_threaded, BsfConfig};
-    use std::sync::Arc;
+    use crate::skeleton::Bsf;
 
     #[test]
     fn estimates_pi() {
         let p = MonteCarloProblem::new(16, 2_000, 5e-3);
-        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(4));
+        let r = Bsf::new(p).workers(4).run().unwrap();
         let pi = MonteCarloProblem::estimate(&r.param);
         assert!((pi - std::f64::consts::PI).abs() < 0.05, "pi ≈ {pi}");
     }
@@ -126,8 +127,8 @@ mod tests {
         // Streams are keyed by (block, iter), not by worker — the tally
         // must be identical for any K.
         let mk = || MonteCarloProblem::new(12, 500, 1e-9).max_rounds_(3);
-        let r1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1));
-        let r3 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(3));
+        let r1 = Bsf::new(mk()).workers(1).run().unwrap();
+        let r3 = Bsf::new(mk()).workers(3).run().unwrap();
         assert_eq!(r1.param, r3.param);
         assert_eq!(r1.iterations, 3);
     }

@@ -1,0 +1,268 @@
+//! The problem-agnostic XLA map backend.
+//!
+//! The seed wired XLA acceleration per problem: each of the four
+//! accelerated problems carried its own backend enum, chunk cache and
+//! hand-rolled `pick_artifact` call. [`XlaMapBackend`] replaces all of
+//! that with one skeleton-level [`MapBackend`] implementation driven by a
+//! small declarative trait, [`XlaMapSpec`]: a problem states its artifact
+//! `kind`, its compiled dimension, how to pack its kernel arguments for a
+//! chunk, and how to decode the kernel output into a partial fold. Chunk
+//! selection is a **registry query keyed by `ArtifactMeta.kind`** against
+//! the real manifest (via [`XlaHandle::best_chunk`]), so a new problem
+//! gets XLA acceleration by implementing `XlaMapSpec` — no skeleton or
+//! service changes.
+//!
+//! Failures are recoverable by design: when no artifact fits the chunk,
+//! the problem reports no compiled dimension, the service is gone, or the
+//! build carries no PJRT backend, the backend logs **one** warning and
+//! falls back to the problem's native map (fused kernel or per-element
+//! loop). `bsf run <p> --backend xla` therefore never panics on a missing
+//! artifact — it degrades to native with a note on stderr.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::service::{fresh_input_key, ArgSpec, XlaHandle};
+use crate::error::BsfError;
+use crate::skeleton::backend::MapBackend;
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::variables::SkelVars;
+
+/// A positioned kernel argument: `(arg position, flat f32 data, dims)`.
+pub type PositionedArg = (usize, Vec<f32>, Vec<i64>);
+
+/// Declarative description of a problem's AOT kernel family. Implementing
+/// this trait is all a problem needs to run under [`XlaMapBackend`].
+pub trait XlaMapSpec: BsfProblem {
+    /// Registry key — must match `ArtifactMeta.kind` in the manifest
+    /// (e.g. `"jacobi"`, `"gravity"`).
+    fn artifact_kind(&self) -> &'static str;
+
+    /// The problem dimension `n` its artifacts are compiled for, or
+    /// `None` when this *instance* cannot use compiled kernels (e.g. a
+    /// non-square Cimmino system) — the backend then falls back to the
+    /// native map without touching the registry.
+    fn artifact_dim(&self) -> Option<usize>;
+
+    /// Static kernel arguments for the chunk `[offset, offset+len)`,
+    /// padded to `c_pad` elements. Uploaded to the service **once** per
+    /// chunk and cached there (§Perf: big constant blocks must not ship
+    /// per iteration).
+    fn static_args(&self, offset: usize, len: usize, c_pad: usize) -> Vec<PositionedArg>;
+
+    /// Dynamic kernel arguments, rebuilt every call from the current
+    /// order parameter.
+    fn dyn_args(
+        &self,
+        param: &Self::Param,
+        offset: usize,
+        len: usize,
+        c_pad: usize,
+    ) -> Vec<PositionedArg>;
+
+    /// Decode the kernel's flat f32 output into the chunk's partial fold
+    /// `(value, reduce counter)`.
+    fn decode_output(
+        &self,
+        out: Vec<f32>,
+        offset: usize,
+        len: usize,
+    ) -> (Option<Self::ReduceElem>, u64);
+}
+
+/// Per-chunk resolution: which artifact serves `(offset, len)` and which
+/// service-side keys hold its static inputs.
+#[derive(Clone)]
+struct Chunk {
+    artifact: String,
+    c_pad: usize,
+    /// `(arg position, service cache key)` per static argument.
+    static_keys: Vec<(usize, u64)>,
+}
+
+/// Skeleton-level XLA backend: fused sublist map through the PJRT
+/// service, with automatic native fallback.
+///
+/// The chunk/static-input cache binds to one problem *instance* at a
+/// time: static blocks (matrix chunks, mass vectors, ...) belong to the
+/// instance that produced them, so when the backend observes a
+/// different instance it drops the cache and re-registers rather than
+/// serve another problem's data. (Stale literals stay resident in the
+/// service until it shuts down — bounded by the number of rebinds.)
+pub struct XlaMapBackend {
+    handle: XlaHandle,
+    /// Address of the problem instance the cache currently serves.
+    bound: Mutex<Option<usize>>,
+    /// `(offset, len)` → resolved chunk, or `None` for a known miss (so
+    /// the registry is not re-queried every iteration).
+    chunks: Mutex<HashMap<(usize, usize), Option<Chunk>>>,
+    warned: AtomicBool,
+}
+
+impl XlaMapBackend {
+    pub fn new(handle: XlaHandle) -> Self {
+        Self {
+            handle,
+            bound: Mutex::new(None),
+            chunks: Mutex::new(HashMap::new()),
+            warned: AtomicBool::new(false),
+        }
+    }
+
+    /// Bind the cache to `problem`'s address, clearing it when a
+    /// different instance shows up (e.g. one shared backend reused
+    /// across sessions over different systems). Identity is by address:
+    /// keep the problem alive (Arc) for as long as the backend is
+    /// shared, as a *freed* address could be reused by a new instance.
+    fn rebind_to<P: XlaMapSpec>(&self, problem: &P) {
+        let addr = problem as *const P as *const () as usize;
+        let mut bound = match self.bound.lock() {
+            Ok(b) => b,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if *bound != Some(addr) {
+            if let Ok(mut chunks) = self.chunks.lock() {
+                chunks.clear();
+            }
+            *bound = Some(addr);
+        }
+    }
+
+    fn warn_once(&self, why: &str) {
+        if !self.warned.swap(true, Ordering::Relaxed) {
+            eprintln!("bsf: XLA map unavailable ({why}); falling back to the native map");
+        }
+    }
+
+    /// Negative-cache a chunk after an execution failure so later
+    /// iterations go straight to the native map instead of paying a
+    /// futile service round-trip (+ dyn-arg packing) every time.
+    fn poison_chunk(&self, offset: usize, len: usize) {
+        if let Ok(mut chunks) = self.chunks.lock() {
+            chunks.insert((offset, len), None);
+        }
+    }
+
+    /// Resolve (and cache) the artifact + static inputs for a chunk.
+    fn chunk_for<P: XlaMapSpec>(
+        &self,
+        problem: &P,
+        offset: usize,
+        len: usize,
+    ) -> Result<Option<Chunk>, BsfError> {
+        {
+            let chunks = self
+                .chunks
+                .lock()
+                .map_err(|_| BsfError::xla("XLA backend chunk cache poisoned"))?;
+            if let Some(entry) = chunks.get(&(offset, len)) {
+                return Ok(entry.clone());
+            }
+        }
+
+        let resolved = match problem.artifact_dim() {
+            None => None,
+            Some(n) => match self.handle.best_chunk(problem.artifact_kind(), n, len)? {
+                None => None,
+                Some((artifact, c_pad)) => {
+                    let mut static_keys = Vec::new();
+                    for (pos, data, dims) in problem.static_args(offset, len, c_pad) {
+                        let key = fresh_input_key();
+                        self.handle.register_input(key, data, dims)?;
+                        static_keys.push((pos, key));
+                    }
+                    Some(Chunk { artifact, c_pad, static_keys })
+                }
+            },
+        };
+
+        let mut chunks = self
+            .chunks
+            .lock()
+            .map_err(|_| BsfError::xla("XLA backend chunk cache poisoned"))?;
+        chunks.insert((offset, len), resolved.clone());
+        Ok(resolved)
+    }
+
+    /// Attempt the fused XLA map for one chunk. `Ok(None)` means "no
+    /// artifact fits — use the native fallback".
+    fn try_map<P: XlaMapSpec>(
+        &self,
+        problem: &P,
+        param: &P::Param,
+        offset: usize,
+        len: usize,
+    ) -> Result<Option<(Option<P::ReduceElem>, u64)>, BsfError> {
+        let Some(chunk) = self.chunk_for(problem, offset, len)? else {
+            return Ok(None);
+        };
+
+        let dyns = problem.dyn_args(param, offset, len, chunk.c_pad);
+        let arity = chunk.static_keys.len() + dyns.len();
+        let mut slots: Vec<Option<ArgSpec>> = (0..arity).map(|_| None).collect();
+        for &(pos, key) in &chunk.static_keys {
+            let slot = slots.get_mut(pos).ok_or_else(|| {
+                BsfError::xla(format!("static kernel arg position {pos} out of range"))
+            })?;
+            if slot.is_some() {
+                return Err(BsfError::xla(format!("duplicate kernel arg position {pos}")));
+            }
+            *slot = Some(ArgSpec::Cached(key));
+        }
+        for (pos, data, dims) in dyns {
+            let slot = slots.get_mut(pos).ok_or_else(|| {
+                BsfError::xla(format!("dynamic kernel arg position {pos} out of range"))
+            })?;
+            if slot.is_some() {
+                return Err(BsfError::xla(format!("duplicate kernel arg position {pos}")));
+            }
+            *slot = Some(ArgSpec::Dyn(data, dims));
+        }
+        let args: Vec<ArgSpec> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.ok_or_else(|| BsfError::xla(format!("kernel arg position {i} unfilled")))
+            })
+            .collect::<Result<_, _>>()?;
+
+        let out = self.handle.execute_spec(&chunk.artifact, args)?;
+        Ok(Some(problem.decode_output(out, offset, len)))
+    }
+}
+
+impl<P: XlaMapSpec> MapBackend<P> for XlaMapBackend {
+    fn map_sublist(
+        &self,
+        problem: &P,
+        elems: &[P::MapElem],
+        param: &P::Param,
+        vars: &SkelVars,
+    ) -> Option<(Option<P::ReduceElem>, u64)> {
+        if elems.is_empty() {
+            return Some((None, 0));
+        }
+        self.rebind_to(problem);
+        match self.try_map(problem, param, vars.address_offset, elems.len()) {
+            Ok(Some(fold)) => Some(fold),
+            Ok(None) => {
+                self.warn_once(&format!(
+                    "no AOT artifact of kind {:?} fits a chunk of {} elements",
+                    problem.artifact_kind(),
+                    elems.len()
+                ));
+                problem.map_sublist(elems, param, vars)
+            }
+            Err(e) => {
+                self.warn_once(&e.to_string());
+                self.poison_chunk(vars.address_offset, elems.len());
+                problem.map_sublist(elems, param, vars)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-service"
+    }
+}

@@ -1,0 +1,127 @@
+//! PJRT binding point — the one seam between the artifact registry and a
+//! real XLA runtime.
+//!
+//! The offline dependency universe has no crates.io access, so the crate
+//! cannot link the upstream `xla` binding. This module therefore ships a
+//! **no-backend substitute** with the exact surface the runtime layer
+//! needs: [`Literal`] is a real host-side data carrier (the service's
+//! static-input cache works unchanged), while [`PjRtClient::cpu`] and
+//! [`LoadedExecutable::execute_f32`] report a typed
+//! [`BsfError::XlaUnavailable`]. Everything above this seam — manifest
+//! parsing, the `kind`-keyed artifact registry, chunk selection, the
+//! service thread, input caching, and the automatic native fallback in
+//! `runtime::backend` — is fully functional and tested without a backend.
+//!
+//! Wiring a real PJRT binding means re-implementing the four items below
+//! over that binding (e.g. `xla::PjRtClient`, `xla::Literal`,
+//! `xla::HloModuleProto::from_text`) and flipping [`available`] to true;
+//! no other file changes.
+
+use std::rc::Rc;
+
+use crate::error::BsfError;
+
+/// Whether a real PJRT backend is linked into this build.
+pub const fn available() -> bool {
+    false
+}
+
+fn unavailable(what: &str) -> BsfError {
+    BsfError::XlaUnavailable(format!(
+        "{what} requires a real PJRT binding; this build carries the \
+         no-backend substitute (see runtime::pjrt)"
+    ))
+}
+
+/// Host-side literal: flat f32 data plus dimensions. Real enough for the
+/// service's static-input cache; only device transfer needs a backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over `data`.
+    pub fn vec1(data: &[f32]) -> Self {
+        Self { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Self, BsfError> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(BsfError::xla(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({} elements)",
+                self.dims,
+                dims,
+                self.data.len()
+            )));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// The PJRT client. `Rc`-based in the real binding, hence structurally
+/// `!Send` — the type system itself enforces the "lives on the service
+/// owner thread" invariant.
+pub struct PjRtClient {
+    _single_thread: Rc<()>,
+}
+
+impl PjRtClient {
+    /// Open the CPU PJRT client. Always fails in the no-backend build.
+    pub fn cpu() -> Result<Self, BsfError> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile an HLO-text module into an executable.
+    pub fn compile_hlo_text(&self, _hlo_text: &str) -> Result<LoadedExecutable, BsfError> {
+        Err(unavailable("PjRtClient::compile_hlo_text"))
+    }
+}
+
+/// A compiled-and-loaded executable, owned by the client's thread.
+pub struct LoadedExecutable {
+    _single_thread: Rc<()>,
+}
+
+impl LoadedExecutable {
+    /// Execute with the given argument literals; returns the flattened
+    /// f32 output (modules are lowered with `return_tuple=True`; the
+    /// 1-tuple is unwrapped here).
+    pub fn execute_f32(&self, _args: &[&Literal]) -> Result<Vec<f32>, BsfError> {
+        Err(unavailable("LoadedExecutable::execute_f32"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let l = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_typed_unavailability() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(matches!(err, BsfError::XlaUnavailable(_)), "{err}");
+        assert!(!available());
+    }
+}

@@ -1,12 +1,17 @@
 //! XLA service thread: a `Send + Clone` façade over [`XlaRuntime`].
 //!
-//! `PjRtClient` is `Rc`-based, so the runtime itself cannot cross
-//! threads. The service spawns one owner thread that holds the runtime
-//! and serves execute requests over an mpsc channel; worker threads hold
-//! cloneable [`XlaHandle`]s. Executions are serialized at the service —
-//! on the CPU PJRT backend that is the right default anyway (the client
-//! owns one shared Eigen threadpool; concurrent `execute` calls would
-//! fight over the same cores).
+//! The runtime is structurally `!Send` (its PJRT client and executable
+//! cache are `Rc`-based), so the service spawns one owner thread that
+//! holds the runtime and serves requests over an mpsc channel; worker
+//! threads hold cloneable [`XlaHandle`]s. Executions are serialized at
+//! the service — on the CPU PJRT backend that is the right default
+//! anyway (the client owns one shared Eigen threadpool; concurrent
+//! `execute` calls would fight over the same cores).
+//!
+//! Besides execution the service answers **registry queries**
+//! ([`XlaHandle::best_chunk`]), which is what makes the XLA map backend
+//! problem-agnostic: chunk selection is keyed by `ArtifactMeta.kind`
+//! against the real manifest, not hard-coded per problem.
 //!
 //! ## Static-input caching (§Perf)
 //!
@@ -24,9 +29,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
-
-use super::XlaRuntime;
+use super::{default_artifact_dir, make_literal, pjrt, XlaRuntime};
+use crate::error::BsfError;
 
 /// One argument of a service execute call.
 pub enum ArgSpec {
@@ -40,13 +44,19 @@ enum Request {
     Execute {
         name: String,
         args: Vec<ArgSpec>,
-        reply: Sender<Result<Vec<f32>>>,
+        reply: Sender<Result<Vec<f32>, BsfError>>,
     },
     Register {
         key: u64,
         data: Vec<f32>,
         dims: Vec<i64>,
-        reply: Sender<Result<()>>,
+        reply: Sender<Result<(), BsfError>>,
+    },
+    BestChunk {
+        kind: String,
+        n: usize,
+        len: usize,
+        reply: Sender<Option<(String, usize)>>,
     },
 }
 
@@ -70,22 +80,13 @@ pub fn fresh_input_key() -> u64 {
     NEXT_KEY.fetch_add(1, Ordering::Relaxed)
 }
 
-fn make_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(data);
-    if dims.len() <= 1 {
-        Ok(lit)
-    } else {
-        lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
-    }
-}
-
 impl XlaService {
     /// Start the service over the artifact directory (see
     /// [`XlaRuntime::open`]).
-    pub fn start(dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+    pub fn start(dir: impl Into<std::path::PathBuf>) -> Result<Self, BsfError> {
         let dir = dir.into();
         let (tx, rx) = channel::<Request>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let (ready_tx, ready_rx) = channel::<Result<(), BsfError>>();
         let join = std::thread::Builder::new()
             .name("xla-service".into())
             .spawn(move || {
@@ -99,7 +100,7 @@ impl XlaService {
                         return;
                     }
                 };
-                let mut cache: HashMap<u64, xla::Literal> = HashMap::new();
+                let mut cache: HashMap<u64, pjrt::Literal> = HashMap::new();
                 while let Ok(req) = rx.recv() {
                     match req {
                         Request::Register { key, data, dims, reply } => {
@@ -112,21 +113,26 @@ impl XlaService {
                             let out = execute_spec(&runtime, &cache, &name, &args);
                             let _ = reply.send(out);
                         }
+                        Request::BestChunk { kind, n, len, reply } => {
+                            let best = runtime
+                                .best_chunk(&kind, n, len)
+                                .map(|m| (m.name.clone(), m.c));
+                            let _ = reply.send(best);
+                        }
                     }
                 }
             })
-            .expect("spawn xla-service thread");
+            .map_err(|e| BsfError::xla(format!("spawn xla-service thread: {e}")))?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("xla-service thread died during startup"))??;
+            .map_err(|_| BsfError::xla("xla-service thread died during startup"))??;
         Ok(Self { tx, join: Some(join) })
     }
 
     /// Start over the default artifact directory (`$BSF_ARTIFACTS` or
     /// `./artifacts`).
-    pub fn start_default() -> Result<Self> {
-        let dir = std::env::var("BSF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::start(dir)
+    pub fn start_default() -> Result<Self, BsfError> {
+        Self::start(default_artifact_dir())
     }
 
     pub fn handle(&self) -> XlaHandle {
@@ -137,11 +143,11 @@ impl XlaService {
 /// Build the literal argument list (cached refs + owned dynamics) and run.
 fn execute_spec(
     runtime: &XlaRuntime,
-    cache: &HashMap<u64, xla::Literal>,
+    cache: &HashMap<u64, pjrt::Literal>,
     name: &str,
     args: &[ArgSpec],
-) -> Result<Vec<f32>> {
-    let mut owned: Vec<xla::Literal> = Vec::new();
+) -> Result<Vec<f32>, BsfError> {
+    let mut owned: Vec<pjrt::Literal> = Vec::new();
     // Two passes: materialize dynamics first, then borrow in order.
     for a in args {
         if let ArgSpec::Dyn(data, dims) = a {
@@ -149,15 +155,17 @@ fn execute_spec(
         }
     }
     let mut owned_it = owned.iter();
-    let literals: Vec<&xla::Literal> = args
+    let literals: Vec<&pjrt::Literal> = args
         .iter()
         .map(|a| match a {
-            ArgSpec::Dyn(..) => Ok(owned_it.next().expect("counted above")),
+            ArgSpec::Dyn(..) => owned_it
+                .next()
+                .ok_or_else(|| BsfError::xla("dynamic argument accounting mismatch")),
             ArgSpec::Cached(key) => cache
                 .get(key)
-                .ok_or_else(|| anyhow!("cached input {key} not registered")),
+                .ok_or_else(|| BsfError::xla(format!("cached input {key} not registered"))),
         })
-        .collect::<Result<_>>()?;
+        .collect::<Result<_, _>>()?;
     runtime.execute_literals_f32(name, &literals)
 }
 
@@ -176,21 +184,26 @@ impl Drop for XlaService {
 impl XlaHandle {
     /// Upload a static input block once; it stays resident in the service
     /// under `key` (see [`fresh_input_key`]).
-    pub fn register_input(&self, key: u64, data: Vec<f32>, dims: Vec<i64>) -> Result<()> {
+    pub fn register_input(
+        &self,
+        key: u64,
+        data: Vec<f32>,
+        dims: Vec<i64>,
+    ) -> Result<(), BsfError> {
         let (reply, rx) = channel();
         self.tx
             .send(Request::Register { key, data, dims, reply })
-            .map_err(|_| anyhow!("xla-service is gone"))?;
-        rx.recv().map_err(|_| anyhow!("xla-service dropped the request"))?
+            .map_err(|_| BsfError::xla("xla-service is gone"))?;
+        rx.recv().map_err(|_| BsfError::xla("xla-service dropped the request"))?
     }
 
     /// Execute artifact `name` with a mix of cached and dynamic args.
-    pub fn execute_spec(&self, name: &str, args: Vec<ArgSpec>) -> Result<Vec<f32>> {
+    pub fn execute_spec(&self, name: &str, args: Vec<ArgSpec>) -> Result<Vec<f32>, BsfError> {
         let (reply, rx) = channel();
         self.tx
             .send(Request::Execute { name: name.to_string(), args, reply })
-            .map_err(|_| anyhow!("xla-service is gone"))?;
-        rx.recv().map_err(|_| anyhow!("xla-service dropped the request"))?
+            .map_err(|_| BsfError::xla("xla-service is gone"))?;
+        rx.recv().map_err(|_| BsfError::xla("xla-service dropped the request"))?
     }
 
     /// Execute with all-dynamic inputs (back-compat convenience).
@@ -198,10 +211,26 @@ impl XlaHandle {
         &self,
         name: &str,
         inputs: Vec<(Vec<f32>, Vec<i64>)>,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<Vec<f32>, BsfError> {
         self.execute_spec(
             name,
             inputs.into_iter().map(|(d, s)| ArgSpec::Dyn(d, s)).collect(),
         )
+    }
+
+    /// Registry query: the smallest compiled chunk of `kind` at dimension
+    /// `n` that fits `len` elements (`None` when nothing fits). This is
+    /// the problem-agnostic artifact lookup the XLA map backend uses.
+    pub fn best_chunk(
+        &self,
+        kind: &str,
+        n: usize,
+        len: usize,
+    ) -> Result<Option<(String, usize)>, BsfError> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::BestChunk { kind: kind.to_string(), n, len, reply })
+            .map_err(|_| BsfError::xla("xla-service is gone"))?;
+        rx.recv().map_err(|_| BsfError::xla("xla-service dropped the request"))
     }
 }

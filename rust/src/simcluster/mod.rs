@@ -17,16 +17,25 @@
 //! This reproduces the max-of-stragglers and master-serialization effects
 //! the analytic model idealizes, so model-vs-simulation disagreement is a
 //! meaningful quantity (reported in E5).
+//!
+//! The session-facing entry point is
+//! [`SimulatedEngine`](crate::skeleton::engine::SimulatedEngine);
+//! [`simulate`] is the engine's workhorse and [`run_simulated`] survives
+//! as a thin deprecated shim for the seed-era API.
 
 use std::time::Instant;
 
 use crate::costmodel::ClusterProfile;
+use crate::error::BsfError;
+use crate::skeleton::backend::{FusedNativeBackend, MapBackend};
 use crate::skeleton::config::BsfConfig;
+use crate::skeleton::master::{decide_step, next_job_error};
 use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::reduce::{merge_folds, ExtendedFold};
+use crate::skeleton::runner::validate_run;
 use crate::skeleton::split::all_ranges;
-use crate::skeleton::worker::map_and_fold;
-use crate::skeleton::workflow::validate_job_count;
+use crate::skeleton::variables::SkelVars;
+use crate::skeleton::worker::{map_and_fold, WorkerReport};
 use crate::util::codec::Codec;
 
 /// How the simulator charges worker compute time.
@@ -75,7 +84,8 @@ impl IterBreakdown {
     }
 }
 
-/// Result of a simulated run.
+/// Result of a simulated run (seed-era shape; the session API wraps this
+/// into the unified `RunReport`).
 #[derive(Debug, Clone)]
 pub struct SimReport<Param> {
     pub param: Param,
@@ -91,15 +101,17 @@ pub struct SimReport<Param> {
     pub bytes: u64,
 }
 
-/// Run `problem` on a simulated cluster of `cfg.workers` nodes.
-pub fn run_simulated<P: BsfProblem>(
+/// Run `problem` on a simulated cluster of `cfg.workers` nodes, mapping
+/// sublists through `backend`. Returns the seed-shaped [`SimReport`]
+/// plus per-worker summaries (for the unified report).
+pub fn simulate<P: BsfProblem>(
     problem: &P,
+    backend: &dyn MapBackend<P>,
     cfg: &BsfConfig,
     sim: &SimConfig,
-) -> SimReport<P::Param> {
+) -> Result<(SimReport<P::Param>, Vec<WorkerReport>), BsfError> {
+    validate_run(problem, cfg)?;
     let k = cfg.workers;
-    assert!(k >= 1, "need at least one worker");
-    validate_job_count(problem.job_count());
 
     let n = problem.list_size();
     let ranges = all_ranges(n, k);
@@ -122,6 +134,7 @@ pub fn run_simulated<P: BsfProblem>(
     let mut messages = 0u64;
     let mut bytes = 0u64;
     let mut acc = IterBreakdown::default();
+    let mut map_seconds = vec![0.0f64; k];
 
     loop {
         let order_payload = (job, param.clone()).to_bytes();
@@ -134,24 +147,22 @@ pub fn run_simulated<P: BsfProblem>(
         bytes += (k * order_bytes) as u64;
 
         // Phase 2: execute every worker's real map, measure/charge time.
-        let mut arrivals: Vec<(f64, ExtendedFold<P::ReduceElem>, usize)> =
+        let mut arrivals: Vec<(f64, ExtendedFold<P::ReduceElem>)> =
             Vec::with_capacity(k);
         for (rank, elems) in sublists.iter().enumerate() {
             let (off, len) = ranges[rank];
+            let vars = SkelVars::for_worker(rank, k, off, len, iter, job);
             let t0 = Instant::now();
-            let fold = map_and_fold(
-                problem,
-                elems,
-                &param,
-                rank,
-                k,
-                off,
-                iter,
-                job,
-                cfg.openmp_threads,
-            );
+            // Same contract as the real engines: a panicking map becomes
+            // a typed WorkerPanic for the simulated node's rank.
+            let fold = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                map_and_fold(problem, backend, elems, &param, vars, cfg.openmp_threads)
+            }))
+            .map_err(|_| BsfError::WorkerPanic { rank })?;
+            let wall = t0.elapsed().as_secs_f64();
+            map_seconds[rank] += wall;
             let t_map = match sim.compute {
-                ComputeTime::Measured => t0.elapsed().as_secs_f64(),
+                ComputeTime::Measured => wall,
                 ComputeTime::PerElement(te) => len as f64 * te,
             };
             let fold_len = (fold.value.clone(), fold.counter).to_bytes().len();
@@ -159,9 +170,9 @@ pub fn run_simulated<P: BsfProblem>(
             let arrive = start + t_map + lat + fold_len as f64 * beta;
             messages += 1;
             bytes += fold_len as u64;
-            arrivals.push((arrive, fold, fold_len));
+            arrivals.push((arrive, fold));
         }
-        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
         let last_arrival = arrivals.last().map(|a| a.0).unwrap_or(send_all);
 
         // Phase 3: master folds the partial results. The fold happens in
@@ -170,12 +181,13 @@ pub fn run_simulated<P: BsfProblem>(
         // arrival (⊕ is cheap relative to comm, so overlapping it with
         // still-in-flight folds changes virtual time by < t_op · K).
         let folds: Vec<ExtendedFold<P::ReduceElem>> =
-            arrivals.into_iter().map(|(_, f, _)| f).collect();
+            arrivals.into_iter().map(|(_, f)| f).collect();
         let t0 = Instant::now();
         let merged = merge_folds(folds, |a, b| problem.reduce_f(a, b, job));
         let reduce_wall = t0.elapsed().as_secs_f64();
 
-        // Phase 4: process_results (+dispatcher), timed for real.
+        // Phase 4: the shared decision step (process_results +
+        // dispatcher + iteration cap), timed for real.
         iter += 1;
         let ctx = IterCtx {
             iter_counter: iter,
@@ -184,11 +196,7 @@ pub fn run_simulated<P: BsfProblem>(
             elapsed: vtime,
         };
         let t0 = Instant::now();
-        let mut decision =
-            problem.process_results(merged.value.as_ref(), merged.counter, &mut param, &ctx);
-        if let Some(over) = problem.job_dispatcher(&mut param, decision, &ctx) {
-            decision = over;
-        }
+        let decision = decide_step(problem, &merged, &mut param, &ctx, cfg.max_iter);
         let proc_wall = t0.elapsed().as_secs_f64();
 
         if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
@@ -199,9 +207,6 @@ pub fn run_simulated<P: BsfProblem>(
                 &ctx,
                 decision.next_job,
             );
-        }
-        if iter >= cfg.max_iter {
-            decision.exit = true;
         }
 
         // Exit broadcast: K sequential small messages (1 byte payload).
@@ -224,7 +229,17 @@ pub fn run_simulated<P: BsfProblem>(
         if decision.exit {
             problem.problem_output(merged.value.as_ref(), merged.counter, &param, vtime);
             let inv = 1.0 / iter as f64;
-            return SimReport {
+            let workers: Vec<WorkerReport> = ranges
+                .iter()
+                .enumerate()
+                .map(|(rank, &(_, len))| WorkerReport {
+                    rank,
+                    iterations: iter,
+                    map_seconds: map_seconds[rank],
+                    sublist_length: len,
+                })
+                .collect();
+            let report = SimReport {
                 param,
                 iterations: iter,
                 virtual_seconds: vtime,
@@ -238,7 +253,23 @@ pub fn run_simulated<P: BsfProblem>(
                 messages,
                 bytes,
             };
+            return Ok((report, workers));
+        }
+        if let Some(e) = next_job_error(problem, &decision) {
+            return Err(e);
         }
         job = decision.next_job;
     }
+}
+
+/// Seed-era entry point. Panics on any error, exactly as the seed did.
+#[deprecated(note = "use Bsf::new(problem).engine(SimulatedEngine::with_config(sim)).run()")]
+pub fn run_simulated<P: BsfProblem>(
+    problem: &P,
+    cfg: &BsfConfig,
+    sim: &SimConfig,
+) -> SimReport<P::Param> {
+    simulate(problem, &FusedNativeBackend, cfg, sim)
+        .expect("bsf: simulated run failed")
+        .0
 }

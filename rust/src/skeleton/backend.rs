@@ -1,0 +1,118 @@
+//! Worker map backends — how a worker's sublist is actually mapped.
+//!
+//! The seed wired native-vs-XLA execution ad hoc inside each problem
+//! (`JacobiProblem::with_backend(MapBackend::Xla(..))` and three more
+//! per-problem enums). The [`MapBackend`] trait lifts that choice to the
+//! skeleton layer: a [`Bsf`](crate::skeleton::session::Bsf) session owns
+//! one backend and every engine threads it down to the worker's
+//! map-and-fold, so problem code never names an execution substrate.
+//!
+//! Three implementations ship with the crate:
+//!
+//! * [`PerElementBackend`] — the faithful per-element `PC_bsf_MapF` loop
+//!   (plus the OpenMP-analog intra-worker split when configured);
+//! * [`FusedNativeBackend`] — the default: use the problem's optional
+//!   fused [`BsfProblem::map_sublist`] kernel when it provides one, fall
+//!   back to the per-element loop otherwise;
+//! * [`XlaMapBackend`](crate::runtime::backend::XlaMapBackend) — run the
+//!   AOT-compiled XLA artifact for the chunk through the PJRT service,
+//!   resolved problem-agnostically from the artifact registry by
+//!   `ArtifactMeta.kind`; falls back to the native map (with a one-shot
+//!   warning) when no artifact fits or no PJRT backend is linked in.
+
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::variables::SkelVars;
+
+/// Strategy for mapping one worker's whole sublist.
+///
+/// Returning `Some((fold, counter))` replaces the per-element `map_f`
+/// loop + local reduce for this sublist; returning `None` hands control
+/// back to the skeleton's per-element loop (which also honors
+/// `BsfConfig::openmp_threads`).
+pub trait MapBackend<P: BsfProblem>: Send + Sync {
+    /// Map + locally reduce `elems` (the worker's static sublist) under
+    /// the current order `param`.
+    fn map_sublist(
+        &self,
+        problem: &P,
+        elems: &[P::MapElem],
+        param: &P::Param,
+        vars: &SkelVars,
+    ) -> Option<(Option<P::ReduceElem>, u64)>;
+
+    /// Human-readable backend name (reports, traces).
+    fn name(&self) -> &'static str;
+}
+
+/// The faithful per-element loop: ignore any fused kernel the problem
+/// offers and map element by element, exactly as the paper's
+/// `BC_WorkerMap` does.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PerElementBackend;
+
+impl<P: BsfProblem> MapBackend<P> for PerElementBackend {
+    fn map_sublist(
+        &self,
+        _problem: &P,
+        _elems: &[P::MapElem],
+        _param: &P::Param,
+        _vars: &SkelVars,
+    ) -> Option<(Option<P::ReduceElem>, u64)> {
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "per-element"
+    }
+}
+
+/// The default backend: delegate to the problem's optional fused
+/// sublist kernel ([`BsfProblem::map_sublist`]), falling back to the
+/// per-element loop when the problem has none.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FusedNativeBackend;
+
+impl<P: BsfProblem> MapBackend<P> for FusedNativeBackend {
+    fn map_sublist(
+        &self,
+        problem: &P,
+        elems: &[P::MapElem],
+        param: &P::Param,
+        vars: &SkelVars,
+    ) -> Option<(Option<P::ReduceElem>, u64)> {
+        problem.map_sublist(elems, param, vars)
+    }
+
+    fn name(&self) -> &'static str {
+        "fused-native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::jacobi::JacobiProblem;
+
+    #[test]
+    fn per_element_always_defers() {
+        let (p, _) = JacobiProblem::random(8, 1e-12, 1);
+        let vars = SkelVars::for_worker(0, 1, 0, 8, 0, 0);
+        let elems: Vec<usize> = (0..8).collect();
+        let param = vec![1.0; 8];
+        assert!(MapBackend::map_sublist(&PerElementBackend, &p, &elems, &param, &vars)
+            .is_none());
+    }
+
+    #[test]
+    fn fused_native_uses_problem_kernel() {
+        let (p, _) = JacobiProblem::random(8, 1e-12, 1);
+        let vars = SkelVars::for_worker(0, 1, 0, 8, 0, 0);
+        let elems: Vec<usize> = (0..8).collect();
+        let param = vec![1.0; 8];
+        let (value, counter) =
+            MapBackend::map_sublist(&FusedNativeBackend, &p, &elems, &param, &vars)
+                .expect("jacobi provides a fused kernel");
+        assert_eq!(counter, 8);
+        assert!(value.is_some());
+    }
+}

@@ -1,0 +1,271 @@
+//! Execution engines — *where* a [`Bsf`](crate::skeleton::session::Bsf)
+//! session runs.
+//!
+//! The paper's pitch is that the skeleton "completely encapsulates all
+//! aspects associated with parallelizing a program": the same problem
+//! definition must drive real execution *and* pre-implementation
+//! scalability estimation (the companion BSF-model paper). The [`Engine`]
+//! trait is that seam. One session, one problem, one config — and the
+//! engine decides whether iterations run on real worker threads
+//! ([`ThreadedEngine`]), in-process without any transport
+//! ([`SerialEngine`], the K=1 fast path), or on the virtual-time cluster
+//! simulator ([`SimulatedEngine`]). All three return the same
+//! [`RunReport`].
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::costmodel::ClusterProfile;
+use crate::error::BsfError;
+use crate::metrics::{Phase, PhaseTimers};
+use crate::simcluster::{simulate, SimConfig};
+use crate::skeleton::backend::MapBackend;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::master::{decide_step, next_job_error};
+use crate::skeleton::problem::{BsfProblem, IterCtx};
+use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
+use crate::skeleton::runner::{run_threaded_session, validate_run};
+use crate::skeleton::variables::SkelVars;
+use crate::skeleton::worker::{map_and_fold, WorkerReport};
+
+/// An execution strategy for one skeleton run.
+pub trait Engine<P: BsfProblem> {
+    /// Engine name, recorded in [`RunReport::engine`].
+    fn name(&self) -> &'static str;
+
+    /// Run `problem` under `cfg`, mapping worker sublists through
+    /// `backend`.
+    fn run(
+        &self,
+        problem: Arc<P>,
+        backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+    ) -> Result<RunReport<P::Param>, BsfError>;
+}
+
+/// Real execution: K worker OS threads + the calling thread as master
+/// over the in-process message transport (the seed's `run_threaded`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThreadedEngine;
+
+impl<P: BsfProblem> Engine<P> for ThreadedEngine {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn run(
+        &self,
+        problem: Arc<P>,
+        backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+    ) -> Result<RunReport<P::Param>, BsfError> {
+        run_threaded_session(problem, backend, cfg)
+    }
+}
+
+/// The K=1 fast path: the whole computation on the calling thread, no
+/// transport, no codec — bit-identical numerics to a threaded K=1 run
+/// (the codec is a lossless little-endian round-trip) at zero
+/// message-passing cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SerialEngine;
+
+impl<P: BsfProblem> Engine<P> for SerialEngine {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn run(
+        &self,
+        problem: Arc<P>,
+        backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+    ) -> Result<RunReport<P::Param>, BsfError> {
+        validate_run(&*problem, cfg)?;
+        if cfg.workers != 1 {
+            return Err(BsfError::config(format!(
+                "SerialEngine is the K=1 fast path; cfg.workers is {} \
+                 (use ThreadedEngine or workers(1))",
+                cfg.workers
+            )));
+        }
+
+        let n = problem.list_size();
+        // Step 1: the single worker's static sublist is the whole list.
+        let elems: Vec<P::MapElem> = (0..n).map(|i| problem.map_list_elem(i)).collect();
+
+        let mut param = problem.init_parameter();
+        problem.parameters_output(&param);
+
+        let t0 = Instant::now();
+        let mut timers = PhaseTimers::new();
+        let mut map_seconds = 0.0f64;
+        let mut job = 0usize;
+        let mut iter = 0usize;
+
+        loop {
+            // Steps 3-4 (worker side): Map + local Reduce over the list.
+            // Like the threaded engine, a panic in user map code becomes
+            // a typed WorkerPanic instead of unwinding through the API.
+            let vars = SkelVars::for_worker(0, 1, 0, n, iter, job);
+            let tm = Instant::now();
+            let mapped = timers.time(Phase::Gather, || {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    map_and_fold(
+                        &*problem,
+                        &*backend,
+                        &elems,
+                        &param,
+                        vars,
+                        cfg.openmp_threads,
+                    )
+                }))
+            });
+            let merged = match mapped {
+                Ok(fold) => fold,
+                Err(_) => return Err(BsfError::WorkerPanic { rank: 0 }),
+            };
+            map_seconds += tm.elapsed().as_secs_f64();
+
+            // Steps 7-9 (master side): the shared decision step.
+            iter += 1;
+            let ctx = IterCtx {
+                iter_counter: iter,
+                job_case: job,
+                num_of_workers: 1,
+                elapsed: t0.elapsed().as_secs_f64(),
+            };
+            let decision = timers.time(Phase::Process, || {
+                decide_step(&*problem, &merged, &mut param, &ctx, cfg.max_iter)
+            });
+
+            if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
+                problem.iter_output(
+                    merged.value.as_ref(),
+                    merged.counter,
+                    &param,
+                    &ctx,
+                    decision.next_job,
+                );
+            }
+
+            if decision.exit {
+                let elapsed = t0.elapsed().as_secs_f64();
+                problem.problem_output(
+                    merged.value.as_ref(),
+                    merged.counter,
+                    &param,
+                    elapsed,
+                );
+                return Ok(RunReport {
+                    param,
+                    iterations: iter,
+                    elapsed,
+                    clock: Clock::Real,
+                    wall_seconds: elapsed,
+                    engine: "serial",
+                    phases: PhaseBreakdown::from_timers(&timers),
+                    workers: vec![WorkerReport {
+                        rank: 0,
+                        iterations: iter,
+                        map_seconds,
+                        sublist_length: n,
+                    }],
+                    messages: 0,
+                    bytes: 0,
+                });
+            }
+
+            if let Some(e) = next_job_error(&*problem, &decision) {
+                return Err(e);
+            }
+            job = decision.next_job;
+        }
+    }
+}
+
+/// Virtual-time execution on the cluster simulator: every worker's real
+/// Map runs on this machine while communication and serialization are
+/// charged from the [`ClusterProfile`] — the paper's "hundreds of nodes"
+/// substitution. `RunReport::elapsed` is virtual cluster seconds
+/// ([`Clock::Virtual`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SimulatedEngine {
+    sim: SimConfig,
+}
+
+impl SimulatedEngine {
+    /// Simulate on the given interconnect profile with measured compute.
+    pub fn new(profile: ClusterProfile) -> Self {
+        Self { sim: SimConfig::new(profile) }
+    }
+
+    /// Simulate with a fully explicit [`SimConfig`] (e.g. deterministic
+    /// per-element compute charging).
+    pub fn with_config(sim: SimConfig) -> Self {
+        Self { sim }
+    }
+
+    pub fn sim_config(&self) -> &SimConfig {
+        &self.sim
+    }
+}
+
+impl<P: BsfProblem> Engine<P> for SimulatedEngine {
+    fn name(&self) -> &'static str {
+        "simulated"
+    }
+
+    fn run(
+        &self,
+        problem: Arc<P>,
+        backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+    ) -> Result<RunReport<P::Param>, BsfError> {
+        let (r, workers) = simulate(&*problem, &*backend, cfg, &self.sim)?;
+        let iters = r.iterations as f64;
+        Ok(RunReport {
+            param: r.param,
+            iterations: r.iterations,
+            elapsed: r.virtual_seconds,
+            clock: Clock::Virtual,
+            wall_seconds: r.real_seconds,
+            engine: "simulated",
+            // SimReport's breakdown is a per-iteration mean; the unified
+            // report carries whole-run totals like the other engines.
+            phases: PhaseBreakdown {
+                send: r.breakdown.send * iters,
+                gather: r.breakdown.compute_and_gather * iters,
+                reduce: r.breakdown.master_reduce * iters,
+                process: r.breakdown.process_and_exit * iters,
+            },
+            workers,
+            messages: r.messages,
+            bytes: r.bytes,
+        })
+    }
+}
+
+/// The default engine: [`SerialEngine`] when `cfg.workers == 1`,
+/// [`ThreadedEngine`] otherwise.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AutoEngine;
+
+impl<P: BsfProblem> Engine<P> for AutoEngine {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn run(
+        &self,
+        problem: Arc<P>,
+        backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+    ) -> Result<RunReport<P::Param>, BsfError> {
+        if cfg.workers == 1 {
+            SerialEngine.run(problem, backend, cfg)
+        } else {
+            ThreadedEngine.run(problem, backend, cfg)
+        }
+    }
+}

@@ -6,16 +6,71 @@
 //! `BC_ProcessExtendedReduceList`), runs `process_results` +
 //! `job_dispatcher`, and broadcasts the exit flag. Steps 2 and 10 are the
 //! implicit global synchronization points the paper notes.
+//!
+//! All failure modes are typed [`BsfError`]s; on a mid-run configuration
+//! error (e.g. `process_results` returns an out-of-range `next_job`) the
+//! master broadcasts the exit flag first so workers terminate cleanly,
+//! then reports the error.
 
 use std::time::Instant;
 
+use crate::error::BsfError;
 use crate::metrics::{Phase, PhaseTimers};
 use crate::skeleton::config::BsfConfig;
 use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::reduce::{merge_folds, ExtendedFold};
-use crate::skeleton::workflow::validate_job_count;
+use crate::skeleton::runner::validate_run;
 use crate::transport::{Communicator, Tag};
 use crate::util::codec::Codec;
+
+/// Best-effort shutdown broadcast: tell every worker to exit, ignoring
+/// unreachable ones. Used on every master-side error path so surviving
+/// workers terminate instead of blocking the runner's join.
+fn abort_workers<C: Communicator>(comm: &C, k: usize) {
+    let payload = true.to_bytes();
+    for w in 0..k {
+        let _ = comm.send(w, Tag::Exit, payload.clone());
+    }
+}
+
+/// Steps 7-9 of Algorithm 2, shared by every engine: `process_results`
+/// + `job_dispatcher`, then force exit at the iteration cap. Trace
+/// output and wall-time attribution stay with the caller — the engines
+/// instrument them differently.
+pub(crate) fn decide_step<P: BsfProblem>(
+    problem: &P,
+    merged: &ExtendedFold<P::ReduceElem>,
+    param: &mut P::Param,
+    ctx: &IterCtx,
+    max_iter: usize,
+) -> crate::skeleton::workflow::JobDecision {
+    let mut d =
+        problem.process_results(merged.value.as_ref(), merged.counter, param, ctx);
+    if let Some(over) = problem.job_dispatcher(param, d, ctx) {
+        d = over;
+    }
+    if ctx.iter_counter >= max_iter {
+        d.exit = true;
+    }
+    d
+}
+
+/// The shared out-of-range `next_job` configuration error (None when the
+/// decision is valid or exiting anyway).
+pub(crate) fn next_job_error<P: BsfProblem>(
+    problem: &P,
+    d: &crate::skeleton::workflow::JobDecision,
+) -> Option<BsfError> {
+    if !d.exit && d.next_job >= problem.job_count() {
+        Some(BsfError::config(format!(
+            "process_results/job_dispatcher chose next_job {} but job_count is {}",
+            d.next_job,
+            problem.job_count()
+        )))
+    } else {
+        None
+    }
+}
 
 /// Result of a master run.
 #[derive(Debug, Clone)]
@@ -37,15 +92,26 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
     problem: &P,
     comm: &C,
     cfg: &BsfConfig,
-) -> MasterOutcome<P::Param> {
+) -> Result<MasterOutcome<P::Param>, BsfError> {
     let k = cfg.workers;
-    assert_eq!(comm.rank(), comm.master_rank(), "master must run on rank K");
-    assert_eq!(comm.size(), k + 1, "transport size must be workers+1");
-    validate_job_count(problem.job_count());
-    assert!(
-        problem.list_size() >= 1,
-        "PC_bsf_SetListSize must return a positive list size"
-    );
+    if comm.rank() != comm.master_rank() {
+        return Err(BsfError::config(format!(
+            "master must run on rank {} (got {})",
+            comm.master_rank(),
+            comm.rank()
+        )));
+    }
+    if comm.size() != k + 1 {
+        return Err(BsfError::config(format!(
+            "transport size {} must be workers+1 = {}",
+            comm.size(),
+            k + 1
+        )));
+    }
+    // Problem/config validation shares one source of truth with the
+    // other engines (run_master is also a public entry point, so it
+    // must not rely on the caller having validated).
+    validate_run(problem, cfg)?;
 
     let mut param = problem.init_parameter();
     problem.parameters_output(&param);
@@ -57,29 +123,67 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
 
     loop {
         // Step 2: SendToAllWorkers(x^(i)) — the order carries (job, param).
-        timers.time(Phase::SendOrder, || {
+        let sent = timers.time(Phase::SendOrder, || -> Result<(), BsfError> {
             let payload = (job, param.clone()).to_bytes();
             for w in 0..k {
-                comm.send(w, Tag::Order, payload.clone());
+                comm.send(w, Tag::Order, payload.clone())?;
             }
+            Ok(())
         });
+        if let Err(e) = sent {
+            abort_workers(comm, k);
+            return Err(e);
+        }
 
         // Step 5: RecvFromWorkers(s_0, ..., s_{K-1}). Messages arrive in
         // completion order (recv_any ≈ MPI_Waitany) but are folded in
         // *rank order*, exactly as Algorithm 2 writes the list
         // [s_0, ..., s_{K-1}] — this keeps the fold deterministic (no
         // run-to-run float reassociation from thread scheduling).
-        let folds: Vec<ExtendedFold<P::ReduceElem>> = timers.time(Phase::Gather, || {
+        type Gathered<R> = Result<Vec<ExtendedFold<R>>, BsfError>;
+        let gathered = timers.time(Phase::Gather, || -> Gathered<P::ReduceElem> {
             let mut by_rank: Vec<Option<ExtendedFold<P::ReduceElem>>> =
                 (0..k).map(|_| None).collect();
             for _ in 0..k {
-                let m = comm.recv_any(Tag::Fold);
+                let m = comm.recv_tags(None, &[Tag::Fold, Tag::Abort])?;
+                // A worker died in user map/reduce code: stop gathering.
+                if m.tag == Tag::Abort {
+                    return Err(BsfError::WorkerPanic { rank: m.from });
+                }
+                if m.from >= k {
+                    return Err(BsfError::transport(format!(
+                        "fold from non-worker rank {}",
+                        m.from
+                    )));
+                }
+                if by_rank[m.from].is_some() {
+                    return Err(BsfError::transport(format!(
+                        "duplicate fold from worker {}",
+                        m.from
+                    )));
+                }
                 let (value, counter) =
                     <(Option<P::ReduceElem>, u64)>::from_bytes(&m.payload);
                 by_rank[m.from] = Some(ExtendedFold { value, counter });
             }
-            by_rank.into_iter().map(|f| f.expect("one fold per worker")).collect()
+            by_rank
+                .into_iter()
+                .enumerate()
+                .map(|(rank, f)| {
+                    f.ok_or_else(|| {
+                        BsfError::transport(format!("no fold from worker {rank}"))
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
         });
+        let folds: Vec<ExtendedFold<P::ReduceElem>> = match gathered {
+            Ok(folds) => folds,
+            Err(e) => {
+                // Release the surviving workers before reporting.
+                abort_workers(comm, k);
+                return Err(e);
+            }
+        };
 
         // Step 6: s := Reduce(⊕, [s_0, ..., s_{K-1}]).
         let merged = timers.time(Phase::MasterReduce, || {
@@ -94,17 +198,8 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
             num_of_workers: k,
             elapsed: t0.elapsed().as_secs_f64(),
         };
-        let mut decision = timers.time(Phase::Process, || {
-            let mut d = problem.process_results(
-                merged.value.as_ref(),
-                merged.counter,
-                &mut param,
-                &ctx,
-            );
-            if let Some(over) = problem.job_dispatcher(&mut param, d, &ctx) {
-                d = over;
-            }
-            d
+        let decision = timers.time(Phase::Process, || {
+            decide_step(problem, &merged, &mut param, &ctx, cfg.max_iter)
         });
 
         if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
@@ -117,17 +212,35 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
             );
         }
 
-        if iter >= cfg.max_iter {
-            decision.exit = true;
+        // An out-of-range next_job is a configuration error — but workers
+        // are blocked on the exit flag, so tell them to stop first.
+        let bad_job = next_job_error(problem, &decision);
+        let exit_flag = decision.exit || bad_job.is_some();
+
+        // Step 10: SendToAllWorkers(exit). Best-effort on failure: the
+        // surviving workers must still be released (a worker at the top
+        // of its loop accepts an exit order too), so finish the
+        // broadcast before reporting the first send error.
+        let exit_send = timers.time(Phase::SendOrder, || {
+            let payload = exit_flag.to_bytes();
+            let mut first: Option<BsfError> = None;
+            for w in 0..k {
+                if let Err(e) = comm.send(w, Tag::Exit, payload.clone()) {
+                    first.get_or_insert(e);
+                }
+            }
+            first
+        });
+        if let Some(e) = exit_send {
+            if !exit_flag {
+                abort_workers(comm, k);
+            }
+            return Err(e);
         }
 
-        // Step 10: SendToAllWorkers(exit).
-        timers.time(Phase::SendOrder, || {
-            let payload = decision.exit.to_bytes();
-            for w in 0..k {
-                comm.send(w, Tag::Exit, payload.clone());
-            }
-        });
+        if let Some(e) = bad_job {
+            return Err(e);
+        }
 
         if decision.exit {
             let elapsed = t0.elapsed().as_secs_f64();
@@ -137,15 +250,9 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
                 &param,
                 elapsed,
             );
-            return MasterOutcome { param, iterations: iter, elapsed, timers };
+            return Ok(MasterOutcome { param, iterations: iter, elapsed, timers });
         }
 
-        assert!(
-            decision.next_job < problem.job_count(),
-            "next_job {} out of range (job_count {})",
-            decision.next_job,
-            problem.job_count()
-        );
         job = decision.next_job;
     }
 }

@@ -14,22 +14,35 @@
 //! | `Problem-bsfParameters.h` (`PP_BSF_*` macros) | [`BsfConfig`] |
 //! | workflow (`PP_BSF_MAX_JOB_CASE`, `PC_bsf_JobDispatcher`) | [`workflow`] + trait hooks |
 //!
-//! [`runner::run_threaded`] wires master + K workers over the thread
-//! transport and is the entry point analogous to "build and run the
-//! solution in the MPI environment" (Step 8 of the paper's instruction).
+//! The public entry point is the [`Bsf`] session builder
+//! ([`session`]): it owns the problem, the config, the execution
+//! [`Engine`] (threaded / serial / simulated) and the worker
+//! [`MapBackend`] (per-element / fused-native / XLA), and returns the
+//! unified [`RunReport`] behind `Result<_, BsfError>`. The seed-era
+//! `run_threaded` survives only as a deprecated shim in [`runner`].
 
+pub mod backend;
 pub mod config;
+pub mod engine;
 pub mod master;
 pub mod problem;
 pub mod reduce;
+pub mod report;
 pub mod runner;
+pub mod session;
 pub mod split;
 pub mod variables;
 pub mod worker;
 pub mod workflow;
 
+pub use backend::{FusedNativeBackend, MapBackend, PerElementBackend};
 pub use config::BsfConfig;
+pub use engine::{AutoEngine, Engine, SerialEngine, SimulatedEngine, ThreadedEngine};
 pub use problem::{BsfProblem, MapCtx, StepDecision};
-pub use runner::{run_threaded, RunReport};
+pub use report::{Clock, PhaseBreakdown, RunReport};
+pub use session::Bsf;
 pub use variables::SkelVars;
 pub use workflow::JobDecision;
+
+#[allow(deprecated)]
+pub use runner::run_threaded;

@@ -1,0 +1,164 @@
+//! The unified run report every [`Engine`](crate::skeleton::engine::Engine)
+//! returns.
+//!
+//! The seed had three incompatible result shapes (`RunReport` from
+//! `run_threaded`, `SimReport` from `run_simulated`, `Sweep` rows from
+//! `bench::sweep`). [`RunReport`] is the one shape all engines share:
+//! elapsed time on the engine's clock ([`Clock::Real`] wall seconds or
+//! [`Clock::Virtual`] simulated-cluster seconds), a per-phase breakdown
+//! of Algorithm 2, per-worker summaries and the transport totals.
+
+use crate::metrics::{Phase, PhaseTimers};
+use crate::skeleton::worker::WorkerReport;
+
+/// Which clock `RunReport::elapsed` was measured on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// Wall time on this machine (threaded / serial engines).
+    Real,
+    /// Virtual time on the simulated cluster (`SimulatedEngine`).
+    Virtual,
+}
+
+/// Whole-run seconds attributed to the phases of one BSF iteration
+/// (Algorithm 2, master's view): order send, worker compute + gather,
+/// master-side reduce, process-results (+ exit broadcast).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub send: f64,
+    pub gather: f64,
+    pub reduce: f64,
+    pub process: f64,
+}
+
+impl PhaseBreakdown {
+    /// Convert the master's wall-clock phase timers.
+    pub fn from_timers(timers: &PhaseTimers) -> Self {
+        Self {
+            send: timers.total_secs(Phase::SendOrder),
+            gather: timers.total_secs(Phase::Gather),
+            reduce: timers.total_secs(Phase::MasterReduce),
+            process: timers.total_secs(Phase::Process),
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.send + self.gather + self.reduce + self.process
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "send={:.6}s gather={:.6}s reduce={:.6}s process={:.6}s",
+            self.send, self.gather, self.reduce, self.process
+        )
+    }
+}
+
+/// Full report of one skeleton run, engine-independent.
+#[derive(Debug, Clone)]
+pub struct RunReport<Param> {
+    /// Final approximation (the algorithm's output, step 12).
+    pub param: Param,
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Seconds of the iterative process on `clock`.
+    pub elapsed: f64,
+    /// Which clock `elapsed` was measured on.
+    pub clock: Clock,
+    /// Real wall seconds the run took on this machine (equals `elapsed`
+    /// for real-clock engines).
+    pub wall_seconds: f64,
+    /// Name of the engine that produced this report.
+    pub engine: &'static str,
+    /// Whole-run per-phase attribution.
+    pub phases: PhaseBreakdown,
+    /// Per-worker summaries (rank order).
+    pub workers: Vec<WorkerReport>,
+    /// Transport totals for the whole run.
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+impl<Param> RunReport<Param> {
+    /// Mean seconds one worker spends in Map+local-Reduce per iteration.
+    pub fn mean_worker_map_secs_per_iter(&self) -> f64 {
+        if self.iterations == 0 || self.workers.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.workers.iter().map(|w| w.map_seconds).sum();
+        total / (self.workers.len() as f64 * self.iterations as f64)
+    }
+
+    /// One-line human summary of the run (the CLI's standard output).
+    pub fn summary(&self) -> String {
+        match self.clock {
+            Clock::Real => format!(
+                "engine={} iterations={} elapsed={:.6}s msgs={} bytes={}",
+                self.engine, self.iterations, self.elapsed, self.messages, self.bytes
+            ),
+            Clock::Virtual => format!(
+                "engine={} iterations={} virtual={:.6}s real={:.3}s msgs={} bytes={}",
+                self.engine,
+                self.iterations,
+                self.elapsed,
+                self.wall_seconds,
+                self.messages,
+                self.bytes
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(workers: Vec<WorkerReport>, iterations: usize) -> RunReport<Vec<f64>> {
+        RunReport {
+            param: vec![],
+            iterations,
+            elapsed: 1.0,
+            clock: Clock::Real,
+            wall_seconds: 1.0,
+            engine: "test",
+            phases: PhaseBreakdown::default(),
+            workers,
+            messages: 0,
+            bytes: 0,
+        }
+    }
+
+    #[test]
+    fn mean_map_secs_guards_empty() {
+        assert_eq!(report(vec![], 5).mean_worker_map_secs_per_iter(), 0.0);
+        assert_eq!(report(vec![], 0).mean_worker_map_secs_per_iter(), 0.0);
+    }
+
+    #[test]
+    fn mean_map_secs_averages_over_workers_and_iters() {
+        let w = |rank, map_seconds| WorkerReport {
+            rank,
+            iterations: 4,
+            map_seconds,
+            sublist_length: 10,
+        };
+        let r = report(vec![w(0, 2.0), w(1, 6.0)], 4);
+        assert!((r.mean_worker_map_secs_per_iter() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_totals_and_summary() {
+        let b = PhaseBreakdown { send: 1.0, gather: 2.0, reduce: 3.0, process: 4.0 };
+        assert!((b.total() - 10.0).abs() < 1e-12);
+        assert!(b.summary().contains("gather="));
+    }
+
+    #[test]
+    fn summary_mentions_clock() {
+        let mut r = report(vec![], 1);
+        assert!(r.summary().contains("elapsed="));
+        r.clock = Clock::Virtual;
+        assert!(r.summary().contains("virtual="));
+    }
+}

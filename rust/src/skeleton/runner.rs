@@ -1,80 +1,139 @@
 //! Orchestration: wire one master + K workers over the thread transport
 //! and run the skeleton to completion ("build and run the solution in the
 //! MPI environment", Step 8 of the paper's instruction).
+//!
+//! [`run_threaded_session`] is the engine-facing entry point (typed
+//! errors, pluggable [`MapBackend`]); [`run_threaded`] survives as a thin
+//! deprecated shim over it for the seed-era API.
 
 use std::sync::Arc;
 
-use crate::metrics::PhaseTimers;
+use crate::error::BsfError;
+use crate::skeleton::backend::{FusedNativeBackend, MapBackend};
 use crate::skeleton::config::BsfConfig;
 use crate::skeleton::master::run_master;
 use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::worker::{run_worker, WorkerReport};
-use crate::transport::build_thread_transport;
-use crate::transport::Communicator;
+use crate::skeleton::workflow::validate_job_count;
+use crate::transport::{build_thread_transport, Communicator, Tag};
+use crate::util::codec::Codec;
 
-/// Full report of a threaded skeleton run.
-#[derive(Debug, Clone)]
-pub struct RunReport<Param> {
-    /// Final approximation.
-    pub param: Param,
-    /// Iterations performed.
-    pub iterations: usize,
-    /// Master wall seconds for the iterative process.
-    pub elapsed: f64,
-    /// Master per-phase timers.
-    pub timers: PhaseTimers,
-    /// Per-worker summaries (rank order).
-    pub workers: Vec<WorkerReport>,
-    /// Transport totals for the whole run.
-    pub messages: u64,
-    pub bytes: u64,
-}
-
-impl<Param> RunReport<Param> {
-    /// Mean seconds one worker spends in Map+local-Reduce per iteration.
-    pub fn mean_worker_map_secs_per_iter(&self) -> f64 {
-        if self.iterations == 0 || self.workers.is_empty() {
-            return 0.0;
-        }
-        let total: f64 = self.workers.iter().map(|w| w.map_seconds).sum();
-        total / (self.workers.len() as f64 * self.iterations as f64)
+/// Shared up-front validation all engines run before touching threads.
+pub(crate) fn validate_run<P: BsfProblem>(
+    problem: &P,
+    cfg: &BsfConfig,
+) -> Result<(), BsfError> {
+    if cfg.workers == 0 {
+        return Err(BsfError::config("need at least one worker (cfg.workers >= 1)"));
     }
+    validate_job_count(problem.job_count())?;
+    if problem.list_size() == 0 {
+        return Err(BsfError::config(
+            "PC_bsf_SetListSize must return a positive list size",
+        ));
+    }
+    Ok(())
 }
 
-/// Run `problem` on K worker threads + the calling thread as master.
-pub fn run_threaded<P: BsfProblem>(problem: Arc<P>, cfg: &BsfConfig) -> RunReport<P::Param> {
-    assert!(cfg.workers >= 1, "need at least one worker");
+/// Run `problem` on K worker threads + the calling thread as master,
+/// mapping sublists through `backend`.
+pub fn run_threaded_session<P: BsfProblem>(
+    problem: Arc<P>,
+    backend: Arc<dyn MapBackend<P>>,
+    cfg: &BsfConfig,
+) -> Result<RunReport<P::Param>, BsfError> {
+    validate_run(&*problem, cfg)?;
+
     let mut endpoints = build_thread_transport(cfg.workers);
-    let master_ep = endpoints.pop().expect("master endpoint");
+    let master_ep = endpoints.pop().ok_or_else(|| {
+        BsfError::transport("thread transport built without a master endpoint")
+    })?;
     let stats = master_ep.stats();
 
-    let handles: Vec<std::thread::JoinHandle<WorkerReport>> = endpoints
-        .into_iter()
-        .map(|ep| {
-            let p = Arc::clone(&problem);
-            let cfg = cfg.clone();
-            std::thread::Builder::new()
-                .name(format!("bsf-worker-{}", ep.rank()))
-                .spawn(move || run_worker(&*p, &ep, &cfg))
-                .expect("spawn worker thread")
-        })
-        .collect();
+    let mut handles: Vec<(usize, std::thread::JoinHandle<Result<WorkerReport, BsfError>>)> =
+        Vec::with_capacity(cfg.workers);
+    let mut spawn_err: Option<BsfError> = None;
+    for ep in endpoints {
+        let p = Arc::clone(&problem);
+        let b = Arc::clone(&backend);
+        let cfg = cfg.clone();
+        let rank = ep.rank();
+        let spawned = std::thread::Builder::new()
+            .name(format!("bsf-worker-{rank}"))
+            .spawn(move || {
+                // A panic in user map/reduce code must not strand the
+                // master mid-gather: catch it, tell the master to abort,
+                // and surface a typed error.
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_worker(&*p, &*b, &ep, &cfg)
+                }));
+                match run {
+                    Ok(result) => result,
+                    Err(_) => {
+                        let _ = ep.send(ep.master_rank(), Tag::Abort, Vec::new());
+                        Err(BsfError::WorkerPanic { rank })
+                    }
+                }
+            });
+        match spawned {
+            Ok(handle) => handles.push((rank, handle)),
+            Err(e) => {
+                spawn_err = Some(BsfError::transport(format!("spawn worker {rank}: {e}")));
+                break;
+            }
+        }
+    }
+    if let Some(e) = spawn_err {
+        // Release and reap the workers that did start (they are blocked
+        // waiting for an order) instead of leaking them.
+        for (rank, _) in &handles {
+            let _ = master_ep.send(*rank, Tag::Exit, true.to_bytes());
+        }
+        for (_, h) in handles {
+            let _ = h.join();
+        }
+        return Err(e);
+    }
 
     let outcome = run_master(&*problem, &master_ep, cfg);
 
-    let mut workers: Vec<WorkerReport> = handles
-        .into_iter()
-        .map(|h| h.join().expect("worker thread panicked"))
-        .collect();
+    let mut workers = Vec::with_capacity(handles.len());
+    let mut worker_err: Option<BsfError> = None;
+    for (rank, h) in handles {
+        match h.join() {
+            Ok(Ok(report)) => workers.push(report),
+            Ok(Err(e)) => {
+                worker_err.get_or_insert(e);
+            }
+            Err(_) => {
+                worker_err.get_or_insert(BsfError::WorkerPanic { rank });
+            }
+        }
+    }
+    let outcome = outcome?;
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
     workers.sort_by_key(|w| w.rank);
 
-    RunReport {
+    Ok(RunReport {
         param: outcome.param,
         iterations: outcome.iterations,
         elapsed: outcome.elapsed,
-        timers: outcome.timers,
+        clock: Clock::Real,
+        wall_seconds: outcome.elapsed,
+        engine: "threaded",
+        phases: PhaseBreakdown::from_timers(&outcome.timers),
         workers,
         messages: stats.message_count(),
         bytes: stats.byte_count(),
-    }
+    })
+}
+
+/// Seed-era entry point. Panics on any error, exactly as the seed did.
+#[deprecated(note = "use Bsf::new(problem).config(cfg).run() (the session API)")]
+pub fn run_threaded<P: BsfProblem>(problem: Arc<P>, cfg: &BsfConfig) -> RunReport<P::Param> {
+    run_threaded_session(problem, Arc::new(FusedNativeBackend), cfg)
+        .expect("bsf: threaded run failed")
 }

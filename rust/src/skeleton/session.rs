@@ -1,0 +1,176 @@
+//! The `Bsf` session builder — the crate's single entry point.
+//!
+//! One session owns the problem, the [`BsfConfig`], the execution
+//! [`Engine`] and the worker [`MapBackend`], and `run()` returns the
+//! unified [`RunReport`] behind a typed `Result`:
+//!
+//! ```no_run
+//! use bsf::problems::jacobi::JacobiProblem;
+//! use bsf::skeleton::{Bsf, BsfConfig, SimulatedEngine};
+//! use bsf::costmodel::ClusterProfile;
+//!
+//! let (problem, _) = JacobiProblem::random(256, 1e-12, 7);
+//! let report = Bsf::new(problem)
+//!     .config(BsfConfig::with_workers(8))
+//!     .engine(SimulatedEngine::new(ClusterProfile::infiniband()))
+//!     .run()?;
+//! println!("{}", report.summary());
+//! # Ok::<(), bsf::BsfError>(())
+//! ```
+//!
+//! Defaults: [`AutoEngine`] (serial at K=1, threaded otherwise) and
+//! [`FusedNativeBackend`] — which together reproduce the behavior of the
+//! seed's `run_threaded` entry point.
+
+use std::sync::Arc;
+
+use crate::error::BsfError;
+use crate::skeleton::backend::{FusedNativeBackend, MapBackend};
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::engine::{AutoEngine, Engine};
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::report::RunReport;
+
+/// A configured skeleton run, ready to execute.
+pub struct Bsf<P: BsfProblem> {
+    problem: Arc<P>,
+    cfg: BsfConfig,
+    engine: Box<dyn Engine<P>>,
+    backend: Arc<dyn MapBackend<P>>,
+}
+
+impl<P: BsfProblem> Bsf<P> {
+    /// Start a session over `problem` with default config, engine and
+    /// backend.
+    pub fn new(problem: P) -> Self {
+        Self::from_arc(Arc::new(problem))
+    }
+
+    /// Start a session over a shared problem (the caller keeps a handle,
+    /// e.g. to inspect master-side state after the run).
+    pub fn from_arc(problem: Arc<P>) -> Self {
+        Self {
+            problem,
+            cfg: BsfConfig::default(),
+            engine: Box::new(AutoEngine),
+            backend: Arc::new(FusedNativeBackend),
+        }
+    }
+
+    /// Replace the whole run configuration.
+    pub fn config(mut self, cfg: BsfConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Convenience: set the worker count K.
+    pub fn workers(mut self, k: usize) -> Self {
+        self.cfg.workers = k;
+        self
+    }
+
+    /// Convenience: set the intra-worker map parallelism (`PP_BSF_OMP`).
+    pub fn openmp(mut self, threads: usize) -> Self {
+        self.cfg.openmp_threads = threads.max(1);
+        self
+    }
+
+    /// Convenience: set the iteration cap.
+    pub fn max_iter(mut self, cap: usize) -> Self {
+        self.cfg.max_iter = cap;
+        self
+    }
+
+    /// Convenience: trace every `every` iterations (0 = off).
+    pub fn trace(mut self, every: usize) -> Self {
+        self.cfg.trace_count = every;
+        self
+    }
+
+    /// Choose the execution engine (threaded / serial / simulated).
+    pub fn engine<E: Engine<P> + 'static>(mut self, engine: E) -> Self {
+        self.engine = Box::new(engine);
+        self
+    }
+
+    /// Choose the worker map backend (per-element / fused-native / XLA).
+    pub fn map_backend<B: MapBackend<P> + 'static>(mut self, backend: B) -> Self {
+        self.backend = Arc::new(backend);
+        self
+    }
+
+    /// Like [`Bsf::map_backend`] but for an already-shared backend (e.g.
+    /// one XLA backend reused across sessions — it rebinds its caches
+    /// when it observes a different problem instance; keep the problem
+    /// `Arc` alive while the backend is shared).
+    pub fn map_backend_arc(mut self, backend: Arc<dyn MapBackend<P>>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Read access to the configured [`BsfConfig`].
+    pub fn config_ref(&self) -> &BsfConfig {
+        &self.cfg
+    }
+
+    /// Execute the run.
+    pub fn run(self) -> Result<RunReport<P::Param>, BsfError> {
+        self.engine.run(self.problem, self.backend, &self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::jacobi::JacobiProblem;
+    use crate::skeleton::engine::{SerialEngine, ThreadedEngine};
+
+    #[test]
+    fn defaults_run_and_converge() {
+        let (p, x_star) = JacobiProblem::random(24, 1e-20, 3);
+        let r = Bsf::new(p).run().unwrap();
+        for (a, b) in r.param.iter().zip(&x_star) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // workers defaults to 1 → AutoEngine picks the serial fast path
+        assert_eq!(r.engine, "serial");
+        assert_eq!(r.messages, 0);
+    }
+
+    #[test]
+    fn builder_chain_sets_config() {
+        let (p, _) = JacobiProblem::random(8, 1e-12, 4);
+        let b = Bsf::new(p).workers(3).openmp(2).max_iter(9).trace(5);
+        let cfg = b.config_ref();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.openmp_threads, 2);
+        assert_eq!(cfg.max_iter, 9);
+        assert_eq!(cfg.trace_count, 5);
+    }
+
+    #[test]
+    fn zero_workers_is_a_config_error() {
+        let (p, _) = JacobiProblem::random(8, 1e-12, 5);
+        let err = Bsf::new(p).workers(0).run().unwrap_err();
+        assert!(matches!(err, BsfError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn serial_engine_rejects_multi_worker_config() {
+        let (p, _) = JacobiProblem::random(8, 1e-12, 6);
+        let err = Bsf::new(p).workers(4).engine(SerialEngine).run().unwrap_err();
+        assert!(matches!(err, BsfError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn serial_matches_threaded_k1_exactly() {
+        let (ps, _) = JacobiProblem::random(32, 1e-18, 7);
+        let (pt, _) = JacobiProblem::random(32, 1e-18, 7);
+        let rs = Bsf::new(ps).workers(1).engine(SerialEngine).run().unwrap();
+        let rt = Bsf::new(pt).workers(1).engine(ThreadedEngine).run().unwrap();
+        assert_eq!(rs.iterations, rt.iterations);
+        assert_eq!(rs.param, rt.param, "codec round-trip must be lossless");
+        assert_eq!(rt.engine, "threaded");
+        assert!(rt.messages > 0);
+    }
+}

@@ -4,8 +4,9 @@
 //! elements itself via `map_list_elem`, as in the paper where each worker
 //! reads its part of the source data). Per iteration it receives the
 //! order, applies Map + local Reduce to its sublist (`BC_WorkerMap` +
-//! `BC_WorkerReduce`), sends the partial fold, and waits for the exit
-//! flag.
+//! `BC_WorkerReduce`) through the session's
+//! [`MapBackend`](crate::skeleton::backend::MapBackend), sends the
+//! partial fold, and waits for the exit flag.
 //!
 //! The map loop supports the paper's OpenMP mode (`PP_BSF_OMP` /
 //! `PP_BSF_NUM_THREADS`): with `openmp_threads > 1` the sublist is
@@ -14,6 +15,8 @@
 
 use std::time::Instant;
 
+use crate::error::BsfError;
+use crate::skeleton::backend::MapBackend;
 use crate::skeleton::config::BsfConfig;
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::reduce::{fold_extended, merge_folds, ExtendedFold};
@@ -34,14 +37,17 @@ pub struct WorkerReport {
 }
 
 /// Run the worker loop over `comm` until the master signals exit.
-pub fn run_worker<P: BsfProblem, C: Communicator>(
+pub fn run_worker<P: BsfProblem>(
     problem: &P,
-    comm: &C,
+    backend: &dyn MapBackend<P>,
+    comm: &dyn Communicator,
     cfg: &BsfConfig,
-) -> WorkerReport {
+) -> Result<WorkerReport, BsfError> {
     let rank = comm.rank();
     let k = cfg.workers;
-    assert!(rank < k, "worker rank {rank} must be < {k}");
+    if rank >= k {
+        return Err(BsfError::config(format!("worker rank {rank} must be < {k}")));
+    }
     let master = comm.master_rank();
 
     // Step 1: input A_j (the worker's static sublist).
@@ -53,70 +59,77 @@ pub fn run_worker<P: BsfProblem, C: Communicator>(
     let mut iterations = 0usize;
 
     loop {
-        // Step 2: RecvFromMaster(x^(i)).
-        let m = comm.recv(master, Tag::Order);
+        // Step 2: RecvFromMaster(x^(i)). An exit order can also arrive
+        // here: the master broadcasts one on its error paths (another
+        // worker died, a dispatcher bug) to release workers that are
+        // waiting for the next order.
+        let m = comm.recv_tags(Some(master), &[Tag::Order, Tag::Exit])?;
+        if m.tag == Tag::Exit {
+            if bool::from_bytes(&m.payload) {
+                return Ok(WorkerReport {
+                    rank,
+                    iterations,
+                    map_seconds,
+                    sublist_length: len,
+                });
+            }
+            return Err(BsfError::transport(format!(
+                "worker {rank}: unexpected exit=false instead of an order"
+            )));
+        }
         let (job, param) = <(usize, P::Param)>::from_bytes(&m.payload);
 
         // Steps 3-4: B_j := Map(F, A_j); s_j := Reduce(⊕, B_j).
+        let vars = SkelVars::for_worker(rank, k, offset, len, iterations, job);
         let t0 = Instant::now();
-        let fold = map_and_fold(
-            problem,
-            &elems,
-            &param,
-            rank,
-            k,
-            offset,
-            iterations,
-            job,
-            cfg.openmp_threads,
-        );
+        let fold =
+            map_and_fold(problem, backend, &elems, &param, vars, cfg.openmp_threads);
         map_seconds += t0.elapsed().as_secs_f64();
         iterations += 1;
 
         // Step 5: SendToMaster(s_j).
-        comm.send(master, Tag::Fold, (fold.value, fold.counter).to_bytes());
+        comm.send(master, Tag::Fold, (fold.value, fold.counter).to_bytes())?;
 
         // Step 10: RecvFromMaster(exit).
-        let exit = bool::from_bytes(&comm.recv(master, Tag::Exit).payload);
+        let exit = bool::from_bytes(&comm.recv(master, Tag::Exit)?.payload);
         if exit {
-            return WorkerReport {
+            return Ok(WorkerReport {
                 rank,
                 iterations,
                 map_seconds,
                 sublist_length: len,
-            };
+            });
         }
     }
 }
 
 /// `BC_WorkerMap` + `BC_WorkerReduce`: map the sublist and fold locally.
 ///
-/// Public (crate-wide) because the simulated cluster executes exactly the
-/// same worker computation under a virtual clock.
-#[allow(clippy::too_many_arguments)]
+/// The `backend` may fuse the whole sublist into one call (native fused
+/// kernel or AOT XLA executable); otherwise the faithful per-element loop
+/// runs, block-split over `threads` scoped threads when `threads > 1`.
+///
+/// Public (crate-wide) because the simulated cluster and the cost-model
+/// calibration execute exactly the same worker computation.
 pub fn map_and_fold<P: BsfProblem>(
     problem: &P,
+    backend: &dyn MapBackend<P>,
     elems: &[P::MapElem],
     param: &P::Param,
-    rank: usize,
-    workers: usize,
-    offset: usize,
-    iter: usize,
-    job: usize,
+    vars: SkelVars,
     threads: usize,
 ) -> ExtendedFold<P::ReduceElem> {
-    let vars = SkelVars::for_worker(rank, workers, offset, elems.len(), iter, job);
-
-    // Fused path: the problem may map its whole sublist in one XLA call.
-    if let Some((value, counter)) = problem.map_sublist(elems, param, &vars) {
+    // Fused path: the backend may map the whole sublist in one call.
+    if let Some((value, counter)) = backend.map_sublist(problem, elems, param, &vars) {
         return ExtendedFold { value, counter };
     }
 
     if threads <= 1 || elems.len() < 2 {
-        return fold_chunk(problem, elems, param, vars, 0, job);
+        return fold_chunk(problem, elems, param, vars, 0, vars.job_case);
     }
 
     // OpenMP-analog: block-split the sublist over scoped threads.
+    let job = vars.job_case;
     let ranges = all_ranges(elems.len(), threads.min(elems.len()));
     let partials: Vec<ExtendedFold<P::ReduceElem>> = std::thread::scope(|s| {
         let handles: Vec<_> = ranges
@@ -128,7 +141,15 @@ pub fn map_and_fold<P: BsfProblem>(
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("map thread panicked")).collect()
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(f) => f,
+                // A panic in user map code: resume it on the worker thread
+                // so it surfaces exactly as an un-split map would.
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
     });
     merge_folds(partials, |a, b| problem.reduce_f(a, b, job))
 }

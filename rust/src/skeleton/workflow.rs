@@ -12,6 +12,8 @@
 //! `ReduceElem` an enum over its per-job payloads (see
 //! `problems::apex` for the worked example).
 
+use crate::error::BsfError;
+
 /// Maximum number of jobs the skeleton supports (`PP_BSF_MAX_JOB_CASE`+1).
 pub const MAX_JOBS: usize = 4;
 
@@ -39,12 +41,15 @@ impl JobDecision {
 }
 
 /// Validate a problem's job configuration at run start.
-pub fn validate_job_count(job_count: usize) {
-    assert!(
-        (1..=MAX_JOBS).contains(&job_count),
-        "job_count must be 1..={MAX_JOBS}, got {job_count} \
-         (PP_BSF_MAX_JOB_CASE supports at most 4 activities)"
-    );
+pub fn validate_job_count(job_count: usize) -> Result<(), BsfError> {
+    if (1..=MAX_JOBS).contains(&job_count) {
+        Ok(())
+    } else {
+        Err(BsfError::config(format!(
+            "job_count must be 1..={MAX_JOBS}, got {job_count} \
+             (PP_BSF_MAX_JOB_CASE supports at most 4 activities)"
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -60,19 +65,18 @@ mod tests {
     #[test]
     fn valid_job_counts() {
         for jc in 1..=4 {
-            validate_job_count(jc);
+            assert!(validate_job_count(jc).is_ok());
         }
     }
 
     #[test]
-    #[should_panic(expected = "job_count")]
     fn zero_jobs_invalid() {
-        validate_job_count(0);
+        let err = validate_job_count(0).unwrap_err();
+        assert!(err.to_string().contains("job_count"));
     }
 
     #[test]
-    #[should_panic(expected = "job_count")]
     fn five_jobs_invalid() {
-        validate_job_count(5);
+        assert!(validate_job_count(5).is_err());
     }
 }

@@ -7,9 +7,11 @@
 //!
 //! * [`Communicator`] — per-process endpoint: `send`/`recv` by rank+tag,
 //!   plus `recv_any` (the master gathers partial folds in completion
-//!   order, like `MPI_Waitany`).
-//! * [`ThreadTransport`] — builds the K+1 endpoints over
-//!   `std::sync::mpsc` channels.
+//!   order, like `MPI_Waitany`). Every operation returns
+//!   `Result<_, BsfError>`: a torn channel or an out-of-range rank is a
+//!   typed [`BsfError::Transport`], not a panic.
+//! * [`ThreadEndpoint`] (via [`build_thread_transport`]) — the K+1
+//!   endpoints over `std::sync::mpsc` channels.
 //! * [`TransportStats`] — message/byte counters, used by the cost-model
 //!   calibration to attribute communication volume.
 //!
@@ -23,6 +25,8 @@ pub use thread::{build as build_thread_transport, ThreadEndpoint};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::error::BsfError;
+
 /// Message tags used by the BSF skeleton (Algorithm 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Tag {
@@ -32,6 +36,11 @@ pub enum Tag {
     Fold,
     /// Master → worker: the exit flag.
     Exit,
+    /// Worker → master: the worker died in user map/reduce code; the
+    /// master must stop gathering and shut the run down (this is what
+    /// lets a panicking `map_f` surface as `BsfError::WorkerPanic`
+    /// instead of deadlocking the gather).
+    Abort,
     /// Free-form (tests, extensions).
     User(u16),
 }
@@ -54,13 +63,23 @@ pub trait Communicator: Send {
     fn master_rank(&self) -> usize {
         self.size() - 1
     }
-    /// Send `payload` to `to`. Never blocks (buffered channels).
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>);
+    /// Send `payload` to `to`. Never blocks (buffered channels). Fails
+    /// with [`BsfError::Transport`] when the peer is gone or `to` is out
+    /// of range.
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError>;
+    /// Blocking receive of the next message matching any of `tags`, from
+    /// `from` (or any peer when `None`). Non-matching arrivals are
+    /// buffered, never lost.
+    fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError>;
     /// Blocking receive of the next message from `from` with `tag`
     /// (out-of-order arrivals from other peers/tags are buffered).
-    fn recv(&self, from: usize, tag: Tag) -> Message;
+    fn recv(&self, from: usize, tag: Tag) -> Result<Message, BsfError> {
+        self.recv_tags(Some(from), &[tag])
+    }
     /// Blocking receive of the next message with `tag` from *any* peer.
-    fn recv_any(&self, tag: Tag) -> Message;
+    fn recv_any(&self, tag: Tag) -> Result<Message, BsfError> {
+        self.recv_tags(None, &[tag])
+    }
     /// Shared counters.
     fn stats(&self) -> Arc<TransportStats>;
 }

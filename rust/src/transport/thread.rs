@@ -4,12 +4,17 @@
 //! sender to it. `recv(from, tag)` provides MPI-style selective receive
 //! by buffering out-of-order arrivals in a pending queue (messages from
 //! the same peer+tag stay FIFO, matching MPI's non-overtaking guarantee).
+//!
+//! Failures are typed: a closed channel or out-of-range rank surfaces as
+//! [`BsfError::Transport`] instead of a panic, so the skeleton can report
+//! a torn run to the caller.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use super::{Communicator, Message, Tag, TransportStats};
+use crate::error::BsfError;
 
 /// One process's endpoint of the thread transport.
 pub struct ThreadEndpoint {
@@ -50,31 +55,35 @@ pub fn build(workers: usize) -> Vec<ThreadEndpoint> {
 }
 
 impl ThreadEndpoint {
-    fn matchers(
+    fn take_pending(
         pending: &mut VecDeque<Message>,
         from: Option<usize>,
-        tag: Tag,
+        tags: &[Tag],
     ) -> Option<Message> {
-        let idx = pending
-            .iter()
-            .position(|m| m.tag == tag && from.map(|f| m.from == f).unwrap_or(true))?;
+        let idx = pending.iter().position(|m| {
+            tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true)
+        })?;
         pending.remove(idx)
     }
 
-    fn recv_matching(&self, from: Option<usize>, tag: Tag) -> Message {
-        let mut inbox = self.inbox.lock().expect("inbox poisoned");
-        if let Some(m) = Self::matchers(&mut inbox.pending, from, tag) {
-            return m;
+    fn recv_matching(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
+        let mut inbox = self.inbox.lock().map_err(|_| {
+            BsfError::transport(format!("rank {}: inbox poisoned", self.rank))
+        })?;
+        if let Some(m) = Self::take_pending(&mut inbox.pending, from, tags) {
+            return Ok(m);
         }
         loop {
-            let m = inbox
-                .rx
-                .recv()
-                .expect("transport channel closed while receiving");
+            let m = inbox.rx.recv().map_err(|_| {
+                BsfError::transport(format!(
+                    "rank {}: channel closed while receiving {tags:?}",
+                    self.rank
+                ))
+            })?;
             let matches =
-                m.tag == tag && from.map(|f| m.from == f).unwrap_or(true);
+                tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true);
             if matches {
-                return m;
+                return Ok(m);
             }
             inbox.pending.push_back(m);
         }
@@ -90,19 +99,28 @@ impl Communicator for ThreadEndpoint {
         self.size
     }
 
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) {
-        self.stats.record(payload.len());
-        self.senders[to]
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+        let sender = self.senders.get(to).ok_or_else(|| {
+            BsfError::transport(format!(
+                "rank {}: send to rank {to} out of range (size {})",
+                self.rank, self.size
+            ))
+        })?;
+        let len = payload.len();
+        sender
             .send(Message { from: self.rank, tag, payload })
-            .expect("transport channel closed while sending");
+            .map_err(|_| {
+                BsfError::transport(format!(
+                    "rank {}: rank {to} hung up while sending {tag:?}",
+                    self.rank
+                ))
+            })?;
+        self.stats.record(len);
+        Ok(())
     }
 
-    fn recv(&self, from: usize, tag: Tag) -> Message {
-        self.recv_matching(Some(from), tag)
-    }
-
-    fn recv_any(&self, tag: Tag) -> Message {
-        self.recv_matching(None, tag)
+    fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
+        self.recv_matching(from, tags)
     }
 
     fn stats(&self) -> Arc<TransportStats> {
@@ -132,12 +150,12 @@ mod tests {
         let master = eps.pop().unwrap();
         let worker = eps.pop().unwrap();
         let h = thread::spawn(move || {
-            let m = worker.recv(1, Tag::Order);
+            let m = worker.recv(1, Tag::Order).unwrap();
             assert_eq!(m.payload, vec![1, 2, 3]);
-            worker.send(1, Tag::Fold, vec![9]);
+            worker.send(1, Tag::Fold, vec![9]).unwrap();
         });
-        master.send(0, Tag::Order, vec![1, 2, 3]);
-        let m = master.recv(0, Tag::Fold);
+        master.send(0, Tag::Order, vec![1, 2, 3]).unwrap();
+        let m = master.recv(0, Tag::Fold).unwrap();
         assert_eq!(m.payload, vec![9]);
         h.join().unwrap();
     }
@@ -147,11 +165,11 @@ mod tests {
         let mut eps = build(1);
         let master = eps.pop().unwrap();
         let worker = eps.pop().unwrap();
-        worker.send(1, Tag::Fold, vec![1]);
-        worker.send(1, Tag::Exit, vec![2]);
+        worker.send(1, Tag::Fold, vec![1]).unwrap();
+        worker.send(1, Tag::Exit, vec![2]).unwrap();
         // ask for Exit first: Fold must be buffered, not lost
-        assert_eq!(master.recv(0, Tag::Exit).payload, vec![2]);
-        assert_eq!(master.recv(0, Tag::Fold).payload, vec![1]);
+        assert_eq!(master.recv(0, Tag::Exit).unwrap().payload, vec![2]);
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![1]);
     }
 
     #[test]
@@ -160,10 +178,10 @@ mod tests {
         let master = eps.pop().unwrap();
         let worker = eps.pop().unwrap();
         for i in 0..10u8 {
-            worker.send(1, Tag::Fold, vec![i]);
+            worker.send(1, Tag::Fold, vec![i]).unwrap();
         }
         for i in 0..10u8 {
-            assert_eq!(master.recv(0, Tag::Fold).payload, vec![i]);
+            assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![i]);
         }
     }
 
@@ -176,12 +194,13 @@ mod tests {
             .map(|w| {
                 thread::spawn(move || {
                     let rank = w.rank();
-                    w.send(3, Tag::Fold, vec![rank as u8]);
+                    w.send(3, Tag::Fold, vec![rank as u8]).unwrap();
                 })
             })
             .collect();
-        let mut seen: Vec<u8> =
-            (0..3).map(|_| master.recv_any(Tag::Fold).payload[0]).collect();
+        let mut seen: Vec<u8> = (0..3)
+            .map(|_| master.recv_any(Tag::Fold).unwrap().payload[0])
+            .collect();
         seen.sort();
         assert_eq!(seen, vec![0, 1, 2]);
         for h in handles {
@@ -194,10 +213,32 @@ mod tests {
         let mut eps = build(1);
         let master = eps.pop().unwrap();
         let worker = eps.pop().unwrap();
-        master.send(0, Tag::Order, vec![0; 16]);
-        worker.send(1, Tag::Fold, vec![0; 4]);
+        master.send(0, Tag::Order, vec![0; 16]).unwrap();
+        worker.send(1, Tag::Fold, vec![0; 4]).unwrap();
         let st = master.stats();
         assert_eq!(st.message_count(), 2);
         assert_eq!(st.byte_count(), 20);
+    }
+
+    #[test]
+    fn send_out_of_range_is_typed_error() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let err = master.send(7, Tag::Order, vec![]).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        // the failed send must not be counted
+        assert_eq!(master.stats().message_count(), 0);
+    }
+
+    #[test]
+    fn recv_after_peer_drop_is_typed_error() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        drop(worker);
+        // master still holds a sender to itself, so recv would block; send
+        // to the dropped worker instead: its receiver is gone.
+        let err = master.send(0, Tag::Order, vec![1]).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
     }
 }

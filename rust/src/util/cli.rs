@@ -1,29 +1,39 @@
-//! Tiny CLI argument parser (the offline build has no clap).
+//! Typed CLI argument parsing (the offline build has no clap; this
+//! module mirrors clap's `Parser`/`Subcommand` shape — subcommand word,
+//! then `--key value` / `--key=value` / `--flag` options — with
+//! `Result<_, BsfError::Usage>` everywhere the seed's parser panicked).
 //!
-//! Supports `program <subcommand> [--key value] [--key=value] [--flag]`.
-//! Typed getters with defaults; unknown-key detection for typo safety.
+//! `main.rs` layers its `Command` enum on top, exactly where a clap
+//! derive would sit (see the SNIPPETS exemplar).
 
 use std::collections::BTreeMap;
 
-/// Parsed command line: a subcommand plus `--key value` options.
+use crate::error::BsfError;
+
+/// Parsed command line: a subcommand plus `--key value` options and
+/// positionals.
 #[derive(Debug, Clone, Default)]
-pub struct Args {
+pub struct ArgMap {
     pub subcommand: Option<String>,
-    pub options: BTreeMap<String, String>,
-    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    positionals: Vec<String>,
 }
 
-impl Args {
+fn bad(key: &str, want: &str, got: &str) -> BsfError {
+    BsfError::usage(format!("--{key} expects {want}, got {got:?}"))
+}
+
+impl ArgMap {
     /// Parse from an iterator of argument strings (excluding argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
-        let mut out = Args::default();
+        let mut out = ArgMap::default();
         let mut it = argv.into_iter().peekable();
         while let Some(arg) = it.next() {
             if let Some(key) = arg.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                    let v = it.next().unwrap_or_default();
                     out.options.insert(key.to_string(), v);
                 } else {
                     out.options.insert(key.to_string(), "true".to_string());
@@ -31,7 +41,7 @@ impl Args {
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(arg);
             } else {
-                out.positional.push(arg);
+                out.positionals.push(arg);
             }
         }
         out
@@ -46,53 +56,69 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).map(|v| v.parse().unwrap_or_else(|_| {
-            panic!("--{key} expects an integer, got {v:?}")
-        })).unwrap_or(default)
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key).map(|v| v.parse().unwrap_or_else(|_| {
-            panic!("--{key} expects an integer, got {v:?}")
-        })).unwrap_or(default)
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, BsfError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| bad(key, "an integer", v)),
+        }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key).map(|v| v.parse().unwrap_or_else(|_| {
-            panic!("--{key} expects a number, got {v:?}")
-        })).unwrap_or(default)
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, BsfError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| bad(key, "an integer", v)),
+        }
     }
 
-    pub fn get_bool(&self, key: &str) -> bool {
-        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, BsfError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| bad(key, "a number", v)),
+        }
     }
 
-    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
     /// Comma-separated usize list, e.g. `--k 1,2,4,8`.
-    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+    pub fn usize_list_or(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, BsfError> {
         match self.get(key) {
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
                 .filter(|s| !s.trim().is_empty())
-                .map(|s| s.trim().parse().unwrap_or_else(|_| {
-                    panic!("--{key} expects comma-separated integers, got {v:?}")
-                }))
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| bad(key, "comma-separated integers", v))
+                })
                 .collect(),
         }
     }
 
-    /// Panic if any option key is not in `known` (typo guard).
-    pub fn expect_known(&self, known: &[&str]) {
+    /// Reject option keys not in `known` (typo guard).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<(), BsfError> {
         for k in self.options.keys() {
             if !known.contains(&k.as_str()) {
-                panic!("unknown option --{k}; known: {known:?}");
+                return Err(BsfError::usage(format!(
+                    "unknown option --{k}; known: {known:?}"
+                )));
             }
         }
+        Ok(())
     }
 }
 
@@ -100,8 +126,8 @@ impl Args {
 mod tests {
     use super::*;
 
-    fn parse(s: &str) -> Args {
-        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    fn parse(s: &str) -> ArgMap {
+        ArgMap::parse(s.split_whitespace().map(|x| x.to_string()))
     }
 
     #[test]
@@ -110,36 +136,46 @@ mod tests {
         // flag would be consumed as that flag's value (documented quirk).
         let a = parse("run jacobi --n 128 --mode=sim --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("run"));
-        assert_eq!(a.get_usize("n", 0), 128);
-        assert_eq!(a.get_str("mode", ""), "sim");
-        assert!(a.get_bool("verbose"));
-        assert_eq!(a.positional, vec!["jacobi"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 128);
+        assert_eq!(a.str_or("mode", ""), "sim");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(0), Some("jacobi"));
     }
 
     #[test]
     fn defaults_apply() {
         let a = parse("run");
-        assert_eq!(a.get_usize("n", 7), 7);
-        assert_eq!(a.get_f64("eps", 0.5), 0.5);
-        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("eps", 0.5).unwrap(), 0.5);
+        assert!(!a.flag("verbose"));
     }
 
     #[test]
     fn usize_list() {
         let a = parse("sweep --k 1,2,4,");
-        assert_eq!(a.get_usize_list("k", &[]), vec![1, 2, 4]);
-        assert_eq!(a.get_usize_list("missing", &[9]), vec![9]);
+        assert_eq!(a.usize_list_or("k", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.usize_list_or("missing", &[9]).unwrap(), vec![9]);
     }
 
     #[test]
     fn trailing_flag_is_boolean() {
         let a = parse("run --check");
-        assert!(a.get_bool("check"));
+        assert!(a.flag("check"));
     }
 
     #[test]
-    #[should_panic(expected = "unknown option")]
-    fn unknown_key_panics() {
-        parse("run --typo 3").expect_known(&["n"]);
+    fn unparsable_value_is_usage_error_not_panic() {
+        let a = parse("run --n banana");
+        let err = a.usize_or("n", 0).unwrap_err();
+        assert!(matches!(err, BsfError::Usage(_)), "{err}");
+        assert_eq!(err.exit_code(), 2);
+    }
+
+    #[test]
+    fn unknown_key_is_usage_error() {
+        let a = parse("run --typo 3");
+        let err = a.ensure_known(&["n"]).unwrap_err();
+        assert!(matches!(err, BsfError::Usage(_)), "{err}");
+        assert!(err.to_string().contains("typo"));
     }
 }

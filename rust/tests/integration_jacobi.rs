@@ -1,19 +1,21 @@
 //! Integration: the full skeleton solving Jacobi end-to-end, across
-//! worker counts, backends, OpenMP settings and the simulated cluster.
-
-use std::sync::Arc;
+//! worker counts, engines, backends and OpenMP settings — all through
+//! the `Bsf` session API.
 
 use bsf::costmodel::ClusterProfile;
-use bsf::problems::jacobi::{JacobiProblem, MapBackend};
-use bsf::simcluster::{run_simulated, SimConfig};
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::simcluster::SimConfig;
+use bsf::skeleton::{
+    Bsf, BsfConfig, PerElementBackend, SimulatedEngine, ThreadedEngine,
+};
 use bsf::util::mat::dist2;
 
 #[test]
 fn threaded_solution_matches_truth_many_ks() {
     for k in [1usize, 2, 3, 7, 16] {
         let (p, x_star) = JacobiProblem::random(64, 1e-22, 100 + k as u64);
-        let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(k));
+        // force the threaded engine even at K=1
+        let r = Bsf::new(p).workers(k).engine(ThreadedEngine).run().unwrap();
         assert!(
             dist2(&r.param, &x_star) < 1e-10,
             "K={k}: dist² {}",
@@ -27,7 +29,7 @@ fn message_count_matches_algorithm_2() {
     // Per iteration: K orders + K folds + K exits = 3K messages.
     let k = 5;
     let (p, _) = JacobiProblem::random(32, 1e-16, 3);
-    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(k));
+    let r = Bsf::new(p).workers(k).run().unwrap();
     assert_eq!(r.messages, (3 * k * r.iterations) as u64);
 }
 
@@ -35,12 +37,12 @@ fn message_count_matches_algorithm_2() {
 fn simulated_cluster_same_numerics_as_threaded() {
     let (pt, _) = JacobiProblem::random(48, 1e-18, 4);
     let (ps, _) = JacobiProblem::random(48, 1e-18, 4);
-    let rt = run_threaded(Arc::new(pt), &BsfConfig::with_workers(6));
-    let rs = run_simulated(
-        &ps,
-        &BsfConfig::with_workers(6),
-        &SimConfig::new(ClusterProfile::infiniband()),
-    );
+    let rt = Bsf::new(pt).workers(6).run().unwrap();
+    let rs = Bsf::new(ps)
+        .workers(6)
+        .engine(SimulatedEngine::new(ClusterProfile::infiniband()))
+        .run()
+        .unwrap();
     assert_eq!(rt.iterations, rs.iterations);
     for (a, b) in rt.param.iter().zip(&rs.param) {
         assert!((a - b).abs() < 1e-12);
@@ -54,14 +56,16 @@ fn simulated_virtual_time_has_scalability_peak_shape() {
     let profile = ClusterProfile::gigabit();
     let per_iter = |k: usize| {
         let (p, _) = JacobiProblem::random(96, 1e-30, 5);
-        let r = run_simulated(
-            &p,
-            &BsfConfig::with_workers(k).max_iter(8),
-            // 50µs/elem ⇒ t_map = 4.8ms ≫ per-message cost (~56µs), so a
-            // boundary exists between K=4 and K=96.
-            &SimConfig::new(profile).per_element(50e-6),
-        );
-        r.virtual_seconds / r.iterations as f64
+        // 50µs/elem ⇒ t_map = 4.8ms ≫ per-message cost (~56µs), so a
+        // boundary exists between K=4 and K=96.
+        let r = Bsf::new(p)
+            .config(BsfConfig::with_workers(k).max_iter(8))
+            .engine(SimulatedEngine::with_config(
+                SimConfig::new(profile).per_element(50e-6),
+            ))
+            .run()
+            .unwrap();
+        r.elapsed / r.iterations as f64
     };
     let t1 = per_iter(1);
     let t4 = per_iter(4);
@@ -74,8 +78,11 @@ fn simulated_virtual_time_has_scalability_peak_shape() {
 fn openmp_and_plain_agree_at_scale() {
     let (p1, _) = JacobiProblem::random(128, 1e-16, 6);
     let (p2, _) = JacobiProblem::random(128, 1e-16, 6);
-    let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(2));
-    let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(2).openmp(4));
+    let r1 = Bsf::new(p1).workers(2).run().unwrap();
+    let r2 = Bsf::new(p2)
+        .config(BsfConfig::with_workers(2).openmp(4))
+        .run()
+        .unwrap();
     assert_eq!(r1.iterations, r2.iterations);
     for (a, b) in r1.param.iter().zip(&r2.param) {
         assert!((a - b).abs() < 1e-9);
@@ -86,11 +93,12 @@ fn openmp_and_plain_agree_at_scale() {
 fn per_element_backend_matches_fused() {
     let (p1, _) = JacobiProblem::random(40, 1e-18, 7);
     let (p2, _) = JacobiProblem::random(40, 1e-18, 7);
-    let r1 = run_threaded(
-        Arc::new(p1.with_backend(MapBackend::PerElement)),
-        &BsfConfig::with_workers(4),
-    );
-    let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(4));
+    let r1 = Bsf::new(p1)
+        .workers(4)
+        .map_backend(PerElementBackend)
+        .run()
+        .unwrap();
+    let r2 = Bsf::new(p2).workers(4).run().unwrap();
     assert_eq!(r1.iterations, r2.iterations);
     for (a, b) in r1.param.iter().zip(&r2.param) {
         assert!((a - b).abs() < 1e-9);
@@ -101,8 +109,8 @@ fn per_element_backend_matches_fused() {
 fn trace_output_does_not_change_results() {
     let (p1, _) = JacobiProblem::random(32, 1e-16, 8);
     let (p2, _) = JacobiProblem::random(32, 1e-16, 8);
-    let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(3));
-    let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(3).trace(2));
+    let r1 = Bsf::new(p1).workers(3).run().unwrap();
+    let r2 = Bsf::new(p2).workers(3).trace(2).run().unwrap();
     assert_eq!(r1.iterations, r2.iterations);
     assert_eq!(r1.param, r2.param);
 }
@@ -110,7 +118,7 @@ fn trace_output_does_not_change_results() {
 #[test]
 fn max_iter_caps_divergence_guard() {
     let (p, _) = JacobiProblem::random(32, 1e-300, 9); // unreachable eps
-    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(2).max_iter(17));
+    let r = Bsf::new(p).workers(2).max_iter(17).run().unwrap();
     assert_eq!(r.iterations, 17);
 }
 
@@ -120,7 +128,7 @@ fn more_workers_than_list_elements() {
     // still function: surplus workers hold empty sublists and contribute
     // empty folds (counter 0) that the extended reduce skips.
     let (p, x_star) = JacobiProblem::random(6, 1e-20, 10);
-    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(9));
+    let r = Bsf::new(p).workers(9).run().unwrap();
     assert!(dist2(&r.param, &x_star) < 1e-10);
 }
 
@@ -128,7 +136,21 @@ fn more_workers_than_list_elements() {
 fn single_element_list() {
     // n=1: C = [0], d = b/a, converges in one step.
     let (p, x_star) = JacobiProblem::random(1, 1e-20, 11);
-    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(1));
+    let r = Bsf::new(p).workers(1).run().unwrap();
     assert!((r.param[0] - x_star[0]).abs() < 1e-10);
     assert!(r.iterations <= 3);
+}
+
+#[test]
+fn deprecated_shim_still_works() {
+    // The seed-era entry point survives as a thin shim over the session.
+    #[allow(deprecated)]
+    let r = bsf::skeleton::run_threaded(
+        std::sync::Arc::new(JacobiProblem::random(24, 1e-18, 12).0),
+        &BsfConfig::with_workers(3),
+    );
+    let (p2, _) = JacobiProblem::random(24, 1e-18, 12);
+    let r2 = Bsf::new(p2).workers(3).run().unwrap();
+    assert_eq!(r.iterations, r2.iterations);
+    assert_eq!(r.param, r2.param);
 }

@@ -1,5 +1,6 @@
-//! Integration: every demo application solved end-to-end on the skeleton,
-//! plus cross-problem consistency and the cost model's ordering claims.
+//! Integration: every demo application solved end-to-end on the skeleton
+//! through the session API, plus cross-problem consistency and the cost
+//! model's ordering claims.
 
 use std::sync::Arc;
 
@@ -10,14 +11,18 @@ use bsf::problems::jacobi::JacobiProblem;
 use bsf::problems::jacobi_map::JacobiMapProblem;
 use bsf::problems::lpp::LppProblem;
 use bsf::problems::montecarlo::MonteCarloProblem;
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::skeleton::Bsf;
 use bsf::util::mat::dist2;
 
 #[test]
 fn cimmino_solves_consistent_system() {
     let (p, _x_star) = CimminoProblem::random(96, 24, 1e-16, 201);
     let p = Arc::new(p);
-    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(6).max_iter(50_000));
+    let r = Bsf::from_arc(Arc::clone(&p))
+        .workers(6)
+        .max_iter(50_000)
+        .run()
+        .unwrap();
     // projection methods converge slowly; require a strong residual drop
     let r0 = p.residual2(&vec![0.0; 24]);
     assert!(p.residual2(&r.param) < r0 * 1e-8);
@@ -27,8 +32,8 @@ fn cimmino_solves_consistent_system() {
 fn jacobi_and_jacobi_map_same_fixed_point() {
     let (pa, x_star) = JacobiProblem::random(48, 1e-22, 202);
     let (pb, _) = JacobiMapProblem::random(48, 1e-22, 202);
-    let ra = run_threaded(Arc::new(pa), &BsfConfig::with_workers(4));
-    let rb = run_threaded(Arc::new(pb), &BsfConfig::with_workers(4));
+    let ra = Bsf::new(pa).workers(4).run().unwrap();
+    let rb = Bsf::new(pb).workers(4).run().unwrap();
     assert!(dist2(&ra.param, &x_star) < 1e-10);
     assert!(dist2(&rb.param, &x_star) < 1e-10);
 }
@@ -36,7 +41,7 @@ fn jacobi_and_jacobi_map_same_fixed_point() {
 #[test]
 fn gravity_deterministic_and_step_counted() {
     let p = GravityProblem::random(24, 5e-4, 40, 203);
-    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(5));
+    let r = Bsf::new(p).workers(5).run().unwrap();
     assert_eq!(r.iterations, 40);
     assert!(r.param.iter().all(|v| v.is_finite()));
 }
@@ -44,7 +49,7 @@ fn gravity_deterministic_and_step_counted() {
 #[test]
 fn montecarlo_reaches_tolerance() {
     let p = MonteCarloProblem::new(8, 5_000, 4e-3);
-    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(4));
+    let r = Bsf::new(p).workers(4).run().unwrap();
     assert!(MonteCarloProblem::stderr(&r.param) < 4e-3);
     let pi = MonteCarloProblem::estimate(&r.param);
     assert!((pi - std::f64::consts::PI).abs() < 0.05);
@@ -54,7 +59,11 @@ fn montecarlo_reaches_tolerance() {
 fn lpp_extended_reduce_drives_stop() {
     let p = LppProblem::random(80, 10, 204);
     let p = Arc::new(p);
-    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(8).max_iter(50_000));
+    let r = Bsf::from_arc(Arc::clone(&p))
+        .workers(8)
+        .max_iter(50_000)
+        .run()
+        .unwrap();
     assert_eq!(p.violations(&r.param), 0);
     // the run stopped because the final counter was 0, not max_iter
     assert!(r.iterations < 50_000);

@@ -1,19 +1,23 @@
-//! Integration: the PJRT runtime executing the AOT Pallas/JAX artifacts,
-//! and the XLA-backed worker map inside full skeleton runs.
+//! Integration: the artifact registry, the PJRT service and the generic
+//! XLA map backend.
 //!
-//! These tests need `artifacts/` (run `make artifacts`); they are skipped
-//! with a message when it is absent so `cargo test` works standalone.
+//! Registry/service/fallback tests run everywhere (they need no real
+//! backend). Execution tests additionally need `artifacts/` (run
+//! `make artifacts`) *and* a linked PJRT binding; they are skipped with a
+//! message otherwise so `cargo test` works standalone.
 
 use std::sync::Arc;
 
-use bsf::problems::cimmino::{CimminoBackend, CimminoProblem};
-use bsf::problems::gravity::{GravityBackend, GravityProblem};
-use bsf::problems::jacobi::{JacobiProblem, MapBackend};
-use bsf::problems::jacobi_map::{JacobiMapProblem, MapMapBackend};
+use bsf::problems::cimmino::CimminoProblem;
+use bsf::problems::gravity::GravityProblem;
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::problems::jacobi_map::JacobiMapProblem;
+use bsf::runtime::backend::XlaMapBackend;
 use bsf::runtime::service::XlaService;
 use bsf::runtime::XlaRuntime;
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::skeleton::Bsf;
 use bsf::util::mat::dist2;
+use bsf::BsfError;
 
 fn artifacts_dir() -> Option<String> {
     let dir = std::env::var("BSF_ARTIFACTS").unwrap_or_else(|_| {
@@ -26,6 +30,29 @@ fn artifacts_dir() -> Option<String> {
         eprintln!("SKIP: no artifacts at {dir}; run `make artifacts`");
         None
     }
+}
+
+fn executable_artifacts_dir() -> Option<String> {
+    let dir = artifacts_dir()?;
+    if XlaRuntime::backend_available() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no PJRT backend linked into this build");
+        None
+    }
+}
+
+/// A throwaway artifact dir with a manifest but no backing HLO files —
+/// enough for registry and fallback tests.
+fn temp_artifacts(tag: &str, manifest: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "bsf-xla-it-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.tsv"), manifest).unwrap();
+    dir
 }
 
 #[test]
@@ -42,18 +69,106 @@ fn manifest_loads_and_lists_all_kinds() {
 
 #[test]
 fn best_chunk_picks_smallest_fitting() {
-    let Some(dir) = artifacts_dir() else { return };
+    let dir = temp_artifacts(
+        "chunks",
+        "jacobi_n64_c16\tjacobi\t64\t16\tf32[64]\ta.hlo.txt\n\
+         jacobi_n64_c64\tjacobi\t64\t64\tf32[64]\tb.hlo.txt\n",
+    );
     let rt = XlaRuntime::open(&dir).unwrap();
-    let m = rt.best_chunk("jacobi", 64, 10).expect("fits in c=16");
-    assert_eq!(m.c, 16);
-    let m = rt.best_chunk("jacobi", 64, 17).expect("fits in c=64");
-    assert_eq!(m.c, 64);
+    assert_eq!(rt.best_chunk("jacobi", 64, 10).expect("fits in c=16").c, 16);
+    assert_eq!(rt.best_chunk("jacobi", 64, 17).expect("fits in c=64").c, 64);
     assert!(rt.best_chunk("jacobi", 64, 65).is_none());
+    let _ = std::fs::remove_dir_all(dir);
 }
 
 #[test]
+fn service_answers_registry_queries_across_threads() {
+    let dir = temp_artifacts(
+        "service",
+        "jacobi_n64_c16\tjacobi\t64\t16\tf32[64]\ta.hlo.txt\n\
+         gravity_n64_c16\tgravity\t64\t16\tf32[16,3]\tg.hlo.txt\n",
+    );
+    let service = XlaService::start(&dir).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let h = service.handle();
+            std::thread::spawn(move || {
+                let best = h.best_chunk("jacobi", 64, 5).unwrap();
+                assert_eq!(best, Some(("jacobi_n64_c16".to_string(), 16)));
+                assert_eq!(h.best_chunk("jacobi", 64, 999).unwrap(), None);
+                assert_eq!(h.best_chunk("cimmino", 64, 5).unwrap(), None);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn service_start_on_missing_dir_is_typed_error() {
+    let err = XlaService::start("/definitely/not/an/artifact/dir").unwrap_err();
+    assert!(matches!(err, BsfError::Io { .. }), "{err}");
+}
+
+#[test]
+fn xla_backend_falls_back_to_native_when_nothing_fits() {
+    // Manifest exists but holds no jacobi artifacts for n=40 → the
+    // backend must warn once and produce *identical* results via the
+    // native fallback (satisfying "recoverable artifact selection").
+    let dir = temp_artifacts(
+        "fallback",
+        "jacobi_n64_c16\tjacobi\t64\t16\tf32[64]\ta.hlo.txt\n",
+    );
+    let service = XlaService::start(&dir).unwrap();
+    let (p_xla, x_star) = JacobiProblem::random(40, 1e-18, 71);
+    let (p_nat, _) = JacobiProblem::random(40, 1e-18, 71);
+    let r_xla = Bsf::new(p_xla)
+        .workers(3)
+        .map_backend(XlaMapBackend::new(service.handle()))
+        .run()
+        .unwrap();
+    let r_nat = Bsf::new(p_nat).workers(3).run().unwrap();
+    assert_eq!(r_xla.iterations, r_nat.iterations);
+    assert_eq!(r_xla.param, r_nat.param);
+    assert!(dist2(&r_xla.param, &x_star) < 1e-10);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn xla_backend_falls_back_when_backend_is_unavailable() {
+    if XlaRuntime::backend_available() {
+        return; // this test pins the no-backend degradation path
+    }
+    // The manifest *does* contain a fitting artifact, but there is no
+    // PJRT binding: execution fails, the backend warns once and the run
+    // still converges on the native map.
+    let dir = temp_artifacts(
+        "nobackend",
+        "jacobi_n64_c16\tjacobi\t64\t16\tf32[64]\ta.hlo.txt\n\
+         jacobi_n64_c64\tjacobi\t64\t64\tf32[64]\tb.hlo.txt\n",
+    );
+    std::fs::write(dir.join("a.hlo.txt"), "HloModule stub").unwrap();
+    std::fs::write(dir.join("b.hlo.txt"), "HloModule stub").unwrap();
+    let service = XlaService::start(&dir).unwrap();
+    let (p, x_star) = JacobiProblem::random(64, 1e-18, 72);
+    let r = Bsf::new(p)
+        .workers(4)
+        .map_backend(XlaMapBackend::new(service.handle()))
+        .run()
+        .unwrap();
+    assert!(dist2(&r.param, &x_star) < 1e-10);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+// ----------------------------------------------------------------------
+// Execution tests: need real artifacts AND a linked PJRT backend.
+// ----------------------------------------------------------------------
+
+#[test]
 fn jacobi_artifact_matches_native_matvec() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = executable_artifacts_dir() else { return };
     let rt = XlaRuntime::open(&dir).unwrap();
     // jacobi_n64_c16: (64,16) @ (16,) -> (64,)
     let n = 64;
@@ -72,7 +187,7 @@ fn jacobi_artifact_matches_native_matvec() {
 
 #[test]
 fn executable_cache_reuses_compilation() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = executable_artifacts_dir() else { return };
     let rt = XlaRuntime::open(&dir).unwrap();
     let cols = vec![0.5f32; 64 * 16];
     let x = vec![1.0f32; 16];
@@ -91,16 +206,23 @@ fn executable_cache_reuses_compilation() {
     assert!(warm < first, "warm {warm:?} should beat cold {first:?}");
 }
 
+fn xla_session<P: bsf::runtime::backend::XlaMapSpec>(
+    p: P,
+    service: &XlaService,
+    k: usize,
+) -> Bsf<P> {
+    Bsf::new(p).workers(k).map_backend(XlaMapBackend::new(service.handle()))
+}
+
 #[test]
 fn xla_backed_jacobi_solves_like_native() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = executable_artifacts_dir() else { return };
     let service = XlaService::start(&dir).unwrap();
     // n must be an AOT dimension (64) for the XLA path to engage.
     let (native, x_star) = JacobiProblem::random(64, 1e-10, 401);
     let (xla_p, _) = JacobiProblem::random(64, 1e-10, 401);
-    let xla_p = xla_p.with_backend(MapBackend::Xla(service.handle()));
-    let rn = run_threaded(Arc::new(native), &BsfConfig::with_workers(4));
-    let rx = run_threaded(Arc::new(xla_p), &BsfConfig::with_workers(4));
+    let rn = Bsf::new(native).workers(4).run().unwrap();
+    let rx = xla_session(xla_p, &service, 4).run().unwrap();
     // f32 kernel vs f64 native: same fixed point to f32 accuracy.
     assert!(dist2(&rx.param, &x_star) < 1e-4, "dist² {}", dist2(&rx.param, &x_star));
     assert!(dist2(&rn.param, &rx.param) < 1e-4);
@@ -108,34 +230,37 @@ fn xla_backed_jacobi_solves_like_native() {
 
 #[test]
 fn xla_backed_jacobi_map_solves() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = executable_artifacts_dir() else { return };
     let service = XlaService::start(&dir).unwrap();
     let (p, x_star) = JacobiMapProblem::random(64, 1e-10, 402);
-    let p = p.with_backend(MapMapBackend::Xla(service.handle()));
-    let r = run_threaded(Arc::new(p), &BsfConfig::with_workers(4));
+    let r = xla_session(p, &service, 4).run().unwrap();
     assert!(dist2(&r.param, &x_star) < 1e-4);
 }
 
 #[test]
 fn xla_backed_cimmino_converges() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = executable_artifacts_dir() else { return };
     let service = XlaService::start(&dir).unwrap();
     let (p, _) = CimminoProblem::random(64, 64, 1e-10, 403);
-    let p = Arc::new(p.with_backend(CimminoBackend::Xla(service.handle())));
+    let p = Arc::new(p);
     let r0 = p.residual2(&vec![0.0; 64]);
-    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(20_000));
+    let r = Bsf::from_arc(Arc::clone(&p))
+        .workers(4)
+        .max_iter(20_000)
+        .map_backend(XlaMapBackend::new(service.handle()))
+        .run()
+        .unwrap();
     assert!(p.residual2(&r.param) < r0 * 1e-4);
 }
 
 #[test]
 fn xla_backed_gravity_matches_native_trajectory() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = executable_artifacts_dir() else { return };
     let service = XlaService::start(&dir).unwrap();
     let native = GravityProblem::random(64, 1e-3, 5, 404);
-    let xla_p = GravityProblem::random(64, 1e-3, 5, 404)
-        .with_backend(GravityBackend::Xla(service.handle()));
-    let rn = run_threaded(Arc::new(native), &BsfConfig::with_workers(4));
-    let rx = run_threaded(Arc::new(xla_p), &BsfConfig::with_workers(4));
+    let xla_p = GravityProblem::random(64, 1e-3, 5, 404);
+    let rn = Bsf::new(native).workers(4).run().unwrap();
+    let rx = xla_session(xla_p, &service, 4).run().unwrap();
     for (a, b) in rn.param.iter().zip(&rx.param) {
         assert!((a - b).abs() < 1e-3, "{a} vs {b}");
     }
@@ -143,7 +268,7 @@ fn xla_backed_gravity_matches_native_trajectory() {
 
 #[test]
 fn service_handles_work_from_many_threads() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some(dir) = executable_artifacts_dir() else { return };
     let service = XlaService::start(&dir).unwrap();
     let handles: Vec<_> = (0..8)
         .map(|t| {

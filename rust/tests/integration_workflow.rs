@@ -5,8 +5,9 @@ use std::sync::Arc;
 
 use bsf::problems::apex::{ApexProblem, ApexReduce, JOB_FEASIBILITY, JOB_PURSUIT, JOB_VERIFY};
 use bsf::skeleton::problem::{BsfProblem, IterCtx, MapCtx};
-use bsf::skeleton::{run_threaded, BsfConfig, StepDecision};
+use bsf::skeleton::{Bsf, StepDecision};
 use bsf::util::codec::Codec;
+use bsf::BsfError;
 
 /// Toy 2-job workflow: job 0 sums elements, job 1 counts them; the
 /// dispatcher alternates jobs and exits after 6 iterations. Verifies the
@@ -87,7 +88,7 @@ impl BsfProblem for TwoJob {
 #[test]
 fn two_job_workflow_alternates_and_dispatcher_exits() {
     let n = 10;
-    let r = run_threaded(Arc::new(TwoJob { n }), &BsfConfig::with_workers(3));
+    let r = Bsf::new(TwoJob { n }).workers(3).run().unwrap();
     assert_eq!(r.iterations, 6);
     assert_eq!(r.param[1], (0..n).sum::<usize>() as f64); // sum job result
     assert_eq!(r.param[2], n as f64); // count job result
@@ -95,8 +96,8 @@ fn two_job_workflow_alternates_and_dispatcher_exits() {
 
 #[test]
 fn two_job_result_independent_of_workers() {
-    let r1 = run_threaded(Arc::new(TwoJob { n: 12 }), &BsfConfig::with_workers(1));
-    let r4 = run_threaded(Arc::new(TwoJob { n: 12 }), &BsfConfig::with_workers(4));
+    let r1 = Bsf::new(TwoJob { n: 12 }).workers(1).run().unwrap();
+    let r4 = Bsf::new(TwoJob { n: 12 }).workers(4).run().unwrap();
     assert_eq!(r1.param, r4.param);
     assert_eq!(r1.iterations, r4.iterations);
 }
@@ -105,7 +106,11 @@ fn two_job_result_independent_of_workers() {
 fn apex_three_jobs_run_and_converge() {
     let p = ApexProblem::random(32, 5, 301);
     let p = Arc::new(p);
-    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(4).max_iter(200_000));
+    let r = Bsf::from_arc(Arc::clone(&p))
+        .workers(4)
+        .max_iter(200_000)
+        .run()
+        .unwrap();
     let (x, last_step) = &r.param;
     assert_eq!(p.violations(x), 0);
     assert!(*last_step < 1e-9, "final pursuit step {last_step}");
@@ -130,6 +135,103 @@ fn apex_objective_monotone_improvement_over_start() {
     let p = ApexProblem::random(40, 6, 302);
     let start_obj = p.objective(&vec![0.0; 6]);
     let p = Arc::new(p);
-    let r = run_threaded(Arc::clone(&p), &BsfConfig::with_workers(2).max_iter(200_000));
+    let r = Bsf::from_arc(Arc::clone(&p))
+        .workers(2)
+        .max_iter(200_000)
+        .run()
+        .unwrap();
     assert!(p.objective(&r.param.0) > start_obj);
+}
+
+/// A problem that reports an out-of-range job count: the session must
+/// return a typed configuration error, not panic.
+struct BadJobCount;
+
+impl BsfProblem for BadJobCount {
+    type Param = u64;
+    type MapElem = usize;
+    type ReduceElem = u64;
+
+    fn list_size(&self) -> usize {
+        4
+    }
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+    fn init_parameter(&self) -> u64 {
+        0
+    }
+    fn job_count(&self) -> usize {
+        9 // > MAX_JOBS
+    }
+    fn map_f(&self, _: &usize, _: &u64, _: &MapCtx) -> Option<u64> {
+        Some(1)
+    }
+    fn reduce_f(&self, x: &u64, y: &u64, _job: usize) -> u64 {
+        x + y
+    }
+    fn process_results(
+        &self,
+        _r: Option<&u64>,
+        _c: u64,
+        _p: &mut u64,
+        _ctx: &IterCtx,
+    ) -> StepDecision {
+        StepDecision::exit()
+    }
+}
+
+#[test]
+fn out_of_range_job_count_is_typed_error() {
+    let err = Bsf::new(BadJobCount).workers(2).run().unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+    assert!(err.to_string().contains("job_count"), "{err}");
+}
+
+/// A problem whose dispatcher jumps to a job that does not exist: the
+/// master must broadcast exit (so workers terminate) and report a typed
+/// error instead of asserting.
+struct BadNextJob;
+
+impl BsfProblem for BadNextJob {
+    type Param = u64;
+    type MapElem = usize;
+    type ReduceElem = u64;
+
+    fn list_size(&self) -> usize {
+        4
+    }
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+    fn init_parameter(&self) -> u64 {
+        0
+    }
+    fn job_count(&self) -> usize {
+        2
+    }
+    fn map_f(&self, _: &usize, _: &u64, _: &MapCtx) -> Option<u64> {
+        Some(1)
+    }
+    fn reduce_f(&self, x: &u64, y: &u64, _job: usize) -> u64 {
+        x + y
+    }
+    fn process_results(
+        &self,
+        _r: Option<&u64>,
+        _c: u64,
+        _p: &mut u64,
+        _ctx: &IterCtx,
+    ) -> StepDecision {
+        StepDecision::goto(7) // out of range
+    }
+}
+
+#[test]
+fn out_of_range_next_job_is_typed_error_not_deadlock() {
+    for k in [1usize, 3] {
+        let err = Bsf::new(BadNextJob).workers(k).run().unwrap_err();
+        assert!(matches!(err, BsfError::Config(_)), "K={k}: {err}");
+        assert!(err.to_string().contains("next_job"), "K={k}: {err}");
+    }
 }

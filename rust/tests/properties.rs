@@ -2,15 +2,13 @@
 //! `bsf::util::qcheck`): the invariants that make the BSF skeleton
 //! correct-by-construction.
 
-use std::sync::Arc;
-
-use bsf::costmodel::{CostParams, ClusterProfile};
+use bsf::costmodel::{ClusterProfile, CostParams};
 use bsf::problems::jacobi::JacobiProblem;
 use bsf::problems::lpp::LppProblem;
-use bsf::simcluster::{run_simulated, SimConfig};
+use bsf::simcluster::SimConfig;
 use bsf::skeleton::reduce::{fold_extended, merge_folds};
 use bsf::skeleton::split::all_ranges;
-use bsf::skeleton::{run_threaded, BsfConfig};
+use bsf::skeleton::{Bsf, SimulatedEngine, ThreadedEngine};
 use bsf::util::codec::Codec;
 use bsf::util::qcheck::{qcheck, size_in};
 
@@ -21,12 +19,11 @@ fn prop_skeleton_result_is_k_invariant_jacobi() {
     qcheck(12, |rng| {
         let n = size_in(rng, 8, 40);
         let seed = rng.next();
-        let k1 = 1;
         let k2 = size_in(rng, 2, 8);
         let (p1, _) = JacobiProblem::random(n, 1e-14, seed);
         let (p2, _) = JacobiProblem::random(n, 1e-14, seed);
-        let r1 = run_threaded(Arc::new(p1), &BsfConfig::with_workers(k1).max_iter(500));
-        let r2 = run_threaded(Arc::new(p2), &BsfConfig::with_workers(k2).max_iter(500));
+        let r1 = Bsf::new(p1).workers(1).max_iter(500).run().unwrap();
+        let r2 = Bsf::new(p2).workers(k2).max_iter(500).run().unwrap();
         assert_eq!(r1.iterations, r2.iterations);
         for (a, b) in r1.param.iter().zip(&r2.param) {
             assert!((a - b).abs() < 1e-8, "K-invariance broke: {a} vs {b}");
@@ -35,19 +32,26 @@ fn prop_skeleton_result_is_k_invariant_jacobi() {
 }
 
 #[test]
-fn prop_threaded_and_simulated_numerics_agree() {
+fn prop_engines_numerics_agree() {
+    // Threaded, serial (K=1) and simulated engines run the same math.
     qcheck(8, |rng| {
         let n = size_in(rng, 8, 32);
         let k = size_in(rng, 1, 6);
         let seed = rng.next();
         let (pt, _) = JacobiProblem::random(n, 1e-12, seed);
         let (ps, _) = JacobiProblem::random(n, 1e-12, seed);
-        let rt = run_threaded(Arc::new(pt), &BsfConfig::with_workers(k).max_iter(300));
-        let rs = run_simulated(
-            &ps,
-            &BsfConfig::with_workers(k).max_iter(300),
-            &SimConfig::new(ClusterProfile::gigabit()),
-        );
+        let rt = Bsf::new(pt)
+            .workers(k)
+            .max_iter(300)
+            .engine(ThreadedEngine)
+            .run()
+            .unwrap();
+        let rs = Bsf::new(ps)
+            .workers(k)
+            .max_iter(300)
+            .engine(SimulatedEngine::new(ClusterProfile::gigabit()))
+            .run()
+            .unwrap();
         assert_eq!(rt.iterations, rs.iterations);
         for (a, b) in rt.param.iter().zip(&rs.param) {
             assert!((a - b).abs() < 1e-12);
@@ -144,11 +148,12 @@ fn prop_lpp_feasibility_reached_for_random_polytopes() {
         let m = size_in(rng, 12, 60);
         let n = size_in(rng, 2, 8);
         let p = LppProblem::random(m, n, rng.next());
-        let p = Arc::new(p);
-        let r = run_threaded(
-            Arc::clone(&p),
-            &BsfConfig::with_workers(size_in(rng, 1, 6)).max_iter(100_000),
-        );
+        let p = std::sync::Arc::new(p);
+        let r = Bsf::from_arc(std::sync::Arc::clone(&p))
+            .workers(size_in(rng, 1, 6))
+            .max_iter(100_000)
+            .run()
+            .unwrap();
         assert_eq!(p.violations(&r.param), 0, "infeasible after {}", r.iterations);
     });
 }
@@ -165,8 +170,13 @@ fn prop_sim_virtual_time_monotone_in_latency() {
                 profile: ClusterProfile { latency, byte_time: 1e-9 },
                 compute: bsf::simcluster::ComputeTime::PerElement(1e-6),
             };
-            let r = run_simulated(&p, &BsfConfig::with_workers(k).max_iter(5), &sim);
-            r.virtual_seconds
+            let r = Bsf::new(p)
+                .workers(k)
+                .max_iter(5)
+                .engine(SimulatedEngine::with_config(sim))
+                .run()
+                .unwrap();
+            r.elapsed
         };
         let a = vt(1e-6);
         let b = vt(1e-3);
@@ -188,12 +198,12 @@ fn prop_transport_byte_accounting_matches_payloads() {
             .zip(sizes.clone())
             .map(|(w, sz)| {
                 std::thread::spawn(move || {
-                    w.send(w.master_rank(), Tag::Fold, vec![7u8; sz]);
+                    w.send(w.master_rank(), Tag::Fold, vec![7u8; sz]).unwrap();
                 })
             })
             .collect();
         for _ in 0..k {
-            total += master.recv_any(Tag::Fold).payload.len() as u64;
+            total += master.recv_any(Tag::Fold).unwrap().payload.len() as u64;
         }
         for h in handles {
             h.join().unwrap();
@@ -214,11 +224,8 @@ fn prop_montecarlo_tally_k_invariant() {
             p.max_rounds = 2;
             p
         };
-        let k1 = run_threaded(Arc::new(mk()), &BsfConfig::with_workers(1));
-        let kn = run_threaded(
-            Arc::new(mk()),
-            &BsfConfig::with_workers(size_in(rng, 2, 6)),
-        );
+        let k1 = Bsf::new(mk()).workers(1).run().unwrap();
+        let kn = Bsf::new(mk()).workers(size_in(rng, 2, 6)).run().unwrap();
         assert_eq!(k1.param, kn.param, "tallies must not depend on K");
     });
 }

@@ -1,0 +1,214 @@
+//! Integration: the unified `Bsf` session API — one entry point driving
+//! threaded, serial and simulated execution for the same problem
+//! definitions, with typed errors end to end.
+
+use std::sync::Arc;
+
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::apex::ApexProblem;
+use bsf::problems::cimmino::CimminoProblem;
+use bsf::problems::gravity::GravityProblem;
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::problems::jacobi_map::JacobiMapProblem;
+use bsf::problems::lpp::LppProblem;
+use bsf::problems::montecarlo::MonteCarloProblem;
+use bsf::skeleton::{
+    Bsf, BsfConfig, Clock, SerialEngine, SimulatedEngine, ThreadedEngine,
+};
+use bsf::BsfError;
+
+/// One session API drives all three engines for every problem: run each
+/// problem at K=1 under serial/threaded/simulated and compare numerics.
+#[test]
+fn all_engines_agree_for_all_problems() {
+    fn check<P, F>(mk: F, name: &str)
+    where
+        P: bsf::BsfProblem,
+        P::Param: PartialEq + std::fmt::Debug,
+        F: Fn() -> P,
+    {
+        let cfg = || BsfConfig::with_workers(1).max_iter(200);
+        let rs = Bsf::new(mk()).config(cfg()).engine(SerialEngine).run().unwrap();
+        let rt = Bsf::new(mk()).config(cfg()).engine(ThreadedEngine).run().unwrap();
+        let rv = Bsf::new(mk())
+            .config(cfg())
+            .engine(SimulatedEngine::new(ClusterProfile::infiniband()))
+            .run()
+            .unwrap();
+        assert_eq!(rs.iterations, rt.iterations, "{name}: serial vs threaded");
+        assert_eq!(rs.iterations, rv.iterations, "{name}: serial vs simulated");
+        assert_eq!(rs.param, rt.param, "{name}: serial vs threaded numerics");
+        assert_eq!(rs.param, rv.param, "{name}: serial vs simulated numerics");
+        assert_eq!(rs.clock, Clock::Real);
+        assert_eq!(rv.clock, Clock::Virtual);
+    }
+
+    check(|| JacobiProblem::random(24, 1e-14, 901).0, "jacobi");
+    check(|| JacobiMapProblem::random(24, 1e-14, 902).0, "jacobi-map");
+    check(|| CimminoProblem::random(24, 8, 1e-12, 903).0, "cimmino");
+    check(|| GravityProblem::random(12, 1e-3, 15, 904), "gravity");
+    check(
+        || {
+            let mut p = MonteCarloProblem::new(6, 300, 1e-12);
+            p.max_rounds = 4;
+            p
+        },
+        "montecarlo",
+    );
+    check(|| LppProblem::random(30, 4, 905), "lpp");
+    check(|| ApexProblem::random(20, 3, 906), "apex");
+}
+
+#[test]
+fn simulated_engine_reports_virtual_and_real_time() {
+    let (p, _) = JacobiProblem::random(32, 1e-30, 907);
+    let r = Bsf::new(p)
+        .config(BsfConfig::with_workers(8).max_iter(10))
+        .engine(SimulatedEngine::new(ClusterProfile::gigabit()))
+        .run()
+        .unwrap();
+    assert_eq!(r.clock, Clock::Virtual);
+    assert_eq!(r.engine, "simulated");
+    assert!(r.elapsed > 0.0, "virtual seconds");
+    assert!(r.wall_seconds > 0.0, "real seconds");
+    assert!(r.messages > 0 && r.bytes > 0, "simulated transport accounted");
+    assert_eq!(r.workers.len(), 8, "per-worker summaries in the unified report");
+    assert!(r.phases.total() > 0.0);
+    assert!(r.summary().contains("virtual="));
+}
+
+#[test]
+fn threaded_report_has_unified_shape() {
+    let (p, _) = JacobiProblem::random(32, 1e-16, 908);
+    let r = Bsf::new(p).workers(3).engine(ThreadedEngine).run().unwrap();
+    assert_eq!(r.clock, Clock::Real);
+    assert_eq!(r.engine, "threaded");
+    assert_eq!(r.workers.len(), 3);
+    assert!((r.elapsed - r.wall_seconds).abs() < 1e-12);
+    assert!(r.mean_worker_map_secs_per_iter() >= 0.0);
+}
+
+#[test]
+fn serial_fast_path_skips_the_transport() {
+    let (p, _) = JacobiProblem::random(32, 1e-16, 909);
+    let r = Bsf::new(p).workers(1).run().unwrap(); // Auto → serial at K=1
+    assert_eq!(r.engine, "serial");
+    assert_eq!(r.messages, 0);
+    assert_eq!(r.bytes, 0);
+    assert_eq!(r.workers.len(), 1);
+    assert_eq!(r.workers[0].sublist_length, 32);
+}
+
+#[test]
+fn auto_engine_picks_threaded_beyond_one_worker() {
+    let (p, _) = JacobiProblem::random(16, 1e-12, 910);
+    let r = Bsf::new(p).workers(2).run().unwrap();
+    assert_eq!(r.engine, "threaded");
+    assert!(r.messages > 0);
+}
+
+#[test]
+fn config_errors_are_typed_for_every_engine() {
+    let mk = || JacobiProblem::random(8, 1e-12, 911).0;
+    let zero_t = Bsf::new(mk()).workers(0).engine(ThreadedEngine).run().unwrap_err();
+    let zero_v = Bsf::new(mk())
+        .workers(0)
+        .engine(SimulatedEngine::new(ClusterProfile::ideal()))
+        .run()
+        .unwrap_err();
+    let multi_serial = Bsf::new(mk()).workers(3).engine(SerialEngine).run().unwrap_err();
+    for err in [zero_t, zero_v, multi_serial] {
+        assert!(matches!(err, BsfError::Config(_)), "{err}");
+    }
+}
+
+#[test]
+fn sessions_share_problems_through_arc() {
+    let p = Arc::new(LppProblem::random(40, 5, 912));
+    let r = Bsf::from_arc(Arc::clone(&p))
+        .workers(4)
+        .max_iter(100_000)
+        .run()
+        .unwrap();
+    // The caller-side handle still sees the problem after the run.
+    assert_eq!(p.violations(&r.param), 0);
+}
+
+/// A problem whose map panics on one element: every engine must surface
+/// a typed `WorkerPanic` instead of deadlocking the gather or unwinding
+/// through `run()`.
+struct PanickingMap;
+
+impl bsf::BsfProblem for PanickingMap {
+    type Param = u64;
+    type MapElem = usize;
+    type ReduceElem = u64;
+
+    fn list_size(&self) -> usize {
+        8
+    }
+    fn map_list_elem(&self, i: usize) -> usize {
+        i
+    }
+    fn init_parameter(&self) -> u64 {
+        0
+    }
+    fn map_f(
+        &self,
+        &i: &usize,
+        _p: &u64,
+        _ctx: &bsf::skeleton::MapCtx,
+    ) -> Option<u64> {
+        if i == 5 {
+            panic!("user map code exploded");
+        }
+        Some(1)
+    }
+    fn reduce_f(&self, x: &u64, y: &u64, _job: usize) -> u64 {
+        x + y
+    }
+    fn process_results(
+        &self,
+        _r: Option<&u64>,
+        _c: u64,
+        _p: &mut u64,
+        _ctx: &bsf::skeleton::problem::IterCtx,
+    ) -> bsf::skeleton::StepDecision {
+        bsf::skeleton::StepDecision::exit()
+    }
+}
+
+#[test]
+fn worker_panic_is_a_typed_error_not_a_deadlock() {
+    for k in [1usize, 2, 4] {
+        let err = Bsf::new(PanickingMap)
+            .workers(k)
+            .engine(ThreadedEngine)
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, BsfError::WorkerPanic { .. }), "K={k}: {err}");
+    }
+    let err = Bsf::new(PanickingMap)
+        .workers(1)
+        .engine(SerialEngine)
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::WorkerPanic { rank: 0 }), "{err}");
+    let err = Bsf::new(PanickingMap)
+        .workers(3)
+        .engine(SimulatedEngine::new(ClusterProfile::ideal()))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::WorkerPanic { .. }), "{err}");
+}
+
+#[test]
+fn errors_format_like_thiserror() {
+    let (p, _) = JacobiProblem::random(8, 1e-12, 913);
+    let err = Bsf::new(p).workers(0).run().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.starts_with("configuration error:"), "{msg}");
+    // And they are real std errors (boxable, source-chained).
+    let boxed: Box<dyn std::error::Error> = Box::new(err);
+    assert!(boxed.source().is_none());
+}

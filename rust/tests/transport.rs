@@ -1,0 +1,190 @@
+//! Transport-layer integration tests: MPI-style selective receive with
+//! out-of-order buffering, completion-order gathering with K ≥ 4
+//! workers, and byte/message accounting in `TransportStats`.
+
+use std::sync::mpsc::channel;
+use std::thread;
+
+use bsf::transport::{build_thread_transport, Communicator, Tag, ThreadEndpoint};
+
+fn split_master(k: usize) -> (ThreadEndpoint, Vec<ThreadEndpoint>) {
+    let mut eps = build_thread_transport(k);
+    let master = eps.pop().unwrap();
+    (master, eps)
+}
+
+#[test]
+fn recv_buffers_out_of_order_arrivals_across_peers_and_tags() {
+    let (master, workers) = split_master(3);
+    // Workers send in a deliberately scrambled order: rank r sends its
+    // Fold first, then an Exit, then a User message.
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|w| {
+            thread::spawn(move || {
+                let r = w.rank() as u8;
+                w.send(3, Tag::Fold, vec![r, 0]).unwrap();
+                w.send(3, Tag::Exit, vec![r, 1]).unwrap();
+                w.send(3, Tag::User(9), vec![r, 2]).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Ask in the *reverse* tag order and in reverse rank order: every
+    // message must still be delivered, none lost, none crossed.
+    for r in (0..3usize).rev() {
+        let m = master.recv(r, Tag::User(9)).unwrap();
+        assert_eq!(m.payload, vec![r as u8, 2]);
+    }
+    for r in 0..3usize {
+        let m = master.recv(r, Tag::Exit).unwrap();
+        assert_eq!(m.payload, vec![r as u8, 1]);
+        let m = master.recv(r, Tag::Fold).unwrap();
+        assert_eq!(m.payload, vec![r as u8, 0]);
+    }
+}
+
+#[test]
+fn recv_from_specific_peer_skips_other_peers() {
+    let (master, mut workers) = split_master(2);
+    let w1 = workers.pop().unwrap();
+    let w0 = workers.pop().unwrap();
+    w1.send(2, Tag::Fold, vec![11]).unwrap();
+    w0.send(2, Tag::Fold, vec![10]).unwrap();
+    // Selective receive from rank 1 must not consume rank 0's message.
+    assert_eq!(master.recv(1, Tag::Fold).unwrap().payload, vec![11]);
+    assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![10]);
+}
+
+#[test]
+fn recv_any_gathers_in_completion_order_k5() {
+    // K = 5 workers complete in a *controlled* order (each waits for a
+    // go-token released only after the previous worker's fold has been
+    // received); recv_any must yield messages in completion order
+    // (MPI_Waitany semantics), which the master relies on to overlap
+    // gathering with stragglers. The token chain makes the expected
+    // order deterministic — no sleeps, no scheduler dependence.
+    let k = 5;
+    let (master, workers) = split_master(k);
+    let mut go_tx = Vec::with_capacity(k);
+    let mut go_rx = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<()>();
+        go_tx.push(tx);
+        go_rx.push(Some(rx));
+    }
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|w| {
+            let rx = go_rx[w.rank()].take().expect("one receiver per rank");
+            thread::spawn(move || {
+                rx.recv().unwrap(); // wait until it is this rank's turn
+                w.send(w.master_rank(), Tag::Fold, vec![w.rank() as u8]).unwrap();
+            })
+        })
+        .collect();
+    // Completion order is the *reverse* of rank order by construction.
+    for expect in (0..k).rev() {
+        go_tx[expect].send(()).unwrap();
+        let m = master.recv_any(Tag::Fold).unwrap();
+        assert_eq!(m.payload, vec![expect as u8], "completion order violated");
+        assert_eq!(m.from, expect);
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn stats_account_bytes_and_messages_exactly() {
+    let (master, workers) = split_master(4);
+    let stats = master.stats();
+    assert_eq!(stats.message_count(), 0);
+    assert_eq!(stats.byte_count(), 0);
+
+    // Master broadcasts 3 orders of 10 bytes to the first 3 workers...
+    for w in 0..3 {
+        master.send(w, Tag::Order, vec![0; 10]).unwrap();
+    }
+    // ...and every worker sends a fold of (rank+1) bytes back.
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|w| {
+            thread::spawn(move || {
+                let rank = w.rank();
+                w.send(4, Tag::Fold, vec![0; rank + 1]).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    for _ in 0..4 {
+        master.recv_any(Tag::Fold).unwrap();
+    }
+    // Totals are shared across all endpoints of the run:
+    // 3*10 order bytes + (1+2+3+4) fold bytes; 3 + 4 messages.
+    assert_eq!(stats.message_count(), 7);
+    assert_eq!(stats.byte_count(), 30 + 10);
+    // Receiving does not change the counters.
+    assert_eq!(master.stats().byte_count(), 40);
+}
+
+#[test]
+fn recv_tags_matches_first_of_either_tag_in_arrival_order() {
+    let (master, mut workers) = split_master(1);
+    let w = workers.pop().unwrap();
+    w.send(1, Tag::Order, vec![1]).unwrap();
+    w.send(1, Tag::Abort, vec![2]).unwrap();
+    w.send(1, Tag::Order, vec![3]).unwrap();
+    // Multi-tag receive drains in arrival order across both tags...
+    let m = master.recv_tags(Some(0), &[Tag::Order, Tag::Abort]).unwrap();
+    assert_eq!((m.tag, m.payload), (Tag::Order, vec![1]));
+    let m = master.recv_tags(Some(0), &[Tag::Order, Tag::Abort]).unwrap();
+    assert_eq!((m.tag, m.payload), (Tag::Abort, vec![2]));
+    // ...while a single-tag receive still skips and buffers nothing else.
+    let m = master.recv(0, Tag::Order).unwrap();
+    assert_eq!(m.payload, vec![3]);
+}
+
+#[test]
+fn zero_length_payloads_count_as_messages_not_bytes() {
+    let (master, mut workers) = split_master(1);
+    let w = workers.pop().unwrap();
+    w.send(1, Tag::Fold, vec![]).unwrap();
+    assert_eq!(master.recv(0, Tag::Fold).unwrap().payload.len(), 0);
+    assert_eq!(master.stats().message_count(), 1);
+    assert_eq!(master.stats().byte_count(), 0);
+}
+
+#[test]
+fn heavy_interleaving_preserves_per_peer_fifo() {
+    // Two workers each send 100 numbered Fold messages while the master
+    // interleaves selective receives; per-peer FIFO must hold (MPI's
+    // non-overtaking guarantee).
+    let (master, workers) = split_master(2);
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|w| {
+            thread::spawn(move || {
+                for i in 0..100u8 {
+                    w.send(2, Tag::Fold, vec![w.rank() as u8, i]).unwrap();
+                }
+            })
+        })
+        .collect();
+    let mut next = [0u8; 2];
+    for _ in 0..200 {
+        let m = master.recv_any(Tag::Fold).unwrap();
+        assert_eq!(m.payload.len(), 2);
+        let (rank, seq) = (m.payload[0], m.payload[1]);
+        assert_eq!(seq, next[rank as usize], "peer {rank} overtook itself");
+        next[rank as usize] += 1;
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(next, [100, 100]);
+}
