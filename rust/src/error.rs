@@ -51,6 +51,12 @@ impl BsfError {
         BsfError::Transport(msg.into())
     }
 
+    /// A transport failure caused by an I/O error (socket refused, torn
+    /// connection, failed spawn): keeps the OS error text in context.
+    pub fn transport_io(context: impl Into<String>, source: std::io::Error) -> Self {
+        BsfError::Transport(format!("{}: {source}", context.into()))
+    }
+
     pub fn artifact(msg: impl Into<String>) -> Self {
         BsfError::Artifact(msg.into())
     }
@@ -123,6 +129,17 @@ mod tests {
         };
         assert!(e.source().is_some());
         assert!(e.to_string().contains("manifest.tsv"));
+    }
+
+    #[test]
+    fn transport_io_keeps_both_contexts() {
+        let e = BsfError::transport_io(
+            "worker 2: connect to master",
+            std::io::Error::new(std::io::ErrorKind::ConnectionRefused, "refused"),
+        );
+        assert!(matches!(e, BsfError::Transport(_)));
+        assert!(e.to_string().contains("worker 2"));
+        assert!(e.to_string().contains("refused"));
     }
 
     #[test]

@@ -26,8 +26,10 @@
 //!
 //! * an **engine** ([`skeleton::Engine`]) — [`skeleton::ThreadedEngine`]
 //!   (real worker threads), [`skeleton::SerialEngine`] (the K=1 fast
-//!   path) or [`skeleton::SimulatedEngine`] (the virtual-time cluster,
-//!   for scalability curves far beyond physical cores);
+//!   path), [`skeleton::ProcessEngine`] (real worker **OS processes**
+//!   over framed TCP, the paper's `BC_MpiRun` launch model) or
+//!   [`skeleton::SimulatedEngine`] (the virtual-time cluster, for
+//!   scalability curves far beyond physical cores);
 //! * a **map backend** ([`skeleton::MapBackend`]) —
 //!   [`skeleton::PerElementBackend`], [`skeleton::FusedNativeBackend`]
 //!   (default) or the problem-agnostic
@@ -47,7 +49,8 @@
 //!   workflow (multi-job) support, the OpenMP-analog intra-worker
 //!   parallel map, and the session/engine/backend layer described above.
 //! * [`transport`] — an MPI-like message-passing substrate over OS
-//!   threads (the cluster-interconnect substitution; see DESIGN.md §2).
+//!   threads *and* over framed TCP between real OS processes (the
+//!   cluster-interconnect substitution; see DESIGN.md §2).
 //! * [`simcluster`] — a virtual-time cluster simulator that scales the
 //!   worker count far beyond physical cores to reproduce the paper's
 //!   speedup curves.
@@ -84,6 +87,6 @@ pub mod util;
 pub use error::{BsfError, BsfResult};
 pub use skeleton::{
     Bsf, BsfConfig, BsfProblem, Clock, Engine, FusedNativeBackend, MapBackend,
-    PerElementBackend, PhaseBreakdown, RunReport, SerialEngine, SimulatedEngine,
-    ThreadedEngine,
+    PerElementBackend, PhaseBreakdown, ProcessEngine, RunReport, SerialEngine,
+    SimulatedEngine, ThreadedEngine,
 };

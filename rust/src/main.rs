@@ -5,7 +5,13 @@
 //! `util::cli::ArgMap` supplies the typed option layer):
 //!
 //! * `run <problem>`     — solve via the session API; `--engine`
-//!                          auto|serial|threaded|sim picks the engine
+//!                          auto|serial|threaded|process|sim picks the
+//!                          engine (`process` = real worker OS processes
+//!                          over TCP, self-spawned or pre-started via
+//!                          `--listen`)
+//! * `worker`            — run one worker process: connect to a master,
+//!                          announce a rank, drive Algorithm 2's worker
+//!                          loop (the distributed-mode child command)
 //! * `sim <problem>`     — shorthand for `run --engine sim` (virtual time)
 //! * `sweep <problem>`   — speedup curve over K: model vs simulation
 //! * `predict <problem>` — calibrate + print the BSF model parameters and
@@ -35,31 +41,42 @@ use bsf::problems::montecarlo::MonteCarloProblem;
 use bsf::runtime::backend::{XlaMapBackend, XlaMapSpec};
 use bsf::runtime::service::XlaService;
 use bsf::runtime::XlaRuntime;
+use bsf::skeleton::process::run_process_worker;
 use bsf::skeleton::{
-    Bsf, BsfConfig, BsfProblem, PerElementBackend, RunReport, SerialEngine,
-    SimulatedEngine, ThreadedEngine,
+    Bsf, BsfConfig, BsfProblem, FusedNativeBackend, PerElementBackend, ProcessEngine,
+    RunReport, SerialEngine, SimulatedEngine, ThreadedEngine,
 };
 use bsf::util::cli::ArgMap;
 
 const USAGE: &str = "\
-usage: bsf <run|sim|sweep|predict|artifacts> [problem] [options]
+usage: bsf <run|worker|sim|sweep|predict|artifacts> [problem] [options]
 
 problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | lpp | apex
 
 options by subcommand:
   run / sim:
     --n N          problem size (default 256)
-    --k K          number of workers (default 4)
+    --k K          number of workers (default 4; --workers is an alias)
     --omp T        intra-worker map threads (default 1)
     --seed S       RNG seed (default 7)
     --eps E        stop threshold (default 1e-12)
     --trace T      print intermediate results every T iterations
     --max-iter I   iteration cap (default 100000)
-    --engine E     auto | serial | threaded | sim   (run only)
+    --engine E     auto | serial | threaded | process | sim  (run only)
+    --listen A     with --engine process: bind A (host:port) and wait
+                   for K pre-started `bsf worker` processes instead of
+                   self-spawning them on localhost
     --backend B    native | per-element | xla
     --profile P    infiniband | gigabit | ideal    (sim)
     --steps S      leapfrog steps (gravity; default 50)
     --samples S    samples per block (montecarlo; default 10000)
+  worker (one worker process of a distributed run; ranks 0..K-1,
+          the master is rank K — the paper's BC_MpiRun convention):
+    --connect A    master address (host:port), required
+    --rank R       this worker's rank, required
+    --problem P    problem name, required; problem options (--n --seed
+                   --eps --steps --samples --omp --backend) must match
+                   the master's
   sweep:
     --n N (default 512)  --k 1,2,4,...  --seed S  --profile P
     --max-iter I (default 30)  --steps S (gravity; default: max-iter)
@@ -83,6 +100,7 @@ enum EngineOpt {
     Auto,
     Serial,
     Threaded,
+    Process,
     Simulated(ClusterProfile),
 }
 
@@ -109,9 +127,10 @@ fn engine_from(args: &ArgMap) -> Result<EngineOpt, BsfError> {
         "auto" => Ok(EngineOpt::Auto),
         "serial" => Ok(EngineOpt::Serial),
         "threaded" => Ok(EngineOpt::Threaded),
+        "process" => Ok(EngineOpt::Process),
         "sim" | "simulated" => Ok(EngineOpt::Simulated(profile_from(args)?)),
         other => Err(BsfError::usage(format!(
-            "unknown --engine {other:?} (auto|serial|threaded|sim)"
+            "unknown --engine {other:?} (auto|serial|threaded|process|sim)"
         ))),
     }
 }
@@ -128,7 +147,13 @@ fn backend_from(args: &ArgMap) -> Result<BackendOpt, BsfError> {
 }
 
 fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
-    let cfg = BsfConfig::with_workers(args.usize_or("k", 4)?)
+    // `--workers` (the distributed-mode spelling) is an alias for `--k`.
+    let k = if args.get("workers").is_some() {
+        args.usize_or("workers", 4)?
+    } else {
+        args.usize_or("k", 4)?
+    };
+    let cfg = BsfConfig::with_workers(k)
         .openmp(args.usize_or("omp", 1)?)
         .trace(args.usize_or("trace", 0)?)
         .max_iter(args.usize_or("max-iter", 100_000)?);
@@ -142,11 +167,75 @@ fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
     })
 }
 
-fn apply_engine<P: BsfProblem>(b: Bsf<P>, engine: EngineOpt) -> Bsf<P> {
+/// Worker argv for a self-spawned distributed run: the same problem and
+/// backend the master was asked for, passed explicitly so child defaults
+/// can never drift.
+fn worker_args(name: &str, c: &Common, args: &ArgMap) -> Vec<String> {
+    let kv: &[(&str, String)] = &[
+        ("problem", name.to_string()),
+        ("n", c.n.to_string()),
+        ("seed", c.seed.to_string()),
+        ("eps", c.eps.to_string()),
+        ("steps", c.steps.to_string()),
+        ("samples", c.samples.to_string()),
+        ("omp", c.cfg.openmp_threads.to_string()),
+        ("backend", args.str_or("backend", "native").to_string()),
+    ];
+    let mut argv = vec!["worker".to_string()];
+    for (k, v) in kv {
+        argv.push(format!("--{k}"));
+        argv.push(v.clone());
+    }
+    argv
+}
+
+/// One construction site per problem, shared by the master (`cmd_run`)
+/// and worker (`cmd_worker`) paths: a distributed run is undefined unless
+/// both rebuild identical instances, so the constructors must never
+/// drift apart.
+fn mk_jacobi(c: &Common) -> JacobiProblem {
+    JacobiProblem::random(c.n, c.eps, c.seed).0
+}
+
+fn mk_jacobi_map(c: &Common) -> JacobiMapProblem {
+    JacobiMapProblem::random(c.n, c.eps, c.seed).0
+}
+
+fn mk_cimmino(c: &Common) -> CimminoProblem {
+    CimminoProblem::random(c.n, c.n, c.eps, c.seed).0
+}
+
+fn mk_gravity(c: &Common) -> GravityProblem {
+    GravityProblem::random(c.n, 1e-3, c.steps, c.seed)
+}
+
+fn mk_montecarlo(c: &Common) -> MonteCarloProblem {
+    MonteCarloProblem::new(c.n, c.samples, 1e-3)
+}
+
+fn mk_lpp(c: &Common) -> LppProblem {
+    LppProblem::random(4 * c.n, c.n, c.seed)
+}
+
+fn mk_apex(c: &Common) -> ApexProblem {
+    ApexProblem::random(4 * c.n, c.n, c.seed)
+}
+
+fn apply_engine<P: BsfProblem>(
+    b: Bsf<P>,
+    engine: EngineOpt,
+    args: &ArgMap,
+    name: &str,
+    c: &Common,
+) -> Bsf<P> {
     match engine {
         EngineOpt::Auto => b,
         EngineOpt::Serial => b.engine(SerialEngine),
         EngineOpt::Threaded => b.engine(ThreadedEngine),
+        EngineOpt::Process => match args.get("listen") {
+            Some(addr) => b.engine(ProcessEngine::listen(addr)),
+            None => b.engine(ProcessEngine::spawn_args(worker_args(name, c, args))),
+        },
         EngineOpt::Simulated(profile) => b.engine(SimulatedEngine::new(profile)),
     }
 }
@@ -221,17 +310,29 @@ fn finish<Param>(
 ) -> Result<(), BsfError> {
     println!("done: {}", r.summary());
     println!("phases: {}", r.phases.summary());
+    let traffic = r.transport_summary();
+    if !traffic.is_empty() {
+        println!("traffic: {traffic}");
+    }
     println!("result: {}", describe(&r.param));
     Ok(())
 }
 
 const RUN_OPTS: &[&str] = &[
-    "n", "k", "omp", "seed", "eps", "trace", "max-iter", "engine", "backend",
-    "profile", "steps", "samples",
+    "n", "k", "workers", "omp", "seed", "eps", "trace", "max-iter", "engine",
+    "backend", "profile", "steps", "samples", "listen",
 ];
 
 fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
     args.ensure_known(RUN_OPTS)?;
+    // --listen only means something to the process engine; anywhere else
+    // it would be silently ignored while remote workers wait forever.
+    if args.get("listen").is_some() && !matches!(engine, EngineOpt::Process) {
+        return Err(BsfError::usage(
+            "--listen requires --engine process (it binds the master's \
+             address for pre-started `bsf worker` processes)",
+        ));
+    }
     let c = common_from(args)?;
     let backend = backend_from(args)?;
     // One service outlives the whole run (worker handles clone from it).
@@ -243,50 +344,115 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
     let name = args.positional(0).unwrap_or("jacobi");
     match name {
         "jacobi" => {
-            let (p, _) = JacobiProblem::random(c.n, c.eps, c.seed);
-            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = Bsf::new(mk_jacobi(&c)).config(c.cfg.clone());
+            let b = apply_engine(b, engine, args, name, &c);
             let b = attach_xla_capable(b, backend, &service);
             finish(b.run()?, |x| head(x))
         }
         "jacobi-map" => {
-            let (p, _) = JacobiMapProblem::random(c.n, c.eps, c.seed);
-            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = Bsf::new(mk_jacobi_map(&c)).config(c.cfg.clone());
+            let b = apply_engine(b, engine, args, name, &c);
             let b = attach_xla_capable(b, backend, &service);
             finish(b.run()?, |x| head(x))
         }
         "cimmino" => {
-            let (p, _) = CimminoProblem::random(c.n, c.n, c.eps, c.seed);
-            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = Bsf::new(mk_cimmino(&c)).config(c.cfg.clone());
+            let b = apply_engine(b, engine, args, name, &c);
             let b = attach_xla_capable(b, backend, &service);
             finish(b.run()?, |x| head(x))
         }
         "gravity" => {
-            let p = GravityProblem::random(c.n, 1e-3, c.steps, c.seed);
-            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = Bsf::new(mk_gravity(&c)).config(c.cfg.clone());
+            let b = apply_engine(b, engine, args, name, &c);
             let b = attach_xla_capable(b, backend, &service);
             finish(b.run()?, |x| head(x))
         }
         "montecarlo" => {
-            let p = MonteCarloProblem::new(c.n, c.samples, 1e-3);
-            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = Bsf::new(mk_montecarlo(&c)).config(c.cfg.clone());
+            let b = apply_engine(b, engine, args, name, &c);
             let b = attach_native_only(b, backend, "montecarlo");
             finish(b.run()?, |t| {
                 format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1)
             })
         }
         "lpp" => {
-            let p = LppProblem::random(4 * c.n, c.n, c.seed);
-            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = Bsf::new(mk_lpp(&c)).config(c.cfg.clone());
+            let b = apply_engine(b, engine, args, name, &c);
             let b = attach_native_only(b, backend, "lpp");
             finish(b.run()?, |x| head(x))
         }
         "apex" => {
-            let p = ApexProblem::random(4 * c.n, c.n, c.seed);
-            let b = apply_engine(Bsf::new(p).config(c.cfg.clone()), engine);
+            let b = Bsf::new(mk_apex(&c)).config(c.cfg.clone());
+            let b = apply_engine(b, engine, args, name, &c);
             let b = attach_native_only(b, backend, "apex");
             finish(b.run()?, |(x, _)| head(x))
         }
         other => Err(BsfError::usage(format!("unknown problem {other:?}"))),
+    }
+}
+
+const WORKER_OPTS: &[&str] = &[
+    "connect", "rank", "problem", "n", "seed", "eps", "steps", "samples", "omp",
+    "backend",
+];
+
+/// One worker process of a distributed run (the child side of
+/// `--engine process`, or a hand-started remote worker). Rebuilds the
+/// same problem instance the master holds from the same options, then
+/// drives the shared Algorithm-2 worker loop over TCP.
+fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(WORKER_OPTS)?;
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| BsfError::usage("worker requires --connect <host:port>"))?;
+    let rank = match args.get("rank") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| BsfError::usage(format!("--rank expects an integer, got {v:?}")))?,
+        None => return Err(BsfError::usage("worker requires --rank <r>")),
+    };
+    let name = args
+        .get("problem")
+        .ok_or_else(|| BsfError::usage("worker requires --problem <name>"))?;
+    let c = common_from(args)?;
+    let backend = backend_from(args)?;
+
+    fn go<P: BsfProblem>(
+        p: &P,
+        backend: BackendOpt,
+        connect: &str,
+        rank: usize,
+        cfg: &BsfConfig,
+    ) -> Result<(), BsfError> {
+        let _report = match backend {
+            BackendOpt::PerElement => {
+                run_process_worker(p, &PerElementBackend, connect, rank, cfg)?
+            }
+            BackendOpt::Xla => {
+                eprintln!(
+                    "bsf: warning: worker processes use the native map \
+                     (--backend xla is master-side only); using native"
+                );
+                run_process_worker(p, &FusedNativeBackend, connect, rank, cfg)?
+            }
+            BackendOpt::FusedNative => {
+                run_process_worker(p, &FusedNativeBackend, connect, rank, cfg)?
+            }
+        };
+        Ok(())
+    }
+
+    // The mk_* constructors are shared with cmd_run, so worker j holds
+    // the same problem instance as the master by construction.
+    match name {
+        "jacobi" => go(&mk_jacobi(&c), backend, connect, rank, &c.cfg),
+        "jacobi-map" => go(&mk_jacobi_map(&c), backend, connect, rank, &c.cfg),
+        "cimmino" => go(&mk_cimmino(&c), backend, connect, rank, &c.cfg),
+        "gravity" => go(&mk_gravity(&c), backend, connect, rank, &c.cfg),
+        "montecarlo" => go(&mk_montecarlo(&c), backend, connect, rank, &c.cfg),
+        "lpp" => go(&mk_lpp(&c), backend, connect, rank, &c.cfg),
+        "apex" => go(&mk_apex(&c), backend, connect, rank, &c.cfg),
+        other => Err(BsfError::usage(format!("unknown problem {other:?} (worker)"))),
     }
 }
 
@@ -392,6 +558,7 @@ fn cmd_artifacts() -> Result<(), BsfError> {
 fn dispatch(args: &ArgMap) -> Result<(), BsfError> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(args, engine_from(args)?),
+        Some("worker") => cmd_worker(args),
         Some("sim") => {
             if args.get("engine").is_some() {
                 return Err(BsfError::usage(

@@ -36,6 +36,7 @@ use crate::skeleton::runner::validate_run;
 use crate::skeleton::split::all_ranges;
 use crate::skeleton::variables::SkelVars;
 use crate::skeleton::worker::{map_and_fold, WorkerReport};
+use crate::transport::{Tag, TransportStats, VolumeByTag};
 use crate::util::codec::Codec;
 
 /// How the simulator charges worker compute time.
@@ -99,6 +100,9 @@ pub struct SimReport<Param> {
     /// Total messages / bytes the simulated transport carried.
     pub messages: u64,
     pub bytes: u64,
+    /// Per-tag breakdown of the simulated traffic (orders, folds, exit
+    /// flags) — same shape the real transports report.
+    pub volume: VolumeByTag,
 }
 
 /// Run `problem` on a simulated cluster of `cfg.workers` nodes, mapping
@@ -131,8 +135,7 @@ pub fn simulate<P: BsfProblem>(
     let mut vtime = 0.0f64;
     let mut job = 0usize;
     let mut iter = 0usize;
-    let mut messages = 0u64;
-    let mut bytes = 0u64;
+    let stats = TransportStats::default();
     let mut acc = IterBreakdown::default();
     let mut map_seconds = vec![0.0f64; k];
 
@@ -143,8 +146,7 @@ pub fn simulate<P: BsfProblem>(
         // Phase 1: sequential order sends; order j lands at (j+1)·(L+sβ).
         let send_cost = lat + order_bytes as f64 * beta;
         let send_all = k as f64 * send_cost;
-        messages += k as u64;
-        bytes += (k * order_bytes) as u64;
+        stats.record_n(Tag::Order, k as u64, order_bytes);
 
         // Phase 2: execute every worker's real map, measure/charge time.
         let mut arrivals: Vec<(f64, ExtendedFold<P::ReduceElem>)> =
@@ -168,8 +170,7 @@ pub fn simulate<P: BsfProblem>(
             let fold_len = (fold.value.clone(), fold.counter).to_bytes().len();
             let start = (rank + 1) as f64 * send_cost;
             let arrive = start + t_map + lat + fold_len as f64 * beta;
-            messages += 1;
-            bytes += fold_len as u64;
+            stats.record(Tag::Fold, fold_len);
             arrivals.push((arrive, fold));
         }
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
@@ -211,8 +212,7 @@ pub fn simulate<P: BsfProblem>(
 
         // Exit broadcast: K sequential small messages (1 byte payload).
         let exit_cost = k as f64 * (lat + beta);
-        messages += k as u64;
-        bytes += k as u64;
+        stats.record_n(Tag::Exit, k as u64, 1);
 
         let b = IterBreakdown {
             send: send_all,
@@ -250,8 +250,9 @@ pub fn simulate<P: BsfProblem>(
                     master_reduce: acc.master_reduce * inv,
                     process_and_exit: acc.process_and_exit * inv,
                 },
-                messages,
-                bytes,
+                messages: stats.message_count(),
+                bytes: stats.byte_count(),
+                volume: stats.volume(),
             };
             return Ok((report, workers));
         }

@@ -8,8 +8,9 @@
 //! trait is that seam. One session, one problem, one config — and the
 //! engine decides whether iterations run on real worker threads
 //! ([`ThreadedEngine`]), in-process without any transport
-//! ([`SerialEngine`], the K=1 fast path), or on the virtual-time cluster
-//! simulator ([`SimulatedEngine`]). All three return the same
+//! ([`SerialEngine`], the K=1 fast path), across real worker **OS
+//! processes** over TCP ([`ProcessEngine`]), or on the virtual-time
+//! cluster simulator ([`SimulatedEngine`]). All of them return the same
 //! [`RunReport`].
 
 use std::sync::Arc;
@@ -27,6 +28,9 @@ use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::runner::{run_threaded_session, validate_run};
 use crate::skeleton::variables::SkelVars;
 use crate::skeleton::worker::{map_and_fold, WorkerReport};
+use crate::transport::VolumeByTag;
+
+pub use crate::skeleton::process::ProcessEngine;
 
 /// An execution strategy for one skeleton run.
 pub trait Engine<P: BsfProblem> {
@@ -173,6 +177,7 @@ impl<P: BsfProblem> Engine<P> for SerialEngine {
                     }],
                     messages: 0,
                     bytes: 0,
+                    volume: VolumeByTag::default(),
                 });
             }
 
@@ -242,6 +247,7 @@ impl<P: BsfProblem> Engine<P> for SimulatedEngine {
             workers,
             messages: r.messages,
             bytes: r.bytes,
+            volume: r.volume,
         })
     }
 }

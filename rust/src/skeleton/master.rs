@@ -256,3 +256,29 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
         job = decision.next_job;
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::jacobi::JacobiProblem;
+    use crate::transport::build_thread_transport;
+
+    #[test]
+    fn release_broadcast_continues_past_a_dead_worker() {
+        // Worker 0 is gone before the run starts: the master's first
+        // order send fails, and the abort broadcast must still reach the
+        // surviving worker 1 (exit=true) instead of stopping at the dead
+        // rank — otherwise survivors hang at the top of their loop.
+        let mut eps = build_thread_transport(2);
+        let master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        drop(w0);
+        let (p, _) = JacobiProblem::random(8, 1e-12, 7);
+        let cfg = BsfConfig::with_workers(2);
+        let err = run_master(&p, &master, &cfg).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        let m = w1.recv(2, Tag::Exit).unwrap();
+        assert!(bool::from_bytes(&m.payload), "survivor must be released");
+    }
+}

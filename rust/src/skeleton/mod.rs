@@ -26,6 +26,7 @@ pub mod config;
 pub mod engine;
 pub mod master;
 pub mod problem;
+pub mod process;
 pub mod reduce;
 pub mod report;
 pub mod runner;
@@ -37,7 +38,9 @@ pub mod workflow;
 
 pub use backend::{FusedNativeBackend, MapBackend, PerElementBackend};
 pub use config::BsfConfig;
-pub use engine::{AutoEngine, Engine, SerialEngine, SimulatedEngine, ThreadedEngine};
+pub use engine::{
+    AutoEngine, Engine, ProcessEngine, SerialEngine, SimulatedEngine, ThreadedEngine,
+};
 pub use problem::{BsfProblem, MapCtx, StepDecision};
 pub use report::{Clock, PhaseBreakdown, RunReport};
 pub use session::Bsf;

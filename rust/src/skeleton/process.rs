@@ -1,0 +1,342 @@
+//! Multi-process execution: K worker **OS processes** + this process as
+//! master, over the framed-TCP transport ([`crate::transport::tcp`]).
+//!
+//! This is the launcher role of the paper's `BC_MpiRun`: it starts K+1
+//! processes (Fig. 1) with workers at ranks `0..K-1` and the master at
+//! rank K. Two launch modes:
+//!
+//! * **self-spawn** (the default): [`ProcessEngine::spawn_args`] forks K
+//!   children of a worker-capable binary on this machine, pointing each
+//!   at the master's ephemeral listen port — `bsf run <p> --engine
+//!   process` uses this with its own `bsf worker` subcommand;
+//! * **pre-started workers**: [`ProcessEngine::listen`] binds a fixed
+//!   address and waits for externally launched `bsf worker --connect`
+//!   processes (other terminals, other hosts).
+//!
+//! Each worker process rebuilds the *same problem instance* from its
+//! command line — exactly the paper's model, where every MPI process
+//! runs the same program and each worker inputs its own sublist
+//! (`PC_bsf_SetMapListElem`). The master never ships problem data; it
+//! only ships orders. If the worker's problem doesn't match the
+//! master's, the run is undefined — launchers must pass identical
+//! problem parameters (the `bsf` CLI derives both from one arg set).
+//!
+//! Children are released and reaped on **every** error path: a failed
+//! spawn, handshake timeout, or mid-run transport loss kills the
+//! remaining children before the error is reported — a dead worker
+//! yields a typed [`BsfError`], never a hang and never an orphan.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::BsfError;
+use crate::skeleton::backend::MapBackend;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::master::run_master;
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
+use crate::skeleton::runner::validate_run;
+use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
+use crate::transport::tcp::{accept_workers, connect_worker, ProblemSig};
+use crate::transport::{Communicator, Tag};
+use crate::util::codec::Codec;
+
+/// Tag of the end-of-run summary each worker process sends back (rank,
+/// iterations, map seconds, sublist length) so the unified report keeps
+/// per-worker detail across the process boundary.
+pub const TAG_WORKER_REPORT: Tag = Tag::User(0x5752); // "WR"
+
+/// How long the master waits for all K workers to connect + handshake.
+const DEFAULT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long a worker retries connecting (covers master-first *and*
+/// worker-first start orders on separate terminals).
+const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long the master waits for spawned children to exit after a
+/// completed run before killing them.
+const REAP_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The handshake fingerprint both sides derive from their own problem
+/// instance — a mismatch means the launcher passed different problem
+/// parameters to master and worker.
+fn problem_sig<P: BsfProblem>(problem: &P) -> ProblemSig {
+    ProblemSig {
+        list_size: problem.list_size() as u64,
+        job_count: problem.job_count() as u64,
+    }
+}
+
+/// Real multi-process execution: spawns (or accepts) K worker processes
+/// and runs the master loop over TCP in this process.
+pub struct ProcessEngine {
+    /// Binary to spawn workers from; `None` = this executable.
+    program: Option<PathBuf>,
+    /// Argv prefix for spawned workers; the engine appends
+    /// `--connect <addr> --rank <r>`.
+    worker_args: Vec<String>,
+    /// Bind address. `None` = ephemeral loopback port (self-spawn mode).
+    listen: Option<String>,
+    handshake_timeout: Duration,
+}
+
+impl ProcessEngine {
+    /// Self-spawn mode: fork K children of this executable (or the one
+    /// set via [`program`](Self::program)) with `args` + `--connect
+    /// <addr> --rank <r>`. The child must parse those two options,
+    /// rebuild the same problem, and call [`run_process_worker`].
+    pub fn spawn_args<I, S>(args: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        Self {
+            program: None,
+            worker_args: args.into_iter().map(Into::into).collect(),
+            listen: None,
+            handshake_timeout: DEFAULT_HANDSHAKE_TIMEOUT,
+        }
+    }
+
+    /// Pre-started-worker mode: bind `addr` and wait for K external
+    /// `bsf worker --connect` processes instead of spawning any.
+    pub fn listen(addr: impl Into<String>) -> Self {
+        Self {
+            program: None,
+            worker_args: Vec::new(),
+            listen: Some(addr.into()),
+            handshake_timeout: DEFAULT_HANDSHAKE_TIMEOUT,
+        }
+    }
+
+    /// Spawn workers from `path` instead of `std::env::current_exe()`
+    /// (tests spawn the `bsf` binary from a test harness).
+    pub fn program(mut self, path: impl Into<PathBuf>) -> Self {
+        self.program = Some(path.into());
+        self
+    }
+
+    /// Override the worker connect/handshake deadline.
+    pub fn handshake_timeout(mut self, timeout: Duration) -> Self {
+        self.handshake_timeout = timeout;
+        self
+    }
+}
+
+impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ProcessEngine {
+    fn name(&self) -> &'static str {
+        "process"
+    }
+
+    /// The `backend` applies to the *master-side* session only; worker
+    /// processes pick their map backend from their own command line.
+    fn run(
+        &self,
+        problem: Arc<P>,
+        _backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+    ) -> Result<RunReport<P::Param>, BsfError> {
+        validate_run(&*problem, cfg)?;
+        let k = cfg.workers;
+
+        let bind_addr = self.listen.as_deref().unwrap_or("127.0.0.1:0");
+        let listener = std::net::TcpListener::bind(bind_addr)
+            .map_err(|e| BsfError::transport_io(format!("master: bind {bind_addr}"), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| BsfError::transport_io("master: local_addr", e))?
+            .to_string();
+
+        // Children are killed + reaped by ChildSet::drop on every early
+        // return below.
+        let mut children = ChildSet::default();
+        if self.listen.is_none() {
+            let program = match &self.program {
+                Some(p) => p.clone(),
+                None => std::env::current_exe()
+                    .map_err(|e| BsfError::transport_io("master: resolve current_exe", e))?,
+            };
+            for rank in 0..k {
+                let child = Command::new(&program)
+                    .args(&self.worker_args)
+                    .arg("--connect")
+                    .arg(&addr)
+                    .arg("--rank")
+                    .arg(rank.to_string())
+                    .stdin(Stdio::null())
+                    .spawn()
+                    .map_err(|e| {
+                        BsfError::transport_io(
+                            format!("master: spawn worker {rank} ({})", program.display()),
+                            e,
+                        )
+                    })?;
+                children.push(rank, child);
+            }
+        }
+
+        let master_ep = accept_workers(
+            listener,
+            k,
+            problem_sig(&*problem),
+            self.handshake_timeout,
+            || children.check_alive(),
+        )?;
+        let stats = master_ep.stats();
+
+        let outcome = run_master(&*problem, &master_ep, cfg)?;
+
+        // The run converged; collect each worker's end-of-run summary
+        // (sent right after it saw exit=true, before it disconnects).
+        let mut workers = Vec::with_capacity(k);
+        for w in 0..k {
+            let m = master_ep.recv(w, TAG_WORKER_REPORT)?;
+            let (rank, iterations, map_seconds, sublist_length) =
+                <(usize, usize, f64, usize)>::from_bytes(&m.payload);
+            workers.push(WorkerReport { rank, iterations, map_seconds, sublist_length });
+        }
+        workers.sort_by_key(|w| w.rank);
+
+        // Workers exit on their own right after shipping their report;
+        // drop our endpoint first (releases the write halves), then wait
+        // for the children — killing any that outlive the reap window.
+        drop(master_ep);
+        children.reap(REAP_TIMEOUT)?;
+
+        Ok(RunReport {
+            param: outcome.param,
+            iterations: outcome.iterations,
+            elapsed: outcome.elapsed,
+            clock: Clock::Real,
+            wall_seconds: outcome.elapsed,
+            engine: "process",
+            phases: PhaseBreakdown::from_timers(&outcome.timers),
+            workers,
+            messages: stats.message_count(),
+            bytes: stats.byte_count(),
+            volume: stats.volume(),
+        })
+    }
+}
+
+/// The worker-process entry point: connect to the master, learn K+1 from
+/// the handshake, drive the shared Algorithm-2 worker loop
+/// ([`run_worker_guarded`] — the same function the thread engine runs),
+/// then ship the [`WorkerReport`] back before exiting.
+///
+/// `cfg_template.workers` is overwritten with the handshake's K; the
+/// caller supplies the rest (notably `openmp_threads`).
+pub fn run_process_worker<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    connect: &str,
+    rank: usize,
+    cfg_template: &BsfConfig,
+) -> Result<WorkerReport, BsfError> {
+    let ep = connect_worker(connect, rank, problem_sig(problem), DEFAULT_CONNECT_TIMEOUT)?;
+    let mut cfg = cfg_template.clone();
+    cfg.workers = ep.size() - 1;
+    let report = run_worker_guarded(problem, backend, &ep, &cfg)?;
+    ep.send(
+        ep.master_rank(),
+        TAG_WORKER_REPORT,
+        (report.rank, report.iterations, report.map_seconds, report.sublist_length)
+            .to_bytes(),
+    )?;
+    Ok(report)
+}
+
+/// Spawned worker children, killed + reaped on drop so no error path
+/// leaks a process.
+#[derive(Default)]
+struct ChildSet {
+    children: Vec<(usize, Child)>,
+}
+
+impl ChildSet {
+    fn push(&mut self, rank: usize, child: Child) {
+        self.children.push((rank, child));
+    }
+
+    /// Fail fast if any child already exited (it can never handshake).
+    fn check_alive(&mut self) -> Result<(), BsfError> {
+        for (rank, child) in &mut self.children {
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    return Err(BsfError::transport(format!(
+                        "worker {rank} process exited before the run ({status})"
+                    )))
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    return Err(BsfError::transport_io(
+                        format!("master: poll worker {rank} process"),
+                        e,
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Wait for every child to exit on its own (they just saw exit=true
+    /// and their sockets closed); kill stragglers past `timeout`. A
+    /// non-zero exit after an apparently clean run is surfaced — it
+    /// means the worker's side of the shutdown failed.
+    fn reap(&mut self, timeout: Duration) -> Result<(), BsfError> {
+        let deadline = Instant::now() + timeout;
+        let mut first_err: Option<BsfError> = None;
+        for (rank, child) in self.children.drain(..) {
+            let status = wait_until(child, deadline);
+            match status {
+                Ok(s) if s.success() => {}
+                Ok(s) => {
+                    first_err.get_or_insert(BsfError::transport(format!(
+                        "worker {rank} process exited with {s}"
+                    )));
+                }
+                Err(e) => {
+                    first_err.get_or_insert(BsfError::transport(format!(
+                        "worker {rank} process did not exit cleanly: {e}"
+                    )));
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+fn wait_until(mut child: Child, deadline: Instant) -> Result<std::process::ExitStatus, String> {
+    loop {
+        match child.try_wait() {
+            Ok(Some(status)) => return Ok(status),
+            Ok(None) => {
+                if Instant::now() >= deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err("still running at reap deadline; killed".into());
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(e.to_string());
+            }
+        }
+    }
+}
+
+impl Drop for ChildSet {
+    fn drop(&mut self) {
+        for (_, child) in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}

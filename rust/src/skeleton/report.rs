@@ -10,6 +10,7 @@
 
 use crate::metrics::{Phase, PhaseTimers};
 use crate::skeleton::worker::WorkerReport;
+use crate::transport::VolumeByTag;
 
 /// Which clock `RunReport::elapsed` was measured on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +79,11 @@ pub struct RunReport<Param> {
     /// Transport totals for the whole run.
     pub messages: u64,
     pub bytes: u64,
+    /// Per-[`Tag`](crate::transport::Tag) breakdown of the transport
+    /// totals — the measured comm volume to hold against the cost
+    /// model's order/fold transfer terms. All-zero for engines that
+    /// pass no messages (serial).
+    pub volume: VolumeByTag,
 }
 
 impl<Param> RunReport<Param> {
@@ -88,6 +94,15 @@ impl<Param> RunReport<Param> {
         }
         let total: f64 = self.workers.iter().map(|w| w.map_seconds).sum();
         total / (self.workers.len() as f64 * self.iterations as f64)
+    }
+
+    /// One-line per-tag transport summary (empty when no messages).
+    pub fn transport_summary(&self) -> String {
+        if self.messages == 0 {
+            String::new()
+        } else {
+            self.volume.summary()
+        }
     }
 
     /// One-line human summary of the run (the CLI's standard output).
@@ -126,6 +141,7 @@ mod tests {
             workers,
             messages: 0,
             bytes: 0,
+            volume: VolumeByTag::default(),
         }
     }
 
@@ -152,6 +168,17 @@ mod tests {
         let b = PhaseBreakdown { send: 1.0, gather: 2.0, reduce: 3.0, process: 4.0 };
         assert!((b.total() - 10.0).abs() < 1e-12);
         assert!(b.summary().contains("gather="));
+    }
+
+    #[test]
+    fn transport_summary_is_empty_without_traffic() {
+        use crate::transport::TagVolume;
+        let mut r = report(vec![], 1);
+        assert_eq!(r.transport_summary(), "");
+        r.messages = 3;
+        r.volume.order = TagVolume { messages: 2, bytes: 64 };
+        r.volume.fold = TagVolume { messages: 1, bytes: 8 };
+        assert!(r.transport_summary().contains("order=2msg/64B"));
     }
 
     #[test]

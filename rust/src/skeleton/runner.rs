@@ -14,7 +14,7 @@ use crate::skeleton::config::BsfConfig;
 use crate::skeleton::master::run_master;
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
-use crate::skeleton::worker::{run_worker, WorkerReport};
+use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
 use crate::skeleton::workflow::validate_job_count;
 use crate::transport::{build_thread_transport, Communicator, Tag};
 use crate::util::codec::Codec;
@@ -61,21 +61,7 @@ pub fn run_threaded_session<P: BsfProblem>(
         let rank = ep.rank();
         let spawned = std::thread::Builder::new()
             .name(format!("bsf-worker-{rank}"))
-            .spawn(move || {
-                // A panic in user map/reduce code must not strand the
-                // master mid-gather: catch it, tell the master to abort,
-                // and surface a typed error.
-                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    run_worker(&*p, &*b, &ep, &cfg)
-                }));
-                match run {
-                    Ok(result) => result,
-                    Err(_) => {
-                        let _ = ep.send(ep.master_rank(), Tag::Abort, Vec::new());
-                        Err(BsfError::WorkerPanic { rank })
-                    }
-                }
-            });
+            .spawn(move || run_worker_guarded(&*p, &*b, &ep, &cfg));
         match spawned {
             Ok(handle) => handles.push((rank, handle)),
             Err(e) => {
@@ -128,6 +114,7 @@ pub fn run_threaded_session<P: BsfProblem>(
         workers,
         messages: stats.message_count(),
         bytes: stats.byte_count(),
+        volume: stats.volume(),
     })
 }
 

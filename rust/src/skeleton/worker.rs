@@ -103,6 +103,34 @@ pub fn run_worker<P: BsfProblem>(
     }
 }
 
+/// [`run_worker`] wrapped in the skeleton's panic contract: a panic in
+/// user map/reduce code must not strand the master mid-gather, so it is
+/// caught here, reported over the transport as [`Tag::Abort`], and
+/// surfaced as a typed [`BsfError::WorkerPanic`].
+///
+/// This one function drives the worker endpoint of **every** transport —
+/// the thread runner spawns it on a `ThreadEndpoint`, the process engine
+/// runs it in a child OS process on a `TcpEndpoint` — so Algorithm 2's
+/// worker column exists exactly once.
+pub fn run_worker_guarded<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    comm: &dyn Communicator,
+    cfg: &BsfConfig,
+) -> Result<WorkerReport, BsfError> {
+    let rank = comm.rank();
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_worker(problem, backend, comm, cfg)
+    }));
+    match run {
+        Ok(result) => result,
+        Err(_) => {
+            let _ = comm.send(comm.master_rank(), Tag::Abort, Vec::new());
+            Err(BsfError::WorkerPanic { rank })
+        }
+    }
+}
+
 /// `BC_WorkerMap` + `BC_WorkerReduce`: map the sublist and fold locally.
 ///
 /// The `backend` may fuse the whole sublist into one call (native fused

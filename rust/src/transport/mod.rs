@@ -3,7 +3,7 @@
 //!
 //! The paper's skeleton runs K+1 MPI processes where workers exchange
 //! messages only with the master (Fig. 1). This module provides the same
-//! communication surface over OS threads:
+//! communication surface over two interconnects:
 //!
 //! * [`Communicator`] — per-process endpoint: `send`/`recv` by rank+tag,
 //!   plus `recv_any` (the master gathers partial folds in completion
@@ -11,15 +11,21 @@
 //!   `Result<_, BsfError>`: a torn channel or an out-of-range rank is a
 //!   typed [`BsfError::Transport`], not a panic.
 //! * [`ThreadEndpoint`] (via [`build_thread_transport`]) — the K+1
-//!   endpoints over `std::sync::mpsc` channels.
-//! * [`TransportStats`] — message/byte counters, used by the cost-model
-//!   calibration to attribute communication volume.
+//!   endpoints over `std::sync::mpsc` channels (one address space).
+//! * [`TcpEndpoint`] ([`tcp`]) — the same surface over length-prefixed
+//!   framed TCP between **real OS processes**, used by
+//!   [`ProcessEngine`](crate::skeleton::engine::ProcessEngine).
+//! * [`TransportStats`] — message/byte counters, total and per [`Tag`],
+//!   used by the cost-model calibration to attribute communication
+//!   volume against the model's prediction.
 //!
 //! Ranks follow the paper's `BC_MpiRun` convention: workers are
 //! `0..K-1`, the **master is rank K** (`MPI_Comm_size - 1`).
 
+pub mod tcp;
 mod thread;
 
+pub use tcp::TcpEndpoint;
 pub use thread::{build as build_thread_transport, ThreadEndpoint};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,8 +47,21 @@ pub enum Tag {
     /// lets a panicking `map_f` surface as `BsfError::WorkerPanic`
     /// instead of deadlocking the gather).
     Abort,
-    /// Free-form (tests, extensions).
+    /// Free-form (worker run reports, tests, extensions).
     User(u16),
+}
+
+impl Tag {
+    /// Counter slot for this tag (all `User` values share one slot).
+    fn slot(self) -> usize {
+        match self {
+            Tag::Order => 0,
+            Tag::Fold => 1,
+            Tag::Exit => 2,
+            Tag::Abort => 3,
+            Tag::User(_) => 4,
+        }
+    }
 }
 
 /// A single in-flight message.
@@ -84,17 +103,42 @@ pub trait Communicator: Send {
     fn stats(&self) -> Arc<TransportStats>;
 }
 
-/// Global transport counters (shared across all endpoints of one run).
+/// One tag's message/byte counter pair.
+#[derive(Debug, Default)]
+struct TagCounter {
+    messages: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// Transport counters: whole-run totals plus a per-[`Tag`] breakdown.
+///
+/// The thread transport shares one instance across all K+1 endpoints and
+/// records each message once, at send. A [`TcpEndpoint`] cannot share
+/// counters across address spaces, so it records its *own* sends and
+/// receives; since the BSF topology is a star, the **master's** endpoint
+/// then sees every message of the run — the same totals the thread
+/// transport reports globally.
 #[derive(Debug, Default)]
 pub struct TransportStats {
     pub messages: AtomicU64,
     pub bytes: AtomicU64,
+    per_tag: [TagCounter; 5],
 }
 
 impl TransportStats {
-    pub fn record(&self, payload_len: usize) {
-        self.messages.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(payload_len as u64, Ordering::Relaxed);
+    pub fn record(&self, tag: Tag, payload_len: usize) {
+        self.record_n(tag, 1, payload_len);
+    }
+
+    /// Record `n` messages of `payload_len` bytes each (the simulator
+    /// charges a whole broadcast at once).
+    pub fn record_n(&self, tag: Tag, n: u64, payload_len: usize) {
+        let bytes = n * payload_len as u64;
+        self.messages.fetch_add(n, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        let slot = &self.per_tag[tag.slot()];
+        slot.messages.fetch_add(n, Ordering::Relaxed);
+        slot.bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     pub fn message_count(&self) -> u64 {
@@ -103,5 +147,121 @@ impl TransportStats {
 
     pub fn byte_count(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn tag_message_count(&self, tag: Tag) -> u64 {
+        self.per_tag[tag.slot()].messages.load(Ordering::Relaxed)
+    }
+
+    pub fn tag_byte_count(&self, tag: Tag) -> u64 {
+        self.per_tag[tag.slot()].bytes.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time snapshot of the per-tag breakdown.
+    pub fn volume(&self) -> VolumeByTag {
+        let grab = |tag: Tag| TagVolume {
+            messages: self.tag_message_count(tag),
+            bytes: self.tag_byte_count(tag),
+        };
+        VolumeByTag {
+            order: grab(Tag::Order),
+            fold: grab(Tag::Fold),
+            exit: grab(Tag::Exit),
+            abort: grab(Tag::Abort),
+            user: grab(Tag::User(0)),
+        }
+    }
+}
+
+/// Message/byte volume of one tag (snapshot).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TagVolume {
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+/// Per-tag communication volume of a whole run — the measured
+/// counterpart of the cost model's order-transfer (`t_send`) and
+/// fold-transfer (`t_recv`) terms.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VolumeByTag {
+    pub order: TagVolume,
+    pub fold: TagVolume,
+    pub exit: TagVolume,
+    pub abort: TagVolume,
+    /// All `Tag::User(_)` traffic combined.
+    pub user: TagVolume,
+}
+
+impl VolumeByTag {
+    pub fn total_messages(&self) -> u64 {
+        [self.order, self.fold, self.exit, self.abort, self.user]
+            .iter()
+            .map(|t| t.messages)
+            .sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        [self.order, self.fold, self.exit, self.abort, self.user]
+            .iter()
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    /// One-line human summary, e.g.
+    /// `order=24msg/7680B fold=24msg/2496B exit=48msg/48B`.
+    pub fn summary(&self) -> String {
+        let part = |name: &str, t: TagVolume| format!("{name}={}msg/{}B", t.messages, t.bytes);
+        let mut parts = vec![
+            part("order", self.order),
+            part("fold", self.fold),
+            part("exit", self.exit),
+        ];
+        if self.abort.messages > 0 {
+            parts.push(part("abort", self.abort));
+        }
+        if self.user.messages > 0 {
+            parts.push(part("user", self.user));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_tag_counters_split_by_tag() {
+        let st = TransportStats::default();
+        st.record(Tag::Order, 100);
+        st.record(Tag::Order, 100);
+        st.record(Tag::Fold, 30);
+        st.record(Tag::User(7), 5);
+        st.record(Tag::User(9), 5);
+        assert_eq!(st.message_count(), 5);
+        assert_eq!(st.byte_count(), 240);
+        assert_eq!(st.tag_message_count(Tag::Order), 2);
+        assert_eq!(st.tag_byte_count(Tag::Order), 200);
+        assert_eq!(st.tag_message_count(Tag::Fold), 1);
+        // all User values share one slot
+        assert_eq!(st.tag_message_count(Tag::User(123)), 2);
+        assert_eq!(st.tag_byte_count(Tag::User(0)), 10);
+        assert_eq!(st.tag_message_count(Tag::Exit), 0);
+    }
+
+    #[test]
+    fn volume_snapshot_matches_counters_and_sums() {
+        let st = TransportStats::default();
+        st.record_n(Tag::Order, 3, 10);
+        st.record(Tag::Fold, 4);
+        let v = st.volume();
+        assert_eq!(v.order, TagVolume { messages: 3, bytes: 30 });
+        assert_eq!(v.fold, TagVolume { messages: 1, bytes: 4 });
+        assert_eq!(v.total_messages(), st.message_count());
+        assert_eq!(v.total_bytes(), st.byte_count());
+        let s = v.summary();
+        assert!(s.contains("order=3msg/30B"), "{s}");
+        assert!(!s.contains("abort"), "quiet tags omitted: {s}");
     }
 }

@@ -1,0 +1,832 @@
+//! TCP-backed transport: the [`Communicator`] surface between **real OS
+//! processes** over length-prefixed framed TCP (std-only, no deps).
+//!
+//! This is the genuine multi-process substitution for the paper's MPI
+//! interconnect: `BC_MpiRun` starts K+1 processes; here K worker
+//! processes [`connect_worker`] to the master, announce their rank, and
+//! the master (rank K) [`accept_workers`] all K before the run starts.
+//! The BSF topology is a star — workers talk only to the master — so
+//! each endpoint holds exactly the sockets it needs: the master one per
+//! worker, a worker one to the master.
+//!
+//! ## Wire protocol
+//!
+//! Handshake (once per connection, worker speaks first):
+//!
+//! ```text
+//! worker → master:  "BSF1"  rank:u32le  list_size:u64le  job_count:u64le   (HELLO)
+//! master → worker:  "BSF1"  size:u32le                                     (WELCOME; size = K+1)
+//! ```
+//!
+//! The HELLO carries a [`ProblemSig`] — the worker's problem invariants —
+//! so a worker launched with mismatched problem parameters fails the
+//! handshake with a typed error instead of corrupting the run. A
+//! connection that never speaks the protocol (a port scanner, a torn
+//! dial) is dropped and the master keeps waiting for real workers.
+//!
+//! Then a stream of frames in both directions, all little-endian:
+//!
+//! ```text
+//! from:u32  tag_kind:u8  tag_val:u16  len:u32  payload[len]
+//! ```
+//!
+//! `tag_kind` is 0..=4 for Order/Fold/Exit/Abort/User, `tag_val` carries
+//! the `Tag::User(u16)` value (0 otherwise).
+//!
+//! ## Failure semantics
+//!
+//! Each connection gets a reader thread that turns arriving frames into
+//! inbox events. A disconnect, short read or malformed frame becomes a
+//! *peer-lost* event: a `recv` that could still be satisfied by that
+//! peer returns [`BsfError::Transport`] instead of blocking forever —
+//! the same contract as `Tag::Abort`, so a worker process dying mid-run
+//! aborts the master's gather rather than deadlocking it. Buffered
+//! messages that already arrived stay receivable.
+//!
+//! `recv`'s selective-receive semantics (per-(rank, tag) buffering,
+//! per-peer FIFO) match [`ThreadEndpoint`](super::ThreadEndpoint).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{Communicator, Message, Tag, TransportStats};
+use crate::error::BsfError;
+
+/// Protocol magic, first bytes of both handshake messages.
+pub const MAGIC: [u8; 4] = *b"BSF1";
+
+/// Frame header length: from:u32 + tag_kind:u8 + tag_val:u16 + len:u32.
+const HEADER_LEN: usize = 11;
+
+/// Refuse frames claiming payloads above this (a corrupt length prefix
+/// must not trigger a multi-gigabyte allocation).
+const MAX_PAYLOAD: u32 = 1 << 30;
+
+/// How often the master's accept loop polls for new connections and for
+/// dead children.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// How long a connecting worker keeps retrying while the master's
+/// listener is not up yet (covers the two-terminal start order).
+const CONNECT_RETRY: Duration = Duration::from_millis(100);
+
+/// Per-read deadline during the handshake, so a silent peer cannot pin
+/// the accept loop or a connecting worker forever.
+const HANDSHAKE_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn tag_to_wire(tag: Tag) -> (u8, u16) {
+    match tag {
+        Tag::Order => (0, 0),
+        Tag::Fold => (1, 0),
+        Tag::Exit => (2, 0),
+        Tag::Abort => (3, 0),
+        Tag::User(v) => (4, v),
+    }
+}
+
+fn tag_from_wire(kind: u8, val: u16) -> io::Result<Tag> {
+    match kind {
+        0 => Ok(Tag::Order),
+        1 => Ok(Tag::Fold),
+        2 => Ok(Tag::Exit),
+        3 => Ok(Tag::Abort),
+        4 => Ok(Tag::User(val)),
+        k => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unknown frame tag kind {k}"),
+        )),
+    }
+}
+
+/// Encode one frame onto `w` (header + payload; see the module docs).
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    from: usize,
+    tag: Tag,
+    payload: &[u8],
+) -> io::Result<()> {
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("payload of {} bytes exceeds the frame limit", payload.len()),
+        ));
+    }
+    let (kind, val) = tag_to_wire(tag);
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&(from as u32).to_le_bytes());
+    header[4] = kind;
+    header[5..7].copy_from_slice(&val.to_le_bytes());
+    header[7..11].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)
+}
+
+/// Decode one frame from `r`, blocking until it is complete.
+///
+/// A clean close *between* frames is `UnexpectedEof` with message
+/// `"connection closed"`; running dry *inside* a frame is a short read
+/// (`"short read ..."`). Both abort the stream — TCP gives no frame
+/// resynchronization.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<(usize, Tag, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    // First byte separately: 0 bytes here is a clean close, not an error
+    // mid-frame.
+    loop {
+        match r.read(&mut header[..1]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed",
+                ))
+            }
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    r.read_exact(&mut header[1..]).map_err(short("frame header"))?;
+    let from = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    let tag = tag_from_wire(header[4], u16::from_le_bytes(header[5..7].try_into().unwrap()))?;
+    let len = u32::from_le_bytes(header[7..11].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame claims a {len}-byte payload (limit {MAX_PAYLOAD})"),
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(short("frame payload"))?;
+    Ok((from, tag, payload))
+}
+
+fn short(what: &'static str) -> impl Fn(io::Error) -> io::Error {
+    move |e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            io::Error::new(io::ErrorKind::UnexpectedEof, format!("short read in {what}"))
+        } else {
+            e
+        }
+    }
+}
+
+/// The problem invariants exchanged in the handshake: every process of a
+/// distributed run must rebuild the *same* problem instance from its own
+/// command line (the paper's SPMD model), and these are the two cheap
+/// observables every `BsfProblem` exposes. A mismatch (e.g. a worker
+/// started with the wrong `--n`) fails the handshake with a typed error
+/// instead of producing a silently corrupt run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProblemSig {
+    pub list_size: u64,
+    pub job_count: u64,
+}
+
+fn write_hello<W: Write>(w: &mut W, rank: u32, sig: ProblemSig) -> io::Result<()> {
+    let mut buf = [0u8; 24];
+    buf[0..4].copy_from_slice(&MAGIC);
+    buf[4..8].copy_from_slice(&rank.to_le_bytes());
+    buf[8..16].copy_from_slice(&sig.list_size.to_le_bytes());
+    buf[16..24].copy_from_slice(&sig.job_count.to_le_bytes());
+    w.write_all(&buf)
+}
+
+fn read_hello<R: Read>(r: &mut R) -> io::Result<(u32, ProblemSig)> {
+    let mut buf = [0u8; 24];
+    r.read_exact(&mut buf)?;
+    if buf[0..4] != MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "bad magic in HELLO (not a BSF peer?)",
+        ));
+    }
+    Ok((
+        u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+        ProblemSig {
+            list_size: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            job_count: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+        },
+    ))
+}
+
+fn write_welcome<W: Write>(w: &mut W, size: u32) -> io::Result<()> {
+    let mut buf = [0u8; 8];
+    buf[0..4].copy_from_slice(&MAGIC);
+    buf[4..8].copy_from_slice(&size.to_le_bytes());
+    w.write_all(&buf)
+}
+
+fn read_welcome<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    if buf[0..4] != MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "bad magic in WELCOME (not a BSF master?)",
+        ));
+    }
+    Ok(u32::from_le_bytes(buf[4..8].try_into().unwrap()))
+}
+
+/// Inbox events the reader threads produce.
+enum Event {
+    Msg(Message),
+    /// The connection to `from` is gone (EOF, error, protocol violation);
+    /// no further messages from that peer will ever arrive.
+    Lost { from: usize, reason: String },
+}
+
+struct TcpInbox {
+    rx: Receiver<Event>,
+    pending: VecDeque<Message>,
+    lost: Vec<(usize, String)>,
+}
+
+/// One process's endpoint of the TCP transport.
+pub struct TcpEndpoint {
+    rank: usize,
+    size: usize,
+    /// Write half per peer rank (`None` = no direct connection; the star
+    /// topology only wires worker ↔ master).
+    writers: Vec<Option<Mutex<TcpStream>>>,
+    inbox: Mutex<TcpInbox>,
+    stats: Arc<TransportStats>,
+}
+
+impl TcpEndpoint {
+    fn new(
+        rank: usize,
+        size: usize,
+        peers: Vec<(usize, TcpStream)>,
+    ) -> Result<Self, BsfError> {
+        let stats = Arc::new(TransportStats::default());
+        let (tx, rx) = channel();
+        let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..size).map(|_| None).collect();
+        for (peer_rank, stream) in peers {
+            let _ = stream.set_nodelay(true);
+            let reader = stream.try_clone().map_err(|e| {
+                BsfError::transport_io(format!("rank {rank}: clone stream to {peer_rank}"), e)
+            })?;
+            spawn_reader(reader, peer_rank, tx.clone(), Arc::clone(&stats));
+            writers[peer_rank] = Some(Mutex::new(stream));
+        }
+        Ok(Self {
+            rank,
+            size,
+            writers,
+            inbox: Mutex::new(TcpInbox { rx, pending: VecDeque::new(), lost: Vec::new() }),
+            stats,
+        })
+    }
+
+    fn take_pending(
+        pending: &mut VecDeque<Message>,
+        from: Option<usize>,
+        tags: &[Tag],
+    ) -> Option<Message> {
+        let idx = pending.iter().position(|m| {
+            tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true)
+        })?;
+        pending.remove(idx)
+    }
+
+    fn recv_matching(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
+        let mut inbox = self.inbox.lock().map_err(|_| {
+            BsfError::transport(format!("rank {}: inbox poisoned", self.rank))
+        })?;
+        loop {
+            if let Some(m) = Self::take_pending(&mut inbox.pending, from, tags) {
+                return Ok(m);
+            }
+            // Nothing buffered matches. If a peer this receive is (or may
+            // be) waiting on is gone, blocking would deadlock — surface
+            // the loss as a typed error instead. `recv_any` treats *any*
+            // lost peer as fatal: the master's gather cannot complete
+            // once one worker is dead.
+            if let Some((r, reason)) = inbox
+                .lost
+                .iter()
+                .find(|(r, _)| from.map(|f| f == *r).unwrap_or(true))
+            {
+                return Err(BsfError::transport(format!(
+                    "rank {}: peer {r} disconnected ({reason}) while receiving {tags:?}",
+                    self.rank
+                )));
+            }
+            match inbox.rx.recv() {
+                Ok(Event::Msg(m)) => {
+                    let matches =
+                        tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true);
+                    if matches {
+                        return Ok(m);
+                    }
+                    inbox.pending.push_back(m);
+                }
+                Ok(Event::Lost { from, reason }) => inbox.lost.push((from, reason)),
+                Err(_) => {
+                    return Err(BsfError::transport(format!(
+                        "rank {}: all connections closed while receiving {tags:?}",
+                        self.rank
+                    )))
+                }
+            }
+        }
+    }
+}
+
+impl Communicator for TcpEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+        let writer = self
+            .writers
+            .get(to)
+            .and_then(|w| w.as_ref())
+            .ok_or_else(|| {
+                BsfError::transport(format!(
+                    "rank {}: no connection to rank {to} (size {}, star topology)",
+                    self.rank, self.size
+                ))
+            })?;
+        // One buffered write per frame: a header-then-payload pair of
+        // small writes would otherwise hit Nagle/latency pathologies.
+        let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+        write_frame(&mut buf, self.rank, tag, &payload)
+            .map_err(|e| BsfError::transport_io(format!("rank {}: encode frame", self.rank), e))?;
+        let mut stream = writer.lock().map_err(|_| {
+            BsfError::transport(format!("rank {}: writer to {to} poisoned", self.rank))
+        })?;
+        stream.write_all(&buf).map_err(|e| {
+            BsfError::transport_io(
+                format!("rank {}: send {tag:?} to rank {to}", self.rank),
+                e,
+            )
+        })?;
+        self.stats.record(tag, payload.len());
+        Ok(())
+    }
+
+    fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
+        self.recv_matching(from, tags)
+    }
+
+    fn stats(&self) -> Arc<TransportStats> {
+        self.stats.clone()
+    }
+}
+
+/// Read frames off one connection and feed the shared inbox; exactly one
+/// terminal `Lost` event on any exit path. Receives are recorded into
+/// the endpoint's stats, so the master endpoint (which terminates every
+/// fold) sees whole-run totals despite per-process counters.
+fn spawn_reader(
+    stream: TcpStream,
+    expect_from: usize,
+    tx: Sender<Event>,
+    stats: Arc<TransportStats>,
+) {
+    let spawned = std::thread::Builder::new()
+        .name(format!("bsf-tcp-rx-{expect_from}"))
+        .spawn(move || {
+            let mut reader = io::BufReader::new(stream);
+            loop {
+                match read_frame(&mut reader) {
+                    Ok((from, tag, payload)) => {
+                        if from != expect_from {
+                            let _ = tx.send(Event::Lost {
+                                from: expect_from,
+                                reason: format!("frame claims rank {from}"),
+                            });
+                            return;
+                        }
+                        stats.record(tag, payload.len());
+                        if tx.send(Event::Msg(Message { from, tag, payload })).is_err() {
+                            return; // endpoint dropped
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Event::Lost {
+                            from: expect_from,
+                            reason: e.to_string(),
+                        });
+                        return;
+                    }
+                }
+            }
+        });
+    if let Err(e) = spawned {
+        // Out of threads: synthesize the loss so receivers error instead
+        // of waiting on a reader that never existed.
+        let _ = tx.send(Event::Lost {
+            from: expect_from,
+            reason: format!("spawn reader thread: {e}"),
+        });
+    }
+}
+
+/// Worker side: connect to the master at `addr`, announce `rank` and the
+/// problem signature, and build this process's endpoint. Retries while
+/// the master's listener is not up yet, until `timeout`; a permanent
+/// error (malformed address, permission denied) fails immediately.
+pub fn connect_worker(
+    addr: &str,
+    rank: usize,
+    sig: ProblemSig,
+    timeout: Duration,
+) -> Result<TcpEndpoint, BsfError> {
+    let deadline = Instant::now() + timeout;
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                let permanent = matches!(
+                    e.kind(),
+                    io::ErrorKind::InvalidInput
+                        | io::ErrorKind::AddrInUse
+                        | io::ErrorKind::PermissionDenied
+                        | io::ErrorKind::Unsupported
+                );
+                if permanent || Instant::now() >= deadline {
+                    return Err(BsfError::transport_io(
+                        format!("worker {rank}: connect to master at {addr}"),
+                        e,
+                    ));
+                }
+                std::thread::sleep(CONNECT_RETRY);
+            }
+        }
+    };
+    let ctx = |what: &str| format!("worker {rank}: {what} with master at {addr}");
+    stream
+        .set_read_timeout(Some(HANDSHAKE_IO_TIMEOUT))
+        .map_err(|e| BsfError::transport_io(ctx("configure handshake"), e))?;
+    write_hello(&mut stream, rank as u32, sig)
+        .map_err(|e| BsfError::transport_io(ctx("send HELLO"), e))?;
+    let size = read_welcome(&mut stream)
+        .map_err(|e| BsfError::transport_io(ctx("read WELCOME"), e))? as usize;
+    if size < 2 || rank >= size - 1 {
+        return Err(BsfError::transport(format!(
+            "worker {rank}: master announced size {size}; worker ranks are 0..{}",
+            size.saturating_sub(1)
+        )));
+    }
+    stream
+        .set_read_timeout(None)
+        .map_err(|e| BsfError::transport_io(ctx("clear handshake timeout"), e))?;
+    TcpEndpoint::new(rank, size, vec![(size - 1, stream)])
+}
+
+/// Master side: accept `workers` connections on `listener`, each
+/// announcing a distinct rank in `0..workers` and a matching
+/// [`ProblemSig`], and build the master endpoint (rank K). `liveness` is
+/// polled while waiting so a spawner can fail fast when a child process
+/// died before connecting.
+///
+/// A connection that fails the handshake I/O (a port scanner, a probe, a
+/// torn dial — anything that never speaks the protocol) is dropped and
+/// the wait continues. A *protocol-speaking* peer with a bad rank,
+/// duplicate rank, or mismatched problem is a typed error: that is a
+/// misconfigured run, not noise.
+pub fn accept_workers(
+    listener: TcpListener,
+    workers: usize,
+    sig: ProblemSig,
+    timeout: Duration,
+    mut liveness: impl FnMut() -> Result<(), BsfError>,
+) -> Result<TcpEndpoint, BsfError> {
+    let size = workers + 1;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| BsfError::transport_io("master: non-blocking accept", e))?;
+    let deadline = Instant::now() + timeout;
+    let mut slots: Vec<Option<TcpStream>> = (0..workers).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < workers {
+        match listener.accept() {
+            Ok((mut stream, peer)) => {
+                let hello = (|| -> io::Result<(u32, ProblemSig)> {
+                    stream.set_nonblocking(false)?;
+                    stream.set_read_timeout(Some(HANDSHAKE_IO_TIMEOUT))?;
+                    read_hello(&mut stream)
+                })();
+                // `move` so the closure copies `connected` and doesn't
+                // hold a borrow across the `connected += 1` below.
+                let timed_out = move || {
+                    BsfError::transport(format!(
+                        "master: timed out waiting for workers ({connected}/{workers} connected)"
+                    ))
+                };
+                let (rank, peer_sig) = match hello {
+                    Ok((rank, peer_sig)) => (rank as usize, peer_sig),
+                    Err(_) => {
+                        // not a BSF worker; drop it and keep waiting
+                        if Instant::now() >= deadline {
+                            return Err(timed_out());
+                        }
+                        continue;
+                    }
+                };
+                if rank >= workers {
+                    return Err(BsfError::transport(format!(
+                        "master: {peer} announced rank {rank}, but worker ranks are 0..{workers}"
+                    )));
+                }
+                if peer_sig != sig {
+                    return Err(BsfError::transport(format!(
+                        "master: worker {rank} problem mismatch (worker list_size={} \
+                         job_count={}, master list_size={} job_count={}); every process \
+                         must be launched with identical problem parameters",
+                        peer_sig.list_size, peer_sig.job_count, sig.list_size, sig.job_count
+                    )));
+                }
+                if slots[rank].is_some() {
+                    return Err(BsfError::transport(format!(
+                        "master: duplicate worker rank {rank} (second connection from {peer})"
+                    )));
+                }
+                let welcomed = write_welcome(&mut stream, size as u32)
+                    .and_then(|()| stream.set_read_timeout(None));
+                if welcomed.is_err() {
+                    // worker died mid-handshake; its rank stays open
+                    if Instant::now() >= deadline {
+                        return Err(timed_out());
+                    }
+                    continue;
+                }
+                slots[rank] = Some(stream);
+                connected += 1;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                liveness()?;
+                if Instant::now() >= deadline {
+                    return Err(BsfError::transport(format!(
+                        "master: timed out waiting for workers ({connected}/{workers} connected)"
+                    )));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(BsfError::transport_io("master: accept worker", e)),
+        }
+    }
+    let peers = slots
+        .into_iter()
+        .enumerate()
+        .map(|(rank, s)| (rank, s.expect("all slots filled")))
+        .collect();
+    TcpEndpoint::new(workers, size, peers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn ok_liveness() -> Result<(), BsfError> {
+        Ok(())
+    }
+
+    const SIG: ProblemSig = ProblemSig { list_size: 48, job_count: 1 };
+
+    /// Master + `k` in-process "worker" endpoints over real loopback TCP.
+    fn loopback(k: usize) -> (TcpEndpoint, Vec<TcpEndpoint>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    connect_worker(&addr, rank, SIG, Duration::from_secs(10)).unwrap()
+                })
+            })
+            .collect();
+        let master =
+            accept_workers(listener, k, SIG, Duration::from_secs(10), ok_liveness).unwrap();
+        let workers = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        (master, workers)
+    }
+
+    #[test]
+    fn frame_roundtrip_including_user_tags_and_empty_payloads() {
+        let cases = [
+            (0usize, Tag::Order, vec![1u8, 2, 3]),
+            (3, Tag::Fold, vec![]),
+            (7, Tag::Exit, vec![0xFF]),
+            (1, Tag::Abort, vec![]),
+            (2, Tag::User(0), vec![9]),
+            (2, Tag::User(u16::MAX), vec![0; 100]),
+        ];
+        let mut buf = Vec::new();
+        for (from, tag, payload) in &cases {
+            write_frame(&mut buf, *from, *tag, payload).unwrap();
+        }
+        let mut r = &buf[..];
+        for (from, tag, payload) in &cases {
+            let (f, t, p) = read_frame(&mut r).unwrap();
+            assert_eq!((f, t, &p), (*from, *tag, payload));
+        }
+        let err = read_frame(&mut r).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert!(err.to_string().contains("connection closed"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_a_short_read_not_a_clean_close() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0, Tag::Order, &[1, 2, 3, 4]).unwrap();
+        // header torn
+        let mut r = &buf[..HEADER_LEN - 2];
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("short read in frame header"), "{err}");
+        // payload torn
+        let mut r = &buf[..buf.len() - 1];
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.to_string().contains("short read in frame payload"), "{err}");
+    }
+
+    #[test]
+    fn bad_tag_kind_and_oversized_length_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0, Tag::Order, &[]).unwrap();
+        buf[4] = 99; // tag kind
+        assert!(read_frame(&mut &buf[..]).unwrap_err().to_string().contains("tag kind"));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0, Tag::Order, &[]).unwrap();
+        buf[7..11].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &buf[..]).unwrap_err().to_string().contains("payload"));
+    }
+
+    #[test]
+    fn loopback_roundtrip_and_selective_receive() {
+        let (master, mut workers) = loopback(2);
+        assert_eq!(master.rank(), 2);
+        assert_eq!(master.size(), 3);
+        let w1 = workers.pop().unwrap();
+        let w0 = workers.pop().unwrap();
+        assert_eq!((w0.rank(), w0.master_rank()), (0, 2));
+
+        master.send(0, Tag::Order, vec![1, 2]).unwrap();
+        master.send(1, Tag::Order, vec![3, 4]).unwrap();
+        assert_eq!(w0.recv(2, Tag::Order).unwrap().payload, vec![1, 2]);
+        assert_eq!(w1.recv(2, Tag::Order).unwrap().payload, vec![3, 4]);
+
+        // out-of-order arrival buffers across tags and peers
+        w1.send(2, Tag::Fold, vec![11]).unwrap();
+        w0.send(2, Tag::Exit, vec![1]).unwrap();
+        w0.send(2, Tag::Fold, vec![10]).unwrap();
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![10]);
+        assert_eq!(master.recv(1, Tag::Fold).unwrap().payload, vec![11]);
+        assert_eq!(master.recv(0, Tag::Exit).unwrap().payload, vec![1]);
+    }
+
+    #[test]
+    fn master_stats_see_both_directions_per_tag() {
+        let (master, workers) = loopback(1);
+        master.send(0, Tag::Order, vec![0; 16]).unwrap();
+        workers[0].recv(1, Tag::Order).unwrap();
+        workers[0].send(1, Tag::Fold, vec![0; 4]).unwrap();
+        master.recv(0, Tag::Fold).unwrap();
+        let st = master.stats();
+        // the master sent the order and received the fold: star topology
+        // means its endpoint accounts the whole run's traffic
+        assert_eq!(st.tag_message_count(Tag::Order), 1);
+        assert_eq!(st.tag_byte_count(Tag::Order), 16);
+        assert_eq!(st.tag_message_count(Tag::Fold), 1);
+        assert_eq!(st.tag_byte_count(Tag::Fold), 4);
+        assert_eq!(st.message_count(), 2);
+    }
+
+    #[test]
+    fn worker_cannot_send_to_non_master_rank() {
+        let (_master, workers) = loopback(2);
+        let err = workers[0].send(1, Tag::Fold, vec![]).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(err.to_string().contains("no connection"), "{err}");
+    }
+
+    #[test]
+    fn peer_disconnect_fails_pending_recv_instead_of_hanging() {
+        let (master, mut workers) = loopback(1);
+        let w0 = workers.pop().unwrap();
+        w0.send(1, Tag::Fold, vec![7]).unwrap();
+        w0.send(1, Tag::Exit, vec![1]).unwrap();
+        // Consume the Exit first: the Fold lands in the pending buffer
+        // (the events of one connection arrive in send order).
+        assert_eq!(master.recv(0, Tag::Exit).unwrap().payload, vec![1]);
+        drop(w0);
+        // Blocking on something the dead peer never sent is a typed
+        // error, not a hang...
+        let err = master.recv(0, Tag::Order).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(err.to_string().contains("disconnected"), "{err}");
+        // ...while the already-buffered Fold is still delivered...
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![7]);
+        // ...and a gather over all peers errors once the only peer is gone.
+        let err = master.recv_any(Tag::Fold).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+    }
+
+    #[test]
+    fn recv_from_live_peer_survives_other_peer_loss() {
+        let (master, mut workers) = loopback(2);
+        let w1 = workers.pop().unwrap();
+        let w0 = workers.pop().unwrap();
+        drop(w0);
+        // targeted receive from the *live* peer must still work even
+        // after the loss event for rank 0 lands.
+        w1.send(2, Tag::Fold, vec![42]).unwrap();
+        assert_eq!(master.recv(1, Tag::Fold).unwrap().payload, vec![42]);
+    }
+
+    #[test]
+    fn duplicate_rank_is_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                // both claim rank 0
+                thread::spawn(move || connect_worker(&addr, 0, SIG, Duration::from_secs(10)))
+            })
+            .collect();
+        let err = accept_workers(listener, 2, SIG, Duration::from_secs(10), ok_liveness)
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        for h in handles {
+            let _ = h.join(); // one of them may have failed; both must finish
+        }
+    }
+
+    #[test]
+    fn mismatched_problem_sig_is_a_typed_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let wrong = ProblemSig { list_size: 999, job_count: 1 };
+        let h = thread::spawn(move || connect_worker(&addr, 0, wrong, Duration::from_secs(10)));
+        let err = accept_workers(listener, 1, SIG, Duration::from_secs(10), ok_liveness)
+            .unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(err.to_string().contains("problem mismatch"), "{err}");
+        assert!(err.to_string().contains("999"), "{err}");
+        let _ = h.join();
+    }
+
+    #[test]
+    fn stray_connections_do_not_abort_the_accept_loop() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // A probe that closes silently and one that writes garbage: both
+        // must be dropped, not fail the run.
+        let silent = TcpStream::connect(&addr).unwrap();
+        drop(silent);
+        let mut noisy = TcpStream::connect(&addr).unwrap();
+        noisy.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        drop(noisy);
+        let worker_addr = addr.clone();
+        let h = thread::spawn(move || {
+            connect_worker(&worker_addr, 0, SIG, Duration::from_secs(10)).unwrap()
+        });
+        let master =
+            accept_workers(listener, 1, SIG, Duration::from_secs(10), ok_liveness).unwrap();
+        let worker = h.join().unwrap();
+        worker.send(1, Tag::Fold, vec![5]).unwrap();
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![5]);
+    }
+
+    #[test]
+    fn accept_timeout_is_typed_and_reports_progress() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = accept_workers(listener, 3, SIG, Duration::from_millis(50), ok_liveness)
+            .unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(err.to_string().contains("0/3"), "{err}");
+    }
+
+    #[test]
+    fn liveness_error_aborts_the_accept_loop() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = accept_workers(listener, 1, SIG, Duration::from_secs(30), || {
+            Err(BsfError::transport("child exited early"))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("child exited early"), "{err}");
+    }
+
+    #[test]
+    fn malformed_connect_address_fails_fast() {
+        let t0 = Instant::now();
+        let err = connect_worker("not a socket address", 0, SIG, Duration::from_secs(30))
+            .unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        // permanent error: no 30s retry loop
+        assert!(t0.elapsed() < Duration::from_secs(5), "retried a permanent error");
+    }
+}

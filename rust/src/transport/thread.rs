@@ -115,7 +115,7 @@ impl Communicator for ThreadEndpoint {
                     self.rank
                 ))
             })?;
-        self.stats.record(len);
+        self.stats.record(tag, len);
         Ok(())
     }
 
@@ -218,6 +218,11 @@ mod tests {
         let st = master.stats();
         assert_eq!(st.message_count(), 2);
         assert_eq!(st.byte_count(), 20);
+        // per-tag attribution (shared counters, recorded at send)
+        assert_eq!(st.tag_message_count(Tag::Order), 1);
+        assert_eq!(st.tag_byte_count(Tag::Order), 16);
+        assert_eq!(st.tag_message_count(Tag::Fold), 1);
+        assert_eq!(st.tag_byte_count(Tag::Fold), 4);
     }
 
     #[test]

@@ -106,6 +106,23 @@ impl<T: Codec, U: Codec, V: Codec> Codec for (T, U, V) {
     }
 }
 
+impl<T: Codec, U: Codec, V: Codec, W: Codec> Codec for (T, U, V, W) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+        self.2.encode(buf);
+        self.3.encode(buf);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        (
+            T::decode(buf, pos),
+            U::decode(buf, pos),
+            V::decode(buf, pos),
+            W::decode(buf, pos),
+        )
+    }
+}
+
 impl<T: Codec> Codec for Option<T> {
     fn encode(&self, buf: &mut Vec<u8>) {
         match self {
@@ -165,6 +182,7 @@ mod tests {
         roundtrip(Vec::<f64>::new());
         roundtrip((1u32, 2.0f64));
         roundtrip((1usize, vec![0.5f64], true));
+        roundtrip((1usize, 2usize, 0.5f64, 3usize));
         roundtrip(Some(vec![1u8, 2, 3]));
         roundtrip(Option::<f64>::None);
         roundtrip([1.0f64, 2.0, 3.0]);

@@ -1,0 +1,165 @@
+//! Distributed-mode integration: the skeleton across **real OS
+//! processes** over TCP. These tests spawn the actual `bsf` binary
+//! (`CARGO_BIN_EXE_bsf`) as worker processes, so a passing run here is
+//! master + K workers = K+1 live processes on this machine — the
+//! acceptance shape of the paper's `BC_MpiRun` launch model.
+
+use std::net::TcpListener;
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::skeleton::BsfProblem;
+use bsf::transport::tcp::{accept_workers, ProblemSig};
+use bsf::transport::{Communicator, Tag};
+use bsf::util::codec::Codec;
+use bsf::{Bsf, BsfError, ProcessEngine, ThreadedEngine};
+
+const BSF_BIN: &str = env!("CARGO_BIN_EXE_bsf");
+
+fn jacobi_worker_argv(n: usize) -> Vec<String> {
+    ["worker", "--problem", "jacobi", "--n"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain([n.to_string()])
+        .chain(["--seed", "7", "--eps", "1e-12"].iter().map(|s| s.to_string()))
+        .collect()
+}
+
+#[test]
+fn process_engine_matches_threaded_across_real_processes() {
+    let n = 48;
+    let (pt, _) = JacobiProblem::random(n, 1e-12, 7);
+    let rt = Bsf::new(pt).workers(2).engine(ThreadedEngine).run().unwrap();
+
+    let (pp, _) = JacobiProblem::random(n, 1e-12, 7);
+    let engine = ProcessEngine::spawn_args(jacobi_worker_argv(n)).program(BSF_BIN);
+    let rp = Bsf::new(pp).workers(2).engine(engine).run().unwrap();
+
+    assert_eq!(rp.engine, "process");
+    assert_eq!(rp.iterations, rt.iterations, "same stop condition, same count");
+    assert_eq!(rp.param, rt.param, "rank-ordered fold must be bit-identical");
+
+    // Per-worker summaries crossed the process boundary intact.
+    assert_eq!(rp.workers.len(), 2);
+    assert_eq!(rp.workers[0].rank, 0);
+    assert_eq!(rp.workers[1].rank, 1);
+    assert_eq!(rp.workers[0].sublist_length + rp.workers[1].sublist_length, n);
+    assert!(rp.workers.iter().all(|w| w.iterations == rp.iterations));
+
+    // Per-tag accounting at the master endpoint: K orders + K folds + K
+    // exit flags per iteration, plus one end-of-run report per worker.
+    let iters = rp.iterations as u64;
+    assert_eq!(rp.volume.order.messages, 2 * iters);
+    assert_eq!(rp.volume.fold.messages, 2 * iters);
+    assert_eq!(rp.volume.exit.messages, 2 * iters);
+    assert_eq!(rp.volume.user.messages, 2);
+    assert_eq!(rp.volume.total_messages(), rp.messages);
+    assert_eq!(rp.volume.total_bytes(), rp.bytes);
+    assert!(rp.volume.order.bytes > 0 && rp.volume.fold.bytes > 0);
+}
+
+#[test]
+fn listen_mode_accepts_prestarted_worker_processes() {
+    // Reserve a port, then hand it to ProcessEngine::listen. Workers are
+    // started *before* the master binds — their connect retry loop must
+    // absorb that (the two-terminal start order).
+    let addr = {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+    let n = 32;
+    let mut children: Vec<_> = (0..2)
+        .map(|rank: usize| {
+            let mut argv = jacobi_worker_argv(n);
+            argv.extend(["--connect".into(), addr.clone(), "--rank".into(), rank.to_string()]);
+            Command::new(BSF_BIN)
+                .args(&argv)
+                .stdin(Stdio::null())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+
+    let (p, _) = JacobiProblem::random(n, 1e-12, 7);
+    let report = Bsf::new(p)
+        .workers(2)
+        .engine(ProcessEngine::listen(addr))
+        .run()
+        .unwrap();
+    assert_eq!(report.engine, "process");
+    assert!(report.iterations > 0);
+
+    for child in &mut children {
+        let status = child.wait().unwrap();
+        assert!(status.success(), "pre-started worker exited with {status}");
+    }
+}
+
+#[test]
+fn killed_worker_process_yields_typed_error_not_a_hang() {
+    let n = 32;
+    let (p, _) = JacobiProblem::random(n, 1e-12, 7);
+    let sig = ProblemSig {
+        list_size: p.list_size() as u64,
+        job_count: p.job_count() as u64,
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut argv = jacobi_worker_argv(n);
+    argv.extend(["--connect".into(), addr.clone(), "--rank".into(), "0".into()]);
+    let mut child = Command::new(BSF_BIN)
+        .args(&argv)
+        .stdin(Stdio::null())
+        .spawn()
+        .unwrap();
+
+    let master = accept_workers(listener, 1, sig, Duration::from_secs(30), || Ok(())).unwrap();
+
+    // Drive one order → fold exchange by hand, so the kill lands at a
+    // deterministic point: the worker blocked waiting for the exit flag.
+    let order = (0usize, p.init_parameter()).to_bytes();
+    master.send(0, Tag::Order, order).unwrap();
+    let fold = master.recv(0, Tag::Fold).unwrap();
+    assert!(!fold.payload.is_empty());
+
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    // The gather for the next iteration must surface a typed transport
+    // error (EOF from the dead worker), never block forever.
+    let err = master.recv(0, Tag::Fold).unwrap_err();
+    assert!(matches!(err, BsfError::Transport(_)), "{err}");
+    let err = master.recv_any(Tag::Fold).unwrap_err();
+    assert!(matches!(err, BsfError::Transport(_)), "{err}");
+}
+
+#[test]
+fn cli_run_engine_process_matches_threaded_output() {
+    let run = |engine: &str| {
+        let out = Command::new(BSF_BIN)
+            .args(["run", "jacobi", "--n", "64", "--engine", engine, "--workers", "2"])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "bsf run --engine {engine} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let process = run("process");
+    let threaded = run("threaded");
+    assert!(process.contains("engine=process"), "{process}");
+
+    let line = |s: &str, prefix: &str| {
+        s.lines().find(|l| l.starts_with(prefix)).map(str::to_string)
+    };
+    assert_eq!(line(&process, "result:"), line(&threaded, "result:"));
+    let iterations = |s: &str| {
+        s.split_whitespace()
+            .find_map(|w| w.strip_prefix("iterations=").map(str::to_string))
+    };
+    assert_eq!(iterations(&process), iterations(&threaded));
+    assert!(process.contains("traffic: order="), "{process}");
+}

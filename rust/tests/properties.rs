@@ -115,6 +115,108 @@ fn prop_codec_roundtrip_fold_messages() {
 }
 
 #[test]
+fn prop_codec_roundtrip_every_problem_payload_type() {
+    // Every Param / ReduceElem the seven problems put on the wire
+    // (thread channels *and* TCP frames) must round-trip losslessly:
+    // jacobi/cimmino/lpp (Vec<f64>), apex ((Vec<f64>, f64) + ApexReduce),
+    // jacobi-map (Vec<(u64, f64)>), gravity (Vec<(u64, [f64; 3])>),
+    // montecarlo ((u64, u64)), lpp-validator ((f64, u64, u64) +
+    // ViolationReport) — plus the order/fold envelopes around them.
+    use bsf::problems::apex::ApexReduce;
+    use bsf::problems::lpp_validator::ViolationReport;
+
+    fn rt<T: Codec + PartialEq + std::fmt::Debug>(v: T) {
+        assert_eq!(T::from_bytes(&v.to_bytes()), v);
+    }
+
+    qcheck(60, |rng| {
+        let n = size_in(rng, 0, 16);
+        let vecf: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        rt(vecf.clone());
+        rt((vecf.clone(), rng.normal()));
+        rt(ApexReduce::Corr(vecf.clone()));
+        rt(ApexReduce::MinStep(rng.normal()));
+        rt(ApexReduce::MaxViol(rng.normal()));
+        rt((0..n).map(|i| (i as u64, rng.normal())).collect::<Vec<(u64, f64)>>());
+        rt((0..n)
+            .map(|i| (i as u64, [rng.normal(), rng.normal(), rng.normal()]))
+            .collect::<Vec<(u64, [f64; 3])>>());
+        rt((rng.next(), rng.next()));
+        rt((rng.normal(), rng.next(), rng.next()));
+        rt(ViolationReport { worst: rng.normal(), violated: rng.next(), active: rng.next() });
+        // the order envelope (job, param) and fold envelope (value, counter)
+        rt((size_in(rng, 0, 3), vecf.clone()));
+        rt((if rng.f64() < 0.2 { None } else { Some(vecf.clone()) }, rng.next()));
+        // the worker's end-of-run report envelope
+        rt((size_in(rng, 0, 9), size_in(rng, 0, 999), rng.normal(), size_in(rng, 0, 999)));
+    });
+}
+
+#[test]
+fn prop_tcp_frames_survive_partial_reads() {
+    // The TCP transport's frame codec against a worst-case trickling
+    // socket: frames (including empty payloads and arbitrary
+    // Tag::User(u16) values) must decode exactly from 1–3-byte reads,
+    // and truncation must be an error, never a garbage frame.
+    use bsf::transport::tcp::{read_frame, write_frame};
+    use bsf::transport::Tag;
+    use std::io::Read;
+
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.chunk).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    qcheck(60, |rng| {
+        let frames: Vec<(usize, Tag, Vec<u8>)> = (0..size_in(rng, 1, 5))
+            .map(|_| {
+                let tag = match rng.below(5) {
+                    0 => Tag::Order,
+                    1 => Tag::Fold,
+                    2 => Tag::Exit,
+                    3 => Tag::Abort,
+                    _ => Tag::User(rng.next() as u16),
+                };
+                let len = if rng.f64() < 0.3 { 0 } else { size_in(rng, 1, 200) };
+                let payload: Vec<u8> = (0..len).map(|_| rng.next() as u8).collect();
+                (rng.below(9), tag, payload)
+            })
+            .collect();
+        let mut buf = Vec::new();
+        for (from, tag, payload) in &frames {
+            write_frame(&mut buf, *from, *tag, payload).unwrap();
+        }
+
+        let chunk = size_in(rng, 1, 3);
+        let mut r = Trickle { data: &buf, pos: 0, chunk };
+        for (from, tag, payload) in &frames {
+            let (f, t, p) = read_frame(&mut r).unwrap();
+            assert_eq!((f, t, &p), (*from, *tag, payload));
+        }
+        let eof = read_frame(&mut r).unwrap_err();
+        assert!(eof.to_string().contains("connection closed"), "{eof}");
+
+        // a torn stream decodes only whole frames, then errors
+        let cut = 1 + rng.below(buf.len() - 1);
+        let mut r = Trickle { data: &buf[..cut], pos: 0, chunk };
+        let mut whole = 0usize;
+        while read_frame(&mut r).is_ok() {
+            whole += 1;
+        }
+        assert!(whole < frames.len(), "cut at {cut}/{} lost no frame", buf.len());
+    });
+}
+
+#[test]
 fn prop_cost_model_t1_consistency_and_positive() {
     qcheck(200, |rng| {
         let p = CostParams {
