@@ -1,0 +1,595 @@
+//! Machine-readable bench harness — the `bsf bench` subcommand.
+//!
+//! The text benches under `rust/benches/` print tables for humans; this
+//! module runs a **fixed problem × engine × (K, T) sweep** and emits a
+//! `BENCH_<label>.json` the CI `bench-regression` job can gate on:
+//! hard-equal iteration counts (the math is deterministic for fixed
+//! seeds) and wall-clock within a tolerance band against a committed
+//! `BENCH_baseline.json`.
+//!
+//! Schema (`bsf-bench/1`):
+//!
+//! ```json
+//! {
+//!   "schema": "bsf-bench/1",
+//!   "label": "pr", "mode": "quick", "bootstrap": false,
+//!   "host": {"os": "linux", "arch": "x86_64", "cores": 8},
+//!   "records": [{
+//!     "problem": "jacobi", "engine": "threaded", "n": 96,
+//!     "workers": 2, "threads_per_worker": 2,
+//!     "iterations": 117, "wall_seconds": 0.0019,
+//!     "phases": {"send": 0.0, "gather": 0.0, "reduce": 0.0, "process": 0.0},
+//!     "messages": 702, "bytes": 123456
+//!   }]
+//! }
+//! ```
+//!
+//! A baseline with `"bootstrap": true` carries the case grid but no
+//! trusted timings yet (its records hold zeros): comparison then checks
+//! schema + case coverage only and reminds the operator to regenerate
+//! it from a real run. This is how the gate self-bootstraps — the first
+//! CI run uploads a real `BENCH_pr.json` artifact to commit as the
+//! baseline.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::bench::bench;
+use crate::error::BsfError;
+use crate::problems::jacobi::JacobiProblem;
+use crate::problems::montecarlo::MonteCarloProblem;
+use crate::skeleton::{
+    Bsf, BsfConfig, BsfProblem, ProcessEngine, RunReport, SerialEngine, ThreadedEngine,
+};
+use crate::util::json::Json;
+
+/// Schema identifier of the emitted documents.
+pub const SCHEMA: &str = "bsf-bench/1";
+
+/// Grid-wide constants (one source of truth for [`grid`] and the
+/// compare-only cases [`BenchSuite::parse`] reconstructs).
+const GRID_SEED: u64 = 7;
+const GRID_EPS: f64 = 1e-12;
+const GRID_MAX_ITER: usize = 100_000;
+/// Montecarlo's standard-error target doubles as its case `eps`, so a
+/// worker argv derived from the case matches the master construction.
+const MC_TOL: f64 = 1e-3;
+
+/// One point of the sweep grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchCase {
+    pub problem: &'static str,
+    /// `serial` | `threaded` | `process`.
+    pub engine: &'static str,
+    pub n: usize,
+    pub workers: usize,
+    pub threads_per_worker: usize,
+    pub seed: u64,
+    pub eps: f64,
+    pub max_iter: usize,
+    /// Extra problem knob (montecarlo: samples per block; 0 = unused).
+    pub samples: usize,
+}
+
+impl BenchCase {
+    /// Stable identity of a case inside a suite (the comparison key).
+    pub fn key(&self) -> String {
+        format!(
+            "{}/{}/n{}/K{}/T{}",
+            self.problem, self.engine, self.n, self.workers, self.threads_per_worker
+        )
+    }
+}
+
+/// One measured record: the case plus what the run reported.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub case: BenchCase,
+    pub iterations: usize,
+    /// Median wall seconds over the timed samples.
+    pub wall_seconds: f64,
+    pub phases: [f64; 4], // send, gather, reduce, process
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+/// A whole emitted/parsed document.
+#[derive(Debug, Clone)]
+pub struct BenchSuite {
+    pub label: String,
+    /// `quick` | `full`.
+    pub mode: String,
+    /// True for a committed placeholder baseline (no trusted timings).
+    pub bootstrap: bool,
+    pub records: Vec<BenchRecord>,
+}
+
+/// The fixed sweep grids. `quick` is sized for a CI gate (sub-second
+/// problems, both parallel levels, one real multi-process point);
+/// `full` widens n and the (K, T) grid for local perf work.
+pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
+    let case = |problem, engine, n, workers, threads, samples| BenchCase {
+        problem,
+        engine,
+        n,
+        workers,
+        threads_per_worker: threads,
+        seed: GRID_SEED,
+        eps: GRID_EPS,
+        max_iter: GRID_MAX_ITER,
+        samples,
+    };
+    let mc_case = |mut c: BenchCase| {
+        c.eps = MC_TOL;
+        c
+    };
+    match mode {
+        // NB: montecarlo cases carry eps = MC_TOL so a worker argv built
+        // from the case always matches the master-side construction.
+        "quick" => Ok(vec![
+            case("jacobi", "serial", 96, 1, 1, 0),
+            case("jacobi", "threaded", 96, 2, 1, 0),
+            case("jacobi", "threaded", 96, 2, 2, 0),
+            case("jacobi", "process", 96, 2, 2, 0),
+            mc_case(case("montecarlo", "serial", 64, 1, 1, 2000)),
+            mc_case(case("montecarlo", "threaded", 64, 2, 2, 2000)),
+        ]),
+        "full" => Ok(vec![
+            case("jacobi", "serial", 384, 1, 1, 0),
+            case("jacobi", "threaded", 384, 2, 1, 0),
+            case("jacobi", "threaded", 384, 4, 1, 0),
+            case("jacobi", "threaded", 384, 2, 2, 0),
+            case("jacobi", "threaded", 384, 2, 4, 0),
+            case("jacobi", "process", 384, 2, 2, 0),
+            mc_case(case("montecarlo", "serial", 128, 1, 1, 20_000)),
+            mc_case(case("montecarlo", "threaded", 128, 2, 2, 20_000)),
+            mc_case(case("montecarlo", "threaded", 128, 4, 2, 20_000)),
+        ]),
+        other => Err(BsfError::usage(format!("unknown bench mode {other:?} (quick|full)"))),
+    }
+}
+
+/// Run one case: 1 warmup + 3 timed runs, median wall; iterations and
+/// transport totals from the last run (identical across runs — the
+/// math is deterministic for a fixed seed).
+pub fn run_case(case: &BenchCase, bsf_bin: Option<&Path>) -> Result<BenchRecord, BsfError> {
+    match case.problem {
+        "jacobi" => {
+            let problem = Arc::new(JacobiProblem::random(case.n, case.eps, case.seed).0);
+            run_problem(case, problem, bsf_bin)
+        }
+        "montecarlo" => {
+            // case.eps carries MC_TOL (see grid); `bsf worker` hardcodes
+            // the same tolerance in its own mk_montecarlo.
+            let problem =
+                Arc::new(MonteCarloProblem::new(case.n, case.samples.max(1), case.eps));
+            run_problem(case, problem, bsf_bin)
+        }
+        other => Err(BsfError::bench(format!("bench grid names unknown problem {other:?}"))),
+    }
+}
+
+fn run_problem<P: BsfProblem>(
+    case: &BenchCase,
+    problem: Arc<P>,
+    bsf_bin: Option<&Path>,
+) -> Result<BenchRecord, BsfError> {
+    let cfg = BsfConfig::with_workers(case.workers)
+        .threads_per_worker(case.threads_per_worker)
+        .max_iter(case.max_iter);
+
+    let run_once = || -> Result<RunReport<P::Param>, BsfError> {
+        let session = Bsf::from_arc(Arc::clone(&problem)).config(cfg.clone());
+        match case.engine {
+            "serial" => session.engine(SerialEngine).run(),
+            "threaded" => session.engine(ThreadedEngine).run(),
+            "process" => {
+                let mut engine = ProcessEngine::spawn_args(worker_args(case));
+                if let Some(bin) = bsf_bin {
+                    engine = engine.program(bin);
+                }
+                session.engine(engine).run()
+            }
+            other => Err(BsfError::bench(format!("unknown bench engine {other:?}"))),
+        }
+    };
+
+    // Warmup (allocator, page cache, first-spawn costs), then sample.
+    let mut last: Option<RunReport<P::Param>> = None;
+    let mut failure: Option<BsfError> = None;
+    let samples = bench(case.key(), 1, 3, || {
+        // A failed case stays failed — don't burn three more spawn
+        // timeouts re-proving it (process cases wait ~30s each).
+        if failure.is_some() {
+            return;
+        }
+        match run_once() {
+            Ok(report) => last = Some(report),
+            Err(e) => failure = Some(e),
+        }
+    });
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    let report = last.ok_or_else(|| BsfError::bench("bench produced no run report"))?;
+    Ok(BenchRecord {
+        case: case.clone(),
+        iterations: report.iterations,
+        wall_seconds: samples.median_secs,
+        phases: [
+            report.phases.send,
+            report.phases.gather,
+            report.phases.reduce,
+            report.phases.process,
+        ],
+        messages: report.messages,
+        bytes: report.bytes,
+    })
+}
+
+/// Worker argv for a self-spawned process case.
+///
+/// Keep in lockstep with `worker_args` in `main.rs` (the CLI launcher)
+/// and `cmd_worker`'s `mk_*` constructors: a master/child drift changes
+/// the child's problem or chunk grid and breaks the bit-equality the
+/// regression gate relies on. Flags omitted here (--backend, --steps)
+/// default identically on both sides for the problems the grid names.
+fn worker_args(case: &BenchCase) -> Vec<String> {
+    let mut argv: Vec<String> = vec!["worker".into()];
+    let mut push = |k: &str, v: String| {
+        argv.push(format!("--{k}"));
+        argv.push(v);
+    };
+    push("problem", case.problem.into());
+    push("n", case.n.to_string());
+    push("seed", case.seed.to_string());
+    push("eps", format!("{}", case.eps));
+    push("threads-per-worker", case.threads_per_worker.to_string());
+    if case.samples > 0 {
+        push("samples", case.samples.to_string());
+    }
+    argv
+}
+
+/// Run a whole suite. `bsf_bin` overrides the worker binary for process
+/// cases (tests pass `CARGO_BIN_EXE_bsf`; the CLI leaves it `None` and
+/// self-spawns).
+pub fn run_suite(
+    label: &str,
+    mode: &str,
+    bsf_bin: Option<&Path>,
+) -> Result<BenchSuite, BsfError> {
+    let mut records = Vec::new();
+    for case in grid(mode)? {
+        records.push(run_case(&case, bsf_bin)?);
+    }
+    Ok(BenchSuite {
+        label: label.to_string(),
+        mode: mode.to_string(),
+        bootstrap: false,
+        records,
+    })
+}
+
+impl BenchSuite {
+    /// Serialize to the `bsf-bench/1` JSON document.
+    pub fn to_json(&self) -> String {
+        let host = Json::obj(vec![
+            ("os", Json::Str(std::env::consts::OS.to_string())),
+            ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+            (
+                "cores",
+                Json::Num(
+                    std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+                        as f64,
+                ),
+            ),
+        ]);
+        let records = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("problem", Json::Str(r.case.problem.to_string())),
+                    ("engine", Json::Str(r.case.engine.to_string())),
+                    ("n", Json::Num(r.case.n as f64)),
+                    ("workers", Json::Num(r.case.workers as f64)),
+                    ("threads_per_worker", Json::Num(r.case.threads_per_worker as f64)),
+                    ("iterations", Json::Num(r.iterations as f64)),
+                    ("wall_seconds", Json::Num(r.wall_seconds)),
+                    (
+                        "phases",
+                        Json::obj(vec![
+                            ("send", Json::Num(r.phases[0])),
+                            ("gather", Json::Num(r.phases[1])),
+                            ("reduce", Json::Num(r.phases[2])),
+                            ("process", Json::Num(r.phases[3])),
+                        ]),
+                    ),
+                    ("messages", Json::Num(r.messages as f64)),
+                    ("bytes", Json::Num(r.bytes as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("label", Json::Str(self.label.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("bootstrap", Json::Bool(self.bootstrap)),
+            ("host", host),
+            ("records", Json::Arr(records)),
+        ])
+        .pretty()
+    }
+
+    /// Parse a `bsf-bench/1` document.
+    pub fn parse(text: &str) -> Result<BenchSuite, BsfError> {
+        let doc = Json::parse(text).map_err(|e| BsfError::bench(format!("bad JSON: {e}")))?;
+        let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != SCHEMA {
+            return Err(BsfError::bench(format!(
+                "unsupported schema {schema:?} (expected {SCHEMA:?})"
+            )));
+        }
+        let str_field = |j: &Json, k: &str| {
+            j.get(k).and_then(Json::as_str).map(str::to_string).ok_or_else(|| {
+                BsfError::bench(format!("record missing string field {k:?}"))
+            })
+        };
+        let num_field = |j: &Json, k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| BsfError::bench(format!("record missing number field {k:?}")))
+        };
+        let mut records = Vec::new();
+        for item in doc.get("records").and_then(Json::as_arr).unwrap_or(&[]) {
+            let problem = match str_field(item, "problem")?.as_str() {
+                "jacobi" => "jacobi",
+                "montecarlo" => "montecarlo",
+                other => {
+                    return Err(BsfError::bench(format!("unknown problem {other:?} in record")))
+                }
+            };
+            let engine = match str_field(item, "engine")?.as_str() {
+                "serial" => "serial",
+                "threaded" => "threaded",
+                "process" => "process",
+                other => {
+                    return Err(BsfError::bench(format!("unknown engine {other:?} in record")))
+                }
+            };
+            let phases = item.get("phases");
+            let phase = |k: &str| {
+                phases.and_then(|p| p.get(k)).and_then(Json::as_f64).unwrap_or(0.0)
+            };
+            records.push(BenchRecord {
+                // Compare-only reconstruction: the JSON carries the
+                // identity fields `key()` hashes on; the run knobs are
+                // filled from the grid constants and MUST NOT be used
+                // to re-run the case (samples is intentionally 0 —
+                // re-running goes through `grid()`, never a parse).
+                case: BenchCase {
+                    problem,
+                    engine,
+                    n: num_field(item, "n")? as usize,
+                    workers: num_field(item, "workers")? as usize,
+                    threads_per_worker: num_field(item, "threads_per_worker")? as usize,
+                    seed: GRID_SEED,
+                    eps: GRID_EPS,
+                    max_iter: GRID_MAX_ITER,
+                    samples: 0,
+                },
+                iterations: num_field(item, "iterations")? as usize,
+                wall_seconds: num_field(item, "wall_seconds")?,
+                phases: [phase("send"), phase("gather"), phase("reduce"), phase("process")],
+                messages: num_field(item, "messages").unwrap_or(0.0) as u64,
+                bytes: num_field(item, "bytes").unwrap_or(0.0) as u64,
+            });
+        }
+        Ok(BenchSuite {
+            label: doc.get("label").and_then(Json::as_str).unwrap_or("?").to_string(),
+            mode: doc.get("mode").and_then(Json::as_str).unwrap_or("quick").to_string(),
+            bootstrap: doc.get("bootstrap").and_then(Json::as_bool).unwrap_or(false),
+            records,
+        })
+    }
+}
+
+/// Compare `candidate` against `baseline`.
+///
+/// * Every baseline case must appear in the candidate (coverage).
+/// * Iteration counts must match **exactly** (the math is deterministic
+///   for fixed seeds; a drift is a correctness regression, not noise).
+/// * Wall-clock must lie within `±tolerance` (relative) of the baseline.
+///
+/// A `bootstrap: true` baseline has no trusted timings: only coverage
+/// is checked and the report says so. Returns the human-readable report
+/// on success; a typed [`BsfError::Bench`] listing every violation on
+/// failure.
+pub fn compare(
+    baseline: &BenchSuite,
+    candidate: &BenchSuite,
+    tolerance: f64,
+) -> Result<String, BsfError> {
+    let mut report = String::new();
+    let mut violations: Vec<String> = Vec::new();
+    report.push_str(&format!(
+        "bench compare: candidate {:?} vs baseline {:?} (tolerance ±{:.0}%{})\n",
+        candidate.label,
+        baseline.label,
+        tolerance * 100.0,
+        if baseline.bootstrap { ", bootstrap baseline: coverage check only" } else { "" },
+    ));
+    for base in &baseline.records {
+        let key = base.case.key();
+        let found = candidate.records.iter().find(|r| r.case.key() == key);
+        let cand = match found {
+            None => {
+                violations.push(format!("{key}: missing from candidate"));
+                continue;
+            }
+            Some(c) => c,
+        };
+        if baseline.bootstrap {
+            report.push_str(&format!(
+                "  {key}: present (iterations={}, wall={:.6}s) — no trusted baseline yet\n",
+                cand.iterations, cand.wall_seconds
+            ));
+            continue;
+        }
+        if cand.iterations != base.iterations {
+            violations.push(format!(
+                "{key}: iteration count changed {} -> {} (hard equality required)",
+                base.iterations, cand.iterations
+            ));
+        }
+        let ratio = if base.wall_seconds > 0.0 {
+            cand.wall_seconds / base.wall_seconds
+        } else {
+            1.0
+        };
+        let within = ratio >= 1.0 - tolerance && ratio <= 1.0 + tolerance;
+        report.push_str(&format!(
+            "  {key}: wall {:.6}s vs {:.6}s ({:+.1}%) iterations {} {}\n",
+            cand.wall_seconds,
+            base.wall_seconds,
+            (ratio - 1.0) * 100.0,
+            cand.iterations,
+            if within { "ok" } else { "OUT OF BAND" },
+        ));
+        if !within {
+            violations.push(format!(
+                "{key}: wall-clock {:.6}s is {:+.1}% vs baseline {:.6}s (tolerance ±{:.0}%)",
+                cand.wall_seconds,
+                (ratio - 1.0) * 100.0,
+                base.wall_seconds,
+                tolerance * 100.0
+            ));
+        }
+    }
+    if baseline.bootstrap {
+        report.push_str(
+            "  note: baseline is a bootstrap placeholder — regenerate it from a real\n  \
+             run (`bsf bench --quick --label baseline --out BENCH_baseline.json`) and\n  \
+             commit it to arm the wall-clock/iteration gate.\n",
+        );
+    }
+    if violations.is_empty() {
+        Ok(report)
+    } else {
+        Err(BsfError::bench(format!(
+            "{} violation(s):\n  {}\n{report}",
+            violations.len(),
+            violations.join("\n  ")
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(key_n: usize, iterations: usize, wall: f64) -> BenchRecord {
+        BenchRecord {
+            case: BenchCase {
+                problem: "jacobi",
+                engine: "serial",
+                n: key_n,
+                workers: 1,
+                threads_per_worker: 1,
+                seed: 7,
+                eps: 1e-12,
+                max_iter: 100_000,
+                samples: 0,
+            },
+            iterations,
+            wall_seconds: wall,
+            phases: [0.0; 4],
+            messages: 0,
+            bytes: 0,
+        }
+    }
+
+    fn suite(label: &str, records: Vec<BenchRecord>, bootstrap: bool) -> BenchSuite {
+        BenchSuite { label: label.into(), mode: "quick".into(), bootstrap, records }
+    }
+
+    #[test]
+    fn grids_are_nonempty_and_hybrid() {
+        let quick = grid("quick").unwrap();
+        assert!(quick.iter().any(|c| c.threads_per_worker > 1 && c.workers > 1));
+        assert!(quick.iter().any(|c| c.engine == "process"));
+        assert!(grid("full").unwrap().len() > quick.len());
+        assert!(grid("nope").is_err());
+    }
+
+    #[test]
+    fn suite_json_round_trips() {
+        let s = suite("pr", vec![record(96, 117, 0.002), record(64, 12, 0.001)], false);
+        let parsed = BenchSuite::parse(&s.to_json()).unwrap();
+        assert_eq!(parsed.label, "pr");
+        assert!(!parsed.bootstrap);
+        assert_eq!(parsed.records.len(), 2);
+        assert_eq!(parsed.records[0].iterations, 117);
+        assert_eq!(parsed.records[0].case.key(), "jacobi/serial/n96/K1/T1");
+        assert!((parsed.records[0].wall_seconds - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_schema() {
+        assert!(BenchSuite::parse("{\"schema\": \"other/9\"}").is_err());
+        assert!(BenchSuite::parse("not json").is_err());
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = suite("baseline", vec![record(96, 117, 0.100)], false);
+        let cand = suite("pr", vec![record(96, 117, 0.110)], false);
+        let report = compare(&base, &cand, 0.25).unwrap();
+        assert!(report.contains("ok"), "{report}");
+    }
+
+    #[test]
+    fn compare_fails_on_iteration_drift_and_slowdown() {
+        let base = suite("baseline", vec![record(96, 117, 0.100)], false);
+        let drifted = suite("pr", vec![record(96, 118, 0.100)], false);
+        let err = compare(&base, &drifted, 0.25).unwrap_err();
+        assert!(matches!(err, BsfError::Bench(_)), "{err}");
+        assert!(err.to_string().contains("iteration count changed"), "{err}");
+
+        let slow = suite("pr", vec![record(96, 117, 0.200)], false);
+        let err = compare(&base, &slow, 0.25).unwrap_err();
+        assert!(err.to_string().contains("OUT OF BAND") || err.to_string().contains("wall-clock"));
+    }
+
+    #[test]
+    fn compare_fails_on_missing_case() {
+        let base =
+            suite("baseline", vec![record(96, 117, 0.1), record(64, 9, 0.1)], false);
+        let cand = suite("pr", vec![record(96, 117, 0.1)], false);
+        let err = compare(&base, &cand, 0.25).unwrap_err();
+        assert!(err.to_string().contains("missing from candidate"), "{err}");
+    }
+
+    #[test]
+    fn bootstrap_baseline_checks_coverage_only() {
+        let base = suite("baseline", vec![record(96, 0, 0.0)], true);
+        let cand = suite("pr", vec![record(96, 117, 0.002)], false);
+        let report = compare(&base, &cand, 0.25).unwrap();
+        assert!(report.contains("bootstrap"), "{report}");
+        // ... but still fails when the grid is not covered.
+        let empty = suite("pr", vec![], false);
+        assert!(compare(&base, &empty, 0.25).is_err());
+    }
+
+    #[test]
+    fn quick_suite_runs_serial_case_end_to_end() {
+        // One real measurement through the harness (the cheapest case),
+        // proving run_case wiring without the full grid's cost.
+        let case = &grid("quick").unwrap()[0];
+        assert_eq!(case.engine, "serial");
+        let rec = run_case(case, None).unwrap();
+        assert!(rec.iterations > 0);
+        assert!(rec.wall_seconds >= 0.0);
+    }
+}

@@ -4,8 +4,12 @@
 //! [`bench`] runs warmup + timed samples of a closure and reports
 //! median/MAD (robust against scheduler noise). [`Table`] prints the
 //! aligned text tables the bench binaries use to regenerate the paper's
-//! figures as rows (EXPERIMENTS.md records them).
+//! figures as rows (EXPERIMENTS.md records them). [`harness`] is the
+//! machine-readable tier: the `bsf bench` sweep that emits
+//! `BENCH_<label>.json` and the comparison the CI `bench-regression`
+//! job gates on.
 
+pub mod harness;
 pub mod sweep;
 
 use std::time::Instant;

@@ -64,9 +64,9 @@ pub fn calibrate_with_backend<P: BsfProblem>(
     let mut fold = None;
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        let f = map_and_fold(problem, backend, &elems, &param, vars, 1);
+        let f = map_and_fold(problem, backend, &elems, &param, vars, None);
         t_map = t_map.min(t0.elapsed().as_secs_f64());
-        fold = Some(f);
+        fold = Some(f.fold);
     }
     let fold = match fold {
         Some(f) => f,

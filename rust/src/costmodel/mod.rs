@@ -131,6 +131,24 @@ impl CostParams {
     pub fn iteration_time_openmp(&self, k: usize, threads: usize) -> f64 {
         self.with_openmp(threads).iteration_time(k)
     }
+
+    /// Multicore extension with an explicit fork/join overhead `t_fork`
+    /// (seconds per parallel region, i.e. per iteration): the map
+    /// divides by `threads`, communication does not, and each iteration
+    /// pays the parallel-region cost once — the constant term the
+    /// OpenMP ablation (bench E6 / `SimConfig::fork_join`) isolates.
+    /// Workers fork concurrently, so the overhead lands in the
+    /// per-iteration constant (`t_proc`), not in a K-scaled term.
+    ///
+    /// With `threads <= 1` this is the identity.
+    pub fn with_openmp_overhead(&self, threads: usize, t_fork: f64) -> CostParams {
+        if threads <= 1 {
+            return *self;
+        }
+        let mut p = self.with_openmp(threads);
+        p.t_proc += t_fork;
+        p
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +257,27 @@ mod tests {
         let p = sample();
         assert_eq!(p.with_openmp(0), p.with_openmp(1));
         assert_eq!(p.iteration_time_openmp(4, 1), p.iteration_time(4));
+    }
+
+    #[test]
+    fn openmp_overhead_is_a_per_iteration_constant() {
+        let p = sample();
+        // Identity when the tier is off.
+        assert_eq!(p.with_openmp_overhead(1, 1e-3), p);
+        let q = p.with_openmp_overhead(4, 1e-4);
+        assert_eq!(q.t_map, p.t_map / 4.0);
+        assert!((q.t_proc - (p.t_proc + 1e-4)).abs() < 1e-15);
+        // The overhead does not scale with K: the K-dependence of
+        // T(K) is unchanged between q and plain with_openmp(4).
+        let plain = p.with_openmp(4);
+        let dk = |c: &CostParams| c.iteration_time(8) - c.iteration_time(2);
+        assert!((dk(&q) - dk(&plain)).abs() < 1e-15);
+        // A tiny map with a large fork cost is slower hybrid than not —
+        // the ablation's adversarial corner.
+        let mut tiny = p;
+        tiny.t_map = 1e-6;
+        let hybrid = tiny.with_openmp_overhead(8, 1e-3);
+        assert!(hybrid.iteration_time(1) > tiny.iteration_time(1));
     }
 
     #[test]

@@ -39,6 +39,10 @@ pub enum BsfError {
     },
     /// CLI usage error (unknown subcommand/option, unparsable value).
     Usage(String),
+    /// Bench harness failure: a malformed `BENCH_*.json`, a missing
+    /// case in a comparison, or a regression outside tolerance (the CI
+    /// `bench-regression` gate).
+    Bench(String),
 }
 
 impl BsfError {
@@ -69,6 +73,10 @@ impl BsfError {
         BsfError::Usage(msg.into())
     }
 
+    pub fn bench(msg: impl Into<String>) -> Self {
+        BsfError::Bench(msg.into())
+    }
+
     /// Conventional process exit code for this error (CLI use).
     pub fn exit_code(&self) -> i32 {
         match self {
@@ -93,6 +101,7 @@ impl fmt::Display for BsfError {
                 write!(f, "io error at {}: {source}", path.display())
             }
             BsfError::Usage(msg) => write!(f, "usage error: {msg}"),
+            BsfError::Bench(msg) => write!(f, "bench error: {msg}"),
         }
     }
 }

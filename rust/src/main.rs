@@ -28,6 +28,7 @@
 //! the native map with a warning when the service or artifacts are
 //! missing.
 
+use bsf::bench::harness as bench_harness;
 use bsf::bench::sweep::{print_sweep, speedup_sweep};
 use bsf::costmodel::{calibrate, ClusterProfile};
 use bsf::error::BsfError;
@@ -49,7 +50,7 @@ use bsf::skeleton::{
 use bsf::util::cli::ArgMap;
 
 const USAGE: &str = "\
-usage: bsf <run|worker|sim|sweep|predict|artifacts> [problem] [options]
+usage: bsf <run|worker|sim|sweep|predict|bench|artifacts> [problem] [options]
 
 problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | lpp | apex
 
@@ -57,7 +58,10 @@ options by subcommand:
   run / sim:
     --n N          problem size (default 256)
     --k K          number of workers (default 4; --workers is an alias)
-    --omp T        intra-worker map threads (default 1)
+    --threads-per-worker T
+                   intra-worker map threads — the paper's OpenMP tier;
+                   K workers x T threads is the hybrid two-level grid
+                   (default 1; --omp is an alias)
     --seed S       RNG seed (default 7)
     --eps E        stop threshold (default 1e-12)
     --trace T      print intermediate results every T iterations
@@ -75,15 +79,22 @@ options by subcommand:
     --connect A    master address (host:port), required
     --rank R       this worker's rank, required
     --problem P    problem name, required; problem options (--n --seed
-                   --eps --steps --samples --omp --backend) must match
-                   the master's
+                   --eps --steps --samples --threads-per-worker
+                   --backend) must match the master's
   sweep:
     --n N (default 512)  --k 1,2,4,...  --seed S  --profile P
     --max-iter I (default 30)  --steps S (gravity; default: max-iter)
     --samples S (montecarlo)
   predict:
     --n N (default 512)  --seed S  --profile P
-    --steps S (gravity; default 10)  --samples S (montecarlo)";
+    --steps S (gravity; default 10)  --samples S (montecarlo)
+  bench (machine-readable perf sweep; see README 'Benchmark harness'):
+    --quick | --full   sweep size (default quick — the CI gate's grid)
+    --label L          suite label (default pr)
+    --out FILE         write BENCH_<label> JSON to FILE
+    --baseline FILE    compare against FILE; exit 1 on iteration drift,
+                       missing cases, or wall-clock outside tolerance
+    --tolerance X      relative wall-clock band (default 0.25 = ±25%)";
 
 /// Options shared by run/sim.
 struct Common {
@@ -153,8 +164,15 @@ fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
     } else {
         args.usize_or("k", 4)?
     };
+    // `--threads-per-worker` (the hybrid-mode spelling) wins over its
+    // seed-era alias `--omp`.
+    let threads = if args.get("threads-per-worker").is_some() {
+        args.usize_or("threads-per-worker", 1)?
+    } else {
+        args.usize_or("omp", 1)?
+    };
     let cfg = BsfConfig::with_workers(k)
-        .openmp(args.usize_or("omp", 1)?)
+        .threads_per_worker(threads)
         .trace(args.usize_or("trace", 0)?)
         .max_iter(args.usize_or("max-iter", 100_000)?);
     Ok(Common {
@@ -169,7 +187,8 @@ fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
 
 /// Worker argv for a self-spawned distributed run: the same problem and
 /// backend the master was asked for, passed explicitly so child defaults
-/// can never drift.
+/// can never drift. (`bench::harness::worker_args` builds the same argv
+/// from a `BenchCase` — keep the two in lockstep.)
 fn worker_args(name: &str, c: &Common, args: &ArgMap) -> Vec<String> {
     let kv: &[(&str, String)] = &[
         ("problem", name.to_string()),
@@ -178,7 +197,7 @@ fn worker_args(name: &str, c: &Common, args: &ArgMap) -> Vec<String> {
         ("eps", c.eps.to_string()),
         ("steps", c.steps.to_string()),
         ("samples", c.samples.to_string()),
-        ("omp", c.cfg.openmp_threads.to_string()),
+        ("threads-per-worker", c.cfg.openmp_threads.to_string()),
         ("backend", args.str_or("backend", "native").to_string()),
     ];
     let mut argv = vec!["worker".to_string()];
@@ -314,13 +333,17 @@ fn finish<Param>(
     if !traffic.is_empty() {
         println!("traffic: {traffic}");
     }
+    let hybrid = r.hybrid_summary();
+    if !hybrid.is_empty() {
+        println!("hybrid: {hybrid}");
+    }
     println!("result: {}", describe(&r.param));
     Ok(())
 }
 
 const RUN_OPTS: &[&str] = &[
-    "n", "k", "workers", "omp", "seed", "eps", "trace", "max-iter", "engine",
-    "backend", "profile", "steps", "samples", "listen",
+    "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
+    "max-iter", "engine", "backend", "profile", "steps", "samples", "listen",
 ];
 
 fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
@@ -393,7 +416,7 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
 
 const WORKER_OPTS: &[&str] = &[
     "connect", "rank", "problem", "n", "seed", "eps", "steps", "samples", "omp",
-    "backend",
+    "threads-per-worker", "backend",
 ];
 
 /// One worker process of a distributed run (the child side of
@@ -540,6 +563,59 @@ fn cmd_predict(args: &ArgMap) -> Result<(), BsfError> {
     Ok(())
 }
 
+/// `bsf bench`: run the fixed problem × engine × (K, T) sweep, write
+/// the machine-readable `BENCH_*.json`, optionally gate against a
+/// committed baseline (the CI `bench-regression` job's core).
+fn cmd_bench(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(&["quick", "full", "label", "out", "baseline", "tolerance"])?;
+    let mode = match (args.flag("quick"), args.flag("full")) {
+        (true, true) => {
+            return Err(BsfError::usage("--quick and --full are mutually exclusive"))
+        }
+        (_, true) => "full",
+        _ => "quick",
+    };
+    let label = args.str_or("label", "pr");
+    let tolerance = args.f64_or("tolerance", 0.25)?;
+    if !(0.0..1.0).contains(&tolerance) {
+        return Err(BsfError::usage(format!(
+            "--tolerance expects a fraction in [0, 1), got {tolerance}"
+        )));
+    }
+
+    eprintln!("bsf bench: running the {mode} sweep ...");
+    let suite = bench_harness::run_suite(label, mode, None)?;
+    for r in &suite.records {
+        println!(
+            "bench {:<26} iterations={:<6} wall={:.6}s msgs={} bytes={}",
+            r.case.key(),
+            r.iterations,
+            r.wall_seconds,
+            r.messages,
+            r.bytes
+        );
+    }
+
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, suite.to_json()).map_err(|e| BsfError::Io {
+            path: std::path::PathBuf::from(out),
+            source: e,
+        })?;
+        println!("wrote {out}");
+    }
+
+    if let Some(baseline_path) = args.get("baseline") {
+        let text = std::fs::read_to_string(baseline_path).map_err(|e| BsfError::Io {
+            path: std::path::PathBuf::from(baseline_path),
+            source: e,
+        })?;
+        let baseline = bench_harness::BenchSuite::parse(&text)?;
+        let report = bench_harness::compare(&baseline, &suite, tolerance)?;
+        print!("{report}");
+    }
+    Ok(())
+}
+
 fn cmd_artifacts() -> Result<(), BsfError> {
     let rt = XlaRuntime::open_default()?;
     println!(
@@ -570,6 +646,7 @@ fn dispatch(args: &ArgMap) -> Result<(), BsfError> {
         }
         Some("sweep") => cmd_sweep(args),
         Some("predict") => cmd_predict(args),
+        Some("bench") => cmd_bench(args),
         Some("artifacts") => cmd_artifacts(),
         Some("help") | None => {
             println!("{USAGE}");

@@ -35,7 +35,7 @@ use crate::skeleton::reduce::{merge_folds, ExtendedFold};
 use crate::skeleton::runner::validate_run;
 use crate::skeleton::split::all_ranges;
 use crate::skeleton::variables::SkelVars;
-use crate::skeleton::worker::{map_and_fold, WorkerReport};
+use crate::skeleton::worker::{intra_worker_pool, map_and_fold, WorkerReport};
 use crate::transport::{Tag, TransportStats, VolumeByTag};
 use crate::util::codec::Codec;
 
@@ -45,6 +45,9 @@ pub enum ComputeTime {
     /// Wall-clock of each worker's real chunk execution on this machine.
     Measured,
     /// `sublist_len · t_elem` (deterministic; `t_elem` from calibration).
+    /// With the intra-worker tier active (`openmp_threads = T > 1`) the
+    /// charge is the parallel critical path `ceil(sublist_len / T) ·
+    /// t_elem` — the paper's OpenMP divide applied per virtual node.
     PerElement(f64),
 }
 
@@ -53,15 +56,26 @@ pub enum ComputeTime {
 pub struct SimConfig {
     pub profile: ClusterProfile,
     pub compute: ComputeTime,
+    /// Intra-worker fork/join overhead, seconds charged per worker per
+    /// iteration when the hybrid tier is active (T > 1) — the term the
+    /// paper's OpenMP ablation isolates: intra-node parallelism divides
+    /// the map but adds a fixed parallel-region cost. 0 by default.
+    pub fork_join: f64,
 }
 
 impl SimConfig {
     pub fn new(profile: ClusterProfile) -> Self {
-        Self { profile, compute: ComputeTime::Measured }
+        Self { profile, compute: ComputeTime::Measured, fork_join: 0.0 }
     }
 
     pub fn per_element(mut self, t_elem: f64) -> Self {
         self.compute = ComputeTime::PerElement(t_elem);
+        self
+    }
+
+    /// Set the intra-worker fork/join overhead (see [`SimConfig::fork_join`]).
+    pub fn fork_join(mut self, seconds: f64) -> Self {
+        self.fork_join = seconds;
         self
     }
 }
@@ -127,6 +141,11 @@ pub fn simulate<P: BsfProblem>(
 
     let lat = sim.profile.latency;
     let beta = sim.profile.byte_time;
+    let threads = cfg.openmp_threads.max(1);
+
+    // One real chunk pool serves every virtual node in turn (virtual
+    // workers run sequentially on this machine, so sharing is exact).
+    let pool = intra_worker_pool(cfg);
 
     let mut param = problem.init_parameter();
     problem.parameters_output(&param);
@@ -138,6 +157,8 @@ pub fn simulate<P: BsfProblem>(
     let stats = TransportStats::default();
     let mut acc = IterBreakdown::default();
     let mut map_seconds = vec![0.0f64; k];
+    let mut max_chunk_seconds = vec![0.0f64; k];
+    let mut merge_seconds = vec![0.0f64; k];
 
     loop {
         let order_payload = (job, param.clone()).to_bytes();
@@ -157,15 +178,25 @@ pub fn simulate<P: BsfProblem>(
             let t0 = Instant::now();
             // Same contract as the real engines: a panicking map becomes
             // a typed WorkerPanic for the simulated node's rank.
-            let fold = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                map_and_fold(problem, backend, elems, &param, vars, cfg.openmp_threads)
+            let mapped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                map_and_fold(problem, backend, elems, &param, vars, pool.as_ref())
             }))
             .map_err(|_| BsfError::WorkerPanic { rank })?;
             let wall = t0.elapsed().as_secs_f64();
             map_seconds[rank] += wall;
+            max_chunk_seconds[rank] += mapped.max_chunk_seconds;
+            merge_seconds[rank] += mapped.merge_seconds;
+            let fold = mapped.fold;
+            // Intra-worker tier charging: Measured wall already ran on
+            // the real pool; the deterministic per-element model charges
+            // the parallel critical path plus the fork/join overhead.
+            let intra_overhead = if threads > 1 { sim.fork_join } else { 0.0 };
             let t_map = match sim.compute {
-                ComputeTime::Measured => wall,
-                ComputeTime::PerElement(te) => len as f64 * te,
+                ComputeTime::Measured => wall + intra_overhead,
+                ComputeTime::PerElement(te) => {
+                    let critical_path = len.div_ceil(threads);
+                    critical_path as f64 * te + intra_overhead
+                }
             };
             let fold_len = (fold.value.clone(), fold.counter).to_bytes().len();
             let start = (rank + 1) as f64 * send_cost;
@@ -237,6 +268,9 @@ pub fn simulate<P: BsfProblem>(
                     iterations: iter,
                     map_seconds: map_seconds[rank],
                     sublist_length: len,
+                    threads,
+                    max_chunk_seconds: max_chunk_seconds[rank],
+                    merge_seconds: merge_seconds[rank],
                 })
                 .collect();
             let report = SimReport {

@@ -9,8 +9,7 @@
 //!
 //! Three implementations ship with the crate:
 //!
-//! * [`PerElementBackend`] — the faithful per-element `PC_bsf_MapF` loop
-//!   (plus the OpenMP-analog intra-worker split when configured);
+//! * [`PerElementBackend`] — the faithful per-element `PC_bsf_MapF` loop;
 //! * [`FusedNativeBackend`] — the default: use the problem's optional
 //!   fused [`BsfProblem::map_sublist`] kernel when it provides one, fall
 //!   back to the per-element loop otherwise;
@@ -19,16 +18,33 @@
 //!   resolved problem-agnostically from the artifact registry by
 //!   `ArtifactMeta.kind`; falls back to the native map (with a one-shot
 //!   warning) when no artifact fits or no PJRT backend is linked in.
+//!
+//! Every backend also has a **parallel entry point**, [`par_map`]: the
+//! intra-worker tier (the paper's OpenMP mode) block-splits the sublist
+//! into chunks, maps each chunk on the worker's
+//! [`ChunkPool`](crate::skeleton::pool::ChunkPool) — through the
+//! backend's own fused chunk kernel when it has one, per-element
+//! otherwise — and merges the chunk partials **in chunk order**, so the
+//! result never depends on thread scheduling.
+//!
+//! [`par_map`]: MapBackend::par_map
 
+use std::time::Instant;
+
+use crate::skeleton::pool::ChunkPool;
 use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::reduce::{merge_folds, ExtendedFold};
+use crate::skeleton::split::all_ranges;
 use crate::skeleton::variables::SkelVars;
+use crate::skeleton::worker::{fold_chunk, MapFold};
 
 /// Strategy for mapping one worker's whole sublist.
 ///
-/// Returning `Some((fold, counter))` replaces the per-element `map_f`
-/// loop + local reduce for this sublist; returning `None` hands control
-/// back to the skeleton's per-element loop (which also honors
-/// `BsfConfig::openmp_threads`).
+/// Returning `Some((fold, counter))` from [`map_sublist`] replaces the
+/// per-element `map_f` loop + local reduce for this sublist; returning
+/// `None` hands control back to the skeleton's per-element loop.
+///
+/// [`map_sublist`]: MapBackend::map_sublist
 pub trait MapBackend<P: BsfProblem>: Send + Sync {
     /// Map + locally reduce `elems` (the worker's static sublist) under
     /// the current order `param`.
@@ -39,6 +55,70 @@ pub trait MapBackend<P: BsfProblem>: Send + Sync {
         param: &P::Param,
         vars: &SkelVars,
     ) -> Option<(Option<P::ReduceElem>, u64)>;
+
+    /// Parallel map + local reduce over the sublist — the intra-worker
+    /// tier (`PP_BSF_OMP` / `--threads-per-worker`).
+    ///
+    /// The provided implementation block-splits `elems` into
+    /// `min(pool.threads(), elems.len())` chunks, maps every chunk as a
+    /// pool job — trying the backend's fused [`map_sublist`] on the
+    /// chunk first (with chunk-adjusted `SkelVars`), per-element
+    /// otherwise — and merges the partials in **chunk order** with ⊕,
+    /// keeping the fold deterministic under any thread schedule.
+    ///
+    /// Backends normally keep this default; override it only to change
+    /// the chunking policy itself.
+    ///
+    /// [`map_sublist`]: MapBackend::map_sublist
+    fn par_map(
+        &self,
+        problem: &P,
+        elems: &[P::MapElem],
+        param: &P::Param,
+        vars: &SkelVars,
+        pool: &ChunkPool,
+    ) -> MapFold<P::ReduceElem> {
+        let job = vars.job_case;
+        let n_chunks = pool.threads().min(elems.len()).max(1);
+        let ranges = all_ranges(elems.len(), n_chunks);
+        let jobs: Vec<_> = ranges
+            .iter()
+            .filter(|&&(_, chunk_len)| chunk_len > 0)
+            .map(|&(chunk_off, chunk_len)| {
+                move || {
+                    let t0 = Instant::now();
+                    let chunk = &elems[chunk_off..chunk_off + chunk_len];
+                    // A fused chunk call sees the chunk as its whole
+                    // sublist: absolute offset, chunk length.
+                    let mut chunk_vars = *vars;
+                    chunk_vars.address_offset = vars.address_offset + chunk_off;
+                    chunk_vars.sublist_length = chunk_len;
+                    let fold = match self.map_sublist(problem, chunk, param, &chunk_vars) {
+                        Some((value, counter)) => ExtendedFold { value, counter },
+                        // Per-element fallback: original vars + relative
+                        // base, so `number_in_sublist` stays
+                        // sublist-relative exactly as unchunked.
+                        None => fold_chunk(problem, chunk, param, *vars, chunk_off, job),
+                    };
+                    (fold, t0.elapsed().as_secs_f64())
+                }
+            })
+            .collect();
+        let chunks = jobs.len();
+        let results = pool.run(jobs);
+
+        let max_chunk_seconds = results.iter().map(|r| r.1).fold(0.0f64, f64::max);
+        let t0 = Instant::now();
+        let fold = merge_folds(results.into_iter().map(|r| r.0), |a, b| {
+            problem.reduce_f(a, b, job)
+        });
+        MapFold {
+            fold,
+            chunks,
+            max_chunk_seconds,
+            merge_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
 
     /// Human-readable backend name (reports, traces).
     fn name(&self) -> &'static str;
@@ -92,6 +172,7 @@ impl<P: BsfProblem> MapBackend<P> for FusedNativeBackend {
 mod tests {
     use super::*;
     use crate::problems::jacobi::JacobiProblem;
+    use crate::util::codec::Codec;
 
     #[test]
     fn per_element_always_defers() {
@@ -114,5 +195,123 @@ mod tests {
                 .expect("jacobi provides a fused kernel");
         assert_eq!(counter, 8);
         assert!(value.is_some());
+    }
+
+    /// The pool property: running the chunked map **in parallel** is
+    /// bit-identical to running the *same chunk grid* sequentially, for
+    /// every problem's `ReduceElem` — parallel scheduling must never
+    /// change what ⊕ computes or the order it is applied in. (Chunked
+    /// vs *unchunked* equivalence is float-reassociation-bounded and is
+    /// asserted at session level in tests/hybrid.rs.)
+    fn par_map_is_bit_identical_to_sequential_same_grid<P: BsfProblem>(p: &P, threads: usize) {
+        let n = p.list_size();
+        let elems: Vec<P::MapElem> = (0..n).map(|i| p.map_list_elem(i)).collect();
+        let param = p.init_parameter();
+        let vars = SkelVars::for_worker(0, 1, 0, n, 0, 0);
+        let backend = FusedNativeBackend;
+
+        let pool = ChunkPool::new(threads);
+        let par = backend.par_map(p, &elems, &param, &vars, &pool);
+
+        // Sequential reference: identical grid, per-chunk calls, merge
+        // order — only the parallel execution is removed.
+        let n_chunks = pool.threads().min(n).max(1);
+        let seq = merge_folds(
+            all_ranges(n, n_chunks)
+                .into_iter()
+                .filter(|&(_, len)| len > 0)
+                .map(|(off, len)| {
+                    let chunk = &elems[off..off + len];
+                    let mut chunk_vars = vars;
+                    chunk_vars.address_offset = vars.address_offset + off;
+                    chunk_vars.sublist_length = len;
+                    match MapBackend::map_sublist(&backend, p, chunk, &param, &chunk_vars) {
+                        Some((value, counter)) => ExtendedFold { value, counter },
+                        None => fold_chunk(p, chunk, &param, vars, off, vars.job_case),
+                    }
+                }),
+            |a, b| p.reduce_f(a, b, vars.job_case),
+        );
+        assert_eq!(
+            (par.fold.value, par.fold.counter).to_bytes(),
+            (seq.value, seq.counter).to_bytes(),
+            "pool execution diverged from sequential same-grid fold (T={threads}, n={n})"
+        );
+    }
+
+    #[test]
+    fn property_pool_parallelism_is_invisible_for_every_problem() {
+        use crate::problems::apex::ApexProblem;
+        use crate::problems::cimmino::CimminoProblem;
+        use crate::problems::gravity::GravityProblem;
+        use crate::problems::jacobi_map::JacobiMapProblem;
+        use crate::problems::lpp::LppProblem;
+        use crate::problems::montecarlo::MonteCarloProblem;
+        use crate::util::qcheck::{qcheck, size_in};
+
+        qcheck(12, |rng| {
+            let threads = size_in(rng, 2, 6);
+            let seed = rng.below(1_000_000) as u64;
+            par_map_is_bit_identical_to_sequential_same_grid(
+                &JacobiProblem::random(size_in(rng, 2, 24), 1e-12, seed).0,
+                threads,
+            );
+            par_map_is_bit_identical_to_sequential_same_grid(
+                &JacobiMapProblem::random(size_in(rng, 2, 24), 1e-12, seed).0,
+                threads,
+            );
+            let nc = size_in(rng, 2, 16);
+            par_map_is_bit_identical_to_sequential_same_grid(
+                &CimminoProblem::random(nc, nc, 1e-12, seed).0,
+                threads,
+            );
+            par_map_is_bit_identical_to_sequential_same_grid(
+                &GravityProblem::random(size_in(rng, 2, 12), 1e-3, 3, seed),
+                threads,
+            );
+            par_map_is_bit_identical_to_sequential_same_grid(
+                &MonteCarloProblem::new(size_in(rng, 2, 12), 200, 1e-3),
+                threads,
+            );
+            let nl = size_in(rng, 2, 10);
+            par_map_is_bit_identical_to_sequential_same_grid(
+                &LppProblem::random(4 * nl, nl, seed),
+                threads,
+            );
+            par_map_is_bit_identical_to_sequential_same_grid(
+                &ApexProblem::random(4 * nl, nl, seed),
+                threads,
+            );
+        });
+    }
+
+    #[test]
+    fn par_map_counter_and_chunking_match_serial() {
+        let (p, _) = JacobiProblem::random(12, 1e-12, 2);
+        let vars = SkelVars::for_worker(0, 1, 0, 12, 0, 0);
+        let elems: Vec<usize> = (0..12).collect();
+        let param = vec![1.0; 12];
+        let pool = ChunkPool::new(3);
+        let par = FusedNativeBackend.par_map(&p, &elems, &param, &vars, &pool);
+        assert_eq!(par.chunks, 3);
+        assert_eq!(par.fold.counter, 12);
+        let (value, counter) =
+            MapBackend::map_sublist(&FusedNativeBackend, &p, &elems, &param, &vars).unwrap();
+        assert_eq!(par.fold.counter, counter);
+        // Jacobi's fused chunk sums are one-hot-free accumulations; the
+        // chunked merge agrees with the serial kernel to float
+        // reassociation. Counters and participation are exact.
+        let a = par.fold.value.expect("participating elements");
+        let b = value.expect("participating elements");
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+        // Chunked twice with the same grid is bit-identical (merge order
+        // is chunk order, never completion order).
+        let again = FusedNativeBackend.par_map(&p, &elems, &param, &vars, &pool);
+        assert_eq!(
+            (par.fold.value.clone(), par.fold.counter).to_bytes(),
+            (again.fold.value.clone(), again.fold.counter).to_bytes()
+        );
     }
 }

@@ -41,6 +41,13 @@ impl BsfConfig {
         self
     }
 
+    /// Alias for [`openmp`](Self::openmp) in the hybrid-mode spelling:
+    /// `--workers K --threads-per-worker T` is the paper's MPI × OpenMP
+    /// grid (K worker processes, T map threads inside each).
+    pub fn threads_per_worker(self, threads: usize) -> Self {
+        self.openmp(threads)
+    }
+
     pub fn trace(mut self, every: usize) -> Self {
         self.trace_count = every;
         self
@@ -68,5 +75,12 @@ mod tests {
     #[test]
     fn openmp_floor_is_one() {
         assert_eq!(BsfConfig::default().openmp(0).openmp_threads, 1);
+    }
+
+    #[test]
+    fn threads_per_worker_is_the_openmp_alias() {
+        let c = BsfConfig::with_workers(2).threads_per_worker(8);
+        assert_eq!(c.openmp_threads, 8);
+        assert_eq!(BsfConfig::default().threads_per_worker(0).openmp_threads, 1);
     }
 }

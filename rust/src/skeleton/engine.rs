@@ -27,7 +27,7 @@ use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::runner::{run_threaded_session, validate_run};
 use crate::skeleton::variables::SkelVars;
-use crate::skeleton::worker::{map_and_fold, WorkerReport};
+use crate::skeleton::worker::{intra_worker_pool, map_and_fold, WorkerReport};
 use crate::transport::VolumeByTag;
 
 pub use crate::skeleton::process::ProcessEngine;
@@ -98,12 +98,19 @@ impl<P: BsfProblem> Engine<P> for SerialEngine {
         // Step 1: the single worker's static sublist is the whole list.
         let elems: Vec<P::MapElem> = (0..n).map(|i| problem.map_list_elem(i)).collect();
 
+        // The intra-worker tier also applies at K=1: one persistent
+        // chunk pool for the whole run (the paper's pure-OpenMP corner
+        // of the hybrid grid).
+        let pool = intra_worker_pool(cfg);
+
         let mut param = problem.init_parameter();
         problem.parameters_output(&param);
 
         let t0 = Instant::now();
         let mut timers = PhaseTimers::new();
         let mut map_seconds = 0.0f64;
+        let mut max_chunk_seconds = 0.0f64;
+        let mut merge_seconds = 0.0f64;
         let mut job = 0usize;
         let mut iter = 0usize;
 
@@ -115,20 +122,16 @@ impl<P: BsfProblem> Engine<P> for SerialEngine {
             let tm = Instant::now();
             let mapped = timers.time(Phase::Gather, || {
                 std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    map_and_fold(
-                        &*problem,
-                        &*backend,
-                        &elems,
-                        &param,
-                        vars,
-                        cfg.openmp_threads,
-                    )
+                    map_and_fold(&*problem, &*backend, &elems, &param, vars, pool.as_ref())
                 }))
             });
-            let merged = match mapped {
-                Ok(fold) => fold,
+            let mapped = match mapped {
+                Ok(mapped) => mapped,
                 Err(_) => return Err(BsfError::WorkerPanic { rank: 0 }),
             };
+            max_chunk_seconds += mapped.max_chunk_seconds;
+            merge_seconds += mapped.merge_seconds;
+            let merged = mapped.fold;
             map_seconds += tm.elapsed().as_secs_f64();
 
             // Steps 7-9 (master side): the shared decision step.
@@ -174,6 +177,9 @@ impl<P: BsfProblem> Engine<P> for SerialEngine {
                         iterations: iter,
                         map_seconds,
                         sublist_length: n,
+                        threads: cfg.openmp_threads.max(1),
+                        max_chunk_seconds,
+                        merge_seconds,
                     }],
                     messages: 0,
                     bytes: 0,

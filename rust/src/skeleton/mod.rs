@@ -25,6 +25,7 @@ pub mod backend;
 pub mod config;
 pub mod engine;
 pub mod master;
+pub mod pool;
 pub mod problem;
 pub mod process;
 pub mod reduce;
@@ -37,6 +38,7 @@ pub mod worker;
 pub mod workflow;
 
 pub use backend::{FusedNativeBackend, MapBackend, PerElementBackend};
+pub use pool::ChunkPool;
 pub use config::BsfConfig;
 pub use engine::{
     AutoEngine, Engine, ProcessEngine, SerialEngine, SimulatedEngine, ThreadedEngine,

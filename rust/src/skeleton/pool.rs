@@ -1,0 +1,281 @@
+//! Intra-worker chunk pool — the paper's OpenMP tier (`PP_BSF_OMP` /
+//! `PP_BSF_NUM_THREADS`) as a **persistent, std-only thread pool**.
+//!
+//! The seed-era OpenMP analog spawned scoped threads *per iteration*,
+//! paying thread creation on every Map. A [`ChunkPool`] is created once
+//! per worker (when `BsfConfig::openmp_threads > 1`) and reused for the
+//! whole run: each iteration fans the sublist's chunks out over the
+//! same `T` threads — the second level of the paper's MPI × OpenMP grid
+//! (`--workers K --threads-per-worker T` on the CLI).
+//!
+//! Contract:
+//!
+//! * **Determinism** — [`ChunkPool::run`] returns results in job order
+//!   regardless of completion order, so the chunk-order merge in
+//!   [`par_map`](crate::skeleton::backend::MapBackend::par_map) is
+//!   bit-identical run to run (thread scheduling never reassociates ⊕).
+//! * **Panic transparency** — a panic inside a job is caught on the pool
+//!   thread, carried back, and resumed on the *calling* thread after
+//!   every job of the batch has finished. To the worker loop a panicking
+//!   chunk looks exactly like a panicking un-split map, so the existing
+//!   panic → `Tag::Abort` → [`BsfError::WorkerPanic`]
+//!   (crate::error::BsfError::WorkerPanic) contract holds unchanged.
+//! * **Borrowed data** — jobs may borrow the sublist/param (they are not
+//!   `'static`); `run` does not return (or unwind) until every submitted
+//!   job has completed, so the borrows stay valid for the whole parallel
+//!   region (the scoped-threads guarantee, on a persistent pool).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A type-erased, lifetime-erased job (see the safety argument in
+/// [`ChunkPool::run`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool of worker threads that executes batches of chunk
+/// jobs. One pool per BSF worker; dropped (threads joined) when the
+/// worker's run ends.
+pub struct ChunkPool {
+    threads: usize,
+    /// `Some` while the pool accepts work; taken on drop to disconnect
+    /// the channel and let the threads exit their recv loops.
+    tx: Option<Sender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ChunkPool {
+    /// Spawn a pool of `threads` workers (floored at 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("bsf-pool-{i}"))
+                    .spawn(move || pool_thread(&rx))
+                    .expect("spawn bsf pool thread")
+            })
+            .collect();
+        Self { threads, tx: Some(tx), handles }
+    }
+
+    /// Number of threads in the pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` on the pool, blocking until **every** job finished,
+    /// and return their results in job order (not completion order).
+    ///
+    /// If any job panicked, the first panic (in job order) is resumed on
+    /// the calling thread — after the whole batch completed, so borrowed
+    /// data stays valid for the full parallel region.
+    pub fn run<'env, T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (done_tx, done_rx) = channel::<(usize, std::thread::Result<T>)>();
+        // The drain guard blocks (in its Drop) until every job submitted
+        // so far has reported back. This is what makes the lifetime
+        // erasure below sound even if submission itself unwinds: no exit
+        // from this function — normal or panicking — can leave a job
+        // running with borrows of `'env` data.
+        let mut drain = DrainGuard { rx: &done_rx, pending: 0 };
+        let tx = self.tx.as_ref().expect("pool accepts work until dropped");
+        for (i, job) in jobs.into_iter().enumerate() {
+            let done = done_tx.clone();
+            let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(job));
+                // The receiver outlives the batch (held by DrainGuard),
+                // so this send only fails if the caller's thread died —
+                // in which case there is nobody left to notify.
+                let _ = done.send((i, result));
+            });
+            // SAFETY: `task` borrows data of lifetime `'env`. The
+            // DrainGuard guarantees this function does not return or
+            // unwind past this frame until the pool has executed the
+            // task and sent its completion (the wrapper always sends,
+            // panics included), so the erased borrows never outlive
+            // `'env`.
+            #[allow(clippy::useless_transmute)] // lifetime erasure, not a no-op
+            let task: Task =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task) };
+            drain.pending += 1;
+            tx.send(task).expect("bsf pool threads alive while pool exists");
+        }
+        drop(done_tx);
+
+        let mut slots: Vec<Option<std::thread::Result<T>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, result) = done_rx
+                .recv()
+                .expect("every submitted job reports completion");
+            drain.pending -= 1;
+            slots[i] = Some(result);
+        }
+        std::mem::forget(drain); // fully drained; nothing left to guard
+
+        let mut out = Vec::with_capacity(n);
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for slot in slots {
+            match slot.expect("completion recorded for every job") {
+                Ok(v) => out.push(v),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+        out
+    }
+}
+
+/// Blocks on drop until `pending` completions have been received — the
+/// soundness backstop for [`ChunkPool::run`]'s lifetime erasure.
+struct DrainGuard<'a, T> {
+    rx: &'a Receiver<(usize, std::thread::Result<T>)>,
+    pending: usize,
+}
+
+impl<T> Drop for DrainGuard<'_, T> {
+    fn drop(&mut self) {
+        while self.pending > 0 {
+            match self.rx.recv() {
+                Ok(_) => self.pending -= 1,
+                // Disconnected: every wrapper (sender clone) is gone,
+                // so no job can still be running.
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+fn pool_thread(rx: &Mutex<Receiver<Task>>) {
+    loop {
+        // Hold the lock only around the dequeue, never while running a
+        // task, so one long chunk cannot serialize the others. The lock
+        // cannot be poisoned (recv does not panic; tasks run outside
+        // it), but recover defensively anyway.
+        let task = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(poisoned) => poisoned.into_inner().recv(),
+        };
+        match task {
+            Ok(task) => task(),
+            Err(_) => break, // pool dropped: sender disconnected
+        }
+    }
+}
+
+impl Drop for ChunkPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_come_back_in_job_order() {
+        let pool = ChunkPool::new(4);
+        // Reverse sleeps so completion order opposes job order.
+        let out = pool.run(
+            (0..8usize)
+                .map(|i| {
+                    move || {
+                        std::thread::sleep(std::time::Duration::from_millis(
+                            (8 - i as u64) * 2,
+                        ));
+                        i * 10
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let pool = ChunkPool::new(2);
+        for round in 0..5usize {
+            let out = pool.run((0..4usize).map(|i| move || round + i).collect());
+            assert_eq!(out, vec![round, round + 1, round + 2, round + 3]);
+        }
+    }
+
+    #[test]
+    fn jobs_may_borrow_non_static_data() {
+        let pool = ChunkPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let chunks: Vec<&[u64]> = data.chunks(34).collect();
+        let sums = pool.run(
+            chunks
+                .iter()
+                .map(|c| {
+                    let c: &[u64] = c;
+                    move || c.iter().sum::<u64>()
+                })
+                .collect(),
+        );
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn panic_in_one_job_resumes_on_caller_after_batch_completes() {
+        let pool = ChunkPool::new(2);
+        let completed = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(
+                (0..4usize)
+                    .map(|i| {
+                        let completed = &completed;
+                        move || {
+                            if i == 1 {
+                                panic!("chunk {i} failed");
+                            }
+                            completed.fetch_add(1, Ordering::SeqCst);
+                            i
+                        }
+                    })
+                    .collect(),
+            )
+        }));
+        assert!(result.is_err(), "the job's panic must reach the caller");
+        // Every non-panicking job of the batch still ran to completion.
+        assert_eq!(completed.load(Ordering::SeqCst), 3);
+        // The pool survives a panicked batch.
+        assert_eq!(pool.run(vec![|| 7usize]), vec![7]);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let pool = ChunkPool::new(2);
+        let out: Vec<usize> = pool.run(Vec::<fn() -> usize>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn thread_count_floors_at_one() {
+        assert_eq!(ChunkPool::new(0).threads(), 1);
+        assert_eq!(ChunkPool::new(6).threads(), 6);
+    }
+}

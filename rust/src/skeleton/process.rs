@@ -193,9 +193,31 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ProcessEngine {
         let mut workers = Vec::with_capacity(k);
         for w in 0..k {
             let m = master_ep.recv(w, TAG_WORKER_REPORT)?;
-            let (rank, iterations, map_seconds, sublist_length) =
-                <(usize, usize, f64, usize)>::from_bytes(&m.payload);
-            workers.push(WorkerReport { rank, iterations, map_seconds, sublist_length });
+            // 4 + 3 fixed-width (8-byte) fields; a short/long payload
+            // means a version-skewed worker binary (the HELLO handshake
+            // carries no protocol version) — reject it typed instead of
+            // letting the codec index out of bounds.
+            type Wire = ((usize, usize, f64, usize), (usize, f64, f64));
+            const WIRE_BYTES: usize = 7 * 8;
+            if m.payload.len() != WIRE_BYTES {
+                return Err(BsfError::transport(format!(
+                    "worker {w} report is {} bytes, expected {WIRE_BYTES} \
+                     (mixed-version worker binary?)",
+                    m.payload.len()
+                )));
+            }
+            let ((rank, iterations, map_seconds, sublist_length), wire_hybrid) =
+                Wire::from_bytes(&m.payload);
+            let (threads, max_chunk_seconds, merge_seconds) = wire_hybrid;
+            workers.push(WorkerReport {
+                rank,
+                iterations,
+                map_seconds,
+                sublist_length,
+                threads,
+                max_chunk_seconds,
+                merge_seconds,
+            });
         }
         workers.sort_by_key(|w| w.rank);
 
@@ -242,7 +264,10 @@ pub fn run_process_worker<P: BsfProblem>(
     ep.send(
         ep.master_rank(),
         TAG_WORKER_REPORT,
-        (report.rank, report.iterations, report.map_seconds, report.sublist_length)
+        (
+            (report.rank, report.iterations, report.map_seconds, report.sublist_length),
+            (report.threads, report.max_chunk_seconds, report.merge_seconds),
+        )
             .to_bytes(),
     )?;
     Ok(report)

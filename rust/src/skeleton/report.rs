@@ -105,6 +105,23 @@ impl<Param> RunReport<Param> {
         }
     }
 
+    /// One-line summary of the intra-worker tier (empty when every
+    /// worker ran single-threaded): thread count, the parallel map's
+    /// critical path (mean over workers of the summed slowest-chunk
+    /// seconds) and the local merge cost.
+    pub fn hybrid_summary(&self) -> String {
+        let threads = self.workers.iter().map(|w| w.threads).max().unwrap_or(1);
+        if threads <= 1 {
+            return String::new();
+        }
+        let kf = self.workers.len() as f64;
+        let max_chunk: f64 = self.workers.iter().map(|w| w.max_chunk_seconds).sum::<f64>() / kf;
+        let merge: f64 = self.workers.iter().map(|w| w.merge_seconds).sum::<f64>() / kf;
+        format!(
+            "threads/worker={threads} map-critical-path={max_chunk:.6}s local-merge={merge:.6}s"
+        )
+    }
+
     /// One-line human summary of the run (the CLI's standard output).
     pub fn summary(&self) -> String {
         match self.clock {
@@ -158,9 +175,29 @@ mod tests {
             iterations: 4,
             map_seconds,
             sublist_length: 10,
+            threads: 1,
+            max_chunk_seconds: 0.0,
+            merge_seconds: 0.0,
         };
         let r = report(vec![w(0, 2.0), w(1, 6.0)], 4);
         assert!((r.mean_worker_map_secs_per_iter() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hybrid_summary_only_speaks_for_hybrid_runs() {
+        let w = |threads| WorkerReport {
+            rank: 0,
+            iterations: 2,
+            map_seconds: 1.0,
+            sublist_length: 10,
+            threads,
+            max_chunk_seconds: 0.5,
+            merge_seconds: 0.25,
+        };
+        assert_eq!(report(vec![w(1)], 2).hybrid_summary(), "");
+        let s = report(vec![w(4)], 2).hybrid_summary();
+        assert!(s.contains("threads/worker=4"), "{s}");
+        assert!(s.contains("map-critical-path=0.5"), "{s}");
     }
 
     #[test]

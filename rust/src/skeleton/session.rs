@@ -75,6 +75,13 @@ impl<P: BsfProblem> Bsf<P> {
         self
     }
 
+    /// Alias for [`openmp`](Self::openmp) in the hybrid-mode spelling:
+    /// `.workers(K).threads_per_worker(T)` is the paper's MPI × OpenMP
+    /// grid.
+    pub fn threads_per_worker(self, threads: usize) -> Self {
+        self.openmp(threads)
+    }
+
     /// Convenience: set the iteration cap.
     pub fn max_iter(mut self, cap: usize) -> Self {
         self.cfg.max_iter = cap;

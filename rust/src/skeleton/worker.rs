@@ -9,23 +9,32 @@
 //! partial fold, and waits for the exit flag.
 //!
 //! The map loop supports the paper's OpenMP mode (`PP_BSF_OMP` /
-//! `PP_BSF_NUM_THREADS`): with `openmp_threads > 1` the sublist is
-//! block-split over scoped threads, each producing a partial fold that is
-//! then folded locally — semantically identical because ⊕ is associative.
+//! `PP_BSF_NUM_THREADS`): with `openmp_threads > 1` the worker owns a
+//! persistent [`ChunkPool`] of `T` threads for the whole run and fans
+//! each iteration's sublist out as block chunks through the backend's
+//! [`par_map`](crate::skeleton::backend::MapBackend::par_map), merging
+//! the chunk partials in chunk order — semantically identical because ⊕
+//! is associative, and deterministic because the merge order never
+//! depends on thread scheduling. This is the intra-worker level of the
+//! two-level (MPI × OpenMP) grid: `--workers K --threads-per-worker T`.
 
 use std::time::Instant;
 
 use crate::error::BsfError;
 use crate::skeleton::backend::MapBackend;
 use crate::skeleton::config::BsfConfig;
+use crate::skeleton::pool::ChunkPool;
 use crate::skeleton::problem::BsfProblem;
-use crate::skeleton::reduce::{fold_extended, merge_folds, ExtendedFold};
-use crate::skeleton::split::{all_ranges, sublist_range};
+use crate::skeleton::reduce::{fold_extended, ExtendedFold};
+use crate::skeleton::split::sublist_range;
 use crate::skeleton::variables::SkelVars;
 use crate::transport::{Communicator, Tag};
 use crate::util::codec::Codec;
 
-/// Per-worker run summary (used by cost-model calibration).
+/// Per-worker run summary (used by cost-model calibration, the unified
+/// [`RunReport`](crate::skeleton::report::RunReport) and the bench
+/// harness). The thread-level fields describe the intra-worker parallel
+/// tier; with `threads == 1` they are zero.
 #[derive(Debug, Clone)]
 pub struct WorkerReport {
     pub rank: usize,
@@ -34,6 +43,38 @@ pub struct WorkerReport {
     pub map_seconds: f64,
     /// Sublist length this worker was appointed.
     pub sublist_length: usize,
+    /// Intra-worker map threads (`BsfConfig::openmp_threads`) this
+    /// worker ran with.
+    pub threads: usize,
+    /// Critical-path seconds of the parallel map: per iteration, the
+    /// wall time of the slowest chunk; summed over iterations. The gap
+    /// `map_seconds - max_chunk_seconds - merge_seconds` is the fork
+    /// overhead + scheduling slack of the intra-worker tier.
+    pub max_chunk_seconds: f64,
+    /// Seconds merging chunk partials locally (the worker-side tree
+    /// reduce), summed over iterations.
+    pub merge_seconds: f64,
+}
+
+/// Result of one worker-side Map + local Reduce, with the intra-worker
+/// timing the hybrid tier adds ([`WorkerReport`] accumulates these).
+#[derive(Debug, Clone)]
+pub struct MapFold<R> {
+    /// The partial fold (`s_j` of Algorithm 2).
+    pub fold: ExtendedFold<R>,
+    /// Number of chunks the sublist was split into (1 = unchunked).
+    pub chunks: usize,
+    /// Wall seconds of the slowest chunk (0 when unchunked).
+    pub max_chunk_seconds: f64,
+    /// Wall seconds merging the chunk partials (0 when unchunked).
+    pub merge_seconds: f64,
+}
+
+impl<R> MapFold<R> {
+    /// Wrap an unchunked fold.
+    pub fn unchunked(fold: ExtendedFold<R>) -> Self {
+        Self { fold, chunks: 1, max_chunk_seconds: 0.0, merge_seconds: 0.0 }
+    }
 }
 
 /// Run the worker loop over `comm` until the master signals exit.
@@ -55,8 +96,26 @@ pub fn run_worker<P: BsfProblem>(
     let elems: Vec<P::MapElem> =
         (offset..offset + len).map(|i| problem.map_list_elem(i)).collect();
 
+    // The intra-worker tier: one persistent pool for the whole run
+    // (threads spawned once, reused every iteration).
+    let pool = intra_worker_pool(cfg);
+
     let mut map_seconds = 0.0;
+    let mut max_chunk_seconds = 0.0;
+    let mut merge_seconds = 0.0;
     let mut iterations = 0usize;
+
+    let report = |iterations: usize, map_seconds: f64, max_chunk: f64, merge: f64| {
+        WorkerReport {
+            rank,
+            iterations,
+            map_seconds,
+            sublist_length: len,
+            threads: cfg.openmp_threads.max(1),
+            max_chunk_seconds: max_chunk,
+            merge_seconds: merge,
+        }
+    };
 
     loop {
         // Step 2: RecvFromMaster(x^(i)). An exit order can also arrive
@@ -66,12 +125,7 @@ pub fn run_worker<P: BsfProblem>(
         let m = comm.recv_tags(Some(master), &[Tag::Order, Tag::Exit])?;
         if m.tag == Tag::Exit {
             if bool::from_bytes(&m.payload) {
-                return Ok(WorkerReport {
-                    rank,
-                    iterations,
-                    map_seconds,
-                    sublist_length: len,
-                });
+                return Ok(report(iterations, map_seconds, max_chunk_seconds, merge_seconds));
             }
             return Err(BsfError::transport(format!(
                 "worker {rank}: unexpected exit=false instead of an order"
@@ -82,31 +136,40 @@ pub fn run_worker<P: BsfProblem>(
         // Steps 3-4: B_j := Map(F, A_j); s_j := Reduce(⊕, B_j).
         let vars = SkelVars::for_worker(rank, k, offset, len, iterations, job);
         let t0 = Instant::now();
-        let fold =
-            map_and_fold(problem, backend, &elems, &param, vars, cfg.openmp_threads);
+        let mapped = map_and_fold(problem, backend, &elems, &param, vars, pool.as_ref());
         map_seconds += t0.elapsed().as_secs_f64();
+        max_chunk_seconds += mapped.max_chunk_seconds;
+        merge_seconds += mapped.merge_seconds;
         iterations += 1;
 
         // Step 5: SendToMaster(s_j).
+        let fold = mapped.fold;
         comm.send(master, Tag::Fold, (fold.value, fold.counter).to_bytes())?;
 
         // Step 10: RecvFromMaster(exit).
         let exit = bool::from_bytes(&comm.recv(master, Tag::Exit)?.payload);
         if exit {
-            return Ok(WorkerReport {
-                rank,
-                iterations,
-                map_seconds,
-                sublist_length: len,
-            });
+            return Ok(report(iterations, map_seconds, max_chunk_seconds, merge_seconds));
         }
+    }
+}
+
+/// The worker's intra-worker pool per its config: `None` when the
+/// hybrid tier is off (`openmp_threads <= 1`).
+pub fn intra_worker_pool(cfg: &BsfConfig) -> Option<ChunkPool> {
+    if cfg.openmp_threads > 1 {
+        Some(ChunkPool::new(cfg.openmp_threads))
+    } else {
+        None
     }
 }
 
 /// [`run_worker`] wrapped in the skeleton's panic contract: a panic in
 /// user map/reduce code must not strand the master mid-gather, so it is
 /// caught here, reported over the transport as [`Tag::Abort`], and
-/// surfaced as a typed [`BsfError::WorkerPanic`].
+/// surfaced as a typed [`BsfError::WorkerPanic`]. Panics inside pool
+/// threads take the same path: [`ChunkPool::run`] resumes them on the
+/// worker thread, where this catch converts them.
 ///
 /// This one function drives the worker endpoint of **every** transport —
 /// the thread runner spawns it on a `ThreadEndpoint`, the process engine
@@ -133,9 +196,12 @@ pub fn run_worker_guarded<P: BsfProblem>(
 
 /// `BC_WorkerMap` + `BC_WorkerReduce`: map the sublist and fold locally.
 ///
-/// The `backend` may fuse the whole sublist into one call (native fused
-/// kernel or AOT XLA executable); otherwise the faithful per-element loop
-/// runs, block-split over `threads` scoped threads when `threads > 1`.
+/// With a [`ChunkPool`] attached (the hybrid tier), the backend's
+/// [`par_map`](MapBackend::par_map) block-splits the sublist over the
+/// pool and merges chunk partials in chunk order. Without one, the
+/// `backend` may fuse the whole sublist into one call (native fused
+/// kernel or AOT XLA executable); otherwise the faithful per-element
+/// loop runs.
 ///
 /// Public (crate-wide) because the simulated cluster and the cost-model
 /// calibration execute exactly the same worker computation.
@@ -145,47 +211,31 @@ pub fn map_and_fold<P: BsfProblem>(
     elems: &[P::MapElem],
     param: &P::Param,
     vars: SkelVars,
-    threads: usize,
-) -> ExtendedFold<P::ReduceElem> {
+    pool: Option<&ChunkPool>,
+) -> MapFold<P::ReduceElem> {
+    // The intra-worker parallel tier (the paper's OpenMP mode).
+    if let Some(pool) = pool {
+        if pool.threads() > 1 && elems.len() >= 2 {
+            return backend.par_map(problem, elems, param, &vars, pool);
+        }
+    }
+
     // Fused path: the backend may map the whole sublist in one call.
     if let Some((value, counter)) = backend.map_sublist(problem, elems, param, &vars) {
-        return ExtendedFold { value, counter };
+        return MapFold::unchunked(ExtendedFold { value, counter });
     }
 
-    if threads <= 1 || elems.len() < 2 {
-        return fold_chunk(problem, elems, param, vars, 0, vars.job_case);
-    }
-
-    // OpenMP-analog: block-split the sublist over scoped threads.
-    let job = vars.job_case;
-    let ranges = all_ranges(elems.len(), threads.min(elems.len()));
-    let partials: Vec<ExtendedFold<P::ReduceElem>> = std::thread::scope(|s| {
-        let handles: Vec<_> = ranges
-            .iter()
-            .filter(|&&(_, l)| l > 0)
-            .map(|&(off, l)| {
-                s.spawn(move || {
-                    fold_chunk(problem, &elems[off..off + l], param, vars, off, job)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| match h.join() {
-                Ok(f) => f,
-                // A panic in user map code: resume it on the worker thread
-                // so it surfaces exactly as an un-split map would.
-                Err(payload) => std::panic::resume_unwind(payload),
-            })
-            .collect()
-    });
-    merge_folds(partials, |a, b| problem.reduce_f(a, b, job))
+    MapFold::unchunked(fold_chunk(problem, elems, param, vars, 0, vars.job_case))
 }
 
 /// Serial map+fold over a chunk; `rel_base` is the chunk's offset within
 /// the worker's sublist so `number_in_sublist` matches the paper's
 /// sublist-relative numbering even under intra-worker threading.
-fn fold_chunk<P: BsfProblem>(
+///
+/// Public (crate-wide): this is the per-element fallback of
+/// [`MapBackend::par_map`]'s chunk jobs as well as the unchunked loop
+/// above.
+pub(crate) fn fold_chunk<P: BsfProblem>(
     problem: &P,
     elems: &[P::MapElem],
     param: &P::Param,

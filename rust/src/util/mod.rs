@@ -1,8 +1,10 @@
-//! Support code: PRNG, codec, dense matrices, stats, CLI parsing and the
-//! in-tree property-testing harness.
+//! Support code: PRNG, codec, dense matrices, stats, CLI parsing, a
+//! minimal JSON reader/writer (for the machine-readable bench harness)
+//! and the in-tree property-testing harness.
 
 pub mod cli;
 pub mod codec;
+pub mod json;
 pub mod mat;
 pub mod qcheck;
 pub mod rng;

@@ -268,10 +268,8 @@ fn prop_sim_virtual_time_monotone_in_latency() {
         let seed = rng.next();
         let vt = |latency: f64| {
             let (p, _) = JacobiProblem::random(n, 1e-30, seed);
-            let sim = SimConfig {
-                profile: ClusterProfile { latency, byte_time: 1e-9 },
-                compute: bsf::simcluster::ComputeTime::PerElement(1e-6),
-            };
+            let sim = SimConfig::new(ClusterProfile { latency, byte_time: 1e-9 })
+                .per_element(1e-6);
             let r = Bsf::new(p)
                 .workers(k)
                 .max_iter(5)
