@@ -1,6 +1,8 @@
 //! Distributed quickstart: the same Jacobi solve on real worker **OS
 //! processes** (the paper's `BC_MpiRun` launch model, Fig. 1) next to a
-//! threaded run — one binary, three processes, identical numerics.
+//! threaded run — one binary, three processes, identical numerics —
+//! and then on a **persistent cluster** that reuses the same worker
+//! processes for consecutive runs (the spawn/connect amortization).
 //!
 //! ```bash
 //! cargo run --release --example distributed_quickstart
@@ -11,10 +13,14 @@
 //! rebuilds the identical problem (same constants), connects to the
 //! master's ephemeral TCP port, and drives Algorithm 2's worker loop —
 //! exactly what `bsf run <p> --engine process` does with `bsf worker`.
+//! `Cluster::spawn` additionally passes `--persist`, turning the child
+//! into a NEWRUN/SHUTDOWN-serving persistent worker (`bsf worker
+//! --persist`).
 
 use bsf::problems::jacobi::JacobiProblem;
+use bsf::skeleton::cluster::run_persistent_worker;
 use bsf::skeleton::process::run_process_worker;
-use bsf::skeleton::{Bsf, FusedNativeBackend, ProcessEngine, ThreadedEngine};
+use bsf::skeleton::{Bsf, Cluster, FusedNativeBackend, ProcessEngine, ThreadedEngine};
 use bsf::util::cli::ArgMap;
 use bsf::{BsfConfig, BsfError, RunReport};
 
@@ -65,6 +71,29 @@ fn main() -> Result<(), BsfError> {
         threaded.param, process.param,
         "rank-ordered fold + lossless codec must make the engines bit-identical"
     );
+
+    // Persistent cluster: spawn + connect + handshake paid ONCE, then
+    // consecutive runs reuse the same worker processes (same pids) and
+    // their chunk pools — the per-request amortization a service needs.
+    let cluster = Cluster::spawn(WORKERS, ["worker"]).start(&problem())?;
+    let c1 = Bsf::new(problem()).workers(WORKERS).engine(cluster.engine()).run()?;
+    let c2 = Bsf::new(problem()).workers(WORKERS).engine(cluster.engine()).run()?;
+    row(&c1);
+    row(&c2);
+    assert_eq!(c1.param, threaded.param, "cluster runs match fresh-spawn numerics");
+    assert_eq!(c2.param, threaded.param);
+    for w in 0..WORKERS {
+        assert_eq!(
+            c1.workers[w].pid, c2.workers[w].pid,
+            "consecutive cluster runs must reuse the same worker process"
+        );
+    }
+    println!(
+        "  cluster reused worker pids {:?} across both runs",
+        c1.workers.iter().map(|w| w.pid).collect::<Vec<_>>()
+    );
+    cluster.shutdown()?;
+
     println!(
         "OK: identical result across {} real OS processes (K={WORKERS} workers + master, \
          ranks 0..{WORKERS} with the master at rank {WORKERS})",
@@ -73,7 +102,9 @@ fn main() -> Result<(), BsfError> {
     Ok(())
 }
 
-/// Worker-mode entry: this executable re-invoked by `ProcessEngine`.
+/// Worker-mode entry: this executable re-invoked by `ProcessEngine`
+/// (one-shot) or `Cluster::spawn` (`--persist`: serve runs until
+/// SHUTDOWN).
 fn worker_main(argv: Vec<String>) -> Result<(), BsfError> {
     let args = ArgMap::parse(argv);
     let connect = args
@@ -86,6 +117,10 @@ fn worker_main(argv: Vec<String>) -> Result<(), BsfError> {
         None => return Err(BsfError::usage("worker mode requires --rank")),
     };
     // K comes from the master's handshake; everything else is default.
-    run_process_worker(&problem(), &FusedNativeBackend, connect, rank, &BsfConfig::default())?;
+    if args.flag("persist") {
+        run_persistent_worker(&problem(), &FusedNativeBackend, connect, rank, &BsfConfig::default())?;
+    } else {
+        run_process_worker(&problem(), &FusedNativeBackend, connect, rank, &BsfConfig::default())?;
+    }
     Ok(())
 }

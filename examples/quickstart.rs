@@ -1,4 +1,4 @@
-//! Quickstart: solve a linear system with the BSF-skeleton in ~20 lines.
+//! Quickstart: solve a linear system with the BSF-skeleton in ~30 lines.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -6,7 +6,10 @@
 //!
 //! Mirrors the paper's step-by-step instruction: define the problem
 //! (Jacobi over a diagonally dominant system), pick a worker count, run —
-//! all through the unified `Bsf` session API.
+//! all through the unified `Bsf` session API. The run is driven through
+//! `iterate()`, the steerable form of `run()`: one typed event per
+//! master iteration, with a checkpoint taken mid-run just to show the
+//! `resume` round-trip.
 
 use bsf::problems::jacobi::JacobiProblem;
 use bsf::util::mat::dist2;
@@ -18,15 +21,33 @@ fn main() -> Result<(), BsfError> {
     let n = 256;
     let (problem, x_star) = JacobiProblem::random(n, 1e-20, 42);
 
-    // 2. Skeleton configuration: 4 workers + the master, tracing every
-    //    5 iterations (the paper's PP_BSF_ITER_OUTPUT / TRACE_COUNT).
-    let cfg = BsfConfig::with_workers(4).trace(5);
+    // 2. Skeleton configuration: 4 workers + the master (the paper's
+    //    PP_BSF_* parameters live on BsfConfig).
+    let cfg = BsfConfig::with_workers(4);
 
-    // 3. Run. The session handles everything parallel: list splitting,
-    //    order broadcast, Map+Reduce on workers, the stop condition.
-    //    (Engine and map backend are pluggable; the defaults pick the
-    //    threaded engine and the fused native map.)
-    let report = Bsf::new(problem).config(cfg).run()?;
+    // 3. Launch and stream the iterative process. `Bsf::run()` is the
+    //    one-shot form of exactly this loop; stepping it by hand makes
+    //    the skeleton's iteration structure visible and lets us
+    //    checkpoint between iterations.
+    let mut run = Bsf::new(problem).config(cfg).iterate()?;
+    let mut checkpoint = None;
+    while !run.stopped() {
+        let event = run.step()?;
+        if event.iter % 5 == 0 || event.stop.is_some() {
+            println!(
+                "iteration {:>3}: reduce_counter={} elapsed={:.3} ms{}",
+                event.iter,
+                event.reduce_counter,
+                event.elapsed * 1e3,
+                if event.stop.is_some() { "  (stop)" } else { "" }
+            );
+        }
+        if event.iter == 10 {
+            // The master's whole inter-iteration state: param + counters.
+            checkpoint = Some(run.checkpoint());
+        }
+    }
+    let report = run.finish()?;
 
     println!(
         "solved n={n} in {} iterations ({:.3} ms wall, engine={})",
@@ -43,6 +64,18 @@ fn main() -> Result<(), BsfError> {
     let err = dist2(&report.param, &x_star);
     println!("||x - x*||² = {err:.3e}");
     assert!(err < 1e-10, "did not converge to the known solution");
+
+    // 4. Resume from the mid-run checkpoint: bit-identical finish.
+    if let Some(ck) = checkpoint {
+        let (problem2, _) = JacobiProblem::random(n, 1e-20, 42);
+        let resumed = Bsf::new(problem2)
+            .config(BsfConfig::with_workers(4))
+            .resume(ck)
+            .run()?;
+        assert_eq!(resumed.param, report.param, "resume is bit-identical");
+        assert_eq!(resumed.iterations, report.iterations);
+        println!("resumed from iteration 10: bit-identical finish");
+    }
     println!("OK");
     Ok(())
 }

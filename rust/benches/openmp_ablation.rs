@@ -26,7 +26,7 @@ fn main() {
     let mut base = None;
     for threads in [1usize, 2, 4, 8] {
         let r = bench(format!("grav omp{threads}"), 1, 3, || {
-            let cfg = BsfConfig::with_workers(2).openmp(threads).max_iter(iters);
+            let cfg = BsfConfig::with_workers(2).threads_per_worker(threads).max_iter(iters);
             let _ = Bsf::from_arc(Arc::clone(&grav))
                 .config(cfg)
                 .map_backend(PerElementBackend)
@@ -50,7 +50,7 @@ fn main() {
     let mut base = None;
     for threads in [1usize, 2, 4, 8] {
         let r = bench(format!("jac omp{threads}"), 1, 3, || {
-            let cfg = BsfConfig::with_workers(2).openmp(threads).max_iter(iters);
+            let cfg = BsfConfig::with_workers(2).threads_per_worker(threads).max_iter(iters);
             let _ = Bsf::from_arc(Arc::clone(&jac))
                 .config(cfg)
                 .map_backend(PerElementBackend)

@@ -39,7 +39,8 @@ use crate::error::BsfError;
 use crate::problems::jacobi::JacobiProblem;
 use crate::problems::montecarlo::MonteCarloProblem;
 use crate::skeleton::{
-    Bsf, BsfConfig, BsfProblem, ProcessEngine, RunReport, SerialEngine, ThreadedEngine,
+    Bsf, BsfConfig, BsfProblem, Cluster, ProcessEngine, RunReport, SerialEngine,
+    ThreadedEngine,
 };
 use crate::util::json::Json;
 
@@ -59,7 +60,8 @@ const MC_TOL: f64 = 1e-3;
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchCase {
     pub problem: &'static str,
-    /// `serial` | `threaded` | `process`.
+    /// `serial` | `threaded` | `process` | `cluster` (persistent
+    /// worker processes — spawn/connect amortized across the samples).
     pub engine: &'static str,
     pub n: usize,
     pub workers: usize,
@@ -126,11 +128,18 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
     match mode {
         // NB: montecarlo cases carry eps = MC_TOL so a worker argv built
         // from the case always matches the master-side construction.
+        // The process/cluster pair at the same (problem, n, K, T) is
+        // the amortization scenario: `process` pays spawn + connect +
+        // handshake on every run; `cluster` pays it once outside the
+        // timed samples and reuses the same worker processes — the
+        // wall-clock gap between the two rows is the per-run launch
+        // cost a persistent cluster saves.
         "quick" => Ok(vec![
             case("jacobi", "serial", 96, 1, 1, 0),
             case("jacobi", "threaded", 96, 2, 1, 0),
             case("jacobi", "threaded", 96, 2, 2, 0),
             case("jacobi", "process", 96, 2, 2, 0),
+            case("jacobi", "cluster", 96, 2, 2, 0),
             mc_case(case("montecarlo", "serial", 64, 1, 1, 2000)),
             mc_case(case("montecarlo", "threaded", 64, 2, 2, 2000)),
         ]),
@@ -141,6 +150,7 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
             case("jacobi", "threaded", 384, 2, 2, 0),
             case("jacobi", "threaded", 384, 2, 4, 0),
             case("jacobi", "process", 384, 2, 2, 0),
+            case("jacobi", "cluster", 384, 2, 2, 0),
             mc_case(case("montecarlo", "serial", 128, 1, 1, 20_000)),
             mc_case(case("montecarlo", "threaded", 128, 2, 2, 20_000)),
             mc_case(case("montecarlo", "threaded", 128, 4, 2, 20_000)),
@@ -178,6 +188,20 @@ fn run_problem<P: BsfProblem>(
         .threads_per_worker(case.threads_per_worker)
         .max_iter(case.max_iter);
 
+    // A cluster case spawns its persistent workers ONCE, outside the
+    // timed samples: every run below reuses the same processes and
+    // chunk pools — the amortized-launch scenario this engine row
+    // demonstrates against the fresh-spawn `process` row.
+    let cluster = if case.engine == "cluster" {
+        let mut spec = Cluster::spawn(case.workers, worker_args(case));
+        if let Some(bin) = bsf_bin {
+            spec = spec.program(bin);
+        }
+        Some(spec.start(&*problem)?)
+    } else {
+        None
+    };
+
     let run_once = || -> Result<RunReport<P::Param>, BsfError> {
         let session = Bsf::from_arc(Arc::clone(&problem)).config(cfg.clone());
         match case.engine {
@@ -189,6 +213,10 @@ fn run_problem<P: BsfProblem>(
                     engine = engine.program(bin);
                 }
                 session.engine(engine).run()
+            }
+            "cluster" => {
+                let cluster = cluster.as_ref().expect("cluster started above");
+                session.engine(cluster.engine()).run()
             }
             other => Err(BsfError::bench(format!("unknown bench engine {other:?}"))),
         }
@@ -210,6 +238,9 @@ fn run_problem<P: BsfProblem>(
     });
     if let Some(e) = failure {
         return Err(e);
+    }
+    if let Some(cluster) = cluster {
+        cluster.shutdown()?;
     }
     let report = last.ok_or_else(|| BsfError::bench("bench produced no run report"))?;
     Ok(BenchRecord {
@@ -354,6 +385,7 @@ impl BenchSuite {
                 "serial" => "serial",
                 "threaded" => "threaded",
                 "process" => "process",
+                "cluster" => "cluster",
                 other => {
                     return Err(BsfError::bench(format!("unknown engine {other:?} in record")))
                 }
@@ -521,6 +553,22 @@ mod tests {
         assert!(quick.iter().any(|c| c.engine == "process"));
         assert!(grid("full").unwrap().len() > quick.len());
         assert!(grid("nope").is_err());
+        // Every process case has its amortized cluster twin at the same
+        // (problem, n, K, T) — the spawn/connect-saving comparison.
+        for mode in ["quick", "full"] {
+            let cases = grid(mode).unwrap();
+            for p in cases.iter().filter(|c| c.engine == "process") {
+                assert!(
+                    cases.iter().any(|c| c.engine == "cluster"
+                        && c.problem == p.problem
+                        && c.n == p.n
+                        && c.workers == p.workers
+                        && c.threads_per_worker == p.threads_per_worker),
+                    "{mode}: process case {} has no cluster twin",
+                    p.key()
+                );
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub enum BsfError {
         /// Rank of the worker whose thread died.
         rank: usize,
     },
+    /// The run was aborted between iterations by its
+    /// [`CancelToken`](crate::skeleton::driver::CancelToken). Workers
+    /// were released (exit broadcast) before this error surfaced.
+    Cancelled,
     /// Artifact registry problems: malformed `manifest.tsv`, unknown
     /// artifact name, output-shape mismatch.
     Artifact(String),
@@ -93,6 +97,9 @@ impl fmt::Display for BsfError {
             BsfError::Transport(msg) => write!(f, "transport error: {msg}"),
             BsfError::WorkerPanic { rank } => {
                 write!(f, "worker {rank} panicked in user map/reduce code")
+            }
+            BsfError::Cancelled => {
+                write!(f, "run cancelled between iterations (workers released)")
             }
             BsfError::Artifact(msg) => write!(f, "artifact error: {msg}"),
             BsfError::Xla(msg) => write!(f, "xla error: {msg}"),

@@ -22,6 +22,16 @@
 //! # Ok::<(), bsf::BsfError>(())
 //! ```
 //!
+//! Runs are **iteration-structured**: `Bsf::iterate()` returns a
+//! streaming [`BsfRun`] yielding one typed [`IterationEvent`] per
+//! master iteration (`run()` is the loop-to-completion convenience on
+//! the same driver). A [`StopPolicy`] adds declarative stops (iteration
+//! cap, engine-clock deadline, predicate), a [`CancelToken`] aborts
+//! between iterations with [`BsfError::Cancelled`], and a [`Checkpoint`]
+//! taken between steps resumes via `Bsf::resume` bit-identically.
+//! [`Cluster`] keeps worker OS processes alive across consecutive runs,
+//! amortizing spawn/connect (see `skeleton::cluster`).
+//!
 //! A session owns three pluggable pieces:
 //!
 //! * an **engine** ([`skeleton::Engine`]) — [`skeleton::ThreadedEngine`]
@@ -69,9 +79,10 @@
 //!   timers and support code (the offline build has no criterion/clap/
 //!   proptest; see Cargo.toml).
 //!
-//! See README.md for the migration table from the seed-era entry points
-//! (`run_threaded` / `run_simulated` / `bench::sweep`) to the session
-//! API.
+//! See README.md ("Session lifecycle") for run vs. iterate vs. resume
+//! and the migration table from the seed-era one-shot entry points
+//! (`run_threaded` / `run_simulated`, deleted in favor of the session
+//! API).
 
 pub mod bench;
 pub mod costmodel;
@@ -86,7 +97,8 @@ pub mod util;
 
 pub use error::{BsfError, BsfResult};
 pub use skeleton::{
-    Bsf, BsfConfig, BsfProblem, Clock, Engine, FusedNativeBackend, MapBackend,
+    Bsf, BsfConfig, BsfProblem, BsfRun, CancelToken, Checkpoint, Clock, Cluster,
+    ClusterEngine, Driver, Engine, FusedNativeBackend, IterationEvent, MapBackend,
     PerElementBackend, PhaseBreakdown, ProcessEngine, RunReport, SerialEngine,
-    SimulatedEngine, ThreadedEngine,
+    SimulatedEngine, StopPolicy, StopReason, ThreadedEngine,
 };

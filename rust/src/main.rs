@@ -42,10 +42,11 @@ use bsf::problems::montecarlo::MonteCarloProblem;
 use bsf::runtime::backend::{XlaMapBackend, XlaMapSpec};
 use bsf::runtime::service::XlaService;
 use bsf::runtime::XlaRuntime;
+use bsf::skeleton::cluster::run_persistent_worker;
 use bsf::skeleton::process::run_process_worker;
 use bsf::skeleton::{
-    Bsf, BsfConfig, BsfProblem, FusedNativeBackend, PerElementBackend, ProcessEngine,
-    RunReport, SerialEngine, SimulatedEngine, ThreadedEngine,
+    Bsf, BsfConfig, BsfProblem, FusedNativeBackend, MapBackend, PerElementBackend,
+    ProcessEngine, RunReport, SerialEngine, SimulatedEngine, ThreadedEngine,
 };
 use bsf::util::cli::ArgMap;
 
@@ -66,6 +67,8 @@ options by subcommand:
     --eps E        stop threshold (default 1e-12)
     --trace T      print intermediate results every T iterations
     --max-iter I   iteration cap (default 100000)
+    --deadline S   stop after S seconds on the engine's clock (checked
+                   between iterations; the running iteration completes)
     --engine E     auto | serial | threaded | process | sim  (run only)
     --listen A     with --engine process: bind A (host:port) and wait
                    for K pre-started `bsf worker` processes instead of
@@ -81,6 +84,9 @@ options by subcommand:
     --problem P    problem name, required; problem options (--n --seed
                    --eps --steps --samples --threads-per-worker
                    --backend) must match the master's
+    --persist      stay alive across runs: serve a persistent cluster
+                   (NEWRUN/SHUTDOWN protocol) instead of exiting after
+                   one run — the worker side of Cluster::spawn/connect
   sweep:
     --n N (default 512)  --k 1,2,4,...  --seed S  --profile P
     --max-iter I (default 30)  --steps S (gravity; default: max-iter)
@@ -171,10 +177,29 @@ fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
     } else {
         args.usize_or("omp", 1)?
     };
-    let cfg = BsfConfig::with_workers(k)
+    let mut cfg = BsfConfig::with_workers(k)
         .threads_per_worker(threads)
         .trace(args.usize_or("trace", 0)?)
         .max_iter(args.usize_or("max-iter", 100_000)?);
+    if args.get("deadline").is_some() {
+        let secs = args.f64_or("deadline", 0.0)?;
+        // try_from_secs_f64 rejects NaN/infinite/overflowing values, so
+        // `--deadline inf` is a typed usage error, never a panic.
+        let deadline = if secs >= 0.0 {
+            std::time::Duration::try_from_secs_f64(secs).ok()
+        } else {
+            None
+        };
+        match deadline {
+            Some(d) => cfg.stop.deadline = Some(d),
+            None => {
+                return Err(BsfError::usage(format!(
+                    "--deadline expects a finite non-negative number of seconds, \
+                     got {secs}"
+                )))
+            }
+        }
+    }
     Ok(Common {
         n: args.usize_or("n", 256)?,
         seed: args.u64_or("seed", 7)?,
@@ -197,7 +222,7 @@ fn worker_args(name: &str, c: &Common, args: &ArgMap) -> Vec<String> {
         ("eps", c.eps.to_string()),
         ("steps", c.steps.to_string()),
         ("samples", c.samples.to_string()),
-        ("threads-per-worker", c.cfg.openmp_threads.to_string()),
+        ("threads-per-worker", c.cfg.threads_per_worker.to_string()),
         ("backend", args.str_or("backend", "native").to_string()),
     ];
     let mut argv = vec!["worker".to_string()];
@@ -343,7 +368,8 @@ fn finish<Param>(
 
 const RUN_OPTS: &[&str] = &[
     "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
-    "max-iter", "engine", "backend", "profile", "steps", "samples", "listen",
+    "max-iter", "deadline", "engine", "backend", "profile", "steps", "samples",
+    "listen",
 ];
 
 fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
@@ -416,7 +442,7 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
 
 const WORKER_OPTS: &[&str] = &[
     "connect", "rank", "problem", "n", "seed", "eps", "steps", "samples", "omp",
-    "threads-per-worker", "backend",
+    "threads-per-worker", "backend", "persist",
 ];
 
 /// One worker process of a distributed run (the child side of
@@ -439,6 +465,24 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
         .ok_or_else(|| BsfError::usage("worker requires --problem <name>"))?;
     let c = common_from(args)?;
     let backend = backend_from(args)?;
+    // --persist: serve a persistent cluster (NEWRUN/SHUTDOWN) instead
+    // of exiting after one run.
+    let persist = args.flag("persist");
+
+    fn drive<P: BsfProblem>(
+        p: &P,
+        b: &dyn MapBackend<P>,
+        connect: &str,
+        rank: usize,
+        cfg: &BsfConfig,
+        persist: bool,
+    ) -> Result<(), BsfError> {
+        if persist {
+            run_persistent_worker(p, b, connect, rank, cfg)
+        } else {
+            run_process_worker(p, b, connect, rank, cfg).map(|_| ())
+        }
+    }
 
     fn go<P: BsfProblem>(
         p: &P,
@@ -446,35 +490,35 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
         connect: &str,
         rank: usize,
         cfg: &BsfConfig,
+        persist: bool,
     ) -> Result<(), BsfError> {
-        let _report = match backend {
+        match backend {
             BackendOpt::PerElement => {
-                run_process_worker(p, &PerElementBackend, connect, rank, cfg)?
+                drive(p, &PerElementBackend, connect, rank, cfg, persist)
             }
             BackendOpt::Xla => {
                 eprintln!(
                     "bsf: warning: worker processes use the native map \
                      (--backend xla is master-side only); using native"
                 );
-                run_process_worker(p, &FusedNativeBackend, connect, rank, cfg)?
+                drive(p, &FusedNativeBackend, connect, rank, cfg, persist)
             }
             BackendOpt::FusedNative => {
-                run_process_worker(p, &FusedNativeBackend, connect, rank, cfg)?
+                drive(p, &FusedNativeBackend, connect, rank, cfg, persist)
             }
-        };
-        Ok(())
+        }
     }
 
     // The mk_* constructors are shared with cmd_run, so worker j holds
     // the same problem instance as the master by construction.
     match name {
-        "jacobi" => go(&mk_jacobi(&c), backend, connect, rank, &c.cfg),
-        "jacobi-map" => go(&mk_jacobi_map(&c), backend, connect, rank, &c.cfg),
-        "cimmino" => go(&mk_cimmino(&c), backend, connect, rank, &c.cfg),
-        "gravity" => go(&mk_gravity(&c), backend, connect, rank, &c.cfg),
-        "montecarlo" => go(&mk_montecarlo(&c), backend, connect, rank, &c.cfg),
-        "lpp" => go(&mk_lpp(&c), backend, connect, rank, &c.cfg),
-        "apex" => go(&mk_apex(&c), backend, connect, rank, &c.cfg),
+        "jacobi" => go(&mk_jacobi(&c), backend, connect, rank, &c.cfg, persist),
+        "jacobi-map" => go(&mk_jacobi_map(&c), backend, connect, rank, &c.cfg, persist),
+        "cimmino" => go(&mk_cimmino(&c), backend, connect, rank, &c.cfg, persist),
+        "gravity" => go(&mk_gravity(&c), backend, connect, rank, &c.cfg, persist),
+        "montecarlo" => go(&mk_montecarlo(&c), backend, connect, rank, &c.cfg, persist),
+        "lpp" => go(&mk_lpp(&c), backend, connect, rank, &c.cfg, persist),
+        "apex" => go(&mk_apex(&c), backend, connect, rank, &c.cfg, persist),
         other => Err(BsfError::usage(format!("unknown problem {other:?} (worker)"))),
     }
 }

@@ -248,7 +248,7 @@ mod tests {
             .run()
             .unwrap();
         let r2 = Bsf::new(q)
-            .config(BsfConfig::with_workers(2).openmp(4))
+            .config(BsfConfig::with_workers(2).threads_per_worker(4))
             .map_backend(PerElementBackend)
             .run()
             .unwrap();

@@ -19,19 +19,25 @@
 //! meaningful quantity (reported in E5).
 //!
 //! The session-facing entry point is
-//! [`SimulatedEngine`](crate::skeleton::engine::SimulatedEngine);
-//! [`simulate`] is the engine's workhorse and [`run_simulated`] survives
-//! as a thin deprecated shim for the seed-era API.
+//! [`SimulatedEngine`](crate::skeleton::engine::SimulatedEngine), whose
+//! `launch` steps one virtual iteration per `Driver::step` (the same
+//! [`SimCore`] state machine [`simulate`] loops to completion).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::costmodel::ClusterProfile;
 use crate::error::BsfError;
-use crate::skeleton::backend::{FusedNativeBackend, MapBackend};
+use crate::skeleton::backend::MapBackend;
 use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::{
+    start_state, Checkpoint, Driver, IterationEvent, StopReason,
+};
 use crate::skeleton::master::{decide_step, next_job_error};
+use crate::skeleton::pool::ChunkPool;
 use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::reduce::{merge_folds, ExtendedFold};
+use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::runner::validate_run;
 use crate::skeleton::split::all_ranges;
 use crate::skeleton::variables::SkelVars;
@@ -45,8 +51,8 @@ pub enum ComputeTime {
     /// Wall-clock of each worker's real chunk execution on this machine.
     Measured,
     /// `sublist_len · t_elem` (deterministic; `t_elem` from calibration).
-    /// With the intra-worker tier active (`openmp_threads = T > 1`) the
-    /// charge is the parallel critical path `ceil(sublist_len / T) ·
+    /// With the intra-worker tier active (`threads_per_worker = T > 1`)
+    /// the charge is the parallel critical path `ceil(sublist_len / T) ·
     /// t_elem` — the paper's OpenMP divide applied per virtual node.
     PerElement(f64),
 }
@@ -119,79 +125,151 @@ pub struct SimReport<Param> {
     pub volume: VolumeByTag,
 }
 
-/// Run `problem` on a simulated cluster of `cfg.workers` nodes, mapping
-/// sublists through `backend`. Returns the seed-shaped [`SimReport`]
-/// plus per-worker summaries (for the unified report).
-pub fn simulate<P: BsfProblem>(
-    problem: &P,
-    backend: &dyn MapBackend<P>,
-    cfg: &BsfConfig,
-    sim: &SimConfig,
-) -> Result<(SimReport<P::Param>, Vec<WorkerReport>), BsfError> {
-    validate_run(problem, cfg)?;
-    let k = cfg.workers;
+/// The simulator's iteration state machine: one virtual-time iteration
+/// of Algorithm 2 per [`step`](SimCore::step). [`simulate`] loops it to
+/// completion; the `SimulatedEngine` driver steps it interactively.
+pub(crate) struct SimCore<P: BsfProblem> {
+    cfg: BsfConfig,
+    sim: SimConfig,
+    ranges: Vec<(usize, usize)>,
+    sublists: Vec<Vec<P::MapElem>>,
+    pool: Option<ChunkPool>,
+    threads: usize,
+    param: P::Param,
+    job: usize,
+    iter: usize,
+    start_iter: usize,
+    vtime: f64,
+    stats: TransportStats,
+    acc: IterBreakdown,
+    map_seconds: Vec<f64>,
+    max_chunk_seconds: Vec<f64>,
+    merge_seconds: Vec<f64>,
+    wall0: Instant,
+    stop: Option<StopReason>,
+    done: bool,
+    /// Virtual rank whose map panicked (finish/sim_report re-report it,
+    /// matching the threaded engine's join-time resurfacing).
+    panicked: Option<usize>,
+}
 
-    let n = problem.list_size();
-    let ranges = all_ranges(n, k);
-    // Workers construct their static sublists once (step 1 of Alg. 2).
-    let sublists: Vec<Vec<P::MapElem>> = ranges
-        .iter()
-        .map(|&(off, len)| (off..off + len).map(|i| problem.map_list_elem(i)).collect())
-        .collect();
+impl<P: BsfProblem> SimCore<P> {
+    fn new(
+        problem: &P,
+        cfg: &BsfConfig,
+        sim: SimConfig,
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Self, BsfError> {
+        validate_run(problem, cfg)?;
+        let (param, iter, job) = start_state(problem, start)?;
+        let k = cfg.workers;
 
-    let lat = sim.profile.latency;
-    let beta = sim.profile.byte_time;
-    let threads = cfg.openmp_threads.max(1);
+        let n = problem.list_size();
+        let ranges = all_ranges(n, k);
+        // Workers construct their static sublists once (step 1 of Alg. 2).
+        let sublists: Vec<Vec<P::MapElem>> = ranges
+            .iter()
+            .map(|&(off, len)| (off..off + len).map(|i| problem.map_list_elem(i)).collect())
+            .collect();
 
-    // One real chunk pool serves every virtual node in turn (virtual
-    // workers run sequentially on this machine, so sharing is exact).
-    let pool = intra_worker_pool(cfg);
+        // One real chunk pool serves every virtual node in turn (virtual
+        // workers run sequentially on this machine, so sharing is exact).
+        let pool = intra_worker_pool(cfg);
+        let threads = cfg.threads_per_worker.max(1);
 
-    let mut param = problem.init_parameter();
-    problem.parameters_output(&param);
+        problem.parameters_output(&param);
 
-    let wall0 = Instant::now();
-    let mut vtime = 0.0f64;
-    let mut job = 0usize;
-    let mut iter = 0usize;
-    let stats = TransportStats::default();
-    let mut acc = IterBreakdown::default();
-    let mut map_seconds = vec![0.0f64; k];
-    let mut max_chunk_seconds = vec![0.0f64; k];
-    let mut merge_seconds = vec![0.0f64; k];
+        Ok(Self {
+            cfg: cfg.clone(),
+            sim,
+            ranges,
+            sublists,
+            pool,
+            threads,
+            param,
+            job,
+            iter,
+            start_iter: iter,
+            vtime: 0.0,
+            stats: TransportStats::default(),
+            acc: IterBreakdown::default(),
+            map_seconds: vec![0.0; k],
+            max_chunk_seconds: vec![0.0; k],
+            merge_seconds: vec![0.0; k],
+            wall0: Instant::now(),
+            stop: None,
+            done: false,
+            panicked: None,
+        })
+    }
 
-    loop {
-        let order_payload = (job, param.clone()).to_bytes();
+    fn checkpoint(&self) -> Checkpoint<P::Param> {
+        Checkpoint { param: self.param.clone(), iter: self.iter, job: self.job }
+    }
+
+    /// One virtual-time iteration (phases 1-4 of the module docs).
+    fn step(
+        &mut self,
+        problem: &P,
+        backend: &dyn MapBackend<P>,
+    ) -> Result<IterationEvent<P::Param>, BsfError> {
+        if self.done {
+            return Err(BsfError::config(
+                "driver already stopped (finish() it instead of stepping again)",
+            ));
+        }
+        if self.cfg.cancel.is_cancelled() {
+            self.done = true;
+            return Err(BsfError::Cancelled);
+        }
+        let k = self.cfg.workers;
+        let lat = self.sim.profile.latency;
+        let beta = self.sim.profile.byte_time;
+        let threads = self.threads;
+
+        // Same order envelope the real transports ship — (job,
+        // iterations-completed, param) — so the charged byte volume
+        // matches the wire exactly.
+        let order_payload = (self.job, self.iter, self.param.clone()).to_bytes();
         let order_bytes = order_payload.len();
 
         // Phase 1: sequential order sends; order j lands at (j+1)·(L+sβ).
         let send_cost = lat + order_bytes as f64 * beta;
         let send_all = k as f64 * send_cost;
-        stats.record_n(Tag::Order, k as u64, order_bytes);
+        self.stats.record_n(Tag::Order, k as u64, order_bytes);
 
         // Phase 2: execute every worker's real map, measure/charge time.
         let mut arrivals: Vec<(f64, ExtendedFold<P::ReduceElem>)> =
             Vec::with_capacity(k);
-        for (rank, elems) in sublists.iter().enumerate() {
-            let (off, len) = ranges[rank];
-            let vars = SkelVars::for_worker(rank, k, off, len, iter, job);
+        for (rank, elems) in self.sublists.iter().enumerate() {
+            let (off, len) = self.ranges[rank];
+            let vars = SkelVars::for_worker(rank, k, off, len, self.iter, self.job);
             let t0 = Instant::now();
             // Same contract as the real engines: a panicking map becomes
             // a typed WorkerPanic for the simulated node's rank.
+            let param = &self.param;
+            let pool = self.pool.as_ref();
             let mapped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                map_and_fold(problem, backend, elems, &param, vars, pool.as_ref())
-            }))
-            .map_err(|_| BsfError::WorkerPanic { rank })?;
+                map_and_fold(problem, backend, elems, param, vars, pool)
+            }));
+            let mapped = match mapped {
+                Ok(mapped) => mapped,
+                Err(_) => {
+                    self.done = true;
+                    self.panicked = Some(rank);
+                    return Err(BsfError::WorkerPanic { rank });
+                }
+            };
             let wall = t0.elapsed().as_secs_f64();
-            map_seconds[rank] += wall;
-            max_chunk_seconds[rank] += mapped.max_chunk_seconds;
-            merge_seconds[rank] += mapped.merge_seconds;
+            self.map_seconds[rank] += wall;
+            self.max_chunk_seconds[rank] += mapped.max_chunk_seconds;
+            self.merge_seconds[rank] += mapped.merge_seconds;
             let fold = mapped.fold;
             // Intra-worker tier charging: Measured wall already ran on
             // the real pool; the deterministic per-element model charges
             // the parallel critical path plus the fork/join overhead.
-            let intra_overhead = if threads > 1 { sim.fork_join } else { 0.0 };
-            let t_map = match sim.compute {
+            let intra_overhead = if threads > 1 { self.sim.fork_join } else { 0.0 };
+            let t_map = match self.sim.compute {
                 ComputeTime::Measured => wall + intra_overhead,
                 ComputeTime::PerElement(te) => {
                     let critical_path = len.div_ceil(threads);
@@ -201,7 +279,7 @@ pub fn simulate<P: BsfProblem>(
             let fold_len = (fold.value.clone(), fold.counter).to_bytes().len();
             let start = (rank + 1) as f64 * send_cost;
             let arrive = start + t_map + lat + fold_len as f64 * beta;
-            stats.record(Tag::Fold, fold_len);
+            self.stats.record(Tag::Fold, fold_len);
             arrivals.push((arrive, fold));
         }
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
@@ -215,27 +293,34 @@ pub fn simulate<P: BsfProblem>(
         let folds: Vec<ExtendedFold<P::ReduceElem>> =
             arrivals.into_iter().map(|(_, f)| f).collect();
         let t0 = Instant::now();
+        let job = self.job;
         let merged = merge_folds(folds, |a, b| problem.reduce_f(a, b, job));
         let reduce_wall = t0.elapsed().as_secs_f64();
 
-        // Phase 4: the shared decision step (process_results +
-        // dispatcher + iteration cap), timed for real.
-        iter += 1;
+        // Phase 4: the shared decision step (process_results + dispatcher
+        // + iteration cap / stop policy), timed for real. Like the real
+        // engines — whose clock is read right before the decision —
+        // `ctx.elapsed` includes the current iteration's cost up to the
+        // decision (send + compute/gather + master reduce), so deadline
+        // policies and user predicates see the same clock semantics on
+        // every engine.
+        self.iter += 1;
         let ctx = IterCtx {
-            iter_counter: iter,
-            job_case: job,
+            iter_counter: self.iter,
+            job_case: self.job,
             num_of_workers: k,
-            elapsed: vtime,
+            elapsed: self.vtime + last_arrival + reduce_wall,
         };
         let t0 = Instant::now();
-        let decision = decide_step(problem, &merged, &mut param, &ctx, cfg.max_iter);
+        let (decision, stop_reason) =
+            decide_step(problem, &merged, &mut self.param, &ctx, &self.cfg);
         let proc_wall = t0.elapsed().as_secs_f64();
 
-        if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
+        if self.cfg.trace_count > 0 && self.iter % self.cfg.trace_count == 0 {
             problem.iter_output(
                 merged.value.as_ref(),
                 merged.counter,
-                &param,
+                &self.param,
                 &ctx,
                 decision.next_job,
             );
@@ -243,7 +328,7 @@ pub fn simulate<P: BsfProblem>(
 
         // Exit broadcast: K sequential small messages (1 byte payload).
         let exit_cost = k as f64 * (lat + beta);
-        stats.record_n(Tag::Exit, k as u64, 1);
+        self.stats.record_n(Tag::Exit, k as u64, 1);
 
         let b = IterBreakdown {
             send: send_all,
@@ -251,60 +336,173 @@ pub fn simulate<P: BsfProblem>(
             master_reduce: reduce_wall,
             process_and_exit: proc_wall + exit_cost,
         };
-        vtime += b.total();
-        acc.send += b.send;
-        acc.compute_and_gather += b.compute_and_gather;
-        acc.master_reduce += b.master_reduce;
-        acc.process_and_exit += b.process_and_exit;
+        self.vtime += b.total();
+        self.acc.send += b.send;
+        self.acc.compute_and_gather += b.compute_and_gather;
+        self.acc.master_reduce += b.master_reduce;
+        self.acc.process_and_exit += b.process_and_exit;
+
+        if !decision.exit {
+            if let Some(e) = next_job_error(problem, &decision) {
+                self.done = true;
+                return Err(e);
+            }
+        }
+
+        let mut event = IterationEvent {
+            iter: self.iter,
+            job_case: ctx.job_case,
+            next_job: decision.next_job,
+            reduce_counter: merged.counter,
+            elapsed: self.vtime,
+            clock: Clock::Virtual,
+            stop: None,
+            param: None,
+        };
 
         if decision.exit {
-            problem.problem_output(merged.value.as_ref(), merged.counter, &param, vtime);
-            let inv = 1.0 / iter as f64;
-            let workers: Vec<WorkerReport> = ranges
-                .iter()
-                .enumerate()
-                .map(|(rank, &(_, len))| WorkerReport {
-                    rank,
-                    iterations: iter,
-                    map_seconds: map_seconds[rank],
-                    sublist_length: len,
-                    threads,
-                    max_chunk_seconds: max_chunk_seconds[rank],
-                    merge_seconds: merge_seconds[rank],
-                })
-                .collect();
-            let report = SimReport {
-                param,
-                iterations: iter,
-                virtual_seconds: vtime,
-                real_seconds: wall0.elapsed().as_secs_f64(),
-                breakdown: IterBreakdown {
-                    send: acc.send * inv,
-                    compute_and_gather: acc.compute_and_gather * inv,
-                    master_reduce: acc.master_reduce * inv,
-                    process_and_exit: acc.process_and_exit * inv,
-                },
-                messages: stats.message_count(),
-                bytes: stats.byte_count(),
-                volume: stats.volume(),
-            };
-            return Ok((report, workers));
+            problem.problem_output(
+                merged.value.as_ref(),
+                merged.counter,
+                &self.param,
+                self.vtime,
+            );
+            self.stop = stop_reason.or(Some(StopReason::Converged));
+            self.done = true;
+            event.stop = self.stop;
+            event.param = Some(self.param.clone());
+        } else {
+            self.job = decision.next_job;
         }
-        if let Some(e) = next_job_error(problem, &decision) {
-            return Err(e);
-        }
-        job = decision.next_job;
+
+        Ok(event)
+    }
+
+    /// Per-virtual-worker summaries (iterations counted for this run).
+    fn worker_reports(&self) -> Vec<WorkerReport> {
+        let performed = self.iter - self.start_iter;
+        self.ranges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(_, len))| WorkerReport {
+                rank,
+                iterations: performed,
+                map_seconds: self.map_seconds[rank],
+                sublist_length: len,
+                threads: self.threads,
+                max_chunk_seconds: self.max_chunk_seconds[rank],
+                merge_seconds: self.merge_seconds[rank],
+                pid: std::process::id(),
+            })
+            .collect()
+    }
+
+    /// Consume into the seed-shaped [`SimReport`] (mean per-iteration
+    /// breakdown over the iterations this run performed).
+    fn sim_report(self) -> (SimReport<P::Param>, Vec<WorkerReport>) {
+        let workers = self.worker_reports();
+        let performed = self.iter - self.start_iter;
+        let inv = if performed > 0 { 1.0 / performed as f64 } else { 0.0 };
+        let report = SimReport {
+            param: self.param,
+            iterations: self.iter,
+            virtual_seconds: self.vtime,
+            real_seconds: self.wall0.elapsed().as_secs_f64(),
+            breakdown: IterBreakdown {
+                send: self.acc.send * inv,
+                compute_and_gather: self.acc.compute_and_gather * inv,
+                master_reduce: self.acc.master_reduce * inv,
+                process_and_exit: self.acc.process_and_exit * inv,
+            },
+            messages: self.stats.message_count(),
+            bytes: self.stats.byte_count(),
+            volume: self.stats.volume(),
+        };
+        (report, workers)
     }
 }
 
-/// Seed-era entry point. Panics on any error, exactly as the seed did.
-#[deprecated(note = "use Bsf::new(problem).engine(SimulatedEngine::with_config(sim)).run()")]
-pub fn run_simulated<P: BsfProblem>(
+/// The simulated engine's [`Driver`]: owns the problem/backend handles
+/// next to the [`SimCore`] state machine.
+struct SimDriver<P: BsfProblem> {
+    problem: Arc<P>,
+    backend: Arc<dyn MapBackend<P>>,
+    core: SimCore<P>,
+}
+
+/// Build the simulated driver (the `SimulatedEngine::launch` workhorse).
+pub(crate) fn launch_sim<P: BsfProblem>(
+    problem: Arc<P>,
+    backend: Arc<dyn MapBackend<P>>,
+    cfg: &BsfConfig,
+    sim: SimConfig,
+    start: Option<Checkpoint<P::Param>>,
+) -> Result<Box<dyn Driver<P>>, BsfError> {
+    let core = SimCore::new(&*problem, cfg, sim, start)?;
+    Ok(Box::new(SimDriver { problem, backend, core }))
+}
+
+impl<P: BsfProblem> Driver<P> for SimDriver<P> {
+    fn engine(&self) -> &'static str {
+        "simulated"
+    }
+
+    fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
+        self.core.step(&*self.problem, &*self.backend)
+    }
+
+    fn checkpoint(&self) -> Checkpoint<P::Param> {
+        self.core.checkpoint()
+    }
+
+    fn finish(self: Box<Self>) -> Result<RunReport<P::Param>, BsfError> {
+        let this = *self;
+        let core = this.core;
+        // Same contract as the threaded engine (panic resurfaces at
+        // join): a panicked run has no salvageable report.
+        if let Some(rank) = core.panicked {
+            return Err(BsfError::WorkerPanic { rank });
+        }
+        let workers = core.worker_reports();
+        Ok(RunReport {
+            param: core.param,
+            iterations: core.iter,
+            elapsed: core.vtime,
+            clock: Clock::Virtual,
+            wall_seconds: core.wall0.elapsed().as_secs_f64(),
+            engine: "simulated",
+            // The unified report carries whole-run phase totals, like
+            // the real engines.
+            phases: PhaseBreakdown {
+                send: core.acc.send,
+                gather: core.acc.compute_and_gather,
+                reduce: core.acc.master_reduce,
+                process: core.acc.process_and_exit,
+            },
+            workers,
+            messages: core.stats.message_count(),
+            bytes: core.stats.byte_count(),
+            volume: core.stats.volume(),
+        })
+    }
+}
+
+/// Run `problem` on a simulated cluster of `cfg.workers` nodes, mapping
+/// sublists through `backend`. Returns the seed-shaped [`SimReport`]
+/// plus per-worker summaries (for the unified report). This is the
+/// loop-to-completion convenience over the same [`SimCore`] the
+/// session-level driver steps.
+pub fn simulate<P: BsfProblem>(
     problem: &P,
+    backend: &dyn MapBackend<P>,
     cfg: &BsfConfig,
     sim: &SimConfig,
-) -> SimReport<P::Param> {
-    simulate(problem, &FusedNativeBackend, cfg, sim)
-        .expect("bsf: simulated run failed")
-        .0
+) -> Result<(SimReport<P::Param>, Vec<WorkerReport>), BsfError> {
+    let mut core = SimCore::new(problem, cfg, *sim, None)?;
+    loop {
+        let event = core.step(problem, backend)?;
+        if event.stop.is_some() {
+            return Ok(core.sim_report());
+        }
+    }
 }

@@ -1,0 +1,639 @@
+//! Persistent worker clusters: keep worker **OS processes** (and their
+//! intra-worker chunk pools) alive across consecutive runs.
+//!
+//! A [`ProcessEngine`](crate::skeleton::process::ProcessEngine) run pays
+//! spawn + TCP connect + handshake on *every* `run()`. A [`Cluster`]
+//! pays it once: [`Cluster::spawn`] forks K persistent workers (or
+//! [`Cluster::connect`] rendezvouses with pre-started ones), and every
+//! subsequent session launched through [`Cluster::engine`] reuses the
+//! same processes, sockets and chunk pools — the amortization the
+//! ROADMAP's serve-many-requests goal needs (`bsf bench`'s `cluster`
+//! cases measure it against the fresh-spawn `process` cases).
+//!
+//! ## The RESET/NEWRUN protocol
+//!
+//! A persistent worker ([`serve_worker`], `bsf worker --persist`) sits
+//! in an outer loop around the ordinary Algorithm-2 worker loop:
+//!
+//! ```text
+//! master → worker:  NEWRUN            (reset: begin one more run)
+//! ... the ordinary order/fold/exit iteration protocol ...
+//! worker → master:  WORKER_REPORT     (end-of-run summary, with pid)
+//! (worker returns to waiting for NEWRUN | SHUTDOWN)
+//! master → worker:  SHUTDOWN          (cluster teardown: exit process)
+//! ```
+//!
+//! The per-run protocol between NEWRUN and the exit flag is *exactly*
+//! the one `ProcessEngine` speaks, driven by the same [`MasterLoop`] and
+//! the same worker loop — so cluster runs are bit-identical to fresh
+//! spawns. [`WorkerReport::pid`] proves the reuse: consecutive runs on
+//! one cluster report the same worker pids.
+//!
+//! One run at a time: launching while a run is active is a typed config
+//! error ("cluster is busy"). A worker lost mid-run poisons the cluster
+//! (its core is torn down, children killed) — subsequent launches fail
+//! typed rather than running degraded. Cancellation does *not* poison:
+//! the workers are released with the exit flag, their reports drained,
+//! and the cluster is ready for the next run.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::BsfError;
+use crate::skeleton::backend::MapBackend;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::{Checkpoint, Driver, IterationEvent};
+use crate::skeleton::driver::validate_start;
+use crate::skeleton::master::{MasterLoop, MasterOutcome};
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::process::{
+    problem_sig, spawn_and_accept, ChildSet, DEFAULT_CONNECT_TIMEOUT, REAP_TIMEOUT,
+    TAG_WORKER_REPORT,
+};
+use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
+use crate::skeleton::runner::validate_run;
+use crate::skeleton::worker::{
+    intra_worker_pool, run_worker_guarded_with_pool, WorkerReport,
+};
+use crate::transport::tcp::{connect_worker, ProblemSig, TcpEndpoint};
+use crate::transport::{Communicator, Tag, VolumeByTag};
+use crate::util::codec::Codec;
+
+/// One cluster run's unified report (shared by the normal and the
+/// cancelled-then-parked finish paths).
+fn cluster_report<Param>(
+    outcome: MasterOutcome<Param>,
+    workers: Vec<WorkerReport>,
+    volume: VolumeByTag,
+) -> RunReport<Param> {
+    RunReport {
+        param: outcome.param,
+        iterations: outcome.iterations,
+        elapsed: outcome.elapsed,
+        clock: Clock::Real,
+        wall_seconds: outcome.elapsed,
+        engine: "cluster",
+        phases: PhaseBreakdown::from_timers(&outcome.timers),
+        workers,
+        messages: volume.total_messages(),
+        bytes: volume.total_bytes(),
+        volume,
+    }
+}
+
+/// Master → worker: reset for one more run (the outer-loop counterpart
+/// of the per-run order messages).
+pub const TAG_NEW_RUN: Tag = Tag::User(0x4E52); // "NR"
+
+/// Master → worker: tear the cluster down; the worker process exits.
+pub const TAG_SHUTDOWN: Tag = Tag::User(0x5344); // "SD"
+
+/// How long the master waits for all K workers to connect + handshake.
+const DEFAULT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Builder for a [`Cluster`] (spawn or rendezvous mode), finalized by
+/// [`start`](ClusterSpec::start) against the problem instance whose
+/// signature the workers must match.
+pub struct ClusterSpec {
+    workers: usize,
+    program: Option<PathBuf>,
+    worker_args: Vec<String>,
+    listen: Option<String>,
+    handshake_timeout: Duration,
+}
+
+impl ClusterSpec {
+    /// Spawn workers from `path` instead of `std::env::current_exe()`
+    /// (tests spawn the `bsf` binary from a test harness).
+    pub fn program(mut self, path: impl Into<PathBuf>) -> Self {
+        self.program = Some(path.into());
+        self
+    }
+
+    /// Override the worker connect/handshake deadline.
+    pub fn handshake_timeout(mut self, timeout: Duration) -> Self {
+        self.handshake_timeout = timeout;
+        self
+    }
+
+    /// Bind/spawn/handshake: after this, K persistent worker processes
+    /// are idle, waiting for their first NEWRUN.
+    pub fn start<P: BsfProblem>(self, problem: &P) -> Result<Cluster, BsfError> {
+        if self.workers == 0 {
+            return Err(BsfError::config(
+                "a cluster needs at least one worker (workers >= 1)",
+            ));
+        }
+        let (ep, children) = spawn_and_accept(
+            self.workers,
+            self.listen.as_deref(),
+            self.program.as_ref(),
+            &self.worker_args,
+            true,
+            problem_sig(problem),
+            self.handshake_timeout,
+        )?;
+        Ok(Cluster {
+            core: Arc::new(Mutex::new(Some(ClusterCore {
+                ep,
+                children,
+                sig: problem_sig(problem),
+                shut: false,
+            }))),
+            workers: self.workers,
+        })
+    }
+}
+
+/// A pool of K persistent worker processes, reusable across consecutive
+/// runs. Obtain an [`Engine`](crate::skeleton::engine::Engine) for a
+/// session with [`engine`](Cluster::engine); tear the processes down
+/// with [`shutdown`](Cluster::shutdown) (dropping the last handle also
+/// shuts down, best-effort).
+pub struct Cluster {
+    core: Arc<Mutex<Option<ClusterCore>>>,
+    workers: usize,
+}
+
+impl Cluster {
+    /// Self-spawn mode: fork K persistent children of this executable
+    /// (or the one set via [`ClusterSpec::program`]) with `args` +
+    /// `--persist --connect <addr> --rank <r>`. The child must parse
+    /// those options, rebuild the same problem, and call
+    /// [`run_persistent_worker`] — `bsf worker --persist` does exactly
+    /// that.
+    pub fn spawn<I, S>(workers: usize, args: I) -> ClusterSpec
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        ClusterSpec {
+            workers,
+            program: None,
+            worker_args: args.into_iter().map(Into::into).collect(),
+            listen: None,
+            handshake_timeout: DEFAULT_HANDSHAKE_TIMEOUT,
+        }
+    }
+
+    /// Rendezvous mode: bind `addr` and wait for K externally launched
+    /// `bsf worker --persist --connect <addr>` processes (other
+    /// terminals, other hosts). In the BSF star topology the master owns
+    /// the rendezvous address — workers dial in.
+    pub fn connect(workers: usize, addr: impl Into<String>) -> ClusterSpec {
+        ClusterSpec {
+            workers,
+            program: None,
+            worker_args: Vec::new(),
+            listen: Some(addr.into()),
+            handshake_timeout: DEFAULT_HANDSHAKE_TIMEOUT,
+        }
+    }
+
+    /// Number of persistent workers K.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// An engine handle for one session over this cluster. Clonable and
+    /// reusable: each `run()`/`iterate()` borrows the worker pool for
+    /// the duration of the run (one run at a time).
+    pub fn engine(&self) -> ClusterEngine {
+        ClusterEngine { core: Arc::clone(&self.core), workers: self.workers }
+    }
+
+    /// Graceful teardown: SHUTDOWN every worker, then reap the spawned
+    /// children (rendezvous-mode workers exit on their own). A typed
+    /// error when a run is still active or a worker did not exit
+    /// cleanly.
+    pub fn shutdown(self) -> Result<(), BsfError> {
+        let mut slot = self
+            .core
+            .lock()
+            .map_err(|_| BsfError::transport("cluster handle poisoned"))?;
+        let mut core = slot.take().ok_or_else(|| {
+            BsfError::config(
+                "cluster cannot shut down: a run is still active, or a lost \
+                 worker already tore it down",
+            )
+        })?;
+        core.send_shutdown();
+        core.children.reap(REAP_TIMEOUT)
+    }
+}
+
+/// The shared worker-pool state: the master's TCP endpoint plus the
+/// spawned children. Lives in the cluster's slot while idle; moves into
+/// the active [`ClusterDriver`] during a run.
+struct ClusterCore {
+    ep: TcpEndpoint,
+    children: ChildSet,
+    /// The problem fingerprint the workers handshook with — every run
+    /// on this pool must present the same one (the per-run counterpart
+    /// of the process engine's per-spawn HELLO validation).
+    sig: ProblemSig,
+    /// True once SHUTDOWN was broadcast (drop must not re-send).
+    shut: bool,
+}
+
+impl ClusterCore {
+    fn send_shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        let workers = self.ep.size() - 1;
+        for w in 0..workers {
+            // Exit(true) first: a worker caught *inside* a run (e.g. a
+            // partially broadcast NEWRUN) unwinds its Algorithm-2 loop
+            // back to idle, where the SHUTDOWN is then honored. An idle
+            // worker simply buffers the unmatched exit flag — rendezvous
+            // workers have no parent to kill them, so this message pair
+            // is the only thing standing between them and a hang.
+            let _ = self.ep.send(w, Tag::Exit, true.to_bytes());
+            let _ = self.ep.send(w, TAG_SHUTDOWN, Vec::new());
+        }
+        self.shut = true;
+    }
+}
+
+impl Drop for ClusterCore {
+    /// Best-effort teardown for abandoned cores: ask the workers to
+    /// exit (rendezvous-mode workers have no parent to kill them), then
+    /// `ChildSet::drop` kills + reaps any spawned children.
+    fn drop(&mut self) {
+        self.send_shutdown();
+    }
+}
+
+/// The [`Engine`](crate::skeleton::engine::Engine) over a persistent
+/// [`Cluster`]: per launch it sends NEWRUN to every idle worker and
+/// drives the same [`MasterLoop`] the process engine uses — no spawn,
+/// no connect, no handshake.
+#[derive(Clone)]
+pub struct ClusterEngine {
+    core: Arc<Mutex<Option<ClusterCore>>>,
+    workers: usize,
+}
+
+impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    /// Like the process engine, the `backend` applies to the master
+    /// side only; persistent workers fixed their backend (and their
+    /// chunk-pool width) at spawn time.
+    fn launch(
+        &self,
+        problem: Arc<P>,
+        _backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError> {
+        if cfg.workers != self.workers {
+            return Err(BsfError::config(format!(
+                "cfg.workers is {} but this cluster holds {} persistent workers",
+                cfg.workers, self.workers
+            )));
+        }
+        // Side-effect-free validation first: a busy-cluster error must
+        // not have already fired parameters_output or started a clock.
+        validate_run(&*problem, cfg)?;
+        validate_start(&*problem, start.as_ref())?;
+        let core = {
+            let mut slot = self
+                .core
+                .lock()
+                .map_err(|_| BsfError::transport("cluster handle poisoned"))?;
+            slot.take().ok_or_else(|| {
+                BsfError::config(
+                    "cluster is busy (a run is active) or was torn down \
+                     (shutdown, or a worker was lost mid-run)",
+                )
+            })?
+        };
+        // Per-run signature guard — the check the process engine gets
+        // from its per-spawn handshake: a session over a *different*
+        // problem instance must fail typed, not corrupt the run. The
+        // core is untouched so far, so it goes straight back.
+        let sig = problem_sig(&*problem);
+        if sig != core.sig {
+            let err = BsfError::config(format!(
+                "cluster workers hold a problem with list_size={} job_count={}, \
+                 but this session's problem has list_size={} job_count={}; every \
+                 run on a cluster must rebuild the same problem instance",
+                core.sig.list_size, core.sig.job_count, sig.list_size, sig.job_count
+            ));
+            if let Ok(mut slot) = self.core.lock() {
+                *slot = Some(core);
+            }
+            return Err(err);
+        }
+
+        // Per-run traffic baseline: the endpoint's counters span the
+        // cluster's whole lifetime.
+        let base_volume = core.ep.stats().volume();
+
+        // RESET/NEWRUN: wake every idle worker for one more run.
+        for w in 0..self.workers {
+            if let Err(e) = core.ep.send(w, TAG_NEW_RUN, Vec::new()) {
+                // `core` is dropped here: children killed, cluster slot
+                // stays empty (poisoned) — a dead worker must not leave
+                // a half-woken pool behind.
+                return Err(e);
+            }
+        }
+        // Both validations already passed, so this cannot fail — and
+        // the run clock (t0) starts only now, with the workers woken.
+        let state = MasterLoop::new(&*problem, cfg, start)?;
+        Ok(Box::new(ClusterDriver {
+            problem,
+            core: Some(core),
+            home: Arc::clone(&self.core),
+            state,
+            base_volume,
+            parked: None,
+        }))
+    }
+}
+
+/// The active run over a cluster: owns the [`ClusterCore`] for the
+/// run's duration and parks it back into the cluster slot on a clean
+/// finish, a clean cancellation, or a drop with live workers. Worker
+/// loss / protocol errors tear the core down instead — a
+/// possibly-desynchronized pool is never reused.
+struct ClusterDriver<P: BsfProblem> {
+    problem: Arc<P>,
+    core: Option<ClusterCore>,
+    home: Arc<Mutex<Option<ClusterCore>>>,
+    state: MasterLoop<P>,
+    base_volume: VolumeByTag,
+    /// Worker reports + per-run traffic captured when a cancelled run
+    /// parked the pool early — `finish()` can still produce the partial
+    /// report afterwards, like every other engine.
+    parked: Option<(Vec<WorkerReport>, VolumeByTag)>,
+}
+
+impl<P: BsfProblem> ClusterDriver<P> {
+    /// Blocking-drain the K end-of-run reports (the workers were just
+    /// released, so the reports are in flight before they idle again).
+    fn collect_reports(&mut self) -> Result<Vec<WorkerReport>, BsfError> {
+        let core = self.core.as_ref().expect("cluster core present until parked");
+        let k = self.state.workers();
+        let mut workers = Vec::with_capacity(k);
+        for w in 0..k {
+            let m = core.ep.recv(w, TAG_WORKER_REPORT)?;
+            workers.push(
+                WorkerReport::from_wire(&m.payload)
+                    .map_err(|e| BsfError::transport(format!("worker {w}: {e}")))?,
+            );
+        }
+        workers.sort_by_key(|w| w.rank);
+        Ok(workers)
+    }
+
+    /// Return the (re-idled) worker pool to the cluster slot.
+    fn park(&mut self) {
+        if let Some(core) = self.core.take() {
+            if let Ok(mut slot) = self.home.lock() {
+                *slot = Some(core);
+            }
+        }
+    }
+}
+
+impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
+    fn engine(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
+        // Guard before touching the core: a stopped run must error typed
+        // (not tear the pool down), and a torn-down run has no core.
+        if self.core.is_none() || self.state.done() || self.state.released() {
+            return Err(BsfError::config(
+                "driver already stopped (finish() it instead of stepping again)",
+            ));
+        }
+        let result = {
+            let core = self.core.as_ref().expect("guarded above");
+            self.state.step_comm(&*self.problem, &core.ep)
+        };
+        if let Err(BsfError::Cancelled) = &result {
+            // The workers were released with the exit flag; they ship
+            // their reports and return to the idle loop. Drain the
+            // reports so the next run's gather starts clean, then hand
+            // the pool back — cancellation must not cost the cluster.
+            match self.collect_reports() {
+                Ok(workers) => {
+                    let volume = {
+                        let core = self.core.as_ref().expect("present: drain succeeded");
+                        core.ep.stats().volume().since(&self.base_volume)
+                    };
+                    // Keep the partial run's data so finish() can still
+                    // report it after the pool is handed back.
+                    self.parked = Some((workers, volume));
+                    self.park();
+                }
+                Err(_) => {
+                    // A worker died mid-drain. Tear down NOW: a partial
+                    // drain is unrepeatable (each worker reports once),
+                    // so nothing may ever re-drain this core.
+                    self.core.take();
+                }
+            }
+        } else if matches!(&result, Err(_)) {
+            // Transport loss / worker panic / dispatcher bug: the pool's
+            // protocol state is unknown. Tear it down (children killed
+            // by ChildSet::drop); the cluster slot stays empty.
+            self.core.take();
+        }
+        result
+    }
+
+    fn checkpoint(&self) -> Checkpoint<P::Param> {
+        self.state.checkpoint()
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<RunReport<P::Param>, BsfError> {
+        if self.core.is_none() {
+            // A cancelled run parked the pool early but kept its partial
+            // data — report it, like every other engine's finish().
+            if let Some((workers, volume)) = self.parked.take() {
+                return Ok(cluster_report(self.state.outcome(), workers, volume));
+            }
+            return Err(BsfError::config(
+                "cluster run was torn down by a mid-run error; no report available",
+            ));
+        }
+        // Early finish: release the workers between iterations — they
+        // report and go idle, exactly like a normal stop.
+        if !self.state.done() {
+            let core = self.core.as_ref().expect("checked above");
+            self.state.release(&core.ep);
+        }
+        let workers = match self.collect_reports() {
+            Ok(workers) => workers,
+            Err(e) => {
+                // Partial drains are unrepeatable; tear down now so the
+                // Drop below (and any future launch) cannot hang on a
+                // report that will never come.
+                self.core.take();
+                return Err(e);
+            }
+        };
+        let stats = {
+            let core = self.core.as_ref().expect("cluster core present until parked");
+            core.ep.stats()
+        };
+        let volume = stats.volume().since(&self.base_volume);
+        self.park();
+
+        Ok(cluster_report(self.state.outcome(), workers, volume))
+    }
+}
+
+impl<P: BsfProblem> Drop for ClusterDriver<P> {
+    /// An abandoned driver (e.g. the `for event in run { .. }` Iterator
+    /// pattern, which consumes the `BsfRun` without `finish()`) must not
+    /// cost the cluster: release the workers if the run is still going
+    /// (they accept an exit order between iterations), drain their
+    /// end-of-run reports, and park the pool for the next run. Only a
+    /// failed drain — a worker that died mid-protocol — tears the core
+    /// down (SHUTDOWN + children killed by the core's drop).
+    fn drop(&mut self) {
+        if self.core.is_none() {
+            return; // parked (finish/cancel) or already torn down
+        }
+        {
+            let core = self.core.as_ref().expect("checked above");
+            self.state.release(&core.ep); // no-op after a normal stop
+        }
+        if self.collect_reports().is_ok() {
+            self.park();
+        } else {
+            self.core.take(); // dropped: SHUTDOWN + kill/reap
+        }
+    }
+}
+
+/// The persistent worker's outer loop: one ordinary Algorithm-2 worker
+/// run per NEWRUN, sharing a single chunk pool across runs; SHUTDOWN
+/// exits cleanly. Generic over the transport (tests drive it over the
+/// thread transport; `bsf worker --persist` drives it over TCP).
+pub fn serve_worker<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    comm: &dyn Communicator,
+    cfg: &BsfConfig,
+) -> Result<(), BsfError> {
+    let master = comm.master_rank();
+    // The whole point of persistence: threads spawned once, reused for
+    // every run the cluster dispatches.
+    let pool = intra_worker_pool(cfg);
+    loop {
+        let m = comm.recv_tags(Some(master), &[TAG_NEW_RUN, TAG_SHUTDOWN])?;
+        if m.tag == TAG_SHUTDOWN {
+            return Ok(());
+        }
+        let report = run_worker_guarded_with_pool(problem, backend, comm, cfg, pool.as_ref())?;
+        comm.send(master, TAG_WORKER_REPORT, report.to_wire())?;
+    }
+}
+
+/// The persistent worker-process entry point (`bsf worker --persist`):
+/// connect once, then serve NEWRUN orders until SHUTDOWN.
+///
+/// `cfg_template.workers` is overwritten with the handshake's K; the
+/// caller supplies the rest (notably `threads_per_worker`, which fixes
+/// the persistent chunk pool's width for every run).
+pub fn run_persistent_worker<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    connect: &str,
+    rank: usize,
+    cfg_template: &BsfConfig,
+) -> Result<(), BsfError> {
+    let ep = connect_worker(connect, rank, problem_sig(problem), DEFAULT_CONNECT_TIMEOUT)?;
+    let mut cfg = cfg_template.clone();
+    cfg.workers = ep.size() - 1;
+    serve_worker(problem, backend, &ep, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::jacobi::JacobiProblem;
+    use crate::skeleton::backend::FusedNativeBackend;
+    use crate::transport::build_thread_transport;
+    use crate::util::codec::Codec;
+
+    /// The NEWRUN/SHUTDOWN protocol over the thread transport: two runs
+    /// through one serve_worker loop, then a clean shutdown.
+    #[test]
+    fn serve_worker_runs_twice_then_shuts_down() {
+        let (p, _) = JacobiProblem::random(12, 1e-10, 5);
+        let cfg = BsfConfig::with_workers(1);
+        let mut eps = build_thread_transport(1);
+        let master = eps.pop().unwrap();
+        let worker_ep = eps.pop().unwrap();
+
+        let wp = JacobiProblem::random(12, 1e-10, 5).0;
+        let wcfg = cfg.clone();
+        let worker = std::thread::spawn(move || {
+            serve_worker(&wp, &FusedNativeBackend, &worker_ep, &wcfg)
+        });
+
+        let mut totals = Vec::new();
+        for _ in 0..2 {
+            master.send(0, TAG_NEW_RUN, Vec::new()).unwrap();
+            let outcome = crate::skeleton::master::run_master(&p, &master, &cfg).unwrap();
+            let m = master.recv(0, TAG_WORKER_REPORT).unwrap();
+            let report = WorkerReport::from_wire(&m.payload).unwrap();
+            assert_eq!(report.rank, 0);
+            assert_eq!(report.iterations, outcome.iterations);
+            assert_eq!(report.pid, std::process::id());
+            totals.push(outcome.param);
+        }
+        assert_eq!(totals[0], totals[1], "identical runs, identical results");
+
+        master.send(0, TAG_SHUTDOWN, Vec::new()).unwrap();
+        worker.join().unwrap().unwrap();
+    }
+
+    /// A cancelled (or early-finished) run releases a persistent worker
+    /// back to its idle loop instead of killing it.
+    #[test]
+    fn released_persistent_worker_returns_to_idle() {
+        let (p, _) = JacobiProblem::random(8, 1e-10, 6);
+        let cfg = BsfConfig::with_workers(1);
+        let mut eps = build_thread_transport(1);
+        let master = eps.pop().unwrap();
+        let worker_ep = eps.pop().unwrap();
+
+        let wp = JacobiProblem::random(8, 1e-10, 6).0;
+        let wcfg = cfg.clone();
+        let worker = std::thread::spawn(move || {
+            serve_worker(&wp, &FusedNativeBackend, &worker_ep, &wcfg)
+        });
+
+        // Begin a run, then release it immediately (exit=true at the top
+        // of the worker loop — the early-finish/cancel path).
+        master.send(0, TAG_NEW_RUN, Vec::new()).unwrap();
+        master.send(0, crate::transport::Tag::Exit, true.to_bytes()).unwrap();
+        let m = master.recv(0, TAG_WORKER_REPORT).unwrap();
+        let report = WorkerReport::from_wire(&m.payload).unwrap();
+        assert_eq!(report.iterations, 0, "released before any order");
+
+        // The worker is idle again: a full run still works.
+        master.send(0, TAG_NEW_RUN, Vec::new()).unwrap();
+        let outcome = crate::skeleton::master::run_master(&p, &master, &cfg).unwrap();
+        assert!(outcome.iterations > 0);
+        let m = master.recv(0, TAG_WORKER_REPORT).unwrap();
+        assert!(WorkerReport::from_wire(&m.payload).unwrap().iterations > 0);
+
+        master.send(0, TAG_SHUTDOWN, Vec::new()).unwrap();
+        worker.join().unwrap().unwrap();
+    }
+}

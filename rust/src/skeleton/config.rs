@@ -3,12 +3,16 @@
 //! Macro ↔ field mapping:
 //! * `PP_BSF_MAX_MPI_SIZE`  → `workers` (+1 master) is explicit per run
 //! * `PP_BSF_ITER_OUTPUT` / `PP_BSF_TRACE_COUNT` → `trace_count`
-//! * `PP_BSF_OMP` / `PP_BSF_NUM_THREADS` → `openmp_threads`
+//! * `PP_BSF_OMP` / `PP_BSF_NUM_THREADS` → `threads_per_worker`
 //! * `PP_BSF_MAX_JOB_CASE`  → `BsfProblem::job_count()` (type-level)
 //! * `PP_BSF_PRECISION`     → left to the problem's output callbacks
 //!
 //! `max_iter` is a safety net the C++ skeleton leaves to the user; a
-//! Rust library should not loop forever on a diverging problem.
+//! Rust library should not loop forever on a diverging problem. The
+//! [`StopPolicy`] and [`CancelToken`] extend it with declarative
+//! steering for the iteration-driver API (`Bsf::iterate`).
+
+use crate::skeleton::driver::{CancelToken, StopPolicy};
 
 /// Runtime configuration of one skeleton run.
 #[derive(Debug, Clone)]
@@ -16,18 +20,32 @@ pub struct BsfConfig {
     /// Number of worker processes K (the master is implicit, rank K).
     pub workers: usize,
     /// Intra-worker parallelism for the map loop (the paper's OpenMP
-    /// support, `PP_BSF_OMP` + `PP_BSF_NUM_THREADS`). 1 = off.
-    pub openmp_threads: usize,
+    /// support, `PP_BSF_OMP` + `PP_BSF_NUM_THREADS`). 1 = off. The CLI
+    /// spelling is `--threads-per-worker` (`--omp` is a legacy alias).
+    pub threads_per_worker: usize,
     /// Invoke `iter_output` every `trace_count` iterations
     /// (`PP_BSF_ITER_OUTPUT` + `PP_BSF_TRACE_COUNT`); 0 disables tracing.
     pub trace_count: usize,
     /// Hard iteration cap (guards non-converging configurations).
     pub max_iter: usize,
+    /// Declarative stop conditions beyond the problem's own `StopCond`:
+    /// iteration cap, engine-clock deadline, user predicate.
+    pub stop: StopPolicy,
+    /// Cooperative cancellation: `cancel()` on a clone of this token
+    /// aborts the run between iterations with `BsfError::Cancelled`.
+    pub cancel: CancelToken,
 }
 
 impl Default for BsfConfig {
     fn default() -> Self {
-        Self { workers: 1, openmp_threads: 1, trace_count: 0, max_iter: 100_000 }
+        Self {
+            workers: 1,
+            threads_per_worker: 1,
+            trace_count: 0,
+            max_iter: 100_000,
+            stop: StopPolicy::default(),
+            cancel: CancelToken::new(),
+        }
     }
 }
 
@@ -36,16 +54,18 @@ impl BsfConfig {
         Self { workers, ..Self::default() }
     }
 
-    pub fn openmp(mut self, threads: usize) -> Self {
-        self.openmp_threads = threads.max(1);
+    /// Set the intra-worker map threads (the hybrid-mode tier:
+    /// `--workers K --threads-per-worker T` is the paper's MPI × OpenMP
+    /// grid — K worker processes, T map threads inside each).
+    pub fn threads_per_worker(mut self, threads: usize) -> Self {
+        self.threads_per_worker = threads.max(1);
         self
     }
 
-    /// Alias for [`openmp`](Self::openmp) in the hybrid-mode spelling:
-    /// `--workers K --threads-per-worker T` is the paper's MPI × OpenMP
-    /// grid (K worker processes, T map threads inside each).
-    pub fn threads_per_worker(self, threads: usize) -> Self {
-        self.openmp(threads)
+    /// Seed-era alias for [`threads_per_worker`](Self::threads_per_worker).
+    #[deprecated(note = "use threads_per_worker (the canonical hybrid-mode spelling)")]
+    pub fn openmp(self, threads: usize) -> Self {
+        self.threads_per_worker(threads)
     }
 
     pub fn trace(mut self, every: usize) -> Self {
@@ -57,30 +77,77 @@ impl BsfConfig {
         self.max_iter = cap;
         self
     }
+
+    /// Attach a declarative [`StopPolicy`].
+    pub fn stop(mut self, policy: StopPolicy) -> Self {
+        self.stop = policy;
+        self
+    }
+
+    /// Attach a [`CancelToken`] (keep a clone to call `cancel()` on).
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cancel = token;
+        self
+    }
+
+    /// The effective iteration cap: `max_iter` tightened by the stop
+    /// policy's cap when one is set.
+    pub fn effective_max_iter(&self) -> usize {
+        match self.stop.max_iter {
+            Some(cap) => cap.min(self.max_iter),
+            None => self.max_iter,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn builder_chain() {
-        let c = BsfConfig::with_workers(4).openmp(2).trace(10).max_iter(99);
+        let c = BsfConfig::with_workers(4).threads_per_worker(2).trace(10).max_iter(99);
         assert_eq!(c.workers, 4);
-        assert_eq!(c.openmp_threads, 2);
+        assert_eq!(c.threads_per_worker, 2);
         assert_eq!(c.trace_count, 10);
         assert_eq!(c.max_iter, 99);
+        assert!(c.stop.is_empty());
+        assert!(!c.cancel.is_cancelled());
     }
 
     #[test]
-    fn openmp_floor_is_one() {
-        assert_eq!(BsfConfig::default().openmp(0).openmp_threads, 1);
+    fn threads_per_worker_floor_is_one() {
+        assert_eq!(BsfConfig::default().threads_per_worker(0).threads_per_worker, 1);
+        assert_eq!(BsfConfig::with_workers(2).threads_per_worker(8).threads_per_worker, 8);
     }
 
     #[test]
-    fn threads_per_worker_is_the_openmp_alias() {
-        let c = BsfConfig::with_workers(2).threads_per_worker(8);
-        assert_eq!(c.openmp_threads, 8);
-        assert_eq!(BsfConfig::default().threads_per_worker(0).openmp_threads, 1);
+    fn deprecated_openmp_alias_still_sets_the_canonical_field() {
+        #[allow(deprecated)]
+        let c = BsfConfig::default().openmp(3);
+        assert_eq!(c.threads_per_worker, 3);
+        #[allow(deprecated)]
+        let floored = BsfConfig::default().openmp(0);
+        assert_eq!(floored.threads_per_worker, 1);
+    }
+
+    #[test]
+    fn effective_max_iter_takes_the_lower_cap() {
+        let c = BsfConfig::default().max_iter(100);
+        assert_eq!(c.effective_max_iter(), 100);
+        let c = c.stop(StopPolicy::new().max_iter(7));
+        assert_eq!(c.effective_max_iter(), 7);
+        let c = BsfConfig::default().max_iter(3).stop(StopPolicy::new().max_iter(9));
+        assert_eq!(c.effective_max_iter(), 3);
+    }
+
+    #[test]
+    fn stop_policy_rides_along_clones() {
+        let c = BsfConfig::default()
+            .stop(StopPolicy::new().deadline(Duration::from_secs(1)).until(|_| false));
+        let c2 = c.clone();
+        assert!(c2.stop.deadline.is_some());
+        assert!(c2.stop.predicate.is_some());
     }
 }

@@ -1,0 +1,364 @@
+//! The iteration-driver layer: stepping, steering, stopping and
+//! checkpointing a run **one master iteration at a time**.
+//!
+//! The BSF model is iteration-structured — cost and scalability are
+//! defined *per iteration* (Algorithm 2), not per run — and this module
+//! makes the execution API match: every engine's
+//! [`launch`](crate::skeleton::engine::Engine::launch) returns a boxed
+//! [`Driver`] whose [`step`](Driver::step) advances exactly one master
+//! iteration and yields a typed [`IterationEvent`]. `Bsf::run()` is a
+//! thin `loop { step }` on top (see
+//! [`Bsf::iterate`](crate::skeleton::session::Bsf::iterate)).
+//!
+//! Three steering mechanisms compose with stepping:
+//!
+//! * a declarative [`StopPolicy`] on
+//!   [`BsfConfig`](crate::skeleton::config::BsfConfig) — iteration cap,
+//!   wall-clock deadline on the engine's clock, or a user predicate over
+//!   the per-iteration [`IterCtx`] — evaluated by the shared decision
+//!   step on every engine;
+//! * a clonable [`CancelToken`] that aborts a run *between* iterations
+//!   with a typed [`BsfError::Cancelled`] — workers are released (the
+//!   exit flag is broadcast, over threads or TCP alike) before the error
+//!   surfaces, so cancellation never hangs or leaks a worker;
+//! * a [`Checkpoint`] — the master's whole inter-iteration state (the
+//!   current approximation, the iteration counter and the job case) —
+//!   takeable from any driver between steps, serializable with the
+//!   existing [`Codec`], and restorable with
+//!   [`Bsf::resume`](crate::skeleton::session::Bsf::resume). Because the
+//!   skeleton's state between iterations is exactly these three values,
+//!   a resumed run is bit-identical to an uninterrupted one.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::BsfError;
+use crate::skeleton::problem::{BsfProblem, IterCtx};
+use crate::skeleton::report::{Clock, RunReport};
+use crate::util::codec::Codec;
+
+/// Why a run stopped iterating (carried by the final [`IterationEvent`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The problem's own stop condition held (`process_results` /
+    /// `job_dispatcher` set `exit` — the paper's `StopCond`).
+    Converged,
+    /// The iteration cap was reached (`BsfConfig::max_iter` or
+    /// `StopPolicy::max_iter`, whichever is lower).
+    MaxIter,
+    /// The [`StopPolicy`] deadline elapsed (on the engine's clock:
+    /// wall seconds for real engines, virtual seconds on the simulator).
+    Deadline,
+    /// The [`StopPolicy`] user predicate returned true.
+    Predicate,
+}
+
+/// What one [`Driver::step`] observed: the typed per-iteration event of
+/// Algorithm 2's master loop.
+#[derive(Debug, Clone)]
+pub struct IterationEvent<Param> {
+    /// Iterations completed so far (1-based after the first step; a
+    /// resumed run continues from its checkpoint's counter).
+    pub iter: usize,
+    /// The job case this iteration ran (`BSF_sv_jobCase`).
+    pub job_case: usize,
+    /// The job the dispatcher chose for the next iteration.
+    pub next_job: usize,
+    /// The extended-reduce participation counter of this iteration.
+    pub reduce_counter: u64,
+    /// Seconds since launch on `clock`.
+    pub elapsed: f64,
+    /// Which clock `elapsed` was measured on.
+    pub clock: Clock,
+    /// `Some` on the final iteration — the run has stopped and
+    /// [`Driver::finish`] will produce the report.
+    pub stop: Option<StopReason>,
+    /// Optional snapshot of the approximation: engines attach it to the
+    /// stopping event; between steps use [`Driver::checkpoint`] for an
+    /// on-demand snapshot.
+    pub param: Option<Param>,
+}
+
+/// A launched run, advanced one master iteration per [`step`](Self::step).
+///
+/// Between steps the workers (threads or processes) sit blocked waiting
+/// for the next order, so a driver can pause indefinitely, take a
+/// [`Checkpoint`], or be finished early — [`finish`](Self::finish) before
+/// the stop event releases the workers gracefully (they accept an exit
+/// order at the top of their loop) and reports the partial run.
+///
+/// Dropping a driver mid-run releases and reaps its workers (a
+/// persistent [`Cluster`](crate::skeleton::cluster::Cluster) driver
+/// parks its live workers back into the pool); `finish()` additionally
+/// returns the report.
+pub trait Driver<P: BsfProblem> {
+    /// Engine name, recorded in [`RunReport::engine`].
+    fn engine(&self) -> &'static str;
+
+    /// Advance exactly one master iteration.
+    ///
+    /// Errors: [`BsfError::Cancelled`] when the config's [`CancelToken`]
+    /// fired (workers have been released), any transport/worker error of
+    /// the underlying engine, or a config error when stepping a driver
+    /// whose run already stopped.
+    fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError>;
+
+    /// Snapshot the master's inter-iteration state. Valid between any
+    /// two steps; restoring it with
+    /// [`Bsf::resume`](crate::skeleton::session::Bsf::resume) continues
+    /// the run bit-identically.
+    fn checkpoint(&self) -> Checkpoint<P::Param>;
+
+    /// Finish the run and produce the unified report: joins/reaps worker
+    /// threads or processes (or parks them, for a cluster). Called after
+    /// the stop event this is the normal end of a run; called earlier it
+    /// stops the run gracefully between iterations.
+    fn finish(self: Box<Self>) -> Result<RunReport<P::Param>, BsfError>;
+}
+
+/// Declarative stop conditions evaluated by every engine's decision step
+/// (in addition to the problem's own `StopCond`). Attached to
+/// [`BsfConfig::stop`](crate::skeleton::config::BsfConfig::stop).
+#[derive(Clone, Default)]
+pub struct StopPolicy {
+    /// Stop after this many iterations (combined with
+    /// `BsfConfig::max_iter`; the lower cap wins).
+    pub max_iter: Option<usize>,
+    /// Stop once the run has spent this long on the engine's clock
+    /// (checked between iterations — a running iteration completes).
+    pub deadline: Option<Duration>,
+    /// Stop when this predicate over the iteration context returns true
+    /// (checked after `process_results`, like the paper's `StopCond`).
+    pub predicate: Option<Arc<dyn Fn(&IterCtx) -> bool + Send + Sync>>,
+}
+
+impl StopPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cap the run at `n` iterations.
+    pub fn max_iter(mut self, n: usize) -> Self {
+        self.max_iter = Some(n);
+        self
+    }
+
+    /// Stop once `deadline` has elapsed on the engine's clock.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Stop when `pred` holds for the just-completed iteration.
+    pub fn until(mut self, pred: impl Fn(&IterCtx) -> bool + Send + Sync + 'static) -> Self {
+        self.predicate = Some(Arc::new(pred));
+        self
+    }
+
+    /// True when no declarative stop is configured.
+    pub fn is_empty(&self) -> bool {
+        self.max_iter.is_none() && self.deadline.is_none() && self.predicate.is_none()
+    }
+}
+
+impl fmt::Debug for StopPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("StopPolicy")
+            .field("max_iter", &self.max_iter)
+            .field("deadline", &self.deadline)
+            .field("predicate", &self.predicate.as_ref().map(|_| "<user predicate>"))
+            .finish()
+    }
+}
+
+/// A clonable cancellation handle: `cancel()` from any thread aborts the
+/// run it is attached to between iterations with a typed
+/// [`BsfError::Cancelled`]. The engine releases its workers (exit-flag
+/// broadcast — across the TCP protocol too) before surfacing the error,
+/// so cancellation never strands a worker.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation; idempotent.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// Magic prefix of a serialized [`Checkpoint`] ("BSFC").
+const CHECKPOINT_MAGIC: u32 = 0x4253_4643;
+/// Serialization version; bump on layout changes.
+const CHECKPOINT_VERSION: u16 = 1;
+
+/// The master's whole inter-iteration state: enough to continue the run
+/// bit-identically. Serialized with the same [`Codec`] the transport
+/// uses for order parameters, so any `P::Param` that can cross the wire
+/// can be checkpointed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint<Param> {
+    /// The current approximation (the order parameter of the *next*
+    /// iteration).
+    pub param: Param,
+    /// Iterations completed when the checkpoint was taken.
+    pub iter: usize,
+    /// The job case the next iteration will run.
+    pub job: usize,
+}
+
+impl<Param: Codec> Checkpoint<Param> {
+    /// Decode a checkpoint, validating the magic/version header first —
+    /// unlike `Codec::from_bytes`, a non-checkpoint buffer is a typed
+    /// error rather than a decode panic. (A corrupted *param* section
+    /// can still panic in the param codec; the header check catches the
+    /// wrong-file case, not arbitrary corruption.)
+    pub fn try_from_bytes(buf: &[u8]) -> Result<Self, BsfError> {
+        if buf.len() < 4 + 2 + 8 + 8 {
+            return Err(BsfError::config(format!(
+                "checkpoint buffer of {} bytes is shorter than the fixed header",
+                buf.len()
+            )));
+        }
+        let mut pos = 0usize;
+        let magic = u32::decode(buf, &mut pos);
+        if magic != CHECKPOINT_MAGIC {
+            return Err(BsfError::config(
+                "buffer is not a BSF checkpoint (bad magic)",
+            ));
+        }
+        let version = u16::decode(buf, &mut pos);
+        if version != CHECKPOINT_VERSION {
+            return Err(BsfError::config(format!(
+                "unsupported checkpoint version {version} (expected {CHECKPOINT_VERSION})"
+            )));
+        }
+        let iter = usize::decode(buf, &mut pos);
+        let job = usize::decode(buf, &mut pos);
+        let param = Param::decode(buf, &mut pos);
+        Ok(Self { param, iter, job })
+    }
+}
+
+impl<Param: Codec> Codec for Checkpoint<Param> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        CHECKPOINT_MAGIC.encode(buf);
+        CHECKPOINT_VERSION.encode(buf);
+        self.iter.encode(buf);
+        self.job.encode(buf);
+        self.param.encode(buf);
+    }
+
+    fn decode(buf: &[u8], pos: &mut usize) -> Self {
+        let magic = u32::decode(buf, pos);
+        assert_eq!(magic, CHECKPOINT_MAGIC, "not a BSF checkpoint (bad magic)");
+        let version = u16::decode(buf, pos);
+        assert_eq!(version, CHECKPOINT_VERSION, "unsupported checkpoint version");
+        let iter = usize::decode(buf, pos);
+        let job = usize::decode(buf, pos);
+        let param = Param::decode(buf, pos);
+        Self { param, iter, job }
+    }
+}
+
+/// Validate a checkpoint against the problem's workflow without
+/// consuming it — engines that spawn expensive resources run this (plus
+/// `validate_run`) *before* spawning anything.
+pub(crate) fn validate_start<P: BsfProblem>(
+    problem: &P,
+    start: Option<&Checkpoint<P::Param>>,
+) -> Result<(), BsfError> {
+    if let Some(ck) = start {
+        if ck.job >= problem.job_count() {
+            return Err(BsfError::config(format!(
+                "checkpoint resumes at job case {} but this problem's job_count is {}",
+                ck.job,
+                problem.job_count()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Shared start-state resolution for every engine's launch: a fresh run
+/// begins from `init_parameter` at iteration 0 / job 0; a resumed run
+/// restores the checkpoint (validated against the problem's workflow).
+pub(crate) fn start_state<P: BsfProblem>(
+    problem: &P,
+    start: Option<Checkpoint<P::Param>>,
+) -> Result<(P::Param, usize, usize), BsfError> {
+    validate_start(problem, start.as_ref())?;
+    match start {
+        Some(ck) => Ok((ck.param, ck.iter, ck.job)),
+        None => Ok((problem.init_parameter(), 0, 0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_is_shared_through_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t.is_cancelled());
+        t2.cancel();
+        assert!(t.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn stop_policy_builder_and_debug() {
+        let p = StopPolicy::new()
+            .max_iter(9)
+            .deadline(Duration::from_millis(5))
+            .until(|ctx| ctx.iter_counter > 3);
+        assert_eq!(p.max_iter, Some(9));
+        assert_eq!(p.deadline, Some(Duration::from_millis(5)));
+        assert!(p.predicate.is_some());
+        assert!(!p.is_empty());
+        assert!(StopPolicy::new().is_empty());
+        let dbg = format!("{p:?}");
+        assert!(dbg.contains("user predicate"), "{dbg}");
+    }
+
+    #[test]
+    fn checkpoint_codec_roundtrip_and_header_validation() {
+        let ck = Checkpoint { param: vec![1.5f64, -2.25, 0.0], iter: 42, job: 1 };
+        let bytes = ck.to_bytes();
+        assert_eq!(Checkpoint::<Vec<f64>>::from_bytes(&bytes), ck);
+        assert_eq!(Checkpoint::<Vec<f64>>::try_from_bytes(&bytes).unwrap(), ck);
+
+        // Wrong magic is a typed error via the checked path.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        let err = Checkpoint::<Vec<f64>>::try_from_bytes(&bad).unwrap_err();
+        assert!(matches!(err, BsfError::Config(_)), "{err}");
+
+        // Too short is a typed error, not an index panic.
+        let err = Checkpoint::<Vec<f64>>::try_from_bytes(&bytes[..8]).unwrap_err();
+        assert!(err.to_string().contains("shorter"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_version_mismatch_is_typed() {
+        let ck = Checkpoint { param: 0u64, iter: 1, job: 0 };
+        let mut bytes = ck.to_bytes();
+        bytes[4] = 99; // version low byte
+        let err = Checkpoint::<u64>::try_from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+}

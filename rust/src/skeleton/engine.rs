@@ -9,9 +9,17 @@
 //! engine decides whether iterations run on real worker threads
 //! ([`ThreadedEngine`]), in-process without any transport
 //! ([`SerialEngine`], the K=1 fast path), across real worker **OS
-//! processes** over TCP ([`ProcessEngine`]), or on the virtual-time
-//! cluster simulator ([`SimulatedEngine`]). All of them return the same
-//! [`RunReport`].
+//! processes** over TCP ([`ProcessEngine`], or [`ClusterEngine`] for a
+//! persistent worker pool), or on the virtual-time cluster simulator
+//! ([`SimulatedEngine`]).
+//!
+//! Since the iteration-driver redesign the trait's required method is
+//! [`launch`](Engine::launch): it returns a [`Driver`] that advances
+//! **one master iteration per step** and yields typed
+//! [`IterationEvent`](crate::skeleton::driver::IterationEvent)s.
+//! [`run`](Engine::run) is a provided `loop { step }` on top, so a
+//! one-shot run and a stepped run are the same code path — bit-identical
+//! by construction.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -19,17 +27,22 @@ use std::time::Instant;
 use crate::costmodel::ClusterProfile;
 use crate::error::BsfError;
 use crate::metrics::{Phase, PhaseTimers};
-use crate::simcluster::{simulate, SimConfig};
+use crate::simcluster::{launch_sim, SimConfig};
 use crate::skeleton::backend::MapBackend;
 use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::{
+    start_state, Checkpoint, Driver, IterationEvent, StopReason,
+};
 use crate::skeleton::master::{decide_step, next_job_error};
+use crate::skeleton::pool::ChunkPool;
 use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
-use crate::skeleton::runner::{run_threaded_session, validate_run};
+use crate::skeleton::runner::{launch_threaded, validate_run};
 use crate::skeleton::variables::SkelVars;
 use crate::skeleton::worker::{intra_worker_pool, map_and_fold, WorkerReport};
 use crate::transport::VolumeByTag;
 
+pub use crate::skeleton::cluster::ClusterEngine;
 pub use crate::skeleton::process::ProcessEngine;
 
 /// An execution strategy for one skeleton run.
@@ -37,18 +50,39 @@ pub trait Engine<P: BsfProblem> {
     /// Engine name, recorded in [`RunReport::engine`].
     fn name(&self) -> &'static str;
 
-    /// Run `problem` under `cfg`, mapping worker sublists through
-    /// `backend`.
+    /// Launch `problem` under `cfg` (optionally resuming from a
+    /// [`Checkpoint`]) and return the iteration driver: one
+    /// [`Driver::step`] per master iteration, workers parked between
+    /// steps, [`Driver::finish`] for the unified report.
+    fn launch(
+        &self,
+        problem: Arc<P>,
+        backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError>;
+
+    /// Run to completion: `launch` + `loop { step }` + `finish`. The
+    /// one-shot convenience every engine shares — overriding is neither
+    /// needed nor expected.
     fn run(
         &self,
         problem: Arc<P>,
         backend: Arc<dyn MapBackend<P>>,
         cfg: &BsfConfig,
-    ) -> Result<RunReport<P::Param>, BsfError>;
+    ) -> Result<RunReport<P::Param>, BsfError> {
+        let mut driver = self.launch(problem, backend, cfg, None)?;
+        loop {
+            let event = driver.step()?;
+            if event.stop.is_some() {
+                return driver.finish();
+            }
+        }
+    }
 }
 
 /// Real execution: K worker OS threads + the calling thread as master
-/// over the in-process message transport (the seed's `run_threaded`).
+/// over the in-process message transport (the seed's threaded runner).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ThreadedEngine;
 
@@ -57,13 +91,14 @@ impl<P: BsfProblem> Engine<P> for ThreadedEngine {
         "threaded"
     }
 
-    fn run(
+    fn launch(
         &self,
         problem: Arc<P>,
         backend: Arc<dyn MapBackend<P>>,
         cfg: &BsfConfig,
-    ) -> Result<RunReport<P::Param>, BsfError> {
-        run_threaded_session(problem, backend, cfg)
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError> {
+        launch_threaded(problem, backend, cfg, start)
     }
 }
 
@@ -79,12 +114,13 @@ impl<P: BsfProblem> Engine<P> for SerialEngine {
         "serial"
     }
 
-    fn run(
+    fn launch(
         &self,
         problem: Arc<P>,
         backend: Arc<dyn MapBackend<P>>,
         cfg: &BsfConfig,
-    ) -> Result<RunReport<P::Param>, BsfError> {
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError> {
         validate_run(&*problem, cfg)?;
         if cfg.workers != 1 {
             return Err(BsfError::config(format!(
@@ -93,6 +129,7 @@ impl<P: BsfProblem> Engine<P> for SerialEngine {
                 cfg.workers
             )));
         }
+        let (param, iter, job) = start_state(&*problem, start)?;
 
         let n = problem.list_size();
         // Step 1: the single worker's static sublist is the whole list.
@@ -103,95 +140,206 @@ impl<P: BsfProblem> Engine<P> for SerialEngine {
         // of the hybrid grid).
         let pool = intra_worker_pool(cfg);
 
-        let mut param = problem.init_parameter();
         problem.parameters_output(&param);
 
-        let t0 = Instant::now();
-        let mut timers = PhaseTimers::new();
-        let mut map_seconds = 0.0f64;
-        let mut max_chunk_seconds = 0.0f64;
-        let mut merge_seconds = 0.0f64;
-        let mut job = 0usize;
-        let mut iter = 0usize;
+        Ok(Box::new(SerialDriver {
+            problem,
+            backend,
+            cfg: cfg.clone(),
+            elems,
+            pool,
+            param,
+            job,
+            iter,
+            start_iter: iter,
+            t0: Instant::now(),
+            timers: PhaseTimers::new(),
+            map_seconds: 0.0,
+            max_chunk_seconds: 0.0,
+            merge_seconds: 0.0,
+            stop: None,
+            done: false,
+            panicked: None,
+            elapsed_done: 0.0,
+        }))
+    }
+}
 
-        loop {
-            // Steps 3-4 (worker side): Map + local Reduce over the list.
-            // Like the threaded engine, a panic in user map code becomes
-            // a typed WorkerPanic instead of unwinding through the API.
-            let vars = SkelVars::for_worker(0, 1, 0, n, iter, job);
-            let tm = Instant::now();
-            let mapped = timers.time(Phase::Gather, || {
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    map_and_fold(&*problem, &*backend, &elems, &param, vars, pool.as_ref())
-                }))
-            });
-            let mapped = match mapped {
-                Ok(mapped) => mapped,
-                Err(_) => return Err(BsfError::WorkerPanic { rank: 0 }),
-            };
-            max_chunk_seconds += mapped.max_chunk_seconds;
-            merge_seconds += mapped.merge_seconds;
-            let merged = mapped.fold;
-            map_seconds += tm.elapsed().as_secs_f64();
+/// The serial engine's driver: one iteration of Map + local Reduce +
+/// the shared decision step per [`Driver::step`], all on the calling
+/// thread.
+struct SerialDriver<P: BsfProblem> {
+    problem: Arc<P>,
+    backend: Arc<dyn MapBackend<P>>,
+    cfg: BsfConfig,
+    elems: Vec<P::MapElem>,
+    pool: Option<ChunkPool>,
+    param: P::Param,
+    job: usize,
+    iter: usize,
+    /// Iteration counter at launch (non-zero when resuming): the
+    /// worker-report counts iterations performed *this run*.
+    start_iter: usize,
+    t0: Instant,
+    timers: PhaseTimers,
+    map_seconds: f64,
+    max_chunk_seconds: f64,
+    merge_seconds: f64,
+    stop: Option<StopReason>,
+    done: bool,
+    /// Rank whose map panicked (finish() re-reports it, matching the
+    /// threaded engine where the panic resurfaces at join time).
+    panicked: Option<usize>,
+    elapsed_done: f64,
+}
 
-            // Steps 7-9 (master side): the shared decision step.
-            iter += 1;
-            let ctx = IterCtx {
-                iter_counter: iter,
-                job_case: job,
-                num_of_workers: 1,
-                elapsed: t0.elapsed().as_secs_f64(),
-            };
-            let decision = timers.time(Phase::Process, || {
-                decide_step(&*problem, &merged, &mut param, &ctx, cfg.max_iter)
-            });
+impl<P: BsfProblem> Driver<P> for SerialDriver<P> {
+    fn engine(&self) -> &'static str {
+        "serial"
+    }
 
-            if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
-                problem.iter_output(
-                    merged.value.as_ref(),
-                    merged.counter,
-                    &param,
-                    &ctx,
-                    decision.next_job,
-                );
+    fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
+        if self.done {
+            return Err(BsfError::config(
+                "driver already stopped (finish() it instead of stepping again)",
+            ));
+        }
+        if self.cfg.cancel.is_cancelled() {
+            self.done = true;
+            return Err(BsfError::Cancelled);
+        }
+        let problem = &*self.problem;
+        let n = self.elems.len();
+
+        // Steps 3-4 (worker side): Map + local Reduce over the list.
+        // Like the threaded engine, a panic in user map code becomes
+        // a typed WorkerPanic instead of unwinding through the API.
+        let vars = SkelVars::for_worker(0, 1, 0, n, self.iter, self.job);
+        let tm = Instant::now();
+        let elems = &self.elems;
+        let backend = &*self.backend;
+        let param_ref = &self.param;
+        let pool = self.pool.as_ref();
+        let mapped = self.timers.time(Phase::Gather, || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                map_and_fold(problem, backend, elems, param_ref, vars, pool)
+            }))
+        });
+        let mapped = match mapped {
+            Ok(mapped) => mapped,
+            Err(_) => {
+                self.done = true;
+                self.panicked = Some(0);
+                return Err(BsfError::WorkerPanic { rank: 0 });
             }
+        };
+        self.max_chunk_seconds += mapped.max_chunk_seconds;
+        self.merge_seconds += mapped.merge_seconds;
+        let merged = mapped.fold;
+        self.map_seconds += tm.elapsed().as_secs_f64();
 
-            if decision.exit {
-                let elapsed = t0.elapsed().as_secs_f64();
-                problem.problem_output(
-                    merged.value.as_ref(),
-                    merged.counter,
-                    &param,
-                    elapsed,
-                );
-                return Ok(RunReport {
-                    param,
-                    iterations: iter,
-                    elapsed,
-                    clock: Clock::Real,
-                    wall_seconds: elapsed,
-                    engine: "serial",
-                    phases: PhaseBreakdown::from_timers(&timers),
-                    workers: vec![WorkerReport {
-                        rank: 0,
-                        iterations: iter,
-                        map_seconds,
-                        sublist_length: n,
-                        threads: cfg.openmp_threads.max(1),
-                        max_chunk_seconds,
-                        merge_seconds,
-                    }],
-                    messages: 0,
-                    bytes: 0,
-                    volume: VolumeByTag::default(),
-                });
-            }
+        // Steps 7-9 (master side): the shared decision step.
+        self.iter += 1;
+        let ctx = IterCtx {
+            iter_counter: self.iter,
+            job_case: self.job,
+            num_of_workers: 1,
+            elapsed: self.t0.elapsed().as_secs_f64(),
+        };
+        let param = &mut self.param;
+        let cfg = &self.cfg;
+        let (decision, stop_reason) = self.timers.time(Phase::Process, || {
+            decide_step(problem, &merged, param, &ctx, cfg)
+        });
 
-            if let Some(e) = next_job_error(&*problem, &decision) {
+        if self.cfg.trace_count > 0 && self.iter % self.cfg.trace_count == 0 {
+            problem.iter_output(
+                merged.value.as_ref(),
+                merged.counter,
+                &self.param,
+                &ctx,
+                decision.next_job,
+            );
+        }
+
+        if !decision.exit {
+            if let Some(e) = next_job_error(problem, &decision) {
+                self.done = true;
                 return Err(e);
             }
-            job = decision.next_job;
         }
+
+        let mut event = IterationEvent {
+            iter: self.iter,
+            job_case: ctx.job_case,
+            next_job: decision.next_job,
+            reduce_counter: merged.counter,
+            elapsed: self.t0.elapsed().as_secs_f64(),
+            clock: Clock::Real,
+            stop: None,
+            param: None,
+        };
+
+        if decision.exit {
+            let elapsed = self.t0.elapsed().as_secs_f64();
+            problem.problem_output(
+                merged.value.as_ref(),
+                merged.counter,
+                &self.param,
+                elapsed,
+            );
+            self.elapsed_done = elapsed;
+            self.stop = stop_reason.or(Some(StopReason::Converged));
+            self.done = true;
+            event.stop = self.stop;
+            event.elapsed = elapsed;
+            event.param = Some(self.param.clone());
+        } else {
+            self.job = decision.next_job;
+        }
+
+        Ok(event)
+    }
+
+    fn checkpoint(&self) -> Checkpoint<P::Param> {
+        Checkpoint { param: self.param.clone(), iter: self.iter, job: self.job }
+    }
+
+    fn finish(self: Box<Self>) -> Result<RunReport<P::Param>, BsfError> {
+        let this = *self;
+        // Same contract as the threaded engine, where the panic
+        // resurfaces when the worker is joined: a panicked run has no
+        // salvageable report.
+        if let Some(rank) = this.panicked {
+            return Err(BsfError::WorkerPanic { rank });
+        }
+        let elapsed = if this.stop.is_some() {
+            this.elapsed_done
+        } else {
+            this.t0.elapsed().as_secs_f64()
+        };
+        Ok(RunReport {
+            param: this.param,
+            iterations: this.iter,
+            elapsed,
+            clock: Clock::Real,
+            wall_seconds: elapsed,
+            engine: "serial",
+            phases: PhaseBreakdown::from_timers(&this.timers),
+            workers: vec![WorkerReport {
+                rank: 0,
+                iterations: this.iter - this.start_iter,
+                map_seconds: this.map_seconds,
+                sublist_length: this.elems.len(),
+                threads: this.cfg.threads_per_worker.max(1),
+                max_chunk_seconds: this.max_chunk_seconds,
+                merge_seconds: this.merge_seconds,
+                pid: std::process::id(),
+            }],
+            messages: 0,
+            bytes: 0,
+            volume: VolumeByTag::default(),
+        })
     }
 }
 
@@ -227,34 +375,14 @@ impl<P: BsfProblem> Engine<P> for SimulatedEngine {
         "simulated"
     }
 
-    fn run(
+    fn launch(
         &self,
         problem: Arc<P>,
         backend: Arc<dyn MapBackend<P>>,
         cfg: &BsfConfig,
-    ) -> Result<RunReport<P::Param>, BsfError> {
-        let (r, workers) = simulate(&*problem, &*backend, cfg, &self.sim)?;
-        let iters = r.iterations as f64;
-        Ok(RunReport {
-            param: r.param,
-            iterations: r.iterations,
-            elapsed: r.virtual_seconds,
-            clock: Clock::Virtual,
-            wall_seconds: r.real_seconds,
-            engine: "simulated",
-            // SimReport's breakdown is a per-iteration mean; the unified
-            // report carries whole-run totals like the other engines.
-            phases: PhaseBreakdown {
-                send: r.breakdown.send * iters,
-                gather: r.breakdown.compute_and_gather * iters,
-                reduce: r.breakdown.master_reduce * iters,
-                process: r.breakdown.process_and_exit * iters,
-            },
-            workers,
-            messages: r.messages,
-            bytes: r.bytes,
-            volume: r.volume,
-        })
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError> {
+        launch_sim(problem, backend, cfg, self.sim, start)
     }
 }
 
@@ -268,16 +396,17 @@ impl<P: BsfProblem> Engine<P> for AutoEngine {
         "auto"
     }
 
-    fn run(
+    fn launch(
         &self,
         problem: Arc<P>,
         backend: Arc<dyn MapBackend<P>>,
         cfg: &BsfConfig,
-    ) -> Result<RunReport<P::Param>, BsfError> {
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError> {
         if cfg.workers == 1 {
-            SerialEngine.run(problem, backend, cfg)
+            SerialEngine.launch(problem, backend, cfg, start)
         } else {
-            ThreadedEngine.run(problem, backend, cfg)
+            ThreadedEngine.launch(problem, backend, cfg, start)
         }
     }
 }

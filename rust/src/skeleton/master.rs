@@ -1,4 +1,5 @@
-//! The master process (`BC_Master`, left column of Algorithm 2).
+//! The master process (`BC_Master`, left column of Algorithm 2), as a
+//! resumable **iteration state machine**.
 //!
 //! Per iteration the master: broadcasts the order (current approximation
 //! + job number) to all workers, gathers the K partial folds in
@@ -7,18 +8,29 @@
 //! `job_dispatcher`, and broadcasts the exit flag. Steps 2 and 10 are the
 //! implicit global synchronization points the paper notes.
 //!
+//! [`MasterLoop`] holds the inter-iteration state (approximation, job
+//! case, iteration counter, phase timers) and advances one iteration per
+//! [`step_comm`](MasterLoop::step_comm) over any [`Communicator`] — the
+//! thread transport and the TCP transport drive the exact same machine,
+//! so the threaded, process and cluster drivers share one Algorithm-2
+//! master. [`run_master`] is the loop-to-completion convenience over it.
+//!
 //! All failure modes are typed [`BsfError`]s; on a mid-run configuration
 //! error (e.g. `process_results` returns an out-of-range `next_job`) the
 //! master broadcasts the exit flag first so workers terminate cleanly,
-//! then reports the error.
+//! then reports the error. Cancellation (the config's `CancelToken`)
+//! takes the same release-first path and surfaces
+//! [`BsfError::Cancelled`].
 
 use std::time::Instant;
 
 use crate::error::BsfError;
 use crate::metrics::{Phase, PhaseTimers};
 use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::{start_state, Checkpoint, IterationEvent, StopReason};
 use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::reduce::{merge_folds, ExtendedFold};
+use crate::skeleton::report::Clock;
 use crate::skeleton::runner::validate_run;
 use crate::transport::{Communicator, Tag};
 use crate::util::codec::Codec;
@@ -26,7 +38,7 @@ use crate::util::codec::Codec;
 /// Best-effort shutdown broadcast: tell every worker to exit, ignoring
 /// unreachable ones. Used on every master-side error path so surviving
 /// workers terminate instead of blocking the runner's join.
-fn abort_workers<C: Communicator>(comm: &C, k: usize) {
+fn abort_workers<C: Communicator + ?Sized>(comm: &C, k: usize) {
     let payload = true.to_bytes();
     for w in 0..k {
         let _ = comm.send(w, Tag::Exit, payload.clone());
@@ -34,25 +46,46 @@ fn abort_workers<C: Communicator>(comm: &C, k: usize) {
 }
 
 /// Steps 7-9 of Algorithm 2, shared by every engine: `process_results`
-/// + `job_dispatcher`, then force exit at the iteration cap. Trace
-/// output and wall-time attribution stay with the caller — the engines
-/// instrument them differently.
+/// + `job_dispatcher`, then the declarative stops — the iteration cap
+/// (`max_iter` tightened by `StopPolicy::max_iter`), the engine-clock
+/// deadline and the user predicate. Returns the decision plus *why* the
+/// run stops (None while it continues). Trace output and wall-time
+/// attribution stay with the caller — the engines instrument them
+/// differently.
 pub(crate) fn decide_step<P: BsfProblem>(
     problem: &P,
     merged: &ExtendedFold<P::ReduceElem>,
     param: &mut P::Param,
     ctx: &IterCtx,
-    max_iter: usize,
-) -> crate::skeleton::workflow::JobDecision {
+    cfg: &BsfConfig,
+) -> (crate::skeleton::workflow::JobDecision, Option<StopReason>) {
     let mut d =
         problem.process_results(merged.value.as_ref(), merged.counter, param, ctx);
     if let Some(over) = problem.job_dispatcher(param, d, ctx) {
         d = over;
     }
-    if ctx.iter_counter >= max_iter {
+    let mut reason = if d.exit { Some(StopReason::Converged) } else { None };
+    if reason.is_none() && ctx.iter_counter >= cfg.effective_max_iter() {
         d.exit = true;
+        reason = Some(StopReason::MaxIter);
     }
-    d
+    if reason.is_none() {
+        if let Some(deadline) = cfg.stop.deadline {
+            if ctx.elapsed >= deadline.as_secs_f64() {
+                d.exit = true;
+                reason = Some(StopReason::Deadline);
+            }
+        }
+    }
+    if reason.is_none() {
+        if let Some(pred) = &cfg.stop.predicate {
+            if pred(ctx) {
+                d.exit = true;
+                reason = Some(StopReason::Predicate);
+            }
+        }
+    }
+    (d, reason)
 }
 
 /// The shared out-of-range `next_job` configuration error (None when the
@@ -77,7 +110,7 @@ pub(crate) fn next_job_error<P: BsfProblem>(
 pub struct MasterOutcome<Param> {
     /// The final approximation (the algorithm's output, step 12).
     pub param: Param,
-    /// Iterations performed.
+    /// Iterations performed (including any resumed checkpoint's count).
     pub iterations: usize,
     /// Wall seconds for the whole iterative process.
     pub elapsed: f64,
@@ -85,46 +118,132 @@ pub struct MasterOutcome<Param> {
     pub timers: PhaseTimers,
 }
 
-/// Run the master loop over `comm` until the stop condition holds.
-///
-/// `comm.rank()` must be the master rank (== `cfg.workers`).
-pub fn run_master<P: BsfProblem, C: Communicator>(
-    problem: &P,
-    comm: &C,
-    cfg: &BsfConfig,
-) -> Result<MasterOutcome<P::Param>, BsfError> {
-    let k = cfg.workers;
-    if comm.rank() != comm.master_rank() {
-        return Err(BsfError::config(format!(
-            "master must run on rank {} (got {})",
-            comm.master_rank(),
-            comm.rank()
-        )));
+/// The master's iteration state machine: everything Algorithm 2 keeps
+/// between iterations, advanced one iteration per [`step_comm`]
+/// (Self::step_comm) over any transport. Engine drivers own one of
+/// these next to their endpoint/worker handles.
+pub(crate) struct MasterLoop<P: BsfProblem> {
+    cfg: BsfConfig,
+    k: usize,
+    param: P::Param,
+    job: usize,
+    iter: usize,
+    t0: Instant,
+    timers: PhaseTimers,
+    /// Set on the stopping iteration.
+    stop: Option<StopReason>,
+    /// True once the workers have been told to exit (normal stop,
+    /// cancellation, or an error-path abort) — after which stepping is
+    /// over and a drop needs no further release.
+    released: bool,
+    /// Elapsed seconds frozen at the stopping iteration.
+    elapsed_done: f64,
+}
+
+impl<P: BsfProblem> MasterLoop<P> {
+    /// Validate and initialize: a fresh run from `init_parameter`, or a
+    /// resumed one from `start`'s checkpoint.
+    pub(crate) fn new(
+        problem: &P,
+        cfg: &BsfConfig,
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Self, BsfError> {
+        validate_run(problem, cfg)?;
+        let (param, iter, job) = start_state(problem, start)?;
+        problem.parameters_output(&param);
+        Ok(Self {
+            cfg: cfg.clone(),
+            k: cfg.workers,
+            param,
+            job,
+            iter,
+            t0: Instant::now(),
+            timers: PhaseTimers::new(),
+            stop: None,
+            released: false,
+            elapsed_done: 0.0,
+        })
     }
-    if comm.size() != k + 1 {
-        return Err(BsfError::config(format!(
-            "transport size {} must be workers+1 = {}",
-            comm.size(),
-            k + 1
-        )));
+
+    pub(crate) fn workers(&self) -> usize {
+        self.k
     }
-    // Problem/config validation shares one source of truth with the
-    // other engines (run_master is also a public entry point, so it
-    // must not rely on the caller having validated).
-    validate_run(problem, cfg)?;
 
-    let mut param = problem.init_parameter();
-    problem.parameters_output(&param);
+    pub(crate) fn done(&self) -> bool {
+        self.stop.is_some()
+    }
 
-    let t0 = Instant::now();
-    let mut timers = PhaseTimers::new();
-    let mut job = 0usize;
-    let mut iter = 0usize;
+    pub(crate) fn released(&self) -> bool {
+        self.released
+    }
 
-    loop {
-        // Step 2: SendToAllWorkers(x^(i)) — the order carries (job, param).
+    pub(crate) fn checkpoint(&self) -> Checkpoint<P::Param> {
+        Checkpoint { param: self.param.clone(), iter: self.iter, job: self.job }
+    }
+
+    /// Release the workers between iterations (early finish / drop): a
+    /// best-effort exit-flag broadcast. Workers at the top of their loop
+    /// accept an exit order and terminate cleanly. No-op once released.
+    pub(crate) fn release<C: Communicator + ?Sized>(&mut self, comm: &C) {
+        if self.released {
+            return;
+        }
+        abort_workers(comm, self.k);
+        self.released = true;
+    }
+
+    /// Snapshot the outcome (after the stop event, or early — in which
+    /// case `elapsed` is measured now and no `problem_output` ran).
+    pub(crate) fn outcome(&self) -> MasterOutcome<P::Param> {
+        MasterOutcome {
+            param: self.param.clone(),
+            iterations: self.iter,
+            elapsed: if self.stop.is_some() {
+                self.elapsed_done
+            } else {
+                self.t0.elapsed().as_secs_f64()
+            },
+            timers: self.timers.clone(),
+        }
+    }
+
+    /// One master iteration of Algorithm 2 over `comm`.
+    pub(crate) fn step_comm<C: Communicator + ?Sized>(
+        &mut self,
+        problem: &P,
+        comm: &C,
+    ) -> Result<IterationEvent<P::Param>, BsfError> {
+        if self.done() || self.released {
+            return Err(BsfError::config(
+                "driver already stopped (finish() it instead of stepping again)",
+            ));
+        }
+        let k = self.k;
+
+        // Cancellation is checked between iterations: release the
+        // workers first (they are blocked waiting for this order), then
+        // surface the typed error.
+        if self.cfg.cancel.is_cancelled() {
+            abort_workers(comm, k);
+            self.released = true;
+            return Err(BsfError::Cancelled);
+        }
+
+        // Step 2: SendToAllWorkers(x^(i)) — the order carries (job,
+        // iterations-completed, param). Shipping the master's iteration
+        // counter keeps the workers' `SkelVars::iter_counter` equal to
+        // the master's even on a *resumed* run — without it, a worker
+        // restarted from a checkpoint would see a counter rebased to 0
+        // and any iteration-dependent map (e.g. montecarlo's
+        // counter-seeded RNG) would diverge from the uninterrupted run.
+        let timers = &mut self.timers;
+        let job_now = self.job;
+        let iter_now = self.iter;
+        let param_now = &self.param;
         let sent = timers.time(Phase::SendOrder, || -> Result<(), BsfError> {
-            let payload = (job, param.clone()).to_bytes();
+            // NB: clone the *parameter*, not the reference.
+            let payload =
+                (job_now, iter_now, <P::Param as Clone>::clone(param_now)).to_bytes();
             for w in 0..k {
                 comm.send(w, Tag::Order, payload.clone())?;
             }
@@ -132,6 +251,7 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
         });
         if let Err(e) = sent {
             abort_workers(comm, k);
+            self.released = true;
             return Err(e);
         }
 
@@ -181,32 +301,37 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
             Err(e) => {
                 // Release the surviving workers before reporting.
                 abort_workers(comm, k);
+                self.released = true;
                 return Err(e);
             }
         };
 
         // Step 6: s := Reduce(⊕, [s_0, ..., s_{K-1}]).
+        let job = self.job;
         let merged = timers.time(Phase::MasterReduce, || {
             merge_folds(folds, |a, b| problem.reduce_f(a, b, job))
         });
 
-        // Steps 7-9: Compute / StopCond via process_results + dispatcher.
-        iter += 1;
+        // Steps 7-9: Compute / StopCond via process_results + dispatcher
+        // + the declarative stop policy.
+        self.iter += 1;
         let ctx = IterCtx {
-            iter_counter: iter,
-            job_case: job,
+            iter_counter: self.iter,
+            job_case: self.job,
             num_of_workers: k,
-            elapsed: t0.elapsed().as_secs_f64(),
+            elapsed: self.t0.elapsed().as_secs_f64(),
         };
-        let decision = timers.time(Phase::Process, || {
-            decide_step(problem, &merged, &mut param, &ctx, cfg.max_iter)
+        let param = &mut self.param;
+        let cfg = &self.cfg;
+        let (decision, stop_reason) = timers.time(Phase::Process, || {
+            decide_step(problem, &merged, param, &ctx, cfg)
         });
 
-        if cfg.trace_count > 0 && iter % cfg.trace_count == 0 {
+        if self.cfg.trace_count > 0 && self.iter % self.cfg.trace_count == 0 {
             problem.iter_output(
                 merged.value.as_ref(),
                 merged.counter,
-                &param,
+                &self.param,
                 &ctx,
                 decision.next_job,
             );
@@ -221,7 +346,7 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
         // surviving workers must still be released (a worker at the top
         // of its loop accepts an exit order too), so finish the
         // broadcast before reporting the first send error.
-        let exit_send = timers.time(Phase::SendOrder, || {
+        let exit_send = self.timers.time(Phase::SendOrder, || {
             let payload = exit_flag.to_bytes();
             let mut first: Option<BsfError> = None;
             for w in 0..k {
@@ -235,25 +360,78 @@ pub fn run_master<P: BsfProblem, C: Communicator>(
             if !exit_flag {
                 abort_workers(comm, k);
             }
+            self.released = true;
             return Err(e);
+        }
+        if exit_flag {
+            self.released = true;
         }
 
         if let Some(e) = bad_job {
             return Err(e);
         }
 
+        let mut event = IterationEvent {
+            iter: self.iter,
+            job_case: ctx.job_case,
+            next_job: decision.next_job,
+            reduce_counter: merged.counter,
+            elapsed: self.t0.elapsed().as_secs_f64(),
+            clock: Clock::Real,
+            stop: None,
+            param: None,
+        };
+
         if decision.exit {
-            let elapsed = t0.elapsed().as_secs_f64();
+            let elapsed = self.t0.elapsed().as_secs_f64();
             problem.problem_output(
                 merged.value.as_ref(),
                 merged.counter,
-                &param,
+                &self.param,
                 elapsed,
             );
-            return Ok(MasterOutcome { param, iterations: iter, elapsed, timers });
+            self.elapsed_done = elapsed;
+            self.stop = stop_reason.or(Some(StopReason::Converged));
+            event.stop = self.stop;
+            event.elapsed = elapsed;
+            event.param = Some(self.param.clone());
+        } else {
+            self.job = decision.next_job;
         }
 
-        job = decision.next_job;
+        Ok(event)
+    }
+}
+
+/// Run the master loop over `comm` until the stop condition holds.
+///
+/// `comm.rank()` must be the master rank (== `cfg.workers`).
+pub fn run_master<P: BsfProblem, C: Communicator>(
+    problem: &P,
+    comm: &C,
+    cfg: &BsfConfig,
+) -> Result<MasterOutcome<P::Param>, BsfError> {
+    let k = cfg.workers;
+    if comm.rank() != comm.master_rank() {
+        return Err(BsfError::config(format!(
+            "master must run on rank {} (got {})",
+            comm.master_rank(),
+            comm.rank()
+        )));
+    }
+    if comm.size() != k + 1 {
+        return Err(BsfError::config(format!(
+            "transport size {} must be workers+1 = {}",
+            comm.size(),
+            k + 1
+        )));
+    }
+    let mut master = MasterLoop::new(problem, cfg, None)?;
+    loop {
+        let event = master.step_comm(problem, comm)?;
+        if event.stop.is_some() {
+            return Ok(master.outcome());
+        }
     }
 }
 
@@ -280,5 +458,25 @@ mod tests {
         assert!(matches!(err, BsfError::Transport(_)), "{err}");
         let m = w1.recv(2, Tag::Exit).unwrap();
         assert!(bool::from_bytes(&m.payload), "survivor must be released");
+    }
+
+    #[test]
+    fn cancelled_master_releases_workers_and_reports_typed() {
+        let mut eps = build_thread_transport(1);
+        let master_ep = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        let (p, _) = JacobiProblem::random(8, 1e-12, 8);
+        let cfg = BsfConfig::with_workers(1);
+        cfg.cancel.cancel(); // cancelled before the first iteration
+        let mut m = MasterLoop::new(&p, &cfg, None).unwrap();
+        let err = m.step_comm(&p, &master_ep).unwrap_err();
+        assert!(matches!(err, BsfError::Cancelled), "{err}");
+        assert!(m.released());
+        // The worker sees exit=true, exactly like a normal shutdown.
+        let msg = w0.recv(1, Tag::Exit).unwrap();
+        assert!(bool::from_bytes(&msg.payload));
+        // Stepping after the abort is a typed config error, not a hang.
+        let err = m.step_comm(&p, &master_ep).unwrap_err();
+        assert!(matches!(err, BsfError::Config(_)), "{err}");
     }
 }

@@ -14,15 +14,20 @@
 //! | `Problem-bsfParameters.h` (`PP_BSF_*` macros) | [`BsfConfig`] |
 //! | workflow (`PP_BSF_MAX_JOB_CASE`, `PC_bsf_JobDispatcher`) | [`workflow`] + trait hooks |
 //!
-//! The public entry point is the [`Bsf`] session builder
-//! ([`session`]): it owns the problem, the config, the execution
-//! [`Engine`] (threaded / serial / simulated) and the worker
-//! [`MapBackend`] (per-element / fused-native / XLA), and returns the
-//! unified [`RunReport`] behind `Result<_, BsfError>`. The seed-era
-//! `run_threaded` survives only as a deprecated shim in [`runner`].
+//! The public entry point is the [`Bsf`] session builder ([`session`]):
+//! it owns the problem, the config, the execution [`Engine`] (threaded /
+//! serial / process / cluster / simulated) and the worker [`MapBackend`]
+//! (per-element / fused-native / XLA). `Bsf::run()` executes one-shot;
+//! `Bsf::iterate()` returns the steerable per-iteration [`BsfRun`]
+//! handle of the [`driver`] layer — typed [`IterationEvent`]s, a
+//! [`StopPolicy`]/[`CancelToken`] for declarative and cooperative
+//! stopping, and [`Checkpoint`]s restorable with `Bsf::resume`.
+//! [`cluster`] keeps worker processes alive across consecutive runs.
 
 pub mod backend;
+pub mod cluster;
 pub mod config;
+pub mod driver;
 pub mod engine;
 pub mod master;
 pub mod pool;
@@ -38,16 +43,17 @@ pub mod worker;
 pub mod workflow;
 
 pub use backend::{FusedNativeBackend, MapBackend, PerElementBackend};
-pub use pool::ChunkPool;
+pub use cluster::{Cluster, ClusterEngine, ClusterSpec};
 pub use config::BsfConfig;
+pub use driver::{
+    CancelToken, Checkpoint, Driver, IterationEvent, StopPolicy, StopReason,
+};
 pub use engine::{
     AutoEngine, Engine, ProcessEngine, SerialEngine, SimulatedEngine, ThreadedEngine,
 };
+pub use pool::ChunkPool;
 pub use problem::{BsfProblem, MapCtx, StepDecision};
 pub use report::{Clock, PhaseBreakdown, RunReport};
-pub use session::Bsf;
+pub use session::{Bsf, BsfRun};
 pub use variables::SkelVars;
 pub use workflow::JobDecision;
-
-#[allow(deprecated)]
-pub use runner::run_threaded;

@@ -3,7 +3,7 @@
 //!
 //! The seed-era OpenMP analog spawned scoped threads *per iteration*,
 //! paying thread creation on every Map. A [`ChunkPool`] is created once
-//! per worker (when `BsfConfig::openmp_threads > 1`) and reused for the
+//! per worker (when `BsfConfig::threads_per_worker > 1`) and reused for the
 //! whole run: each iteration fans the sublist's chunks out over the
 //! same `T` threads — the second level of the paper's MPI × OpenMP grid
 //! (`--workers K --threads-per-worker T` on the CLI).

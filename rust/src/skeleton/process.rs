@@ -24,7 +24,11 @@
 //! Children are released and reaped on **every** error path: a failed
 //! spawn, handshake timeout, or mid-run transport loss kills the
 //! remaining children before the error is reported — a dead worker
-//! yields a typed [`BsfError`], never a hang and never an orphan.
+//! yields a typed [`BsfError`], never a hang and never an orphan. A
+//! dropped mid-run [`Driver`] takes the same path.
+//!
+//! For worker processes that stay alive *across* runs (amortizing
+//! spawn + connect), see [`crate::skeleton::cluster`].
 
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
@@ -34,18 +38,19 @@ use std::time::{Duration, Instant};
 use crate::error::BsfError;
 use crate::skeleton::backend::MapBackend;
 use crate::skeleton::config::BsfConfig;
-use crate::skeleton::master::run_master;
+use crate::skeleton::driver::{validate_start, Checkpoint, Driver, IterationEvent};
+use crate::skeleton::master::MasterLoop;
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::runner::validate_run;
 use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
-use crate::transport::tcp::{accept_workers, connect_worker, ProblemSig};
+use crate::transport::tcp::{accept_workers, connect_worker, ProblemSig, TcpEndpoint};
 use crate::transport::{Communicator, Tag};
-use crate::util::codec::Codec;
 
 /// Tag of the end-of-run summary each worker process sends back (rank,
-/// iterations, map seconds, sublist length) so the unified report keeps
-/// per-worker detail across the process boundary.
+/// iterations, map seconds, sublist length, hybrid-tier timing, pid) so
+/// the unified report keeps per-worker detail across the process
+/// boundary.
 pub const TAG_WORKER_REPORT: Tag = Tag::User(0x5752); // "WR"
 
 /// How long the master waits for all K workers to connect + handshake.
@@ -53,16 +58,16 @@ const DEFAULT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// How long a worker retries connecting (covers master-first *and*
 /// worker-first start orders on separate terminals).
-const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+pub(crate) const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// How long the master waits for spawned children to exit after a
 /// completed run before killing them.
-const REAP_TIMEOUT: Duration = Duration::from_secs(10);
+pub(crate) const REAP_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// The handshake fingerprint both sides derive from their own problem
 /// instance — a mismatch means the launcher passed different problem
 /// parameters to master and worker.
-fn problem_sig<P: BsfProblem>(problem: &P) -> ProblemSig {
+pub(crate) fn problem_sig<P: BsfProblem>(problem: &P) -> ProblemSig {
     ProblemSig {
         list_size: problem.list_size() as u64,
         job_count: problem.job_count() as u64,
@@ -125,6 +130,66 @@ impl ProcessEngine {
     }
 }
 
+/// Bind (ephemeral or fixed), optionally fork K worker children of
+/// `program` with `worker_args` (+ `--persist` for cluster workers) +
+/// `--connect <addr> --rank <r>`, and accept all K handshakes. Shared
+/// by [`ProcessEngine`] and the persistent
+/// [`Cluster`](crate::skeleton::cluster::Cluster).
+pub(crate) fn spawn_and_accept(
+    workers: usize,
+    listen: Option<&str>,
+    program: Option<&PathBuf>,
+    worker_args: &[String],
+    persist: bool,
+    sig: ProblemSig,
+    handshake_timeout: Duration,
+) -> Result<(TcpEndpoint, ChildSet), BsfError> {
+    let bind_addr = listen.unwrap_or("127.0.0.1:0");
+    let listener = std::net::TcpListener::bind(bind_addr)
+        .map_err(|e| BsfError::transport_io(format!("master: bind {bind_addr}"), e))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| BsfError::transport_io("master: local_addr", e))?
+        .to_string();
+
+    // Children are killed + reaped by ChildSet::drop on every early
+    // return below.
+    let mut children = ChildSet::default();
+    if listen.is_none() {
+        let program = match program {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()
+                .map_err(|e| BsfError::transport_io("master: resolve current_exe", e))?,
+        };
+        for rank in 0..workers {
+            let mut cmd = Command::new(&program);
+            cmd.args(worker_args);
+            if persist {
+                cmd.arg("--persist");
+            }
+            let child = cmd
+                .arg("--connect")
+                .arg(&addr)
+                .arg("--rank")
+                .arg(rank.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .map_err(|e| {
+                    BsfError::transport_io(
+                        format!("master: spawn worker {rank} ({})", program.display()),
+                        e,
+                    )
+                })?;
+            children.push(rank, child);
+        }
+    }
+
+    let ep = accept_workers(listener, workers, sig, handshake_timeout, || {
+        children.check_alive()
+    })?;
+    Ok((ep, children))
+}
+
 impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ProcessEngine {
     fn name(&self) -> &'static str {
         "process"
@@ -132,101 +197,99 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ProcessEngine {
 
     /// The `backend` applies to the *master-side* session only; worker
     /// processes pick their map backend from their own command line.
-    fn run(
+    fn launch(
         &self,
         problem: Arc<P>,
         _backend: Arc<dyn MapBackend<P>>,
         cfg: &BsfConfig,
-    ) -> Result<RunReport<P::Param>, BsfError> {
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError> {
+        // Validate problem + config + checkpoint before any child
+        // exists...
         validate_run(&*problem, cfg)?;
-        let k = cfg.workers;
-
-        let bind_addr = self.listen.as_deref().unwrap_or("127.0.0.1:0");
-        let listener = std::net::TcpListener::bind(bind_addr)
-            .map_err(|e| BsfError::transport_io(format!("master: bind {bind_addr}"), e))?;
-        let addr = listener
-            .local_addr()
-            .map_err(|e| BsfError::transport_io("master: local_addr", e))?
-            .to_string();
-
-        // Children are killed + reaped by ChildSet::drop on every early
-        // return below.
-        let mut children = ChildSet::default();
-        if self.listen.is_none() {
-            let program = match &self.program {
-                Some(p) => p.clone(),
-                None => std::env::current_exe()
-                    .map_err(|e| BsfError::transport_io("master: resolve current_exe", e))?,
-            };
-            for rank in 0..k {
-                let child = Command::new(&program)
-                    .args(&self.worker_args)
-                    .arg("--connect")
-                    .arg(&addr)
-                    .arg("--rank")
-                    .arg(rank.to_string())
-                    .stdin(Stdio::null())
-                    .spawn()
-                    .map_err(|e| {
-                        BsfError::transport_io(
-                            format!("master: spawn worker {rank} ({})", program.display()),
-                            e,
-                        )
-                    })?;
-                children.push(rank, child);
-            }
-        }
-
-        let master_ep = accept_workers(
-            listener,
-            k,
+        validate_start(&*problem, start.as_ref())?;
+        let (ep, children) = spawn_and_accept(
+            cfg.workers,
+            self.listen.as_deref(),
+            self.program.as_ref(),
+            &self.worker_args,
+            false,
             problem_sig(&*problem),
             self.handshake_timeout,
-            || children.check_alive(),
         )?;
-        let stats = master_ep.stats();
+        // ...but start the run clock only once the workers are connected
+        // — elapsed/deadline measure the iterative process, not the
+        // spawn + handshake latency.
+        let state = MasterLoop::new(&*problem, cfg, start)?;
+        Ok(Box::new(ProcessDriver { problem, ep: Some(ep), children, state }))
+    }
+}
 
-        let outcome = run_master(&*problem, &master_ep, cfg)?;
+/// The process engine's driver: the shared Algorithm-2 master over TCP,
+/// plus ownership of the spawned children (killed + reaped on every
+/// path, including drop).
+struct ProcessDriver<P: BsfProblem> {
+    problem: Arc<P>,
+    /// `Some` until `finish` drops the endpoint to release the write
+    /// halves before reaping.
+    ep: Option<TcpEndpoint>,
+    children: ChildSet,
+    state: MasterLoop<P>,
+}
 
-        // The run converged; collect each worker's end-of-run summary
-        // (sent right after it saw exit=true, before it disconnects).
+impl<P: BsfProblem> ProcessDriver<P> {
+    fn comm(&self) -> &TcpEndpoint {
+        self.ep.as_ref().expect("endpoint present until finish")
+    }
+}
+
+impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
+    fn engine(&self) -> &'static str {
+        "process"
+    }
+
+    fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
+        let ep = self.ep.as_ref().expect("endpoint present until finish");
+        self.state.step_comm(&*self.problem, ep)
+    }
+
+    fn checkpoint(&self) -> Checkpoint<P::Param> {
+        self.state.checkpoint()
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<RunReport<P::Param>, BsfError> {
+        // Early finish: release workers between iterations (they accept
+        // an exit order at the top of their loop, ship their report and
+        // exit on their own).
+        if !self.state.done() {
+            let ep = self.ep.as_ref().expect("endpoint present until finish");
+            self.state.release(ep);
+        }
+
+        // Collect each worker's end-of-run summary (sent right after it
+        // saw exit=true, before it disconnects).
+        let k = self.state.workers();
         let mut workers = Vec::with_capacity(k);
-        for w in 0..k {
-            let m = master_ep.recv(w, TAG_WORKER_REPORT)?;
-            // 4 + 3 fixed-width (8-byte) fields; a short/long payload
-            // means a version-skewed worker binary (the HELLO handshake
-            // carries no protocol version) — reject it typed instead of
-            // letting the codec index out of bounds.
-            type Wire = ((usize, usize, f64, usize), (usize, f64, f64));
-            const WIRE_BYTES: usize = 7 * 8;
-            if m.payload.len() != WIRE_BYTES {
-                return Err(BsfError::transport(format!(
-                    "worker {w} report is {} bytes, expected {WIRE_BYTES} \
-                     (mixed-version worker binary?)",
-                    m.payload.len()
-                )));
+        {
+            let ep = self.comm();
+            for w in 0..k {
+                let m = ep.recv(w, TAG_WORKER_REPORT)?;
+                workers.push(WorkerReport::from_wire(&m.payload).map_err(|e| {
+                    BsfError::transport(format!("worker {w}: {e}"))
+                })?);
             }
-            let ((rank, iterations, map_seconds, sublist_length), wire_hybrid) =
-                Wire::from_bytes(&m.payload);
-            let (threads, max_chunk_seconds, merge_seconds) = wire_hybrid;
-            workers.push(WorkerReport {
-                rank,
-                iterations,
-                map_seconds,
-                sublist_length,
-                threads,
-                max_chunk_seconds,
-                merge_seconds,
-            });
         }
         workers.sort_by_key(|w| w.rank);
 
         // Workers exit on their own right after shipping their report;
         // drop our endpoint first (releases the write halves), then wait
         // for the children — killing any that outlive the reap window.
-        drop(master_ep);
-        children.reap(REAP_TIMEOUT)?;
+        let ep = self.ep.take().expect("endpoint present until finish");
+        let stats = ep.stats();
+        drop(ep);
+        self.children.reap(REAP_TIMEOUT)?;
 
+        let outcome = self.state.outcome();
         Ok(RunReport {
             param: outcome.param,
             iterations: outcome.iterations,
@@ -243,13 +306,26 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ProcessEngine {
     }
 }
 
+impl<P: BsfProblem> Drop for ProcessDriver<P> {
+    /// An abandoned driver releases its workers (no-op when the run
+    /// already stopped or aborted) and lets `ChildSet::drop` kill + reap
+    /// the children — never an orphan, never a hang.
+    fn drop(&mut self) {
+        if let Some(ep) = self.ep.take() {
+            self.state.release(&ep);
+        }
+    }
+}
+
 /// The worker-process entry point: connect to the master, learn K+1 from
 /// the handshake, drive the shared Algorithm-2 worker loop
 /// ([`run_worker_guarded`] — the same function the thread engine runs),
 /// then ship the [`WorkerReport`] back before exiting.
 ///
 /// `cfg_template.workers` is overwritten with the handshake's K; the
-/// caller supplies the rest (notably `openmp_threads`).
+/// caller supplies the rest (notably `threads_per_worker`). For a worker
+/// that stays alive across runs, see
+/// [`run_persistent_worker`](crate::skeleton::cluster::run_persistent_worker).
 pub fn run_process_worker<P: BsfProblem>(
     problem: &P,
     backend: &dyn MapBackend<P>,
@@ -261,32 +337,24 @@ pub fn run_process_worker<P: BsfProblem>(
     let mut cfg = cfg_template.clone();
     cfg.workers = ep.size() - 1;
     let report = run_worker_guarded(problem, backend, &ep, &cfg)?;
-    ep.send(
-        ep.master_rank(),
-        TAG_WORKER_REPORT,
-        (
-            (report.rank, report.iterations, report.map_seconds, report.sublist_length),
-            (report.threads, report.max_chunk_seconds, report.merge_seconds),
-        )
-            .to_bytes(),
-    )?;
+    ep.send(ep.master_rank(), TAG_WORKER_REPORT, report.to_wire())?;
     Ok(report)
 }
 
 /// Spawned worker children, killed + reaped on drop so no error path
 /// leaks a process.
 #[derive(Default)]
-struct ChildSet {
+pub(crate) struct ChildSet {
     children: Vec<(usize, Child)>,
 }
 
 impl ChildSet {
-    fn push(&mut self, rank: usize, child: Child) {
+    pub(crate) fn push(&mut self, rank: usize, child: Child) {
         self.children.push((rank, child));
     }
 
     /// Fail fast if any child already exited (it can never handshake).
-    fn check_alive(&mut self) -> Result<(), BsfError> {
+    pub(crate) fn check_alive(&mut self) -> Result<(), BsfError> {
         for (rank, child) in &mut self.children {
             match child.try_wait() {
                 Ok(Some(status)) => {
@@ -310,7 +378,7 @@ impl ChildSet {
     /// and their sockets closed); kill stragglers past `timeout`. A
     /// non-zero exit after an apparently clean run is surfaced — it
     /// means the worker's side of the shutdown failed.
-    fn reap(&mut self, timeout: Duration) -> Result<(), BsfError> {
+    pub(crate) fn reap(&mut self, timeout: Duration) -> Result<(), BsfError> {
         let deadline = Instant::now() + timeout;
         let mut first_err: Option<BsfError> = None;
         for (rank, child) in self.children.drain(..) {

@@ -178,6 +178,7 @@ mod tests {
             threads: 1,
             max_chunk_seconds: 0.0,
             merge_seconds: 0.0,
+            pid: std::process::id(),
         };
         let r = report(vec![w(0, 2.0), w(1, 6.0)], 4);
         assert!((r.mean_worker_map_secs_per_iter() - 1.0).abs() < 1e-12);
@@ -193,6 +194,7 @@ mod tests {
             threads,
             max_chunk_seconds: 0.5,
             merge_seconds: 0.25,
+            pid: std::process::id(),
         };
         assert_eq!(report(vec![w(1)], 2).hybrid_summary(), "");
         let s = report(vec![w(4)], 2).hybrid_summary();

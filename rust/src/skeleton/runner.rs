@@ -1,22 +1,26 @@
 //! Orchestration: wire one master + K workers over the thread transport
-//! and run the skeleton to completion ("build and run the solution in the
-//! MPI environment", Step 8 of the paper's instruction).
+//! ("build and run the solution in the MPI environment", Step 8 of the
+//! paper's instruction).
 //!
-//! [`run_threaded_session`] is the engine-facing entry point (typed
-//! errors, pluggable [`MapBackend`]); [`run_threaded`] survives as a thin
-//! deprecated shim over it for the seed-era API.
+//! [`launch_threaded`] spawns the K worker threads and returns a
+//! [`ThreadedDriver`] — the [`Driver`] stepping the shared
+//! [`MasterLoop`] over the thread transport. [`run_threaded_session`]
+//! is the loop-to-completion convenience the `ThreadedEngine` default
+//! `run()` also uses.
 
 use std::sync::Arc;
 
 use crate::error::BsfError;
-use crate::skeleton::backend::{FusedNativeBackend, MapBackend};
+use crate::skeleton::backend::MapBackend;
 use crate::skeleton::config::BsfConfig;
-use crate::skeleton::master::run_master;
+use crate::skeleton::driver::{validate_start, Checkpoint, Driver, IterationEvent};
+use crate::skeleton::engine::{Engine, ThreadedEngine};
+use crate::skeleton::master::MasterLoop;
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
 use crate::skeleton::workflow::validate_job_count;
-use crate::transport::{build_thread_transport, Communicator, Tag};
+use crate::transport::{build_thread_transport, Communicator, Tag, ThreadEndpoint};
 use crate::util::codec::Codec;
 
 /// Shared up-front validation all engines run before touching threads.
@@ -36,20 +40,32 @@ pub(crate) fn validate_run<P: BsfProblem>(
     Ok(())
 }
 
-/// Run `problem` on K worker threads + the calling thread as master,
-/// mapping sublists through `backend`.
-pub fn run_threaded_session<P: BsfProblem>(
+/// The threaded engine's driver: the master loop on the calling thread,
+/// K worker OS threads over the in-process transport.
+pub(crate) struct ThreadedDriver<P: BsfProblem> {
+    problem: Arc<P>,
+    ep: ThreadEndpoint,
+    handles: Vec<(usize, std::thread::JoinHandle<Result<WorkerReport, BsfError>>)>,
+    state: MasterLoop<P>,
+}
+
+/// Spawn K worker threads + build the master endpoint, ready to step.
+pub(crate) fn launch_threaded<P: BsfProblem>(
     problem: Arc<P>,
     backend: Arc<dyn MapBackend<P>>,
     cfg: &BsfConfig,
-) -> Result<RunReport<P::Param>, BsfError> {
+    start: Option<Checkpoint<P::Param>>,
+) -> Result<Box<dyn Driver<P>>, BsfError> {
+    // Validate problem + config (and the checkpoint, when resuming)
+    // before any thread exists; the MasterLoop itself — whose t0 is the
+    // run clock — is built only after the workers are up.
     validate_run(&*problem, cfg)?;
+    validate_start(&*problem, start.as_ref())?;
 
     let mut endpoints = build_thread_transport(cfg.workers);
     let master_ep = endpoints.pop().ok_or_else(|| {
         BsfError::transport("thread transport built without a master endpoint")
     })?;
-    let stats = master_ep.stats();
 
     let mut handles: Vec<(usize, std::thread::JoinHandle<Result<WorkerReport, BsfError>>)> =
         Vec::with_capacity(cfg.workers);
@@ -82,45 +98,99 @@ pub fn run_threaded_session<P: BsfProblem>(
         return Err(e);
     }
 
-    let outcome = run_master(&*problem, &master_ep, cfg);
-
-    let mut workers = Vec::with_capacity(handles.len());
-    let mut worker_err: Option<BsfError> = None;
-    for (rank, h) in handles {
-        match h.join() {
-            Ok(Ok(report)) => workers.push(report),
-            Ok(Err(e)) => {
-                worker_err.get_or_insert(e);
+    // Both validations above already passed, so this cannot fail in
+    // practice — but if it ever does, release + reap the workers.
+    let state = match MasterLoop::new(&*problem, cfg, start) {
+        Ok(state) => state,
+        Err(e) => {
+            for (rank, _) in &handles {
+                let _ = master_ep.send(*rank, Tag::Exit, true.to_bytes());
             }
-            Err(_) => {
-                worker_err.get_or_insert(BsfError::WorkerPanic { rank });
+            for (_, h) in handles {
+                let _ = h.join();
             }
+            return Err(e);
         }
-    }
-    let outcome = outcome?;
-    if let Some(e) = worker_err {
-        return Err(e);
-    }
-    workers.sort_by_key(|w| w.rank);
-
-    Ok(RunReport {
-        param: outcome.param,
-        iterations: outcome.iterations,
-        elapsed: outcome.elapsed,
-        clock: Clock::Real,
-        wall_seconds: outcome.elapsed,
-        engine: "threaded",
-        phases: PhaseBreakdown::from_timers(&outcome.timers),
-        workers,
-        messages: stats.message_count(),
-        bytes: stats.byte_count(),
-        volume: stats.volume(),
-    })
+    };
+    Ok(Box::new(ThreadedDriver { problem, ep: master_ep, handles, state }))
 }
 
-/// Seed-era entry point. Panics on any error, exactly as the seed did.
-#[deprecated(note = "use Bsf::new(problem).config(cfg).run() (the session API)")]
-pub fn run_threaded<P: BsfProblem>(problem: Arc<P>, cfg: &BsfConfig) -> RunReport<P::Param> {
-    run_threaded_session(problem, Arc::new(FusedNativeBackend), cfg)
-        .expect("bsf: threaded run failed")
+impl<P: BsfProblem> Driver<P> for ThreadedDriver<P> {
+    fn engine(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
+        self.state.step_comm(&*self.problem, &self.ep)
+    }
+
+    fn checkpoint(&self) -> Checkpoint<P::Param> {
+        self.state.checkpoint()
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<RunReport<P::Param>, BsfError> {
+        // Early finish: release the workers between iterations (they
+        // accept an exit order at the top of their loop).
+        if !self.state.done() {
+            self.state.release(&self.ep);
+        }
+        let stats = self.ep.stats();
+
+        let handles = std::mem::take(&mut self.handles);
+        let mut workers = Vec::with_capacity(handles.len());
+        let mut worker_err: Option<BsfError> = None;
+        for (rank, h) in handles {
+            match h.join() {
+                Ok(Ok(report)) => workers.push(report),
+                Ok(Err(e)) => {
+                    worker_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    worker_err.get_or_insert(BsfError::WorkerPanic { rank });
+                }
+            }
+        }
+        if let Some(e) = worker_err {
+            return Err(e);
+        }
+        workers.sort_by_key(|w| w.rank);
+
+        let outcome = self.state.outcome();
+        Ok(RunReport {
+            param: outcome.param,
+            iterations: outcome.iterations,
+            elapsed: outcome.elapsed,
+            clock: Clock::Real,
+            wall_seconds: outcome.elapsed,
+            engine: "threaded",
+            phases: PhaseBreakdown::from_timers(&outcome.timers),
+            workers,
+            messages: stats.message_count(),
+            bytes: stats.byte_count(),
+            volume: stats.volume(),
+        })
+    }
+}
+
+impl<P: BsfProblem> Drop for ThreadedDriver<P> {
+    /// An abandoned driver must not leak its worker threads: release
+    /// them (no-op when the run already stopped or aborted) and join.
+    fn drop(&mut self) {
+        self.state.release(&self.ep);
+        for (_, h) in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `problem` on K worker threads + the calling thread as master,
+/// mapping sublists through `backend` — the loop-to-completion
+/// convenience over [`launch_threaded`] (exactly what
+/// `Bsf::new(p).engine(ThreadedEngine).run()` executes).
+pub fn run_threaded_session<P: BsfProblem>(
+    problem: Arc<P>,
+    backend: Arc<dyn MapBackend<P>>,
+    cfg: &BsfConfig,
+) -> Result<RunReport<P::Param>, BsfError> {
+    Engine::run(&ThreadedEngine, problem, backend, cfg)
 }

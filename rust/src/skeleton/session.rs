@@ -1,8 +1,16 @@
 //! The `Bsf` session builder — the crate's single entry point.
 //!
 //! One session owns the problem, the [`BsfConfig`], the execution
-//! [`Engine`] and the worker [`MapBackend`], and `run()` returns the
-//! unified [`RunReport`] behind a typed `Result`:
+//! [`Engine`] and the worker [`MapBackend`]. Two ways to execute:
+//!
+//! * **one-shot**: [`run`](Bsf::run) loops the iteration driver to
+//!   completion and returns the unified [`RunReport`];
+//! * **steered**: [`iterate`](Bsf::iterate) returns a [`BsfRun`] — a
+//!   streaming handle yielding one typed
+//!   [`IterationEvent`](crate::skeleton::driver::IterationEvent) per
+//!   master iteration, with [`checkpoint`](BsfRun::checkpoint) between
+//!   steps and [`finish`](BsfRun::finish) (early or at the stop event)
+//!   for the report.
 //!
 //! ```no_run
 //! use bsf::problems::jacobi::JacobiProblem;
@@ -18,15 +26,43 @@
 //! # Ok::<(), bsf::BsfError>(())
 //! ```
 //!
+//! Steering a run and resuming from a checkpoint:
+//!
+//! ```no_run
+//! use bsf::problems::jacobi::JacobiProblem;
+//! use bsf::skeleton::Bsf;
+//!
+//! let (problem, _) = JacobiProblem::random(256, 1e-12, 7);
+//! let mut run = Bsf::new(problem).workers(4).iterate()?;
+//! let mut checkpoint = None;
+//! while !run.stopped() {
+//!     let event = run.step()?;
+//!     if event.iter == 10 {
+//!         checkpoint = Some(run.checkpoint()); // serializable via Codec
+//!     }
+//! }
+//! let report = run.finish()?;
+//! let (problem2, _) = JacobiProblem::random(256, 1e-12, 7);
+//! let resumed = Bsf::new(problem2)
+//!     .workers(4)
+//!     .resume(checkpoint.unwrap())
+//!     .run()?; // bit-identical to the uninterrupted run
+//! assert_eq!(resumed.param, report.param);
+//! # Ok::<(), bsf::BsfError>(())
+//! ```
+//!
 //! Defaults: [`AutoEngine`] (serial at K=1, threaded otherwise) and
-//! [`FusedNativeBackend`] — which together reproduce the behavior of the
-//! seed's `run_threaded` entry point.
+//! [`FusedNativeBackend`].
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::error::BsfError;
 use crate::skeleton::backend::{FusedNativeBackend, MapBackend};
 use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::{
+    CancelToken, Checkpoint, Driver, IterationEvent, StopPolicy,
+};
 use crate::skeleton::engine::{AutoEngine, Engine};
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::report::RunReport;
@@ -37,6 +73,7 @@ pub struct Bsf<P: BsfProblem> {
     cfg: BsfConfig,
     engine: Box<dyn Engine<P>>,
     backend: Arc<dyn MapBackend<P>>,
+    start: Option<Checkpoint<P::Param>>,
 }
 
 impl<P: BsfProblem> Bsf<P> {
@@ -54,6 +91,7 @@ impl<P: BsfProblem> Bsf<P> {
             cfg: BsfConfig::default(),
             engine: Box::new(AutoEngine),
             backend: Arc::new(FusedNativeBackend),
+            start: None,
         }
     }
 
@@ -69,17 +107,19 @@ impl<P: BsfProblem> Bsf<P> {
         self
     }
 
-    /// Convenience: set the intra-worker map parallelism (`PP_BSF_OMP`).
-    pub fn openmp(mut self, threads: usize) -> Self {
-        self.cfg.openmp_threads = threads.max(1);
+    /// Convenience: set the intra-worker map parallelism —
+    /// `.workers(K).threads_per_worker(T)` is the paper's MPI × OpenMP
+    /// grid (`PP_BSF_OMP` / `PP_BSF_NUM_THREADS`).
+    pub fn threads_per_worker(mut self, threads: usize) -> Self {
+        self.cfg.threads_per_worker = threads.max(1);
         self
     }
 
-    /// Alias for [`openmp`](Self::openmp) in the hybrid-mode spelling:
-    /// `.workers(K).threads_per_worker(T)` is the paper's MPI × OpenMP
-    /// grid.
-    pub fn threads_per_worker(self, threads: usize) -> Self {
-        self.openmp(threads)
+    /// Seed-era alias for
+    /// [`threads_per_worker`](Self::threads_per_worker).
+    #[deprecated(note = "use threads_per_worker (the canonical hybrid-mode spelling)")]
+    pub fn openmp(self, threads: usize) -> Self {
+        self.threads_per_worker(threads)
     }
 
     /// Convenience: set the iteration cap.
@@ -94,7 +134,38 @@ impl<P: BsfProblem> Bsf<P> {
         self
     }
 
-    /// Choose the execution engine (threaded / serial / simulated).
+    /// Attach a declarative [`StopPolicy`] (iteration cap, engine-clock
+    /// deadline, user predicate).
+    pub fn stop(mut self, policy: StopPolicy) -> Self {
+        self.cfg.stop = policy;
+        self
+    }
+
+    /// Convenience: stop once `deadline` has elapsed on the engine's
+    /// clock (checked between iterations).
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.cfg.stop.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach a [`CancelToken`]; keep a clone and call `cancel()` on it
+    /// to abort the run between iterations with `BsfError::Cancelled`.
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cfg.cancel = token;
+        self
+    }
+
+    /// Resume from a [`Checkpoint`] instead of `init_parameter`: the run
+    /// continues at the checkpoint's iteration counter and job case, and
+    /// finishes bit-identically to the uninterrupted run it was taken
+    /// from (same engine-independent math, same K).
+    pub fn resume(mut self, checkpoint: Checkpoint<P::Param>) -> Self {
+        self.start = Some(checkpoint);
+        self
+    }
+
+    /// Choose the execution engine (threaded / serial / process /
+    /// cluster / simulated).
     pub fn engine<E: Engine<P> + 'static>(mut self, engine: E) -> Self {
         self.engine = Box::new(engine);
         self
@@ -120,9 +191,99 @@ impl<P: BsfProblem> Bsf<P> {
         &self.cfg
     }
 
-    /// Execute the run.
+    /// Launch the run and return the streaming iteration handle.
+    pub fn iterate(self) -> Result<BsfRun<P>, BsfError> {
+        let driver = self.engine.launch(self.problem, self.backend, &self.cfg, self.start)?;
+        Ok(BsfRun { driver, stopped: false })
+    }
+
+    /// Execute the run to completion — `iterate()` stepped to the stop
+    /// event. One-shot and stepped runs share this single code path, so
+    /// they are bit-identical by construction.
     pub fn run(self) -> Result<RunReport<P::Param>, BsfError> {
-        self.engine.run(self.problem, self.backend, &self.cfg)
+        self.iterate()?.run_to_end()
+    }
+}
+
+/// A launched, steerable run: one master iteration per
+/// [`step`](Self::step) (or per `Iterator::next`), a
+/// [`Checkpoint`] on demand between steps, and
+/// [`finish`](Self::finish) for the unified [`RunReport`].
+pub struct BsfRun<P: BsfProblem> {
+    driver: Box<dyn Driver<P>>,
+    stopped: bool,
+}
+
+impl<P: BsfProblem> BsfRun<P> {
+    /// Advance exactly one master iteration.
+    pub fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
+        match self.driver.step() {
+            Ok(event) => {
+                if event.stop.is_some() {
+                    self.stopped = true;
+                }
+                Ok(event)
+            }
+            Err(e) => {
+                // Every driver treats a step error as terminal, so a
+                // `while !run.stopped()` loop that logs errors instead
+                // of propagating them must still terminate.
+                self.stopped = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// True once the stop event — or a terminal step error — was
+    /// observed (step again is an error; call [`finish`](Self::finish)).
+    pub fn stopped(&self) -> bool {
+        self.stopped
+    }
+
+    /// Engine name of the underlying driver.
+    pub fn engine(&self) -> &'static str {
+        self.driver.engine()
+    }
+
+    /// Snapshot the master's inter-iteration state (serializable via
+    /// `Codec`; restore with [`Bsf::resume`]).
+    pub fn checkpoint(&self) -> Checkpoint<P::Param> {
+        self.driver.checkpoint()
+    }
+
+    /// Finish the run and produce the report. After the stop event this
+    /// is the normal end; before it, the workers are released gracefully
+    /// between iterations and the partial run is reported.
+    pub fn finish(self) -> Result<RunReport<P::Param>, BsfError> {
+        self.driver.finish()
+    }
+
+    /// Step to the stop event, then finish.
+    pub fn run_to_end(mut self) -> Result<RunReport<P::Param>, BsfError> {
+        while !self.stopped {
+            self.step()?;
+        }
+        self.finish()
+    }
+}
+
+impl<P: BsfProblem> Iterator for BsfRun<P> {
+    type Item = Result<IterationEvent<P::Param>, BsfError>;
+
+    /// Yields one event per iteration; `None` after the stop event (or
+    /// after an error was yielded). Call [`BsfRun::finish`] afterwards
+    /// for the report.
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.stopped {
+            return None;
+        }
+        match self.step() {
+            Ok(event) => Some(Ok(event)),
+            Err(e) => {
+                self.stopped = true;
+                Some(Err(e))
+            }
+        }
     }
 }
 
@@ -130,6 +291,7 @@ impl<P: BsfProblem> Bsf<P> {
 mod tests {
     use super::*;
     use crate::problems::jacobi::JacobiProblem;
+    use crate::skeleton::driver::StopReason;
     use crate::skeleton::engine::{SerialEngine, ThreadedEngine};
 
     #[test]
@@ -147,12 +309,22 @@ mod tests {
     #[test]
     fn builder_chain_sets_config() {
         let (p, _) = JacobiProblem::random(8, 1e-12, 4);
-        let b = Bsf::new(p).workers(3).openmp(2).max_iter(9).trace(5);
+        let token = CancelToken::new();
+        let b = Bsf::new(p)
+            .workers(3)
+            .threads_per_worker(2)
+            .max_iter(9)
+            .trace(5)
+            .deadline(Duration::from_secs(60))
+            .cancel_token(token.clone());
         let cfg = b.config_ref();
         assert_eq!(cfg.workers, 3);
-        assert_eq!(cfg.openmp_threads, 2);
+        assert_eq!(cfg.threads_per_worker, 2);
         assert_eq!(cfg.max_iter, 9);
         assert_eq!(cfg.trace_count, 5);
+        assert_eq!(cfg.stop.deadline, Some(Duration::from_secs(60)));
+        token.cancel();
+        assert!(cfg.cancel.is_cancelled(), "session shares the caller's token");
     }
 
     #[test]
@@ -179,5 +351,42 @@ mod tests {
         assert_eq!(rs.param, rt.param, "codec round-trip must be lossless");
         assert_eq!(rt.engine, "threaded");
         assert!(rt.messages > 0);
+    }
+
+    #[test]
+    fn iterate_streams_one_event_per_iteration() {
+        let (p, _) = JacobiProblem::random(16, 1e-14, 8);
+        let mut run = Bsf::new(p).workers(1).iterate().unwrap();
+        assert_eq!(run.engine(), "serial");
+        let mut events = Vec::new();
+        while !run.stopped() {
+            events.push(run.step().unwrap());
+        }
+        let report = run.finish().unwrap();
+        assert_eq!(events.len(), report.iterations);
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.iter, i + 1, "iteration counter is dense");
+        }
+        let last = events.last().unwrap();
+        assert_eq!(last.stop, Some(StopReason::Converged));
+        assert_eq!(last.param.as_ref(), Some(&report.param));
+        assert!(events[..events.len() - 1].iter().all(|e| e.stop.is_none()));
+    }
+
+    #[test]
+    fn iterator_adapter_yields_until_stop() {
+        let (p, _) = JacobiProblem::random(16, 1e-14, 9);
+        let run = Bsf::new(p).workers(1).iterate().unwrap();
+        let events: Vec<_> = run.map(|e| e.unwrap()).collect();
+        assert!(!events.is_empty());
+        assert!(events.last().unwrap().stop.is_some());
+    }
+
+    #[test]
+    fn deprecated_openmp_alias_still_works() {
+        let (p, _) = JacobiProblem::random(8, 1e-12, 10);
+        #[allow(deprecated)]
+        let b = Bsf::new(p).openmp(3);
+        assert_eq!(b.config_ref().threads_per_worker, 3);
     }
 }

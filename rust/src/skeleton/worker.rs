@@ -9,14 +9,18 @@
 //! partial fold, and waits for the exit flag.
 //!
 //! The map loop supports the paper's OpenMP mode (`PP_BSF_OMP` /
-//! `PP_BSF_NUM_THREADS`): with `openmp_threads > 1` the worker owns a
-//! persistent [`ChunkPool`] of `T` threads for the whole run and fans
+//! `PP_BSF_NUM_THREADS`): with `threads_per_worker > 1` the worker owns
+//! a persistent [`ChunkPool`] of `T` threads for the whole run and fans
 //! each iteration's sublist out as block chunks through the backend's
 //! [`par_map`](crate::skeleton::backend::MapBackend::par_map), merging
 //! the chunk partials in chunk order — semantically identical because ⊕
 //! is associative, and deterministic because the merge order never
 //! depends on thread scheduling. This is the intra-worker level of the
 //! two-level (MPI × OpenMP) grid: `--workers K --threads-per-worker T`.
+//!
+//! A persistent-cluster worker (`bsf worker --persist`) drives the same
+//! loop once per `NEWRUN` order, sharing one [`ChunkPool`] across runs —
+//! see [`serve_worker`](crate::skeleton::cluster::serve_worker).
 
 use std::time::Instant;
 
@@ -43,7 +47,7 @@ pub struct WorkerReport {
     pub map_seconds: f64,
     /// Sublist length this worker was appointed.
     pub sublist_length: usize,
-    /// Intra-worker map threads (`BsfConfig::openmp_threads`) this
+    /// Intra-worker map threads (`BsfConfig::threads_per_worker`) this
     /// worker ran with.
     pub threads: usize,
     /// Critical-path seconds of the parallel map: per iteration, the
@@ -54,6 +58,55 @@ pub struct WorkerReport {
     /// Seconds merging chunk partials locally (the worker-side tree
     /// reduce), summed over iterations.
     pub merge_seconds: f64,
+    /// OS process id of the worker. Worker threads report the session's
+    /// own pid; worker processes report their child pid — which is how a
+    /// persistent [`Cluster`](crate::skeleton::cluster::Cluster) proves
+    /// that consecutive runs reused the same processes.
+    pub pid: u32,
+}
+
+/// Fixed wire size of a [`WorkerReport`]: 8 little-endian 8-byte fields.
+pub(crate) const WORKER_REPORT_WIRE_BYTES: usize = 8 * 8;
+
+impl WorkerReport {
+    /// Encode for the end-of-run report message a worker process ships
+    /// to the master (`TAG_WORKER_REPORT`).
+    pub(crate) fn to_wire(&self) -> Vec<u8> {
+        (
+            (self.rank, self.iterations, self.map_seconds, self.sublist_length),
+            (self.threads, self.max_chunk_seconds, self.merge_seconds),
+            self.pid as u64,
+        )
+            .to_bytes()
+    }
+
+    /// Decode a report payload, rejecting a wrong-sized buffer (a
+    /// version-skewed worker binary — the HELLO handshake carries no
+    /// protocol version) with a typed error instead of letting the
+    /// codec index out of bounds.
+    pub(crate) fn from_wire(payload: &[u8]) -> Result<Self, BsfError> {
+        type Wire = ((usize, usize, f64, usize), (usize, f64, f64), u64);
+        if payload.len() != WORKER_REPORT_WIRE_BYTES {
+            return Err(BsfError::transport(format!(
+                "worker report is {} bytes, expected {WORKER_REPORT_WIRE_BYTES} \
+                 (mixed-version worker binary?)",
+                payload.len()
+            )));
+        }
+        let ((rank, iterations, map_seconds, sublist_length), wire_hybrid, pid) =
+            Wire::from_bytes(payload);
+        let (threads, max_chunk_seconds, merge_seconds) = wire_hybrid;
+        Ok(WorkerReport {
+            rank,
+            iterations,
+            map_seconds,
+            sublist_length,
+            threads,
+            max_chunk_seconds,
+            merge_seconds,
+            pid: pid as u32,
+        })
+    }
 }
 
 /// Result of one worker-side Map + local Reduce, with the intra-worker
@@ -77,12 +130,27 @@ impl<R> MapFold<R> {
     }
 }
 
-/// Run the worker loop over `comm` until the master signals exit.
+/// Run the worker loop over `comm` until the master signals exit,
+/// building (and owning) the intra-worker chunk pool per `cfg`.
 pub fn run_worker<P: BsfProblem>(
     problem: &P,
     backend: &dyn MapBackend<P>,
     comm: &dyn Communicator,
     cfg: &BsfConfig,
+) -> Result<WorkerReport, BsfError> {
+    let pool = intra_worker_pool(cfg);
+    run_worker_with_pool(problem, backend, comm, cfg, pool.as_ref())
+}
+
+/// [`run_worker`] with a caller-owned chunk pool: the persistent-cluster
+/// worker keeps one pool alive across consecutive runs (spawn threads
+/// once, reuse them for every `NEWRUN`).
+pub fn run_worker_with_pool<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    comm: &dyn Communicator,
+    cfg: &BsfConfig,
+    pool: Option<&ChunkPool>,
 ) -> Result<WorkerReport, BsfError> {
     let rank = comm.rank();
     let k = cfg.workers;
@@ -96,10 +164,6 @@ pub fn run_worker<P: BsfProblem>(
     let elems: Vec<P::MapElem> =
         (offset..offset + len).map(|i| problem.map_list_elem(i)).collect();
 
-    // The intra-worker tier: one persistent pool for the whole run
-    // (threads spawned once, reused every iteration).
-    let pool = intra_worker_pool(cfg);
-
     let mut map_seconds = 0.0;
     let mut max_chunk_seconds = 0.0;
     let mut merge_seconds = 0.0;
@@ -111,16 +175,18 @@ pub fn run_worker<P: BsfProblem>(
             iterations,
             map_seconds,
             sublist_length: len,
-            threads: cfg.openmp_threads.max(1),
+            threads: cfg.threads_per_worker.max(1),
             max_chunk_seconds: max_chunk,
             merge_seconds: merge,
+            pid: std::process::id(),
         }
     };
 
     loop {
         // Step 2: RecvFromMaster(x^(i)). An exit order can also arrive
         // here: the master broadcasts one on its error paths (another
-        // worker died, a dispatcher bug) to release workers that are
+        // worker died, a dispatcher bug), when the run is cancelled, or
+        // when a driver is finished early — releasing workers that are
         // waiting for the next order.
         let m = comm.recv_tags(Some(master), &[Tag::Order, Tag::Exit])?;
         if m.tag == Tag::Exit {
@@ -131,12 +197,15 @@ pub fn run_worker<P: BsfProblem>(
                 "worker {rank}: unexpected exit=false instead of an order"
             )));
         }
-        let (job, param) = <(usize, P::Param)>::from_bytes(&m.payload);
+        // The order carries the master's iteration counter so a resumed
+        // run's workers see the true count (not a rebased-to-0 one) —
+        // iteration-dependent maps stay bit-identical across resume.
+        let (job, iter, param) = <(usize, usize, P::Param)>::from_bytes(&m.payload);
 
         // Steps 3-4: B_j := Map(F, A_j); s_j := Reduce(⊕, B_j).
-        let vars = SkelVars::for_worker(rank, k, offset, len, iterations, job);
+        let vars = SkelVars::for_worker(rank, k, offset, len, iter, job);
         let t0 = Instant::now();
-        let mapped = map_and_fold(problem, backend, &elems, &param, vars, pool.as_ref());
+        let mapped = map_and_fold(problem, backend, &elems, &param, vars, pool);
         map_seconds += t0.elapsed().as_secs_f64();
         max_chunk_seconds += mapped.max_chunk_seconds;
         merge_seconds += mapped.merge_seconds;
@@ -155,10 +224,10 @@ pub fn run_worker<P: BsfProblem>(
 }
 
 /// The worker's intra-worker pool per its config: `None` when the
-/// hybrid tier is off (`openmp_threads <= 1`).
+/// hybrid tier is off (`threads_per_worker <= 1`).
 pub fn intra_worker_pool(cfg: &BsfConfig) -> Option<ChunkPool> {
-    if cfg.openmp_threads > 1 {
-        Some(ChunkPool::new(cfg.openmp_threads))
+    if cfg.threads_per_worker > 1 {
+        Some(ChunkPool::new(cfg.threads_per_worker))
     } else {
         None
     }
@@ -181,9 +250,22 @@ pub fn run_worker_guarded<P: BsfProblem>(
     comm: &dyn Communicator,
     cfg: &BsfConfig,
 ) -> Result<WorkerReport, BsfError> {
+    let pool = intra_worker_pool(cfg);
+    run_worker_guarded_with_pool(problem, backend, comm, cfg, pool.as_ref())
+}
+
+/// [`run_worker_guarded`] with a caller-owned pool (the persistent
+/// cluster's per-`NEWRUN` inner loop).
+pub fn run_worker_guarded_with_pool<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    comm: &dyn Communicator,
+    cfg: &BsfConfig,
+    pool: Option<&ChunkPool>,
+) -> Result<WorkerReport, BsfError> {
     let rank = comm.rank();
     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_worker(problem, backend, comm, cfg)
+        run_worker_with_pool(problem, backend, comm, cfg, pool)
     }));
     match run {
         Ok(result) => result,
@@ -253,4 +335,39 @@ pub(crate) fn fold_chunk<P: BsfProblem>(
         }),
         |a, b| problem.reduce_f(a, b, job),
     )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_report_wire_roundtrip_and_length_guard() {
+        let r = WorkerReport {
+            rank: 3,
+            iterations: 41,
+            map_seconds: 0.125,
+            sublist_length: 17,
+            threads: 4,
+            max_chunk_seconds: 0.0625,
+            merge_seconds: 0.03125,
+            pid: 12345,
+        };
+        let wire = r.to_wire();
+        assert_eq!(wire.len(), WORKER_REPORT_WIRE_BYTES);
+        let back = WorkerReport::from_wire(&wire).unwrap();
+        assert_eq!(back.rank, 3);
+        assert_eq!(back.iterations, 41);
+        assert_eq!(back.map_seconds, 0.125);
+        assert_eq!(back.sublist_length, 17);
+        assert_eq!(back.threads, 4);
+        assert_eq!(back.max_chunk_seconds, 0.0625);
+        assert_eq!(back.merge_seconds, 0.03125);
+        assert_eq!(back.pid, 12345);
+
+        // A short payload is a typed mixed-version error, not a panic.
+        let err = WorkerReport::from_wire(&wire[..wire.len() - 8]).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(err.to_string().contains("mixed-version"), "{err}");
+    }
 }

@@ -180,6 +180,16 @@ pub struct TagVolume {
     pub bytes: u64,
 }
 
+impl TagVolume {
+    /// Counter delta against an earlier snapshot of the same stats.
+    pub fn since(&self, base: &TagVolume) -> TagVolume {
+        TagVolume {
+            messages: self.messages.saturating_sub(base.messages),
+            bytes: self.bytes.saturating_sub(base.bytes),
+        }
+    }
+}
+
 /// Per-tag communication volume of a whole run — the measured
 /// counterpart of the cost model's order-transfer (`t_send`) and
 /// fold-transfer (`t_recv`) terms.
@@ -194,6 +204,19 @@ pub struct VolumeByTag {
 }
 
 impl VolumeByTag {
+    /// Per-tag delta against an earlier snapshot of the same stats —
+    /// how a persistent-cluster run isolates *its own* traffic from the
+    /// endpoint's whole-lifetime counters.
+    pub fn since(&self, base: &VolumeByTag) -> VolumeByTag {
+        VolumeByTag {
+            order: self.order.since(&base.order),
+            fold: self.fold.since(&base.fold),
+            exit: self.exit.since(&base.exit),
+            abort: self.abort.since(&base.abort),
+            user: self.user.since(&base.user),
+        }
+    }
+
     pub fn total_messages(&self) -> u64 {
         [self.order, self.fold, self.exit, self.abort, self.user]
             .iter()

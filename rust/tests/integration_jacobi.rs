@@ -80,7 +80,7 @@ fn openmp_and_plain_agree_at_scale() {
     let (p2, _) = JacobiProblem::random(128, 1e-16, 6);
     let r1 = Bsf::new(p1).workers(2).run().unwrap();
     let r2 = Bsf::new(p2)
-        .config(BsfConfig::with_workers(2).openmp(4))
+        .config(BsfConfig::with_workers(2).threads_per_worker(4))
         .run()
         .unwrap();
     assert_eq!(r1.iterations, r2.iterations);
@@ -142,13 +142,16 @@ fn single_element_list() {
 }
 
 #[test]
-fn deprecated_shim_still_works() {
-    // The seed-era entry point survives as a thin shim over the session.
-    #[allow(deprecated)]
-    let r = bsf::skeleton::run_threaded(
+fn run_threaded_session_matches_the_session_api() {
+    // The library-level convenience (what the seed-era `run_threaded`
+    // shim wrapped before its deletion) is the same code path the
+    // session API drives — typed errors included.
+    let r = bsf::skeleton::runner::run_threaded_session(
         std::sync::Arc::new(JacobiProblem::random(24, 1e-18, 12).0),
+        std::sync::Arc::new(bsf::FusedNativeBackend),
         &BsfConfig::with_workers(3),
-    );
+    )
+    .unwrap();
     let (p2, _) = JacobiProblem::random(24, 1e-18, 12);
     let r2 = Bsf::new(p2).workers(3).run().unwrap();
     assert_eq!(r.iterations, r2.iterations);

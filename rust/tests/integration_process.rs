@@ -118,7 +118,8 @@ fn killed_worker_process_yields_typed_error_not_a_hang() {
 
     // Drive one order → fold exchange by hand, so the kill lands at a
     // deterministic point: the worker blocked waiting for the exit flag.
-    let order = (0usize, p.init_parameter()).to_bytes();
+    // Envelope: (job, iterations-completed, param).
+    let order = (0usize, 0usize, p.init_parameter()).to_bytes();
     master.send(0, Tag::Order, order).unwrap();
     let fold = master.recv(0, Tag::Fold).unwrap();
     assert!(!fold.payload.is_empty());

@@ -144,8 +144,9 @@ fn prop_codec_roundtrip_every_problem_payload_type() {
         rt((rng.next(), rng.next()));
         rt((rng.normal(), rng.next(), rng.next()));
         rt(ViolationReport { worst: rng.normal(), violated: rng.next(), active: rng.next() });
-        // the order envelope (job, param) and fold envelope (value, counter)
-        rt((size_in(rng, 0, 3), vecf.clone()));
+        // the order envelope (job, iter, param) and fold envelope
+        // (value, counter)
+        rt((size_in(rng, 0, 3), size_in(rng, 0, 99_999), vecf.clone()));
         rt((if rng.f64() < 0.2 { None } else { Some(vecf.clone()) }, rng.next()));
         // the worker's end-of-run report envelope
         rt((size_in(rng, 0, 9), size_in(rng, 0, 999), rng.normal(), size_in(rng, 0, 999)));
@@ -213,6 +214,67 @@ fn prop_tcp_frames_survive_partial_reads() {
             whole += 1;
         }
         assert!(whole < frames.len(), "cut at {cut}/{} lost no frame", buf.len());
+    });
+}
+
+#[test]
+fn prop_checkpoint_codec_roundtrip_all_seven_problems() {
+    // A Checkpoint<P::Param> must cross the Codec losslessly for every
+    // problem the CLI ships — the same wire the transport uses for the
+    // order parameters, plus the checkpoint's magic/version header and
+    // the (iter, job) counters the resume restores.
+    use bsf::problems::apex::ApexProblem;
+    use bsf::problems::cimmino::CimminoProblem;
+    use bsf::problems::gravity::GravityProblem;
+    use bsf::problems::jacobi_map::JacobiMapProblem;
+    use bsf::problems::montecarlo::MonteCarloProblem;
+    use bsf::skeleton::{BsfProblem, Checkpoint};
+
+    fn rt<Param>(param: Param, iter: usize, job: usize)
+    where
+        Param: Codec + Clone + PartialEq + std::fmt::Debug,
+    {
+        let ck = Checkpoint { param, iter, job };
+        let bytes = ck.to_bytes();
+        assert_eq!(Checkpoint::<Param>::from_bytes(&bytes), ck);
+        assert_eq!(Checkpoint::<Param>::try_from_bytes(&bytes).unwrap(), ck);
+    }
+
+    qcheck(12, |rng| {
+        let n = size_in(rng, 2, 24);
+        let seed = rng.next();
+        let iter = rng.below(100_000);
+        // A perturbed mid-run-looking parameter, not just the pristine
+        // initial one.
+        let perturb = |xs: Vec<f64>, rng: &mut bsf::util::rng::SplitMix64| -> Vec<f64> {
+            xs.into_iter().map(|v| v + rng.normal()).collect()
+        };
+
+        let p = JacobiProblem::random(n, 1e-12, seed).0;
+        rt(perturb(p.init_parameter(), rng), iter, 0);
+
+        let p = JacobiMapProblem::random(n, 1e-12, seed).0;
+        rt(perturb(p.init_parameter(), rng), iter, 0);
+
+        let p = CimminoProblem::random(n, n, 1e-12, seed).0;
+        rt(perturb(p.init_parameter(), rng), iter, 0);
+
+        let p = GravityProblem::random(n, 1e-3, 5, seed);
+        rt(perturb(p.init_parameter(), rng), iter, 0);
+
+        let p = LppProblem::random(4 * n, n, seed);
+        rt(perturb(p.init_parameter(), rng), iter, 0);
+
+        // Montecarlo's tally param is exactly integral.
+        let p = MonteCarloProblem::new(n, 100, 1e-3);
+        let _ = p.init_parameter();
+        rt((rng.next(), rng.next()), iter, 0);
+
+        // Apex is the multi-job workflow: the job case must survive too.
+        let p = ApexProblem::random(4 * n, n, seed);
+        let job = rng.below(p.job_count());
+        let (xs, aux) = p.init_parameter();
+        rt((perturb(xs, rng), aux + rng.normal()), iter, job);
     });
 }
 

@@ -1,0 +1,523 @@
+//! Integration: the iteration-driver API — driver/one-shot equivalence
+//! on every engine, declarative stop policies, cooperative cancellation
+//! (threads and real OS processes), checkpoint/resume bit-identity, and
+//! persistent clusters reusing worker processes across runs.
+
+use std::time::Duration;
+
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::problems::montecarlo::MonteCarloProblem;
+use bsf::skeleton::{Checkpoint, Cluster, StopPolicy, StopReason};
+use bsf::util::codec::Codec;
+use bsf::{
+    Bsf, BsfError, CancelToken, ProcessEngine, SerialEngine, SimulatedEngine,
+    ThreadedEngine,
+};
+
+const BSF_BIN: &str = env!("CARGO_BIN_EXE_bsf");
+
+fn jacobi_worker_argv(n: usize) -> Vec<String> {
+    [
+        "worker", "--problem", "jacobi", "--n", &n.to_string(), "--seed", "7",
+        "--eps", "1e-12",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Step a fresh run to completion by hand and compare against the plain
+/// one-shot `run()` of the same engine: bit-identical params, equal
+/// iteration counts, one event per iteration.
+fn assert_driver_matches_one_shot<E, F>(mk_engine: F, workers: usize, name: &str)
+where
+    E: bsf::Engine<JacobiProblem> + 'static,
+    F: Fn() -> E,
+{
+    let (p1, _) = JacobiProblem::random(32, 1e-14, 7);
+    let one_shot = Bsf::new(p1).workers(workers).engine(mk_engine()).run().unwrap();
+
+    let (p2, _) = JacobiProblem::random(32, 1e-14, 7);
+    let mut run = Bsf::new(p2).workers(workers).engine(mk_engine()).iterate().unwrap();
+    let mut events = Vec::new();
+    while !run.stopped() {
+        events.push(run.step().unwrap());
+    }
+    let stepped = run.finish().unwrap();
+
+    assert_eq!(stepped.iterations, one_shot.iterations, "{name}: iteration count");
+    assert_eq!(stepped.param, one_shot.param, "{name}: bit-identical final param");
+    assert_eq!(events.len(), one_shot.iterations, "{name}: one event per iteration");
+    assert!(events.last().unwrap().stop.is_some(), "{name}: final event stops");
+    assert_eq!(
+        events.last().unwrap().param.as_ref(),
+        Some(&one_shot.param),
+        "{name}: stop event carries the final param"
+    );
+}
+
+#[test]
+fn driver_matches_one_shot_serial() {
+    assert_driver_matches_one_shot(|| SerialEngine, 1, "serial");
+}
+
+#[test]
+fn driver_matches_one_shot_threaded() {
+    assert_driver_matches_one_shot(|| ThreadedEngine, 3, "threaded");
+}
+
+#[test]
+fn driver_matches_one_shot_simulated() {
+    assert_driver_matches_one_shot(
+        || SimulatedEngine::new(ClusterProfile::infiniband()),
+        3,
+        "simulated",
+    );
+}
+
+#[test]
+fn driver_matches_one_shot_process() {
+    let n = 32;
+    let mk = || ProcessEngine::spawn_args(jacobi_worker_argv(n)).program(BSF_BIN);
+
+    let (p1, _) = JacobiProblem::random(n, 1e-12, 7);
+    let one_shot = Bsf::new(p1).workers(2).engine(mk()).run().unwrap();
+
+    let (p2, _) = JacobiProblem::random(n, 1e-12, 7);
+    let mut run = Bsf::new(p2).workers(2).engine(mk()).iterate().unwrap();
+    assert_eq!(run.engine(), "process");
+    let mut steps = 0usize;
+    while !run.stopped() {
+        run.step().unwrap();
+        steps += 1;
+    }
+    let stepped = run.finish().unwrap();
+    assert_eq!(stepped.iterations, one_shot.iterations);
+    assert_eq!(steps, one_shot.iterations);
+    assert_eq!(stepped.param, one_shot.param, "process: bit-identical");
+    // The worker reports crossed the boundary with real child pids.
+    assert_eq!(stepped.workers.len(), 2);
+    assert!(stepped.workers.iter().all(|w| w.pid != 0 && w.pid != std::process::id()));
+}
+
+#[test]
+fn events_expose_the_iteration_structure() {
+    let (p, _) = JacobiProblem::random(24, 1e-14, 11);
+    let run = Bsf::new(p).workers(1).iterate().unwrap();
+    let events: Vec<_> = run.map(|e| e.unwrap()).collect();
+    assert!(!events.is_empty());
+    for (i, ev) in events.iter().enumerate() {
+        assert_eq!(ev.iter, i + 1, "dense 1-based iteration counter");
+        assert_eq!(ev.job_case, 0, "jacobi has a single job");
+        assert!(ev.reduce_counter > 0, "every element participates");
+    }
+    for pair in events.windows(2) {
+        assert!(pair[1].elapsed >= pair[0].elapsed, "elapsed is monotone");
+    }
+    assert_eq!(events.last().unwrap().stop, Some(StopReason::Converged));
+}
+
+#[test]
+fn stop_policy_max_iter_deadline_and_predicate() {
+    // Unreachable eps: only the policy can stop these runs.
+    let mk = || JacobiProblem::random(16, 1e-300, 5).0;
+
+    let r = Bsf::new(mk())
+        .workers(1)
+        .stop(StopPolicy::new().max_iter(5))
+        .iterate()
+        .unwrap();
+    let events: Vec<_> = r.map(|e| e.unwrap()).collect();
+    assert_eq!(events.len(), 5);
+    assert_eq!(events.last().unwrap().stop, Some(StopReason::MaxIter));
+
+    // A zero deadline stops after the first iteration (checked at the
+    // decision step — the running iteration completes).
+    let r = Bsf::new(mk())
+        .workers(2)
+        .engine(ThreadedEngine)
+        .deadline(Duration::ZERO)
+        .iterate()
+        .unwrap();
+    let events: Vec<_> = r.map(|e| e.unwrap()).collect();
+    assert_eq!(events.len(), 1);
+    assert_eq!(events.last().unwrap().stop, Some(StopReason::Deadline));
+
+    let r = Bsf::new(mk())
+        .workers(1)
+        .stop(StopPolicy::new().until(|ctx| ctx.iter_counter >= 3))
+        .run()
+        .unwrap();
+    assert_eq!(r.iterations, 3);
+
+    // The policy rides the config into the simulator too (virtual clock).
+    let r = Bsf::new(mk())
+        .workers(2)
+        .engine(SimulatedEngine::new(ClusterProfile::ideal()))
+        .stop(StopPolicy::new().max_iter(4))
+        .run()
+        .unwrap();
+    assert_eq!(r.iterations, 4);
+}
+
+#[test]
+fn stop_policy_caps_compose_with_max_iter() {
+    let (p, _) = JacobiProblem::random(16, 1e-300, 5);
+    // The lower of the two caps wins.
+    let r = Bsf::new(p)
+        .workers(1)
+        .max_iter(3)
+        .stop(StopPolicy::new().max_iter(50))
+        .run()
+        .unwrap();
+    assert_eq!(r.iterations, 3);
+}
+
+#[test]
+fn cancel_aborts_threaded_run_between_iterations() {
+    let (p, _) = JacobiProblem::random(32, 1e-300, 6);
+    let token = CancelToken::new();
+    let mut run = Bsf::new(p)
+        .workers(3)
+        .engine(ThreadedEngine)
+        .cancel_token(token.clone())
+        .iterate()
+        .unwrap();
+    // A couple of normal iterations, then cancel.
+    run.step().unwrap();
+    run.step().unwrap();
+    token.cancel();
+    let err = run.step().unwrap_err();
+    assert!(matches!(err, BsfError::Cancelled), "{err}");
+    // Dropping the run joins the (released) worker threads — if the
+    // release had not happened this test would hang, not pass.
+    drop(run);
+}
+
+#[test]
+fn cancel_aborts_one_shot_run_from_another_thread() {
+    let (p, _) = JacobiProblem::random(700, 1e-300, 6);
+    let token = CancelToken::new();
+    let cancel_from_outside = {
+        let token = token.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            token.cancel();
+        })
+    };
+    let err = Bsf::new(p)
+        .workers(2)
+        .engine(ThreadedEngine)
+        .max_iter(50_000_000)
+        .cancel_token(token)
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::Cancelled), "{err}");
+    cancel_from_outside.join().unwrap();
+}
+
+#[test]
+fn cancel_aborts_process_run_and_reaps_workers() {
+    let n = 32;
+    let (p, _) = JacobiProblem::random(n, 1e-300, 7);
+    let token = CancelToken::new();
+    let engine = ProcessEngine::spawn_args(jacobi_worker_argv(n)).program(BSF_BIN);
+    let mut run = Bsf::new(p)
+        .workers(2)
+        .engine(engine)
+        .max_iter(50_000_000)
+        .cancel_token(token.clone())
+        .iterate()
+        .unwrap();
+    run.step().unwrap();
+    token.cancel();
+    let err = run.step().unwrap_err();
+    assert!(matches!(err, BsfError::Cancelled), "{err}");
+    // Dropping the run kills + reaps the released child processes; the
+    // typed error above plus a clean return here is the no-hang proof.
+    drop(run);
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_threaded() {
+    let k = 2;
+    let (p, _) = JacobiProblem::random(48, 1e-16, 9);
+    let full = Bsf::new(p).workers(k).engine(ThreadedEngine).run().unwrap();
+    assert!(full.iterations >= 4, "need a mid-run point to checkpoint at");
+
+    // Step a fresh run halfway, checkpoint, abandon it.
+    let mid = full.iterations / 2;
+    let (p2, _) = JacobiProblem::random(48, 1e-16, 9);
+    let mut run = Bsf::new(p2).workers(k).engine(ThreadedEngine).iterate().unwrap();
+    for _ in 0..mid {
+        run.step().unwrap();
+    }
+    let ck = run.checkpoint();
+    assert_eq!(ck.iter, mid);
+    let partial = run.finish().unwrap(); // early finish releases workers
+    assert_eq!(partial.iterations, mid);
+
+    // The checkpoint survives the wire (Codec round-trip)...
+    let restored = Checkpoint::<Vec<f64>>::try_from_bytes(&ck.to_bytes()).unwrap();
+    assert_eq!(restored, ck);
+
+    // ...and the resumed run finishes bit-identically to the
+    // uninterrupted one, iteration count included.
+    let (p3, _) = JacobiProblem::random(48, 1e-16, 9);
+    let resumed = Bsf::new(p3)
+        .workers(k)
+        .engine(ThreadedEngine)
+        .resume(restored)
+        .run()
+        .unwrap();
+    assert_eq!(resumed.iterations, full.iterations);
+    assert_eq!(resumed.param, full.param, "resume must be bit-identical");
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_serial_and_simulated() {
+    let (p, _) = JacobiProblem::random(32, 1e-14, 10);
+    let full = Bsf::new(p).workers(1).run().unwrap();
+    let mid = full.iterations / 2;
+    assert!(mid >= 1);
+
+    let (p2, _) = JacobiProblem::random(32, 1e-14, 10);
+    let mut run = Bsf::new(p2).workers(1).iterate().unwrap();
+    for _ in 0..mid {
+        run.step().unwrap();
+    }
+    let ck = run.checkpoint();
+    drop(run); // abandoning a serial driver needs no cleanup
+
+    let (p3, _) = JacobiProblem::random(32, 1e-14, 10);
+    let resumed = Bsf::new(p3).workers(1).resume(ck.clone()).run().unwrap();
+    assert_eq!(resumed.iterations, full.iterations);
+    assert_eq!(resumed.param, full.param);
+
+    // The same checkpoint resumes on the simulator (same math, same K):
+    // identical numerics on the virtual cluster.
+    let (p4, _) = JacobiProblem::random(32, 1e-14, 10);
+    let sim = Bsf::new(p4)
+        .workers(1)
+        .engine(SimulatedEngine::new(ClusterProfile::gigabit()))
+        .resume(ck)
+        .run()
+        .unwrap();
+    assert_eq!(sim.iterations, full.iterations);
+    assert_eq!(sim.param, full.param);
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_for_iteration_dependent_maps() {
+    // Montecarlo's map seeds its per-element RNG with the iteration
+    // counter, so resume is bit-identical only because the order message
+    // ships the master's counter to the workers — a worker whose counter
+    // rebased to 0 after resume would sample a different stream.
+    let mk = || {
+        let mut p = MonteCarloProblem::new(12, 300, 1e-12);
+        p.max_rounds = 6;
+        p
+    };
+    let full = Bsf::new(mk()).workers(2).engine(ThreadedEngine).run().unwrap();
+    let mid = full.iterations / 2;
+    assert!(mid >= 1, "need a mid-run checkpoint point");
+
+    let mut run = Bsf::new(mk()).workers(2).engine(ThreadedEngine).iterate().unwrap();
+    for _ in 0..mid {
+        run.step().unwrap();
+    }
+    let ck = run.checkpoint();
+    run.finish().unwrap();
+
+    let resumed = Bsf::new(mk())
+        .workers(2)
+        .engine(ThreadedEngine)
+        .resume(ck)
+        .run()
+        .unwrap();
+    assert_eq!(resumed.iterations, full.iterations);
+    assert_eq!(
+        resumed.param, full.param,
+        "iteration-counter-dependent map must resume bit-identically"
+    );
+}
+
+#[test]
+fn checkpoint_with_bad_job_is_rejected_at_launch() {
+    let (p, _) = JacobiProblem::random(16, 1e-12, 11);
+    let err = Bsf::new(p)
+        .workers(1)
+        .resume(Checkpoint { param: vec![0.0; 16], iter: 3, job: 7 })
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+    assert!(err.to_string().contains("job"), "{err}");
+}
+
+#[test]
+fn early_finish_reports_the_partial_run() {
+    let (p, _) = JacobiProblem::random(32, 1e-300, 12);
+    let mut run = Bsf::new(p).workers(2).engine(ThreadedEngine).iterate().unwrap();
+    for _ in 0..3 {
+        run.step().unwrap();
+    }
+    let report = run.finish().unwrap();
+    assert_eq!(report.iterations, 3);
+    assert_eq!(report.workers.len(), 2, "workers joined cleanly");
+    assert!(report.workers.iter().all(|w| w.iterations == 3));
+}
+
+#[test]
+fn cluster_reuses_worker_processes_across_runs() {
+    let n = 32;
+    let (p, _) = JacobiProblem::random(n, 1e-12, 7);
+    let cluster = Cluster::spawn(2, jacobi_worker_argv(n))
+        .program(BSF_BIN)
+        .start(&p)
+        .unwrap();
+    assert_eq!(cluster.workers(), 2);
+
+    // Reference numerics: the threaded engine is bit-identical to the
+    // process protocol at the same K (rank-ordered fold, lossless codec).
+    let (pt, _) = JacobiProblem::random(n, 1e-12, 7);
+    let fresh = Bsf::new(pt).workers(2).engine(ThreadedEngine).run().unwrap();
+
+    let run_on_cluster = || {
+        let (pc, _) = JacobiProblem::random(n, 1e-12, 7);
+        Bsf::new(pc).workers(2).engine(cluster.engine()).run().unwrap()
+    };
+    let r1 = run_on_cluster();
+    let r2 = run_on_cluster();
+
+    for r in [&r1, &r2] {
+        assert_eq!(r.engine, "cluster");
+        assert_eq!(r.iterations, fresh.iterations);
+        assert_eq!(r.param, fresh.param, "cluster runs match fresh-spawn numerics");
+        assert_eq!(r.workers.len(), 2);
+    }
+    // Per-run traffic accounting (not cluster-lifetime cumulative):
+    // K orders + K folds + K exit flags per iteration, plus K NEWRUNs
+    // and K end-of-run reports on the user tag.
+    let iters = r1.iterations as u64;
+    for r in [&r1, &r2] {
+        assert_eq!(r.volume.order.messages, 2 * iters);
+        assert_eq!(r.volume.fold.messages, 2 * iters);
+        assert_eq!(r.volume.exit.messages, 2 * iters);
+        assert_eq!(r.volume.user.messages, 4, "2 NEWRUN + 2 worker reports");
+        assert_eq!(r.messages, r.volume.total_messages());
+    }
+
+    // THE amortization witness: both runs were served by the same
+    // worker OS processes.
+    for w in 0..2 {
+        assert_eq!(r1.workers[w].rank, w);
+        assert_ne!(r1.workers[w].pid, 0);
+        assert_ne!(r1.workers[w].pid, std::process::id());
+        assert_eq!(
+            r1.workers[w].pid, r2.workers[w].pid,
+            "run 2 must reuse run 1's worker process"
+        );
+    }
+
+    // The Iterator pattern consumes the BsfRun without finish(); a
+    // cleanly stopped (or merely abandoned-between-iterations) run must
+    // park the pool back, not kill it.
+    let (pi, _) = JacobiProblem::random(n, 1e-12, 7);
+    let run = Bsf::new(pi).workers(2).engine(cluster.engine()).iterate().unwrap();
+    for event in run {
+        event.unwrap();
+    } // dropped here without finish()
+    let r3 = run_on_cluster();
+    assert_eq!(r3.param, fresh.param);
+    assert_eq!(
+        r3.workers[0].pid, r1.workers[0].pid,
+        "drop-without-finish must hand the workers back"
+    );
+
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn cluster_is_busy_while_a_run_is_active_and_shuts_down_cleanly() {
+    let n = 24;
+    let (p, _) = JacobiProblem::random(n, 1e-12, 8);
+    let cluster = Cluster::spawn(1, jacobi_worker_argv(n))
+        .program(BSF_BIN)
+        .start(&p)
+        .unwrap();
+
+    let (p1, _) = JacobiProblem::random(n, 1e-12, 8);
+    let mut active = Bsf::new(p1).workers(1).engine(cluster.engine()).iterate().unwrap();
+    active.step().unwrap();
+
+    // One run at a time: a second launch is a typed config error.
+    let (p2, _) = JacobiProblem::random(n, 1e-12, 8);
+    let err = Bsf::new(p2).workers(1).engine(cluster.engine()).run().unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+    assert!(err.to_string().contains("busy"), "{err}");
+
+    // Finishing the active run frees the pool for the next one.
+    let r1 = active.run_to_end().unwrap();
+    let (p3, _) = JacobiProblem::random(n, 1e-12, 8);
+    let r2 = Bsf::new(p3).workers(1).engine(cluster.engine()).run().unwrap();
+    assert_eq!(r1.param, r2.param);
+    assert_eq!(r1.workers[0].pid, r2.workers[0].pid);
+
+    // The worker-count contract is checked, not assumed.
+    let (p4, _) = JacobiProblem::random(n, 1e-12, 8);
+    let err = Bsf::new(p4).workers(3).engine(cluster.engine()).run().unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+
+    // ...and so is the problem signature: a different problem instance
+    // is a typed config error (the process engine's handshake guard,
+    // per run), and the rejected launch must not consume the pool.
+    let (pw, _) = JacobiProblem::random(2 * n, 1e-12, 8);
+    let err = Bsf::new(pw).workers(1).engine(cluster.engine()).run().unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+    assert!(err.to_string().contains("list_size"), "{err}");
+
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn cancelled_cluster_run_leaves_the_cluster_reusable() {
+    let n = 24;
+    let (p, _) = JacobiProblem::random(n, 1e-300, 9);
+    let cluster = Cluster::spawn(1, jacobi_worker_argv(n))
+        .program(BSF_BIN)
+        .start(&p)
+        .unwrap();
+
+    let token = CancelToken::new();
+    let (p1, _) = JacobiProblem::random(n, 1e-300, 9);
+    let mut run = Bsf::new(p1)
+        .workers(1)
+        .engine(cluster.engine())
+        .max_iter(50_000_000)
+        .cancel_token(token.clone())
+        .iterate()
+        .unwrap();
+    run.step().unwrap();
+    token.cancel();
+    let err = run.step().unwrap_err();
+    assert!(matches!(err, BsfError::Cancelled), "{err}");
+    // Like every other engine, finish() after a cancel still reports
+    // the partial run — even though the pool was already handed back.
+    let partial = run.finish().unwrap();
+    assert_eq!(partial.engine, "cluster");
+    assert_eq!(partial.iterations, 1);
+    assert_eq!(partial.workers.len(), 1);
+
+    // Cancellation released the worker back to its idle loop; the
+    // cluster still serves runs with the same process.
+    let (p2, _) = JacobiProblem::random(n, 1e-300, 9);
+    let r = Bsf::new(p2)
+        .workers(1)
+        .engine(cluster.engine())
+        .max_iter(5)
+        .run()
+        .unwrap();
+    assert_eq!(r.iterations, 5);
+    cluster.shutdown().unwrap();
+}
