@@ -20,6 +20,17 @@ pub enum BsfError {
     /// The message-passing substrate failed (endpoint hung up, rank out
     /// of range, poisoned inbox).
     Transport(String),
+    /// A specific worker became unreachable mid-run (its process died,
+    /// its connection tore, or a fault was injected). Unlike the generic
+    /// [`Transport`](Self::Transport) case the lost rank is known, which
+    /// is what lets a [`FaultPolicy`](crate::skeleton::fault::FaultPolicy)
+    /// re-plan the run on the survivors instead of aborting.
+    WorkerLost {
+        /// Rank of the unreachable worker.
+        rank: usize,
+        /// Human-readable cause (EOF, broken pipe, injected fault, ...).
+        reason: String,
+    },
     /// A worker thread panicked inside user map/reduce code.
     WorkerPanic {
         /// Rank of the worker whose thread died.
@@ -65,6 +76,11 @@ impl BsfError {
         BsfError::Transport(format!("{}: {source}", context.into()))
     }
 
+    /// A specific worker became unreachable mid-run.
+    pub fn worker_lost(rank: usize, reason: impl Into<String>) -> Self {
+        BsfError::WorkerLost { rank, reason: reason.into() }
+    }
+
     pub fn artifact(msg: impl Into<String>) -> Self {
         BsfError::Artifact(msg.into())
     }
@@ -95,6 +111,9 @@ impl fmt::Display for BsfError {
         match self {
             BsfError::Config(msg) => write!(f, "configuration error: {msg}"),
             BsfError::Transport(msg) => write!(f, "transport error: {msg}"),
+            BsfError::WorkerLost { rank, reason } => {
+                write!(f, "worker {rank} lost mid-run: {reason}")
+            }
             BsfError::WorkerPanic { rank } => {
                 write!(f, "worker {rank} panicked in user map/reduce code")
             }

@@ -98,7 +98,7 @@ pub mod util;
 pub use error::{BsfError, BsfResult};
 pub use skeleton::{
     Bsf, BsfConfig, BsfProblem, BsfRun, CancelToken, Checkpoint, Clock, Cluster,
-    ClusterEngine, Driver, Engine, FusedNativeBackend, IterationEvent, MapBackend,
-    PerElementBackend, PhaseBreakdown, ProcessEngine, RunReport, SerialEngine,
-    SimulatedEngine, StopPolicy, StopReason, ThreadedEngine,
+    ClusterEngine, Driver, Engine, FaultPolicy, FusedNativeBackend, IterationEvent,
+    MapBackend, PerElementBackend, PhaseBreakdown, ProcessEngine, RunReport,
+    SerialEngine, SimulatedEngine, StopPolicy, StopReason, ThreadedEngine,
 };

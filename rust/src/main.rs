@@ -45,10 +45,12 @@ use bsf::runtime::XlaRuntime;
 use bsf::skeleton::cluster::run_persistent_worker;
 use bsf::skeleton::process::run_process_worker;
 use bsf::skeleton::{
-    Bsf, BsfConfig, BsfProblem, FusedNativeBackend, MapBackend, PerElementBackend,
-    ProcessEngine, RunReport, SerialEngine, SimulatedEngine, ThreadedEngine,
+    Bsf, BsfConfig, BsfProblem, FaultPolicy, FusedNativeBackend, MapBackend,
+    PerElementBackend, ProcessEngine, RunReport, SerialEngine, SimulatedEngine,
+    ThreadedEngine,
 };
 use bsf::util::cli::ArgMap;
+use bsf::util::faultsim::run_flaky_process_worker;
 
 const USAGE: &str = "\
 usage: bsf <run|worker|sim|sweep|predict|bench|artifacts> [problem] [options]
@@ -73,6 +75,15 @@ options by subcommand:
     --listen A     with --engine process: bind A (host:port) and wait
                    for K pre-started `bsf worker` processes instead of
                    self-spawning them on localhost
+    --fault P      abort | redistribute | restart — what to do when a
+                   worker is lost mid-run (default abort; redistribute
+                   re-splits over the survivors, restart relaunches at
+                   full K from the master's checkpoint)
+    --max-losses N with --fault redistribute: losses absorbed per run
+                   (default 1)
+    --kill-rank R / --kill-after-folds N
+                   fault-injection smoke (testing): the spawned worker
+                   with rank R hard-exits before sending fold N+1
     --backend B    native | per-element | xla
     --profile P    infiniband | gigabit | ideal    (sim)
     --steps S      leapfrog steps (gravity; default 50)
@@ -87,6 +98,9 @@ options by subcommand:
     --persist      stay alive across runs: serve a persistent cluster
                    (NEWRUN/SHUTDOWN protocol) instead of exiting after
                    one run — the worker side of Cluster::spawn/connect
+    --kill-rank R / --kill-after-folds N
+                   fault-injection smoke (testing): if R equals this
+                   worker's --rank, hard-exit before sending fold N+1
   sweep:
     --n N (default 512)  --k 1,2,4,...  --seed S  --profile P
     --max-iter I (default 30)  --steps S (gravity; default: max-iter)
@@ -200,6 +214,18 @@ fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
             }
         }
     }
+    cfg.fault = match args.str_or("fault", "abort") {
+        "abort" => FaultPolicy::Abort,
+        "redistribute" => {
+            FaultPolicy::Redistribute { max_losses: args.usize_or("max-losses", 1)? }
+        }
+        "restart" => FaultPolicy::RestartFromCheckpoint,
+        other => {
+            return Err(BsfError::usage(format!(
+                "unknown --fault {other:?} (abort|redistribute|restart)"
+            )))
+        }
+    };
     Ok(Common {
         n: args.usize_or("n", 256)?,
         seed: args.u64_or("seed", 7)?,
@@ -229,6 +255,14 @@ fn worker_args(name: &str, c: &Common, args: &ArgMap) -> Vec<String> {
     for (k, v) in kv {
         argv.push(format!("--{k}"));
         argv.push(v.clone());
+    }
+    // Fault-injection passthrough: every spawned worker gets the kill
+    // spec; only the one whose --rank matches --kill-rank acts on it.
+    if let Some(rank) = args.get("kill-rank") {
+        argv.push("--kill-rank".to_string());
+        argv.push(rank.to_string());
+        argv.push("--kill-after-folds".to_string());
+        argv.push(args.str_or("kill-after-folds", "0").to_string());
     }
     argv
 }
@@ -369,7 +403,7 @@ fn finish<Param>(
 const RUN_OPTS: &[&str] = &[
     "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
     "max-iter", "deadline", "engine", "backend", "profile", "steps", "samples",
-    "listen",
+    "listen", "fault", "max-losses", "kill-rank", "kill-after-folds",
 ];
 
 fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
@@ -442,7 +476,8 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
 
 const WORKER_OPTS: &[&str] = &[
     "connect", "rank", "problem", "n", "seed", "eps", "steps", "samples", "omp",
-    "threads-per-worker", "backend", "persist",
+    "threads-per-worker", "backend", "persist", "fault", "max-losses", "kill-rank",
+    "kill-after-folds",
 ];
 
 /// One worker process of a distributed run (the child side of
@@ -468,6 +503,15 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
     // --persist: serve a persistent cluster (NEWRUN/SHUTDOWN) instead
     // of exiting after one run.
     let persist = args.flag("persist");
+    // Fault-injection smoke: die before sending fold N+1, but only when
+    // the kill spec names *this* worker's rank (the launcher passes the
+    // same argv to every spawned child).
+    let die: Option<usize> = match args.get("kill-rank") {
+        Some(v) if v.parse::<usize>().ok() == Some(rank) => {
+            Some(args.usize_or("kill-after-folds", 0)?)
+        }
+        _ => None,
+    };
 
     fn drive<P: BsfProblem>(
         p: &P,
@@ -476,11 +520,14 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
         rank: usize,
         cfg: &BsfConfig,
         persist: bool,
+        die: Option<usize>,
     ) -> Result<(), BsfError> {
-        if persist {
-            run_persistent_worker(p, b, connect, rank, cfg)
-        } else {
-            run_process_worker(p, b, connect, rank, cfg).map(|_| ())
+        match die {
+            Some(budget) => {
+                run_flaky_process_worker(p, b, connect, rank, cfg, budget, persist)
+            }
+            None if persist => run_persistent_worker(p, b, connect, rank, cfg),
+            None => run_process_worker(p, b, connect, rank, cfg).map(|_| ()),
         }
     }
 
@@ -491,20 +538,21 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
         rank: usize,
         cfg: &BsfConfig,
         persist: bool,
+        die: Option<usize>,
     ) -> Result<(), BsfError> {
         match backend {
             BackendOpt::PerElement => {
-                drive(p, &PerElementBackend, connect, rank, cfg, persist)
+                drive(p, &PerElementBackend, connect, rank, cfg, persist, die)
             }
             BackendOpt::Xla => {
                 eprintln!(
                     "bsf: warning: worker processes use the native map \
                      (--backend xla is master-side only); using native"
                 );
-                drive(p, &FusedNativeBackend, connect, rank, cfg, persist)
+                drive(p, &FusedNativeBackend, connect, rank, cfg, persist, die)
             }
             BackendOpt::FusedNative => {
-                drive(p, &FusedNativeBackend, connect, rank, cfg, persist)
+                drive(p, &FusedNativeBackend, connect, rank, cfg, persist, die)
             }
         }
     }
@@ -512,13 +560,17 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
     // The mk_* constructors are shared with cmd_run, so worker j holds
     // the same problem instance as the master by construction.
     match name {
-        "jacobi" => go(&mk_jacobi(&c), backend, connect, rank, &c.cfg, persist),
-        "jacobi-map" => go(&mk_jacobi_map(&c), backend, connect, rank, &c.cfg, persist),
-        "cimmino" => go(&mk_cimmino(&c), backend, connect, rank, &c.cfg, persist),
-        "gravity" => go(&mk_gravity(&c), backend, connect, rank, &c.cfg, persist),
-        "montecarlo" => go(&mk_montecarlo(&c), backend, connect, rank, &c.cfg, persist),
-        "lpp" => go(&mk_lpp(&c), backend, connect, rank, &c.cfg, persist),
-        "apex" => go(&mk_apex(&c), backend, connect, rank, &c.cfg, persist),
+        "jacobi" => go(&mk_jacobi(&c), backend, connect, rank, &c.cfg, persist, die),
+        "jacobi-map" => {
+            go(&mk_jacobi_map(&c), backend, connect, rank, &c.cfg, persist, die)
+        }
+        "cimmino" => go(&mk_cimmino(&c), backend, connect, rank, &c.cfg, persist, die),
+        "gravity" => go(&mk_gravity(&c), backend, connect, rank, &c.cfg, persist, die),
+        "montecarlo" => {
+            go(&mk_montecarlo(&c), backend, connect, rank, &c.cfg, persist, die)
+        }
+        "lpp" => go(&mk_lpp(&c), backend, connect, rank, &c.cfg, persist, die),
+        "apex" => go(&mk_apex(&c), backend, connect, rank, &c.cfg, persist, die),
         other => Err(BsfError::usage(format!("unknown problem {other:?} (worker)"))),
     }
 }

@@ -18,12 +18,26 @@
 //! the analytic model idealizes, so model-vs-simulation disagreement is a
 //! meaningful quantity (reported in E5).
 //!
+//! ## Fault simulation
+//!
+//! A deterministic [`FaultPlan`] (kill rank *r* at iteration *i*)
+//! exercises the fault layer without real processes. Under
+//! [`FaultPolicy::Redistribute`](crate::skeleton::fault::FaultPolicy)
+//! the simulator charges the full recovery bill — the wasted round the
+//! survivors computed before the loss was absorbed, the unpark +
+//! `REASSIGN` control messages, and the re-run on the new split — then
+//! continues on the survivors exactly as the real master does. Under
+//! `Abort`/`RestartFromCheckpoint` the kill surfaces as a typed
+//! [`BsfError::WorkerLost`]; a `FaultPlan` fires each kill **once**
+//! across clones (the fired set is shared), so a restart relaunch does
+//! not re-kill.
+//!
 //! The session-facing entry point is
 //! [`SimulatedEngine`](crate::skeleton::engine::SimulatedEngine), whose
 //! `launch` steps one virtual iteration per `Driver::step` (the same
 //! [`SimCore`] state machine [`simulate`] loops to completion).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::costmodel::ClusterProfile;
@@ -33,6 +47,7 @@ use crate::skeleton::config::BsfConfig;
 use crate::skeleton::driver::{
     start_state, Checkpoint, Driver, IterationEvent, StopReason,
 };
+use crate::skeleton::fault::{FaultPolicy, TAG_REASSIGN};
 use crate::skeleton::master::{decide_step, next_job_error};
 use crate::skeleton::pool::ChunkPool;
 use crate::skeleton::problem::{BsfProblem, IterCtx};
@@ -44,6 +59,14 @@ use crate::skeleton::variables::SkelVars;
 use crate::skeleton::worker::{intra_worker_pool, map_and_fold, WorkerReport};
 use crate::transport::{Tag, TransportStats, VolumeByTag};
 use crate::util::codec::Codec;
+
+/// Wire size of one `TAG_REASSIGN` envelope, derived from the same
+/// codec the master encodes with ((logical, k, offset, len) — see
+/// `MasterLoop::gather_round`), so the charged bytes can never drift
+/// from the real wire.
+fn reassign_wire_bytes() -> usize {
+    (0usize, 0usize, 0usize, 0usize).to_bytes().len()
+}
 
 /// How the simulator charges worker compute time.
 #[derive(Debug, Clone, Copy)]
@@ -57,8 +80,68 @@ pub enum ComputeTime {
     PerElement(f64),
 }
 
+/// A deterministic fault-injection schedule for simulated runs: each
+/// kill makes the named virtual worker die at the start of the named
+/// iteration (0-based, counted like `SkelVars::iter_counter` at order
+/// time) — after receiving the order, before returning its fold.
+///
+/// Clones share one fired set, so a kill fires exactly once per plan
+/// even across `RestartFromCheckpoint` relaunches (each relaunch clones
+/// the engine's `SimConfig`).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    kills: Vec<(usize, usize)>,
+    fired: Arc<Mutex<Vec<bool>>>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule virtual worker `rank` to die at iteration `iter`. The
+    /// shared fired set is kept (not replaced), so clones taken before
+    /// or after this call all observe each kill firing exactly once;
+    /// `take_due` grows the set lazily under its lock.
+    pub fn kill(mut self, rank: usize, iter: usize) -> Self {
+        self.kills.push((rank, iter));
+        self
+    }
+
+    /// True when no kills are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+    }
+
+    /// Ranks due to die at `iter` that have not fired yet; marks them
+    /// fired.
+    fn take_due(&self, iter: usize) -> Vec<usize> {
+        if self.kills.is_empty() {
+            return Vec::new();
+        }
+        let mut fired = match self.fired.lock() {
+            Ok(f) => f,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        // Grow-only: a clone with a shorter kills list (taken before a
+        // later kill() call) must not erase flags the longer clone set,
+        // or its kills would re-fire across restart relaunches.
+        if fired.len() < self.kills.len() {
+            fired.resize(self.kills.len(), false);
+        }
+        let mut due = Vec::new();
+        for (i, &(rank, at)) in self.kills.iter().enumerate() {
+            if !fired[i] && at == iter {
+                fired[i] = true;
+                due.push(rank);
+            }
+        }
+        due
+    }
+}
+
 /// Simulated-run configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SimConfig {
     pub profile: ClusterProfile,
     pub compute: ComputeTime,
@@ -67,11 +150,18 @@ pub struct SimConfig {
     /// paper's OpenMP ablation isolates: intra-node parallelism divides
     /// the map but adds a fixed parallel-region cost. 0 by default.
     pub fork_join: f64,
+    /// Deterministic worker-kill schedule (empty by default).
+    pub fault: FaultPlan,
 }
 
 impl SimConfig {
     pub fn new(profile: ClusterProfile) -> Self {
-        Self { profile, compute: ComputeTime::Measured, fork_join: 0.0 }
+        Self {
+            profile,
+            compute: ComputeTime::Measured,
+            fork_join: 0.0,
+            fault: FaultPlan::default(),
+        }
     }
 
     pub fn per_element(mut self, t_elem: f64) -> Self {
@@ -82,6 +172,12 @@ impl SimConfig {
     /// Set the intra-worker fork/join overhead (see [`SimConfig::fork_join`]).
     pub fn fork_join(mut self, seconds: f64) -> Self {
         self.fork_join = seconds;
+        self
+    }
+
+    /// Attach a deterministic [`FaultPlan`].
+    pub fn fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = plan;
         self
     }
 }
@@ -123,6 +219,8 @@ pub struct SimReport<Param> {
     /// Per-tag breakdown of the simulated traffic (orders, folds, exit
     /// flags) — same shape the real transports report.
     pub volume: VolumeByTag,
+    /// Virtual worker ranks lost to the [`FaultPlan`], in loss order.
+    pub losses: Vec<usize>,
 }
 
 /// The simulator's iteration state machine: one virtual-time iteration
@@ -131,7 +229,14 @@ pub struct SimReport<Param> {
 pub(crate) struct SimCore<P: BsfProblem> {
     cfg: BsfConfig,
     sim: SimConfig,
-    ranges: Vec<(usize, usize)>,
+    /// Workers originally launched (physical ranks are `0..k0`).
+    k0: usize,
+    /// Current assignment: (physical rank, offset, length), index =
+    /// logical rank. Shrinks when the fault plan kills a worker under
+    /// the Redistribute policy.
+    assign: Vec<(usize, usize, usize)>,
+    /// Sublists parallel to `assign` (step 1 of Alg. 2, re-input on
+    /// redistribution exactly like a real reassigned worker).
     sublists: Vec<Vec<P::MapElem>>,
     pool: Option<ChunkPool>,
     threads: usize,
@@ -142,9 +247,18 @@ pub(crate) struct SimCore<P: BsfProblem> {
     vtime: f64,
     stats: TransportStats,
     acc: IterBreakdown,
+    /// Per-physical-rank accumulators (len `k0`; lost ranks freeze).
     map_seconds: Vec<f64>,
     max_chunk_seconds: Vec<f64>,
     merge_seconds: Vec<f64>,
+    iters_done: Vec<usize>,
+    lengths: Vec<usize>,
+    reassigned: Vec<usize>,
+    /// Physical ranks lost to the fault plan, chronological.
+    losses: Vec<usize>,
+    /// A kill the policy did not absorb (finish re-reports it, matching
+    /// the real engines where the loss kills the report too).
+    lost_fatal: Option<usize>,
     wall0: Instant,
     stop: Option<StopReason>,
     done: bool,
@@ -171,6 +285,12 @@ impl<P: BsfProblem> SimCore<P> {
             .iter()
             .map(|&(off, len)| (off..off + len).map(|i| problem.map_list_elem(i)).collect())
             .collect();
+        let assign: Vec<(usize, usize, usize)> = ranges
+            .iter()
+            .enumerate()
+            .map(|(rank, &(off, len))| (rank, off, len))
+            .collect();
+        let lengths: Vec<usize> = ranges.iter().map(|&(_, len)| len).collect();
 
         // One real chunk pool serves every virtual node in turn (virtual
         // workers run sequentially on this machine, so sharing is exact).
@@ -182,7 +302,8 @@ impl<P: BsfProblem> SimCore<P> {
         Ok(Self {
             cfg: cfg.clone(),
             sim,
-            ranges,
+            k0: k,
+            assign,
             sublists,
             pool,
             threads,
@@ -196,6 +317,11 @@ impl<P: BsfProblem> SimCore<P> {
             map_seconds: vec![0.0; k],
             max_chunk_seconds: vec![0.0; k],
             merge_seconds: vec![0.0; k],
+            iters_done: vec![0; k],
+            lengths,
+            reassigned: vec![0; k],
+            losses: Vec::new(),
+            lost_fatal: None,
             wall0: Instant::now(),
             stop: None,
             done: false,
@@ -205,6 +331,186 @@ impl<P: BsfProblem> SimCore<P> {
 
     fn checkpoint(&self) -> Checkpoint<P::Param> {
         Checkpoint { param: self.param.clone(), iter: self.iter, job: self.job }
+    }
+
+    /// Execute every assigned worker's real map for the current order,
+    /// charging compute + fold transfer; `skip` ranks (the ones dying
+    /// this round) receive the order but never answer. Returns each
+    /// survivor's (arrival time, fold).
+    fn run_workers(
+        &mut self,
+        problem: &P,
+        backend: &dyn MapBackend<P>,
+        send_cost: f64,
+        skip: &[usize],
+    ) -> Result<Vec<(f64, ExtendedFold<P::ReduceElem>)>, BsfError> {
+        let lat = self.sim.profile.latency;
+        let beta = self.sim.profile.byte_time;
+        let threads = self.threads;
+        let k_now = self.assign.len();
+        let mut arrivals: Vec<(f64, ExtendedFold<P::ReduceElem>)> =
+            Vec::with_capacity(k_now);
+        for (logical, elems) in self.sublists.iter().enumerate() {
+            let (phys, off, len) = self.assign[logical];
+            if skip.contains(&phys) {
+                continue;
+            }
+            let vars = SkelVars::for_worker(logical, k_now, off, len, self.iter, self.job);
+            let t0 = Instant::now();
+            // Same contract as the real engines: a panicking map becomes
+            // a typed WorkerPanic for the simulated node's rank.
+            let param = &self.param;
+            let pool = self.pool.as_ref();
+            let mapped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                map_and_fold(problem, backend, elems, param, vars, pool)
+            }));
+            let mapped = match mapped {
+                Ok(mapped) => mapped,
+                Err(_) => {
+                    self.done = true;
+                    self.panicked = Some(phys);
+                    return Err(BsfError::WorkerPanic { rank: phys });
+                }
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            self.map_seconds[phys] += wall;
+            self.max_chunk_seconds[phys] += mapped.max_chunk_seconds;
+            self.merge_seconds[phys] += mapped.merge_seconds;
+            self.iters_done[phys] += 1;
+            let fold = mapped.fold;
+            // Intra-worker tier charging: Measured wall already ran on
+            // the real pool; the deterministic per-element model charges
+            // the parallel critical path plus the fork/join overhead.
+            let intra_overhead = if threads > 1 { self.sim.fork_join } else { 0.0 };
+            let t_map = match self.sim.compute {
+                ComputeTime::Measured => wall + intra_overhead,
+                ComputeTime::PerElement(te) => {
+                    let critical_path = len.div_ceil(threads);
+                    critical_path as f64 * te + intra_overhead
+                }
+            };
+            let fold_len = (fold.value.clone(), fold.counter).to_bytes().len();
+            let start = (logical + 1) as f64 * send_cost;
+            let arrive = start + t_map + lat + fold_len as f64 * beta;
+            self.stats.record(Tag::Fold, fold_len);
+            arrivals.push((arrive, fold));
+        }
+        Ok(arrivals)
+    }
+
+    /// Adopt a new split over `ranks` (surviving physical ranks,
+    /// ascending): the canonical `all_ranges` block split of a fresh
+    /// `ranks.len()`-worker run, with sublists re-input exactly like a
+    /// real reassigned worker.
+    fn apply_assignment(&mut self, problem: &P, ranks: &[usize]) {
+        let n = problem.list_size();
+        let ranges = all_ranges(n, ranks.len());
+        self.assign = ranges
+            .iter()
+            .zip(ranks.iter())
+            .map(|(&(off, len), &phys)| (phys, off, len))
+            .collect();
+        self.sublists = ranges
+            .iter()
+            .map(|&(off, len)| (off..off + len).map(|i| problem.map_list_elem(i)).collect())
+            .collect();
+        for (i, &phys) in ranks.iter().enumerate() {
+            self.lengths[phys] = ranges[i].1;
+            self.reassigned[phys] += 1;
+        }
+    }
+
+    /// Charge one sequential order broadcast to the current assignment
+    /// (same envelope the real transports ship — (job, iter, param) —
+    /// so the charged byte volume matches the wire exactly): records
+    /// the `Tag::Order` stats and returns (per-order send cost, whole
+    /// broadcast cost).
+    fn charge_order_broadcast(&mut self) -> (f64, f64) {
+        let lat = self.sim.profile.latency;
+        let beta = self.sim.profile.byte_time;
+        let order_bytes = (self.job, self.iter, self.param.clone()).to_bytes().len();
+        let k_now = self.assign.len();
+        let send_cost = lat + order_bytes as f64 * beta;
+        let send_all = k_now as f64 * send_cost;
+        self.stats.record_n(Tag::Order, k_now as u64, order_bytes);
+        (send_cost, send_all)
+    }
+
+    /// Apply the fault plan's kills due at this iteration boundary.
+    /// Under Redistribute (budget permitting) the wasted round, the
+    /// replan control traffic and the shrink are charged and the step
+    /// continues on the survivors; otherwise the loss surfaces typed.
+    fn apply_due_kills(
+        &mut self,
+        problem: &P,
+        backend: &dyn MapBackend<P>,
+    ) -> Result<(), BsfError> {
+        let due: Vec<usize> = self
+            .sim
+            .fault
+            .take_due(self.iter)
+            .into_iter()
+            .filter(|r| self.assign.iter().any(|&(p, _, _)| p == *r))
+            .collect();
+        if due.is_empty() {
+            return Ok(());
+        }
+        let lat = self.sim.profile.latency;
+        let beta = self.sim.profile.byte_time;
+
+        let absorbable = match self.cfg.fault {
+            FaultPolicy::Redistribute { max_losses } => {
+                self.losses.len() + due.len() <= max_losses
+                    && self.assign.len() > due.len()
+            }
+            _ => false,
+        };
+        if !absorbable {
+            // Charge the order broadcast that exposes the failure, then
+            // surface the first loss typed (Abort / Restart policies, or
+            // an exhausted Redistribute budget).
+            let (_, send_all) = self.charge_order_broadcast();
+            self.vtime += send_all;
+            self.acc.send += send_all;
+            let rank = due[0];
+            self.losses.extend(due.iter().copied());
+            self.lost_fatal = Some(rank);
+            self.done = true;
+            return Err(BsfError::worker_lost(rank, "simulated fault-plan kill"));
+        }
+
+        // The wasted round: orders reach everyone (the dying workers
+        // included), the survivors really compute on the old split, and
+        // their folds cross the wire — all for nothing.
+        let k_now = self.assign.len();
+        let (send_cost, send_all) = self.charge_order_broadcast();
+        let arrivals = self.run_workers(problem, backend, send_cost, &due)?;
+        let last_arrival =
+            arrivals.iter().map(|a| a.0).fold(send_all, f64::max);
+
+        // Replan control traffic: unpark (exit=false) + REASSIGN per
+        // survivor, sequential like every master broadcast.
+        let reassign_bytes = reassign_wire_bytes();
+        let survivors = k_now - due.len();
+        self.stats.record_n(Tag::Exit, survivors as u64, 1);
+        self.stats.record_n(TAG_REASSIGN, survivors as u64, reassign_bytes);
+        let replan_cost = survivors as f64
+            * ((lat + beta) + (lat + reassign_bytes as f64 * beta));
+
+        self.vtime += last_arrival + replan_cost;
+        self.acc.send += send_all + replan_cost;
+        self.acc.compute_and_gather += last_arrival - send_all;
+
+        // Shrink to the survivors and re-split.
+        let ranks: Vec<usize> = self
+            .assign
+            .iter()
+            .map(|&(p, _, _)| p)
+            .filter(|p| !due.contains(p))
+            .collect();
+        self.losses.extend(due.iter().copied());
+        self.apply_assignment(problem, &ranks);
+        Ok(())
     }
 
     /// One virtual-time iteration (phases 1-4 of the module docs).
@@ -222,66 +528,20 @@ impl<P: BsfProblem> SimCore<P> {
             self.done = true;
             return Err(BsfError::Cancelled);
         }
-        let k = self.cfg.workers;
+
+        // Fault plan: kills scheduled for this iteration fire now.
+        self.apply_due_kills(problem, backend)?;
+
+        let k = self.assign.len();
         let lat = self.sim.profile.latency;
         let beta = self.sim.profile.byte_time;
-        let threads = self.threads;
 
-        // Same order envelope the real transports ship — (job,
-        // iterations-completed, param) — so the charged byte volume
-        // matches the wire exactly.
-        let order_payload = (self.job, self.iter, self.param.clone()).to_bytes();
-        let order_bytes = order_payload.len();
-
-        // Phase 1: sequential order sends; order j lands at (j+1)·(L+sβ).
-        let send_cost = lat + order_bytes as f64 * beta;
-        let send_all = k as f64 * send_cost;
-        self.stats.record_n(Tag::Order, k as u64, order_bytes);
+        // Phase 1: sequential order sends; order j lands at (j+1)·(L+sβ)
+        // (same envelope the real transports ship, charged once).
+        let (send_cost, send_all) = self.charge_order_broadcast();
 
         // Phase 2: execute every worker's real map, measure/charge time.
-        let mut arrivals: Vec<(f64, ExtendedFold<P::ReduceElem>)> =
-            Vec::with_capacity(k);
-        for (rank, elems) in self.sublists.iter().enumerate() {
-            let (off, len) = self.ranges[rank];
-            let vars = SkelVars::for_worker(rank, k, off, len, self.iter, self.job);
-            let t0 = Instant::now();
-            // Same contract as the real engines: a panicking map becomes
-            // a typed WorkerPanic for the simulated node's rank.
-            let param = &self.param;
-            let pool = self.pool.as_ref();
-            let mapped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                map_and_fold(problem, backend, elems, param, vars, pool)
-            }));
-            let mapped = match mapped {
-                Ok(mapped) => mapped,
-                Err(_) => {
-                    self.done = true;
-                    self.panicked = Some(rank);
-                    return Err(BsfError::WorkerPanic { rank });
-                }
-            };
-            let wall = t0.elapsed().as_secs_f64();
-            self.map_seconds[rank] += wall;
-            self.max_chunk_seconds[rank] += mapped.max_chunk_seconds;
-            self.merge_seconds[rank] += mapped.merge_seconds;
-            let fold = mapped.fold;
-            // Intra-worker tier charging: Measured wall already ran on
-            // the real pool; the deterministic per-element model charges
-            // the parallel critical path plus the fork/join overhead.
-            let intra_overhead = if threads > 1 { self.sim.fork_join } else { 0.0 };
-            let t_map = match self.sim.compute {
-                ComputeTime::Measured => wall + intra_overhead,
-                ComputeTime::PerElement(te) => {
-                    let critical_path = len.div_ceil(threads);
-                    critical_path as f64 * te + intra_overhead
-                }
-            };
-            let fold_len = (fold.value.clone(), fold.counter).to_bytes().len();
-            let start = (rank + 1) as f64 * send_cost;
-            let arrive = start + t_map + lat + fold_len as f64 * beta;
-            self.stats.record(Tag::Fold, fold_len);
-            arrivals.push((arrive, fold));
-        }
+        let mut arrivals = self.run_workers(problem, backend, send_cost, &[])?;
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0));
         let last_arrival = arrivals.last().map(|a| a.0).unwrap_or(send_all);
 
@@ -378,21 +638,20 @@ impl<P: BsfProblem> SimCore<P> {
         Ok(event)
     }
 
-    /// Per-virtual-worker summaries (iterations counted for this run).
+    /// Per-virtual-worker summaries: all `k0` launched ranks, lost ones
+    /// frozen at the counts they reached (the run's `losses` names them).
     fn worker_reports(&self) -> Vec<WorkerReport> {
-        let performed = self.iter - self.start_iter;
-        self.ranges
-            .iter()
-            .enumerate()
-            .map(|(rank, &(_, len))| WorkerReport {
+        (0..self.k0)
+            .map(|rank| WorkerReport {
                 rank,
-                iterations: performed,
+                iterations: self.iters_done[rank],
                 map_seconds: self.map_seconds[rank],
-                sublist_length: len,
+                sublist_length: self.lengths[rank],
                 threads: self.threads,
                 max_chunk_seconds: self.max_chunk_seconds[rank],
                 merge_seconds: self.merge_seconds[rank],
                 pid: std::process::id(),
+                reassignments: self.reassigned[rank],
             })
             .collect()
     }
@@ -417,6 +676,7 @@ impl<P: BsfProblem> SimCore<P> {
             messages: self.stats.message_count(),
             bytes: self.stats.byte_count(),
             volume: self.stats.volume(),
+            losses: self.losses,
         };
         (report, workers)
     }
@@ -459,9 +719,13 @@ impl<P: BsfProblem> Driver<P> for SimDriver<P> {
         let this = *self;
         let core = this.core;
         // Same contract as the threaded engine (panic resurfaces at
-        // join): a panicked run has no salvageable report.
+        // join): a panicked run has no salvageable report. An
+        // unabsorbed fault-plan kill likewise killed the run.
         if let Some(rank) = core.panicked {
             return Err(BsfError::WorkerPanic { rank });
+        }
+        if let Some(rank) = core.lost_fatal {
+            return Err(BsfError::worker_lost(rank, "simulated fault-plan kill"));
         }
         let workers = core.worker_reports();
         Ok(RunReport {
@@ -483,6 +747,9 @@ impl<P: BsfProblem> Driver<P> for SimDriver<P> {
             messages: core.stats.message_count(),
             bytes: core.stats.byte_count(),
             volume: core.stats.volume(),
+            losses: core.losses,
+            // The simulator's FaultPlan kills; it has no rejoin channel.
+            rejoined: Vec::new(),
         })
     }
 }
@@ -498,7 +765,7 @@ pub fn simulate<P: BsfProblem>(
     cfg: &BsfConfig,
     sim: &SimConfig,
 ) -> Result<(SimReport<P::Param>, Vec<WorkerReport>), BsfError> {
-    let mut core = SimCore::new(problem, cfg, *sim, None)?;
+    let mut core = SimCore::new(problem, cfg, sim.clone(), None)?;
     loop {
         let event = core.step(problem, backend)?;
         if event.stop.is_some() {

@@ -30,11 +30,17 @@
 //! one cluster report the same worker pids.
 //!
 //! One run at a time: launching while a run is active is a typed config
-//! error ("cluster is busy"). A worker lost mid-run poisons the cluster
-//! (its core is torn down, children killed) — subsequent launches fail
-//! typed rather than running degraded. Cancellation does *not* poison:
-//! the workers are released with the exit flag, their reports drained,
-//! and the cluster is ready for the next run.
+//! error ("cluster is busy"). What a mid-run worker loss does depends on
+//! the run's [`FaultPolicy`](crate::skeleton::fault::FaultPolicy): under
+//! `Redistribute` the run completes on the survivors and the pool is
+//! parked **shrunk** — subsequent runs launch with
+//! `cfg.workers == alive_workers()` on the surviving processes; under
+//! `Abort`/`RestartFromCheckpoint` (a persistent pool cannot respawn its
+//! lost member) the loss poisons the cluster: its core is torn down,
+//! children killed, and subsequent launches fail typed rather than
+//! running on a desynchronized pool. Cancellation never poisons: the
+//! workers are released with the exit flag, their reports drained, and
+//! the cluster is ready for the next run.
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -79,6 +85,8 @@ fn cluster_report<Param>(
         messages: volume.total_messages(),
         bytes: volume.total_bytes(),
         volume,
+        losses: outcome.losses,
+        rejoined: outcome.rejoined,
     }
 }
 
@@ -140,6 +148,9 @@ impl ClusterSpec {
                 children,
                 sig: problem_sig(problem),
                 shut: false,
+                spawn_k: self.workers,
+                alive: (0..self.workers).collect(),
+                lost: Vec::new(),
             }))),
             workers: self.workers,
         })
@@ -191,16 +202,25 @@ impl Cluster {
         }
     }
 
-    /// Number of persistent workers K.
+    /// Number of persistent workers K spawned into this cluster.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// How many persistent workers are still alive — less than
+    /// [`workers`](Self::workers) once a redistributed run lost some
+    /// (the pool shrinks instead of being poisoned). `None` while a run
+    /// is active or after teardown.
+    pub fn alive_workers(&self) -> Option<usize> {
+        let slot = self.core.lock().ok()?;
+        slot.as_ref().map(|core| core.alive.len())
     }
 
     /// An engine handle for one session over this cluster. Clonable and
     /// reusable: each `run()`/`iterate()` borrows the worker pool for
     /// the duration of the run (one run at a time).
     pub fn engine(&self) -> ClusterEngine {
-        ClusterEngine { core: Arc::clone(&self.core), workers: self.workers }
+        ClusterEngine { core: Arc::clone(&self.core) }
     }
 
     /// Graceful teardown: SHUTDOWN every worker, then reap the spawned
@@ -219,7 +239,8 @@ impl Cluster {
             )
         })?;
         core.send_shutdown();
-        core.children.reap(REAP_TIMEOUT)
+        let lost = core.lost.clone();
+        core.children.reap(REAP_TIMEOUT, &lost)
     }
 }
 
@@ -235,6 +256,16 @@ struct ClusterCore {
     sig: ProblemSig,
     /// True once SHUTDOWN was broadcast (drop must not re-send).
     shut: bool,
+    /// Workers originally spawned (physical ranks are `0..spawn_k`).
+    spawn_k: usize,
+    /// Physical ranks still alive, ascending. A redistributed run that
+    /// lost workers parks a *shrunk* pool here instead of poisoning the
+    /// cluster; the next launch runs `alive.len()` logical workers on
+    /// these ranks.
+    alive: Vec<usize>,
+    /// Physical ranks lost across this cluster's lifetime (their child
+    /// processes are expected to have died; reap tolerates them).
+    lost: Vec<usize>,
 }
 
 impl ClusterCore {
@@ -273,7 +304,6 @@ impl Drop for ClusterCore {
 #[derive(Clone)]
 pub struct ClusterEngine {
     core: Arc<Mutex<Option<ClusterCore>>>,
-    workers: usize,
 }
 
 impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
@@ -291,12 +321,6 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
         cfg: &BsfConfig,
         start: Option<Checkpoint<P::Param>>,
     ) -> Result<Box<dyn Driver<P>>, BsfError> {
-        if cfg.workers != self.workers {
-            return Err(BsfError::config(format!(
-                "cfg.workers is {} but this cluster holds {} persistent workers",
-                cfg.workers, self.workers
-            )));
-        }
         // Side-effect-free validation first: a busy-cluster error must
         // not have already fired parameters_output or started a clock.
         validate_run(&*problem, cfg)?;
@@ -309,10 +333,26 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
             slot.take().ok_or_else(|| {
                 BsfError::config(
                     "cluster is busy (a run is active) or was torn down \
-                     (shutdown, or a worker was lost mid-run)",
+                     (shutdown, or an unrecovered worker loss mid-run)",
                 )
             })?
         };
+        // The usable pool is the *surviving* workers: a cluster shrunk
+        // by a redistributed run keeps serving at its reduced K.
+        if cfg.workers != core.alive.len() {
+            let err = BsfError::config(format!(
+                "cfg.workers is {} but this cluster holds {} usable persistent \
+                 workers ({} spawned, {} lost)",
+                cfg.workers,
+                core.alive.len(),
+                core.spawn_k,
+                core.lost.len()
+            ));
+            if let Ok(mut slot) = self.core.lock() {
+                *slot = Some(core);
+            }
+            return Err(err);
+        }
         // Per-run signature guard — the check the process engine gets
         // from its per-spawn handshake: a session over a *different*
         // problem instance must fail typed, not corrupt the run. The
@@ -335,8 +375,9 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
         // cluster's whole lifetime.
         let base_volume = core.ep.stats().volume();
 
-        // RESET/NEWRUN: wake every idle worker for one more run.
-        for w in 0..self.workers {
+        // RESET/NEWRUN: wake every idle surviving worker for one more
+        // run.
+        for &w in &core.alive {
             if let Err(e) = core.ep.send(w, TAG_NEW_RUN, Vec::new()) {
                 // `core` is dropped here: children killed, cluster slot
                 // stays empty (poisoned) — a dead worker must not leave
@@ -346,7 +387,12 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
         }
         // Both validations already passed, so this cannot fail — and
         // the run clock (t0) starts only now, with the workers woken.
-        let state = MasterLoop::new(&*problem, cfg, start)?;
+        // A shrunk pool forces an up-front REASSIGN: each persistent
+        // worker recomputed its split from its spawn-time K at NEWRUN,
+        // which no longer matches the shrunk run shape.
+        let shrunk = core.alive.len() != core.spawn_k;
+        let state =
+            MasterLoop::new_with_ranks(&*problem, cfg, start, core.alive.clone(), shrunk)?;
         Ok(Box::new(ClusterDriver {
             problem,
             core: Some(core),
@@ -376,13 +422,14 @@ struct ClusterDriver<P: BsfProblem> {
 }
 
 impl<P: BsfProblem> ClusterDriver<P> {
-    /// Blocking-drain the K end-of-run reports (the workers were just
-    /// released, so the reports are in flight before they idle again).
+    /// Blocking-drain the surviving workers' end-of-run reports (they
+    /// were just released, so the reports are in flight before they
+    /// idle again). Lost ranks have none to ship.
     fn collect_reports(&mut self) -> Result<Vec<WorkerReport>, BsfError> {
         let core = self.core.as_ref().expect("cluster core present until parked");
-        let k = self.state.workers();
-        let mut workers = Vec::with_capacity(k);
-        for w in 0..k {
+        let alive: Vec<usize> = self.state.alive_ranks().to_vec();
+        let mut workers = Vec::with_capacity(alive.len());
+        for &w in &alive {
             let m = core.ep.recv(w, TAG_WORKER_REPORT)?;
             workers.push(
                 WorkerReport::from_wire(&m.payload)
@@ -393,9 +440,13 @@ impl<P: BsfProblem> ClusterDriver<P> {
         Ok(workers)
     }
 
-    /// Return the (re-idled) worker pool to the cluster slot.
+    /// Return the (re-idled) worker pool to the cluster slot — shrunk
+    /// to the run's survivors when the run absorbed losses, so the
+    /// cluster stays usable at its reduced K instead of being poisoned.
     fn park(&mut self) {
-        if let Some(core) = self.core.take() {
+        if let Some(mut core) = self.core.take() {
+            core.alive = self.state.alive_ranks().to_vec();
+            core.lost.extend(self.state.losses().iter().copied());
             if let Ok(mut slot) = self.home.lock() {
                 *slot = Some(core);
             }
@@ -555,10 +606,28 @@ pub fn run_persistent_worker<P: BsfProblem>(
     rank: usize,
     cfg_template: &BsfConfig,
 ) -> Result<(), BsfError> {
+    run_persistent_worker_with(problem, backend, connect, rank, cfg_template, |ep| {
+        Box::new(ep) as Box<dyn Communicator>
+    })
+}
+
+/// [`run_persistent_worker`] with a hook wrapping the connected
+/// endpoint — the fault harness's seam (see
+/// [`DieAfterFolds`](crate::util::faultsim::DieAfterFolds)); the
+/// connect/serve protocol stays in exactly one place.
+pub(crate) fn run_persistent_worker_with<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    connect: &str,
+    rank: usize,
+    cfg_template: &BsfConfig,
+    wrap: impl FnOnce(TcpEndpoint) -> Box<dyn Communicator>,
+) -> Result<(), BsfError> {
     let ep = connect_worker(connect, rank, problem_sig(problem), DEFAULT_CONNECT_TIMEOUT)?;
     let mut cfg = cfg_template.clone();
     cfg.workers = ep.size() - 1;
-    serve_worker(problem, backend, &ep, &cfg)
+    let ep = wrap(ep);
+    serve_worker(problem, backend, &*ep, &cfg)
 }
 
 #[cfg(test)]

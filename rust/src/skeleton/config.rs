@@ -13,6 +13,7 @@
 //! steering for the iteration-driver API (`Bsf::iterate`).
 
 use crate::skeleton::driver::{CancelToken, StopPolicy};
+use crate::skeleton::fault::FaultPolicy;
 
 /// Runtime configuration of one skeleton run.
 #[derive(Debug, Clone)]
@@ -34,6 +35,10 @@ pub struct BsfConfig {
     /// Cooperative cancellation: `cancel()` on a clone of this token
     /// aborts the run between iterations with `BsfError::Cancelled`.
     pub cancel: CancelToken,
+    /// What to do when a worker is lost mid-run: abort typed (default),
+    /// redistribute its sublist over the survivors, or relaunch from the
+    /// master's inter-iteration checkpoint.
+    pub fault: FaultPolicy,
 }
 
 impl Default for BsfConfig {
@@ -45,6 +50,7 @@ impl Default for BsfConfig {
             max_iter: 100_000,
             stop: StopPolicy::default(),
             cancel: CancelToken::new(),
+            fault: FaultPolicy::Abort,
         }
     }
 }
@@ -90,6 +96,18 @@ impl BsfConfig {
         self
     }
 
+    /// Choose the [`FaultPolicy`] applied when a worker is lost mid-run.
+    pub fn fault(mut self, policy: FaultPolicy) -> Self {
+        self.fault = policy;
+        self
+    }
+
+    /// Shorthand for [`FaultPolicy::Redistribute`]: absorb up to
+    /// `max_losses` worker losses by re-splitting over the survivors.
+    pub fn redistribute_on_loss(self, max_losses: usize) -> Self {
+        self.fault(FaultPolicy::Redistribute { max_losses })
+    }
+
     /// The effective iteration cap: `max_iter` tightened by the stop
     /// policy's cap when one is set.
     pub fn effective_max_iter(&self) -> usize {
@@ -114,6 +132,15 @@ mod tests {
         assert_eq!(c.max_iter, 99);
         assert!(c.stop.is_empty());
         assert!(!c.cancel.is_cancelled());
+        assert_eq!(c.fault, FaultPolicy::Abort, "abort is the default policy");
+    }
+
+    #[test]
+    fn fault_policy_builders() {
+        let c = BsfConfig::with_workers(3).redistribute_on_loss(2);
+        assert_eq!(c.fault, FaultPolicy::Redistribute { max_losses: 2 });
+        let c = c.fault(FaultPolicy::RestartFromCheckpoint);
+        assert_eq!(c.fault, FaultPolicy::RestartFromCheckpoint);
     }
 
     #[test]

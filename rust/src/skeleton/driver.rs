@@ -221,9 +221,12 @@ pub struct Checkpoint<Param> {
 impl<Param: Codec> Checkpoint<Param> {
     /// Decode a checkpoint, validating the magic/version header first —
     /// unlike `Codec::from_bytes`, a non-checkpoint buffer is a typed
-    /// error rather than a decode panic. (A corrupted *param* section
-    /// can still panic in the param codec; the header check catches the
-    /// wrong-file case, not arbitrary corruption.)
+    /// error rather than a decode panic, and a truncated or corrupt
+    /// *param* section (which panics inside the infallible param codec)
+    /// is caught and converted to a typed error too. Caveat: the catch
+    /// relies on unwinding, so under `panic = "abort"` a corrupt param
+    /// section still aborts (the header checks above it stay typed);
+    /// the codec prints the caught panic's message to stderr either way.
     pub fn try_from_bytes(buf: &[u8]) -> Result<Self, BsfError> {
         if buf.len() < 4 + 2 + 8 + 8 {
             return Err(BsfError::config(format!(
@@ -246,7 +249,18 @@ impl<Param: Codec> Checkpoint<Param> {
         }
         let iter = usize::decode(buf, &mut pos);
         let job = usize::decode(buf, &mut pos);
-        let param = Param::decode(buf, &mut pos);
+        // The param codec panics on a short/corrupt buffer (it has no
+        // fallible path); a checkpoint restore must not take the process
+        // down with it.
+        let param = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Param::decode(buf, &mut pos)
+        }))
+        .map_err(|_| {
+            BsfError::config(
+                "checkpoint param payload is truncated or corrupt \
+                 (decode failed past a valid header)",
+            )
+        })?;
         Ok(Self { param, iter, job })
     }
 }
@@ -351,6 +365,21 @@ mod tests {
         // Too short is a typed error, not an index panic.
         let err = Checkpoint::<Vec<f64>>::try_from_bytes(&bytes[..8]).unwrap_err();
         assert!(err.to_string().contains("shorter"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_truncated_param_payload_is_typed_not_a_panic() {
+        let ck = Checkpoint { param: vec![1.5f64, -2.25, 0.75], iter: 3, job: 0 };
+        let bytes = ck.to_bytes();
+        // Valid header, param section cut mid-element: the param codec
+        // would panic; try_from_bytes converts it to a typed error. The
+        // caught panic's message on stderr is expected test noise (the
+        // global hook is left alone — swapping it would race parallel
+        // tests).
+        let err = Checkpoint::<Vec<f64>>::try_from_bytes(&bytes[..bytes.len() - 5])
+            .unwrap_err();
+        assert!(matches!(err, BsfError::Config(_)), "{err}");
+        assert!(err.to_string().contains("truncated"), "{err}");
     }
 
     #[test]

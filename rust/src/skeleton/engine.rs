@@ -33,6 +33,7 @@ use crate::skeleton::config::BsfConfig;
 use crate::skeleton::driver::{
     start_state, Checkpoint, Driver, IterationEvent, StopReason,
 };
+use crate::skeleton::fault::FaultPolicy;
 use crate::skeleton::master::{decide_step, next_job_error};
 use crate::skeleton::pool::ChunkPool;
 use crate::skeleton::problem::{BsfProblem, IterCtx};
@@ -62,20 +63,78 @@ pub trait Engine<P: BsfProblem> {
         start: Option<Checkpoint<P::Param>>,
     ) -> Result<Box<dyn Driver<P>>, BsfError>;
 
-    /// Run to completion: `launch` + `loop { step }` + `finish`. The
-    /// one-shot convenience every engine shares — overriding is neither
-    /// needed nor expected.
+    /// Run to completion: `launch` + `loop { step }` + `finish`, with
+    /// the `RestartFromCheckpoint` fault policy's relaunch loop on top.
+    /// The one-shot convenience every engine shares — overriding is
+    /// neither needed nor expected.
     fn run(
         &self,
         problem: Arc<P>,
         backend: Arc<dyn MapBackend<P>>,
         cfg: &BsfConfig,
     ) -> Result<RunReport<P::Param>, BsfError> {
-        let mut driver = self.launch(problem, backend, cfg, None)?;
+        run_engine(self, problem, backend, cfg, None)
+    }
+}
+
+/// How many `RestartFromCheckpoint` relaunches one `run()` may perform
+/// before the loss is reported instead — a backstop against a worker
+/// set that deterministically dies again every generation.
+const MAX_RESTARTS: usize = 8;
+
+/// The shared one-shot run loop: `launch` + `loop { step }` + `finish`.
+/// Under [`FaultPolicy::RestartFromCheckpoint`], a typed
+/// [`BsfError::WorkerLost`] mid-run takes the driver's inter-iteration
+/// checkpoint, tears the launch down (workers joined / children reaped
+/// by the driver's drop) and relaunches the engine at full K from that
+/// checkpoint — so the completed run is bit-identical to an
+/// uninterrupted one. Both `Engine::run` and `Bsf::run` execute this
+/// single code path.
+///
+/// Clock caveat: a checkpoint carries no elapsed time, so each
+/// relaunch restarts the engine clock — a `StopPolicy::deadline`
+/// bounds each *generation*, not the generations' sum, and the final
+/// report's `elapsed` is the last generation's. Bound total wall time
+/// externally (e.g. a `CancelToken` on a timer) when that matters.
+pub(crate) fn run_engine<P: BsfProblem, E: Engine<P> + ?Sized>(
+    engine: &E,
+    problem: Arc<P>,
+    backend: Arc<dyn MapBackend<P>>,
+    cfg: &BsfConfig,
+    start: Option<Checkpoint<P::Param>>,
+) -> Result<RunReport<P::Param>, BsfError> {
+    let mut start = start;
+    let mut restarts = 0usize;
+    // Losses that triggered relaunches: each generation's driver only
+    // knows its own, so the final report stitches the history together.
+    let mut prior_losses: Vec<usize> = Vec::new();
+    loop {
+        let mut driver =
+            engine.launch(Arc::clone(&problem), Arc::clone(&backend), cfg, start.clone())?;
         loop {
-            let event = driver.step()?;
-            if event.stop.is_some() {
-                return driver.finish();
+            match driver.step() {
+                Ok(event) => {
+                    if event.stop.is_some() {
+                        let mut report = driver.finish()?;
+                        if !prior_losses.is_empty() {
+                            prior_losses.extend(report.losses.iter().copied());
+                            report.losses = prior_losses;
+                        }
+                        return Ok(report);
+                    }
+                }
+                Err(BsfError::WorkerLost { rank, reason })
+                    if matches!(cfg.fault, FaultPolicy::RestartFromCheckpoint)
+                        && restarts < MAX_RESTARTS =>
+                {
+                    let _ = reason;
+                    start = Some(driver.checkpoint());
+                    prior_losses.push(rank);
+                    restarts += 1;
+                    drop(driver); // joins threads / reaps children
+                    break;
+                }
+                Err(e) => return Err(e),
             }
         }
     }
@@ -335,10 +394,14 @@ impl<P: BsfProblem> Driver<P> for SerialDriver<P> {
                 max_chunk_seconds: this.max_chunk_seconds,
                 merge_seconds: this.merge_seconds,
                 pid: std::process::id(),
+                reassignments: 0,
             }],
             messages: 0,
             bytes: 0,
             volume: VolumeByTag::default(),
+            // The serial engine has no separate workers to lose.
+            losses: Vec::new(),
+            rejoined: Vec::new(),
         })
     }
 }
@@ -348,7 +411,7 @@ impl<P: BsfProblem> Driver<P> for SerialDriver<P> {
 /// charged from the [`ClusterProfile`] — the paper's "hundreds of nodes"
 /// substitution. `RunReport::elapsed` is virtual cluster seconds
 /// ([`Clock::Virtual`]).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SimulatedEngine {
     sim: SimConfig,
 }
@@ -382,7 +445,7 @@ impl<P: BsfProblem> Engine<P> for SimulatedEngine {
         cfg: &BsfConfig,
         start: Option<Checkpoint<P::Param>>,
     ) -> Result<Box<dyn Driver<P>>, BsfError> {
-        launch_sim(problem, backend, cfg, self.sim, start)
+        launch_sim(problem, backend, cfg, self.sim.clone(), start)
     }
 }
 

@@ -1,0 +1,156 @@
+//! Fault tolerance: what a run does when a worker is lost mid-iteration.
+//!
+//! The BSF model assumes a reliable MPI cluster, so the skeleton's
+//! historical behavior is to surface a typed error and abort the run
+//! (now [`FaultPolicy::Abort`]). Production clusters lose workers; the
+//! companion verification paper (Ezhova & Sokolinsky) shows the model's
+//! cost equations stay valid under a varying worker count K — which is
+//! exactly what lets the master re-plan a run on the K−1 survivors
+//! mid-iteration without leaving the model.
+//!
+//! ## Redistribution
+//!
+//! On a loss with [`FaultPolicy::Redistribute`], the shared
+//! [`MasterLoop`](crate::skeleton::master::MasterLoop):
+//!
+//! 1. drains the in-flight partial folds of the aborted round (each
+//!    delivered order yields exactly one fold),
+//! 2. unparks the survivors with `Exit(false)` (they walk back to the
+//!    top of their Algorithm-2 loop),
+//! 3. re-splits the **whole** map-list over the survivors with
+//!    [`redistribute`] and ships each survivor its new (logical rank,
+//!    effective K, offset, length) via [`TAG_REASSIGN`],
+//! 4. re-broadcasts the order and re-runs the interrupted iteration.
+//!
+//! Because the new split *is* `all_ranges(n, K−1)` and partial folds are
+//! merged in logical-rank (= chunk) order, the recovered run computes,
+//! iteration for iteration, exactly what a fresh (K−1)-worker run
+//! computes — bit-identical whenever the reduce operator itself is
+//! split-invariant (integer-exact counters, disjoint-support sums), and
+//! bit-identical for *every* problem when the loss happens before the
+//! first merge.
+//!
+//! ## Re-admission
+//!
+//! A lost worker that becomes reachable again announces itself with
+//! [`TAG_REJOIN`]. At the next iteration boundary the master re-admits
+//! it: the list is re-split over the grown pool and every worker gets a
+//! fresh [`TAG_REASSIGN`] before the next order.
+//!
+//! ## Restart
+//!
+//! [`FaultPolicy::RestartFromCheckpoint`] recovers *capacity* instead of
+//! degrading: the one-shot run loop catches the typed
+//! [`BsfError::WorkerLost`](crate::error::BsfError::WorkerLost), takes
+//! the driver's inter-iteration [`Checkpoint`](crate::skeleton::driver::Checkpoint),
+//! tears the launch down and relaunches the engine at full K from that
+//! checkpoint. Engines that can re-create workers (threads, spawned
+//! processes, the simulator) resume bit-identically to an uninterrupted
+//! run; a persistent [`Cluster`](crate::skeleton::cluster::Cluster)
+//! cannot respawn its lost member and fails the relaunch typed — use
+//! `Redistribute` there.
+
+use crate::skeleton::split::all_ranges;
+use crate::transport::Tag;
+
+/// Master → worker: a new sublist assignment — `(logical rank,
+/// effective K, offset, length)` — sent between iterations when the
+/// worker pool shrinks (loss) or grows back (rejoin), and at run start
+/// on a shrunk persistent cluster.
+pub const TAG_REASSIGN: Tag = Tag::User(0x5241); // "RA"
+
+/// Worker → master: a previously lost worker asking to be re-admitted.
+/// Honored at iteration boundaries under [`FaultPolicy::Redistribute`].
+pub const TAG_REJOIN: Tag = Tag::User(0x524A); // "RJ"
+
+/// What the master does when a worker becomes unreachable mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultPolicy {
+    /// Surface the typed [`BsfError::WorkerLost`](crate::error::BsfError::WorkerLost)
+    /// and abort the run (the historical behavior, and the default).
+    #[default]
+    Abort,
+    /// Re-split the lost worker's share over the survivors and keep
+    /// iterating on K−1 workers, up to `max_losses` losses per run.
+    /// Results match a fresh run on the surviving worker count; a
+    /// persistent cluster shrinks instead of being poisoned.
+    Redistribute {
+        /// How many worker losses one run may absorb before it aborts
+        /// like [`Abort`](Self::Abort). Re-admissions do not refund the
+        /// budget.
+        max_losses: usize,
+    },
+    /// Abort the faulted launch, then relaunch the engine at full K
+    /// from the master's inter-iteration checkpoint (one-shot `run()`
+    /// paths only; a steered `iterate()` surfaces the typed error and
+    /// leaves resuming to the caller).
+    RestartFromCheckpoint,
+}
+
+/// One survivor's share of a redistributed map-list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerAssignment {
+    /// The survivor's physical rank on the transport.
+    pub physical: usize,
+    /// Its logical rank in the shrunk run (`0..survivors`): the rank it
+    /// computes and merges as, exactly as in a fresh run of that size.
+    pub logical: usize,
+    /// Global index of the first element of its new sublist.
+    pub offset: usize,
+    /// Length of its new sublist.
+    pub length: usize,
+}
+
+/// Re-split the whole map-list over the surviving physical ranks
+/// (ascending), assigning survivor `i` the `i`-th sublist of the
+/// canonical `all_ranges(list_len, alive.len())` block split. The
+/// resulting assignments cover the list exactly once, in logical-rank
+/// order — so merging partial folds by logical rank reproduces a fresh
+/// `alive.len()`-worker run's fold tree exactly.
+pub fn redistribute(list_len: usize, alive: &[usize]) -> Vec<WorkerAssignment> {
+    assert!(!alive.is_empty(), "cannot redistribute over zero survivors");
+    all_ranges(list_len, alive.len())
+        .into_iter()
+        .zip(alive.iter())
+        .enumerate()
+        .map(|(logical, ((offset, length), &physical))| WorkerAssignment {
+            physical,
+            logical,
+            offset,
+            length,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_abort() {
+        assert_eq!(FaultPolicy::default(), FaultPolicy::Abort);
+    }
+
+    #[test]
+    fn redistribute_matches_fresh_run_of_survivor_count() {
+        // 3 spawned workers, rank 1 lost: survivors {0, 2} get the
+        // 2-worker split, in order.
+        let plan = redistribute(10, &[0, 2]);
+        assert_eq!(plan.len(), 2);
+        assert_eq!((plan[0].physical, plan[0].logical), (0, 0));
+        assert_eq!((plan[1].physical, plan[1].logical), (2, 1));
+        assert_eq!((plan[0].offset, plan[0].length), (0, 5));
+        assert_eq!((plan[1].offset, plan[1].length), (5, 5));
+    }
+
+    #[test]
+    fn redistribute_covers_exactly_once_in_order() {
+        let plan = redistribute(17, &[1, 3, 4]);
+        let mut next = 0;
+        for a in &plan {
+            assert_eq!(a.offset, next, "no gap/overlap");
+            next = a.offset + a.length;
+        }
+        assert_eq!(next, 17, "full coverage");
+    }
+}

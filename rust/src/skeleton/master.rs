@@ -2,18 +2,33 @@
 //! resumable **iteration state machine**.
 //!
 //! Per iteration the master: broadcasts the order (current approximation
-//! + job number) to all workers, gathers the K partial folds in
-//! completion order, folds them with ⊕ (`BC_MasterReduce` /
-//! `BC_ProcessExtendedReduceList`), runs `process_results` +
-//! `job_dispatcher`, and broadcasts the exit flag. Steps 2 and 10 are the
-//! implicit global synchronization points the paper notes.
+//! + job number) to all workers, gathers the K partial folds, folds them
+//! with ⊕ (`BC_MasterReduce` / `BC_ProcessExtendedReduceList`), runs
+//! `process_results` + `job_dispatcher`, and broadcasts the exit flag.
+//! Steps 2 and 10 are the implicit global synchronization points the
+//! paper notes.
 //!
 //! [`MasterLoop`] holds the inter-iteration state (approximation, job
-//! case, iteration counter, phase timers) and advances one iteration per
-//! [`step_comm`](MasterLoop::step_comm) over any [`Communicator`] — the
-//! thread transport and the TCP transport drive the exact same machine,
-//! so the threaded, process and cluster drivers share one Algorithm-2
-//! master. [`run_master`] is the loop-to-completion convenience over it.
+//! case, iteration counter, phase timers, surviving worker set) and
+//! advances one iteration per [`step_comm`](MasterLoop::step_comm) over
+//! any [`Communicator`] — the thread transport and the TCP transport
+//! drive the exact same machine, so the threaded, process and cluster
+//! drivers share one Algorithm-2 master. [`run_master`] is the
+//! loop-to-completion convenience over it.
+//!
+//! ## Fault tolerance
+//!
+//! The machine consumes the config's
+//! [`FaultPolicy`](crate::skeleton::fault::FaultPolicy). Under
+//! `Redistribute`, a typed [`BsfError::WorkerLost`] surfaced anywhere in
+//! the order/gather round is *absorbed*: the round's in-flight folds are
+//! drained, the survivors unparked with `exit=false`, the map-list
+//! re-split over them ([`TAG_REASSIGN`]), and the interrupted iteration
+//! re-run — so the recovered run computes exactly what a fresh
+//! survivor-count run computes. Lost workers announcing [`TAG_REJOIN`]
+//! are re-admitted at iteration boundaries. Under `Abort` (default) and
+//! `RestartFromCheckpoint` the loss propagates typed; the one-shot run
+//! loop implements the restart.
 //!
 //! All failure modes are typed [`BsfError`]s; on a mid-run configuration
 //! error (e.g. `process_results` returns an out-of-range `next_job`) the
@@ -28,6 +43,7 @@ use crate::error::BsfError;
 use crate::metrics::{Phase, PhaseTimers};
 use crate::skeleton::config::BsfConfig;
 use crate::skeleton::driver::{start_state, Checkpoint, IterationEvent, StopReason};
+use crate::skeleton::fault::{redistribute, FaultPolicy, TAG_REASSIGN, TAG_REJOIN};
 use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::reduce::{merge_folds, ExtendedFold};
 use crate::skeleton::report::Clock;
@@ -35,12 +51,13 @@ use crate::skeleton::runner::validate_run;
 use crate::transport::{Communicator, Tag};
 use crate::util::codec::Codec;
 
-/// Best-effort shutdown broadcast: tell every worker to exit, ignoring
-/// unreachable ones. Used on every master-side error path so surviving
-/// workers terminate instead of blocking the runner's join.
-fn abort_workers<C: Communicator + ?Sized>(comm: &C, k: usize) {
+/// Best-effort shutdown broadcast: tell every listed worker to exit,
+/// ignoring unreachable ones. Used on every master-side error path so
+/// surviving (and fault-injected "dead" but parked) workers terminate
+/// instead of blocking the runner's join.
+fn abort_ranks<C: Communicator + ?Sized>(comm: &C, ranks: &[usize]) {
     let payload = true.to_bytes();
-    for w in 0..k {
+    for &w in ranks {
         let _ = comm.send(w, Tag::Exit, payload.clone());
     }
 }
@@ -116,6 +133,13 @@ pub struct MasterOutcome<Param> {
     pub elapsed: f64,
     /// Per-phase attribution of master wall time.
     pub timers: PhaseTimers,
+    /// Physical worker ranks lost mid-run (chronological; empty on a
+    /// loss-free run). Under `FaultPolicy::Redistribute` the run
+    /// completed without them.
+    pub losses: Vec<usize>,
+    /// Physical worker ranks re-admitted via `TAG_REJOIN` after a loss
+    /// (chronological).
+    pub rejoined: Vec<usize>,
 }
 
 /// The master's iteration state machine: everything Algorithm 2 keeps
@@ -124,7 +148,22 @@ pub struct MasterOutcome<Param> {
 /// these next to their endpoint/worker handles.
 pub(crate) struct MasterLoop<P: BsfProblem> {
     cfg: BsfConfig,
-    k: usize,
+    /// Every physical worker rank this run addresses (the launch set):
+    /// abort/release broadcasts cover all of them, so even a worker
+    /// partitioned away by an injected fault is unparked at teardown.
+    all_ranks: Vec<usize>,
+    /// Physical ranks currently participating, ascending — the index is
+    /// the logical rank each one computes and merges as.
+    alive: Vec<usize>,
+    /// Chronological loss events (physical ranks).
+    losses: Vec<usize>,
+    /// Physical ranks re-admitted via REJOIN (chronological).
+    rejoined: Vec<usize>,
+    /// Map-list length, for redistribution planning.
+    list_len: usize,
+    /// True when the survivors must be sent fresh `TAG_REASSIGN`
+    /// envelopes before the next order broadcast.
+    reassign_pending: bool,
     param: P::Param,
     job: usize,
     iter: usize,
@@ -141,19 +180,50 @@ pub(crate) struct MasterLoop<P: BsfProblem> {
 }
 
 impl<P: BsfProblem> MasterLoop<P> {
-    /// Validate and initialize: a fresh run from `init_parameter`, or a
-    /// resumed one from `start`'s checkpoint.
+    /// Validate and initialize over the identity rank set `0..K`: a
+    /// fresh run from `init_parameter`, or a resumed one from `start`'s
+    /// checkpoint.
     pub(crate) fn new(
         problem: &P,
         cfg: &BsfConfig,
         start: Option<Checkpoint<P::Param>>,
     ) -> Result<Self, BsfError> {
+        let ranks: Vec<usize> = (0..cfg.workers).collect();
+        Self::new_with_ranks(problem, cfg, start, ranks, false)
+    }
+
+    /// [`new`](Self::new) over an explicit physical rank set — how a
+    /// shrunk persistent cluster runs `cfg.workers` logical workers on
+    /// surviving ranks that are not `0..K`. `force_reassign` makes the
+    /// first order broadcast re-announce every worker's sublist (needed
+    /// whenever the workers' self-computed split — based on their
+    /// spawn-time K — differs from this run's).
+    pub(crate) fn new_with_ranks(
+        problem: &P,
+        cfg: &BsfConfig,
+        start: Option<Checkpoint<P::Param>>,
+        ranks: Vec<usize>,
+        force_reassign: bool,
+    ) -> Result<Self, BsfError> {
         validate_run(problem, cfg)?;
+        if ranks.len() != cfg.workers {
+            return Err(BsfError::config(format!(
+                "cfg.workers is {} but the launch supplied {} physical ranks",
+                cfg.workers,
+                ranks.len()
+            )));
+        }
         let (param, iter, job) = start_state(problem, start)?;
         problem.parameters_output(&param);
+        let identity = ranks.iter().enumerate().all(|(i, &r)| i == r);
         Ok(Self {
             cfg: cfg.clone(),
-            k: cfg.workers,
+            all_ranks: ranks.clone(),
+            alive: ranks,
+            losses: Vec::new(),
+            rejoined: Vec::new(),
+            list_len: problem.list_size(),
+            reassign_pending: force_reassign || !identity,
             param,
             job,
             iter,
@@ -165,8 +235,15 @@ impl<P: BsfProblem> MasterLoop<P> {
         })
     }
 
-    pub(crate) fn workers(&self) -> usize {
-        self.k
+    /// Physical ranks still participating (ascending; index = logical
+    /// rank). Shrinks on absorbed losses, grows back on rejoin.
+    pub(crate) fn alive_ranks(&self) -> &[usize] {
+        &self.alive
+    }
+
+    /// Physical ranks lost mid-run, in loss order.
+    pub(crate) fn losses(&self) -> &[usize] {
+        &self.losses
     }
 
     pub(crate) fn done(&self) -> bool {
@@ -182,13 +259,14 @@ impl<P: BsfProblem> MasterLoop<P> {
     }
 
     /// Release the workers between iterations (early finish / drop): a
-    /// best-effort exit-flag broadcast. Workers at the top of their loop
-    /// accept an exit order and terminate cleanly. No-op once released.
+    /// best-effort exit-flag broadcast to every launched rank. Workers
+    /// at the top of their loop accept an exit order and terminate
+    /// cleanly. No-op once released.
     pub(crate) fn release<C: Communicator + ?Sized>(&mut self, comm: &C) {
         if self.released {
             return;
         }
-        abort_workers(comm, self.k);
+        abort_ranks(comm, &self.all_ranks);
         self.released = true;
     }
 
@@ -204,6 +282,235 @@ impl<P: BsfProblem> MasterLoop<P> {
                 self.t0.elapsed().as_secs_f64()
             },
             timers: self.timers.clone(),
+            losses: self.losses.clone(),
+            rejoined: self.rejoined.clone(),
+        }
+    }
+
+    /// Classify an error surfaced while talking to physical rank
+    /// `rank`: under [`FaultPolicy::Redistribute`] with budget left the
+    /// loss is recorded, the rank dropped from the round, and the split
+    /// marked for re-planning (`Ok`). Anything else — a non-loss error,
+    /// the `Abort`/`RestartFromCheckpoint` policies, an exhausted
+    /// budget, or the last surviving worker — propagates.
+    fn absorb_or_fail(&mut self, rank: usize, err: BsfError) -> Result<(), BsfError> {
+        let named = match &err {
+            BsfError::WorkerLost { rank: r, .. } => *r,
+            _ => return Err(err),
+        };
+        let max_losses = match self.cfg.fault {
+            FaultPolicy::Redistribute { max_losses } => max_losses,
+            _ => return Err(err),
+        };
+        // The transport names the lost rank; fall back to whom we were
+        // addressing if it ever names something foreign.
+        let lost = if self.all_ranks.contains(&named) { named } else { rank };
+        let Some(pos) = self.alive.iter().position(|&a| a == lost) else {
+            return Ok(()); // already absorbed (double detection)
+        };
+        if self.losses.len() >= max_losses || self.alive.len() == 1 {
+            return Err(err);
+        }
+        self.alive.remove(pos);
+        self.losses.push(lost);
+        self.reassign_pending = true;
+        Ok(())
+    }
+
+    /// A fold buffered when none can legitimately be in flight: a
+    /// double-sending or desynchronized worker (typed, best-effort —
+    /// only what has already arrived is observable).
+    fn stray_fold<C: Communicator + ?Sized>(&self, comm: &C) -> Option<BsfError> {
+        let m = comm.try_recv_tags(None, &[Tag::Fold])?;
+        Some(BsfError::transport(format!(
+            "unexpected fold from rank {} outside a gather round \
+             (duplicate or desynchronized worker)",
+            m.from
+        )))
+    }
+
+    /// Between iterations, honor `TAG_REJOIN` announcements from
+    /// previously lost workers (Redistribute policy only): unpark the
+    /// rejoiner and fold it back into the split. Assumes the partition
+    /// dropped the rejoiner's in-flight traffic (true for the fault
+    /// harness; a really-dead TCP peer can never announce).
+    fn drain_rejoins<C: Communicator + ?Sized>(&mut self, comm: &C) {
+        if !matches!(self.cfg.fault, FaultPolicy::Redistribute { .. }) {
+            return;
+        }
+        while let Some(m) = comm.try_recv_tags(None, &[TAG_REJOIN]) {
+            let r = m.from;
+            if self.alive.contains(&r) || !self.all_ranks.contains(&r) {
+                continue; // not a known lost worker: drop the announcement
+            }
+            // Unpark: a rejoiner waits at the top of its loop; exit=false
+            // is benign there, and walks one parked at step 10 back to
+            // the top — where the coming REASSIGN + order pick it up.
+            let _ = comm.send(r, Tag::Exit, false.to_bytes());
+            let pos =
+                self.alive.iter().position(|&a| a > r).unwrap_or(self.alive.len());
+            self.alive.insert(pos, r);
+            self.rejoined.push(r);
+            self.reassign_pending = true;
+        }
+    }
+
+    /// After a loss aborted the current round: drain the in-flight folds
+    /// of the survivors that already received this round's order (each
+    /// delivered order yields exactly one fold, so the re-run's gather
+    /// starts clean), unpark every survivor with `exit=false`, and mark
+    /// the split for re-announcement. Further losses discovered while
+    /// draining are absorbed under the same policy.
+    fn drain_and_replan<C: Communicator + ?Sized>(
+        &mut self,
+        comm: &C,
+        pending: &[usize],
+    ) -> Result<(), BsfError> {
+        for &w in pending {
+            if !self.alive.contains(&w) {
+                continue; // lost while this round unwound
+            }
+            match comm.recv_tags(Some(w), &[Tag::Fold, Tag::Abort]) {
+                Ok(m) if m.tag == Tag::Abort => {
+                    return Err(BsfError::WorkerPanic { rank: w })
+                }
+                Ok(_) => {} // stale fold of the aborted round: discarded
+                Err(e) => self.absorb_or_fail(w, e)?,
+            }
+        }
+        // Unpark the survivors: exit=false walks a worker parked at
+        // step 10 back to the top of its loop; one already at the top
+        // treats it as a no-op. The REASSIGN + re-sent order follow.
+        let unpark = false.to_bytes();
+        let mut failures: Vec<(usize, BsfError)> = Vec::new();
+        for &w in &self.alive {
+            if let Err(e) = comm.send(w, Tag::Exit, unpark.clone()) {
+                failures.push((w, e));
+            }
+        }
+        for (w, e) in failures {
+            self.absorb_or_fail(w, e)?;
+        }
+        self.reassign_pending = true;
+        Ok(())
+    }
+
+    /// Steps 2 + 5 of Algorithm 2 as one fault-aware unit: broadcast the
+    /// order to the survivors and gather their folds in logical-rank
+    /// order. Any absorbed loss re-plans the split and re-runs the round
+    /// on the survivors, so on success the returned folds always belong
+    /// to one complete, consistent round.
+    fn gather_round<C: Communicator + ?Sized>(
+        &mut self,
+        comm: &C,
+    ) -> Result<Vec<ExtendedFold<P::ReduceElem>>, BsfError> {
+        'round: loop {
+            if self.alive.is_empty() {
+                return Err(BsfError::transport(
+                    "all workers lost; nothing left to gather",
+                ));
+            }
+
+            // Announce the split when it changed (loss, rejoin, or a
+            // persistent cluster resuming on a shrunk pool).
+            if self.reassign_pending {
+                let plan = redistribute(self.list_len, &self.alive);
+                let mut failures: Vec<(usize, BsfError)> = Vec::new();
+                for a in &plan {
+                    let payload =
+                        (a.logical, plan.len(), a.offset, a.length).to_bytes();
+                    if let Err(e) = comm.send(a.physical, TAG_REASSIGN, payload) {
+                        failures.push((a.physical, e));
+                    }
+                }
+                if !failures.is_empty() {
+                    for (w, e) in failures {
+                        self.absorb_or_fail(w, e)?;
+                    }
+                    continue 'round;
+                }
+                self.reassign_pending = false;
+            }
+
+            // Step 2: SendToAllWorkers(x^(i)) — the order carries (job,
+            // iterations-completed, param). Shipping the master's
+            // iteration counter keeps the workers' `SkelVars::iter_counter`
+            // equal to the master's even on a *resumed* run — without it,
+            // a worker restarted from a checkpoint would see a counter
+            // rebased to 0 and any iteration-dependent map (e.g.
+            // montecarlo's counter-seeded RNG) would diverge from the
+            // uninterrupted run.
+            let payload = (self.job, self.iter, <P::Param as Clone>::clone(&self.param))
+                .to_bytes();
+            let targets = self.alive.clone();
+            let send_results: Vec<(usize, Result<(), BsfError>)> = {
+                let timers = &mut self.timers;
+                timers.time(Phase::SendOrder, || {
+                    targets
+                        .iter()
+                        .map(|&w| (w, comm.send(w, Tag::Order, payload.clone())))
+                        .collect()
+                })
+            };
+            let mut ordered: Vec<usize> = Vec::with_capacity(targets.len());
+            let mut lost_in_send = false;
+            for (w, r) in send_results {
+                match r {
+                    Ok(()) => ordered.push(w),
+                    Err(e) => {
+                        self.absorb_or_fail(w, e)?;
+                        lost_in_send = true;
+                    }
+                }
+            }
+            if lost_in_send {
+                self.drain_and_replan(comm, &ordered)?;
+                continue 'round;
+            }
+
+            // Step 5: RecvFromWorkers(s_0, ..., s_{K'-1}), received and
+            // folded in *logical rank order* exactly as Algorithm 2
+            // writes the list [s_0, ..., s_{K-1}] — this keeps the fold
+            // deterministic (no run-to-run float reassociation from
+            // scheduling), and a loss mid-gather names exactly which
+            // rank died. Out-of-order arrivals are buffered by the
+            // transport's selective receive.
+            let mut folds: Vec<ExtendedFold<P::ReduceElem>> =
+                Vec::with_capacity(self.alive.len());
+            let mut logical = 0usize;
+            while logical < self.alive.len() {
+                let w = self.alive[logical];
+                let received = {
+                    let timers = &mut self.timers;
+                    timers.time(Phase::Gather, || {
+                        comm.recv_tags(Some(w), &[Tag::Fold, Tag::Abort])
+                    })
+                };
+                match received {
+                    Ok(m) => {
+                        // A worker died in user map/reduce code: that is
+                        // a bug in the problem, not a cluster fault —
+                        // never absorbed.
+                        if m.tag == Tag::Abort {
+                            return Err(BsfError::WorkerPanic { rank: w });
+                        }
+                        let (value, counter) =
+                            <(Option<P::ReduceElem>, u64)>::from_bytes(&m.payload);
+                        folds.push(ExtendedFold { value, counter });
+                        logical += 1;
+                    }
+                    Err(e) => {
+                        self.absorb_or_fail(w, e)?;
+                        // Ranks after `logical` still owe this round's
+                        // fold; the ones before already delivered (their
+                        // now-stale folds die with this `folds` vec).
+                        let pending: Vec<usize> = self.alive[logical..].to_vec();
+                        self.drain_and_replan(comm, &pending)?;
+                        continue 'round;
+                    }
+                }
+            }
+            return Ok(folds);
         }
     }
 
@@ -218,97 +525,48 @@ impl<P: BsfProblem> MasterLoop<P> {
                 "driver already stopped (finish() it instead of stepping again)",
             ));
         }
-        let k = self.k;
 
         // Cancellation is checked between iterations: release the
         // workers first (they are blocked waiting for this order), then
         // surface the typed error.
         if self.cfg.cancel.is_cancelled() {
-            abort_workers(comm, k);
+            abort_ranks(comm, &self.all_ranks);
             self.released = true;
             return Err(BsfError::Cancelled);
         }
 
-        // Step 2: SendToAllWorkers(x^(i)) — the order carries (job,
-        // iterations-completed, param). Shipping the master's iteration
-        // counter keeps the workers' `SkelVars::iter_counter` equal to
-        // the master's even on a *resumed* run — without it, a worker
-        // restarted from a checkpoint would see a counter rebased to 0
-        // and any iteration-dependent map (e.g. montecarlo's
-        // counter-seeded RNG) would diverge from the uninterrupted run.
-        let timers = &mut self.timers;
-        let job_now = self.job;
-        let iter_now = self.iter;
-        let param_now = &self.param;
-        let sent = timers.time(Phase::SendOrder, || -> Result<(), BsfError> {
-            // NB: clone the *parameter*, not the reference.
-            let payload =
-                (job_now, iter_now, <P::Param as Clone>::clone(param_now)).to_bytes();
-            for w in 0..k {
-                comm.send(w, Tag::Order, payload.clone())?;
-            }
-            Ok(())
-        });
-        if let Err(e) = sent {
-            abort_workers(comm, k);
+        // Protocol guard: at an iteration boundary no fold can be in
+        // flight (every order of the previous round yielded exactly one,
+        // all consumed by the gather or the replan drain). A buffered
+        // one means a double-sending or desynchronized worker — the
+        // selective per-rank gather would otherwise silently merge it as
+        // NEXT round's data, so fail typed here instead (the check the
+        // old gather-from-any loop performed at receive time).
+        if let Some(e) = self.stray_fold(comm) {
+            abort_ranks(comm, &self.all_ranks);
             self.released = true;
             return Err(e);
         }
 
-        // Step 5: RecvFromWorkers(s_0, ..., s_{K-1}). Messages arrive in
-        // completion order (recv_any ≈ MPI_Waitany) but are folded in
-        // *rank order*, exactly as Algorithm 2 writes the list
-        // [s_0, ..., s_{K-1}] — this keeps the fold deterministic (no
-        // run-to-run float reassociation from thread scheduling).
-        type Gathered<R> = Result<Vec<ExtendedFold<R>>, BsfError>;
-        let gathered = timers.time(Phase::Gather, || -> Gathered<P::ReduceElem> {
-            let mut by_rank: Vec<Option<ExtendedFold<P::ReduceElem>>> =
-                (0..k).map(|_| None).collect();
-            for _ in 0..k {
-                let m = comm.recv_tags(None, &[Tag::Fold, Tag::Abort])?;
-                // A worker died in user map/reduce code: stop gathering.
-                if m.tag == Tag::Abort {
-                    return Err(BsfError::WorkerPanic { rank: m.from });
-                }
-                if m.from >= k {
-                    return Err(BsfError::transport(format!(
-                        "fold from non-worker rank {}",
-                        m.from
-                    )));
-                }
-                if by_rank[m.from].is_some() {
-                    return Err(BsfError::transport(format!(
-                        "duplicate fold from worker {}",
-                        m.from
-                    )));
-                }
-                let (value, counter) =
-                    <(Option<P::ReduceElem>, u64)>::from_bytes(&m.payload);
-                by_rank[m.from] = Some(ExtendedFold { value, counter });
-            }
-            by_rank
-                .into_iter()
-                .enumerate()
-                .map(|(rank, f)| {
-                    f.ok_or_else(|| {
-                        BsfError::transport(format!("no fold from worker {rank}"))
-                    })
-                })
-                .collect::<Result<Vec<_>, _>>()
-        });
-        let folds: Vec<ExtendedFold<P::ReduceElem>> = match gathered {
+        // Iteration boundary: re-admit lost workers that announced
+        // REJOIN while the previous iteration ran.
+        self.drain_rejoins(comm);
+
+        // Steps 2 + 5 (fault-aware): one complete round of orders and
+        // folds over the survivors.
+        let folds = match self.gather_round(comm) {
             Ok(folds) => folds,
             Err(e) => {
-                // Release the surviving workers before reporting.
-                abort_workers(comm, k);
+                // Release everyone (survivors included) before reporting.
+                abort_ranks(comm, &self.all_ranks);
                 self.released = true;
                 return Err(e);
             }
         };
 
-        // Step 6: s := Reduce(⊕, [s_0, ..., s_{K-1}]).
+        // Step 6: s := Reduce(⊕, [s_0, ..., s_{K'-1}]).
         let job = self.job;
-        let merged = timers.time(Phase::MasterReduce, || {
+        let merged = self.timers.time(Phase::MasterReduce, || {
             merge_folds(folds, |a, b| problem.reduce_f(a, b, job))
         });
 
@@ -318,12 +576,12 @@ impl<P: BsfProblem> MasterLoop<P> {
         let ctx = IterCtx {
             iter_counter: self.iter,
             job_case: self.job,
-            num_of_workers: k,
+            num_of_workers: self.alive.len(),
             elapsed: self.t0.elapsed().as_secs_f64(),
         };
         let param = &mut self.param;
         let cfg = &self.cfg;
-        let (decision, stop_reason) = timers.time(Phase::Process, || {
+        let (decision, stop_reason) = self.timers.time(Phase::Process, || {
             decide_step(problem, &merged, param, &ctx, cfg)
         });
 
@@ -342,29 +600,56 @@ impl<P: BsfProblem> MasterLoop<P> {
         let bad_job = next_job_error(problem, &decision);
         let exit_flag = decision.exit || bad_job.is_some();
 
-        // Step 10: SendToAllWorkers(exit). Best-effort on failure: the
-        // surviving workers must still be released (a worker at the top
-        // of its loop accepts an exit order too), so finish the
-        // broadcast before reporting the first send error.
-        let exit_send = self.timers.time(Phase::SendOrder, || {
+        // Step 10: SendToAllWorkers(exit). Best-effort per worker: a
+        // rank lost right here is absorbed under the fault policy (the
+        // run is ending, or the next round re-plans without it); an
+        // unabsorbed failure still finishes the broadcast before
+        // reporting, so survivors are never stranded.
+        let targets = self.alive.clone();
+        let exit_results: Vec<(usize, Result<(), BsfError>)> = {
+            let timers = &mut self.timers;
             let payload = exit_flag.to_bytes();
-            let mut first: Option<BsfError> = None;
-            for w in 0..k {
-                if let Err(e) = comm.send(w, Tag::Exit, payload.clone()) {
-                    first.get_or_insert(e);
+            timers.time(Phase::SendOrder, || {
+                targets
+                    .iter()
+                    .map(|&w| (w, comm.send(w, Tag::Exit, payload.clone())))
+                    .collect()
+            })
+        };
+        let mut fatal: Option<BsfError> = None;
+        for (w, r) in exit_results {
+            if let Err(e) = r {
+                if let Err(e) = self.absorb_or_fail(w, e) {
+                    fatal.get_or_insert(e);
                 }
             }
-            first
-        });
-        if let Some(e) = exit_send {
+        }
+        if let Some(e) = fatal {
             if !exit_flag {
-                abort_workers(comm, k);
+                abort_ranks(comm, &self.all_ranks);
             }
             self.released = true;
             return Err(e);
         }
         if exit_flag {
+            // Best-effort release of the *lost* ranks too: a truly dead
+            // peer just errors (ignored), but a fault-injected partition
+            // leaves a real parked worker behind — without this it would
+            // never see exit=true and the driver's join would hang.
+            let lost: Vec<usize> = self
+                .all_ranks
+                .iter()
+                .copied()
+                .filter(|r| !self.alive.contains(r))
+                .collect();
+            abort_ranks(comm, &lost);
             self.released = true;
+            // The boundary guard never runs again after the stop event:
+            // sweep the final round here so a duplicate fold in the last
+            // iteration still fails typed (workers are already released).
+            if let Some(e) = self.stray_fold(comm) {
+                return Err(e);
+            }
         }
 
         if let Some(e) = bad_job {
@@ -444,9 +729,10 @@ mod tests {
     #[test]
     fn release_broadcast_continues_past_a_dead_worker() {
         // Worker 0 is gone before the run starts: the master's first
-        // order send fails, and the abort broadcast must still reach the
-        // surviving worker 1 (exit=true) instead of stopping at the dead
-        // rank — otherwise survivors hang at the top of their loop.
+        // order send fails with a typed per-rank loss, and (policy
+        // Abort) the release broadcast must still reach the surviving
+        // worker 1 (exit=true) instead of stopping at the dead rank —
+        // otherwise survivors hang at the top of their loop.
         let mut eps = build_thread_transport(2);
         let master = eps.pop().unwrap();
         let w1 = eps.pop().unwrap();
@@ -455,9 +741,95 @@ mod tests {
         let (p, _) = JacobiProblem::random(8, 1e-12, 7);
         let cfg = BsfConfig::with_workers(2);
         let err = run_master(&p, &master, &cfg).unwrap_err();
-        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
         let m = w1.recv(2, Tag::Exit).unwrap();
         assert!(bool::from_bytes(&m.payload), "survivor must be released");
+    }
+
+    #[test]
+    fn redistribute_absorbs_a_pre_run_loss_and_completes_on_the_survivor() {
+        // Worker 0 is gone before the first order. Under Redistribute
+        // the master re-plans onto worker 1 alone: it receives the
+        // unpark + REASSIGN envelope (logical 0 of 1, the whole list)
+        // and the run completes identically to a fresh K=1 run.
+        let mut eps = build_thread_transport(2);
+        let master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        drop(w0);
+        let (p, _) = JacobiProblem::random(8, 1e-12, 7);
+        let cfg = BsfConfig::with_workers(2).redistribute_on_loss(1);
+        let wp = JacobiProblem::random(8, 1e-12, 7).0;
+        let wcfg = cfg.clone();
+        let worker = std::thread::spawn(move || {
+            crate::skeleton::worker::run_worker_guarded(
+                &wp,
+                &crate::skeleton::backend::FusedNativeBackend,
+                &w1,
+                &wcfg,
+            )
+        });
+        let outcome = run_master(&p, &master, &cfg).unwrap();
+        assert_eq!(outcome.losses, vec![0]);
+        let report = worker.join().unwrap().unwrap();
+        assert_eq!(report.rank, 1);
+        assert!(report.reassignments >= 1, "survivor adopted a new split");
+        assert_eq!(report.sublist_length, 8, "survivor owns the whole list");
+
+        // The recovered result is bit-identical to a fresh 1-worker run.
+        let (p1, _) = JacobiProblem::random(8, 1e-12, 7);
+        let fresh = {
+            let mut eps = build_thread_transport(1);
+            let master = eps.pop().unwrap();
+            let w = eps.pop().unwrap();
+            let wp = JacobiProblem::random(8, 1e-12, 7).0;
+            let cfg1 = BsfConfig::with_workers(1);
+            let wcfg = cfg1.clone();
+            let h = std::thread::spawn(move || {
+                crate::skeleton::worker::run_worker_guarded(
+                    &wp,
+                    &crate::skeleton::backend::FusedNativeBackend,
+                    &w,
+                    &wcfg,
+                )
+            });
+            let out = run_master(&p1, &master, &cfg1).unwrap();
+            h.join().unwrap().unwrap();
+            out
+        };
+        assert_eq!(outcome.param, fresh.param, "redistributed == fresh K-1 run");
+        assert_eq!(outcome.iterations, fresh.iterations);
+    }
+
+    #[test]
+    fn duplicate_fold_at_iteration_boundary_is_a_typed_protocol_error() {
+        // The per-rank selective gather consumes exactly one fold per
+        // round, so a double-sending worker's extra fold would silently
+        // become NEXT round's data — the boundary guard must catch it.
+        let mut eps = build_thread_transport(1);
+        let master = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        let (p, _) = JacobiProblem::random(8, 1e-12, 5);
+        let cfg = BsfConfig::with_workers(1).max_iter(10);
+        let mut m = MasterLoop::new(&p, &cfg, None).unwrap();
+        let rogue = std::thread::spawn(move || {
+            let _ = w0.recv(1, Tag::Order).unwrap();
+            // One order, TWO folds: the protocol violation.
+            let fold = (Some(vec![1.0f64; 8]), 1u64).to_bytes();
+            w0.send(1, Tag::Fold, fold.clone()).unwrap();
+            w0.send(1, Tag::Fold, fold).unwrap();
+            let ex = w0.recv(1, Tag::Exit).unwrap();
+            assert!(!bool::from_bytes(&ex.payload), "run continues");
+            // The guard aborts the next step: exit=true, not an order.
+            let ex = w0.recv(1, Tag::Exit).unwrap();
+            assert!(bool::from_bytes(&ex.payload), "guard released the worker");
+        });
+        let ev = m.step_comm(&p, &master).unwrap();
+        assert!(ev.stop.is_none());
+        let err = m.step_comm(&p, &master).unwrap_err();
+        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(err.to_string().contains("duplicate or desynchronized"), "{err}");
+        rogue.join().unwrap();
     }
 
     #[test]

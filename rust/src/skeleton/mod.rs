@@ -29,6 +29,7 @@ pub mod cluster;
 pub mod config;
 pub mod driver;
 pub mod engine;
+pub mod fault;
 pub mod master;
 pub mod pool;
 pub mod problem;
@@ -51,6 +52,7 @@ pub use driver::{
 pub use engine::{
     AutoEngine, Engine, ProcessEngine, SerialEngine, SimulatedEngine, ThreadedEngine,
 };
+pub use fault::{FaultPolicy, WorkerAssignment};
 pub use pool::ChunkPool;
 pub use problem::{BsfProblem, MapCtx, StepDecision};
 pub use report::{Clock, PhaseBreakdown, RunReport};

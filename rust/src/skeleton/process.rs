@@ -266,13 +266,14 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
             self.state.release(ep);
         }
 
-        // Collect each worker's end-of-run summary (sent right after it
-        // saw exit=true, before it disconnects).
-        let k = self.state.workers();
-        let mut workers = Vec::with_capacity(k);
+        // Collect each *surviving* worker's end-of-run summary (sent
+        // right after it saw exit=true, before it disconnects); a
+        // redistributed run's lost ranks have none to ship.
+        let alive: Vec<usize> = self.state.alive_ranks().to_vec();
+        let mut workers = Vec::with_capacity(alive.len());
         {
             let ep = self.comm();
-            for w in 0..k {
+            for &w in &alive {
                 let m = ep.recv(w, TAG_WORKER_REPORT)?;
                 workers.push(WorkerReport::from_wire(&m.payload).map_err(|e| {
                     BsfError::transport(format!("worker {w}: {e}"))
@@ -284,10 +285,13 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
         // Workers exit on their own right after shipping their report;
         // drop our endpoint first (releases the write halves), then wait
         // for the children — killing any that outlive the reap window.
+        // Lost ranks died mid-run, so their non-zero exit status is
+        // expected, not an error.
         let ep = self.ep.take().expect("endpoint present until finish");
         let stats = ep.stats();
         drop(ep);
-        self.children.reap(REAP_TIMEOUT)?;
+        let losses: Vec<usize> = self.state.losses().to_vec();
+        self.children.reap(REAP_TIMEOUT, &losses)?;
 
         let outcome = self.state.outcome();
         Ok(RunReport {
@@ -302,6 +306,8 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
             messages: stats.message_count(),
             bytes: stats.byte_count(),
             volume: stats.volume(),
+            losses: outcome.losses,
+            rejoined: outcome.rejoined,
         })
     }
 }
@@ -333,10 +339,28 @@ pub fn run_process_worker<P: BsfProblem>(
     rank: usize,
     cfg_template: &BsfConfig,
 ) -> Result<WorkerReport, BsfError> {
+    run_process_worker_with(problem, backend, connect, rank, cfg_template, |ep| {
+        Box::new(ep) as Box<dyn Communicator>
+    })
+}
+
+/// [`run_process_worker`] with a hook wrapping the connected endpoint —
+/// how the fault harness interposes
+/// [`DieAfterFolds`](crate::util::faultsim::DieAfterFolds) while the
+/// connect/handshake/report protocol stays in exactly one place.
+pub(crate) fn run_process_worker_with<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    connect: &str,
+    rank: usize,
+    cfg_template: &BsfConfig,
+    wrap: impl FnOnce(TcpEndpoint) -> Box<dyn Communicator>,
+) -> Result<WorkerReport, BsfError> {
     let ep = connect_worker(connect, rank, problem_sig(problem), DEFAULT_CONNECT_TIMEOUT)?;
     let mut cfg = cfg_template.clone();
     cfg.workers = ep.size() - 1;
-    let report = run_worker_guarded(problem, backend, &ep, &cfg)?;
+    let ep = wrap(ep);
+    let report = run_worker_guarded(problem, backend, &*ep, &cfg)?;
     ep.send(ep.master_rank(), TAG_WORKER_REPORT, report.to_wire())?;
     Ok(report)
 }
@@ -377,18 +401,28 @@ impl ChildSet {
     /// Wait for every child to exit on its own (they just saw exit=true
     /// and their sockets closed); kill stragglers past `timeout`. A
     /// non-zero exit after an apparently clean run is surfaced — it
-    /// means the worker's side of the shutdown failed.
-    pub(crate) fn reap(&mut self, timeout: Duration) -> Result<(), BsfError> {
+    /// means the worker's side of the shutdown failed — except for the
+    /// ranks in `lost`, which died mid-run by definition (their status
+    /// is whatever killed them).
+    pub(crate) fn reap(
+        &mut self,
+        timeout: Duration,
+        lost: &[usize],
+    ) -> Result<(), BsfError> {
         let deadline = Instant::now() + timeout;
         let mut first_err: Option<BsfError> = None;
         for (rank, child) in self.children.drain(..) {
+            let tolerated = lost.contains(&rank);
             let status = wait_until(child, deadline);
             match status {
-                Ok(s) if s.success() => {}
+                Ok(s) if s.success() || tolerated => {}
                 Ok(s) => {
                     first_err.get_or_insert(BsfError::transport(format!(
                         "worker {rank} process exited with {s}"
                     )));
+                }
+                Err(e) if tolerated => {
+                    let _ = e; // a lost child that also hung was killed above
                 }
                 Err(e) => {
                     first_err.get_or_insert(BsfError::transport(format!(

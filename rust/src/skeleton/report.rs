@@ -84,6 +84,15 @@ pub struct RunReport<Param> {
     /// model's order/fold transfer terms. All-zero for engines that
     /// pass no messages (serial).
     pub volume: VolumeByTag,
+    /// Physical worker ranks lost mid-run, in loss order (empty on a
+    /// loss-free run). Under `FaultPolicy::Redistribute` the run
+    /// completed without them; under `RestartFromCheckpoint` these are
+    /// the losses that triggered relaunches.
+    pub losses: Vec<usize>,
+    /// Physical worker ranks re-admitted via the REJOIN protocol after
+    /// a loss (chronological; a rank can appear in both lists — lost,
+    /// then healed).
+    pub rejoined: Vec<usize>,
 }
 
 impl<Param> RunReport<Param> {
@@ -123,14 +132,23 @@ impl<Param> RunReport<Param> {
     }
 
     /// One-line human summary of the run (the CLI's standard output).
+    /// Mentions lost worker ranks (`lost=r1,r2`) only when there were
+    /// losses.
     pub fn summary(&self) -> String {
+        let lost = if self.losses.is_empty() {
+            String::new()
+        } else {
+            let ranks: Vec<String> =
+                self.losses.iter().map(|r| r.to_string()).collect();
+            format!(" lost={}", ranks.join(","))
+        };
         match self.clock {
             Clock::Real => format!(
-                "engine={} iterations={} elapsed={:.6}s msgs={} bytes={}",
+                "engine={} iterations={} elapsed={:.6}s msgs={} bytes={}{lost}",
                 self.engine, self.iterations, self.elapsed, self.messages, self.bytes
             ),
             Clock::Virtual => format!(
-                "engine={} iterations={} virtual={:.6}s real={:.3}s msgs={} bytes={}",
+                "engine={} iterations={} virtual={:.6}s real={:.3}s msgs={} bytes={}{lost}",
                 self.engine,
                 self.iterations,
                 self.elapsed,
@@ -159,6 +177,8 @@ mod tests {
             messages: 0,
             bytes: 0,
             volume: VolumeByTag::default(),
+            losses: Vec::new(),
+            rejoined: Vec::new(),
         }
     }
 
@@ -166,6 +186,14 @@ mod tests {
     fn mean_map_secs_guards_empty() {
         assert_eq!(report(vec![], 5).mean_worker_map_secs_per_iter(), 0.0);
         assert_eq!(report(vec![], 0).mean_worker_map_secs_per_iter(), 0.0);
+    }
+
+    #[test]
+    fn summary_mentions_losses_only_when_present() {
+        let mut r = report(vec![], 1);
+        assert!(!r.summary().contains("lost="), "{}", r.summary());
+        r.losses = vec![1, 3];
+        assert!(r.summary().contains("lost=1,3"), "{}", r.summary());
     }
 
     #[test]
@@ -179,6 +207,7 @@ mod tests {
             max_chunk_seconds: 0.0,
             merge_seconds: 0.0,
             pid: std::process::id(),
+            reassignments: 0,
         };
         let r = report(vec![w(0, 2.0), w(1, 6.0)], 4);
         assert!((r.mean_worker_map_secs_per_iter() - 1.0).abs() < 1e-12);
@@ -195,6 +224,7 @@ mod tests {
             max_chunk_seconds: 0.5,
             merge_seconds: 0.25,
             pid: std::process::id(),
+            reassignments: 0,
         };
         assert_eq!(report(vec![w(1)], 2).hybrid_summary(), "");
         let s = report(vec![w(4)], 2).hybrid_summary();

@@ -41,10 +41,13 @@ pub(crate) fn validate_run<P: BsfProblem>(
 }
 
 /// The threaded engine's driver: the master loop on the calling thread,
-/// K worker OS threads over the in-process transport.
+/// K worker OS threads over the in-process transport. The master
+/// endpoint is boxed so the fault-injection harness
+/// ([`util::faultsim`](crate::util::faultsim)) can interpose a wrapper
+/// transport without a second driver implementation.
 pub(crate) struct ThreadedDriver<P: BsfProblem> {
     problem: Arc<P>,
-    ep: ThreadEndpoint,
+    ep: Box<dyn Communicator>,
     handles: Vec<(usize, std::thread::JoinHandle<Result<WorkerReport, BsfError>>)>,
     state: MasterLoop<P>,
 }
@@ -56,6 +59,22 @@ pub(crate) fn launch_threaded<P: BsfProblem>(
     cfg: &BsfConfig,
     start: Option<Checkpoint<P::Param>>,
 ) -> Result<Box<dyn Driver<P>>, BsfError> {
+    launch_threaded_with(problem, backend, cfg, start, |ep| {
+        Box::new(ep) as Box<dyn Communicator>
+    })
+}
+
+/// [`launch_threaded`] with a hook wrapping the master's endpoint —
+/// how the fault-injection harness interposes a
+/// [`FlakyTransport`](crate::util::faultsim::FlakyTransport) while the
+/// workers stay on real thread endpoints.
+pub(crate) fn launch_threaded_with<P: BsfProblem>(
+    problem: Arc<P>,
+    backend: Arc<dyn MapBackend<P>>,
+    cfg: &BsfConfig,
+    start: Option<Checkpoint<P::Param>>,
+    wrap: impl FnOnce(ThreadEndpoint) -> Box<dyn Communicator>,
+) -> Result<Box<dyn Driver<P>>, BsfError> {
     // Validate problem + config (and the checkpoint, when resuming)
     // before any thread exists; the MasterLoop itself — whose t0 is the
     // run clock — is built only after the workers are up.
@@ -66,6 +85,7 @@ pub(crate) fn launch_threaded<P: BsfProblem>(
     let master_ep = endpoints.pop().ok_or_else(|| {
         BsfError::transport("thread transport built without a master endpoint")
     })?;
+    let master_ep = wrap(master_ep);
 
     let mut handles: Vec<(usize, std::thread::JoinHandle<Result<WorkerReport, BsfError>>)> =
         Vec::with_capacity(cfg.workers);
@@ -121,7 +141,7 @@ impl<P: BsfProblem> Driver<P> for ThreadedDriver<P> {
     }
 
     fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
-        self.state.step_comm(&*self.problem, &self.ep)
+        self.state.step_comm(&*self.problem, &*self.ep)
     }
 
     fn checkpoint(&self) -> Checkpoint<P::Param> {
@@ -132,7 +152,7 @@ impl<P: BsfProblem> Driver<P> for ThreadedDriver<P> {
         // Early finish: release the workers between iterations (they
         // accept an exit order at the top of their loop).
         if !self.state.done() {
-            self.state.release(&self.ep);
+            self.state.release(&*self.ep);
         }
         let stats = self.ep.stats();
 
@@ -168,6 +188,8 @@ impl<P: BsfProblem> Driver<P> for ThreadedDriver<P> {
             messages: stats.message_count(),
             bytes: stats.byte_count(),
             volume: stats.volume(),
+            losses: outcome.losses,
+            rejoined: outcome.rejoined,
         })
     }
 }
@@ -176,7 +198,7 @@ impl<P: BsfProblem> Drop for ThreadedDriver<P> {
     /// An abandoned driver must not leak its worker threads: release
     /// them (no-op when the run already stopped or aborted) and join.
     fn drop(&mut self) {
-        self.state.release(&self.ep);
+        self.state.release(&*self.ep);
         for (_, h) in self.handles.drain(..) {
             let _ = h.join();
         }

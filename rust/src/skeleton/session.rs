@@ -63,7 +63,7 @@ use crate::skeleton::config::BsfConfig;
 use crate::skeleton::driver::{
     CancelToken, Checkpoint, Driver, IterationEvent, StopPolicy,
 };
-use crate::skeleton::engine::{AutoEngine, Engine};
+use crate::skeleton::engine::{run_engine, AutoEngine, Engine};
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::report::RunReport;
 
@@ -197,11 +197,15 @@ impl<P: BsfProblem> Bsf<P> {
         Ok(BsfRun { driver, stopped: false })
     }
 
-    /// Execute the run to completion — `iterate()` stepped to the stop
-    /// event. One-shot and stepped runs share this single code path, so
-    /// they are bit-identical by construction.
+    /// Execute the run to completion: the same launch + `loop { step }`
+    /// + `finish` path `iterate()` exposes, so one-shot and stepped runs
+    /// are bit-identical by construction — plus the
+    /// [`FaultPolicy::RestartFromCheckpoint`](crate::skeleton::fault::FaultPolicy)
+    /// relaunch loop, which only a one-shot run can provide (a steered
+    /// `iterate()` surfaces the typed loss and leaves resuming to the
+    /// caller).
     pub fn run(self) -> Result<RunReport<P::Param>, BsfError> {
-        self.iterate()?.run_to_end()
+        run_engine(&*self.engine, self.problem, self.backend, &self.cfg, self.start)
     }
 }
 

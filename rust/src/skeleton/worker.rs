@@ -27,6 +27,7 @@ use std::time::Instant;
 use crate::error::BsfError;
 use crate::skeleton::backend::MapBackend;
 use crate::skeleton::config::BsfConfig;
+use crate::skeleton::fault::TAG_REASSIGN;
 use crate::skeleton::pool::ChunkPool;
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::reduce::{fold_extended, ExtendedFold};
@@ -63,10 +64,14 @@ pub struct WorkerReport {
     /// persistent [`Cluster`](crate::skeleton::cluster::Cluster) proves
     /// that consecutive runs reused the same processes.
     pub pid: u32,
+    /// How many times this worker's sublist assignment changed mid-run
+    /// (`TAG_REASSIGN` orders honored) — the worker-side witness of
+    /// fault-driven redistribution. 0 on a loss-free run.
+    pub reassignments: usize,
 }
 
-/// Fixed wire size of a [`WorkerReport`]: 8 little-endian 8-byte fields.
-pub(crate) const WORKER_REPORT_WIRE_BYTES: usize = 8 * 8;
+/// Fixed wire size of a [`WorkerReport`]: 9 little-endian 8-byte fields.
+pub(crate) const WORKER_REPORT_WIRE_BYTES: usize = 9 * 8;
 
 impl WorkerReport {
     /// Encode for the end-of-run report message a worker process ships
@@ -75,7 +80,7 @@ impl WorkerReport {
         (
             (self.rank, self.iterations, self.map_seconds, self.sublist_length),
             (self.threads, self.max_chunk_seconds, self.merge_seconds),
-            self.pid as u64,
+            (self.pid as u64, self.reassignments),
         )
             .to_bytes()
     }
@@ -85,7 +90,7 @@ impl WorkerReport {
     /// protocol version) with a typed error instead of letting the
     /// codec index out of bounds.
     pub(crate) fn from_wire(payload: &[u8]) -> Result<Self, BsfError> {
-        type Wire = ((usize, usize, f64, usize), (usize, f64, f64), u64);
+        type Wire = ((usize, usize, f64, usize), (usize, f64, f64), (u64, usize));
         if payload.len() != WORKER_REPORT_WIRE_BYTES {
             return Err(BsfError::transport(format!(
                 "worker report is {} bytes, expected {WORKER_REPORT_WIRE_BYTES} \
@@ -93,9 +98,10 @@ impl WorkerReport {
                 payload.len()
             )));
         }
-        let ((rank, iterations, map_seconds, sublist_length), wire_hybrid, pid) =
+        let ((rank, iterations, map_seconds, sublist_length), wire_hybrid, wire_id) =
             Wire::from_bytes(payload);
         let (threads, max_chunk_seconds, merge_seconds) = wire_hybrid;
+        let (pid, reassignments) = wire_id;
         Ok(WorkerReport {
             rank,
             iterations,
@@ -105,6 +111,7 @@ impl WorkerReport {
             max_chunk_seconds,
             merge_seconds,
             pid: pid as u32,
+            reassignments,
         })
     }
 }
@@ -159,26 +166,38 @@ pub fn run_worker_with_pool<P: BsfProblem>(
     }
     let master = comm.master_rank();
 
-    // Step 1: input A_j (the worker's static sublist).
-    let (offset, len) = sublist_range(problem.list_size(), k, rank);
-    let elems: Vec<P::MapElem> =
+    // Step 1: input A_j (the worker's static sublist). Under fault
+    // recovery the master may override this assignment mid-run (a
+    // `TAG_REASSIGN` carries the new logical rank, effective K, offset
+    // and length), so the whole tuple is mutable run state.
+    let (mut offset, mut len) = sublist_range(problem.list_size(), k, rank);
+    let mut elems: Vec<P::MapElem> =
         (offset..offset + len).map(|i| problem.map_list_elem(i)).collect();
+    let mut logical = rank;
+    let mut k_eff = k;
+    let mut reassignments = 0usize;
 
     let mut map_seconds = 0.0;
     let mut max_chunk_seconds = 0.0;
     let mut merge_seconds = 0.0;
     let mut iterations = 0usize;
 
-    let report = |iterations: usize, map_seconds: f64, max_chunk: f64, merge: f64| {
+    let report = |iterations: usize,
+                  map_seconds: f64,
+                  max_chunk: f64,
+                  merge: f64,
+                  sublist_length: usize,
+                  reassignments: usize| {
         WorkerReport {
             rank,
             iterations,
             map_seconds,
-            sublist_length: len,
+            sublist_length,
             threads: cfg.threads_per_worker.max(1),
             max_chunk_seconds: max_chunk,
             merge_seconds: merge,
             pid: std::process::id(),
+            reassignments,
         }
     };
 
@@ -187,15 +206,37 @@ pub fn run_worker_with_pool<P: BsfProblem>(
         // here: the master broadcasts one on its error paths (another
         // worker died, a dispatcher bug), when the run is cancelled, or
         // when a driver is finished early — releasing workers that are
-        // waiting for the next order.
-        let m = comm.recv_tags(Some(master), &[Tag::Order, Tag::Exit])?;
+        // waiting for the next order. An exit=false here is the fault
+        // layer walking us back to the top of the loop (replan unpark /
+        // rejoin re-admission) — benign, keep waiting.
+        let m = comm.recv_tags(Some(master), &[Tag::Order, Tag::Exit, TAG_REASSIGN])?;
         if m.tag == Tag::Exit {
             if bool::from_bytes(&m.payload) {
-                return Ok(report(iterations, map_seconds, max_chunk_seconds, merge_seconds));
+                return Ok(report(
+                    iterations,
+                    map_seconds,
+                    max_chunk_seconds,
+                    merge_seconds,
+                    len,
+                    reassignments,
+                ));
             }
-            return Err(BsfError::transport(format!(
-                "worker {rank}: unexpected exit=false instead of an order"
-            )));
+            continue;
+        }
+        if m.tag == TAG_REASSIGN {
+            // Fault recovery re-split: adopt the survivors' new split
+            // exactly as a fresh worker of the announced run shape
+            // would (logical rank + effective K drive `SkelVars`, so
+            // the map sees a fresh k_eff-worker run bit-for-bit).
+            let (new_logical, new_k, new_off, new_len) =
+                <(usize, usize, usize, usize)>::from_bytes(&m.payload);
+            logical = new_logical;
+            k_eff = new_k;
+            offset = new_off;
+            len = new_len;
+            elems = (offset..offset + len).map(|i| problem.map_list_elem(i)).collect();
+            reassignments += 1;
+            continue;
         }
         // The order carries the master's iteration counter so a resumed
         // run's workers see the true count (not a rebased-to-0 one) —
@@ -203,7 +244,7 @@ pub fn run_worker_with_pool<P: BsfProblem>(
         let (job, iter, param) = <(usize, usize, P::Param)>::from_bytes(&m.payload);
 
         // Steps 3-4: B_j := Map(F, A_j); s_j := Reduce(⊕, B_j).
-        let vars = SkelVars::for_worker(rank, k, offset, len, iter, job);
+        let vars = SkelVars::for_worker(logical, k_eff, offset, len, iter, job);
         let t0 = Instant::now();
         let mapped = map_and_fold(problem, backend, &elems, &param, vars, pool);
         map_seconds += t0.elapsed().as_secs_f64();
@@ -218,7 +259,14 @@ pub fn run_worker_with_pool<P: BsfProblem>(
         // Step 10: RecvFromMaster(exit).
         let exit = bool::from_bytes(&comm.recv(master, Tag::Exit)?.payload);
         if exit {
-            return Ok(report(iterations, map_seconds, max_chunk_seconds, merge_seconds));
+            return Ok(report(
+                iterations,
+                map_seconds,
+                max_chunk_seconds,
+                merge_seconds,
+                len,
+                reassignments,
+            ));
         }
     }
 }
@@ -352,6 +400,7 @@ mod tests {
             max_chunk_seconds: 0.0625,
             merge_seconds: 0.03125,
             pid: 12345,
+            reassignments: 2,
         };
         let wire = r.to_wire();
         assert_eq!(wire.len(), WORKER_REPORT_WIRE_BYTES);
@@ -364,6 +413,7 @@ mod tests {
         assert_eq!(back.max_chunk_seconds, 0.0625);
         assert_eq!(back.merge_seconds, 0.03125);
         assert_eq!(back.pid, 12345);
+        assert_eq!(back.reassignments, 2);
 
         // A short payload is a typed mixed-version error, not a panic.
         let err = WorkerReport::from_wire(&wire[..wire.len() - 8]).unwrap_err();

@@ -99,6 +99,16 @@ pub trait Communicator: Send {
     fn recv_any(&self, tag: Tag) -> Result<Message, BsfError> {
         self.recv_tags(None, &[tag])
     }
+    /// Non-blocking receive: the next already-arrived message matching
+    /// any of `tags` from `from` (or any peer), or `None` when nothing
+    /// matching is buffered. Non-matching arrivals are buffered, never
+    /// lost. Used by the master to poll for `REJOIN` announcements at
+    /// iteration boundaries; the default (for transports without a
+    /// non-blocking path) reports nothing.
+    fn try_recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Option<Message> {
+        let _ = (from, tags);
+        None
+    }
     /// Shared counters.
     fn stats(&self) -> Arc<TransportStats>;
 }

@@ -305,16 +305,24 @@ impl TcpEndpoint {
             // be) waiting on is gone, blocking would deadlock — surface
             // the loss as a typed error instead. `recv_any` treats *any*
             // lost peer as fatal: the master's gather cannot complete
-            // once one worker is dead.
+            // once one worker is dead. A lost *worker* rank carries its
+            // identity ([`BsfError::WorkerLost`]) so fault policies can
+            // re-plan on the survivors.
             if let Some((r, reason)) = inbox
                 .lost
                 .iter()
                 .find(|(r, _)| from.map(|f| f == *r).unwrap_or(true))
             {
-                return Err(BsfError::transport(format!(
+                let (r, reason) = (*r, reason.clone());
+                let msg = format!(
                     "rank {}: peer {r} disconnected ({reason}) while receiving {tags:?}",
                     self.rank
-                )));
+                );
+                return Err(if r + 1 < self.size {
+                    BsfError::worker_lost(r, msg)
+                } else {
+                    BsfError::transport(msg)
+                });
             }
             match inbox.rx.recv() {
                 Ok(Event::Msg(m)) => {
@@ -366,10 +374,21 @@ impl Communicator for TcpEndpoint {
             BsfError::transport(format!("rank {}: writer to {to} poisoned", self.rank))
         })?;
         stream.write_all(&buf).map_err(|e| {
-            BsfError::transport_io(
-                format!("rank {}: send {tag:?} to rank {to}", self.rank),
-                e,
-            )
+            let ctx = format!("rank {}: send {tag:?} to rank {to}", self.rank);
+            // A torn connection to a worker is a typed per-rank loss
+            // (fault policies re-plan on it); other I/O failures and a
+            // torn master link stay generic transport errors.
+            let peer_gone = matches!(
+                e.kind(),
+                io::ErrorKind::BrokenPipe
+                    | io::ErrorKind::ConnectionReset
+                    | io::ErrorKind::ConnectionAborted
+            );
+            if peer_gone && to + 1 < self.size {
+                BsfError::worker_lost(to, format!("{ctx}: {e}"))
+            } else {
+                BsfError::transport_io(ctx, e)
+            }
         })?;
         self.stats.record(tag, payload.len());
         Ok(())
@@ -377,6 +396,27 @@ impl Communicator for TcpEndpoint {
 
     fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
         self.recv_matching(from, tags)
+    }
+
+    fn try_recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Option<Message> {
+        let mut inbox = self.inbox.lock().ok()?;
+        if let Some(m) = Self::take_pending(&mut inbox.pending, from, tags) {
+            return Some(m);
+        }
+        loop {
+            match inbox.rx.try_recv() {
+                Ok(Event::Msg(m)) => {
+                    let matches =
+                        tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true);
+                    if matches {
+                        return Some(m);
+                    }
+                    inbox.pending.push_back(m);
+                }
+                Ok(Event::Lost { from, reason }) => inbox.lost.push((from, reason)),
+                Err(_) => return None,
+            }
+        }
     }
 
     fn stats(&self) -> Arc<TransportStats> {
@@ -723,15 +763,33 @@ mod tests {
         assert_eq!(master.recv(0, Tag::Exit).unwrap().payload, vec![1]);
         drop(w0);
         // Blocking on something the dead peer never sent is a typed
-        // error, not a hang...
+        // per-rank loss, not a hang...
         let err = master.recv(0, Tag::Order).unwrap_err();
-        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
         assert!(err.to_string().contains("disconnected"), "{err}");
         // ...while the already-buffered Fold is still delivered...
         assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![7]);
         // ...and a gather over all peers errors once the only peer is gone.
         let err = master.recv_any(Tag::Fold).unwrap_err();
-        assert!(matches!(err, BsfError::Transport(_)), "{err}");
+        assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn try_recv_drains_buffered_frames_without_blocking() {
+        let (master, workers) = loopback(1);
+        assert!(master.try_recv_tags(None, &[Tag::User(1)]).is_none());
+        workers[0].send(1, Tag::User(1), vec![9]).unwrap();
+        // the frame needs a moment to cross the reader thread
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(m) = master.try_recv_tags(None, &[Tag::User(1)]) {
+                got = Some(m);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let m = got.expect("frame delivered");
+        assert_eq!((m.from, m.payload), (0, vec![9]));
     }
 
     #[test]

@@ -110,13 +110,41 @@ impl Communicator for ThreadEndpoint {
         sender
             .send(Message { from: self.rank, tag, payload })
             .map_err(|_| {
-                BsfError::transport(format!(
+                let reason = format!(
                     "rank {}: rank {to} hung up while sending {tag:?}",
                     self.rank
-                ))
+                );
+                // A vanished *worker* endpoint is a typed per-rank loss
+                // (the fault policies key on the rank); a vanished
+                // master stays a generic transport error.
+                if to + 1 < self.size {
+                    BsfError::worker_lost(to, reason)
+                } else {
+                    BsfError::transport(reason)
+                }
             })?;
         self.stats.record(tag, len);
         Ok(())
+    }
+
+    fn try_recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Option<Message> {
+        let mut inbox = self.inbox.lock().ok()?;
+        if let Some(m) = Self::take_pending(&mut inbox.pending, from, tags) {
+            return Some(m);
+        }
+        loop {
+            match inbox.rx.try_recv() {
+                Ok(m) => {
+                    let matches =
+                        tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true);
+                    if matches {
+                        return Some(m);
+                    }
+                    inbox.pending.push_back(m);
+                }
+                Err(_) => return None,
+            }
+        }
     }
 
     fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
@@ -236,14 +264,39 @@ mod tests {
     }
 
     #[test]
-    fn recv_after_peer_drop_is_typed_error() {
+    fn send_after_worker_drop_is_a_typed_per_rank_loss() {
         let mut eps = build(1);
         let master = eps.pop().unwrap();
         let worker = eps.pop().unwrap();
         drop(worker);
         // master still holds a sender to itself, so recv would block; send
-        // to the dropped worker instead: its receiver is gone.
+        // to the dropped worker instead: its receiver is gone. The rank
+        // is known, so the loss is typed per-rank (fault policies key on
+        // it).
         let err = master.send(0, Tag::Order, vec![1]).unwrap_err();
+        assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
+        // a dead *master* is still a generic transport error
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        drop(master);
+        let err = worker.send(1, Tag::Fold, vec![1]).unwrap_err();
         assert!(matches!(err, BsfError::Transport(_)), "{err}");
+    }
+
+    #[test]
+    fn try_recv_returns_buffered_matches_without_blocking() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        assert!(master.try_recv_tags(None, &[Tag::User(7)]).is_none());
+        worker.send(1, Tag::Fold, vec![1]).unwrap();
+        worker.send(1, Tag::User(7), vec![2]).unwrap();
+        // the non-matching Fold is buffered, the User(7) is returned
+        let m = master.try_recv_tags(None, &[Tag::User(7)]).unwrap();
+        assert_eq!((m.from, m.payload), (0, vec![2]));
+        assert!(master.try_recv_tags(None, &[Tag::User(7)]).is_none());
+        // the buffered Fold is still delivered by a blocking recv
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![1]);
     }
 }

@@ -1,0 +1,434 @@
+//! Deterministic fault injection for the real engines — the test
+//! harness behind `tests/fault_tolerance.rs` and the chaos CI job.
+//!
+//! Three tools, usable separately:
+//!
+//! * [`FaultScript`] + [`FlakyTransport`] — a declarative partition
+//!   plan wrapped around the **master's** endpoint. `kill(rank, round)`
+//!   makes rank `r` unreachable from order-broadcast round `round` on:
+//!   its order is swallowed, its in-flight messages are dropped, and
+//!   the next receive surfaces the typed
+//!   [`BsfError::WorkerLost`](crate::error::BsfError::WorkerLost) —
+//!   exactly the failure shape a torn TCP connection produces, but on
+//!   any transport and at a deterministic iteration. `heal(rank,
+//!   round)` lifts the partition and synthesizes the worker's
+//!   [`TAG_REJOIN`] announcement, driving the master's re-admission
+//!   path. The real worker (thread) stays parked the whole time — a
+//!   partition, not a murder — and is released by the driver's normal
+//!   teardown broadcast.
+//! * [`FlakyThreadedEngine`] — the threaded engine with a
+//!   [`FlakyTransport`] interposed on the master side: real worker
+//!   threads, real transport, injected losses; drop-in wherever an
+//!   [`Engine`] goes.
+//! * [`DieAfterFolds`] — the **worker-side** child-kill helper for real
+//!   OS processes: wraps the worker's endpoint and hard-exits the
+//!   process (exit code [`KILLED_EXIT_CODE`]) right before it would
+//!   send fold number `budget + 1` — so "kill worker r at iteration i"
+//!   is expressed as `--kill-rank r --kill-after-folds i` on the `bsf
+//!   worker` command line ([`run_flaky_process_worker`]).
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::BsfError;
+use crate::skeleton::backend::MapBackend;
+use crate::skeleton::cluster::run_persistent_worker_with;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::{Checkpoint, Driver};
+use crate::skeleton::engine::Engine;
+use crate::skeleton::fault::TAG_REJOIN;
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::process::run_process_worker_with;
+use crate::skeleton::runner::launch_threaded_with;
+use crate::transport::{Communicator, Message, Tag, TransportStats};
+
+/// Exit code a [`DieAfterFolds`]-killed worker process dies with.
+pub const KILLED_EXIT_CODE: i32 = 3;
+
+#[derive(Default)]
+struct ScriptState {
+    /// (rank, round): partition `rank` away at the first order round
+    /// `>= round` (0-based; one round per master order broadcast,
+    /// including re-broadcasts after a replan).
+    kills: Vec<(usize, usize)>,
+    /// (rank, round): lift the partition and synthesize REJOIN at the
+    /// first order round `>= round`.
+    heals: Vec<(usize, usize)>,
+    /// Order-broadcast bursts seen so far.
+    rounds_started: usize,
+    /// True while inside a burst of consecutive `Tag::Order` sends.
+    in_order_burst: bool,
+    /// Currently partitioned ranks.
+    dead: Vec<usize>,
+    /// Partitioned ranks whose loss has not yet been surfaced to a
+    /// receive.
+    unreported: Vec<usize>,
+    /// Healed ranks whose REJOIN has not yet been delivered.
+    pending_rejoin: Vec<usize>,
+}
+
+impl ScriptState {
+    /// Called on the first `Tag::Order` send of a burst: arm the kills
+    /// and heals scheduled for the new round.
+    fn start_round(&mut self) {
+        let round = self.rounds_started;
+        self.rounds_started += 1;
+        let mut i = 0;
+        while i < self.kills.len() {
+            if self.kills[i].1 <= round {
+                let (rank, _) = self.kills.remove(i);
+                if !self.dead.contains(&rank) {
+                    self.dead.push(rank);
+                    self.unreported.push(rank);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.heals.len() {
+            if self.heals[i].1 <= round {
+                let (rank, _) = self.heals.remove(i);
+                if let Some(pos) = self.dead.iter().position(|&d| d == rank) {
+                    self.dead.remove(pos);
+                    self.unreported.retain(|&u| u != rank);
+                    self.pending_rejoin.push(rank);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// A declarative, deterministic partition plan, shared by clones (the
+/// test keeps one handle, the engine's transports another).
+#[derive(Clone, Default)]
+pub struct FaultScript {
+    state: Arc<Mutex<ScriptState>>,
+}
+
+impl FaultScript {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Partition worker `rank` away at order-broadcast round `round`
+    /// (0-based): it misses that round's order and the master's next
+    /// receive reports it lost.
+    pub fn kill(self, rank: usize, round: usize) -> Self {
+        self.state.lock().expect("fault script lock").kills.push((rank, round));
+        self
+    }
+
+    /// Lift `rank`'s partition at round `round` and announce its
+    /// [`TAG_REJOIN`] — the master re-admits it at the next iteration
+    /// boundary.
+    pub fn heal(self, rank: usize, round: usize) -> Self {
+        self.state.lock().expect("fault script lock").heals.push((rank, round));
+        self
+    }
+
+    /// Ranks currently partitioned away (test introspection).
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.state.lock().expect("fault script lock").dead.clone()
+    }
+
+    /// Clear the live partition state (dead/unreported/pending-rejoin)
+    /// while keeping unfired kills and heals and the round counter. A
+    /// `RestartFromCheckpoint` relaunch builds a *fresh* worker set, so
+    /// the old generation's partitions must not apply to it.
+    pub fn reset_partitions(&self) {
+        let mut s = self.state.lock().expect("fault script lock");
+        s.dead.clear();
+        s.unreported.clear();
+        s.pending_rejoin.clear();
+        s.in_order_burst = false;
+    }
+}
+
+/// A [`Communicator`] wrapper applying a [`FaultScript`] to the master's
+/// endpoint: swallows traffic to/from partitioned ranks and surfaces
+/// their loss typed, like a torn connection would.
+pub struct FlakyTransport<C: Communicator> {
+    inner: C,
+    script: FaultScript,
+}
+
+impl<C: Communicator> FlakyTransport<C> {
+    pub fn new(inner: C, script: FaultScript) -> Self {
+        Self { inner, script }
+    }
+
+    fn lost(rank: usize) -> BsfError {
+        BsfError::worker_lost(rank, "injected fault (partitioned by FaultScript)")
+    }
+}
+
+impl<C: Communicator> Communicator for FlakyTransport<C> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+        {
+            let mut s = self.script.state.lock().expect("fault script lock");
+            if tag == Tag::Order {
+                if !s.in_order_burst {
+                    s.in_order_burst = true;
+                    s.start_round();
+                }
+            } else {
+                s.in_order_burst = false;
+            }
+            // The partition swallows outbound traffic to a dead rank —
+            // except exit flags, which model the driver's teardown
+            // broadcast reaching the (really alive, just partitioned)
+            // worker thread so it can be joined.
+            if s.dead.contains(&to) && tag != Tag::Exit {
+                return Ok(());
+            }
+        }
+        self.inner.send(to, tag, payload)
+    }
+
+    fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
+        loop {
+            {
+                let mut s = self.script.state.lock().expect("fault script lock");
+                // Surface an unreported loss this receive could be
+                // waiting on (matches TCP: the loss event lands at the
+                // next receive touching the dead peer).
+                if let Some(pos) = s
+                    .unreported
+                    .iter()
+                    .position(|&r| from.map(|f| f == r).unwrap_or(true))
+                {
+                    let r = s.unreported.remove(pos);
+                    return Err(Self::lost(r));
+                }
+                if let Some(f) = from {
+                    if s.dead.contains(&f) {
+                        // Already reported once; nothing will ever
+                        // arrive from a partitioned rank.
+                        return Err(Self::lost(f));
+                    }
+                }
+            }
+            let m = self.inner.recv_tags(from, tags)?;
+            let swallowed = {
+                let s = self.script.state.lock().expect("fault script lock");
+                s.dead.contains(&m.from)
+            };
+            if swallowed {
+                continue; // straggler from inside the partition: dropped
+            }
+            return Ok(m);
+        }
+    }
+
+    fn try_recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Option<Message> {
+        {
+            let mut s = self.script.state.lock().expect("fault script lock");
+            if tags.contains(&TAG_REJOIN) {
+                if let Some(r) = s.pending_rejoin.pop() {
+                    return Some(Message {
+                        from: r,
+                        tag: TAG_REJOIN,
+                        payload: Vec::new(),
+                    });
+                }
+            }
+        }
+        loop {
+            let m = self.inner.try_recv_tags(from, tags)?;
+            let swallowed = {
+                let s = self.script.state.lock().expect("fault script lock");
+                s.dead.contains(&m.from)
+            };
+            if !swallowed {
+                return Some(m);
+            }
+        }
+    }
+
+    fn stats(&self) -> Arc<TransportStats> {
+        self.inner.stats()
+    }
+}
+
+/// The threaded engine with a [`FlakyTransport`] interposed on the
+/// master endpoint: real worker threads, real in-process transport,
+/// script-injected partitions. `name()` stays `"threaded"` — it *is*
+/// the threaded engine, under induced weather.
+#[derive(Clone, Default)]
+pub struct FlakyThreadedEngine {
+    script: FaultScript,
+}
+
+impl FlakyThreadedEngine {
+    pub fn new(script: FaultScript) -> Self {
+        Self { script }
+    }
+}
+
+impl<P: BsfProblem> Engine<P> for FlakyThreadedEngine {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn launch(
+        &self,
+        problem: Arc<P>,
+        backend: Arc<dyn MapBackend<P>>,
+        cfg: &BsfConfig,
+        start: Option<Checkpoint<P::Param>>,
+    ) -> Result<Box<dyn Driver<P>>, BsfError> {
+        // A relaunch (RestartFromCheckpoint) runs on a fresh worker
+        // set: the previous generation's partitions do not carry over.
+        self.script.reset_partitions();
+        let script = self.script.clone();
+        launch_threaded_with(problem, backend, cfg, start, move |ep| {
+            Box::new(FlakyTransport::new(ep, script)) as Box<dyn Communicator>
+        })
+    }
+}
+
+/// Worker-side child-kill helper: pass `budget` folds through, then
+/// hard-exit the process (code [`KILLED_EXIT_CODE`]) right before
+/// sending the next one — a real mid-run worker death at a
+/// deterministic iteration.
+pub struct DieAfterFolds<C: Communicator> {
+    inner: C,
+    remaining: Mutex<usize>,
+}
+
+impl<C: Communicator> DieAfterFolds<C> {
+    pub fn new(inner: C, budget: usize) -> Self {
+        Self { inner, remaining: Mutex::new(budget) }
+    }
+}
+
+impl<C: Communicator> Communicator for DieAfterFolds<C> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+        if tag == Tag::Fold {
+            let mut left = self.remaining.lock().expect("fold budget lock");
+            if *left == 0 {
+                eprintln!(
+                    "bsf worker {}: injected death before fold (kill-after-folds)",
+                    self.inner.rank()
+                );
+                std::process::exit(KILLED_EXIT_CODE);
+            }
+            *left -= 1;
+        }
+        self.inner.send(to, tag, payload)
+    }
+
+    fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
+        self.inner.recv_tags(from, tags)
+    }
+
+    fn try_recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Option<Message> {
+        self.inner.try_recv_tags(from, tags)
+    }
+
+    fn stats(&self) -> Arc<TransportStats> {
+        self.inner.stats()
+    }
+}
+
+/// The worker-process entry point with an injected death: exactly
+/// `run_process_worker` / `run_persistent_worker` (same connect /
+/// handshake / report protocol, via their wrap hooks), with the
+/// endpoint wrapped in [`DieAfterFolds`] at the given fold budget.
+/// Backs the `bsf worker --kill-rank R --kill-after-folds N` flags.
+pub fn run_flaky_process_worker<P: BsfProblem>(
+    problem: &P,
+    backend: &dyn MapBackend<P>,
+    connect: &str,
+    rank: usize,
+    cfg_template: &BsfConfig,
+    die_after_folds: usize,
+    persist: bool,
+) -> Result<(), BsfError> {
+    if persist {
+        run_persistent_worker_with(problem, backend, connect, rank, cfg_template, |ep| {
+            Box::new(DieAfterFolds::new(ep, die_after_folds)) as Box<dyn Communicator>
+        })
+    } else {
+        run_process_worker_with(problem, backend, connect, rank, cfg_template, |ep| {
+            Box::new(DieAfterFolds::new(ep, die_after_folds)) as Box<dyn Communicator>
+        })
+        .map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::build_thread_transport;
+    use crate::util::codec::Codec;
+
+    #[test]
+    fn kill_partitions_a_rank_and_reports_once_per_receive() {
+        let mut eps = build_thread_transport(2);
+        let master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        let script = FaultScript::new().kill(0, 0);
+        let flaky = FlakyTransport::new(master, script.clone());
+
+        // First order burst arms the round-0 kill: the order to rank 0
+        // is swallowed, rank 1's goes through.
+        flaky.send(0, Tag::Order, vec![1]).unwrap();
+        flaky.send(1, Tag::Order, vec![1]).unwrap();
+        assert_eq!(script.dead_ranks(), vec![0]);
+        assert!(w0.try_recv_tags(None, &[Tag::Order]).is_none(), "swallowed");
+        assert!(w1.try_recv_tags(None, &[Tag::Order]).is_some(), "delivered");
+
+        // The loss surfaces at the next receive...
+        w1.send(2, Tag::Fold, vec![9]).unwrap();
+        let err = flaky.recv_tags(Some(0), &[Tag::Fold]).unwrap_err();
+        assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
+        // ...and the live rank's traffic still flows.
+        let m = flaky.recv_tags(Some(1), &[Tag::Fold]).unwrap();
+        assert_eq!(m.payload, vec![9]);
+        // Stragglers from inside the partition are dropped, but exit
+        // flags still reach the partitioned (parked) worker.
+        flaky.send(0, Tag::Exit, true.to_bytes()).unwrap();
+        assert!(w0.try_recv_tags(None, &[Tag::Exit]).is_some());
+    }
+
+    #[test]
+    fn heal_synthesizes_a_rejoin_announcement() {
+        let mut eps = build_thread_transport(1);
+        let master = eps.pop().unwrap();
+        let _w0 = eps.pop().unwrap();
+        let script = FaultScript::new().kill(0, 0).heal(0, 1);
+        let flaky = FlakyTransport::new(master, script.clone());
+
+        flaky.send(0, Tag::Order, vec![1]).unwrap(); // round 0: killed
+        assert_eq!(script.dead_ranks(), vec![0]);
+        assert!(flaky.try_recv_tags(None, &[TAG_REJOIN]).is_none());
+
+        // A non-order send ends the burst; the next order starts round 1.
+        flaky.send(0, Tag::Exit, false.to_bytes()).unwrap();
+        flaky.send(0, Tag::Order, vec![2]).unwrap(); // round 1: healed
+        assert!(script.dead_ranks().is_empty());
+        let m = flaky.try_recv_tags(None, &[TAG_REJOIN]).expect("rejoin synthesized");
+        assert_eq!((m.from, m.tag), (0, TAG_REJOIN));
+        assert!(flaky.try_recv_tags(None, &[TAG_REJOIN]).is_none(), "once");
+    }
+}

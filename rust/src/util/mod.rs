@@ -1,9 +1,11 @@
 //! Support code: PRNG, codec, dense matrices, stats, CLI parsing, a
-//! minimal JSON reader/writer (for the machine-readable bench harness)
-//! and the in-tree property-testing harness.
+//! minimal JSON reader/writer (for the machine-readable bench harness),
+//! the in-tree property-testing harness and the deterministic
+//! fault-injection harness ([`faultsim`]).
 
 pub mod cli;
 pub mod codec;
+pub mod faultsim;
 pub mod json;
 pub mod mat;
 pub mod qcheck;

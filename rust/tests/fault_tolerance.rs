@@ -1,0 +1,447 @@
+//! Fault-tolerance chaos matrix: kill a worker at iteration {first,
+//! mid, last} × engine {threaded, simulated, process, cluster} × policy
+//! {Abort, Redistribute, RestartFromCheckpoint}.
+//!
+//! The load-bearing assertion, per the fault-layer contract: with
+//! `FaultPolicy::Redistribute`, a run that loses a worker completes with
+//! results **bit-identical to a fresh (K−1)-worker run** — the master
+//! re-splits the list over the survivors with the canonical block split
+//! and merges partial folds in logical-rank order, so the recovered
+//! run's fold tree *is* the fresh run's fold tree.
+//!
+//! Problem choice: montecarlo's map streams are keyed by (block,
+//! iteration) and its reduce is an exact integer sum, so its trajectory
+//! is identical for every worker count — which makes mid-run kills
+//! comparable against a fresh (K−1) run. Jacobi (dense float sums,
+//! K-sensitive association) covers the kill-before-first-merge case,
+//! where bit-identity must hold for *every* problem.
+//!
+//! Threaded-engine kills are injected with `util::faultsim`'s
+//! deterministic partition script (real worker threads, wrapped master
+//! endpoint); process/cluster kills are real child-process deaths via
+//! the `--kill-rank R --kill-after-folds N` worker flags.
+
+use bsf::costmodel::ClusterProfile;
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::problems::montecarlo::MonteCarloProblem;
+use bsf::simcluster::{FaultPlan, SimConfig};
+use bsf::skeleton::FaultPolicy;
+use bsf::util::faultsim::{FaultScript, FlakyThreadedEngine};
+use bsf::{
+    Bsf, BsfError, Cluster, ProcessEngine, RunReport, SimulatedEngine, ThreadedEngine,
+};
+
+const BSF_BIN: &str = env!("CARGO_BIN_EXE_bsf");
+
+/// Process/cluster-tier montecarlo shape; tolerance matches the CLI's
+/// fixed 1e-3 so master and spawned workers build identical instances.
+const MC_BLOCKS: usize = 4;
+const MC_SAMPLES: usize = 50_000;
+
+fn mc_process() -> MonteCarloProblem {
+    MonteCarloProblem::new(MC_BLOCKS, MC_SAMPLES, 1e-3)
+}
+
+fn mc_worker_argv(kill: Option<(usize, usize)>) -> Vec<String> {
+    let mut argv: Vec<String> = vec![
+        "worker".into(),
+        "--problem".into(),
+        "montecarlo".into(),
+        "--n".into(),
+        MC_BLOCKS.to_string(),
+        "--samples".into(),
+        MC_SAMPLES.to_string(),
+    ];
+    if let Some((rank, folds)) = kill {
+        argv.extend([
+            "--kill-rank".into(),
+            rank.to_string(),
+            "--kill-after-folds".into(),
+            folds.to_string(),
+        ]);
+    }
+    argv
+}
+
+/// In-process (threaded/sim) montecarlo shape: quicker, any tolerance.
+fn mc_threaded() -> MonteCarloProblem {
+    MonteCarloProblem::new(6, 2_000, 5e-3)
+}
+
+/// Reference run: fresh threaded execution at `k` workers (the process
+/// and cluster protocols are bit-identical to threaded at equal K).
+fn fresh_threaded(p: MonteCarloProblem, k: usize) -> RunReport<(u64, u64)> {
+    Bsf::new(p).workers(k).engine(ThreadedEngine).run().unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Threaded engine × injected partitions
+// ---------------------------------------------------------------------
+
+#[test]
+fn threaded_redistribute_matches_fresh_k_minus_1_at_first_mid_and_last_iteration() {
+    let baseline = fresh_threaded(mc_threaded(), 3);
+    let n_iters = baseline.iterations;
+    assert!(n_iters >= 3, "need a multi-iteration run, got {n_iters}");
+    let fresh2 = fresh_threaded(mc_threaded(), 2);
+    assert_eq!(
+        fresh2.param, baseline.param,
+        "montecarlo must be K-invariant for this matrix to be meaningful"
+    );
+
+    for kill_round in [0, n_iters / 2, n_iters - 1] {
+        let script = FaultScript::new().kill(1, kill_round);
+        let cfg = bsf::BsfConfig::with_workers(3).redistribute_on_loss(1);
+        let report = Bsf::new(mc_threaded())
+            .config(cfg)
+            .engine(FlakyThreadedEngine::new(script))
+            .run()
+            .unwrap_or_else(|e| {
+                panic!("redistribute run (kill@{kill_round}) failed: {e}")
+            });
+        assert_eq!(
+            report.param, fresh2.param,
+            "kill@{kill_round}: redistributed result must be bit-identical \
+             to a fresh 2-worker run"
+        );
+        assert_eq!(report.iterations, fresh2.iterations, "kill@{kill_round}");
+        assert_eq!(report.losses, vec![1], "kill@{kill_round}: loss recorded");
+        // All three real worker threads joined cleanly (the partitioned
+        // one was parked and released at teardown).
+        assert_eq!(report.workers.len(), 3, "kill@{kill_round}");
+        let survivor = report.workers.iter().find(|w| w.rank == 2).unwrap();
+        assert!(
+            survivor.reassignments >= 1,
+            "kill@{kill_round}: survivor adopted the re-split"
+        );
+    }
+}
+
+#[test]
+fn threaded_abort_policy_surfaces_the_typed_loss() {
+    let script = FaultScript::new().kill(1, 1);
+    let err = Bsf::new(mc_threaded())
+        .workers(3)
+        .engine(FlakyThreadedEngine::new(script))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::WorkerLost { rank: 1, .. }), "{err}");
+}
+
+#[test]
+fn threaded_restart_from_checkpoint_matches_the_uninterrupted_run() {
+    let baseline = fresh_threaded(mc_threaded(), 3);
+    let mid = baseline.iterations / 2;
+    let script = FaultScript::new().kill(1, mid);
+    let cfg = bsf::BsfConfig::with_workers(3).fault(FaultPolicy::RestartFromCheckpoint);
+    let report = Bsf::new(mc_threaded())
+        .config(cfg)
+        .engine(FlakyThreadedEngine::new(script))
+        .run()
+        .unwrap();
+    // The relaunch resumed at full K from the master's checkpoint; the
+    // order envelope carries the true iteration counter, so the
+    // counter-seeded montecarlo streams continue bit-identically.
+    assert_eq!(report.param, baseline.param);
+    assert_eq!(report.iterations, baseline.iterations);
+    assert_eq!(report.losses, vec![1], "restart recorded the triggering loss");
+}
+
+#[test]
+fn threaded_rejoin_readmits_a_healed_worker_at_an_iteration_boundary() {
+    let baseline = fresh_threaded(mc_threaded(), 3);
+    assert!(baseline.iterations >= 4, "need room for kill+heal");
+    // Partition rank 1 away at round 1, heal it one round later: the
+    // master re-admits it via REJOIN and re-splits back to 3 workers.
+    let script = FaultScript::new().kill(1, 1).heal(1, 2);
+    let cfg = bsf::BsfConfig::with_workers(3).redistribute_on_loss(1);
+    let report = Bsf::new(mc_threaded())
+        .config(cfg)
+        .engine(FlakyThreadedEngine::new(script))
+        .run()
+        .unwrap();
+    // Montecarlo is K-invariant, so the shrink-then-regrow trajectory
+    // still matches the uninterrupted run.
+    assert_eq!(report.param, baseline.param);
+    assert_eq!(report.iterations, baseline.iterations);
+    assert_eq!(report.losses, vec![1], "the loss event stays on record");
+    assert_eq!(report.rejoined, vec![1], "the re-admission is on record too");
+    assert_eq!(report.workers.len(), 3);
+    let rejoiner = report.workers.iter().find(|w| w.rank == 1).unwrap();
+    assert!(rejoiner.reassignments >= 1, "rejoiner re-admitted with a new split");
+    assert!(
+        rejoiner.iterations < baseline.iterations,
+        "rejoiner sat out at least one iteration"
+    );
+}
+
+#[test]
+fn jacobi_kill_before_first_merge_is_bit_identical_for_any_problem() {
+    // Before the first merge no K-dependent association has happened,
+    // so even a float-sum problem must match the fresh (K-1) run bit
+    // for bit when the loss lands at round 0.
+    let (fresh, _) = JacobiProblem::random(40, 1e-12, 11);
+    let fresh2 = Bsf::new(fresh).workers(2).engine(ThreadedEngine).run().unwrap();
+
+    let (p, _) = JacobiProblem::random(40, 1e-12, 11);
+    let script = FaultScript::new().kill(0, 0);
+    let cfg = bsf::BsfConfig::with_workers(3).redistribute_on_loss(1);
+    let report = Bsf::new(p)
+        .config(cfg)
+        .engine(FlakyThreadedEngine::new(script))
+        .run()
+        .unwrap();
+    assert_eq!(report.param, fresh2.param);
+    assert_eq!(report.iterations, fresh2.iterations);
+    assert_eq!(report.losses, vec![0]);
+}
+
+#[test]
+fn threaded_redistribute_budget_exhaustion_aborts_typed() {
+    // Two kills, budget one: the second loss must abort the run.
+    let script = FaultScript::new().kill(0, 1).kill(2, 2);
+    let cfg = bsf::BsfConfig::with_workers(3).redistribute_on_loss(1);
+    let err = Bsf::new(mc_threaded())
+        .config(cfg)
+        .engine(FlakyThreadedEngine::new(script))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::WorkerLost { .. }), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Simulated engine × FaultPlan
+// ---------------------------------------------------------------------
+
+#[test]
+fn sim_fault_plan_redistribute_matches_fresh_k_minus_1() {
+    let sim = || SimulatedEngine::with_config(SimConfig::new(ClusterProfile::ideal()));
+    let fresh2 = Bsf::new(mc_threaded()).workers(2).engine(sim()).run().unwrap();
+    let n_iters = fresh2.iterations;
+    assert!(n_iters >= 3);
+
+    for kill_iter in [0, n_iters / 2, n_iters - 1] {
+        let plan = FaultPlan::new().kill(1, kill_iter);
+        let faulted = SimulatedEngine::with_config(
+            SimConfig::new(ClusterProfile::ideal()).fault(plan),
+        );
+        let cfg = bsf::BsfConfig::with_workers(3).redistribute_on_loss(1);
+        let report =
+            Bsf::new(mc_threaded()).config(cfg).engine(faulted).run().unwrap();
+        assert_eq!(report.param, fresh2.param, "kill@{kill_iter}");
+        assert_eq!(report.iterations, fresh2.iterations, "kill@{kill_iter}");
+        assert_eq!(report.losses, vec![1], "kill@{kill_iter}");
+        // The recovery bill was charged: the wasted round + the replan
+        // control messages make the faulted run strictly longer in
+        // virtual time than an unfaulted 3-worker run.
+        assert!(report.elapsed > 0.0);
+    }
+}
+
+#[test]
+fn sim_fault_plan_abort_and_restart_policies() {
+    let baseline = {
+        let sim = SimulatedEngine::with_config(SimConfig::new(ClusterProfile::ideal()));
+        Bsf::new(mc_threaded()).workers(3).engine(sim).run().unwrap()
+    };
+    let mid = baseline.iterations / 2;
+
+    // Abort: the kill surfaces typed.
+    let aborted = SimulatedEngine::with_config(
+        SimConfig::new(ClusterProfile::ideal()).fault(FaultPlan::new().kill(2, mid)),
+    );
+    let err = Bsf::new(mc_threaded()).workers(3).engine(aborted).run().unwrap_err();
+    assert!(matches!(err, BsfError::WorkerLost { rank: 2, .. }), "{err}");
+
+    // RestartFromCheckpoint: the run relaunches at full K from the
+    // master's checkpoint and finishes bit-identically to the
+    // uninterrupted run — the workers' `SkelVars::iter_counter` resumed
+    // at the true count (montecarlo's counter-seeded streams would
+    // diverge otherwise). The FaultPlan's fired set is shared across
+    // relaunch clones, so the kill does not re-fire.
+    let restarted = SimulatedEngine::with_config(
+        SimConfig::new(ClusterProfile::ideal()).fault(FaultPlan::new().kill(2, mid)),
+    );
+    let cfg = bsf::BsfConfig::with_workers(3).fault(FaultPolicy::RestartFromCheckpoint);
+    let report = Bsf::new(mc_threaded()).config(cfg).engine(restarted).run().unwrap();
+    assert_eq!(report.param, baseline.param);
+    assert_eq!(report.iterations, baseline.iterations);
+    assert_eq!(report.losses, vec![2]);
+}
+
+// ---------------------------------------------------------------------
+// Process engine × real child-process deaths
+// ---------------------------------------------------------------------
+
+fn process_engine(kill: Option<(usize, usize)>) -> ProcessEngine {
+    ProcessEngine::spawn_args(mc_worker_argv(kill)).program(BSF_BIN)
+}
+
+#[test]
+fn process_redistribute_survives_a_real_worker_death_mid_run() {
+    let fresh2 = fresh_threaded(mc_process(), 2);
+    let baseline3 = fresh_threaded(mc_process(), 3);
+    let mid = baseline3.iterations / 2;
+    assert!(mid >= 1, "need a mid-run kill point");
+
+    let cfg = bsf::BsfConfig::with_workers(3).redistribute_on_loss(1);
+    let report = Bsf::new(mc_process())
+        .config(cfg)
+        .engine(process_engine(Some((1, mid))))
+        .run()
+        .unwrap();
+    assert_eq!(report.engine, "process");
+    assert_eq!(
+        report.param, fresh2.param,
+        "redistributed process run must be bit-identical to a fresh \
+         2-worker run"
+    );
+    assert_eq!(report.iterations, fresh2.iterations);
+    assert_eq!(report.losses, vec![1], "the loss is on record");
+    // Only the survivors ship end-of-run reports.
+    assert_eq!(report.workers.len(), 2);
+    assert!(report.workers.iter().all(|w| w.rank != 1));
+    assert!(report.workers.iter().any(|w| w.reassignments >= 1));
+}
+
+#[test]
+fn process_abort_policy_fails_typed_on_a_real_death() {
+    let err = Bsf::new(mc_process())
+        .workers(3)
+        .engine(process_engine(Some((1, 1))))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::WorkerLost { rank: 1, .. }), "{err}");
+}
+
+#[test]
+fn process_restart_from_checkpoint_respawns_and_completes() {
+    let baseline3 = fresh_threaded(mc_process(), 3);
+    let n = baseline3.iterations;
+    // Budget more than half the run: generation 2's clone of the killed
+    // worker (same argv, fresh budget) survives to the end.
+    let budget = n / 2 + 1;
+    let cfg = bsf::BsfConfig::with_workers(3).fault(FaultPolicy::RestartFromCheckpoint);
+    let report = Bsf::new(mc_process())
+        .config(cfg)
+        .engine(process_engine(Some((1, budget))))
+        .run()
+        .unwrap();
+    assert_eq!(
+        report.param, baseline3.param,
+        "restarted run resumes at full K bit-identically"
+    );
+    assert_eq!(report.iterations, baseline3.iterations);
+    assert_eq!(report.losses, vec![1]);
+    assert_eq!(report.workers.len(), 3, "generation 2 ran at full strength");
+}
+
+// ---------------------------------------------------------------------
+// Persistent cluster × real worker death: shrink, don't poison
+// ---------------------------------------------------------------------
+
+#[test]
+fn cluster_shrinks_on_loss_and_stays_usable_for_a_subsequent_run() {
+    let fresh2 = fresh_threaded(mc_process(), 2);
+
+    let cluster = Cluster::spawn(3, mc_worker_argv(Some((2, 1))))
+        .program(BSF_BIN)
+        .start(&mc_process())
+        .unwrap();
+    assert_eq!(cluster.alive_workers(), Some(3));
+
+    // Run 1: rank 2 dies after one fold; the run redistributes and
+    // completes identically to a fresh 2-worker run.
+    let cfg = bsf::BsfConfig::with_workers(3).redistribute_on_loss(1);
+    let r1 = Bsf::new(mc_process())
+        .config(cfg)
+        .engine(cluster.engine())
+        .run()
+        .unwrap();
+    assert_eq!(r1.engine, "cluster");
+    assert_eq!(r1.param, fresh2.param);
+    assert_eq!(r1.losses, vec![2]);
+    assert_eq!(r1.workers.len(), 2, "survivor reports only");
+
+    // The acceptance shape: the pool is SHRUNK, not poisoned — a
+    // subsequent run at K-1 reuses the surviving processes.
+    assert_eq!(cluster.alive_workers(), Some(2), "pool shrunk to survivors");
+    let r2 = Bsf::new(mc_process())
+        .workers(2)
+        .engine(cluster.engine())
+        .run()
+        .unwrap();
+    assert_eq!(r2.param, fresh2.param, "shrunk cluster matches fresh K-1");
+    assert_eq!(r2.losses, Vec::<usize>::new());
+    assert_eq!(r2.workers.len(), 2);
+    for w2 in &r2.workers {
+        let w1 = r1.workers.iter().find(|w| w.rank == w2.rank).unwrap();
+        assert_eq!(w1.pid, w2.pid, "run 2 reused run 1's surviving processes");
+    }
+
+    // Wrong K on a shrunk pool is a typed config error naming the facts.
+    let err = Bsf::new(mc_process())
+        .workers(3)
+        .engine(cluster.engine())
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+    assert!(err.to_string().contains("usable"), "{err}");
+
+    // Teardown tolerates the long-dead rank 2 child.
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn cluster_abort_policy_poisons_the_pool() {
+    let cluster = Cluster::spawn(2, mc_worker_argv(Some((0, 1))))
+        .program(BSF_BIN)
+        .start(&mc_process())
+        .unwrap();
+    let err = Bsf::new(mc_process())
+        .workers(2)
+        .engine(cluster.engine())
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
+    // An unrecovered loss tears the core down: no further runs, and
+    // shutdown reports the teardown.
+    let err = Bsf::new(mc_process())
+        .workers(2)
+        .engine(cluster.engine())
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+    assert!(cluster.alive_workers().is_none(), "core gone");
+    assert!(cluster.shutdown().is_err(), "nothing left to shut down");
+}
+
+#[test]
+fn cluster_restart_policy_cannot_respawn_and_fails_typed() {
+    // A persistent pool has no spawner to re-create its lost member:
+    // the restart relaunch finds the torn-down cluster and fails with a
+    // typed config error (use Redistribute on clusters instead).
+    let cluster = Cluster::spawn(2, mc_worker_argv(Some((0, 1))))
+        .program(BSF_BIN)
+        .start(&mc_process())
+        .unwrap();
+    let cfg = bsf::BsfConfig::with_workers(2).fault(FaultPolicy::RestartFromCheckpoint);
+    let err = Bsf::new(mc_process())
+        .config(cfg)
+        .engine(cluster.engine())
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, BsfError::Config(_)), "{err}");
+    let _ = cluster; // dropped: best-effort teardown of the survivors
+}
+
+// ---------------------------------------------------------------------
+// Mixed: losses recorded on the unified report across engines
+// ---------------------------------------------------------------------
+
+#[test]
+fn loss_free_runs_report_no_losses() {
+    let r = fresh_threaded(mc_threaded(), 3);
+    assert!(r.losses.is_empty());
+    assert!(r.workers.iter().all(|w| w.reassignments == 0));
+}

@@ -127,12 +127,12 @@ fn killed_worker_process_yields_typed_error_not_a_hang() {
     child.kill().unwrap();
     child.wait().unwrap();
 
-    // The gather for the next iteration must surface a typed transport
-    // error (EOF from the dead worker), never block forever.
+    // The gather for the next iteration must surface the typed per-rank
+    // loss (EOF from the dead worker), never block forever.
     let err = master.recv(0, Tag::Fold).unwrap_err();
-    assert!(matches!(err, BsfError::Transport(_)), "{err}");
+    assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
     let err = master.recv_any(Tag::Fold).unwrap_err();
-    assert!(matches!(err, BsfError::Transport(_)), "{err}");
+    assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
 }
 
 #[test]

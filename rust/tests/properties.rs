@@ -6,11 +6,49 @@ use bsf::costmodel::{ClusterProfile, CostParams};
 use bsf::problems::jacobi::JacobiProblem;
 use bsf::problems::lpp::LppProblem;
 use bsf::simcluster::SimConfig;
+use bsf::skeleton::fault::redistribute;
 use bsf::skeleton::reduce::{fold_extended, merge_folds};
 use bsf::skeleton::split::all_ranges;
 use bsf::skeleton::{Bsf, SimulatedEngine, ThreadedEngine};
 use bsf::util::codec::Codec;
 use bsf::util::qcheck::{qcheck, size_in};
+
+#[test]
+fn prop_redistributed_assignments_cover_exactly_once_in_order() {
+    // Fault-recovery re-splitting: for arbitrary (K, loss set, list
+    // length), the survivors' assignments cover the full list exactly
+    // once (no gap, no overlap), merge order (logical rank) follows
+    // survivor order, and the plan equals the canonical block split of
+    // a fresh survivor-count run — the invariant that makes recovered
+    // results identical to a fresh (K - losses)-worker run.
+    qcheck(200, |rng| {
+        let len = size_in(rng, 0, 400);
+        let k = size_in(rng, 1, 24);
+        let losses = size_in(rng, 0, k - 1);
+        // Knock out `losses` distinct ranks deterministically from rng.
+        let mut alive: Vec<usize> = (0..k).collect();
+        for _ in 0..losses {
+            let idx = size_in(rng, 0, alive.len() - 1);
+            alive.remove(idx);
+        }
+        let plan = redistribute(len, &alive);
+        assert_eq!(plan.len(), alive.len());
+        let fresh = all_ranges(len, alive.len());
+        let mut next = 0usize;
+        for (i, a) in plan.iter().enumerate() {
+            assert_eq!(a.logical, i, "merge order follows survivor order");
+            assert_eq!(a.physical, alive[i], "ascending physical ranks");
+            assert_eq!(a.offset, next, "no gap, no overlap");
+            assert_eq!(
+                (a.offset, a.length),
+                fresh[i],
+                "plan == canonical fresh split of the survivor count"
+            );
+            next = a.offset + a.length;
+        }
+        assert_eq!(next, len, "full coverage, exactly once");
+    });
+}
 
 #[test]
 fn prop_skeleton_result_is_k_invariant_jacobi() {
