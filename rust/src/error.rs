@@ -58,6 +58,10 @@ pub enum BsfError {
     /// case in a comparison, or a regression outside tolerance (the CI
     /// `bench-regression` gate).
     Bench(String),
+    /// The model checker (`bsf verify`) found protocol violations —
+    /// deadlocks, misrouted tags, orphaned messages or
+    /// schedule-dependent results.
+    Verify(String),
 }
 
 impl BsfError {
@@ -97,6 +101,10 @@ impl BsfError {
         BsfError::Bench(msg.into())
     }
 
+    pub fn verify(msg: impl Into<String>) -> Self {
+        BsfError::Verify(msg.into())
+    }
+
     /// Conventional process exit code for this error (CLI use).
     pub fn exit_code(&self) -> i32 {
         match self {
@@ -128,6 +136,7 @@ impl fmt::Display for BsfError {
             }
             BsfError::Usage(msg) => write!(f, "usage error: {msg}"),
             BsfError::Bench(msg) => write!(f, "bench error: {msg}"),
+            BsfError::Verify(msg) => write!(f, "verification failed: {msg}"),
         }
     }
 }

@@ -61,6 +61,10 @@
 //! * [`transport`] — an MPI-like message-passing substrate over OS
 //!   threads *and* over framed TCP between real OS processes (the
 //!   cluster-interconnect substitution; see DESIGN.md §2).
+//! * [`verify`] — a bounded model checker for that protocol: the real
+//!   master/worker state machines run over a scheduler-controlled
+//!   transport and every bounded message-delivery interleaving is
+//!   explored and checked (`bsf verify`; see README "Verification").
 //! * [`simcluster`] — a virtual-time cluster simulator that scales the
 //!   worker count far beyond physical cores to reproduce the paper's
 //!   speedup curves.
@@ -94,6 +98,7 @@ pub mod simcluster;
 pub mod skeleton;
 pub mod transport;
 pub mod util;
+pub mod verify;
 
 pub use error::{BsfError, BsfResult};
 pub use skeleton::{

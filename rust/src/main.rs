@@ -16,6 +16,10 @@
 //! * `sweep <problem>`   — speedup curve over K: model vs simulation
 //! * `predict <problem>` — calibrate + print the BSF model parameters and
 //!                          the predicted scalability boundary
+//! * `verify`            — bounded model checking of the message protocol:
+//!                          explore every schedule of a small run, check
+//!                          deadlock-freedom, tag routing, orphan-freedom
+//!                          and schedule determinism
 //! * `artifacts`         — list the AOT XLA artifacts
 //!
 //! Problems: `jacobi`, `jacobi-map`, `cimmino`, `gravity`, `montecarlo`,
@@ -51,9 +55,10 @@ use bsf::skeleton::{
 };
 use bsf::util::cli::ArgMap;
 use bsf::util::faultsim::run_flaky_process_worker;
+use bsf::verify::{run_verify, Mutation, VerifyConfig};
 
 const USAGE: &str = "\
-usage: bsf <run|worker|sim|sweep|predict|bench|artifacts> [problem] [options]
+usage: bsf <run|worker|sim|sweep|predict|bench|verify|artifacts> [problem] [options]
 
 problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | lpp | apex
 
@@ -114,7 +119,22 @@ options by subcommand:
     --out FILE         write BENCH_<label> JSON to FILE
     --baseline FILE    compare against FILE; exit 1 on iteration drift,
                        missing cases, or wall-clock outside tolerance
-    --tolerance X      relative wall-clock band (default 0.25 = ±25%)";
+    --tolerance X      relative wall-clock band (default 0.25 = ±25%)
+  verify (bounded model checking of the message protocol; see README
+          'Verification'):
+    --problem P        jacobi | cimmino  (default jacobi; the model
+                       problem must be small and split-invariant)
+    --workers K        model worker count (default 2; the schedule
+                       space is exponential in K — keep it small)
+    --n N              model problem size (default 12)
+    --seed S / --eps E instance seed / stop threshold (default 1e-30 so
+                       no schedule converges before the cap)
+    --max-iter I       model run length (default 10)
+    --max-schedules M  exploration ceiling (default 20000)
+    --no-faults        skip the fault-injection schedules
+    --mutate M         seed a known bug to prove the checker's teeth:
+                       duplicate-fold (worker 0 double-sends a fold;
+                       verify must then FAIL)";
 
 /// Options shared by run/sim.
 struct Common {
@@ -712,6 +732,86 @@ fn cmd_bench(args: &ArgMap) -> Result<(), BsfError> {
     Ok(())
 }
 
+const VERIFY_OPTS: &[&str] = &[
+    "problem", "workers", "k", "n", "seed", "eps", "max-iter", "max-schedules",
+    "no-faults", "mutate",
+];
+
+/// `bsf verify`: exhaustive schedule exploration of the skeleton's
+/// message protocol on a small model problem (see `bsf::verify`).
+fn cmd_verify(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(VERIFY_OPTS)?;
+    let workers = if args.get("workers").is_some() {
+        args.usize_or("workers", 2)?
+    } else {
+        args.usize_or("k", 2)?
+    };
+    if workers == 0 {
+        return Err(BsfError::usage("verify needs at least one worker"));
+    }
+    let n = args.usize_or("n", 12)?;
+    let seed = args.u64_or("seed", 7)?;
+    // A threshold no schedule can reach before the iteration cap: every
+    // schedule then runs the same depth and compares byte-for-byte.
+    let eps = args.f64_or("eps", 1e-30)?;
+    let mutation = match args.get("mutate") {
+        None => Mutation::None,
+        Some("duplicate-fold") => Mutation::DuplicateFold,
+        Some(other) => {
+            return Err(BsfError::usage(format!(
+                "unknown --mutate {other:?} (duplicate-fold)"
+            )))
+        }
+    };
+    let vcfg = VerifyConfig {
+        workers,
+        max_iter: args.usize_or("max-iter", 10)?,
+        max_schedules: args.usize_or("max-schedules", 20_000)?,
+        faults: !args.flag("no-faults"),
+        mutation,
+    };
+    let name = args.str_or("problem", "jacobi");
+    let report = match name {
+        "jacobi" => run_verify(|| JacobiProblem::random(n, eps, seed).0, &vcfg),
+        "cimmino" => run_verify(|| CimminoProblem::random(n, n, eps, seed).0, &vcfg),
+        other => {
+            return Err(BsfError::usage(format!("unknown problem {other:?} (verify)")))
+        }
+    };
+
+    println!(
+        "verify {name}: {} schedule(s) explored ({} fault-free, {} fault-injected){}",
+        report.schedules(),
+        report.base_schedules,
+        report.fault_schedules,
+        if report.truncated { " [truncated at --max-schedules]" } else { "" },
+    );
+    println!(
+        "  reference: {} workers, {} iterations; split-invariant: {}",
+        report.workers, report.reference_iterations, report.split_invariant,
+    );
+    println!(
+        "  losses injected: abort={} redistribute={} restart={}",
+        report.abort_losses, report.redistribute_losses, report.restart_losses,
+    );
+    if report.ok() {
+        println!(
+            "  OK: no deadlock, no misrouted tag, no orphaned message, \
+             bit-identical results across all schedules"
+        );
+        Ok(())
+    } else {
+        for v in &report.violations {
+            eprintln!("  violation: {v}");
+        }
+        Err(BsfError::verify(format!(
+            "{} violation(s) across {} schedule(s)",
+            report.violations.len(),
+            report.schedules(),
+        )))
+    }
+}
+
 fn cmd_artifacts() -> Result<(), BsfError> {
     let rt = XlaRuntime::open_default()?;
     println!(
@@ -743,6 +843,7 @@ fn dispatch(args: &ArgMap) -> Result<(), BsfError> {
         Some("sweep") => cmd_sweep(args),
         Some("predict") => cmd_predict(args),
         Some("bench") => cmd_bench(args),
+        Some("verify") => cmd_verify(args),
         Some("artifacts") => cmd_artifacts(),
         Some("help") | None => {
             println!("{USAGE}");

@@ -90,12 +90,9 @@ fn cluster_report<Param>(
     }
 }
 
-/// Master → worker: reset for one more run (the outer-loop counterpart
-/// of the per-run order messages).
-pub const TAG_NEW_RUN: Tag = Tag::User(0x4E52); // "NR"
-
-/// Master → worker: tear the cluster down; the worker process exits.
-pub const TAG_SHUTDOWN: Tag = Tag::User(0x5344); // "SD"
+// Defined in the central `transport::tags` registry; re-exported here
+// so historical import paths keep working.
+pub use crate::transport::tags::{TAG_NEW_RUN, TAG_SHUTDOWN};
 
 /// How long the master waits for all K workers to connect + handshake.
 const DEFAULT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
@@ -426,7 +423,9 @@ impl<P: BsfProblem> ClusterDriver<P> {
     /// were just released, so the reports are in flight before they
     /// idle again). Lost ranks have none to ship.
     fn collect_reports(&mut self) -> Result<Vec<WorkerReport>, BsfError> {
-        let core = self.core.as_ref().expect("cluster core present until parked");
+        let core = self.core.as_ref().ok_or_else(|| {
+            BsfError::config("cluster run already parked or torn down; no reports to drain")
+        })?;
         let alive: Vec<usize> = self.state.alive_ranks().to_vec();
         let mut workers = Vec::with_capacity(alive.len());
         for &w in &alive {
@@ -467,9 +466,14 @@ impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
                 "driver already stopped (finish() it instead of stepping again)",
             ));
         }
-        let result = {
-            let core = self.core.as_ref().expect("guarded above");
-            self.state.step_comm(&*self.problem, &core.ep)
+        let result = match self.core.as_ref() {
+            Some(core) => self.state.step_comm(&*self.problem, &core.ep),
+            // unreachable (guarded above), but stay typed rather than panic
+            None => {
+                return Err(BsfError::config(
+                    "driver already stopped (finish() it instead of stepping again)",
+                ))
+            }
         };
         if let Err(BsfError::Cancelled) = &result {
             // The workers were released with the exit flag; they ship
@@ -478,14 +482,14 @@ impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
             // the pool back — cancellation must not cost the cluster.
             match self.collect_reports() {
                 Ok(workers) => {
-                    let volume = {
-                        let core = self.core.as_ref().expect("present: drain succeeded");
-                        core.ep.stats().volume().since(&self.base_volume)
-                    };
-                    // Keep the partial run's data so finish() can still
-                    // report it after the pool is handed back.
-                    self.parked = Some((workers, volume));
-                    self.park();
+                    // The drain succeeded, so the core is still present.
+                    if let Some(core) = self.core.as_ref() {
+                        let volume = core.ep.stats().volume().since(&self.base_volume);
+                        // Keep the partial run's data so finish() can
+                        // still report it after the pool is handed back.
+                        self.parked = Some((workers, volume));
+                        self.park();
+                    }
                 }
                 Err(_) => {
                     // A worker died mid-drain. Tear down NOW: a partial
@@ -521,8 +525,9 @@ impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
         // Early finish: release the workers between iterations — they
         // report and go idle, exactly like a normal stop.
         if !self.state.done() {
-            let core = self.core.as_ref().expect("checked above");
-            self.state.release(&core.ep);
+            if let Some(core) = self.core.as_ref() {
+                self.state.release(&core.ep);
+            }
         }
         let workers = match self.collect_reports() {
             Ok(workers) => workers,
@@ -534,11 +539,11 @@ impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
                 return Err(e);
             }
         };
-        let stats = {
-            let core = self.core.as_ref().expect("cluster core present until parked");
-            core.ep.stats()
+        // The drain above succeeded, so the core is still present.
+        let volume = match self.core.as_ref() {
+            Some(core) => core.ep.stats().volume().since(&self.base_volume),
+            None => VolumeByTag::default(),
         };
-        let volume = stats.volume().since(&self.base_volume);
         self.park();
 
         Ok(cluster_report(self.state.outcome(), workers, volume))
@@ -557,8 +562,7 @@ impl<P: BsfProblem> Drop for ClusterDriver<P> {
         if self.core.is_none() {
             return; // parked (finish/cancel) or already torn down
         }
-        {
-            let core = self.core.as_ref().expect("checked above");
+        if let Some(core) = self.core.as_ref() {
             self.state.release(&core.ep); // no-op after a normal stop
         }
         if self.collect_reports().is_ok() {

@@ -51,17 +51,10 @@
 //! `Redistribute` there.
 
 use crate::skeleton::split::all_ranges;
-use crate::transport::Tag;
 
-/// Master → worker: a new sublist assignment — `(logical rank,
-/// effective K, offset, length)` — sent between iterations when the
-/// worker pool shrinks (loss) or grows back (rejoin), and at run start
-/// on a shrunk persistent cluster.
-pub const TAG_REASSIGN: Tag = Tag::User(0x5241); // "RA"
-
-/// Worker → master: a previously lost worker asking to be re-admitted.
-/// Honored at iteration boundaries under [`FaultPolicy::Redistribute`].
-pub const TAG_REJOIN: Tag = Tag::User(0x524A); // "RJ"
+// Defined in the central `transport::tags` registry; re-exported here
+// so historical import paths keep working.
+pub use crate::transport::tags::{TAG_REASSIGN, TAG_REJOIN};
 
 /// What the master does when a worker becomes unreachable mid-run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

@@ -45,13 +45,12 @@ use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::runner::validate_run;
 use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
 use crate::transport::tcp::{accept_workers, connect_worker, ProblemSig, TcpEndpoint};
-use crate::transport::{Communicator, Tag};
+use crate::transport::tags::TAG_REJOIN;
+use crate::transport::{debug_assert_drained, Communicator};
 
-/// Tag of the end-of-run summary each worker process sends back (rank,
-/// iterations, map seconds, sublist length, hybrid-tier timing, pid) so
-/// the unified report keeps per-worker detail across the process
-/// boundary.
-pub const TAG_WORKER_REPORT: Tag = Tag::User(0x5752); // "WR"
+// Defined in the central `transport::tags` registry; re-exported here
+// so historical import paths keep working.
+pub use crate::transport::tags::TAG_WORKER_REPORT;
 
 /// How long the master waits for all K workers to connect + handshake.
 const DEFAULT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
@@ -238,8 +237,12 @@ struct ProcessDriver<P: BsfProblem> {
 }
 
 impl<P: BsfProblem> ProcessDriver<P> {
-    fn comm(&self) -> &TcpEndpoint {
-        self.ep.as_ref().expect("endpoint present until finish")
+    /// The endpoint, or a typed error after `finish()` consumed it (a
+    /// state bug, but one that must not panic a run).
+    fn comm(&self) -> Result<&TcpEndpoint, BsfError> {
+        self.ep.as_ref().ok_or_else(|| {
+            BsfError::config("process driver endpoint already released by finish()")
+        })
     }
 }
 
@@ -249,7 +252,9 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
     }
 
     fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
-        let ep = self.ep.as_ref().expect("endpoint present until finish");
+        let ep = self.ep.as_ref().ok_or_else(|| {
+            BsfError::config("process driver endpoint already released by finish()")
+        })?;
         self.state.step_comm(&*self.problem, ep)
     }
 
@@ -262,8 +267,9 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
         // an exit order at the top of their loop, ship their report and
         // exit on their own).
         if !self.state.done() {
-            let ep = self.ep.as_ref().expect("endpoint present until finish");
-            self.state.release(ep);
+            if let Some(ep) = self.ep.as_ref() {
+                self.state.release(ep);
+            }
         }
 
         // Collect each *surviving* worker's end-of-run summary (sent
@@ -272,12 +278,17 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
         let alive: Vec<usize> = self.state.alive_ranks().to_vec();
         let mut workers = Vec::with_capacity(alive.len());
         {
-            let ep = self.comm();
+            let ep = self.comm()?;
             for &w in &alive {
                 let m = ep.recv(w, TAG_WORKER_REPORT)?;
                 workers.push(WorkerReport::from_wire(&m.payload).map_err(|e| {
                     BsfError::transport(format!("worker {w}: {e}"))
                 })?);
+            }
+            // A loss-free run ends with every master-bound message
+            // consumed (a late REJOIN the loop never polled is benign).
+            if self.state.losses().is_empty() {
+                debug_assert_drained(ep, &[TAG_REJOIN], "process master finish");
             }
         }
         workers.sort_by_key(|w| w.rank);
@@ -287,7 +298,9 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
         // for the children — killing any that outlive the reap window.
         // Lost ranks died mid-run, so their non-zero exit status is
         // expected, not an error.
-        let ep = self.ep.take().expect("endpoint present until finish");
+        let ep = self.ep.take().ok_or_else(|| {
+            BsfError::config("process driver endpoint already released by finish()")
+        })?;
         let stats = ep.stats();
         drop(ep);
         let losses: Vec<usize> = self.state.losses().to_vec();

@@ -20,7 +20,10 @@ use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
 use crate::skeleton::workflow::validate_job_count;
-use crate::transport::{build_thread_transport, Communicator, Tag, ThreadEndpoint};
+use crate::transport::tags::TAG_REJOIN;
+use crate::transport::{
+    build_thread_transport, debug_assert_drained, Communicator, Tag, ThreadEndpoint,
+};
 use crate::util::codec::Codec;
 
 /// Shared up-front validation all engines run before touching threads.
@@ -174,6 +177,15 @@ impl<P: BsfProblem> Driver<P> for ThreadedDriver<P> {
             return Err(e);
         }
         workers.sort_by_key(|w| w.rank);
+
+        // A clean, loss-free completion consumes every message addressed
+        // to the master; leftovers mean a protocol bug (the PR 5
+        // duplicate-fold class). A late REJOIN the loop never got to
+        // poll is benign; torn/faulted runs legitimately strand
+        // in-flight folds and are exempt.
+        if self.state.done() && self.state.losses().is_empty() {
+            debug_assert_drained(&*self.ep, &[TAG_REJOIN], "master finish");
+        }
 
         let outcome = self.state.outcome();
         Ok(RunReport {

@@ -33,7 +33,8 @@ use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::reduce::{fold_extended, ExtendedFold};
 use crate::skeleton::split::sublist_range;
 use crate::skeleton::variables::SkelVars;
-use crate::transport::{Communicator, Tag};
+use crate::transport::tags::{TAG_NEW_RUN, TAG_SHUTDOWN};
+use crate::transport::{debug_assert_drained, Communicator, Tag};
 use crate::util::codec::Codec;
 
 /// Per-worker run summary (used by cost-model calibration, the unified
@@ -212,6 +213,11 @@ pub fn run_worker_with_pool<P: BsfProblem>(
         let m = comm.recv_tags(Some(master), &[Tag::Order, Tag::Exit, TAG_REASSIGN])?;
         if m.tag == Tag::Exit {
             if bool::from_bytes(&m.payload) {
+                // The worker consumes master→worker traffic in FIFO
+                // order, so at exit only *post-run* persistent-cluster
+                // traffic (a NEWRUN/SHUTDOWN queued behind the exit
+                // flag) may legitimately remain buffered.
+                debug_assert_drained(comm, &[TAG_NEW_RUN, TAG_SHUTDOWN], "worker exit");
                 return Ok(report(
                     iterations,
                     map_seconds,
@@ -259,6 +265,7 @@ pub fn run_worker_with_pool<P: BsfProblem>(
         // Step 10: RecvFromMaster(exit).
         let exit = bool::from_bytes(&comm.recv(master, Tag::Exit)?.payload);
         if exit {
+            debug_assert_drained(comm, &[TAG_NEW_RUN, TAG_SHUTDOWN], "worker exit");
             return Ok(report(
                 iterations,
                 map_seconds,

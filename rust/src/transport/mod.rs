@@ -22,6 +22,7 @@
 //! Ranks follow the paper's `BC_MpiRun` convention: workers are
 //! `0..K-1`, the **master is rank K** (`MPI_Comm_size - 1`).
 
+pub mod tags;
 pub mod tcp;
 mod thread;
 
@@ -111,6 +112,37 @@ pub trait Communicator: Send {
     }
     /// Shared counters.
     fn stats(&self) -> Arc<TransportStats>;
+    /// `(from, tag)` of every message still sitting in this endpoint's
+    /// mailbox (pending buffer + anything already delivered but not yet
+    /// received). Used by the end-of-run drain assertion: a clean run
+    /// consumes every message addressed to it, so leftovers mean a
+    /// protocol bug (e.g. a duplicated fold). Transports without
+    /// introspection report nothing.
+    fn undrained(&self) -> Vec<(usize, Tag)> {
+        Vec::new()
+    }
+}
+
+/// Debug/test-build assertion that `comm`'s mailbox is empty at the end
+/// of a run, modulo `allow`ed tags (e.g. a late `TAG_REJOIN` the master
+/// never got to poll, or a queued `TAG_NEW_RUN` behind a worker's exit
+/// flag). Compiled to a no-op in release builds, like `debug_assert!`.
+pub fn debug_assert_drained(comm: &dyn Communicator, allow: &[Tag], context: &str) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    let leftovers: Vec<(usize, Tag)> = comm
+        .undrained()
+        .into_iter()
+        .filter(|(_, tag)| !allow.contains(tag))
+        .collect();
+    assert!(
+        leftovers.is_empty(),
+        "rank {}: {context}: {} message(s) left undrained at run end \
+         (duplicate or desynchronized sender?): {leftovers:?}",
+        comm.rank(),
+        leftovers.len(),
+    );
 }
 
 /// One tag's message/byte counter pair.

@@ -1,0 +1,183 @@
+//! Central registry of every protocol tag the skeleton speaks.
+//!
+//! The four core [`Tag`] variants (Order/Fold/Exit/Abort) come from the
+//! paper's Algorithm 2; the five `Tag::User` magics grew out of the
+//! persistent-cluster, process-engine and fault-tolerance extensions and
+//! used to be scattered across `cluster.rs`, `process.rs` and
+//! `fault.rs`. They are defined *here* — the old paths re-export them —
+//! so one table ([`PROTOCOL`]) can state, for every tag, who sends it,
+//! who receives it and what the payload is. `bsf-lint` parses this file
+//! and the model checker ([`crate::verify`]) uses [`receiver`] to flag
+//! any message delivered to a role that never receives its tag.
+
+use super::Tag;
+
+/// Master → worker: reset for one more run on a persistent cluster (the
+/// outer-loop counterpart of the per-run order messages). Payload: the
+/// run's `BsfConfig` knobs + problem signature.
+pub const TAG_NEW_RUN: Tag = Tag::User(0x4E52); // "NR"
+
+/// Master → worker: tear the persistent cluster down; the worker
+/// process exits. Payload: empty.
+pub const TAG_SHUTDOWN: Tag = Tag::User(0x5344); // "SD"
+
+/// Worker → master: the end-of-run summary each worker process sends
+/// back (rank, iterations, map seconds, sublist length, hybrid-tier
+/// timing, pid, reassignments) so the unified report keeps per-worker
+/// detail across the process boundary. Payload: 9×8-byte
+/// `WorkerReport` wire encoding.
+pub const TAG_WORKER_REPORT: Tag = Tag::User(0x5752); // "WR"
+
+/// Master → worker: a new sublist assignment — `(logical rank,
+/// effective K, offset, length)` — sent between iterations when the
+/// worker pool shrinks (loss) or grows back (rejoin), and at run start
+/// on a shrunk persistent cluster.
+pub const TAG_REASSIGN: Tag = Tag::User(0x5241); // "RA"
+
+/// Worker → master: a previously lost worker asking to be re-admitted.
+/// Honored at iteration boundaries under
+/// [`FaultPolicy::Redistribute`](crate::skeleton::fault::FaultPolicy::Redistribute).
+/// Payload: empty.
+pub const TAG_REJOIN: Tag = Tag::User(0x524A); // "RJ"
+
+/// Which side of the star topology an endpoint plays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Rank `K` (= `size - 1`), the gather/broadcast hub.
+    Master,
+    /// Ranks `0..K`, the map/local-reduce executors.
+    Worker,
+}
+
+/// One row of the protocol table: a tag and its wire contract.
+#[derive(Debug, Clone, Copy)]
+pub struct TagSpec {
+    pub tag: Tag,
+    /// Stable name, as used in docs and lint output.
+    pub name: &'static str,
+    pub sender: Role,
+    pub receiver: Role,
+    /// Human description of the payload encoding.
+    pub payload: &'static str,
+}
+
+/// Every tag the skeleton sends, with sender/receiver roles. The BSF
+/// topology is a star, so a single (sender, receiver) pair per tag is
+/// exact: no tag travels in both directions.
+pub const PROTOCOL: &[TagSpec] = &[
+    TagSpec {
+        tag: Tag::Order,
+        name: "ORDER",
+        sender: Role::Master,
+        receiver: Role::Worker,
+        payload: "(job: u64, iter: u64, param: P::Param)",
+    },
+    TagSpec {
+        tag: Tag::Fold,
+        name: "FOLD",
+        sender: Role::Worker,
+        receiver: Role::Master,
+        payload: "(value: P::ReduceElem, counter: u64)",
+    },
+    TagSpec {
+        tag: Tag::Exit,
+        name: "EXIT",
+        sender: Role::Master,
+        receiver: Role::Worker,
+        payload: "exit flag: bool (1 byte)",
+    },
+    TagSpec {
+        tag: Tag::Abort,
+        name: "ABORT",
+        sender: Role::Worker,
+        receiver: Role::Master,
+        payload: "panic message: Vec<u8> (UTF-8, lossy)",
+    },
+    TagSpec {
+        tag: TAG_NEW_RUN,
+        name: "TAG_NEW_RUN",
+        sender: Role::Master,
+        receiver: Role::Worker,
+        payload: "run config + problem signature",
+    },
+    TagSpec {
+        tag: TAG_SHUTDOWN,
+        name: "TAG_SHUTDOWN",
+        sender: Role::Master,
+        receiver: Role::Worker,
+        payload: "empty",
+    },
+    TagSpec {
+        tag: TAG_WORKER_REPORT,
+        name: "TAG_WORKER_REPORT",
+        sender: Role::Worker,
+        receiver: Role::Master,
+        payload: "WorkerReport wire encoding (9 x 8 bytes)",
+    },
+    TagSpec {
+        tag: TAG_REASSIGN,
+        name: "TAG_REASSIGN",
+        sender: Role::Master,
+        receiver: Role::Worker,
+        payload: "(logical: u64, k_eff: u64, offset: u64, len: u64)",
+    },
+    TagSpec {
+        tag: TAG_REJOIN,
+        name: "TAG_REJOIN",
+        sender: Role::Worker,
+        receiver: Role::Master,
+        payload: "empty",
+    },
+];
+
+/// Look up the protocol row for `tag`, if it is a registered tag.
+pub fn spec_of(tag: Tag) -> Option<&'static TagSpec> {
+    PROTOCOL.iter().find(|s| s.tag == tag)
+}
+
+/// The role that is allowed to *receive* `tag`, if registered. The
+/// model checker calls this at every delivery to catch misrouted
+/// messages (a tag arriving at a role that never receives it).
+pub fn receiver(tag: Tag) -> Option<Role> {
+    spec_of(tag).map(|s| s.receiver)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_tags_are_unique() {
+        for (i, a) in PROTOCOL.iter().enumerate() {
+            for b in &PROTOCOL[i + 1..] {
+                assert_ne!(
+                    a.tag, b.tag,
+                    "tag collision between {} and {}",
+                    a.name, b.name
+                );
+                assert_ne!(a.name, b.name, "duplicate tag name {}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn user_magics_match_their_ascii_mnemonics() {
+        let ascii = |a: u8, b: u8| Tag::User(u16::from_be_bytes([a, b]));
+        assert_eq!(TAG_NEW_RUN, ascii(b'N', b'R'));
+        assert_eq!(TAG_SHUTDOWN, ascii(b'S', b'D'));
+        assert_eq!(TAG_WORKER_REPORT, ascii(b'W', b'R'));
+        assert_eq!(TAG_REASSIGN, ascii(b'R', b'A'));
+        assert_eq!(TAG_REJOIN, ascii(b'R', b'J'));
+    }
+
+    #[test]
+    fn every_tag_resolves_and_star_topology_holds() {
+        for spec in PROTOCOL {
+            let found = spec_of(spec.tag).expect("registered tag resolves");
+            assert_eq!(found.name, spec.name);
+            assert_ne!(spec.sender, spec.receiver, "{}: no self-loops", spec.name);
+            assert_eq!(receiver(spec.tag), Some(spec.receiver));
+        }
+        assert_eq!(receiver(Tag::User(0x0001)), None, "unregistered magic");
+    }
+}

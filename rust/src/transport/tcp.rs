@@ -78,6 +78,29 @@ const CONNECT_RETRY: Duration = Duration::from_millis(100);
 /// the accept loop or a connecting worker forever.
 const HANDSHAKE_IO_TIMEOUT: Duration = Duration::from_secs(10);
 
+// Little-endian field decoders over caller-sized buffers. The callers
+// pass compile-time-constant offsets into arrays they allocated, so the
+// bounds are static facts; going through these helpers keeps the frame
+// parsers free of `unwrap()` (the panic-freedom lint budget covers this
+// module).
+fn le_u16(bytes: &[u8], at: usize) -> u16 {
+    let mut b = [0u8; 2];
+    b.copy_from_slice(&bytes[at..at + 2]);
+    u16::from_le_bytes(b)
+}
+
+fn le_u32(bytes: &[u8], at: usize) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&bytes[at..at + 4]);
+    u32::from_le_bytes(b)
+}
+
+fn le_u64(bytes: &[u8], at: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[at..at + 8]);
+    u64::from_le_bytes(b)
+}
+
 fn tag_to_wire(tag: Tag) -> (u8, u16) {
     match tag {
         Tag::Order => (0, 0),
@@ -149,9 +172,9 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<(usize, Tag, Vec<u8>)> {
         }
     }
     r.read_exact(&mut header[1..]).map_err(short("frame header"))?;
-    let from = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
-    let tag = tag_from_wire(header[4], u16::from_le_bytes(header[5..7].try_into().unwrap()))?;
-    let len = u32::from_le_bytes(header[7..11].try_into().unwrap());
+    let from = le_u32(&header, 0) as usize;
+    let tag = tag_from_wire(header[4], le_u16(&header, 5))?;
+    let len = le_u32(&header, 7);
     if len > MAX_PAYLOAD {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
@@ -204,11 +227,8 @@ fn read_hello<R: Read>(r: &mut R) -> io::Result<(u32, ProblemSig)> {
         ));
     }
     Ok((
-        u32::from_le_bytes(buf[4..8].try_into().unwrap()),
-        ProblemSig {
-            list_size: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
-            job_count: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
-        },
+        le_u32(&buf, 4),
+        ProblemSig { list_size: le_u64(&buf, 8), job_count: le_u64(&buf, 16) },
     ))
 }
 
@@ -228,7 +248,7 @@ fn read_welcome<R: Read>(r: &mut R) -> io::Result<u32> {
             "bad magic in WELCOME (not a BSF master?)",
         ));
     }
-    Ok(u32::from_le_bytes(buf[4..8].try_into().unwrap()))
+    Ok(le_u32(&buf, 4))
 }
 
 /// Inbox events the reader threads produce.
@@ -421,6 +441,24 @@ impl Communicator for TcpEndpoint {
 
     fn stats(&self) -> Arc<TransportStats> {
         self.stats.clone()
+    }
+
+    fn undrained(&self) -> Vec<(usize, Tag)> {
+        let mut inbox = match self.inbox.lock() {
+            Ok(g) => g,
+            Err(_) => return Vec::new(),
+        };
+        // Pull already-arrived events into the buffers so messages that
+        // crossed the reader thread are visible (and stay receivable if
+        // the caller continues).
+        loop {
+            match inbox.rx.try_recv() {
+                Ok(Event::Msg(m)) => inbox.pending.push_back(m),
+                Ok(Event::Lost { from, reason }) => inbox.lost.push((from, reason)),
+                Err(_) => break,
+            }
+        }
+        inbox.pending.iter().map(|m| (m.from, m.tag)).collect()
     }
 }
 
@@ -617,11 +655,17 @@ pub fn accept_workers(
             Err(e) => return Err(BsfError::transport_io("master: accept worker", e)),
         }
     }
-    let peers = slots
+    let peers: Vec<(usize, TcpStream)> = slots
         .into_iter()
         .enumerate()
-        .map(|(rank, s)| (rank, s.expect("all slots filled")))
+        .filter_map(|(rank, s)| s.map(|stream| (rank, stream)))
         .collect();
+    if peers.len() != workers {
+        return Err(BsfError::transport(format!(
+            "master: accept loop ended with {}/{workers} distinct workers",
+            peers.len()
+        )));
+    }
     TcpEndpoint::new(workers, size, peers)
 }
 
@@ -790,6 +834,68 @@ mod tests {
         }
         let m = got.expect("frame delivered");
         assert_eq!((m.from, m.payload), (0, vec![9]));
+    }
+
+    #[test]
+    fn try_recv_empty_mailbox_and_wrong_rank_filter() {
+        let (master, workers) = loopback(2);
+        // empty mailbox: immediately None, no blocking
+        assert!(master.try_recv_tags(None, &[Tag::Fold]).is_none());
+        workers[0].send(2, Tag::Fold, vec![7]).unwrap();
+        // wait for the frame to cross the reader thread, as a *buffered*
+        // message (the wrong-rank filter must keep returning None)
+        let mut arrived = false;
+        for _ in 0..200 {
+            if !master.undrained().is_empty() {
+                arrived = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(arrived, "frame never crossed the reader thread");
+        assert!(master.try_recv_tags(Some(1), &[Tag::Fold]).is_none());
+        // the filtered poll must not have lost the rank-0 message
+        let m = master.try_recv_tags(Some(0), &[Tag::Fold]).expect("still buffered");
+        assert_eq!((m.from, m.payload), (0, vec![7]));
+    }
+
+    #[test]
+    fn rejoin_poll_at_iteration_boundary_leaves_folds_intact() {
+        use crate::transport::tags::TAG_REJOIN;
+        let (master, workers) = loopback(2);
+        workers[0].send(2, Tag::Fold, vec![1]).unwrap();
+        workers[1].send(2, TAG_REJOIN, vec![]).unwrap();
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(m) = master.try_recv_tags(None, &[TAG_REJOIN]) {
+                got = Some(m);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(got.expect("rejoin delivered").from, 1);
+        // the concurrent fold is preserved for the gather
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![1]);
+        assert!(master.try_recv_tags(None, &[TAG_REJOIN]).is_none());
+    }
+
+    #[test]
+    fn undrained_sees_messages_that_crossed_the_reader_thread() {
+        let (master, workers) = loopback(1);
+        assert!(master.undrained().is_empty());
+        workers[0].send(1, Tag::Fold, vec![9]).unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..200 {
+            seen = master.undrained();
+            if !seen.is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(seen, vec![(0, Tag::Fold)]);
+        // introspection must not consume the message
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![9]);
+        assert!(master.undrained().is_empty());
     }
 
     #[test]

@@ -154,6 +154,19 @@ impl Communicator for ThreadEndpoint {
     fn stats(&self) -> Arc<TransportStats> {
         self.stats.clone()
     }
+
+    fn undrained(&self) -> Vec<(usize, Tag)> {
+        let mut inbox = match self.inbox.lock() {
+            Ok(g) => g,
+            Err(_) => return Vec::new(),
+        };
+        // Pull already-arrived messages into the pending buffer so they
+        // are visible (and stay receivable if the caller continues).
+        while let Ok(m) = inbox.rx.try_recv() {
+            inbox.pending.push_back(m);
+        }
+        inbox.pending.iter().map(|m| (m.from, m.tag)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -282,6 +295,73 @@ mod tests {
         drop(master);
         let err = worker.send(1, Tag::Fold, vec![1]).unwrap_err();
         assert!(matches!(err, BsfError::Transport(_)), "{err}");
+    }
+
+    #[test]
+    fn try_recv_on_empty_mailbox_is_none() {
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        assert!(master.try_recv_tags(None, &[Tag::Fold]).is_none());
+        assert!(master.try_recv_tags(Some(0), &[Tag::Fold, Tag::Abort]).is_none());
+    }
+
+    #[test]
+    fn try_recv_wrong_rank_filter_preserves_the_message() {
+        let mut eps = build(2);
+        let master = eps.pop().unwrap();
+        let _w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        w0.send(2, Tag::Fold, vec![7]).unwrap();
+        // Filtering on the *other* worker must not return (or lose) the
+        // rank-0 message.
+        assert!(master.try_recv_tags(Some(1), &[Tag::Fold]).is_none());
+        let m = master.try_recv_tags(Some(0), &[Tag::Fold]).expect("still buffered");
+        assert_eq!((m.from, m.payload), (0, vec![7]));
+    }
+
+    #[test]
+    fn rejoin_poll_at_iteration_boundary_leaves_folds_intact() {
+        use crate::transport::tags::TAG_REJOIN;
+        // The master's boundary poll asks only for REJOIN while a fold
+        // of the *current* gather may already be buffered: the poll must
+        // return the rejoin and leave the fold receivable.
+        let mut eps = build(2);
+        let master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        w0.send(2, Tag::Fold, vec![1]).unwrap();
+        w1.send(2, TAG_REJOIN, vec![]).unwrap();
+        let m = master.try_recv_tags(None, &[TAG_REJOIN]).expect("rejoin seen");
+        assert_eq!(m.from, 1);
+        // A rejoin landing *after* the poll is picked up by the next one
+        // (the race is at most one boundary of latency, never a loss).
+        w1.send(2, TAG_REJOIN, vec![]).unwrap();
+        assert!(master.try_recv_tags(None, &[TAG_REJOIN]).is_some());
+        assert!(master.try_recv_tags(None, &[TAG_REJOIN]).is_none());
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![1]);
+    }
+
+    #[test]
+    fn undrained_reports_leftovers_and_assert_catches_them() {
+        use crate::transport::debug_assert_drained;
+        let mut eps = build(1);
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        assert!(master.undrained().is_empty());
+        debug_assert_drained(&master, &[], "clean mailbox");
+        worker.send(1, Tag::Fold, vec![1]).unwrap();
+        assert_eq!(master.undrained(), vec![(0, Tag::Fold)]);
+        // allow-listed tags don't trip the assertion...
+        debug_assert_drained(&master, &[Tag::Fold], "allowed leftover");
+        // ...unlisted ones do (debug builds), and the message survives
+        // introspection.
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                debug_assert_drained(&master, &[], "orphaned fold")
+            }));
+            assert!(r.is_err(), "undrained fold must trip the assertion");
+        }
+        assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![1]);
     }
 
     #[test]

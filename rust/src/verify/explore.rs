@@ -1,0 +1,323 @@
+//! Running one real master/worker world under the scheduler, and
+//! enumerating its schedules depth-first.
+//!
+//! [`run_schedule`] spawns the *actual* production state machines —
+//! [`MasterLoop`] and [`run_worker_guarded`], the same code every
+//! engine executes — over [`VerifyEndpoint`](super::vcomm::VerifyEndpoint)s,
+//! drives one bounded interleaving to completion, and reports everything
+//! the checker's invariants need: the master's final parameter bytes,
+//! per-thread errors, scheduler route checks, and the orphan report.
+//!
+//! [`Dfs`] turns the scheduler's recorded decision trace into systematic
+//! exploration: replay the longest prefix whose last decision still has
+//! an untried alternative, bump it, and let the defaults fill the rest —
+//! classic stateless model checking (VeriSoft-style), made deterministic
+//! by the virtual transport.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use crate::error::BsfError;
+use crate::skeleton::backend::FusedNativeBackend;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::Checkpoint;
+use crate::skeleton::master::MasterLoop;
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::worker::run_worker_guarded;
+use crate::transport::{Communicator, Message, Tag, TransportStats};
+use crate::util::codec::Codec;
+use crate::verify::vcomm::{Choice, DriveResult, FaultPlan, World};
+
+/// What the master state machine produced on a completed run.
+#[derive(Debug, Clone)]
+pub struct MasterSummary {
+    /// `Codec` encoding of the final approximation — byte-for-byte
+    /// comparable across schedules (the determinism invariant).
+    pub param_bytes: Vec<u8>,
+    pub iterations: usize,
+    /// Physical ranks lost mid-run (fault-injection schedules).
+    pub losses: Vec<usize>,
+}
+
+/// Everything one explored schedule observed.
+pub struct ScheduleResult<Param> {
+    pub drive: DriveResult,
+    /// The master's verdict; an error carries the inter-iteration
+    /// checkpoint (what `RestartFromCheckpoint` would resume from).
+    pub master: Result<MasterSummary, (BsfError, Option<Checkpoint<Param>>)>,
+    /// `(rank, error)` for each worker loop that failed.
+    pub worker_errors: Vec<(usize, String)>,
+    /// Orphaned messages at live ranks after the run (mailboxes and
+    /// in-flight channels). A clean run leaves none.
+    pub leftovers: Vec<String>,
+    /// Threads that panicked (a drain assertion or a checker bug).
+    pub panics: usize,
+}
+
+/// Seeded test mutation: the wrapped endpoint sends its first `Fold`
+/// **twice** — the PR 5 bug class, where a double-sent fold silently
+/// desynchronizes the master's selective per-rank gather. The checker
+/// must flag every schedule of a mutated world (stray-fold error,
+/// orphaned message, or a wrong final parameter).
+pub struct DuplicateFold<C: Communicator> {
+    inner: C,
+    fired: AtomicBool,
+}
+
+impl<C: Communicator> DuplicateFold<C> {
+    pub fn new(inner: C) -> Self {
+        Self { inner, fired: AtomicBool::new(false) }
+    }
+}
+
+impl<C: Communicator> Communicator for DuplicateFold<C> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+        if tag == Tag::Fold && !self.fired.swap(true, Ordering::Relaxed) {
+            self.inner.send(to, tag, payload.clone())?;
+        }
+        self.inner.send(to, tag, payload)
+    }
+
+    fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
+        self.inner.recv_tags(from, tags)
+    }
+
+    fn try_recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Option<Message> {
+        self.inner.try_recv_tags(from, tags)
+    }
+
+    fn stats(&self) -> Arc<TransportStats> {
+        self.inner.stats()
+    }
+
+    fn undrained(&self) -> Vec<(usize, Tag)> {
+        self.inner.undrained()
+    }
+}
+
+/// Run the production master/worker state machines through ONE schedule.
+///
+/// * `mk` builds the problem instance — called once per thread, so the
+///   problem type needs neither `Clone` nor cross-thread sharing (it is
+///   `Send + Sync` anyway, but per-thread instances mirror how real
+///   MPI processes each construct their own).
+/// * `forced` replays a decision prefix (see [`Dfs`]).
+/// * `fault` optionally kills one worker at a scheduler round.
+/// * `mutate` wraps worker 0 in [`DuplicateFold`].
+pub fn run_schedule<P, F>(
+    mk: &F,
+    cfg: &BsfConfig,
+    start: Option<Checkpoint<P::Param>>,
+    forced: &[usize],
+    fault: Option<FaultPlan>,
+    mutate: bool,
+) -> ScheduleResult<P::Param>
+where
+    P: BsfProblem,
+    F: Fn() -> P + Sync,
+{
+    let k = cfg.workers;
+    let world = World::new(k);
+    let mut eps = world.endpoints();
+    let master_ep = match eps.pop() {
+        Some(ep) => ep,
+        None => unreachable!("World::new always yields at least the master endpoint"),
+    };
+
+    let (drive, worker_results, master) = thread::scope(|s| {
+        let mut worker_handles = Vec::with_capacity(k);
+        for (rank, ep) in eps.into_iter().enumerate() {
+            let w = Arc::clone(&world);
+            let wcfg = cfg.clone();
+            worker_handles.push(s.spawn(move || {
+                let _g = w.register(rank);
+                let p = mk();
+                let comm: Box<dyn Communicator> = if mutate && rank == 0 {
+                    Box::new(DuplicateFold::new(ep))
+                } else {
+                    Box::new(ep)
+                };
+                run_worker_guarded(&p, &FusedNativeBackend, &*comm, &wcfg)
+                    .map(|_| ())
+                    .map_err(|e| e.to_string())
+            }));
+        }
+
+        let mw = Arc::clone(&world);
+        let mcfg = cfg.clone();
+        let mh = s.spawn(move || {
+            let _g = mw.register(k);
+            let p = mk();
+            let mut m = match MasterLoop::new(&p, &mcfg, start) {
+                Ok(m) => m,
+                Err(e) => return Err((e, None)),
+            };
+            loop {
+                match m.step_comm(&p, &master_ep) {
+                    Ok(ev) if ev.stop.is_some() => {
+                        let out = m.outcome();
+                        return Ok(MasterSummary {
+                            param_bytes: out.param.to_bytes(),
+                            iterations: out.iterations,
+                            losses: out.losses,
+                        });
+                    }
+                    Ok(_) => {}
+                    Err(e) => {
+                        // Capture the resume point first: release() is a
+                        // best-effort broadcast and never changes it.
+                        let ck = m.checkpoint();
+                        m.release(&master_ep);
+                        return Err((e, Some(ck)));
+                    }
+                }
+            }
+        });
+
+        let drive = world.drive(forced, fault);
+        let worker_results: Vec<_> =
+            worker_handles.into_iter().map(|h| h.join()).collect();
+        (drive, worker_results, mh.join())
+    });
+
+    let mut panics = 0usize;
+    let mut worker_errors = Vec::new();
+    for (rank, res) in worker_results.into_iter().enumerate() {
+        match res {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => worker_errors.push((rank, e)),
+            Err(payload) => {
+                panics += 1;
+                let what = panic_text(&payload);
+                worker_errors.push((rank, format!("worker thread panicked: {what}")));
+            }
+        }
+    }
+    let master = match master {
+        Ok(r) => r,
+        Err(payload) => {
+            panics += 1;
+            let what = panic_text(&payload);
+            Err((BsfError::transport(format!("master thread panicked: {what}")), None))
+        }
+    };
+
+    ScheduleResult { drive, master, worker_errors, leftovers: world.leftovers(), panics }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Depth-first schedule enumeration over the scheduler's decision
+/// traces.
+///
+/// Feed every run's recorded trace back through [`advance`](Self::advance);
+/// [`frontier`](Self::frontier) then yields the forced prefix of the next
+/// unexplored schedule, or `None` once the tree is exhausted. Because a
+/// prefix determines the world state at its end, trying every `chosen`
+/// value at every reachable decision node enumerates every schedule the
+/// scheduler distinguishes.
+pub struct Dfs {
+    frontier: Option<Vec<usize>>,
+}
+
+impl Default for Dfs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dfs {
+    pub fn new() -> Self {
+        Self { frontier: Some(Vec::new()) }
+    }
+
+    /// Forced prefix for the next schedule (`None` = tree exhausted).
+    pub fn frontier(&self) -> Option<&[usize]> {
+        self.frontier.as_deref()
+    }
+
+    /// Record the decision trace a run actually took and move to the
+    /// next schedule: drop exhausted tail decisions, bump the deepest
+    /// one with an untried alternative.
+    pub fn advance(&mut self, trace: &[Choice]) {
+        let mut stack: Vec<Choice> = trace.to_vec();
+        while let Some(last) = stack.last() {
+            if last.chosen + 1 < last.arity {
+                break;
+            }
+            stack.pop();
+        }
+        self.frontier = match stack.last_mut() {
+            None => None,
+            Some(last) => {
+                last.chosen += 1;
+                Some(stack.iter().map(|c| c.chosen).collect())
+            }
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Simulate a world whose every run makes `depth` binary decisions:
+    /// the DFS must visit exactly 2^depth distinct forced prefixes.
+    #[test]
+    fn dfs_enumerates_a_binary_tree_exactly_once() {
+        let depth = 4;
+        let mut dfs = Dfs::new();
+        let mut seen = Vec::new();
+        while let Some(forced) = dfs.frontier().map(|f| f.to_vec()) {
+            // "Run": every decision is binary; forced prefix, then 0s.
+            let trace: Vec<Choice> = (0..depth)
+                .map(|i| Choice { chosen: forced.get(i).copied().unwrap_or(0), arity: 2 })
+                .collect();
+            let leaf: Vec<usize> = trace.iter().map(|c| c.chosen).collect();
+            assert!(!seen.contains(&leaf), "schedule visited twice: {leaf:?}");
+            seen.push(leaf);
+            dfs.advance(&trace);
+        }
+        assert_eq!(seen.len(), 1 << depth);
+    }
+
+    #[test]
+    fn dfs_handles_mixed_arities_and_empty_traces() {
+        // Arity sequence 3 then 2 → 6 schedules; a world with no
+        // decisions at all → exactly one schedule.
+        let mut dfs = Dfs::new();
+        let mut count = 0;
+        while let Some(forced) = dfs.frontier().map(|f| f.to_vec()) {
+            let trace = vec![
+                Choice { chosen: forced.first().copied().unwrap_or(0), arity: 3 },
+                Choice { chosen: forced.get(1).copied().unwrap_or(0), arity: 2 },
+            ];
+            count += 1;
+            dfs.advance(&trace);
+        }
+        assert_eq!(count, 6);
+
+        let mut dfs = Dfs::new();
+        let mut count = 0;
+        while dfs.frontier().is_some() {
+            count += 1;
+            dfs.advance(&[]);
+        }
+        assert_eq!(count, 1);
+    }
+}

@@ -1,0 +1,455 @@
+//! `bsf verify` — bounded model checking of the skeleton's message
+//! protocol (the star topology of Algorithm 2, plus the fault-recovery
+//! extensions) by exhaustive schedule exploration.
+//!
+//! The real master and worker state machines run unmodified over a
+//! scheduler-controlled transport ([`vcomm`]); every bounded
+//! message-delivery interleaving of a small problem is enumerated
+//! ([`explore`]) and checked against the protocol invariants:
+//!
+//! 1. **No deadlock, no hang** — every schedule completes.
+//! 2. **No misrouted tag** — every delivered message's tag is delivered
+//!    to the role the [`transport::tags`](crate::transport::tags)
+//!    registry declares as its receiver.
+//! 3. **No orphan** — at run end no message is left undelivered or
+//!    undrained at a live rank (the invariant whose violation was the
+//!    PR 5 duplicate-fold bug).
+//! 4. **Schedule determinism** — the final approximation is
+//!    byte-identical across all schedules (the paper's claim that the
+//!    skeleton's gather order never changes the result).
+//! 5. **Fault equivalence** — with a worker killed at every injection
+//!    point under each [`FaultPolicy`]: `Redistribute` completes on the
+//!    survivors with the same bytes (split-invariant problems),
+//!    `RestartFromCheckpoint` resumes to bit-identical bytes, and
+//!    `Abort` fails typed, naming the victim, with every survivor
+//!    released.
+//!
+//! Teeth: [`Mutation::DuplicateFold`] seeds the PR 5 bug (a worker
+//! double-sends a fold) into an otherwise healthy world — `run_verify`
+//! must then report violations, which `rust/tests/verify.rs` asserts.
+
+pub mod explore;
+pub mod vcomm;
+
+use crate::error::BsfError;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::fault::FaultPolicy;
+use crate::skeleton::problem::BsfProblem;
+
+use explore::{run_schedule, Dfs, ScheduleResult};
+use vcomm::{FaultPlan, SchedOutcome};
+
+/// Keep the violation list readable: after this many entries further
+/// findings are counted, not printed.
+const MAX_REPORTED: usize = 40;
+
+/// Optional seeded bug, to prove the checker catches what it claims to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    None,
+    /// Worker 0 sends its first fold twice (the PR 5 bug class).
+    DuplicateFold,
+}
+
+/// Exploration bounds for one `run_verify`.
+#[derive(Debug, Clone)]
+pub struct VerifyConfig {
+    /// Worker count K of the model world (keep small: the schedule
+    /// space is exponential in K and the iteration count).
+    pub workers: usize,
+    /// Iteration cap — the model's run length (the problem should *not*
+    /// converge earlier, so every schedule runs the same depth).
+    pub max_iter: usize,
+    /// Hard ceiling on explored schedules (exploration is truncated,
+    /// and reported as such, beyond it).
+    pub max_schedules: usize,
+    /// Also explore fault-injection schedules under every policy.
+    pub faults: bool,
+    pub mutation: Mutation,
+}
+
+impl Default for VerifyConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_iter: 10,
+            max_schedules: 20_000,
+            faults: true,
+            mutation: Mutation::None,
+        }
+    }
+}
+
+/// What `run_verify` explored and what it found.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub workers: usize,
+    /// Iterations of the canonical (reference) schedule.
+    pub reference_iterations: usize,
+    /// Fault-free schedules explored.
+    pub base_schedules: usize,
+    /// Fault-injection schedules explored (restart generations included).
+    pub fault_schedules: usize,
+    /// Losses actually injected, per policy (each must be ≥ 1 for the
+    /// fault legs to have been exercised).
+    pub abort_losses: usize,
+    pub redistribute_losses: usize,
+    pub restart_losses: usize,
+    /// Exploration hit `max_schedules` before exhausting the tree.
+    pub truncated: bool,
+    /// Whether the K-worker and (K-1)-worker references agreed — only
+    /// then is the stronger `Redistribute` byte-equality check enforced.
+    pub split_invariant: bool,
+    /// Findings beyond [`MAX_REPORTED`] are summarized in the last entry.
+    pub violations: Vec<String>,
+}
+
+impl VerifyReport {
+    pub fn schedules(&self) -> usize {
+        self.base_schedules + self.fault_schedules
+    }
+
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+struct Findings {
+    violations: Vec<String>,
+    suppressed: usize,
+}
+
+impl Findings {
+    fn new() -> Self {
+        Self { violations: Vec::new(), suppressed: 0 }
+    }
+
+    fn note(&mut self, msg: String) {
+        if self.violations.len() < MAX_REPORTED {
+            self.violations.push(msg);
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    fn into_violations(mut self) -> Vec<String> {
+        if self.suppressed > 0 {
+            self.violations.push(format!("... and {} more violation(s)", self.suppressed));
+        }
+        self.violations
+    }
+}
+
+/// Checks shared by every schedule (fault-free or not).
+fn check_common<Param>(
+    f: &mut Findings,
+    id: &str,
+    r: &ScheduleResult<Param>,
+    expect_completed: bool,
+) {
+    match &r.drive.outcome {
+        SchedOutcome::Completed => {}
+        SchedOutcome::Deadlock(why) if expect_completed => {
+            f.note(format!("{id}: deadlock: {why}"));
+        }
+        SchedOutcome::Hang(why) if expect_completed => {
+            f.note(format!("{id}: hang: {why}"));
+        }
+        _ => {}
+    }
+    for m in &r.drive.misrouted {
+        f.note(format!("{id}: misrouted: {m}"));
+    }
+    if r.panics > 0 {
+        let detail: Vec<&str> = r
+            .worker_errors
+            .iter()
+            .filter(|(_, e)| e.contains("panicked"))
+            .map(|(_, e)| e.as_str())
+            .collect();
+        f.note(format!("{id}: {} thread panic(s): {detail:?}", r.panics));
+    }
+}
+
+/// The canonical schedule's outputs, against which every other schedule
+/// is compared.
+struct Reference {
+    bytes: Vec<u8>,
+    iters: usize,
+    /// K-worker and (K-1)-worker runs agreed byte-for-byte, so the
+    /// stronger `Redistribute` equality check is enforceable.
+    split_invariant: bool,
+}
+
+/// A schedule of a healthy, fault-free world: everything must be clean
+/// and bit-identical to the reference.
+fn check_base<Param>(
+    f: &mut Findings,
+    id: &str,
+    r: &ScheduleResult<Param>,
+    rf: &Reference,
+) {
+    check_common(f, id, r, true);
+    match &r.master {
+        Ok(s) => {
+            if s.param_bytes != rf.bytes {
+                f.note(format!(
+                    "{id}: schedule-dependent result: final parameter bytes \
+                     differ from the reference schedule"
+                ));
+            }
+            if s.iterations != rf.iters {
+                f.note(format!(
+                    "{id}: ran {} iterations, reference ran {}",
+                    s.iterations, rf.iters
+                ));
+            }
+        }
+        Err((e, _)) => f.note(format!("{id}: master failed: {e}")),
+    }
+    for (rank, e) in &r.worker_errors {
+        f.note(format!("{id}: worker {rank} failed: {e}"));
+    }
+    for l in &r.leftovers {
+        f.note(format!("{id}: orphan: {l}"));
+    }
+}
+
+/// One generation with a scheduled worker kill, checked per policy.
+/// Returns a checkpoint when the policy is restart-from-checkpoint and
+/// this generation died recoverably.
+fn check_fault<Param: Clone>(
+    f: &mut Findings,
+    id: &str,
+    policy: &FaultPolicy,
+    victim: usize,
+    r: &ScheduleResult<Param>,
+    rf: &Reference,
+) -> Option<crate::skeleton::driver::Checkpoint<Param>> {
+    check_common(f, id, r, true);
+    let fired = r.drive.fault_fired;
+    // Survivor worker loops must stay healthy whenever the master
+    // finished cleanly (on a master error, release ordering can leave a
+    // survivor seeing the abort first — not a protocol violation).
+    if r.master.is_ok() {
+        for (rank, e) in &r.worker_errors {
+            if *rank != victim {
+                f.note(format!("{id}: survivor worker {rank} failed: {e}"));
+            }
+        }
+    }
+    match (&r.master, policy) {
+        (Ok(s), _) if !fired || s.losses.is_empty() => {
+            // The kill landed after the victim's last involvement (or
+            // never fired): indistinguishable from a healthy run.
+            if s.param_bytes != rf.bytes {
+                f.note(format!("{id}: loss-free completion but bytes differ from reference"));
+            }
+            for l in &r.leftovers {
+                f.note(format!("{id}: orphan: {l}"));
+            }
+            None
+        }
+        (Ok(s), FaultPolicy::Redistribute { .. }) => {
+            if s.losses != [victim] {
+                f.note(format!(
+                    "{id}: absorbed losses {:?}, expected [{victim}]",
+                    s.losses
+                ));
+            }
+            // A split-invariant reduce (element-wise, disjoint support)
+            // makes the survivors' run byte-identical to the full one.
+            if rf.split_invariant && s.param_bytes != rf.bytes {
+                f.note(format!(
+                    "{id}: redistributed result differs from the reference \
+                     on a split-invariant problem"
+                ));
+            }
+            if s.iterations != rf.iters {
+                f.note(format!(
+                    "{id}: redistributed run did {} iterations, reference {}",
+                    s.iterations, rf.iters
+                ));
+            }
+            for l in &r.leftovers {
+                f.note(format!("{id}: orphan after redistribute: {l}"));
+            }
+            None
+        }
+        (Ok(_), FaultPolicy::Abort | FaultPolicy::RestartFromCheckpoint) => {
+            // `losses` non-empty is unreachable here (the policies never
+            // absorb), so an Ok master with recorded losses is itself a
+            // violation.
+            f.note(format!("{id}: master absorbed a loss under {policy:?}"));
+            None
+        }
+        (Err((e, ck)), FaultPolicy::Abort | FaultPolicy::RestartFromCheckpoint) => {
+            match e {
+                BsfError::WorkerLost { rank, .. } if *rank == victim => {}
+                other => f.note(format!(
+                    "{id}: expected a typed WorkerLost({victim}), got: {other}"
+                )),
+            }
+            // Leftovers are NOT checked on the abort path: the master
+            // releases survivors and reports without draining their
+            // in-flight folds (documented behavior).
+            if matches!(policy, FaultPolicy::RestartFromCheckpoint) {
+                if ck.is_none() {
+                    f.note(format!("{id}: recoverable loss carried no checkpoint"));
+                }
+                ck.clone()
+            } else {
+                None
+            }
+        }
+        (Err((e, _)), FaultPolicy::Redistribute { .. }) => {
+            f.note(format!(
+                "{id}: redistribute failed to absorb a single loss: {e}"
+            ));
+            None
+        }
+    }
+}
+
+/// Explore the protocol: every bounded schedule of a healthy world, then
+/// (when `vcfg.faults`) a worker kill at every sampled injection point
+/// under every fault policy. `mk` builds the model problem — it must be
+/// deterministic (same instance every call) and should **not** converge
+/// before `vcfg.max_iter`, so all schedules compare at equal depth.
+pub fn run_verify<P, F>(mk: F, vcfg: &VerifyConfig) -> VerifyReport
+where
+    P: BsfProblem,
+    F: Fn() -> P + Sync,
+{
+    let mut f = Findings::new();
+    let cfg = BsfConfig::with_workers(vcfg.workers).max_iter(vcfg.max_iter);
+
+    // Canonical reference: the all-defaults schedule of a healthy world.
+    let reference = run_schedule(&mk, &cfg, None, &[], None, false);
+    check_common(&mut f, "reference", &reference, true);
+    let (ref_bytes, ref_iters) = match &reference.master {
+        Ok(s) if reference.drive.outcome == SchedOutcome::Completed => {
+            (s.param_bytes.clone(), s.iterations)
+        }
+        Ok(_) => {
+            f.note("reference schedule did not complete".to_string());
+            return report_early(vcfg, f);
+        }
+        Err((e, _)) => {
+            f.note(format!("reference schedule failed: {e}"));
+            return report_early(vcfg, f);
+        }
+    };
+    let canonical: Vec<usize> = reference.drive.trace.iter().map(|c| c.chosen).collect();
+    let rounds = reference.drive.rounds;
+
+    // Split-invariance probe: does a (K-1)-worker run produce the same
+    // bytes? Only then can Redistribute promise byte-equality after a
+    // loss (element-wise reduces with disjoint support do; a float
+    // reduction whose grouping shifts with K does not).
+    let split_invariant = vcfg.workers >= 2 && {
+        let cfg1 = BsfConfig::with_workers(vcfg.workers - 1).max_iter(vcfg.max_iter);
+        match run_schedule(&mk, &cfg1, None, &[], None, false).master {
+            Ok(s) => s.param_bytes == ref_bytes,
+            Err(_) => false,
+        }
+    };
+    let rf = Reference { bytes: ref_bytes, iters: ref_iters, split_invariant };
+
+    // Leg 1: exhaustive fault-free exploration (optionally mutated —
+    // then these checks are expected to find violations, proving teeth).
+    let mutate = vcfg.mutation == Mutation::DuplicateFold;
+    let mut dfs = Dfs::new();
+    let mut base_schedules = 0usize;
+    let mut truncated = false;
+    while let Some(forced) = dfs.frontier().map(|fr| fr.to_vec()) {
+        if base_schedules >= vcfg.max_schedules {
+            truncated = true;
+            break;
+        }
+        let r = run_schedule(&mk, &cfg, None, &forced, None, mutate);
+        base_schedules += 1;
+        check_base(&mut f, &format!("schedule #{base_schedules}"), &r, &rf);
+        dfs.advance(&r.drive.trace);
+    }
+
+    // Leg 2: fault injection along the canonical schedule. Injection
+    // points are sampled with a stride so the budget stays bounded;
+    // point 0 (pre-run) and the full-depth tail are always included.
+    let mut fault_schedules = 0usize;
+    let mut abort_losses = 0usize;
+    let mut redistribute_losses = 0usize;
+    let mut restart_losses = 0usize;
+    if vcfg.faults && vcfg.mutation == Mutation::None && vcfg.workers >= 2 {
+        let stride = (rounds / 8).max(1);
+        let policies = [
+            FaultPolicy::Abort,
+            FaultPolicy::Redistribute { max_losses: 1 },
+            FaultPolicy::RestartFromCheckpoint,
+        ];
+        for policy in policies {
+            let pcfg = cfg.clone().fault(policy);
+            for victim in 0..vcfg.workers {
+                let mut at = 0usize;
+                while at <= rounds {
+                    let id = format!("fault {policy:?} victim={victim} round={at}");
+                    let r = run_schedule(
+                        &mk,
+                        &pcfg,
+                        None,
+                        &canonical,
+                        Some(FaultPlan { victim, at_round: at }),
+                        false,
+                    );
+                    fault_schedules += 1;
+                    if r.drive.fault_fired {
+                        match policy {
+                            FaultPolicy::Abort => abort_losses += 1,
+                            FaultPolicy::Redistribute { .. } => redistribute_losses += 1,
+                            FaultPolicy::RestartFromCheckpoint => restart_losses += 1,
+                        }
+                    }
+                    let ck = check_fault(&mut f, &id, &policy, victim, &r, &rf);
+                    // Restart generation 1: relaunch at full K from the
+                    // checkpoint (what the one-shot run loop does) — it
+                    // must complete bit-identically to the reference.
+                    if let Some(ck) = ck {
+                        let gid = format!("{id} restart-gen1");
+                        let g1 = run_schedule(&mk, &pcfg, Some(ck), &[], None, false);
+                        fault_schedules += 1;
+                        check_base(&mut f, &gid, &g1, &rf);
+                    }
+                    at += stride;
+                }
+            }
+        }
+    }
+
+    VerifyReport {
+        workers: vcfg.workers,
+        reference_iterations: ref_iters,
+        base_schedules,
+        fault_schedules,
+        abort_losses,
+        redistribute_losses,
+        restart_losses,
+        truncated,
+        split_invariant,
+        violations: f.into_violations(),
+    }
+}
+
+fn report_early(vcfg: &VerifyConfig, f: Findings) -> VerifyReport {
+    VerifyReport {
+        workers: vcfg.workers,
+        reference_iterations: 0,
+        base_schedules: 1,
+        fault_schedules: 0,
+        abort_losses: 0,
+        redistribute_losses: 0,
+        restart_losses: 0,
+        truncated: false,
+        split_invariant: false,
+        violations: f.into_violations(),
+    }
+}

@@ -1,0 +1,671 @@
+//! The model checker's virtual transport: a [`Communicator`] whose
+//! message deliveries happen only when a deterministic scheduler says
+//! so.
+//!
+//! Every endpoint shares one [`World`]. A `send` never delivers — it
+//! queues the message on the in-flight channel `(src, dst)`. A blocking
+//! `recv` scans only the endpoint's *mailbox* (messages the scheduler
+//! already delivered) and otherwise parks the thread. The scheduler
+//! ([`World::drive`]) waits until the whole system is quiescent (every
+//! registered thread parked or finished), then picks which channel
+//! delivers next:
+//!
+//! * channels that are the *only* pending source for their destination
+//!   are delivered wholesale (same-channel messages are FIFO — MPI's
+//!   non-overtaking rule — so no interleaving is lost), and
+//! * when several sources contend for one destination, delivering one
+//!   message from one of them is a **decision point**: the arity and the
+//!   choice taken are recorded in the schedule trace, and the explorer
+//!   replays prefixes with different choices to enumerate every bounded
+//!   interleaving.
+//!
+//! This partial-order reduction is sound for the BSF skeleton because
+//! receivers only ever observe their own mailbox through selective
+//! receive (per-source FIFO) and existence polls (`try_recv_tags`): the
+//! relative arrival order of messages from *different* sources is
+//! observable only where the destination is contended — exactly where
+//! the scheduler branches.
+//!
+//! Fault injection: the scheduler can kill a worker rank at a chosen
+//! decision round. A dead rank's in-flight traffic vanishes (as with a
+//! torn TCP peer), its parked thread is woken into a typed error, and
+//! peers that address it get [`BsfError::WorkerLost`] — the same
+//! contract as the real transports, so `FaultPolicy` recovery paths run
+//! unmodified under the checker.
+//!
+//! Determinism: between two quiescent points each thread runs its own
+//! deterministic state machine and only appends to per-channel FIFO
+//! queues, so the world state at every quiescent point — and therefore
+//! the whole run — is a pure function of the decision sequence.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::error::BsfError;
+use crate::transport::{tags, Communicator, Message, Tag, TransportStats};
+
+/// How long either side waits before declaring the system wedged. Only
+/// reached when a thread is neither parked in this transport nor making
+/// progress (a real livelock/hang, not a model-level deadlock — those
+/// are detected structurally, instantly).
+const WATCHDOG: Duration = Duration::from_secs(10);
+
+/// Condvar re-check interval (wake-ups are explicit; this only bounds
+/// watchdog latency).
+const POLL: Duration = Duration::from_millis(25);
+
+/// One scheduler decision: which of `arity` contending sources was
+/// delivered. The explorer replays a prefix of these and then takes
+/// first-choice (`0`) defaults to enumerate schedules depth-first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Choice {
+    pub chosen: usize,
+    pub arity: usize,
+}
+
+/// Kill `victim` at decision round `at_round` (fires at the first
+/// quiescent point with `rounds >= at_round`; if the run ends first the
+/// plan reports `fault_fired == false`).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub victim: usize,
+    pub at_round: usize,
+}
+
+/// How a driven schedule ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SchedOutcome {
+    /// Every registered thread finished.
+    Completed,
+    /// Threads parked forever with nothing deliverable.
+    Deadlock(String),
+    /// Watchdog expired without reaching quiescence.
+    Hang(String),
+}
+
+/// Everything one `drive` observed.
+#[derive(Debug, Clone)]
+pub struct DriveResult {
+    pub outcome: SchedOutcome,
+    /// The decision sequence actually taken (replay it to reproduce).
+    pub trace: Vec<Choice>,
+    /// Total decision rounds (also the space of fault-injection points).
+    pub rounds: usize,
+    /// Whether the fault plan's kill actually fired.
+    pub fault_fired: bool,
+    /// Messages delivered to a role that never receives their tag.
+    pub misrouted: Vec<String>,
+}
+
+struct WorldState {
+    /// Delivered-but-not-received messages, per destination rank.
+    mailboxes: Vec<VecDeque<Message>>,
+    /// Sent-but-not-delivered messages, per (src, dst) channel (BTreeMap
+    /// so scheduler iteration order is deterministic).
+    in_flight: BTreeMap<(usize, usize), VecDeque<Message>>,
+    dead: Vec<bool>,
+    /// Per-rank "thread finished" flags (kills only target live threads).
+    done: Vec<bool>,
+    /// Set on any scheduler exit that leaves threads parked: every
+    /// transport call errors out so the run unwinds promptly.
+    aborting: bool,
+    entered: usize,
+    finished: usize,
+    blocked: usize,
+    /// Bumped on every delivery/kill/abort; parked threads wait on it.
+    epoch: u64,
+}
+
+/// The shared world all [`VerifyEndpoint`]s live in.
+pub struct World {
+    size: usize,
+    state: Mutex<WorldState>,
+    /// Scheduler waits here for quiescence.
+    sched_cv: Condvar,
+    /// Parked threads wait here for an epoch change.
+    thread_cv: Condvar,
+    stats: Arc<TransportStats>,
+}
+
+/// RAII registration of one endpoint thread; dropping it (return *or*
+/// unwind) marks the rank finished and wakes the scheduler.
+pub struct ThreadGuard {
+    world: Arc<World>,
+    rank: usize,
+}
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        let mut st = self.world.lock();
+        st.finished += 1;
+        if self.rank < st.done.len() {
+            st.done[self.rank] = true;
+        }
+        self.world.sched_cv.notify_all();
+    }
+}
+
+impl World {
+    /// A world of `workers + 1` ranks (master last, as everywhere).
+    pub fn new(workers: usize) -> Arc<Self> {
+        let size = workers + 1;
+        Arc::new(Self {
+            size,
+            state: Mutex::new(WorldState {
+                mailboxes: (0..size).map(|_| VecDeque::new()).collect(),
+                in_flight: BTreeMap::new(),
+                dead: vec![false; size],
+                done: vec![false; size],
+                aborting: false,
+                entered: 0,
+                finished: 0,
+                blocked: 0,
+                epoch: 0,
+            }),
+            sched_cv: Condvar::new(),
+            thread_cv: Condvar::new(),
+            stats: Arc::new(TransportStats::default()),
+        })
+    }
+
+    /// The K+1 endpoints (master is the last one).
+    pub fn endpoints(self: &Arc<Self>) -> Vec<VerifyEndpoint> {
+        (0..self.size)
+            .map(|rank| VerifyEndpoint { rank, world: Arc::clone(self) })
+            .collect()
+    }
+
+    /// Register the calling thread as rank `rank`'s driver. Must be the
+    /// first thing each endpoint thread does.
+    pub fn register(self: &Arc<Self>, rank: usize) -> ThreadGuard {
+        let mut st = self.lock();
+        st.entered += 1;
+        self.sched_cv.notify_all();
+        drop(st);
+        ThreadGuard { world: Arc::clone(self), rank }
+    }
+
+    /// Poison-tolerant lock: an assertion failure in one thread must not
+    /// cascade into opaque poison panics everywhere else.
+    fn lock(&self) -> MutexGuard<'_, WorldState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn kill(st: &mut WorldState, victim: usize) -> bool {
+        if victim >= st.dead.len() || st.dead[victim] || st.done[victim] {
+            return false;
+        }
+        st.dead[victim] = true;
+        st.mailboxes[victim].clear();
+        st.in_flight.retain(|&(s, d), _| s != victim && d != victim);
+        true
+    }
+
+    fn deliver(
+        st: &mut WorldState,
+        size: usize,
+        key: (usize, usize),
+        count: Option<usize>,
+        misrouted: &mut Vec<String>,
+    ) {
+        let (_, dst) = key;
+        let dst_role =
+            if dst + 1 == size { tags::Role::Master } else { tags::Role::Worker };
+        let n = match (st.in_flight.get(&key), count) {
+            (Some(q), None) => q.len(),
+            (Some(q), Some(c)) => c.min(q.len()),
+            (None, _) => 0,
+        };
+        for _ in 0..n {
+            let m = match st.in_flight.get_mut(&key).and_then(|q| q.pop_front()) {
+                Some(m) => m,
+                None => break,
+            };
+            match tags::receiver(m.tag) {
+                Some(role) if role == dst_role => {}
+                Some(role) => misrouted.push(format!(
+                    "{:?} from rank {} delivered to rank {dst} ({dst_role:?}), \
+                     but its registered receiver role is {role:?}",
+                    m.tag, m.from
+                )),
+                None => misrouted.push(format!(
+                    "unregistered tag {:?} from rank {} delivered to rank {dst}",
+                    m.tag, m.from
+                )),
+            }
+            st.mailboxes[dst].push_back(m);
+        }
+    }
+
+    /// Run the scheduler until the world completes, deadlocks or hangs.
+    /// `forced` replays a prefix of decisions (out-of-range entries are
+    /// clamped to choice 0); decisions beyond the prefix default to 0.
+    pub fn drive(&self, forced: &[usize], fault: Option<FaultPlan>) -> DriveResult {
+        let mut trace: Vec<Choice> = Vec::new();
+        let mut rounds = 0usize;
+        let mut fault_fired = false;
+        let mut misrouted: Vec<String> = Vec::new();
+        let mut st = self.lock();
+        loop {
+            // Wait for quiescence: all threads registered, none running.
+            let deadline = Instant::now() + WATCHDOG;
+            loop {
+                let running = st.entered - st.finished - st.blocked;
+                if st.entered == self.size && running == 0 {
+                    break;
+                }
+                let (g, _) = self
+                    .sched_cv
+                    .wait_timeout(st, POLL)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = g;
+                if Instant::now() >= deadline {
+                    let running = st.entered - st.finished - st.blocked;
+                    st.aborting = true;
+                    st.epoch += 1;
+                    self.thread_cv.notify_all();
+                    return DriveResult {
+                        outcome: SchedOutcome::Hang(format!(
+                            "no quiescence within {WATCHDOG:?} at round {rounds} \
+                             ({running} thread(s) still running)"
+                        )),
+                        trace,
+                        rounds,
+                        fault_fired,
+                        misrouted,
+                    };
+                }
+            }
+
+            if st.entered == st.finished {
+                return DriveResult {
+                    outcome: SchedOutcome::Completed,
+                    trace,
+                    rounds,
+                    fault_fired,
+                    misrouted,
+                };
+            }
+
+            // Scheduled kill at this decision round.
+            if let Some(f) = fault {
+                if !fault_fired && rounds >= f.at_round && Self::kill(&mut st, f.victim) {
+                    fault_fired = true;
+                    st.epoch += 1;
+                    self.thread_cv.notify_all();
+                    rounds += 1;
+                    continue;
+                }
+            }
+
+            // Deliverable channels: non-empty, destination alive.
+            let keys: Vec<(usize, usize)> = st
+                .in_flight
+                .iter()
+                .filter(|&(&(_, d), q)| !q.is_empty() && !st.dead[d])
+                .map(|(&k, _)| k)
+                .collect();
+
+            if keys.is_empty() {
+                // A still-pending kill may be what unsticks the system
+                // (a recv on the victim becomes a typed loss).
+                if let Some(f) = fault {
+                    if !fault_fired && Self::kill(&mut st, f.victim) {
+                        fault_fired = true;
+                        st.epoch += 1;
+                        self.thread_cv.notify_all();
+                        rounds += 1;
+                        continue;
+                    }
+                }
+                let blocked = st.blocked;
+                st.aborting = true;
+                st.epoch += 1;
+                self.thread_cv.notify_all();
+                return DriveResult {
+                    outcome: SchedOutcome::Deadlock(format!(
+                        "{blocked} thread(s) parked with no deliverable message \
+                         at round {rounds}"
+                    )),
+                    trace,
+                    rounds,
+                    fault_fired,
+                    misrouted,
+                };
+            }
+
+            // Group pending sources by destination.
+            let mut by_dst: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (s, d) in keys {
+                by_dst.entry(d).or_default().push(s);
+            }
+            // Single-source destinations are forced moves: deliver the
+            // whole channel (FIFO — no interleaving exists to explore).
+            let mut contested: Option<(usize, Vec<usize>)> = None;
+            for (d, srcs) in &by_dst {
+                if srcs.len() == 1 {
+                    Self::deliver(&mut st, self.size, (srcs[0], *d), None, &mut misrouted);
+                } else if contested.is_none() {
+                    contested = Some((*d, srcs.clone()));
+                }
+            }
+            // The lowest contested destination is the decision point:
+            // deliver ONE message from the chosen source.
+            if let Some((d, srcs)) = contested {
+                let arity = srcs.len();
+                let chosen = match forced.get(trace.len()) {
+                    Some(&c) if c < arity => c,
+                    _ => 0,
+                };
+                trace.push(Choice { chosen, arity });
+                Self::deliver(
+                    &mut st,
+                    self.size,
+                    (srcs[chosen], d),
+                    Some(1),
+                    &mut misrouted,
+                );
+            }
+
+            st.epoch += 1;
+            self.thread_cv.notify_all();
+            rounds += 1;
+        }
+    }
+
+    /// After a drive: human-readable descriptions of every message still
+    /// undelivered or unreceived at a *live* rank. A clean run leaves
+    /// none (the orphan invariant).
+    pub fn leftovers(&self) -> Vec<String> {
+        let st = self.lock();
+        let mut out = Vec::new();
+        for (rank, mbox) in st.mailboxes.iter().enumerate() {
+            if st.dead[rank] {
+                continue;
+            }
+            for m in mbox {
+                out.push(format!(
+                    "undrained {:?} from rank {} in rank {rank}'s mailbox",
+                    m.tag, m.from
+                ));
+            }
+        }
+        for (&(s, d), q) in &st.in_flight {
+            if st.dead[d] {
+                continue;
+            }
+            for m in q {
+                out.push(format!("undelivered {:?} on channel {s} -> {d}", m.tag));
+            }
+        }
+        out
+    }
+}
+
+/// One rank's endpoint of the scheduler-controlled transport.
+pub struct VerifyEndpoint {
+    rank: usize,
+    world: Arc<World>,
+}
+
+fn take_matching(
+    mbox: &mut VecDeque<Message>,
+    from: Option<usize>,
+    tags_: &[Tag],
+) -> Option<Message> {
+    let idx = mbox.iter().position(|m| {
+        tags_.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true)
+    })?;
+    mbox.remove(idx)
+}
+
+impl VerifyEndpoint {
+    fn aborted(&self) -> BsfError {
+        BsfError::transport(format!(
+            "rank {}: run aborted by the model-checker scheduler",
+            self.rank
+        ))
+    }
+
+    fn self_dead(&self) -> BsfError {
+        BsfError::transport(format!(
+            "rank {}: killed by fault injection",
+            self.rank
+        ))
+    }
+
+    fn peer_dead(&self, peer: usize, doing: &str) -> BsfError {
+        let reason = format!(
+            "rank {}: rank {peer} lost (fault injection) while {doing}",
+            self.rank
+        );
+        // Same per-rank typing rule as the real transports: a vanished
+        // worker is a typed loss, a vanished master a generic error.
+        if peer + 1 < self.world.size {
+            BsfError::worker_lost(peer, reason)
+        } else {
+            BsfError::transport(reason)
+        }
+    }
+}
+
+impl Communicator for VerifyEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.world.size
+    }
+
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+        let mut st = self.world.lock();
+        if st.aborting {
+            return Err(self.aborted());
+        }
+        if to >= self.world.size {
+            return Err(BsfError::transport(format!(
+                "rank {}: send to rank {to} out of range (size {})",
+                self.rank,
+                self.world.size
+            )));
+        }
+        if st.dead[self.rank] {
+            return Err(self.self_dead());
+        }
+        if st.dead[to] {
+            return Err(self.peer_dead(to, &format!("sending {tag:?}")));
+        }
+        let len = payload.len();
+        st.in_flight
+            .entry((self.rank, to))
+            .or_default()
+            .push_back(Message { from: self.rank, tag, payload });
+        self.world.stats.record(tag, len);
+        Ok(())
+    }
+
+    fn recv_tags(&self, from: Option<usize>, tags_: &[Tag]) -> Result<Message, BsfError> {
+        let w = &*self.world;
+        let mut st = w.lock();
+        loop {
+            if st.aborting {
+                return Err(self.aborted());
+            }
+            if st.dead[self.rank] {
+                return Err(self.self_dead());
+            }
+            if let Some(m) = take_matching(&mut st.mailboxes[self.rank], from, tags_) {
+                return Ok(m);
+            }
+            if let Some(f) = from {
+                if st.dead[f] {
+                    return Err(self.peer_dead(f, &format!("receiving {tags_:?}")));
+                }
+            }
+            // Park until the scheduler delivers something (epoch bump).
+            st.blocked += 1;
+            w.sched_cv.notify_all();
+            let epoch = st.epoch;
+            while st.epoch == epoch && !st.aborting {
+                let (g, _) = w
+                    .thread_cv
+                    .wait_timeout(st, POLL)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = g;
+            }
+            st.blocked -= 1;
+        }
+    }
+
+    fn try_recv_tags(&self, from: Option<usize>, tags_: &[Tag]) -> Option<Message> {
+        let mut st = self.world.lock();
+        if st.aborting || st.dead[self.rank] {
+            return None;
+        }
+        take_matching(&mut st.mailboxes[self.rank], from, tags_)
+    }
+
+    fn stats(&self) -> Arc<TransportStats> {
+        Arc::clone(&self.world.stats)
+    }
+
+    fn undrained(&self) -> Vec<(usize, Tag)> {
+        let st = self.world.lock();
+        st.mailboxes[self.rank].iter().map(|m| (m.from, m.tag)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn deadlock_is_detected_and_threads_are_released() {
+        let world = World::new(1);
+        let mut eps = world.endpoints();
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        let (out, w_res, m_res) = thread::scope(|s| {
+            let ww = Arc::clone(&world);
+            let wh = s.spawn(move || {
+                let _g = ww.register(0);
+                // Waits for an order that never comes.
+                worker.recv_tags(Some(1), &[Tag::Order])
+            });
+            let mw = Arc::clone(&world);
+            let mh = s.spawn(move || {
+                let _g = mw.register(1);
+                // Waits for a fold that never comes.
+                master.recv_tags(Some(0), &[Tag::Fold])
+            });
+            let out = world.drive(&[], None);
+            (out, wh.join().unwrap(), mh.join().unwrap())
+        });
+        assert!(matches!(out.outcome, SchedOutcome::Deadlock(_)), "{:?}", out.outcome);
+        assert!(w_res.is_err() && m_res.is_err(), "parked threads released typed");
+    }
+
+    #[test]
+    fn orphaned_messages_are_reported_as_leftovers() {
+        let world = World::new(1);
+        let mut eps = world.endpoints();
+        let master = eps.pop().unwrap();
+        let worker = eps.pop().unwrap();
+        let out = thread::scope(|s| {
+            let ww = Arc::clone(&world);
+            s.spawn(move || {
+                let _g = ww.register(0);
+                worker.send(1, Tag::Fold, vec![1]).unwrap();
+            });
+            let mw = Arc::clone(&world);
+            s.spawn(move || {
+                let _g = mw.register(1);
+                drop(master); // never receives
+            });
+            world.drive(&[], None)
+        });
+        assert_eq!(out.outcome, SchedOutcome::Completed);
+        let left = world.leftovers();
+        assert_eq!(left.len(), 1, "{left:?}");
+        assert!(left[0].contains("Fold"), "{left:?}");
+    }
+
+    #[test]
+    fn contested_destination_is_a_recorded_choice_and_forced_replay_holds() {
+        // Two workers each send one fold; the master consumes both. The
+        // scheduler must record exactly one binary decision, and forcing
+        // the other branch must deliver the other source first.
+        let run = |forced: &[usize]| {
+            let world = World::new(2);
+            let mut eps = world.endpoints();
+            let master = eps.pop().unwrap();
+            let w1 = eps.pop().unwrap();
+            let w0 = eps.pop().unwrap();
+            thread::scope(|s| {
+                for (rank, ep) in [(0usize, w0), (1usize, w1)] {
+                    let w = Arc::clone(&world);
+                    s.spawn(move || {
+                        let _g = w.register(rank);
+                        ep.send(2, Tag::Fold, vec![rank as u8]).unwrap();
+                    });
+                }
+                let mw = Arc::clone(&world);
+                let mh = s.spawn(move || {
+                    let _g = mw.register(2);
+                    let a = master.recv_any(Tag::Fold).unwrap();
+                    let b = master.recv_any(Tag::Fold).unwrap();
+                    (a.from, b.from)
+                });
+                let out = world.drive(forced, None);
+                (out, mh.join().unwrap())
+            })
+        };
+        let (out, order) = run(&[]);
+        assert_eq!(out.outcome, SchedOutcome::Completed);
+        assert_eq!(out.trace.first().map(|c| c.arity), Some(2));
+        assert_eq!(order, (0, 1), "default choice delivers the lowest source");
+        let (out, order) = run(&[1]);
+        assert_eq!(out.outcome, SchedOutcome::Completed);
+        assert_eq!(order.0, 1, "forced choice 1 delivers the other source first");
+    }
+
+    #[test]
+    fn killed_worker_surfaces_as_typed_loss_on_both_sides() {
+        let world = World::new(2);
+        let mut eps = world.endpoints();
+        let master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        let (out, w0_res, m_res) = thread::scope(|s| {
+            let ww = Arc::clone(&world);
+            let w0h = s.spawn(move || {
+                let _g = ww.register(0);
+                // parked forever unless the kill wakes it
+                w0.recv_tags(Some(2), &[Tag::Order])
+            });
+            let ww = Arc::clone(&world);
+            s.spawn(move || {
+                let _g = ww.register(1);
+                drop(w1);
+            });
+            let mw = Arc::clone(&world);
+            let mh = s.spawn(move || {
+                let _g = mw.register(2);
+                // blocks on the victim: must become a typed loss
+                master.recv_tags(Some(0), &[Tag::Fold])
+            });
+            let out = world.drive(&[], Some(FaultPlan { victim: 0, at_round: 0 }));
+            (out, w0h.join().unwrap(), mh.join().unwrap())
+        });
+        assert_eq!(out.outcome, SchedOutcome::Completed);
+        assert!(out.fault_fired);
+        assert!(w0_res.is_err(), "victim's own call errors");
+        assert!(
+            matches!(m_res.unwrap_err(), BsfError::WorkerLost { rank: 0, .. }),
+            "master sees a typed per-rank loss"
+        );
+    }
+}

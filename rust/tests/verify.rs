@@ -1,0 +1,113 @@
+//! Integration tests for the `bsf verify` model checker — through the
+//! same public API the CLI uses.
+//!
+//! Three claims are proven here:
+//!
+//! 1. A healthy world passes: every explored schedule (fault-free and
+//!    fault-injected) completes with zero violations.
+//! 2. The checker has teeth: seeding the PR 5 duplicate-fold bug via
+//!    [`Mutation::DuplicateFold`] makes the same exploration report
+//!    violations.
+//! 3. The end-of-run drain assertion catches the one shape the master's
+//!    in-protocol guards cannot: a fold that arrives *after* the exit
+//!    handshake (the regression the checker's orphan invariant encodes).
+
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::skeleton::master::run_master;
+use bsf::transport::{build_thread_transport, debug_assert_drained, Communicator, Tag};
+use bsf::util::codec::Codec;
+use bsf::verify::{run_verify, Mutation, VerifyConfig};
+use bsf::BsfConfig;
+
+/// A small world the checker can exhaust quickly: eps far below reach,
+/// so every schedule runs exactly `max_iter` iterations.
+fn small_cfg() -> VerifyConfig {
+    VerifyConfig {
+        workers: 2,
+        max_iter: 3,
+        max_schedules: 2_000,
+        faults: true,
+        mutation: Mutation::None,
+    }
+}
+
+#[test]
+fn healthy_world_verifies_clean() {
+    let report = run_verify(|| JacobiProblem::random(8, 1e-30, 7).0, &small_cfg());
+    assert!(
+        report.ok(),
+        "healthy world must verify clean, got violations:\n{}",
+        report.violations.join("\n")
+    );
+    assert_eq!(report.reference_iterations, 3, "eps must be unreachable");
+    // One contested gather decision per iteration → 2^3 base schedules.
+    assert_eq!(report.base_schedules, 8);
+    assert!(!report.truncated);
+    // Every fault policy must actually have lost a worker at least once
+    // (round-0 injection always fires), or the fault legs proved nothing.
+    assert!(report.abort_losses >= 1, "no Abort loss fired");
+    assert!(report.redistribute_losses >= 1, "no Redistribute loss fired");
+    assert!(report.restart_losses >= 1, "no RestartFromCheckpoint loss fired");
+    assert!(report.fault_schedules > 0);
+    // Jacobi's element-wise disjoint-support reduce is split-invariant,
+    // so the strong Redistribute byte-equality check was enforced.
+    assert!(report.split_invariant, "jacobi reduce must be split-invariant");
+}
+
+#[test]
+fn seeded_duplicate_fold_is_caught() {
+    // Same world, same exploration — but worker 0 double-sends its first
+    // fold (the PR 5 bug class). The checker MUST flag it; if this test
+    // fails, the checker is decorative.
+    let vcfg = VerifyConfig { mutation: Mutation::DuplicateFold, ..small_cfg() };
+    let report = run_verify(|| JacobiProblem::random(8, 1e-30, 7).0, &vcfg);
+    assert!(
+        !report.ok(),
+        "checker failed to flag the seeded duplicate-fold mutation"
+    );
+    assert!(report.base_schedules >= 1);
+}
+
+#[test]
+fn late_fold_after_exit_is_an_undrained_orphan() {
+    // The drain regression behind invariant 3: a rogue worker re-sends
+    // its final fold AFTER acknowledging exit=true. Every in-protocol
+    // sweep has already run by then, so `run_master` succeeds — only the
+    // end-of-run drain check can see the stray message.
+    let mut eps = build_thread_transport(1);
+    let master = eps.pop().unwrap();
+    let w0 = eps.pop().unwrap();
+    let (p, _) = JacobiProblem::random(8, 1e-12, 11);
+    let cfg = BsfConfig::with_workers(1).max_iter(1);
+    // The gate makes "after" deterministic: the rogue's second fold is
+    // held until run_master has returned (the master's final stray-fold
+    // sweep runs just after the exit broadcast, so an ungated send
+    // could still land in time to be caught there).
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let rogue = std::thread::spawn(move || {
+        let _order = w0.recv(1, Tag::Order).unwrap();
+        let fold = (Some(vec![0.0f64; 8]), 1u64).to_bytes();
+        w0.send(1, Tag::Fold, fold.clone()).unwrap();
+        let ex = w0.recv(1, Tag::Exit).unwrap();
+        assert!(bool::from_bytes(&ex.payload), "max_iter=1 run must stop");
+        gate_rx.recv().unwrap();
+        // The late duplicate: sent after the shutdown handshake, so no
+        // gather and no stray-fold sweep will ever consume it.
+        w0.send(1, Tag::Fold, fold).unwrap();
+    });
+    let outcome = run_master(&p, &master, &cfg).unwrap();
+    assert_eq!(outcome.iterations, 1);
+    gate_tx.send(()).unwrap();
+    rogue.join().unwrap();
+
+    // The orphan is visible to the inspection API in every build...
+    let undrained = master.undrained();
+    assert_eq!(undrained, vec![(0, Tag::Fold)], "late fold must be undrained");
+    // ...and fatal under the debug drain assertion.
+    if cfg!(debug_assertions) {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            debug_assert_drained(&master, &[], "verify regression: late fold");
+        }));
+        assert!(caught.is_err(), "debug_assert_drained must flag the late fold");
+    }
+}

@@ -1,0 +1,539 @@
+//! `bsf-lint` — static checks for the skeleton's message protocol and
+//! wire schemas, run in CI via `cargo run -p bsf-lint`.
+//!
+//! The model checker (`bsf verify`) proves dynamic properties on a
+//! small world; this linter proves the *source-level* ones that no
+//! execution can witness:
+//!
+//! * **L1 — no tag magic outside the registry.** Every `Tag::User(0x…)`
+//!   literal must live in `rust/src/transport/tags.rs`; anywhere else it
+//!   can silently collide with a registered magic.
+//! * **L2 — no collisions inside the registry.** Two constants with the
+//!   same magic would make selective receives match the wrong message.
+//! * **L3 — every protocol tag is both sent and received.** A row of the
+//!   `PROTOCOL` table with no send site is dead schema; one with no
+//!   receive site is a message that can only end up as an orphan.
+//! * **L4 — wire-size constants match their decoder shape.** A
+//!   `*_WIRE_BYTES = N * 8` constant must agree with the field count of
+//!   the `type Wire = (…)` tuple it guards, or version-skew rejection
+//!   breaks exactly when the wire format changes.
+//! * **L5 — unwrap ratchet.** The count of `.unwrap()`/`.expect(` in
+//!   non-test `skeleton/` + `transport/` code must not exceed the budget
+//!   in `tools/bsf-lint/unwrap-ratchet.txt`. It can only go down: shrink
+//!   the budget when you remove one.
+//!
+//! Heuristics are line-based (no rustc, no dependencies): test modules
+//! are recognized by the repo-wide convention that `#[cfg(test)]` starts
+//! the trailing test block of a file, and comment lines are skipped.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// One source file, path relative to `rust/src` with `/` separators.
+struct SourceFile {
+    rel: String,
+    text: String,
+}
+
+struct LintReport {
+    violations: Vec<String>,
+    notes: Vec<String>,
+    files: usize,
+    tags: usize,
+    unwraps: usize,
+}
+
+fn main() -> ExitCode {
+    // tools/bsf-lint/ → repo root is two levels up.
+    let root = match Path::new(env!("CARGO_MANIFEST_DIR")).ancestors().nth(2) {
+        Some(r) => r.to_path_buf(),
+        None => {
+            eprintln!("bsf-lint: cannot locate the repo root");
+            return ExitCode::FAILURE;
+        }
+    };
+    let src = root.join("rust").join("src");
+    let sources = match load_sources(&src) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bsf-lint: cannot read {}: {e}", src.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let budget_path = root.join("tools").join("bsf-lint").join("unwrap-ratchet.txt");
+    let budget = match fs::read_to_string(&budget_path).map(|t| parse_budget(&t)) {
+        Ok(Some(b)) => b,
+        Ok(None) | Err(_) => {
+            eprintln!("bsf-lint: missing or malformed {}", budget_path.display());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let report = lint(&sources, budget);
+    for n in &report.notes {
+        println!("bsf-lint: note: {n}");
+    }
+    if report.violations.is_empty() {
+        println!(
+            "bsf-lint: OK — {} files, {} protocol tags, unwrap budget {}/{}",
+            report.files, report.tags, report.unwraps, budget
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &report.violations {
+            eprintln!("bsf-lint: error: {v}");
+        }
+        eprintln!("bsf-lint: {} violation(s)", report.violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn load_sources(src: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    collect_rs(src, &mut paths)?;
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for p in paths {
+        let rel = p
+            .strip_prefix(src)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.push(SourceFile { rel, text: fs::read_to_string(&p)? });
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// First non-comment, non-empty line of the budget file, as a count.
+fn parse_budget(text: &str) -> Option<usize> {
+    text.lines()
+        .map(str::trim)
+        .find(|l| !l.is_empty() && !l.starts_with('#'))
+        .and_then(|l| l.parse().ok())
+}
+
+/// Non-test lines of a file: everything above the (conventionally
+/// trailing) `#[cfg(test)]` test module. Yields `(line_no, line)`.
+fn non_test_lines(text: &str) -> impl Iterator<Item = (usize, &str)> {
+    text.lines()
+        .take_while(|l| l.trim() != "#[cfg(test)]")
+        .enumerate()
+        .map(|(i, l)| (i + 1, l))
+}
+
+fn is_comment(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//") || t.starts_with('*')
+}
+
+/// The whole lint pass, pure over in-memory sources (fixture-testable).
+fn lint(sources: &[SourceFile], budget: usize) -> LintReport {
+    let mut v = Vec::new();
+    let mut notes = Vec::new();
+
+    let registry = sources.iter().find(|s| s.rel == "transport/tags.rs");
+    let tag_tokens = match registry {
+        Some(reg) => {
+            check_registry_collisions(reg, &mut v);
+            registry_tag_tokens(reg, &mut v)
+        }
+        None => {
+            v.push("transport/tags.rs not found — the tag registry is gone".into());
+            Vec::new()
+        }
+    };
+
+    check_magic_outside_registry(sources, &mut v);
+    check_send_recv_coverage(sources, &tag_tokens, &mut v);
+    check_wire_sizes(sources, &mut v);
+    let unwraps = check_unwrap_ratchet(sources, budget, &mut v, &mut notes);
+
+    LintReport { violations: v, notes, files: sources.len(), tags: tag_tokens.len(), unwraps }
+}
+
+/// L1: `Tag::User(0x…)` literals belong in the registry, nowhere else.
+fn check_magic_outside_registry(sources: &[SourceFile], v: &mut Vec<String>) {
+    for s in sources {
+        if s.rel == "transport/tags.rs" {
+            continue;
+        }
+        for (no, line) in non_test_lines(&s.text) {
+            if !is_comment(line) && line.contains("Tag::User(0x") {
+                v.push(format!(
+                    "{}:{no}: raw tag magic outside the registry — define it in \
+                     transport/tags.rs and add a PROTOCOL row",
+                    s.rel
+                ));
+            }
+        }
+    }
+}
+
+/// Extract every hex magic on a non-test registry line.
+fn magics_in(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(at) = rest.find("Tag::User(0x") {
+        let hex: String = rest[at + "Tag::User(0x".len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_hexdigit())
+            .collect::<String>()
+            .to_ascii_uppercase();
+        if !hex.is_empty() {
+            out.push(hex);
+        }
+        rest = &rest[at + "Tag::User(0x".len()..];
+    }
+    out
+}
+
+/// L2: two registry constants with one magic.
+fn check_registry_collisions(reg: &SourceFile, v: &mut Vec<String>) {
+    let mut seen: Vec<(String, usize)> = Vec::new();
+    for (no, line) in non_test_lines(&reg.text) {
+        if is_comment(line) || !line.contains("const ") {
+            continue;
+        }
+        for hex in magics_in(line) {
+            if let Some((_, first)) = seen.iter().find(|(h, _)| *h == hex) {
+                v.push(format!(
+                    "{}:{no}: tag magic 0x{hex} collides with the constant on line {first}",
+                    reg.rel
+                ));
+            } else {
+                seen.push((hex, no));
+            }
+        }
+    }
+}
+
+/// The source tokens each PROTOCOL row is referred to by: core tags as
+/// `Tag::Order`-style paths, user tags by their constant name.
+fn registry_tag_tokens(reg: &SourceFile, v: &mut Vec<String>) -> Vec<String> {
+    let mut out = Vec::new();
+    for (no, line) in non_test_lines(&reg.text) {
+        let Some(at) = line.find("name: \"") else { continue };
+        let rest = &line[at + "name: \"".len()..];
+        let Some(end) = rest.find('"') else { continue };
+        let name = &rest[..end];
+        let token = match name {
+            "ORDER" => "Tag::Order".to_string(),
+            "FOLD" => "Tag::Fold".to_string(),
+            "EXIT" => "Tag::Exit".to_string(),
+            "ABORT" => "Tag::Abort".to_string(),
+            n if n.starts_with("TAG_") => n.to_string(),
+            other => {
+                v.push(format!(
+                    "{}:{no}: PROTOCOL row \"{other}\" is neither a core tag nor TAG_*",
+                    reg.rel
+                ));
+                continue;
+            }
+        };
+        if out.contains(&token) {
+            v.push(format!("{}:{no}: duplicate PROTOCOL row for {token}", reg.rel));
+        } else {
+            out.push(token);
+        }
+    }
+    out
+}
+
+/// L3: every registered tag has a send site and a receive site in
+/// non-test code outside the registry. "Send" evidence is a `send` call
+/// or a `Message { tag: … }` construction; "receive" evidence is any
+/// `recv` family call naming the tag.
+fn check_send_recv_coverage(
+    sources: &[SourceFile],
+    tag_tokens: &[String],
+    v: &mut Vec<String>,
+) {
+    for token in tag_tokens {
+        let mut sent = false;
+        let mut received = false;
+        for s in sources {
+            if s.rel == "transport/tags.rs" {
+                continue;
+            }
+            for (_, line) in non_test_lines(&s.text) {
+                if is_comment(line) || !line.contains(token.as_str()) {
+                    continue;
+                }
+                if line.contains("send") || line.contains("tag:") || line.contains("record") {
+                    sent = true;
+                }
+                if line.contains("recv") {
+                    received = true;
+                }
+            }
+        }
+        if !sent {
+            v.push(format!(
+                "protocol tag {token} is never sent — dead PROTOCOL row, or its \
+                 sender bypasses the registry constant"
+            ));
+        }
+        if !received {
+            v.push(format!(
+                "protocol tag {token} is never received — every send of it \
+                 becomes an undrained orphan"
+            ));
+        }
+    }
+}
+
+/// L4: `*_WIRE_BYTES: usize = N * 8` constants must match the leaf count
+/// of the `type Wire = (…)` decoder shape in the same file.
+fn check_wire_sizes(sources: &[SourceFile], v: &mut Vec<String>) {
+    const SCALARS: &[&str] = &[
+        "usize", "u64", "u32", "u16", "u8", "f64", "f32", "i64", "i32", "i16", "i8", "bool",
+    ];
+    for s in sources {
+        for (no, line) in non_test_lines(&s.text) {
+            if is_comment(line) || !line.contains("_WIRE_BYTES: usize") {
+                continue;
+            }
+            let Some(eq) = line.find('=') else { continue };
+            let rhs = line[eq + 1..].trim().trim_end_matches(';').trim();
+            let Some(n) = rhs
+                .strip_suffix("* 8")
+                .and_then(|x| x.trim().parse::<usize>().ok())
+            else {
+                v.push(format!(
+                    "{}:{no}: wire-size constant not of the checkable `N * 8` form",
+                    s.rel
+                ));
+                continue;
+            };
+            let wire_line = non_test_lines(&s.text)
+                .find(|(_, l)| !is_comment(l) && l.contains("type Wire = "));
+            match wire_line {
+                None => v.push(format!(
+                    "{}:{no}: wire-size constant has no `type Wire = (…)` decoder \
+                     shape in this file to check against",
+                    s.rel
+                )),
+                Some((wno, wl)) => {
+                    let leaves = wl
+                        .split(|c: char| !c.is_ascii_alphanumeric())
+                        .filter(|t| SCALARS.contains(t))
+                        .count();
+                    if leaves != n {
+                        v.push(format!(
+                            "{}:{no}: wire size says {n} fields but the `type Wire` \
+                             on line {wno} has {leaves} — encoder/decoder drift",
+                            s.rel
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// L5: the unwrap ratchet over `skeleton/` and `transport/` non-test
+/// code. Returns the observed count.
+fn check_unwrap_ratchet(
+    sources: &[SourceFile],
+    budget: usize,
+    v: &mut Vec<String>,
+    notes: &mut Vec<String>,
+) -> usize {
+    let mut count = 0usize;
+    let mut sites = Vec::new();
+    for s in sources {
+        if !(s.rel.starts_with("skeleton/") || s.rel.starts_with("transport/")) {
+            continue;
+        }
+        for (no, line) in non_test_lines(&s.text) {
+            if is_comment(line) {
+                continue;
+            }
+            let hits = line.matches(".unwrap()").count() + line.matches(".expect(").count();
+            if hits > 0 {
+                count += hits;
+                sites.push(format!("{}:{no}", s.rel));
+            }
+        }
+    }
+    if count > budget {
+        v.push(format!(
+            "unwrap ratchet: {count} non-test .unwrap()/.expect( sites in \
+             skeleton/ + transport/, budget is {budget} (see \
+             tools/bsf-lint/unwrap-ratchet.txt) — return a typed BsfError \
+             instead. Sites: {}",
+            sites.join(", ")
+        ));
+    } else if count < budget {
+        notes.push(format!(
+            "unwrap ratchet can tighten: {count} sites remain, budget is {budget} \
+             — lower tools/bsf-lint/unwrap-ratchet.txt to {count}"
+        ));
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rel: &str, text: &str) -> SourceFile {
+        SourceFile { rel: rel.to_string(), text: text.to_string() }
+    }
+
+    /// A minimal healthy tree: a two-row registry, one sender, one
+    /// receiver, one self-consistent wire constant.
+    fn clean_fixture() -> Vec<SourceFile> {
+        vec![
+            file(
+                "transport/tags.rs",
+                r#"
+pub const TAG_PING: Tag = Tag::User(0x5049);
+pub const PROTOCOL: &[TagSpec] = &[
+    TagSpec { tag: Tag::Order, name: "ORDER", sender: Role::Master, receiver: Role::Worker, payload: "p" },
+    TagSpec { tag: TAG_PING, name: "TAG_PING", sender: Role::Worker, receiver: Role::Master, payload: "empty" },
+];
+"#,
+            ),
+            file(
+                "skeleton/master.rs",
+                r#"
+pub(crate) const REPORT_WIRE_BYTES: usize = 3 * 8;
+type Wire = (usize, f64, u64);
+fn step(comm: &dyn Communicator) {
+    comm.send(0, Tag::Order, vec![]).ok();
+    let _ = comm.recv_tags(None, &[TAG_PING]);
+}
+"#,
+            ),
+            file(
+                "skeleton/worker.rs",
+                r#"
+fn run(comm: &dyn Communicator) {
+    let _ = comm.recv(1, Tag::Order);
+    comm.send(1, TAG_PING, vec![]).ok();
+}
+#[cfg(test)]
+mod tests {
+    fn in_tests_is_fine() { None::<u8>.unwrap(); let _ = Tag::User(0xDEAD); }
+}
+"#,
+            ),
+        ]
+    }
+
+    #[test]
+    fn clean_tree_passes() {
+        let report = lint(&clean_fixture(), 0);
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+        assert_eq!(report.tags, 2);
+        assert_eq!(report.unwraps, 0);
+    }
+
+    #[test]
+    fn colliding_magic_fails() {
+        let mut fx = clean_fixture();
+        fx[0].text.insert_str(
+            0,
+            "pub const TAG_CLASH: Tag = Tag::User(0x5049);\n",
+        );
+        let report = lint(&fx, 0);
+        assert!(
+            report.violations.iter().any(|v| v.contains("collides")),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn magic_outside_registry_fails() {
+        let mut fx = clean_fixture();
+        fx[1].text.push_str("const SNEAKY: Tag = Tag::User(0xBEEF);\n");
+        let report = lint(&fx, 0);
+        assert!(
+            report.violations.iter().any(|v| v.contains("outside the registry")),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn unreceived_and_unsent_tags_fail() {
+        let mut fx = clean_fixture();
+        // Cut the worker file: TAG_PING loses its sender, ORDER its receiver.
+        fx[2].text = String::from("fn run() {}\n");
+        let report = lint(&fx, 0);
+        assert!(
+            report.violations.iter().any(|v| v.contains("TAG_PING is never sent")),
+            "{:?}",
+            report.violations
+        );
+        assert!(
+            report.violations.iter().any(|v| v.contains("Tag::Order is never received")),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn wire_size_drift_fails() {
+        let mut fx = clean_fixture();
+        fx[1].text = fx[1].text.replace("3 * 8", "4 * 8");
+        let report = lint(&fx, 0);
+        assert!(
+            report.violations.iter().any(|v| v.contains("encoder/decoder drift")),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn unwrap_ratchet_counts_and_gates() {
+        let mut fx = clean_fixture();
+        fx[2].text = fx[2]
+            .text
+            .replace("comm.send(1, TAG_PING, vec![]).ok();", "comm.send(1, TAG_PING, vec![]).unwrap();");
+        let over = lint(&fx, 0);
+        assert_eq!(over.unwraps, 1);
+        assert!(
+            over.violations.iter().any(|v| v.contains("unwrap ratchet")),
+            "{:?}",
+            over.violations
+        );
+        let at = lint(&fx, 1);
+        assert!(at.violations.is_empty(), "{:?}", at.violations);
+        let under = lint(&fx, 2);
+        assert!(under.notes.iter().any(|n| n.contains("can tighten")));
+    }
+
+    #[test]
+    fn test_modules_and_comments_are_ignored() {
+        // The clean fixture's worker test module uses .unwrap() and a raw
+        // magic; neither may count. Same for commented-out code.
+        let mut fx = clean_fixture();
+        fx[1].text.push_str("// let bad = Tag::User(0xDEAD).unwrap();\n");
+        let report = lint(&fx, 0);
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+        assert_eq!(report.unwraps, 0);
+    }
+
+    #[test]
+    fn budget_file_parses_past_comments() {
+        assert_eq!(parse_budget("# comment\n\n 5 \n"), Some(5));
+        assert_eq!(parse_budget("# only comments\n"), None);
+        assert_eq!(parse_budget("five"), None);
+    }
+}
