@@ -501,9 +501,9 @@ pub fn compare(
     }
     if baseline.bootstrap {
         report.push_str(
-            "  note: baseline is a bootstrap placeholder — regenerate it from a real\n  \
-             run (`bsf bench --quick --label baseline --out BENCH_baseline.json`) and\n  \
-             commit it to arm the wall-clock/iteration gate.\n",
+            "  note: baseline is a bootstrap placeholder — promote a real run over\n  \
+             it (`bsf bench --quick --promote`) and commit the result to arm the\n  \
+             wall-clock/iteration gate.\n",
         );
     }
     if violations.is_empty() {
@@ -515,6 +515,52 @@ pub fn compare(
             violations.join("\n  ")
         )))
     }
+}
+
+/// Write `suite` as the committed measured baseline at `path` (`bsf
+/// bench --promote`). Refuses anything that would weaken the regression
+/// gate: a bootstrap placeholder, an empty or partially-measured sweep,
+/// or a sweep that doesn't cover its own mode's grid — so a promoted
+/// document always carries one real timing per gated case. The written
+/// copy is relabeled `baseline` with `bootstrap: false`.
+pub fn promote(suite: &BenchSuite, path: &Path) -> Result<(), BsfError> {
+    if suite.bootstrap {
+        return Err(BsfError::bench(
+            "refusing to promote a bootstrap placeholder (run a real sweep first)",
+        ));
+    }
+    if suite.records.is_empty() {
+        return Err(BsfError::bench("refusing to promote an empty sweep"));
+    }
+    for r in &suite.records {
+        if !r.wall_seconds.is_finite() || r.wall_seconds <= 0.0 {
+            return Err(BsfError::bench(format!(
+                "refusing to promote: {} has no measured wall time ({}s)",
+                r.case.key(),
+                r.wall_seconds
+            )));
+        }
+        if r.iterations == 0 {
+            return Err(BsfError::bench(format!(
+                "refusing to promote: {} recorded zero iterations",
+                r.case.key()
+            )));
+        }
+    }
+    for case in grid(&suite.mode)? {
+        let key = case.key();
+        if !suite.records.iter().any(|r| r.case.key() == key) {
+            return Err(BsfError::bench(format!(
+                "refusing to promote: {} grid case {key} missing from the sweep",
+                suite.mode
+            )));
+        }
+    }
+    let mut doc = suite.clone();
+    doc.label = "baseline".to_string();
+    doc.bootstrap = false;
+    std::fs::write(path, doc.to_json())
+        .map_err(|e| BsfError::Io { path: path.to_path_buf(), source: e })
 }
 
 #[cfg(test)]
@@ -628,6 +674,64 @@ mod tests {
         // ... but still fails when the grid is not covered.
         let empty = suite("pr", vec![], false);
         assert!(compare(&base, &empty, 0.25).is_err());
+    }
+
+    #[test]
+    fn promote_writes_relabeled_measured_baseline() {
+        let records: Vec<BenchRecord> = grid("quick")
+            .unwrap()
+            .into_iter()
+            .map(|case| BenchRecord {
+                case,
+                iterations: 9,
+                wall_seconds: 0.01,
+                phases: [0.0; 4],
+                messages: 4,
+                bytes: 128,
+            })
+            .collect();
+        let want = records.len();
+        let s = BenchSuite {
+            label: "pr".into(),
+            mode: "quick".into(),
+            bootstrap: false,
+            records,
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("bsf-promote-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_baseline.json");
+        promote(&s, &path).unwrap();
+        let written =
+            BenchSuite::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(written.label, "baseline");
+        assert!(!written.bootstrap);
+        assert_eq!(written.records.len(), want);
+    }
+
+    #[test]
+    fn promote_refuses_weak_candidates() {
+        // Every rejection fires before the write, so the path never
+        // needs to exist.
+        let path = std::path::Path::new("/nonexistent/never-written.json");
+        let boot = suite("x", vec![record(96, 9, 0.01)], true);
+        assert!(promote(&boot, path).unwrap_err().to_string().contains("bootstrap"));
+        assert!(promote(&suite("x", vec![], false), path).is_err());
+        let zero_wall = suite("x", vec![record(96, 9, 0.0)], false);
+        assert!(promote(&zero_wall, path)
+            .unwrap_err()
+            .to_string()
+            .contains("wall time"));
+        let zero_iter = suite("x", vec![record(96, 0, 0.01)], false);
+        assert!(promote(&zero_iter, path)
+            .unwrap_err()
+            .to_string()
+            .contains("zero iterations"));
+        // One measured record can't cover the quick grid.
+        let partial = suite("x", vec![record(96, 9, 0.01)], false);
+        let err = promote(&partial, path).unwrap_err();
+        assert!(err.to_string().contains("missing from the sweep"), "{err}");
     }
 
     #[test]

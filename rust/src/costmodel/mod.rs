@@ -132,6 +132,30 @@ impl CostParams {
         self.with_openmp(threads).iteration_time(k)
     }
 
+    /// Predicted per-iteration time split across the four master phases
+    /// (`[send_order, gather, master_reduce, process]`, seconds), the
+    /// decomposition of `iteration_time(k)` the live telemetry compares
+    /// against the measured [`PhaseTimers`](crate::metrics::PhaseTimers):
+    ///
+    /// * send_order    = K·(L + t_send)           (K sequential orders)
+    /// * gather        = (t_map + t_red)/K + K·(L + t_recv)
+    ///                   (the master's Gather timer spans the workers'
+    ///                   parallel compute *and* the K fold transfers)
+    /// * master_reduce = (K-1)·t_op
+    /// * process       = t_proc
+    ///
+    /// The four entries sum to `iteration_time(k)` exactly.
+    pub fn predicted_phases(&self, k: usize) -> [f64; 4] {
+        assert!(k >= 1);
+        let kf = k as f64;
+        [
+            kf * (self.latency + self.t_send),
+            (self.t_map + self.t_red) / kf + kf * (self.latency + self.t_recv),
+            (kf - 1.0) * self.t_op,
+            self.t_proc,
+        ]
+    }
+
     /// Multicore extension with an explicit fork/join overhead `t_fork`
     /// (seconds per parallel region, i.e. per iteration): the map
     /// divides by `threads`, communication does not, and each iteration
@@ -278,6 +302,24 @@ mod tests {
         tiny.t_map = 1e-6;
         let hybrid = tiny.with_openmp_overhead(8, 1e-3);
         assert!(hybrid.iteration_time(1) > tiny.iteration_time(1));
+    }
+
+    #[test]
+    fn predicted_phases_sum_to_iteration_time() {
+        let p = sample();
+        for k in [1usize, 2, 7, 64] {
+            let phases = p.predicted_phases(k);
+            let sum: f64 = phases.iter().sum();
+            assert!(
+                (sum - p.iteration_time(k)).abs() < 1e-15,
+                "K={k}: phases {phases:?} sum {sum} != T(K) {}",
+                p.iteration_time(k)
+            );
+        }
+        // Shape checks: reduce phase vanishes at K=1, process is the
+        // K-independent constant.
+        assert_eq!(p.predicted_phases(1)[2], 0.0);
+        assert_eq!(p.predicted_phases(1)[3], p.predicted_phases(64)[3]);
     }
 
     #[test]

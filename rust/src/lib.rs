@@ -101,6 +101,8 @@ pub mod util;
 pub mod verify;
 
 pub use error::{BsfError, BsfResult};
+pub use metrics::exporter::MetricsExporter;
+pub use metrics::telemetry::{RunEvent, RunTelemetry};
 pub use skeleton::{
     Bsf, BsfConfig, BsfProblem, BsfRun, CancelToken, Checkpoint, Clock, Cluster,
     ClusterEngine, Driver, Engine, FaultPolicy, FusedNativeBackend, IterationEvent,

@@ -20,6 +20,10 @@
 //!                          explore every schedule of a small run, check
 //!                          deadlock-freedom, tag routing, orphan-freedom
 //!                          and schedule determinism
+//! * `top <addr>`        — live fleet view: poll a running master's
+//!                          `/metrics` endpoint (see `--metrics-addr`)
+//!                          and render iteration progress, phase ratios
+//!                          and per-worker health
 //! * `artifacts`         — list the AOT XLA artifacts
 //!
 //! Problems: `jacobi`, `jacobi-map`, `cimmino`, `gravity`, `montecarlo`,
@@ -32,10 +36,15 @@
 //! the native map with a warning when the service or artifacts are
 //! missing.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use bsf::bench::harness as bench_harness;
 use bsf::bench::sweep::{print_sweep, speedup_sweep};
 use bsf::costmodel::{calibrate, ClusterProfile};
 use bsf::error::BsfError;
+use bsf::metrics::exporter::{http_get, MetricsExporter};
+use bsf::metrics::telemetry::RunTelemetry;
 use bsf::problems::apex::ApexProblem;
 use bsf::problems::cimmino::CimminoProblem;
 use bsf::problems::gravity::GravityProblem;
@@ -46,7 +55,7 @@ use bsf::problems::montecarlo::MonteCarloProblem;
 use bsf::runtime::backend::{XlaMapBackend, XlaMapSpec};
 use bsf::runtime::service::XlaService;
 use bsf::runtime::XlaRuntime;
-use bsf::skeleton::cluster::run_persistent_worker;
+use bsf::skeleton::cluster::{run_persistent_worker, Cluster};
 use bsf::skeleton::process::run_process_worker;
 use bsf::skeleton::{
     Bsf, BsfConfig, BsfProblem, FaultPolicy, FusedNativeBackend, MapBackend,
@@ -55,10 +64,11 @@ use bsf::skeleton::{
 };
 use bsf::util::cli::ArgMap;
 use bsf::util::faultsim::run_flaky_process_worker;
+use bsf::util::json::Json;
 use bsf::verify::{run_verify, Mutation, VerifyConfig};
 
 const USAGE: &str = "\
-usage: bsf <run|worker|sim|sweep|predict|bench|verify|artifacts> [problem] [options]
+usage: bsf <run|worker|sim|sweep|predict|bench|verify|top|artifacts> [problem] [options]
 
 problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | lpp | apex
 
@@ -76,10 +86,28 @@ options by subcommand:
     --max-iter I   iteration cap (default 100000)
     --deadline S   stop after S seconds on the engine's clock (checked
                    between iterations; the running iteration completes)
-    --engine E     auto | serial | threaded | process | sim  (run only)
-    --listen A     with --engine process: bind A (host:port) and wait
-                   for K pre-started `bsf worker` processes instead of
-                   self-spawning them on localhost
+    --engine E     auto | serial | threaded | process | cluster | sim
+                   (run only; cluster = persistent worker pool over TCP,
+                   self-spawned or pre-started via --listen + --persist)
+    --listen A     with --engine process or cluster: bind A (host:port)
+                   and wait for K pre-started `bsf worker` processes
+                   instead of self-spawning them on localhost (cluster
+                   workers must be started with --persist)
+    --metrics-addr A
+                   serve live telemetry over HTTP on A (host:port; port
+                   0 picks an ephemeral port, printed to stderr as
+                   'metrics: listening on ...'): GET /metrics returns
+                   the cumulative bsf-metrics/1 snapshot, GET /events
+                   the buffered bsf-events/1 stream; poll with
+                   `bsf top A`
+    --events jsonl stream one bsf-events/1 JSON object per iteration to
+                   stderr (stdout stays reserved for results)
+    --metrics-interval N
+                   emit every Nth iteration event on stderr (default 1;
+                   the HTTP endpoints always see every iteration)
+    --heartbeat N  workers report health (TAG_HEARTBEAT) every N
+                   iterations; 0 disables (default 0, or 8 when
+                   telemetry is on)
     --fault P      abort | redistribute | restart — what to do when a
                    worker is lost mid-run (default abort; redistribute
                    re-splits over the survivors, restart relaunches at
@@ -103,6 +131,9 @@ options by subcommand:
     --persist      stay alive across runs: serve a persistent cluster
                    (NEWRUN/SHUTDOWN protocol) instead of exiting after
                    one run — the worker side of Cluster::spawn/connect
+    --heartbeat N  send a health report every N iterations (must match
+                   the master's --heartbeat; the launcher passes it
+                   automatically on self-spawned runs)
     --kill-rank R / --kill-after-folds N
                    fault-injection smoke (testing): if R equals this
                    worker's --rank, hard-exit before sending fold N+1
@@ -120,6 +151,17 @@ options by subcommand:
     --baseline FILE    compare against FILE; exit 1 on iteration drift,
                        missing cases, or wall-clock outside tolerance
     --tolerance X      relative wall-clock band (default 0.25 = ±25%)
+    --promote [FILE]   after the sweep (and after --baseline passes, if
+                       given), write this run as the measured baseline —
+                       to FILE, or over the --baseline path (default
+                       BENCH_baseline.json) — replacing a bootstrap
+                       document with real timings; refuses unmeasured or
+                       grid-incomplete sweeps
+  top (live fleet view of a running master; see run --metrics-addr):
+    <addr>             the master's metrics address (host:port), printed
+                       by `bsf run --metrics-addr` at startup
+    --interval S       refresh period in seconds (default 1.0)
+    --once             print one snapshot and exit (no screen clearing)
   verify (bounded model checking of the message protocol; see README
           'Verification'):
     --problem P        jacobi | cimmino  (default jacobi; the model
@@ -152,8 +194,14 @@ enum EngineOpt {
     Serial,
     Threaded,
     Process,
+    Cluster,
     Simulated(ClusterProfile),
 }
+
+/// Heartbeat period applied when telemetry is on and `--heartbeat` was
+/// not given: frequent enough for a live `bsf top` view, sparse enough
+/// to stay invisible next to an order/fold round-trip.
+const DEFAULT_HEARTBEAT_EVERY: usize = 8;
 
 #[derive(Clone, Copy, PartialEq)]
 enum BackendOpt {
@@ -179,9 +227,10 @@ fn engine_from(args: &ArgMap) -> Result<EngineOpt, BsfError> {
         "serial" => Ok(EngineOpt::Serial),
         "threaded" => Ok(EngineOpt::Threaded),
         "process" => Ok(EngineOpt::Process),
+        "cluster" => Ok(EngineOpt::Cluster),
         "sim" | "simulated" => Ok(EngineOpt::Simulated(profile_from(args)?)),
         other => Err(BsfError::usage(format!(
-            "unknown --engine {other:?} (auto|serial|threaded|process|sim)"
+            "unknown --engine {other:?} (auto|serial|threaded|process|cluster|sim)"
         ))),
     }
 }
@@ -214,7 +263,8 @@ fn common_from(args: &ArgMap) -> Result<Common, BsfError> {
     let mut cfg = BsfConfig::with_workers(k)
         .threads_per_worker(threads)
         .trace(args.usize_or("trace", 0)?)
-        .max_iter(args.usize_or("max-iter", 100_000)?);
+        .max_iter(args.usize_or("max-iter", 100_000)?)
+        .heartbeat(args.usize_or("heartbeat", 0)?);
     if args.get("deadline").is_some() {
         let secs = args.f64_or("deadline", 0.0)?;
         // try_from_secs_f64 rejects NaN/infinite/overflowing values, so
@@ -270,6 +320,7 @@ fn worker_args(name: &str, c: &Common, args: &ArgMap) -> Vec<String> {
         ("samples", c.samples.to_string()),
         ("threads-per-worker", c.cfg.threads_per_worker.to_string()),
         ("backend", args.str_or("backend", "native").to_string()),
+        ("heartbeat", c.cfg.heartbeat_every.to_string()),
     ];
     let mut argv = vec!["worker".to_string()];
     for (k, v) in kv {
@@ -334,6 +385,9 @@ fn apply_engine<P: BsfProblem>(
             Some(addr) => b.engine(ProcessEngine::listen(addr)),
             None => b.engine(ProcessEngine::spawn_args(worker_args(name, c, args))),
         },
+        // Unreachable from cmd_run — run_problem intercepts the cluster
+        // engine (ClusterSpec::start needs the problem instance).
+        EngineOpt::Cluster => b,
         EngineOpt::Simulated(profile) => b.engine(SimulatedEngine::new(profile)),
     }
 }
@@ -406,15 +460,25 @@ fn finish<Param>(
     r: RunReport<Param>,
     describe: impl Fn(&Param) -> String,
 ) -> Result<(), BsfError> {
-    println!("done: {}", r.summary());
-    println!("phases: {}", r.phases.summary());
+    // stdout carries results only (`done:` + `result:`), so piped output
+    // stays machine-parseable; diagnostics go to stderr.
+    println!("done: {}", r.summary_without_losses());
+    eprintln!("phases: {}", r.phases.summary());
     let traffic = r.transport_summary();
     if !traffic.is_empty() {
-        println!("traffic: {traffic}");
+        eprintln!("traffic: {traffic}");
     }
     let hybrid = r.hybrid_summary();
     if !hybrid.is_empty() {
-        println!("hybrid: {hybrid}");
+        eprintln!("hybrid: {hybrid}");
+    }
+    if !r.losses.is_empty() {
+        let ranks: Vec<String> = r.losses.iter().map(|r| r.to_string()).collect();
+        eprintln!("lost={}", ranks.join(","));
+    }
+    if !r.rejoined.is_empty() {
+        let ranks: Vec<String> = r.rejoined.iter().map(|r| r.to_string()).collect();
+        eprintln!("rejoined={}", ranks.join(","));
     }
     println!("result: {}", describe(&r.param));
     Ok(())
@@ -424,19 +488,95 @@ const RUN_OPTS: &[&str] = &[
     "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
     "max-iter", "deadline", "engine", "backend", "profile", "steps", "samples",
     "listen", "fault", "max-losses", "kill-rank", "kill-after-folds",
+    "metrics-addr", "metrics-interval", "events", "heartbeat",
 ];
+
+/// Run one problem to completion under the chosen engine. The
+/// persistent-cluster engine can't go through `apply_engine` —
+/// `ClusterSpec::start` needs the problem instance to handshake the
+/// worker pool — so it is wired here; every other engine defers to
+/// `apply_engine`. When live telemetry is attached, the cost model is
+/// calibrated first so `/metrics` and the event stream carry
+/// predicted-vs-measured phase seconds.
+fn run_problem<P: BsfProblem>(
+    p: P,
+    engine: EngineOpt,
+    args: &ArgMap,
+    name: &str,
+    c: &Common,
+    attach: impl FnOnce(Bsf<P>) -> Bsf<P>,
+) -> Result<RunReport<P::Param>, BsfError> {
+    if let Some(t) = &c.cfg.telemetry {
+        let cal = calibrate(&p, profile_from(args)?, 3);
+        t.set_cost_model(&cal.params, c.cfg.workers.max(1));
+    }
+    if matches!(engine, EngineOpt::Cluster) {
+        let spec = match args.get("listen") {
+            Some(addr) => Cluster::connect(c.cfg.workers, addr),
+            None => Cluster::spawn(c.cfg.workers, worker_args(name, c, args)),
+        };
+        let cluster = spec.start(&p)?;
+        let session = attach(Bsf::new(p).config(c.cfg.clone()).engine(cluster.engine()));
+        let report = session.run()?;
+        cluster.shutdown()?;
+        Ok(report)
+    } else {
+        attach(apply_engine(Bsf::new(p).config(c.cfg.clone()), engine, args, name, c))
+            .run()
+    }
+}
 
 fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
     args.ensure_known(RUN_OPTS)?;
-    // --listen only means something to the process engine; anywhere else
-    // it would be silently ignored while remote workers wait forever.
-    if args.get("listen").is_some() && !matches!(engine, EngineOpt::Process) {
+    // --listen only means something to the engines that bind a TCP
+    // rendezvous; anywhere else it would be silently ignored while
+    // remote workers wait forever.
+    if args.get("listen").is_some()
+        && !matches!(engine, EngineOpt::Process | EngineOpt::Cluster)
+    {
         return Err(BsfError::usage(
-            "--listen requires --engine process (it binds the master's \
-             address for pre-started `bsf worker` processes)",
+            "--listen requires --engine process or cluster (it binds the \
+             master's address for pre-started `bsf worker` processes)",
         ));
     }
-    let c = common_from(args)?;
+    let mut c = common_from(args)?;
+
+    // Live telemetry: `--events jsonl` streams schema-versioned
+    // iteration events to stderr (stdout stays reserved for results);
+    // `--metrics-addr` additionally serves GET /metrics + /events over
+    // HTTP for `bsf top`. The exporter must outlive the run, so it is
+    // held here until cmd_run returns.
+    let events_jsonl = match args.get("events") {
+        None => false,
+        Some("jsonl") => true,
+        Some(other) => {
+            return Err(BsfError::usage(format!("unknown --events {other:?} (jsonl)")))
+        }
+    };
+    let metrics_interval = args.usize_or("metrics-interval", 1)?.max(1);
+    let mut _exporter: Option<MetricsExporter> = None;
+    if events_jsonl || args.get("metrics-addr").is_some() {
+        let mut sink = RunTelemetry::new();
+        if events_jsonl {
+            sink = sink.events_to_stderr(metrics_interval as u64);
+        }
+        let sink = Arc::new(sink);
+        if args.get("heartbeat").is_none() {
+            // Live worker health needs beats; default them on with
+            // telemetry (explicit --heartbeat 0 still disables).
+            c.cfg.heartbeat_every = DEFAULT_HEARTBEAT_EVERY;
+        }
+        if let Some(addr) = args.get("metrics-addr") {
+            let exp = MetricsExporter::bind(addr, Arc::clone(&sink))?;
+            eprintln!(
+                "metrics: listening on {} (GET /metrics, GET /events)",
+                exp.addr()
+            );
+            _exporter = Some(exp);
+        }
+        c.cfg.telemetry = Some(sink);
+    }
+
     let backend = backend_from(args)?;
     // One service outlives the whole run (worker handles clone from it).
     let service = if backend == BackendOpt::Xla {
@@ -446,50 +586,48 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
     };
     let name = args.positional(0).unwrap_or("jacobi");
     match name {
-        "jacobi" => {
-            let b = Bsf::new(mk_jacobi(&c)).config(c.cfg.clone());
-            let b = apply_engine(b, engine, args, name, &c);
-            let b = attach_xla_capable(b, backend, &service);
-            finish(b.run()?, |x| head(x))
-        }
-        "jacobi-map" => {
-            let b = Bsf::new(mk_jacobi_map(&c)).config(c.cfg.clone());
-            let b = apply_engine(b, engine, args, name, &c);
-            let b = attach_xla_capable(b, backend, &service);
-            finish(b.run()?, |x| head(x))
-        }
-        "cimmino" => {
-            let b = Bsf::new(mk_cimmino(&c)).config(c.cfg.clone());
-            let b = apply_engine(b, engine, args, name, &c);
-            let b = attach_xla_capable(b, backend, &service);
-            finish(b.run()?, |x| head(x))
-        }
-        "gravity" => {
-            let b = Bsf::new(mk_gravity(&c)).config(c.cfg.clone());
-            let b = apply_engine(b, engine, args, name, &c);
-            let b = attach_xla_capable(b, backend, &service);
-            finish(b.run()?, |x| head(x))
-        }
-        "montecarlo" => {
-            let b = Bsf::new(mk_montecarlo(&c)).config(c.cfg.clone());
-            let b = apply_engine(b, engine, args, name, &c);
-            let b = attach_native_only(b, backend, "montecarlo");
-            finish(b.run()?, |t| {
-                format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1)
-            })
-        }
-        "lpp" => {
-            let b = Bsf::new(mk_lpp(&c)).config(c.cfg.clone());
-            let b = apply_engine(b, engine, args, name, &c);
-            let b = attach_native_only(b, backend, "lpp");
-            finish(b.run()?, |x| head(x))
-        }
-        "apex" => {
-            let b = Bsf::new(mk_apex(&c)).config(c.cfg.clone());
-            let b = apply_engine(b, engine, args, name, &c);
-            let b = attach_native_only(b, backend, "apex");
-            finish(b.run()?, |(x, _)| head(x))
-        }
+        "jacobi" => finish(
+            run_problem(mk_jacobi(&c), engine, args, name, &c, |b| {
+                attach_xla_capable(b, backend, &service)
+            })?,
+            |x| head(x),
+        ),
+        "jacobi-map" => finish(
+            run_problem(mk_jacobi_map(&c), engine, args, name, &c, |b| {
+                attach_xla_capable(b, backend, &service)
+            })?,
+            |x| head(x),
+        ),
+        "cimmino" => finish(
+            run_problem(mk_cimmino(&c), engine, args, name, &c, |b| {
+                attach_xla_capable(b, backend, &service)
+            })?,
+            |x| head(x),
+        ),
+        "gravity" => finish(
+            run_problem(mk_gravity(&c), engine, args, name, &c, |b| {
+                attach_xla_capable(b, backend, &service)
+            })?,
+            |x| head(x),
+        ),
+        "montecarlo" => finish(
+            run_problem(mk_montecarlo(&c), engine, args, name, &c, |b| {
+                attach_native_only(b, backend, "montecarlo")
+            })?,
+            |t| format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1),
+        ),
+        "lpp" => finish(
+            run_problem(mk_lpp(&c), engine, args, name, &c, |b| {
+                attach_native_only(b, backend, "lpp")
+            })?,
+            |x| head(x),
+        ),
+        "apex" => finish(
+            run_problem(mk_apex(&c), engine, args, name, &c, |b| {
+                attach_native_only(b, backend, "apex")
+            })?,
+            |(x, _)| head(x),
+        ),
         other => Err(BsfError::usage(format!("unknown problem {other:?}"))),
     }
 }
@@ -497,7 +635,7 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
 const WORKER_OPTS: &[&str] = &[
     "connect", "rank", "problem", "n", "seed", "eps", "steps", "samples", "omp",
     "threads-per-worker", "backend", "persist", "fault", "max-losses", "kill-rank",
-    "kill-after-folds",
+    "kill-after-folds", "heartbeat",
 ];
 
 /// One worker process of a distributed run (the child side of
@@ -683,7 +821,7 @@ fn cmd_predict(args: &ArgMap) -> Result<(), BsfError> {
 /// the machine-readable `BENCH_*.json`, optionally gate against a
 /// committed baseline (the CI `bench-regression` job's core).
 fn cmd_bench(args: &ArgMap) -> Result<(), BsfError> {
-    args.ensure_known(&["quick", "full", "label", "out", "baseline", "tolerance"])?;
+    args.ensure_known(&["quick", "full", "label", "out", "baseline", "tolerance", "promote"])?;
     let mode = match (args.flag("quick"), args.flag("full")) {
         (true, true) => {
             return Err(BsfError::usage("--quick and --full are mutually exclusive"))
@@ -728,6 +866,23 @@ fn cmd_bench(args: &ArgMap) -> Result<(), BsfError> {
         let baseline = bench_harness::BenchSuite::parse(&text)?;
         let report = bench_harness::compare(&baseline, &suite, tolerance)?;
         print!("{report}");
+    }
+
+    // --promote runs last, so a failed --baseline gate (Err above) can
+    // never overwrite the baseline with a regressed sweep.
+    if let Some(promote_to) = args.get("promote") {
+        // Bare `--promote` parses as "true": write over the --baseline
+        // path (default BENCH_baseline.json); `--promote FILE` writes
+        // the measured baseline to FILE instead.
+        let path = match promote_to {
+            "true" | "1" | "yes" => args.str_or("baseline", "BENCH_baseline.json"),
+            explicit => explicit,
+        };
+        bench_harness::promote(&suite, std::path::Path::new(path))?;
+        println!(
+            "promoted {path}: measured baseline ({} case(s), mode {mode})",
+            suite.records.len()
+        );
     }
     Ok(())
 }
@@ -812,6 +967,152 @@ fn cmd_verify(args: &ArgMap) -> Result<(), BsfError> {
     }
 }
 
+/// Render one `/metrics` snapshot (a parsed `bsf-metrics/1` document)
+/// as the `bsf top` fleet view. Tolerant of missing fields so a newer
+/// master never crashes an older viewer.
+fn render_top(addr: &str, m: &Json) -> String {
+    let num = |k: &str| m.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let state = if m.get("ended").and_then(Json::as_bool) == Some(true) {
+        "ended"
+    } else {
+        "running"
+    };
+    let mut out = String::new();
+    out.push_str(&format!("bsf top — {addr} [{state}]\n"));
+    out.push_str(&format!(
+        "engine={} workers={} iteration={} elapsed={:.3}s losses={} rejoins={} \
+         generation={}\n",
+        m.get("engine").and_then(Json::as_str).unwrap_or("?"),
+        num("workers") as u64,
+        num("iteration") as u64,
+        num("elapsed_seconds"),
+        num("losses") as u64,
+        num("rejoins") as u64,
+        num("generation") as u64,
+    ));
+
+    out.push_str("\nphase            measured(s)  predicted(s)  meas/pred\n");
+    let phases = m.get("phases");
+    for name in ["send_order", "gather", "master_reduce", "process"] {
+        let cell = |section: &str| {
+            phases
+                .and_then(|p| p.get(section))
+                .and_then(|sec| sec.get(name))
+                .and_then(Json::as_f64)
+        };
+        let measured = cell("measured").unwrap_or(0.0);
+        match (cell("predicted"), cell("measured_over_predicted")) {
+            (Some(pred), Some(ratio)) => out.push_str(&format!(
+                "{name:<16}{measured:>12.6}{pred:>14.6}{ratio:>11.2}\n"
+            )),
+            _ => out.push_str(&format!(
+                "{name:<16}{measured:>12.6}{:>14}{:>11}\n",
+                "-", "-"
+            )),
+        }
+    }
+
+    out.push_str("\ntraffic:");
+    for tag in ["order", "fold", "exit", "abort", "user"] {
+        let t = |field: &str| {
+            m.get("traffic")
+                .and_then(|v| v.get(tag))
+                .and_then(|v| v.get(field))
+                .and_then(Json::as_u64)
+                .unwrap_or(0)
+        };
+        out.push_str(&format!(" {tag}={}msg/{}B", t("messages"), t("bytes")));
+    }
+    out.push('\n');
+
+    match m.get("workers_health").and_then(Json::as_arr) {
+        Some(rows) if !rows.is_empty() => {
+            out.push_str(
+                "\nrank  beats  iters  map(s)      sublist  threads  reassign  pid\n",
+            );
+            for w in rows {
+                let g = |k: &str| w.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                out.push_str(&format!(
+                    "{:<6}{:<7}{:<7}{:<12.6}{:<9}{:<9}{:<10}{}\n",
+                    g("rank") as u64,
+                    g("heartbeats") as u64,
+                    g("iterations") as u64,
+                    g("map_seconds"),
+                    g("sublist_length") as u64,
+                    g("threads") as u64,
+                    g("reassignments") as u64,
+                    g("pid") as u64,
+                ));
+            }
+        }
+        _ => out.push_str("\n(no worker heartbeats yet — run with --heartbeat N)\n"),
+    }
+
+    out.push_str(&format!(
+        "\nevents: total={} dropped={}\n",
+        num("events_total") as u64,
+        num("events_dropped") as u64,
+    ));
+    out
+}
+
+/// `bsf top <addr>`: poll a running master's `/metrics` endpoint and
+/// render a live fleet view — iteration progress, measured vs predicted
+/// phase seconds, per-tag traffic, and per-worker health from
+/// heartbeats.
+fn cmd_top(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(&["interval", "once"])?;
+    let addr = args
+        .positional(0)
+        .ok_or_else(|| {
+            BsfError::usage(
+                "top requires the master's metrics address (host:port) — \
+                 printed by `bsf run --metrics-addr` at startup",
+            )
+        })?
+        .to_string();
+    let interval = args.f64_or("interval", 1.0)?;
+    if !interval.is_finite() || interval <= 0.0 || interval > 3600.0 {
+        return Err(BsfError::usage(format!(
+            "--interval expects seconds in (0, 3600], got {interval}"
+        )));
+    }
+    let once = args.flag("once");
+    let timeout = Duration::from_secs(5);
+    let mut connected = false;
+    loop {
+        match http_get(&addr, "/metrics", timeout) {
+            Ok(body) => {
+                let doc = Json::parse(&body).map_err(|e| {
+                    BsfError::transport(format!("bad /metrics JSON from {addr}: {e}"))
+                })?;
+                let view = render_top(&addr, &doc);
+                if once {
+                    print!("{view}");
+                    return Ok(());
+                }
+                // Clear + home, then repaint (top-style refresh).
+                print!("\x1b[2J\x1b[H{view}");
+                use std::io::Write as _;
+                let _ = std::io::stdout().flush();
+                connected = true;
+                if doc.get("ended").and_then(Json::as_bool) == Some(true) {
+                    eprintln!("bsf top: run ended");
+                    return Ok(());
+                }
+            }
+            // The endpoint went away after we saw it: the run is over
+            // and the master exited — a clean end, not an error.
+            Err(e) if connected => {
+                eprintln!("bsf top: master gone ({e})");
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        }
+        std::thread::sleep(Duration::from_secs_f64(interval));
+    }
+}
+
 fn cmd_artifacts() -> Result<(), BsfError> {
     let rt = XlaRuntime::open_default()?;
     println!(
@@ -844,6 +1145,7 @@ fn dispatch(args: &ArgMap) -> Result<(), BsfError> {
         Some("predict") => cmd_predict(args),
         Some("bench") => cmd_bench(args),
         Some("verify") => cmd_verify(args),
+        Some("top") => cmd_top(args),
         Some("artifacts") => cmd_artifacts(),
         Some("help") | None => {
             println!("{USAGE}");

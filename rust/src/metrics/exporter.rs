@@ -1,0 +1,233 @@
+//! The master's metrics endpoint: a minimal plain-TCP HTTP/1.0 server
+//! (std-only, like the rest of the workspace) over a shared
+//! [`RunTelemetry`].
+//!
+//! Routes:
+//!
+//! * `GET /metrics` — the cumulative `bsf-metrics/1` snapshot (pretty
+//!   JSON; content-type `application/json`).
+//! * `GET /events`  — the buffered `bsf-events/1` stream, one compact
+//!   JSON object per line (content-type `application/jsonl`).
+//!
+//! Anything else is a 404. Requests are served one at a time on a
+//! dedicated thread — the exporter is an observability tap for `bsf top`
+//! / `curl` / the CI smoke job, not a web server. The run itself never
+//! blocks on it: the master only touches the shared aggregator.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::BsfError;
+use crate::metrics::telemetry::RunTelemetry;
+
+/// Per-connection I/O deadline: a stalled scraper must not wedge the
+/// serving loop forever.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A running metrics endpoint (one serving thread + its listener).
+pub struct MetricsExporter {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsExporter {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving `telemetry`. The bound address — the one to print at
+    /// startup and to hand to `bsf top` — is [`addr`](Self::addr).
+    pub fn bind(addr: &str, telemetry: Arc<RunTelemetry>) -> Result<Self, BsfError> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            BsfError::config(format!("cannot bind metrics endpoint {addr}: {e}"))
+        })?;
+        let local = listener.local_addr().map_err(|e| {
+            BsfError::config(format!("metrics endpoint has no local address: {e}"))
+        })?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("bsf-metrics".into())
+            .spawn(move || serve(listener, telemetry, stop_flag))
+            .map_err(|e| BsfError::config(format!("cannot spawn metrics thread: {e}")))?;
+        Ok(MetricsExporter { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolved ephemeral port included).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop serving and join the thread (also performed on drop).
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn serve(listener: TcpListener, telemetry: Arc<RunTelemetry>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        // Serving is best-effort: a broken scraper connection is its
+        // problem, never the run's.
+        let _ = handle_connection(stream, &telemetry);
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, telemetry: &RunTelemetry) -> std::io::Result<()> {
+    let _ = stream.set_read_timeout(Some(CLIENT_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CLIENT_TIMEOUT));
+    // Read up to the end of the request head (we only need the request
+    // line; HTTP/1.0-style one-shot exchange).
+    let mut buf = [0u8; 2048];
+    let mut len = 0usize;
+    loop {
+        if len == buf.len() {
+            break; // oversized head: parse what we have
+        }
+        let n = stream.read(&mut buf[len..])?;
+        if n == 0 {
+            break;
+        }
+        len += n;
+        if buf[..len].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..len]);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "only GET is served\n".to_string())
+    } else {
+        match path {
+            "/metrics" => ("200 OK", "application/json", telemetry.metrics_json().pretty()),
+            "/events" => ("200 OK", "application/jsonl", telemetry.events_jsonl()),
+            _ => (
+                "404 Not Found",
+                "text/plain",
+                "routes: GET /metrics, GET /events\n".to_string(),
+            ),
+        }
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// One-shot `GET` against a metrics endpoint, returning the response
+/// body (status errors become `Err`). This is `bsf top`'s poll primitive
+/// and the integration tests' client — std-only, HTTP/1.0.
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<String, BsfError> {
+    let sock_addr: SocketAddr = addr
+        .parse()
+        .map_err(|e| BsfError::config(format!("bad metrics address {addr:?}: {e}")))?;
+    let mut stream = TcpStream::connect_timeout(&sock_addr, timeout)
+        .map_err(|e| BsfError::transport(format!("connect {addr}: {e}")))?;
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let request = format!("GET {path} HTTP/1.0\r\nHost: {addr}\r\n\r\n");
+    stream
+        .write_all(request.as_bytes())
+        .map_err(|e| BsfError::transport(format!("send {addr}{path}: {e}")))?;
+    let mut response = String::new();
+    stream
+        .read_to_string(&mut response)
+        .map_err(|e| BsfError::transport(format!("read {addr}{path}: {e}")))?;
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| BsfError::transport(format!("malformed response from {addr}{path}")))?;
+    let status_line = head.lines().next().unwrap_or("");
+    if !status_line.contains("200") {
+        return Err(BsfError::transport(format!(
+            "{addr}{path}: {status_line} ({})",
+            body.trim()
+        )));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::VolumeByTag;
+    use crate::util::json::Json;
+
+    #[test]
+    fn serves_metrics_and_events_and_404s() {
+        let telemetry = Arc::new(RunTelemetry::new());
+        telemetry.run_start("threaded", 2);
+        telemetry.record_iteration(1, 0.25, [0.1, 0.2, 0.0, 0.05], VolumeByTag::default());
+        let exporter = MetricsExporter::bind("127.0.0.1:0", Arc::clone(&telemetry)).unwrap();
+        let addr = exporter.addr().to_string();
+
+        let body = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("bsf-metrics/1"));
+        assert_eq!(doc.get("iteration").and_then(Json::as_u64), Some(1));
+
+        let events = http_get(&addr, "/events", Duration::from_secs(5)).unwrap();
+        let lines: Vec<&str> = events.lines().collect();
+        assert_eq!(lines.len(), 2, "run_start + one iteration: {events}");
+        for line in &lines {
+            assert_eq!(
+                Json::parse(line).unwrap().get("schema").and_then(Json::as_str),
+                Some("bsf-events/1")
+            );
+        }
+
+        let err = http_get(&addr, "/nope", Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("404"), "{err}");
+
+        exporter.shutdown();
+        // After shutdown the endpoint no longer answers.
+        assert!(http_get(&addr, "/metrics", Duration::from_millis(500)).is_err());
+    }
+
+    #[test]
+    fn snapshot_advances_between_polls() {
+        let telemetry = Arc::new(RunTelemetry::new());
+        telemetry.run_start("serial", 1);
+        let exporter = MetricsExporter::bind("127.0.0.1:0", Arc::clone(&telemetry)).unwrap();
+        let addr = exporter.addr().to_string();
+        let mut last = 0u64;
+        for i in 1..=3u64 {
+            telemetry.record_iteration(i, i as f64, [0.0; 4], VolumeByTag::default());
+            let body = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+            let iter = Json::parse(&body)
+                .unwrap()
+                .get("iteration")
+                .and_then(Json::as_u64)
+                .unwrap();
+            assert!(iter > last, "iteration counts must be monotone over polls");
+            last = iter;
+        }
+        exporter.shutdown();
+    }
+}

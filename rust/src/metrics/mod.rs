@@ -4,6 +4,14 @@
 //! (send-order / worker-compute+gather / master-reduce / process-results)
 //! so the cost-model calibration and the §Perf pass can see where an
 //! iteration goes.
+//!
+//! The live-telemetry layer sits next to the timers: [`telemetry`] is
+//! the per-run aggregator every engine's `Driver::step` updates, and
+//! [`exporter`] serves it over plain HTTP (`GET /metrics`, `GET
+//! /events`) for `bsf top` and external scrapers.
+
+pub mod exporter;
+pub mod telemetry;
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,734 @@
+//! Live run telemetry: the aggregator behind `--metrics-addr`,
+//! `--events jsonl` and `bsf top`.
+//!
+//! A [`RunTelemetry`] is an `Arc`-shared, mutex-protected accumulator
+//! the shared [`MasterLoop`](crate::skeleton::master::MasterLoop) (and
+//! the serial driver) updates once per iteration inside `Driver::step`,
+//! so every engine feeds the same live surfaces for free. Readers — the
+//! [`exporter`](crate::metrics::exporter) HTTP thread and `bsf top` —
+//! only ever take the lock briefly to snapshot.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **The hot path must not allocate.** Per-iteration state is held in
+//!    fixed arrays and scalars; the bounded event ring is preallocated at
+//!    construction and recycled (old events are overwritten, with a
+//!    `dropped` counter instead of growth). The allocation guard test in
+//!    `rust/tests/telemetry_alloc.rs` pins this down with a counting
+//!    global allocator.
+//! 2. **Results must stay bit-identical telemetry on vs off.** The
+//!    aggregator only *observes* (copies of counters, phase totals,
+//!    heartbeat payloads); it never feeds anything back into the run.
+//! 3. **Schema-stable events.** Every [`RunEvent`] serializes under the
+//!    versioned `bsf-events/1` schema with fixed field names (golden
+//!    tests assert them), so downstream scrapers can rely on the shape.
+
+use std::sync::Mutex;
+
+use crate::costmodel::CostParams;
+use crate::metrics::ALL_PHASES;
+use crate::skeleton::worker::WorkerReport;
+use crate::transport::VolumeByTag;
+use crate::util::json::Json;
+
+/// Schema tag stamped on every event line (`/events`, `--events jsonl`).
+pub const EVENTS_SCHEMA: &str = "bsf-events/1";
+
+/// Schema tag stamped on the `/metrics` snapshot document.
+pub const METRICS_SCHEMA: &str = "bsf-metrics/1";
+
+/// Capacity of the bounded event ring: enough for `bsf top` / `/events`
+/// to see recent history without the aggregator ever growing.
+const EVENT_RING: usize = 1024;
+
+/// One structured run event — the unit of the `bsf-events/1` stream.
+///
+/// `measured`/`predicted` phase arrays are ordered like
+/// [`ALL_PHASES`]: `[send_order, gather, master_reduce, process]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunEvent {
+    /// The run began (engine chosen, K workers appointed).
+    RunStart { engine: String, workers: usize },
+    /// One master iteration completed. `measured` holds this iteration's
+    /// phase seconds (deltas of the cumulative timers); `predicted`
+    /// holds the calibrated cost model's per-iteration phase prediction
+    /// when one was attached. `messages`/`bytes` are this iteration's
+    /// transport deltas (0 for the serial engine).
+    Iteration {
+        iter: u64,
+        elapsed: f64,
+        measured: [f64; 4],
+        predicted: Option<[f64; 4]>,
+        messages: u64,
+        bytes: u64,
+    },
+    /// A worker was lost mid-run (fault layer).
+    Loss { iter: u64, rank: usize },
+    /// A lost worker was re-admitted via the REJOIN protocol.
+    Rejoin { iter: u64, rank: usize },
+    /// A `RestartFromCheckpoint` relaunch: `generation` counts restarts
+    /// (1 = first relaunch), `rank` is the loss that triggered it.
+    Restart { generation: u64, iter: u64, rank: usize },
+    /// The run finished.
+    RunEnd { iter: u64, elapsed: f64 },
+}
+
+/// Phase seconds as a stable-keyed JSON object
+/// (`{"send_order": …, "gather": …, "master_reduce": …, "process": …}`).
+fn phases_json(phases: &[f64; 4]) -> Json {
+    Json::Obj(
+        ALL_PHASES
+            .iter()
+            .zip(phases.iter())
+            .map(|(p, v)| (p.name().to_string(), Json::Num(*v)))
+            .collect(),
+    )
+}
+
+fn phases_from_json(v: &Json) -> Result<[f64; 4], String> {
+    let mut out = [0.0f64; 4];
+    for (i, p) in ALL_PHASES.iter().enumerate() {
+        out[i] = v
+            .get(p.name())
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing phase field {:?}", p.name()))?;
+    }
+    Ok(out)
+}
+
+fn field_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+fn field_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing field {key:?}"))
+}
+
+impl RunEvent {
+    /// The event's `type` discriminator in the `bsf-events/1` schema.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RunEvent::RunStart { .. } => "run_start",
+            RunEvent::Iteration { .. } => "iteration",
+            RunEvent::Loss { .. } => "loss",
+            RunEvent::Rejoin { .. } => "rejoin",
+            RunEvent::Restart { .. } => "restart",
+            RunEvent::RunEnd { .. } => "run_end",
+        }
+    }
+
+    /// Serialize under the `bsf-events/1` schema. Field names are a
+    /// stable public contract (golden-tested); only additive changes
+    /// without a schema bump.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("schema", Json::Str(EVENTS_SCHEMA.into())),
+            ("type", Json::Str(self.kind().into())),
+        ];
+        match self {
+            RunEvent::RunStart { engine, workers } => {
+                fields.push(("engine", Json::Str(engine.clone())));
+                fields.push(("workers", Json::Num(*workers as f64)));
+            }
+            RunEvent::Iteration { iter, elapsed, measured, predicted, messages, bytes } => {
+                fields.push(("iter", Json::Num(*iter as f64)));
+                fields.push(("elapsed_seconds", Json::Num(*elapsed)));
+                fields.push(("measured", phases_json(measured)));
+                fields.push((
+                    "predicted",
+                    match predicted {
+                        Some(p) => phases_json(p),
+                        None => Json::Null,
+                    },
+                ));
+                fields.push(("messages", Json::Num(*messages as f64)));
+                fields.push(("bytes", Json::Num(*bytes as f64)));
+            }
+            RunEvent::Loss { iter, rank } | RunEvent::Rejoin { iter, rank } => {
+                fields.push(("iter", Json::Num(*iter as f64)));
+                fields.push(("rank", Json::Num(*rank as f64)));
+            }
+            RunEvent::Restart { generation, iter, rank } => {
+                fields.push(("generation", Json::Num(*generation as f64)));
+                fields.push(("iter", Json::Num(*iter as f64)));
+                fields.push(("rank", Json::Num(*rank as f64)));
+            }
+            RunEvent::RunEnd { iter, elapsed } => {
+                fields.push(("iter", Json::Num(*iter as f64)));
+                fields.push(("elapsed_seconds", Json::Num(*elapsed)));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse one `bsf-events/1` object back (the round-trip direction
+    /// `bsf top` and the schema tests use).
+    pub fn from_json(v: &Json) -> Result<RunEvent, String> {
+        let schema = v.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != EVENTS_SCHEMA {
+            return Err(format!("unsupported event schema {schema:?}"));
+        }
+        let kind = v.get("type").and_then(Json::as_str).unwrap_or("");
+        match kind {
+            "run_start" => Ok(RunEvent::RunStart {
+                engine: v
+                    .get("engine")
+                    .and_then(Json::as_str)
+                    .ok_or("missing field \"engine\"")?
+                    .to_string(),
+                workers: field_u64(v, "workers")? as usize,
+            }),
+            "iteration" => Ok(RunEvent::Iteration {
+                iter: field_u64(v, "iter")?,
+                elapsed: field_f64(v, "elapsed_seconds")?,
+                measured: phases_from_json(
+                    v.get("measured").ok_or("missing field \"measured\"")?,
+                )?,
+                predicted: match v.get("predicted") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => Some(phases_from_json(p)?),
+                },
+                messages: field_u64(v, "messages")?,
+                bytes: field_u64(v, "bytes")?,
+            }),
+            "loss" => Ok(RunEvent::Loss {
+                iter: field_u64(v, "iter")?,
+                rank: field_u64(v, "rank")? as usize,
+            }),
+            "rejoin" => Ok(RunEvent::Rejoin {
+                iter: field_u64(v, "iter")?,
+                rank: field_u64(v, "rank")? as usize,
+            }),
+            "restart" => Ok(RunEvent::Restart {
+                generation: field_u64(v, "generation")?,
+                iter: field_u64(v, "iter")?,
+                rank: field_u64(v, "rank")? as usize,
+            }),
+            "run_end" => Ok(RunEvent::RunEnd {
+                iter: field_u64(v, "iter")?,
+                elapsed: field_f64(v, "elapsed_seconds")?,
+            }),
+            other => Err(format!("unknown event type {other:?}")),
+        }
+    }
+}
+
+/// One worker's live health row (latest heartbeat wins).
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    /// Heartbeats received from this rank so far.
+    pub heartbeats: u64,
+    /// The latest heartbeat payload (a point-in-time [`WorkerReport`]).
+    pub last: WorkerReport,
+}
+
+/// Everything behind the mutex. All fixed-size after `run_start`
+/// preallocates the worker table and the constructor the event ring.
+#[derive(Debug)]
+struct Inner {
+    engine: &'static str,
+    workers: usize,
+    iter: u64,
+    elapsed: f64,
+    /// Cumulative measured phase seconds (mirrors the master's timers).
+    phase_total: [f64; 4],
+    /// Previous cumulative totals — per-iteration deltas by subtraction.
+    phase_prev: [f64; 4],
+    /// Calibrated per-iteration phase prediction, when attached.
+    predicted: Option<[f64; 4]>,
+    /// Latest whole-run per-tag traffic snapshot.
+    volume: VolumeByTag,
+    prev_messages: u64,
+    prev_bytes: u64,
+    /// Live per-worker health, `None` until a rank's first heartbeat.
+    /// Indexed by physical rank (preallocated in `run_start`).
+    health: Vec<Option<WorkerHealth>>,
+    losses: u64,
+    rejoins: u64,
+    generation: u64,
+    ended: bool,
+    /// Bounded ring of recent events. `events_total` counts everything
+    /// ever recorded; when it exceeds the ring length the oldest entries
+    /// have been overwritten (`events_total - ring.len()` dropped).
+    ring: Vec<RunEvent>,
+    head: usize,
+    events_total: u64,
+}
+
+/// The live telemetry aggregator — see the module docs.
+#[derive(Debug)]
+pub struct RunTelemetry {
+    inner: Mutex<Inner>,
+    /// Emit one `bsf-events/1` line to **stderr** every `n` iterations
+    /// (0 = off). Stdout stays reserved for result data.
+    events_stderr_every: u64,
+}
+
+impl Default for RunTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunTelemetry {
+    pub fn new() -> Self {
+        RunTelemetry {
+            inner: Mutex::new(Inner {
+                engine: "",
+                workers: 0,
+                iter: 0,
+                elapsed: 0.0,
+                phase_total: [0.0; 4],
+                phase_prev: [0.0; 4],
+                predicted: None,
+                volume: VolumeByTag::default(),
+                prev_messages: 0,
+                prev_bytes: 0,
+                health: Vec::new(),
+                losses: 0,
+                rejoins: 0,
+                generation: 0,
+                ended: false,
+                ring: Vec::with_capacity(EVENT_RING),
+                head: 0,
+                events_total: 0,
+            }),
+            events_stderr_every: 0,
+        }
+    }
+
+    /// Builder: stream one `bsf-events/1` JSONL object to stderr every
+    /// `n` iterations (the CLI's `--events jsonl --metrics-interval n`).
+    pub fn events_to_stderr(mut self, every: u64) -> Self {
+        self.events_stderr_every = every.max(1);
+        self
+    }
+
+    /// Attach the calibrated cost model: per-iteration events will carry
+    /// `predicted` phase seconds ([`CostParams::predicted_phases`] at
+    /// this run's K) next to the measured ones.
+    pub fn set_cost_model(&self, params: &CostParams, k: usize) {
+        if let Ok(mut inner) = self.inner.lock() {
+            inner.predicted = Some(params.predicted_phases(k.max(1)));
+        }
+    }
+
+    fn lock(&self) -> Option<std::sync::MutexGuard<'_, Inner>> {
+        // A poisoned telemetry mutex must never take the run down:
+        // telemetry is observe-only.
+        self.inner.lock().ok()
+    }
+
+    fn push_event(inner: &mut Inner, event: RunEvent) {
+        if inner.ring.len() < inner.ring.capacity() {
+            inner.ring.push(event);
+        } else {
+            // Recycle the oldest slot — bounded memory, no growth.
+            let head = inner.head;
+            inner.ring[head] = event;
+            inner.head = (head + 1) % inner.ring.len();
+        }
+        inner.events_total += 1;
+    }
+
+    /// The run began: fix engine/K and preallocate the health table.
+    pub fn run_start(&self, engine: &'static str, workers: usize) {
+        let Some(mut inner) = self.lock() else { return };
+        inner.engine = engine;
+        inner.workers = workers;
+        inner.health.clear();
+        inner.health.resize(workers, None);
+        let event = RunEvent::RunStart { engine: engine.to_string(), workers };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// One master iteration completed. `phase_totals` are the master's
+    /// *cumulative* per-phase seconds (deltas are computed here), and
+    /// `volume` the transport's whole-run per-tag snapshot.
+    pub fn record_iteration(
+        &self,
+        iter: u64,
+        elapsed: f64,
+        phase_totals: [f64; 4],
+        volume: VolumeByTag,
+    ) {
+        let Some(mut inner) = self.lock() else { return };
+        let mut measured = [0.0f64; 4];
+        for i in 0..4 {
+            measured[i] = (phase_totals[i] - inner.phase_prev[i]).max(0.0);
+        }
+        let messages = volume.total_messages();
+        let bytes = volume.total_bytes();
+        let event = RunEvent::Iteration {
+            iter,
+            elapsed,
+            measured,
+            predicted: inner.predicted,
+            messages: messages.saturating_sub(inner.prev_messages),
+            bytes: bytes.saturating_sub(inner.prev_bytes),
+        };
+        inner.iter = iter;
+        inner.elapsed = elapsed;
+        inner.phase_prev = phase_totals;
+        inner.phase_total = phase_totals;
+        inner.volume = volume;
+        inner.prev_messages = messages;
+        inner.prev_bytes = bytes;
+        if self.events_stderr_every > 0 && iter % self.events_stderr_every == 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// A heartbeat arrived from a worker (latest payload wins).
+    pub fn record_heartbeat(&self, report: WorkerReport) {
+        let Some(mut inner) = self.lock() else { return };
+        let rank = report.rank;
+        if rank >= inner.health.len() {
+            // A physical rank beyond the announced K (shrunk-cluster
+            // ranks are physical): grow once, then fixed.
+            inner.health.resize(rank + 1, None);
+        }
+        match &mut inner.health[rank] {
+            Some(h) => {
+                h.heartbeats += 1;
+                h.last = report;
+            }
+            slot => *slot = Some(WorkerHealth { heartbeats: 1, last: report }),
+        }
+    }
+
+    pub fn record_loss(&self, rank: usize) {
+        let Some(mut inner) = self.lock() else { return };
+        inner.losses += 1;
+        let event = RunEvent::Loss { iter: inner.iter, rank };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    pub fn record_rejoin(&self, rank: usize) {
+        let Some(mut inner) = self.lock() else { return };
+        inner.rejoins += 1;
+        let event = RunEvent::Rejoin { iter: inner.iter, rank };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// A `RestartFromCheckpoint` relaunch triggered by losing `rank`.
+    pub fn record_restart(&self, rank: usize) {
+        let Some(mut inner) = self.lock() else { return };
+        inner.generation += 1;
+        let event =
+            RunEvent::Restart { generation: inner.generation, iter: inner.iter, rank };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// The run finished (any stop reason).
+    pub fn run_end(&self, elapsed: f64) {
+        let Some(mut inner) = self.lock() else { return };
+        if inner.ended {
+            return; // a restart loop finishes once per generation
+        }
+        inner.ended = true;
+        inner.elapsed = elapsed;
+        let event = RunEvent::RunEnd { iter: inner.iter, elapsed };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// Iterations recorded so far (monotone over a run).
+    pub fn iterations(&self) -> u64 {
+        self.lock().map(|i| i.iter).unwrap_or(0)
+    }
+
+    /// The buffered events, oldest first (at most the ring capacity;
+    /// earlier ones may have been recycled — see `events_dropped` in the
+    /// metrics document).
+    pub fn events(&self) -> Vec<RunEvent> {
+        let Some(inner) = self.lock() else { return Vec::new() };
+        let mut out = Vec::with_capacity(inner.ring.len());
+        if inner.ring.len() < inner.ring.capacity() {
+            out.extend(inner.ring.iter().cloned());
+        } else {
+            out.extend(inner.ring[inner.head..].iter().cloned());
+            out.extend(inner.ring[..inner.head].iter().cloned());
+        }
+        out
+    }
+
+    /// The buffered events as `bsf-events/1` JSONL (the `/events` body).
+    pub fn events_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.events() {
+            out.push_str(&e.to_json().compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The cumulative `bsf-metrics/1` snapshot (the `/metrics` body).
+    pub fn metrics_json(&self) -> Json {
+        let Some(inner) = self.lock() else {
+            return Json::obj(vec![("schema", Json::Str(METRICS_SCHEMA.into()))]);
+        };
+        let tag = |t: crate::transport::TagVolume| {
+            Json::obj(vec![
+                ("messages", Json::Num(t.messages as f64)),
+                ("bytes", Json::Num(t.bytes as f64)),
+            ])
+        };
+        // Predicted cumulative = per-iteration prediction × iterations;
+        // the ratio row is the live cost-model drift signal.
+        let predicted_total = inner.predicted.map(|p| {
+            let n = inner.iter as f64;
+            [p[0] * n, p[1] * n, p[2] * n, p[3] * n]
+        });
+        let ratio = predicted_total.map(|pred| {
+            let mut r = [0.0f64; 4];
+            for i in 0..4 {
+                r[i] = if pred[i] > 0.0 { inner.phase_total[i] / pred[i] } else { 0.0 };
+            }
+            r
+        });
+        let mut phases = vec![("measured", phases_json(&inner.phase_total))];
+        match predicted_total {
+            Some(p) => {
+                phases.push(("predicted", phases_json(&p)));
+                phases.push((
+                    "measured_over_predicted",
+                    phases_json(&ratio.unwrap_or([0.0; 4])),
+                ));
+            }
+            None => {
+                phases.push(("predicted", Json::Null));
+                phases.push(("measured_over_predicted", Json::Null));
+            }
+        }
+        let health: Vec<Json> = inner
+            .health
+            .iter()
+            .enumerate()
+            .filter_map(|(rank, h)| h.as_ref().map(|h| (rank, h)))
+            .map(|(rank, h)| {
+                Json::obj(vec![
+                    ("rank", Json::Num(rank as f64)),
+                    ("heartbeats", Json::Num(h.heartbeats as f64)),
+                    ("iterations", Json::Num(h.last.iterations as f64)),
+                    ("map_seconds", Json::Num(h.last.map_seconds)),
+                    ("sublist_length", Json::Num(h.last.sublist_length as f64)),
+                    ("threads", Json::Num(h.last.threads as f64)),
+                    ("max_chunk_seconds", Json::Num(h.last.max_chunk_seconds)),
+                    ("merge_seconds", Json::Num(h.last.merge_seconds)),
+                    ("pid", Json::Num(h.last.pid as f64)),
+                    ("reassignments", Json::Num(h.last.reassignments as f64)),
+                ])
+            })
+            .collect();
+        let dropped = inner.events_total.saturating_sub(inner.ring.len() as u64);
+        Json::obj(vec![
+            ("schema", Json::Str(METRICS_SCHEMA.into())),
+            ("engine", Json::Str(inner.engine.into())),
+            ("workers", Json::Num(inner.workers as f64)),
+            ("iteration", Json::Num(inner.iter as f64)),
+            ("elapsed_seconds", Json::Num(inner.elapsed)),
+            ("phases", Json::obj(phases)),
+            (
+                "traffic",
+                Json::obj(vec![
+                    ("order", tag(inner.volume.order)),
+                    ("fold", tag(inner.volume.fold)),
+                    ("exit", tag(inner.volume.exit)),
+                    ("abort", tag(inner.volume.abort)),
+                    ("user", tag(inner.volume.user)),
+                ]),
+            ),
+            ("workers_health", Json::Arr(health)),
+            ("losses", Json::Num(inner.losses as f64)),
+            ("rejoins", Json::Num(inner.rejoins as f64)),
+            ("generation", Json::Num(inner.generation as f64)),
+            ("ended", Json::Bool(inner.ended)),
+            ("events_total", Json::Num(inner.events_total as f64)),
+            ("events_dropped", Json::Num(dropped as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report(rank: usize) -> WorkerReport {
+        WorkerReport {
+            rank,
+            iterations: 5,
+            map_seconds: 0.25,
+            sublist_length: 100,
+            threads: 2,
+            max_chunk_seconds: 0.125,
+            merge_seconds: 0.0625,
+            pid: 4321,
+            reassignments: 0,
+        }
+    }
+
+    #[test]
+    fn iteration_deltas_come_from_cumulative_totals() {
+        let t = RunTelemetry::new();
+        t.run_start("threaded", 2);
+        t.record_iteration(1, 0.5, [0.1, 0.2, 0.3, 0.4], VolumeByTag::default());
+        t.record_iteration(2, 1.0, [0.3, 0.3, 0.4, 0.9], VolumeByTag::default());
+        let events = t.events();
+        assert_eq!(events.len(), 3);
+        match &events[2] {
+            RunEvent::Iteration { iter, measured, .. } => {
+                assert_eq!(*iter, 2);
+                let expect = [0.2, 0.1, 0.1, 0.5];
+                for i in 0..4 {
+                    assert!((measured[i] - expect[i]).abs() < 1e-12, "{measured:?}");
+                }
+            }
+            other => panic!("expected iteration event, got {other:?}"),
+        }
+        assert_eq!(t.iterations(), 2);
+    }
+
+    #[test]
+    fn predicted_phases_ride_iteration_events_once_attached() {
+        let params = CostParams {
+            latency: 1e-6,
+            t_send: 2e-6,
+            t_recv: 3e-6,
+            t_map: 1e-3,
+            t_red: 0.0,
+            t_op: 1e-7,
+            t_proc: 1e-6,
+        };
+        let t = RunTelemetry::new();
+        t.record_iteration(1, 0.1, [0.0; 4], VolumeByTag::default());
+        match &t.events()[0] {
+            RunEvent::Iteration { predicted, .. } => assert!(predicted.is_none()),
+            other => panic!("{other:?}"),
+        }
+        t.set_cost_model(&params, 4);
+        t.record_iteration(2, 0.2, [0.0; 4], VolumeByTag::default());
+        match &t.events()[1] {
+            RunEvent::Iteration { predicted, .. } => {
+                assert_eq!(*predicted, Some(params.predicted_phases(4)));
+            }
+            other => panic!("{other:?}"),
+        }
+        // ... and /metrics carries the ratio row once predicted exists.
+        let m = t.metrics_json();
+        assert!(m.get("phases").and_then(|p| p.get("predicted")).is_some());
+    }
+
+    #[test]
+    fn event_ring_is_bounded_and_reports_drops() {
+        let t = RunTelemetry::new();
+        for i in 0..(EVENT_RING as u64 + 10) {
+            t.record_iteration(i + 1, i as f64, [0.0; 4], VolumeByTag::default());
+        }
+        let events = t.events();
+        assert_eq!(events.len(), EVENT_RING);
+        // Oldest first, and the first 10 were recycled.
+        match &events[0] {
+            RunEvent::Iteration { iter, .. } => assert_eq!(*iter, 11),
+            other => panic!("{other:?}"),
+        }
+        let m = t.metrics_json();
+        assert_eq!(m.get("events_dropped").and_then(Json::as_u64), Some(10));
+    }
+
+    #[test]
+    fn heartbeats_populate_worker_health() {
+        let t = RunTelemetry::new();
+        t.run_start("process", 2);
+        t.record_heartbeat(sample_report(1));
+        t.record_heartbeat(sample_report(1));
+        let m = t.metrics_json();
+        let health = m.get("workers_health").and_then(Json::as_arr).unwrap();
+        assert_eq!(health.len(), 1, "only ranks that beat appear");
+        assert_eq!(health[0].get("rank").and_then(Json::as_u64), Some(1));
+        assert_eq!(health[0].get("heartbeats").and_then(Json::as_u64), Some(2));
+        assert_eq!(health[0].get("pid").and_then(Json::as_u64), Some(4321));
+    }
+
+    #[test]
+    fn losses_rejoins_and_restarts_count_and_emit_events() {
+        let t = RunTelemetry::new();
+        t.run_start("threaded", 3);
+        t.record_iteration(1, 0.1, [0.0; 4], VolumeByTag::default());
+        t.record_loss(2);
+        t.record_rejoin(2);
+        t.record_restart(1);
+        t.run_end(0.2);
+        t.run_end(0.3); // idempotent
+        let kinds: Vec<&str> = t.events().iter().map(|e| e.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec!["run_start", "iteration", "loss", "rejoin", "restart", "run_end"]
+        );
+        let m = t.metrics_json();
+        assert_eq!(m.get("losses").and_then(Json::as_u64), Some(1));
+        assert_eq!(m.get("rejoins").and_then(Json::as_u64), Some(1));
+        assert_eq!(m.get("generation").and_then(Json::as_u64), Some(1));
+        assert_eq!(m.get("ended").and_then(Json::as_bool), Some(true));
+        assert_eq!(m.get("elapsed_seconds").and_then(Json::as_f64), Some(0.2));
+    }
+
+    #[test]
+    fn metrics_document_has_the_published_shape() {
+        let t = RunTelemetry::new();
+        t.run_start("serial", 1);
+        let m = t.metrics_json();
+        assert_eq!(m.get("schema").and_then(Json::as_str), Some(METRICS_SCHEMA));
+        for key in [
+            "engine",
+            "workers",
+            "iteration",
+            "elapsed_seconds",
+            "phases",
+            "traffic",
+            "workers_health",
+            "losses",
+            "rejoins",
+            "generation",
+            "ended",
+            "events_total",
+            "events_dropped",
+        ] {
+            assert!(m.get(key).is_some(), "missing {key:?} in /metrics document");
+        }
+        // The document round-trips through the writer/parser pair.
+        assert_eq!(Json::parse(&m.pretty()).unwrap(), m);
+        assert_eq!(Json::parse(&m.compact()).unwrap(), m);
+    }
+
+    #[test]
+    fn events_jsonl_lines_parse_back() {
+        let t = RunTelemetry::new().events_to_stderr(0); // floor to 1 is fine
+        t.run_start("cluster", 2);
+        t.record_iteration(1, 0.1, [0.0; 4], VolumeByTag::default());
+        t.run_end(0.1);
+        let body = t.events_jsonl();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("schema").and_then(Json::as_str), Some(EVENTS_SCHEMA));
+            RunEvent::from_json(&v).unwrap();
+        }
+    }
+}

@@ -12,6 +12,9 @@
 //! [`StopPolicy`] and [`CancelToken`] extend it with declarative
 //! steering for the iteration-driver API (`Bsf::iterate`).
 
+use std::sync::Arc;
+
+use crate::metrics::telemetry::RunTelemetry;
 use crate::skeleton::driver::{CancelToken, StopPolicy};
 use crate::skeleton::fault::FaultPolicy;
 
@@ -39,6 +42,18 @@ pub struct BsfConfig {
     /// redistribute its sublist over the survivors, or relaunch from the
     /// master's inter-iteration checkpoint.
     pub fault: FaultPolicy,
+    /// Live telemetry sink (`--metrics-addr` / `--events jsonl`): when
+    /// attached, the master records one event per iteration plus
+    /// loss/rejoin/restart events into this shared aggregator. `None`
+    /// (default) keeps the run telemetry-free — results are
+    /// bit-identical either way (the aggregator only observes).
+    pub telemetry: Option<Arc<RunTelemetry>>,
+    /// Workers ship a live `TAG_HEARTBEAT` (a point-in-time
+    /// [`WorkerReport`](crate::skeleton::worker::WorkerReport) wire
+    /// payload) every `heartbeat_every` iterations; 0 (default)
+    /// disables heartbeats entirely — no extra messages, bit-identical
+    /// traffic to pre-telemetry runs.
+    pub heartbeat_every: usize,
 }
 
 impl Default for BsfConfig {
@@ -51,6 +66,8 @@ impl Default for BsfConfig {
             stop: StopPolicy::default(),
             cancel: CancelToken::new(),
             fault: FaultPolicy::Abort,
+            telemetry: None,
+            heartbeat_every: 0,
         }
     }
 }
@@ -108,6 +125,21 @@ impl BsfConfig {
         self.fault(FaultPolicy::Redistribute { max_losses })
     }
 
+    /// Attach a live [`RunTelemetry`] aggregator (keep a clone of the
+    /// `Arc` to read from — the metrics exporter and `--events jsonl`
+    /// do exactly that).
+    pub fn telemetry(mut self, sink: Arc<RunTelemetry>) -> Self {
+        self.telemetry = Some(sink);
+        self
+    }
+
+    /// Ask workers for a live heartbeat every `every` iterations
+    /// (0 disables; see [`heartbeat_every`](Self::heartbeat_every)).
+    pub fn heartbeat(mut self, every: usize) -> Self {
+        self.heartbeat_every = every;
+        self
+    }
+
     /// The effective iteration cap: `max_iter` tightened by the stop
     /// policy's cap when one is set.
     pub fn effective_max_iter(&self) -> usize {
@@ -133,6 +165,25 @@ mod tests {
         assert!(c.stop.is_empty());
         assert!(!c.cancel.is_cancelled());
         assert_eq!(c.fault, FaultPolicy::Abort, "abort is the default policy");
+        assert!(c.telemetry.is_none(), "telemetry is opt-in");
+        assert_eq!(c.heartbeat_every, 0, "heartbeats are opt-in");
+    }
+
+    #[test]
+    fn telemetry_and_heartbeat_builders() {
+        let sink = Arc::new(RunTelemetry::new());
+        let c = BsfConfig::with_workers(2).telemetry(Arc::clone(&sink)).heartbeat(5);
+        assert!(c.telemetry.is_some());
+        assert_eq!(c.heartbeat_every, 5);
+        // The config clone shares the same aggregator.
+        let c2 = c.clone();
+        sink.record_loss(0);
+        assert_eq!(
+            c2.telemetry.unwrap().metrics_json().get("losses").and_then(
+                crate::util::json::Json::as_u64
+            ),
+            Some(1)
+        );
     }
 
     #[test]

@@ -111,10 +111,21 @@ pub(crate) fn run_engine<P: BsfProblem, E: Engine<P> + ?Sized>(
     loop {
         let mut driver =
             engine.launch(Arc::clone(&problem), Arc::clone(&backend), cfg, start.clone())?;
+        if restarts == 0 {
+            if let Some(t) = &cfg.telemetry {
+                t.run_start(driver.engine(), cfg.workers);
+            }
+        }
         loop {
             match driver.step() {
                 Ok(event) => {
                     if event.stop.is_some() {
+                        // Engines whose drivers tap the sink already
+                        // marked the end; this covers the rest (sim) —
+                        // run_end is idempotent.
+                        if let Some(t) = &cfg.telemetry {
+                            t.run_end(event.elapsed);
+                        }
                         let mut report = driver.finish()?;
                         if !prior_losses.is_empty() {
                             prior_losses.extend(report.losses.iter().copied());
@@ -130,6 +141,9 @@ pub(crate) fn run_engine<P: BsfProblem, E: Engine<P> + ?Sized>(
                     let _ = reason;
                     start = Some(driver.checkpoint());
                     prior_losses.push(rank);
+                    if let Some(t) = &cfg.telemetry {
+                        t.record_restart(rank);
+                    }
                     restarts += 1;
                     drop(driver); // joins threads / reaps children
                     break;
@@ -355,6 +369,22 @@ impl<P: BsfProblem> Driver<P> for SerialDriver<P> {
             event.param = Some(self.param.clone());
         } else {
             self.job = decision.next_job;
+        }
+
+        // Live-telemetry tap: the serial engine has no transport (zero
+        // traffic) and no heartbeats, but reports the same per-iteration
+        // phase timings so `bsf top` works against any engine.
+        if let Some(t) = &self.cfg.telemetry {
+            let totals = [
+                self.timers.total_secs(Phase::SendOrder),
+                self.timers.total_secs(Phase::Gather),
+                self.timers.total_secs(Phase::MasterReduce),
+                self.timers.total_secs(Phase::Process),
+            ];
+            t.record_iteration(self.iter as u64, event.elapsed, totals, VolumeByTag::default());
+            if event.stop.is_some() {
+                t.run_end(event.elapsed);
+            }
         }
 
         Ok(event)

@@ -48,7 +48,9 @@ use crate::skeleton::problem::{BsfProblem, IterCtx};
 use crate::skeleton::reduce::{merge_folds, ExtendedFold};
 use crate::skeleton::report::Clock;
 use crate::skeleton::runner::validate_run;
-use crate::transport::{Communicator, Tag};
+use crate::skeleton::worker::WorkerReport;
+use crate::transport::tags::TAG_HEARTBEAT;
+use crate::transport::{Communicator, Tag, VolumeByTag};
 use crate::util::codec::Codec;
 
 /// Best-effort shutdown broadcast: tell every listed worker to exit,
@@ -177,6 +179,11 @@ pub(crate) struct MasterLoop<P: BsfProblem> {
     released: bool,
     /// Elapsed seconds frozen at the stopping iteration.
     elapsed_done: f64,
+    /// Transport counters at this run's first step — live telemetry
+    /// reports deltas against it, so a persistent cluster's second run
+    /// does not inherit the first run's traffic. `None` until telemetry
+    /// observes the first iteration (and always `None` telemetry-off).
+    telemetry_base: Option<VolumeByTag>,
 }
 
 impl<P: BsfProblem> MasterLoop<P> {
@@ -232,6 +239,7 @@ impl<P: BsfProblem> MasterLoop<P> {
             stop: None,
             released: false,
             elapsed_done: 0.0,
+            telemetry_base: None,
         })
     }
 
@@ -313,6 +321,9 @@ impl<P: BsfProblem> MasterLoop<P> {
         }
         self.alive.remove(pos);
         self.losses.push(lost);
+        if let Some(t) = &self.cfg.telemetry {
+            t.record_loss(lost);
+        }
         self.reassign_pending = true;
         Ok(())
     }
@@ -351,6 +362,9 @@ impl<P: BsfProblem> MasterLoop<P> {
                 self.alive.iter().position(|&a| a > r).unwrap_or(self.alive.len());
             self.alive.insert(pos, r);
             self.rejoined.push(r);
+            if let Some(t) = &self.cfg.telemetry {
+                t.record_rejoin(r);
+            }
             self.reassign_pending = true;
         }
     }
@@ -526,6 +540,13 @@ impl<P: BsfProblem> MasterLoop<P> {
             ));
         }
 
+        // Telemetry traffic baseline (first step only): deltas against
+        // it keep a persistent cluster's second run from inheriting the
+        // endpoint's whole-lifetime counters.
+        if self.cfg.telemetry.is_some() && self.telemetry_base.is_none() {
+            self.telemetry_base = Some(comm.stats().volume());
+        }
+
         // Cancellation is checked between iterations: release the
         // workers first (they are blocked waiting for this order), then
         // surface the typed error.
@@ -682,6 +703,40 @@ impl<P: BsfProblem> MasterLoop<P> {
             event.param = Some(self.param.clone());
         } else {
             self.job = decision.next_job;
+        }
+
+        // Drain worker heartbeats that arrived during the round. This
+        // runs whenever workers are configured to beat — even without a
+        // telemetry sink — so beats never accumulate in the mailbox.
+        if self.cfg.heartbeat_every > 0 || self.cfg.telemetry.is_some() {
+            while let Some(m) = comm.try_recv_tags(None, &[TAG_HEARTBEAT]) {
+                if let Some(t) = &self.cfg.telemetry {
+                    if let Ok(hb) = WorkerReport::from_wire(&m.payload) {
+                        t.record_heartbeat(hb);
+                    }
+                }
+            }
+        }
+
+        // Live-telemetry tap (observe only — runs after every decision
+        // is already made, so results are bit-identical with or without
+        // a sink): record this iteration's cumulative phase timers and
+        // per-run traffic delta into the shared aggregator.
+        if let Some(t) = &self.cfg.telemetry {
+            let volume = match &self.telemetry_base {
+                Some(base) => comm.stats().volume().since(base),
+                None => comm.stats().volume(),
+            };
+            let totals = [
+                self.timers.total_secs(Phase::SendOrder),
+                self.timers.total_secs(Phase::Gather),
+                self.timers.total_secs(Phase::MasterReduce),
+                self.timers.total_secs(Phase::Process),
+            ];
+            t.record_iteration(self.iter as u64, event.elapsed, totals, volume);
+            if event.stop.is_some() {
+                t.run_end(event.elapsed);
+            }
         }
 
         Ok(event)

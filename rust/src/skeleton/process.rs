@@ -45,7 +45,7 @@ use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::runner::validate_run;
 use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
 use crate::transport::tcp::{accept_workers, connect_worker, ProblemSig, TcpEndpoint};
-use crate::transport::tags::TAG_REJOIN;
+use crate::transport::tags::{TAG_HEARTBEAT, TAG_REJOIN};
 use crate::transport::{debug_assert_drained, Communicator};
 
 // Defined in the central `transport::tags` registry; re-exported here
@@ -288,7 +288,8 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
             // A loss-free run ends with every master-bound message
             // consumed (a late REJOIN the loop never polled is benign).
             if self.state.losses().is_empty() {
-                debug_assert_drained(ep, &[TAG_REJOIN], "process master finish");
+                // Late REJOINs and final-iteration heartbeats are benign.
+                debug_assert_drained(ep, &[TAG_REJOIN, TAG_HEARTBEAT], "process master finish");
             }
         }
         workers.sort_by_key(|w| w.rank);

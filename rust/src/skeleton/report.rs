@@ -131,24 +131,17 @@ impl<Param> RunReport<Param> {
         )
     }
 
-    /// One-line human summary of the run (the CLI's standard output).
-    /// Mentions lost worker ranks (`lost=r1,r2`) only when there were
-    /// losses.
-    pub fn summary(&self) -> String {
-        let lost = if self.losses.is_empty() {
-            String::new()
-        } else {
-            let ranks: Vec<String> =
-                self.losses.iter().map(|r| r.to_string()).collect();
-            format!(" lost={}", ranks.join(","))
-        };
+    /// [`summary`](Self::summary) minus the `lost=` suffix — the
+    /// results-only line the CLI keeps on stdout (fault diagnostics go
+    /// to stderr alongside `phases:`/`traffic:`).
+    pub fn summary_without_losses(&self) -> String {
         match self.clock {
             Clock::Real => format!(
-                "engine={} iterations={} elapsed={:.6}s msgs={} bytes={}{lost}",
+                "engine={} iterations={} elapsed={:.6}s msgs={} bytes={}",
                 self.engine, self.iterations, self.elapsed, self.messages, self.bytes
             ),
             Clock::Virtual => format!(
-                "engine={} iterations={} virtual={:.6}s real={:.3}s msgs={} bytes={}{lost}",
+                "engine={} iterations={} virtual={:.6}s real={:.3}s msgs={} bytes={}",
                 self.engine,
                 self.iterations,
                 self.elapsed,
@@ -156,6 +149,19 @@ impl<Param> RunReport<Param> {
                 self.messages,
                 self.bytes
             ),
+        }
+    }
+
+    /// One-line human summary of the run. Mentions lost worker ranks
+    /// (`lost=r1,r2`) only when there were losses.
+    pub fn summary(&self) -> String {
+        let base = self.summary_without_losses();
+        if self.losses.is_empty() {
+            base
+        } else {
+            let ranks: Vec<String> =
+                self.losses.iter().map(|r| r.to_string()).collect();
+            format!("{base} lost={}", ranks.join(","))
         }
     }
 }

@@ -20,7 +20,7 @@ use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::worker::{run_worker_guarded, WorkerReport};
 use crate::skeleton::workflow::validate_job_count;
-use crate::transport::tags::TAG_REJOIN;
+use crate::transport::tags::{TAG_HEARTBEAT, TAG_REJOIN};
 use crate::transport::{
     build_thread_transport, debug_assert_drained, Communicator, Tag, ThreadEndpoint,
 };
@@ -184,7 +184,9 @@ impl<P: BsfProblem> Driver<P> for ThreadedDriver<P> {
         // poll is benign; torn/faulted runs legitimately strand
         // in-flight folds and are exempt.
         if self.state.done() && self.state.losses().is_empty() {
-            debug_assert_drained(&*self.ep, &[TAG_REJOIN], "master finish");
+            // A final-iteration heartbeat can land after the master's
+            // last drain — benign, like a late REJOIN.
+            debug_assert_drained(&*self.ep, &[TAG_REJOIN, TAG_HEARTBEAT], "master finish");
         }
 
         let outcome = self.state.outcome();

@@ -194,6 +194,12 @@ impl<P: BsfProblem> Bsf<P> {
     /// Launch the run and return the streaming iteration handle.
     pub fn iterate(self) -> Result<BsfRun<P>, BsfError> {
         let driver = self.engine.launch(self.problem, self.backend, &self.cfg, self.start)?;
+        // The one-shot path announces the run from `run_engine`; a
+        // steered run launches here, so the telemetry sink learns the
+        // engine/K from this side instead.
+        if let Some(t) = &self.cfg.telemetry {
+            t.run_start(driver.engine(), self.cfg.workers);
+        }
         Ok(BsfRun { driver, stopped: false })
     }
 

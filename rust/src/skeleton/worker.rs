@@ -33,7 +33,7 @@ use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::reduce::{fold_extended, ExtendedFold};
 use crate::skeleton::split::sublist_range;
 use crate::skeleton::variables::SkelVars;
-use crate::transport::tags::{TAG_NEW_RUN, TAG_SHUTDOWN};
+use crate::transport::tags::{TAG_HEARTBEAT, TAG_NEW_RUN, TAG_SHUTDOWN};
 use crate::transport::{debug_assert_drained, Communicator, Tag};
 use crate::util::codec::Codec;
 
@@ -261,6 +261,23 @@ pub fn run_worker_with_pool<P: BsfProblem>(
         // Step 5: SendToMaster(s_j).
         let fold = mapped.fold;
         comm.send(master, Tag::Fold, (fold.value, fold.counter).to_bytes())?;
+
+        // Live telemetry beat: a point-in-time report every N
+        // iterations, right behind the fold so the master's
+        // iteration-boundary drain picks it up with at most one
+        // iteration of latency. Off (0) by default — a heartbeat-free
+        // run sends exactly the pre-telemetry message sequence.
+        if cfg.heartbeat_every > 0 && iterations % cfg.heartbeat_every == 0 {
+            let beat = report(
+                iterations,
+                map_seconds,
+                max_chunk_seconds,
+                merge_seconds,
+                len,
+                reassignments,
+            );
+            comm.send(master, TAG_HEARTBEAT, beat.to_wire())?;
+        }
 
         // Step 10: RecvFromMaster(exit).
         let exit = bool::from_bytes(&comm.recv(master, Tag::Exit)?.payload);

@@ -40,6 +40,14 @@ pub const TAG_REASSIGN: Tag = Tag::User(0x5241); // "RA"
 /// Payload: empty.
 pub const TAG_REJOIN: Tag = Tag::User(0x524A); // "RJ"
 
+/// Worker → master: a live health beat (`BsfConfig::heartbeat_every`),
+/// drained by the master at iteration boundaries into the
+/// [`RunTelemetry`](crate::metrics::telemetry::RunTelemetry) aggregator
+/// behind `--metrics-addr` / `bsf top`. Payload: the same 9×8-byte
+/// `WorkerReport` wire encoding as `TAG_WORKER_REPORT`, but
+/// point-in-time (mid-run counters) instead of end-of-run.
+pub const TAG_HEARTBEAT: Tag = Tag::User(0x4842); // "HB"
+
 /// Which side of the star topology an endpoint plays.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Role {
@@ -128,6 +136,13 @@ pub const PROTOCOL: &[TagSpec] = &[
         receiver: Role::Master,
         payload: "empty",
     },
+    TagSpec {
+        tag: TAG_HEARTBEAT,
+        name: "TAG_HEARTBEAT",
+        sender: Role::Worker,
+        receiver: Role::Master,
+        payload: "WorkerReport wire encoding (9 x 8 bytes), point-in-time",
+    },
 ];
 
 /// Look up the protocol row for `tag`, if it is a registered tag.
@@ -168,6 +183,7 @@ mod tests {
         assert_eq!(TAG_WORKER_REPORT, ascii(b'W', b'R'));
         assert_eq!(TAG_REASSIGN, ascii(b'R', b'A'));
         assert_eq!(TAG_REJOIN, ascii(b'R', b'J'));
+        assert_eq!(TAG_HEARTBEAT, ascii(b'H', b'B'));
     }
 
     #[test]

@@ -81,6 +81,47 @@ impl Json {
         out
     }
 
+    /// Serialize on a single line with no whitespace — the JSONL form
+    /// the event stream (`bsf-events/1`) and the `/events` endpoint
+    /// emit, one value per line.
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => write_num(out, *v),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write_pretty(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -373,6 +414,24 @@ mod tests {
             records[0].get("wall_seconds").and_then(Json::as_f64),
             Some(0.001953125)
         );
+    }
+
+    #[test]
+    fn compact_is_single_line_and_round_trips() {
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("bsf-events/1".into())),
+            ("iter", Json::Num(42.0)),
+            ("phases", Json::Arr(vec![Json::Num(0.5), Json::Num(0.25)])),
+            ("note", Json::Str("a\nb".into())),
+            ("empty_obj", Json::obj(vec![])),
+            ("empty_arr", Json::Arr(vec![])),
+            ("null", Json::Null),
+        ]);
+        let line = doc.compact();
+        assert!(!line.contains('\n'), "compact output must be one line: {line}");
+        assert!(!line.contains(": "), "no space after ':' in compact form");
+        assert_eq!(Json::parse(&line).unwrap(), doc);
+        assert_eq!(Json::parse(&doc.pretty()).unwrap(), Json::parse(&line).unwrap());
     }
 
     #[test]

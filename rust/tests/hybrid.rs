@@ -335,6 +335,8 @@ fn process_worker_cli_accepts_threads_per_worker() {
         String::from_utf8_lossy(&out.stderr)
     );
     let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stdout.contains("engine=process"), "{stdout}");
-    assert!(stdout.contains("hybrid: threads/worker=2"), "{stdout}");
+    // The hybrid diagnostic line lives on stderr (stdout is results-only).
+    assert!(stderr.contains("hybrid: threads/worker=2"), "{stderr}");
 }

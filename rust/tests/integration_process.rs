@@ -137,6 +137,8 @@ fn killed_worker_process_yields_typed_error_not_a_hang() {
 
 #[test]
 fn cli_run_engine_process_matches_threaded_output() {
+    // (stdout, stderr): results stay on stdout, diagnostics (traffic:)
+    // on stderr.
     let run = |engine: &str| {
         let out = Command::new(BSF_BIN)
             .args(["run", "jacobi", "--n", "64", "--engine", engine, "--workers", "2"])
@@ -147,10 +149,13 @@ fn cli_run_engine_process_matches_threaded_output() {
             "bsf run --engine {engine} failed: {}",
             String::from_utf8_lossy(&out.stderr)
         );
-        String::from_utf8_lossy(&out.stdout).to_string()
+        (
+            String::from_utf8_lossy(&out.stdout).to_string(),
+            String::from_utf8_lossy(&out.stderr).to_string(),
+        )
     };
-    let process = run("process");
-    let threaded = run("threaded");
+    let (process, process_err) = run("process");
+    let (threaded, _) = run("threaded");
     assert!(process.contains("engine=process"), "{process}");
 
     let line = |s: &str, prefix: &str| {
@@ -162,5 +167,5 @@ fn cli_run_engine_process_matches_threaded_output() {
             .find_map(|w| w.strip_prefix("iterations=").map(str::to_string))
     };
     assert_eq!(iterations(&process), iterations(&threaded));
-    assert!(process.contains("traffic: order="), "{process}");
+    assert!(process_err.contains("traffic: order="), "{process_err}");
 }

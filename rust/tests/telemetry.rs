@@ -1,0 +1,219 @@
+//! Live-telemetry integration: the exporter serves monotone `/metrics`
+//! snapshots mid-run, the event stream reaches stderr as `bsf-events/1`
+//! JSONL, `bsf top --once` renders a fleet view, stdout stays
+//! results-only, and attaching a sink never changes the numerics.
+
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bsf::costmodel::{calibrate, ClusterProfile};
+use bsf::metrics::exporter::{http_get, MetricsExporter};
+use bsf::metrics::telemetry::{RunEvent, RunTelemetry};
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::skeleton::{Bsf, BsfConfig, SerialEngine, ThreadedEngine};
+use bsf::transport::VolumeByTag;
+use bsf::util::json::Json;
+
+const BSF_BIN: &str = env!("CARGO_BIN_EXE_bsf");
+
+/// Poll `/metrics` between steps of a live threaded run: the iteration
+/// counter must be strictly monotone across polls, `/events` must serve
+/// parseable `bsf-events/1` lines, and the calibrated cost model must
+/// surface predicted phase seconds next to the measured ones.
+#[test]
+fn exporter_serves_monotone_metrics_mid_run() {
+    let (p, _) = JacobiProblem::random(96, 1e-30, 7);
+    let sink = Arc::new(RunTelemetry::new());
+    let cal = calibrate(&p, ClusterProfile::infiniband(), 2);
+    sink.set_cost_model(&cal.params, 2);
+    let exporter = MetricsExporter::bind("127.0.0.1:0", Arc::clone(&sink)).unwrap();
+    let addr = exporter.addr().to_string();
+
+    let cfg = BsfConfig::with_workers(2)
+        .max_iter(50)
+        .heartbeat(2)
+        .telemetry(Arc::clone(&sink));
+    let mut run = Bsf::new(p).config(cfg).engine(ThreadedEngine).iterate().unwrap();
+
+    let mut seen = Vec::new();
+    for _ in 0..10 {
+        run.step().unwrap();
+        let body = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("bsf-metrics/1"));
+        seen.push(doc.get("iteration").and_then(Json::as_u64).unwrap());
+    }
+    assert!(
+        seen.windows(2).all(|w| w[0] < w[1]),
+        "iteration counts not monotone mid-run: {seen:?}"
+    );
+
+    // The snapshot carries the predicted-vs-measured phase rows once a
+    // cost model is attached.
+    let body = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+    let doc = Json::parse(&body).unwrap();
+    let phases = doc.get("phases").expect("phases section");
+    assert!(phases.get("measured").and_then(|m| m.get("gather")).is_some());
+    assert!(
+        phases.get("predicted").and_then(|m| m.get("gather")).is_some(),
+        "predicted phases missing after set_cost_model"
+    );
+    assert!(phases
+        .get("measured_over_predicted")
+        .and_then(|m| m.get("gather"))
+        .is_some());
+
+    // /events is bsf-events/1 JSONL, led by run_start, with per-iteration
+    // events carrying the prediction.
+    let events = http_get(&addr, "/events", Duration::from_secs(5)).unwrap();
+    let mut kinds = Vec::new();
+    let mut predicted_seen = false;
+    for line in events.lines().filter(|l| !l.trim().is_empty()) {
+        let e = RunEvent::from_json(&Json::parse(line).unwrap())
+            .unwrap_or_else(|err| panic!("{line}: {err}"));
+        if let RunEvent::Iteration { predicted: Some(_), .. } = e {
+            predicted_seen = true;
+        }
+        kinds.push(e.kind());
+    }
+    assert_eq!(kinds.first().copied(), Some("run_start"));
+    assert!(kinds.iter().filter(|k| **k == "iteration").count() >= 10);
+    assert!(predicted_seen, "no iteration event carried a prediction");
+
+    let report = run.run_to_end().unwrap();
+    assert_eq!(report.iterations, 50);
+    assert_eq!(sink.iterations(), 50);
+
+    // Heartbeats were configured every 2 folds, so worker health rows
+    // must have materialized over 50 iterations.
+    let body = http_get(&addr, "/metrics", Duration::from_secs(5)).unwrap();
+    let doc = Json::parse(&body).unwrap();
+    let health = doc.get("workers_health").and_then(Json::as_arr).unwrap();
+    assert!(!health.is_empty(), "no worker heartbeats surfaced: {body}");
+    assert_eq!(doc.get("ended").and_then(Json::as_bool), Some(true));
+    exporter.shutdown();
+}
+
+/// The serial engine has no transport but reports the same stream.
+#[test]
+fn serial_engine_feeds_the_sink() {
+    let sink = Arc::new(RunTelemetry::new());
+    let (p, _) = JacobiProblem::random(48, 1e-30, 7);
+    let cfg = BsfConfig::with_workers(1).max_iter(7).telemetry(Arc::clone(&sink));
+    let r = Bsf::new(p).config(cfg).engine(SerialEngine).run().unwrap();
+    assert_eq!(r.iterations, 7);
+    assert_eq!(sink.iterations(), 7);
+    let m = sink.metrics_json();
+    assert_eq!(m.get("engine").and_then(Json::as_str), Some("serial"));
+    assert_eq!(m.get("ended").and_then(Json::as_bool), Some(true));
+    let kinds: Vec<&'static str> = sink.events().iter().map(|e| e.kind()).collect();
+    assert_eq!(kinds.first().copied(), Some("run_start"));
+    assert_eq!(kinds.last().copied(), Some("run_end"));
+}
+
+/// Attaching telemetry (sink + heartbeats) must not change the numerics:
+/// the tap runs after every decision is made.
+#[test]
+fn results_are_bit_identical_with_telemetry_on() {
+    fn solve(telemetry: bool) -> Vec<f64> {
+        let (p, _) = JacobiProblem::random(64, 1e-12, 7);
+        let mut cfg = BsfConfig::with_workers(3).max_iter(500);
+        if telemetry {
+            cfg = cfg.heartbeat(2).telemetry(Arc::new(RunTelemetry::new()));
+        }
+        Bsf::new(p).config(cfg).engine(ThreadedEngine).run().unwrap().param
+    }
+    let plain = solve(false);
+    let tapped = solve(true);
+    assert_eq!(plain.len(), tapped.len());
+    for (i, (a, b)) in plain.iter().zip(&tapped).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "x[{i}] differs: {a} vs {b}");
+    }
+}
+
+/// Piped `bsf run` stdout is results-only (`done:` + `result:`);
+/// diagnostics live on stderr.
+#[test]
+fn cli_stdout_is_results_only() {
+    let out = Command::new(BSF_BIN)
+        .args(["run", "jacobi", "--n", "64", "--k", "2", "--engine", "threaded"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let stderr = String::from_utf8(out.stderr).unwrap();
+    let lines: Vec<&str> = stdout.lines().collect();
+    assert_eq!(lines.len(), 2, "unexpected stdout: {stdout}");
+    assert!(
+        lines[0].starts_with("done: engine=threaded iterations="),
+        "{stdout}"
+    );
+    assert!(lines[1].starts_with("result: ["), "{stdout}");
+    assert!(stderr.contains("phases: "), "{stderr}");
+    assert!(stderr.contains("traffic: order="), "{stderr}");
+}
+
+/// `--events jsonl` streams one schema-versioned event per iteration to
+/// stderr without touching stdout.
+#[test]
+fn cli_events_jsonl_streams_to_stderr() {
+    let out = Command::new(BSF_BIN)
+        .args([
+            "run", "jacobi", "--n", "64", "--k", "2", "--engine", "threaded",
+            "--events", "jsonl", "--eps", "1e-30", "--max-iter", "20",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(stdout.lines().count(), 2, "unexpected stdout: {stdout}");
+
+    let stderr = String::from_utf8(out.stderr).unwrap();
+    let mut kinds = Vec::new();
+    for line in stderr.lines().filter(|l| l.starts_with('{')) {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(
+            v.get("schema").and_then(Json::as_str),
+            Some("bsf-events/1"),
+            "{line}"
+        );
+        kinds.push(RunEvent::from_json(&v).unwrap().kind());
+    }
+    assert!(kinds.contains(&"run_start"), "{stderr}");
+    assert_eq!(kinds.iter().filter(|k| **k == "iteration").count(), 20, "{stderr}");
+    assert!(kinds.contains(&"run_end"), "{stderr}");
+}
+
+/// `bsf top --once` against a live exporter renders the fleet view.
+#[test]
+fn cli_top_once_renders_fleet_view() {
+    let sink = Arc::new(RunTelemetry::new());
+    sink.run_start("threaded", 2);
+    sink.record_iteration(1, 0.5, [0.5, 0.25, 0.125, 0.0625], VolumeByTag::default());
+    let exporter = MetricsExporter::bind("127.0.0.1:0", Arc::clone(&sink)).unwrap();
+    let out = Command::new(BSF_BIN)
+        .args(["top", &exporter.addr().to_string(), "--once"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{out:?}");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(stdout.contains("engine=threaded"), "{stdout}");
+    assert!(stdout.contains("iteration=1"), "{stdout}");
+    assert!(stdout.contains("send_order"), "{stdout}");
+    assert!(stdout.contains("no worker heartbeats yet"), "{stdout}");
+    exporter.shutdown();
+}
+
+/// An explicit `--events` value other than jsonl is a usage error
+/// (exit 2), not a silent ignore.
+#[test]
+fn cli_rejects_unknown_events_format() {
+    let out = Command::new(BSF_BIN)
+        .args(["run", "jacobi", "--n", "16", "--events", "xml"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "{out:?}");
+    let stderr = String::from_utf8(out.stderr).unwrap();
+    assert!(stderr.contains("--events"), "{stderr}");
+}

@@ -1,0 +1,70 @@
+//! Hot-path guard: recording an iteration into `RunTelemetry` must not
+//! allocate in steady state (the master taps it every iteration). The
+//! ring is preallocated and every event payload is scalar, so a clean
+//! pass allocates nothing; a deterministic per-call allocation would
+//! taint every pass.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use bsf::metrics::telemetry::RunTelemetry;
+use bsf::transport::VolumeByTag;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`; only adds a relaxed
+// counter bump on the allocating paths.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_record_iteration_does_not_allocate() {
+    let t = Arc::new(RunTelemetry::new());
+    t.run_start("threaded", 4);
+    // Warm the aggregator: delta state and a first batch of ring slots.
+    for i in 1..=64u64 {
+        t.record_iteration(i, i as f64 * 0.001, [0.5, 0.25, 0.125, 0.0625], VolumeByTag::default());
+    }
+    // The test harness's own threads may allocate concurrently, so
+    // accept the guard as passed if any single pass over 64 iterations
+    // observes zero allocations.
+    let mut clean = false;
+    for round in 0..10u64 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for i in 0..64u64 {
+            let iter = 65 + round * 64 + i;
+            t.record_iteration(
+                iter,
+                iter as f64 * 0.001,
+                [0.5, 0.25, 0.125, 0.0625],
+                VolumeByTag::default(),
+            );
+        }
+        if ALLOCS.load(Ordering::Relaxed) == before {
+            clean = true;
+            break;
+        }
+    }
+    assert!(clean, "record_iteration allocated in every measured pass");
+}

@@ -1,0 +1,140 @@
+//! Schema tests for the `bsf-events/1` event stream: the exact JSONL
+//! field names are a public contract (external dashboards parse them),
+//! so every variant is golden-tested byte-for-byte and round-tripped
+//! through `Json::parse` + `RunEvent::from_json`.
+
+use bsf::metrics::telemetry::{RunEvent, EVENTS_SCHEMA, METRICS_SCHEMA};
+use bsf::util::json::Json;
+
+fn round_trip(e: &RunEvent) -> RunEvent {
+    let line = e.to_json().compact();
+    let parsed = Json::parse(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+    RunEvent::from_json(&parsed).unwrap_or_else(|err| panic!("{line}: {err}"))
+}
+
+#[test]
+fn schema_constants_are_versioned() {
+    assert_eq!(EVENTS_SCHEMA, "bsf-events/1");
+    assert_eq!(METRICS_SCHEMA, "bsf-metrics/1");
+}
+
+#[test]
+fn golden_run_start() {
+    let e = RunEvent::RunStart { engine: "threaded".into(), workers: 4 };
+    assert_eq!(
+        e.to_json().compact(),
+        r#"{"schema":"bsf-events/1","type":"run_start","engine":"threaded","workers":4}"#
+    );
+    assert_eq!(round_trip(&e), e);
+}
+
+#[test]
+fn golden_iteration_without_prediction() {
+    let e = RunEvent::Iteration {
+        iter: 3,
+        elapsed: 1.5,
+        measured: [0.5, 0.25, 0.125, 0.0625],
+        predicted: None,
+        messages: 10,
+        bytes: 640,
+    };
+    assert_eq!(
+        e.to_json().compact(),
+        concat!(
+            r#"{"schema":"bsf-events/1","type":"iteration","iter":3,"#,
+            r#""elapsed_seconds":1.5,"#,
+            r#""measured":{"send_order":0.5,"gather":0.25,"master_reduce":0.125,"process":0.0625},"#,
+            r#""predicted":null,"messages":10,"bytes":640}"#
+        )
+    );
+    assert_eq!(round_trip(&e), e);
+}
+
+#[test]
+fn golden_iteration_with_prediction() {
+    let e = RunEvent::Iteration {
+        iter: 4,
+        elapsed: 2.0,
+        measured: [0.5, 0.25, 0.125, 0.0625],
+        predicted: Some([0.5, 0.5, 0.25, 0.125]),
+        messages: 8,
+        bytes: 512,
+    };
+    assert_eq!(
+        e.to_json().compact(),
+        concat!(
+            r#"{"schema":"bsf-events/1","type":"iteration","iter":4,"#,
+            r#""elapsed_seconds":2,"#,
+            r#""measured":{"send_order":0.5,"gather":0.25,"master_reduce":0.125,"process":0.0625},"#,
+            r#""predicted":{"send_order":0.5,"gather":0.5,"master_reduce":0.25,"process":0.125},"#,
+            r#""messages":8,"bytes":512}"#
+        )
+    );
+    assert_eq!(round_trip(&e), e);
+}
+
+#[test]
+fn golden_loss_rejoin_restart() {
+    let loss = RunEvent::Loss { iter: 7, rank: 1 };
+    assert_eq!(
+        loss.to_json().compact(),
+        r#"{"schema":"bsf-events/1","type":"loss","iter":7,"rank":1}"#
+    );
+    assert_eq!(round_trip(&loss), loss);
+
+    let rejoin = RunEvent::Rejoin { iter: 9, rank: 1 };
+    assert_eq!(
+        rejoin.to_json().compact(),
+        r#"{"schema":"bsf-events/1","type":"rejoin","iter":9,"rank":1}"#
+    );
+    assert_eq!(round_trip(&rejoin), rejoin);
+
+    let restart = RunEvent::Restart { generation: 1, iter: 4, rank: 2 };
+    assert_eq!(
+        restart.to_json().compact(),
+        r#"{"schema":"bsf-events/1","type":"restart","generation":1,"iter":4,"rank":2}"#
+    );
+    assert_eq!(round_trip(&restart), restart);
+}
+
+#[test]
+fn golden_run_end() {
+    let e = RunEvent::RunEnd { iter: 12, elapsed: 2.5 };
+    assert_eq!(
+        e.to_json().compact(),
+        r#"{"schema":"bsf-events/1","type":"run_end","iter":12,"elapsed_seconds":2.5}"#
+    );
+    assert_eq!(round_trip(&e), e);
+}
+
+#[test]
+fn iteration_parses_with_predicted_field_absent() {
+    // Forward compatibility: a stream written before a cost model was
+    // attached may omit `predicted` entirely, not just null it.
+    let line = concat!(
+        r#"{"schema":"bsf-events/1","type":"iteration","iter":5,"#,
+        r#""elapsed_seconds":0.5,"#,
+        r#""measured":{"send_order":0.5,"gather":0.25,"master_reduce":0.125,"process":0.0625},"#,
+        r#""messages":2,"bytes":64}"#
+    );
+    let e = RunEvent::from_json(&Json::parse(line).unwrap()).unwrap();
+    match e {
+        RunEvent::Iteration { iter: 5, predicted: None, messages: 2, bytes: 64, .. } => {}
+        other => panic!("unexpected parse: {other:?}"),
+    }
+}
+
+#[test]
+fn from_json_rejects_bad_documents() {
+    let wrong_schema = r#"{"schema":"bsf-events/2","type":"run_end","iter":1,"elapsed_seconds":1}"#;
+    let err = RunEvent::from_json(&Json::parse(wrong_schema).unwrap()).unwrap_err();
+    assert!(err.contains("schema"), "{err}");
+
+    let unknown_type = r#"{"schema":"bsf-events/1","type":"comet","iter":1}"#;
+    let err = RunEvent::from_json(&Json::parse(unknown_type).unwrap()).unwrap_err();
+    assert!(err.contains("unknown event type"), "{err}");
+
+    let missing_field = r#"{"schema":"bsf-events/1","type":"loss","iter":1}"#;
+    let err = RunEvent::from_json(&Json::parse(missing_field).unwrap()).unwrap_err();
+    assert!(err.contains("rank"), "{err}");
+}
