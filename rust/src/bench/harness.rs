@@ -59,15 +59,22 @@ const MC_TOL: f64 = 1e-3;
 /// One point of the sweep grid.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchCase {
+    /// Problem name (as on the CLI).
     pub problem: &'static str,
     /// `serial` | `threaded` | `process` | `cluster` (persistent
     /// worker processes — spawn/connect amortized across the samples).
     pub engine: &'static str,
+    /// Problem dimension.
     pub n: usize,
+    /// Worker count K.
     pub workers: usize,
+    /// Intra-worker map threads.
     pub threads_per_worker: usize,
+    /// Instance seed.
     pub seed: u64,
+    /// Convergence threshold.
     pub eps: f64,
+    /// Iteration cap.
     pub max_iter: usize,
     /// Extra problem knob (montecarlo: samples per block; 0 = unused).
     pub samples: usize,
@@ -86,23 +93,30 @@ impl BenchCase {
 /// One measured record: the case plus what the run reported.
 #[derive(Debug, Clone)]
 pub struct BenchRecord {
+    /// The grid point this record measured.
     pub case: BenchCase,
+    /// Iterations to convergence.
     pub iterations: usize,
     /// Median wall seconds over the timed samples.
     pub wall_seconds: f64,
+    /// Phase seconds in [`ALL_PHASES`](crate::metrics::ALL_PHASES) order.
     pub phases: [f64; 4], // send, gather, reduce, process
+    /// Transport messages for the run.
     pub messages: u64,
+    /// Transport payload bytes for the run.
     pub bytes: u64,
 }
 
 /// A whole emitted/parsed document.
 #[derive(Debug, Clone)]
 pub struct BenchSuite {
+    /// Document label (e.g. the git describe of the producing build).
     pub label: String,
     /// `quick` | `full`.
     pub mode: String,
     /// True for a committed placeholder baseline (no trusted timings).
     pub bootstrap: bool,
+    /// All measured records.
     pub records: Vec<BenchRecord>,
 }
 

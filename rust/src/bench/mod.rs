@@ -19,13 +19,18 @@ use crate::util::stats;
 /// One benchmark's samples + robust summary.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Raw wall-clock samples, seconds.
     pub samples_secs: Vec<f64>,
+    /// Median of the samples.
     pub median_secs: f64,
+    /// Median absolute deviation of the samples.
     pub mad_secs: f64,
 }
 
 impl BenchResult {
+    /// Summarize raw samples (median + MAD).
     pub fn from_samples(name: impl Into<String>, samples_secs: Vec<f64>) -> Self {
         let median_secs = stats::median(&samples_secs);
         let mad_secs = stats::mad(&samples_secs);
@@ -73,15 +78,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Self { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render with aligned columns.
     pub fn to_string(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -107,6 +115,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.to_string());
     }

@@ -14,19 +14,24 @@ use crate::skeleton::{Bsf, BsfConfig, BsfProblem, SimulatedEngine};
 /// One K point of a speedup sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct SweepRow {
+    /// Worker count K of this point.
     pub k: usize,
     /// BSF-model predicted iteration time / speedup.
     pub t_model: f64,
+    /// Model-predicted speedup a(K).
     pub a_model: f64,
     /// Simulated-cluster measured iteration time / speedup.
     pub t_sim: f64,
+    /// Simulated speedup a(K).
     pub a_sim: f64,
 }
 
 /// Full sweep result.
 #[derive(Debug, Clone)]
 pub struct Sweep {
+    /// The cost-model calibration the predictions used.
     pub calibration: Calibration,
+    /// One row per K.
     pub rows: Vec<SweepRow>,
     /// Analytic boundary from the calibrated model.
     pub k_max_model: f64,

@@ -24,6 +24,7 @@ use crate::util::codec::Codec;
 /// Calibration result: the cost parameters plus the raw measurements.
 #[derive(Debug, Clone)]
 pub struct Calibration {
+    /// The fitted cost-model parameters.
     pub params: CostParams,
     /// Bytes of one order message (job + param).
     pub order_bytes: usize,

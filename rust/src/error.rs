@@ -40,6 +40,14 @@ pub enum BsfError {
     /// [`CancelToken`](crate::skeleton::driver::CancelToken). Workers
     /// were released (exit broadcast) before this error surfaced.
     Cancelled,
+    /// The persistent cluster has no free capacity for this launch:
+    /// other jobs hold its workers (or a one-shot `Cluster::engine()`
+    /// run is active). Queue the work through a scheduler (`bsf serve`
+    /// + `bsf submit`) instead of racing for the whole fleet.
+    ClusterBusy {
+        /// Number of jobs currently holding leases on the fleet.
+        active_jobs: usize,
+    },
     /// Artifact registry problems: malformed `manifest.tsv`, unknown
     /// artifact name, output-shape mismatch.
     Artifact(String),
@@ -70,6 +78,7 @@ impl BsfError {
         BsfError::Config(msg.into())
     }
 
+    /// Shorthand for [`BsfError::Transport`].
     pub fn transport(msg: impl Into<String>) -> Self {
         BsfError::Transport(msg.into())
     }
@@ -85,22 +94,27 @@ impl BsfError {
         BsfError::WorkerLost { rank, reason: reason.into() }
     }
 
+    /// Shorthand for [`BsfError::Artifact`].
     pub fn artifact(msg: impl Into<String>) -> Self {
         BsfError::Artifact(msg.into())
     }
 
+    /// Shorthand for [`BsfError::Xla`].
     pub fn xla(msg: impl Into<String>) -> Self {
         BsfError::Xla(msg.into())
     }
 
+    /// Shorthand for [`BsfError::Usage`].
     pub fn usage(msg: impl Into<String>) -> Self {
         BsfError::Usage(msg.into())
     }
 
+    /// Shorthand for [`BsfError::Bench`].
     pub fn bench(msg: impl Into<String>) -> Self {
         BsfError::Bench(msg.into())
     }
 
+    /// Shorthand for [`BsfError::Verify`].
     pub fn verify(msg: impl Into<String>) -> Self {
         BsfError::Verify(msg.into())
     }
@@ -127,6 +141,14 @@ impl fmt::Display for BsfError {
             }
             BsfError::Cancelled => {
                 write!(f, "run cancelled between iterations (workers released)")
+            }
+            BsfError::ClusterBusy { active_jobs } => {
+                write!(
+                    f,
+                    "cluster busy: {active_jobs} active job(s) hold its workers \
+                     — submit through a scheduler (`bsf serve` + `bsf submit`) \
+                     instead of racing for the fleet"
+                )
             }
             BsfError::Artifact(msg) => write!(f, "artifact error: {msg}"),
             BsfError::Xla(msg) => write!(f, "xla error: {msg}"),

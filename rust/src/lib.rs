@@ -83,10 +83,18 @@
 //!   timers and support code (the offline build has no criterion/clap/
 //!   proptest; see Cargo.toml).
 //!
+//! Multi-tenant serving (`bsf serve`) lives on top of the same layers:
+//! a [`skeleton::Scheduler`] multiplexes concurrent jobs over one
+//! shared [`skeleton::WorkerPool`] fleet, and
+//! [`metrics::control::ControlServer`] exposes it over plain HTTP (see
+//! docs/operations.md).
+//!
 //! See README.md ("Session lifecycle") for run vs. iterate vs. resume
 //! and the migration table from the seed-era one-shot entry points
 //! (`run_threaded` / `run_simulated`, deleted in favor of the session
 //! API).
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod costmodel;
@@ -101,11 +109,14 @@ pub mod util;
 pub mod verify;
 
 pub use error::{BsfError, BsfResult};
+pub use metrics::control::ControlServer;
 pub use metrics::exporter::MetricsExporter;
 pub use metrics::telemetry::{RunEvent, RunTelemetry};
 pub use skeleton::{
     Bsf, BsfConfig, BsfProblem, BsfRun, CancelToken, Checkpoint, Clock, Cluster,
-    ClusterEngine, Driver, Engine, FaultPolicy, FusedNativeBackend, IterationEvent,
-    MapBackend, PerElementBackend, PhaseBreakdown, ProcessEngine, RunReport,
+    ClusterEngine, ControlApi, Driver, Engine, FaultPolicy, FusedNativeBackend,
+    IterationEvent, JobContract, JobSnapshot, JobStatus, MapBackend,
+    PerElementBackend, PhaseBreakdown, ProcessEngine, RunReport, Scheduler,
     SerialEngine, SimulatedEngine, StopPolicy, StopReason, ThreadedEngine,
+    WorkerPool,
 };

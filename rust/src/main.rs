@@ -20,6 +20,13 @@
 //!                          explore every schedule of a small run, check
 //!                          deadlock-freedom, tag routing, orphan-freedom
 //!                          and schedule determinism
+//! * `serve <problem>`   — multi-tenant job scheduler: keep one worker
+//!                          fleet alive and multiplex submitted jobs across
+//!                          it (control plane over plain HTTP)
+//! * `submit <problem>`  — submit one job to a `serve` fleet (`--wait`
+//!                          polls until it ends and prints the result)
+//! * `jobs`              — list / cancel a `serve` fleet's jobs
+//! * `shutdown`          — drain a `serve` fleet and let it exit
 //! * `top <addr>`        — live fleet view: poll a running master's
 //!                          `/metrics` endpoint (see `--metrics-addr`)
 //!                          and render iteration progress, phase ratios
@@ -43,7 +50,8 @@ use bsf::bench::harness as bench_harness;
 use bsf::bench::sweep::{print_sweep, speedup_sweep};
 use bsf::costmodel::{calibrate, ClusterProfile};
 use bsf::error::BsfError;
-use bsf::metrics::exporter::{http_get, MetricsExporter};
+use bsf::metrics::control::ControlServer;
+use bsf::metrics::exporter::{http_get, http_post, MetricsExporter};
 use bsf::metrics::telemetry::RunTelemetry;
 use bsf::problems::apex::ApexProblem;
 use bsf::problems::cimmino::CimminoProblem;
@@ -58,9 +66,9 @@ use bsf::runtime::XlaRuntime;
 use bsf::skeleton::cluster::{run_persistent_worker, Cluster};
 use bsf::skeleton::process::run_process_worker;
 use bsf::skeleton::{
-    Bsf, BsfConfig, BsfProblem, FaultPolicy, FusedNativeBackend, MapBackend,
-    PerElementBackend, ProcessEngine, RunReport, SerialEngine, SimulatedEngine,
-    ThreadedEngine,
+    Bsf, BsfConfig, BsfProblem, ControlApi, FaultPolicy, FusedNativeBackend,
+    JobStatus, MapBackend, PerElementBackend, ProcessEngine, RunReport,
+    Scheduler, SerialEngine, SimulatedEngine, ThreadedEngine,
 };
 use bsf::util::cli::ArgMap;
 use bsf::util::faultsim::run_flaky_process_worker;
@@ -68,7 +76,7 @@ use bsf::util::json::Json;
 use bsf::verify::{run_verify, Mutation, VerifyConfig};
 
 const USAGE: &str = "\
-usage: bsf <run|worker|sim|sweep|predict|bench|verify|top|artifacts> [problem] [options]
+usage: bsf <run|worker|sim|sweep|predict|bench|verify|serve|submit|jobs|shutdown|top|artifacts> [problem] [options]
 
 problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | lpp | apex
 
@@ -137,6 +145,41 @@ options by subcommand:
     --kill-rank R / --kill-after-folds N
                    fault-injection smoke (testing): if R equals this
                    worker's --rank, hard-exit before sending fold N+1
+  serve (multi-tenant fleet: accept jobs over HTTP and multiplex them
+         across one persistent worker pool; see docs/operations.md):
+    <problem>          the one problem this fleet serves (the workers
+                       handshake its signature; submissions for any
+                       other problem are rejected)
+    --workers K        fleet size (default 4; --k is an alias)
+    --control A        bind the control endpoint on A (host:port;
+                       default 127.0.0.1:0 = ephemeral, printed at
+                       startup): POST /jobs, GET /jobs,
+                       POST /jobs/<id>/cancel, POST /shutdown,
+                       GET /metrics, GET /events
+    --listen A         rendezvous with pre-started `bsf worker --persist`
+                       processes on A instead of self-spawning them
+    problem options (--n --seed --eps --steps --samples
+    --threads-per-worker --backend --heartbeat) as under run
+  submit (submit one job to a serving fleet):
+    <problem>          must equal the problem the fleet serves
+    --control A        the fleet's control endpoint (required)
+    --workers N|auto   lease size; auto asks the fleet's calibrated cost
+                       model for the scalability-boundary K, clamped to
+                       free capacity (default: auto)
+    --priority P       higher runs first, FIFO within a level (default 0)
+    --deadline S       wall-clock budget for the run itself (queue wait
+                       excluded)
+    --max-iter I       iteration cap (the fleet template's cap still
+                       applies; the lower one wins)
+    --wait             poll until the job ends and print the same `done:`
+                       + `result:` lines a solo `bsf run` prints
+  jobs (inspect a serving fleet):
+    --control A        the fleet's control endpoint (required)
+    --json             print the raw bsf-jobs/1 document instead of the
+                       rendered table
+    --cancel ID        cancel a queued or running job instead of listing
+  shutdown (drain a serving fleet and let `bsf serve` exit):
+    --control A        the fleet's control endpoint (required)
   sweep:
     --n N (default 512)  --k 1,2,4,...  --seed S  --profile P
     --max-iter I (default 30)  --steps S (gravity; default: max-iter)
@@ -733,6 +776,321 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
     }
 }
 
+const SERVE_OPTS: &[&str] = &[
+    "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
+    "max-iter", "deadline", "backend", "profile", "steps", "samples", "listen",
+    "control", "heartbeat",
+];
+
+/// `bsf serve`: start a persistent fleet for one problem and multiplex
+/// submitted jobs across it until a control client asks for shutdown.
+/// The scheduler and control plane live in the library
+/// (`skeleton::scheduler`, `metrics::control`); this wires them to the
+/// CLI's problem constructors and result describers.
+fn cmd_serve(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(SERVE_OPTS)?;
+    let c = common_from(args)?;
+    if c.cfg.workers == 0 {
+        return Err(BsfError::usage("serve needs at least one worker"));
+    }
+    let name = args.positional(0).unwrap_or("jacobi");
+    match name {
+        "jacobi" => serve_problem(mk_jacobi(&c), args, name, &c, |x| head(x)),
+        "jacobi-map" => serve_problem(mk_jacobi_map(&c), args, name, &c, |x| head(x)),
+        "cimmino" => serve_problem(mk_cimmino(&c), args, name, &c, |x| head(x)),
+        "gravity" => serve_problem(mk_gravity(&c), args, name, &c, |x| head(x)),
+        "montecarlo" => serve_problem(mk_montecarlo(&c), args, name, &c, |t| {
+            format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1)
+        }),
+        "lpp" => serve_problem(mk_lpp(&c), args, name, &c, |x| head(x)),
+        "apex" => serve_problem(mk_apex(&c), args, name, &c, |(x, _)| head(x)),
+        other => Err(BsfError::usage(format!("unknown problem {other:?} (serve)"))),
+    }
+}
+
+/// The generic body of `bsf serve`: fleet up, scheduler + control
+/// endpoint up, drain on request, fleet down. The describer closure is
+/// the same one `cmd_run` passes to `finish`, so a scheduled job's
+/// `result` field is byte-identical to a solo run's `result:` line.
+fn serve_problem<P: BsfProblem>(
+    p: P,
+    args: &ArgMap,
+    name: &str,
+    c: &Common,
+    describe: impl Fn(&P::Param) -> String + Send + Sync + 'static,
+) -> Result<(), BsfError> {
+    // Calibrate first: `--workers auto` submissions resolve to the
+    // model's scalability-boundary K instead of the whole free set, and
+    // /metrics carries predicted-vs-measured phase seconds.
+    let cal = calibrate(&p, profile_from(args)?, 3);
+    let sink = Arc::new(RunTelemetry::new());
+    sink.run_start("cluster", c.cfg.workers);
+    sink.set_cost_model(&cal.params, c.cfg.workers.max(1));
+
+    let spec = match args.get("listen") {
+        Some(addr) => Cluster::connect(c.cfg.workers, addr),
+        None => Cluster::spawn(c.cfg.workers, worker_args(name, c, args)),
+    };
+    let cluster = spec.start(&p)?;
+    let sched = Arc::new(
+        Scheduler::new(cluster.pool(), Arc::new(p), name, c.cfg.clone())
+            .describe_with(describe)
+            .cost_model(cal.params)
+            .telemetry(Arc::clone(&sink)),
+    );
+    let server = ControlServer::bind(
+        args.str_or("control", "127.0.0.1:0"),
+        Arc::new(Arc::clone(&sched)) as Arc<dyn ControlApi>,
+    )?;
+    // The one line scripts parse (stdout): where the control plane is.
+    println!(
+        "serve: {name} fleet of {} worker(s); control on {}",
+        c.cfg.workers,
+        server.addr()
+    );
+    eprintln!(
+        "control: POST /jobs, GET /jobs, POST /jobs/<id>/cancel, POST /shutdown, \
+         GET /metrics, GET /events — or bsf submit/jobs/shutdown --control {}",
+        server.addr()
+    );
+
+    // Serve until a control client POSTs /shutdown, then drain what is
+    // queued or running and tear the fleet down.
+    while !sched.is_draining() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    eprintln!("serve: draining ({} job(s) pending)", sched.queue_depth());
+    while !sched.wait_idle(Duration::from_secs(60)) {}
+    server.shutdown();
+    let ledger = sched.jobs();
+    cluster.shutdown()?;
+    let count = |s: JobStatus| ledger.iter().filter(|j| j.status == s).count();
+    println!(
+        "done: served {} job(s) ({} done, {} cancelled, {} failed)",
+        ledger.len(),
+        count(JobStatus::Done),
+        count(JobStatus::Cancelled),
+        count(JobStatus::Failed),
+    );
+    Ok(())
+}
+
+/// Timeout for one control-plane HTTP exchange (`bsf submit` / `jobs` /
+/// `shutdown` → `bsf serve`).
+const CONTROL_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn control_addr(args: &ArgMap) -> Result<&str, BsfError> {
+    args.get("control").ok_or_else(|| {
+        BsfError::usage(
+            "this subcommand talks to a `bsf serve` control endpoint — pass \
+             --control <host:port> (printed by `bsf serve` at startup)",
+        )
+    })
+}
+
+const SUBMIT_OPTS: &[&str] =
+    &["control", "workers", "k", "priority", "deadline", "max-iter", "wait"];
+
+/// `bsf submit`: POST one job contract to a serving fleet. With
+/// `--wait`, poll until the job is terminal and print the same `done:`
+/// + `result:` lines a solo `bsf run` would.
+fn cmd_submit(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(SUBMIT_OPTS)?;
+    let addr = control_addr(args)?;
+    let name = args.positional(0).ok_or_else(|| {
+        BsfError::usage("submit requires a problem name (the one the fleet serves)")
+    })?;
+    let mut fields = vec![("problem", Json::Str(name.to_string()))];
+    match args.get("workers").or_else(|| args.get("k")) {
+        None => {}
+        Some("auto") => fields.push(("workers", Json::Str("auto".into()))),
+        Some(v) => {
+            let k: u64 = v.parse().map_err(|_| {
+                BsfError::usage(format!(
+                    "--workers expects an integer or \"auto\", got {v:?}"
+                ))
+            })?;
+            fields.push(("workers", Json::Num(k as f64)));
+        }
+    }
+    if args.get("priority").is_some() {
+        fields.push(("priority", Json::Num(args.f64_or("priority", 0.0)?)));
+    }
+    if args.get("deadline").is_some() {
+        let secs = args.f64_or("deadline", 0.0)?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(BsfError::usage(format!(
+                "--deadline expects a finite non-negative number of seconds, \
+                 got {secs}"
+            )));
+        }
+        fields.push(("deadline_secs", Json::Num(secs)));
+    }
+    if args.get("max-iter").is_some() {
+        fields.push(("max_iter", Json::Num(args.usize_or("max-iter", 0)? as f64)));
+    }
+    let body = Json::obj(fields).pretty();
+    let resp = http_post(addr, "/jobs", &body, CONTROL_TIMEOUT)?;
+    let doc = Json::parse(&resp)
+        .map_err(|e| BsfError::transport(format!("bad submit response from {addr}: {e}")))?;
+    let id = doc
+        .get("id")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| BsfError::transport(format!("submit response has no id: {resp}")))?;
+    if !args.flag("wait") {
+        println!("submitted: job {id} ({name}) — poll with `bsf jobs --control {addr}`");
+        return Ok(());
+    }
+    wait_for_job(addr, id)
+}
+
+/// Poll `GET /jobs` until job `id` is terminal. The printed `result:`
+/// line is the byte-compare artifact for scheduled-vs-solo runs.
+fn wait_for_job(addr: &str, id: u64) -> Result<(), BsfError> {
+    loop {
+        let body = http_get(addr, "/jobs", CONTROL_TIMEOUT)?;
+        let doc = Json::parse(&body)
+            .map_err(|e| BsfError::transport(format!("bad /jobs JSON from {addr}: {e}")))?;
+        let row = doc
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .and_then(|rows| {
+                rows.iter().find(|r| r.get("id").and_then(Json::as_u64) == Some(id))
+            })
+            .ok_or_else(|| {
+                BsfError::transport(format!("job {id} vanished from {addr}/jobs"))
+            })?;
+        match row.get("status").and_then(Json::as_str).unwrap_or("?") {
+            "done" => {
+                println!(
+                    "done: job {id} finished after {} iteration(s) in {:.6}s",
+                    row.get("iterations").and_then(Json::as_u64).unwrap_or(0),
+                    row.get("elapsed").and_then(Json::as_f64).unwrap_or(0.0),
+                );
+                if let Some(result) = row.get("result").and_then(Json::as_str) {
+                    println!("result: {result}");
+                }
+                return Ok(());
+            }
+            "cancelled" => {
+                println!("done: job {id} cancelled");
+                return Ok(());
+            }
+            "failed" => {
+                let err =
+                    row.get("error").and_then(Json::as_str).unwrap_or("unknown error");
+                return Err(BsfError::config(format!("job {id} failed: {err}")));
+            }
+            _ => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+}
+
+const JOBS_OPTS: &[&str] = &["control", "cancel", "json"];
+
+/// `bsf jobs`: list (or `--cancel`) the jobs of a serving fleet.
+fn cmd_jobs(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(JOBS_OPTS)?;
+    let addr = control_addr(args)?;
+    if let Some(v) = args.get("cancel") {
+        let id: u64 = v.parse().map_err(|_| {
+            BsfError::usage(format!("--cancel expects a job id, got {v:?}"))
+        })?;
+        let resp = http_post(addr, &format!("/jobs/{id}/cancel"), "", CONTROL_TIMEOUT)?;
+        let doc = Json::parse(&resp).map_err(|e| {
+            BsfError::transport(format!("bad cancel response from {addr}: {e}"))
+        })?;
+        println!(
+            "cancel: job {id} was {}",
+            doc.get("status").and_then(Json::as_str).unwrap_or("?")
+        );
+        return Ok(());
+    }
+    let body = http_get(addr, "/jobs", CONTROL_TIMEOUT)?;
+    if args.flag("json") {
+        println!("{}", body.trim_end());
+        return Ok(());
+    }
+    let doc = Json::parse(&body)
+        .map_err(|e| BsfError::transport(format!("bad /jobs JSON from {addr}: {e}")))?;
+    print!("{}", render_jobs(addr, &doc));
+    Ok(())
+}
+
+/// Render one `bsf-jobs/1` document as the `bsf jobs` table. Tolerant
+/// of missing fields, like `render_top`: a newer server never crashes
+/// an older viewer.
+fn render_jobs(addr: &str, doc: &Json) -> String {
+    let fleet = doc.get("fleet");
+    let fnum = |k: &str| fleet.and_then(|f| f.get(k)).and_then(Json::as_u64).unwrap_or(0);
+    let ranks = |v: Option<&Json>| -> String {
+        v.and_then(Json::as_arr)
+            .map(|xs| {
+                xs.iter()
+                    .filter_map(Json::as_u64)
+                    .map(|r| r.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            })
+            .unwrap_or_default()
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "bsf jobs — {addr} problem={} fleet={} free={} active={} lost=[{}] queue={}\n",
+        doc.get("problem").and_then(Json::as_str).unwrap_or("?"),
+        fnum("spawn_k"),
+        fnum("free"),
+        fnum("active_jobs"),
+        ranks(fleet.and_then(|f| f.get("lost"))),
+        doc.get("queue_depth").and_then(Json::as_u64).unwrap_or(0),
+    ));
+    let rows = match doc.get("jobs").and_then(Json::as_arr) {
+        Some(rows) if !rows.is_empty() => rows,
+        _ => {
+            out.push_str("(no jobs submitted yet)\n");
+            return out;
+        }
+    };
+    out.push_str(
+        "id    status     pri   req  granted     iters    elapsed(s)  result\n",
+    );
+    for row in rows {
+        let num = |k: &str| row.get(k).and_then(Json::as_u64).unwrap_or(0);
+        // Failed jobs show their error where others show their result.
+        let outcome = row
+            .get("error")
+            .and_then(Json::as_str)
+            .or_else(|| row.get("result").and_then(Json::as_str))
+            .unwrap_or("-");
+        out.push_str(&format!(
+            "{:<6}{:<11}{:<6}{:<5}{:<12}{:<9}{:<12.6}{}\n",
+            num("id"),
+            row.get("status").and_then(Json::as_str).unwrap_or("?"),
+            row.get("priority").and_then(Json::as_f64).unwrap_or(0.0) as i64,
+            num("requested"),
+            format!("[{}]", ranks(row.get("granted"))),
+            num("iterations"),
+            row.get("elapsed").and_then(Json::as_f64).unwrap_or(0.0),
+            outcome,
+        ));
+    }
+    out
+}
+
+/// `bsf shutdown`: ask a serving fleet to drain and exit.
+fn cmd_shutdown(args: &ArgMap) -> Result<(), BsfError> {
+    args.ensure_known(&["control"])?;
+    let addr = control_addr(args)?;
+    let resp = http_post(addr, "/shutdown", "", CONTROL_TIMEOUT)?;
+    let doc = Json::parse(&resp)
+        .map_err(|e| BsfError::transport(format!("bad shutdown response from {addr}: {e}")))?;
+    println!(
+        "shutdown: {} — the fleet exits once the queue drains",
+        doc.get("status").and_then(Json::as_str).unwrap_or("?")
+    );
+    Ok(())
+}
+
 fn cmd_sweep(args: &ArgMap) -> Result<(), BsfError> {
     args.ensure_known(&["n", "k", "seed", "profile", "max-iter", "samples", "steps"])?;
     let n = args.usize_or("n", 512)?;
@@ -1145,6 +1503,10 @@ fn dispatch(args: &ArgMap) -> Result<(), BsfError> {
         Some("predict") => cmd_predict(args),
         Some("bench") => cmd_bench(args),
         Some("verify") => cmd_verify(args),
+        Some("serve") => cmd_serve(args),
+        Some("submit") => cmd_submit(args),
+        Some("jobs") => cmd_jobs(args),
+        Some("shutdown") => cmd_shutdown(args),
         Some("top") => cmd_top(args),
         Some("artifacts") => cmd_artifacts(),
         Some("help") | None => {

@@ -1,0 +1,289 @@
+//! The `bsf serve` control endpoint: a std-only plain-TCP HTTP server
+//! over a [`ControlApi`] — the object-safe scheduler surface.
+//!
+//! Routes:
+//!
+//! * `POST /jobs` — submit a job; body `{"problem": str, "workers":
+//!   int|"auto", "priority": int, "deadline_secs": num, "max_iter":
+//!   int}` (all but `problem` optional). 200 with `{"id", "status"}`,
+//!   400 with `{"error"}` on a rejected contract.
+//! * `GET /jobs` — the `bsf-jobs/1` document: queue depth, fleet state,
+//!   one row per job ever submitted.
+//! * `POST /jobs/<id>/cancel` — cancel a queued or running job.
+//! * `POST /shutdown` — stop accepting submissions and begin draining;
+//!   the serve loop tears the fleet down once the queue is empty.
+//! * `GET /metrics` — the `bsf-metrics/1` snapshot (with `queue_depth`
+//!   and per-job rows when telemetry is attached).
+//! * `GET /events` — the `bsf-events/1` JSONL stream (`job_*` events
+//!   included).
+//!
+//! The server reuses the [`exporter`](crate::metrics::exporter)'s
+//! HTTP/1.0 request/response machinery: one connection at a time on one
+//! dedicated thread — a control plane for `bsf submit` / `bsf jobs` /
+//! `curl`, not a web server. Scheduler calls run on the serving thread;
+//! submission and cancellation are non-blocking by construction (jobs
+//! run on their own threads), so a slow client can delay other control
+//! clients but never the jobs themselves.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::error::BsfError;
+use crate::metrics::exporter::{read_request, write_response, HttpRequest};
+use crate::skeleton::scheduler::ControlApi;
+use crate::util::json::Json;
+
+/// A running control endpoint (one serving thread + its listener),
+/// dispatching HTTP requests to an [`ControlApi`] implementation.
+pub struct ControlServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ControlServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7070`, or `:0` for an ephemeral
+    /// port) and start serving `api`. The resolved address is
+    /// [`addr`](Self::addr).
+    pub fn bind(addr: &str, api: Arc<dyn ControlApi>) -> Result<Self, BsfError> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            BsfError::config(format!("cannot bind control endpoint {addr}: {e}"))
+        })?;
+        let local = listener.local_addr().map_err(|e| {
+            BsfError::config(format!("control endpoint has no local address: {e}"))
+        })?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("bsf-control".into())
+            .spawn(move || serve(listener, api, stop_flag))
+            .map_err(|e| BsfError::config(format!("cannot spawn control thread: {e}")))?;
+        Ok(ControlServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolved ephemeral port included).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop serving and join the thread (also performed on drop).
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ControlServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn serve(listener: TcpListener, api: Arc<dyn ControlApi>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        // Best-effort, like the metrics exporter: a broken control
+        // client is its problem, never the fleet's.
+        let _ = handle_connection(stream, &*api);
+    }
+}
+
+/// `{"error": "..."}` — every non-200 body has this one shape.
+fn error_body(e: &BsfError) -> String {
+    Json::obj(vec![("error", Json::Str(e.to_string()))]).pretty()
+}
+
+fn handle_connection(mut stream: TcpStream, api: &dyn ControlApi) -> std::io::Result<()> {
+    let req = read_request(&mut stream)?;
+    let (status, content_type, body) = route(&req, api);
+    write_response(&mut stream, status, content_type, &body)
+}
+
+/// Dispatch one request to the [`ControlApi`].
+fn route(req: &HttpRequest, api: &dyn ControlApi) -> (&'static str, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/jobs") => ("200 OK", "application/json", api.jobs_json().pretty()),
+        ("GET", "/metrics") => ("200 OK", "application/json", api.metrics_json().pretty()),
+        ("GET", "/events") => ("200 OK", "application/jsonl", api.events_jsonl()),
+        ("POST", "/jobs") => {
+            let parsed = Json::parse(&req.body)
+                .map_err(|e| BsfError::usage(format!("submit body is not JSON: {e}")))
+                .and_then(|doc| api.submit_json(&doc));
+            match parsed {
+                Ok(doc) => ("200 OK", "application/json", doc.pretty()),
+                Err(e) => ("400 Bad Request", "application/json", error_body(&e)),
+            }
+        }
+        ("POST", "/shutdown") => {
+            ("200 OK", "application/json", api.shutdown_json().pretty())
+        }
+        ("POST", path) => match parse_cancel_path(path) {
+            Some(id) => match api.cancel_json(id) {
+                Ok(doc) => ("200 OK", "application/json", doc.pretty()),
+                Err(e) => ("400 Bad Request", "application/json", error_body(&e)),
+            },
+            None => (
+                "404 Not Found",
+                "text/plain",
+                "routes: GET /jobs, POST /jobs, POST /jobs/<id>/cancel, \
+                 POST /shutdown, GET /metrics, GET /events\n"
+                    .to_string(),
+            ),
+        },
+        _ => (
+            "404 Not Found",
+            "text/plain",
+            "routes: GET /jobs, POST /jobs, POST /jobs/<id>/cancel, \
+             POST /shutdown, GET /metrics, GET /events\n"
+                .to_string(),
+        ),
+    }
+}
+
+/// `/jobs/<id>/cancel` → `Some(id)`.
+fn parse_cancel_path(path: &str) -> Option<u64> {
+    let rest = path.strip_prefix("/jobs/")?;
+    let id = rest.strip_suffix("/cancel")?;
+    id.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::exporter::{http_get, http_post};
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    /// A scripted ControlApi double: no fleet needed to test routing.
+    struct FakeApi {
+        submitted: Mutex<Vec<String>>,
+        cancelled: Mutex<Vec<u64>>,
+        draining: AtomicBool,
+    }
+
+    impl ControlApi for FakeApi {
+        fn submit_json(&self, req: &Json) -> Result<Json, BsfError> {
+            let problem = req
+                .get("problem")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| BsfError::usage("submit: missing \"problem\""))?;
+            if problem != "jacobi" {
+                return Err(BsfError::config("this fleet serves problem \"jacobi\""));
+            }
+            self.submitted.lock().unwrap().push(problem.to_string());
+            Ok(Json::obj(vec![
+                ("id", Json::Num(1.0)),
+                ("status", Json::Str("queued".into())),
+            ]))
+        }
+
+        fn jobs_json(&self) -> Json {
+            Json::obj(vec![
+                ("schema", Json::Str("bsf-jobs/1".into())),
+                ("queue_depth", Json::Num(0.0)),
+                ("jobs", Json::Arr(Vec::new())),
+            ])
+        }
+
+        fn cancel_json(&self, id: u64) -> Result<Json, BsfError> {
+            if id == 404 {
+                return Err(BsfError::config(format!("no such job: {id}")));
+            }
+            self.cancelled.lock().unwrap().push(id);
+            Ok(Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("status", Json::Str("cancelled".into())),
+            ]))
+        }
+
+        fn shutdown_json(&self) -> Json {
+            self.draining.store(true, Ordering::SeqCst);
+            Json::obj(vec![("status", Json::Str("draining".into()))])
+        }
+
+        fn metrics_json(&self) -> Json {
+            Json::obj(vec![("schema", Json::Str("bsf-metrics/1".into()))])
+        }
+
+        fn events_jsonl(&self) -> String {
+            "{\"schema\":\"bsf-events/1\"}\n".to_string()
+        }
+    }
+
+    fn fake() -> Arc<FakeApi> {
+        Arc::new(FakeApi {
+            submitted: Mutex::new(Vec::new()),
+            cancelled: Mutex::new(Vec::new()),
+            draining: AtomicBool::new(false),
+        })
+    }
+
+    const T: Duration = Duration::from_secs(5);
+
+    #[test]
+    fn routes_reach_the_api_and_errors_are_400() {
+        let api = fake();
+        let server = ControlServer::bind("127.0.0.1:0", api.clone() as Arc<dyn ControlApi>).unwrap();
+        let addr = server.addr().to_string();
+
+        // POST /jobs round-trips through submit_json
+        let body = http_post(&addr, "/jobs", "{\"problem\": \"jacobi\"}", T).unwrap();
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("id").and_then(Json::as_u64), Some(1));
+        assert_eq!(api.submitted.lock().unwrap().len(), 1);
+
+        // a rejected submission surfaces the server's error text
+        let err = http_post(&addr, "/jobs", "{\"problem\": \"lpp\"}", T).unwrap_err();
+        assert!(err.to_string().contains("jacobi"), "{err}");
+        let err = http_post(&addr, "/jobs", "not json", T).unwrap_err();
+        assert!(err.to_string().contains("400"), "{err}");
+
+        // GET /jobs, /metrics, /events
+        let jobs = Json::parse(&http_get(&addr, "/jobs", T).unwrap()).unwrap();
+        assert_eq!(jobs.get("schema").and_then(Json::as_str), Some("bsf-jobs/1"));
+        let metrics = Json::parse(&http_get(&addr, "/metrics", T).unwrap()).unwrap();
+        assert_eq!(metrics.get("schema").and_then(Json::as_str), Some("bsf-metrics/1"));
+        assert!(http_get(&addr, "/events", T).unwrap().contains("bsf-events/1"));
+
+        // cancel: parsed id reaches the api; unknown ids are 400
+        let body = http_post(&addr, "/jobs/7/cancel", "", T).unwrap();
+        assert_eq!(Json::parse(&body).unwrap().get("id").and_then(Json::as_u64), Some(7));
+        assert_eq!(*api.cancelled.lock().unwrap(), vec![7]);
+        assert!(http_post(&addr, "/jobs/404/cancel", "", T).is_err());
+        assert!(http_post(&addr, "/jobs/x/cancel", "", T).is_err(), "non-numeric id is 404");
+
+        // shutdown flips the drain flag
+        let body = http_post(&addr, "/shutdown", "", T).unwrap();
+        assert!(body.contains("draining"));
+        assert!(api.draining.load(Ordering::SeqCst));
+
+        // unknown routes 404 on both methods
+        assert!(http_get(&addr, "/nope", T).is_err());
+        assert!(http_post(&addr, "/nope", "", T).is_err());
+
+        server.shutdown();
+        assert!(http_get(&addr, "/jobs", Duration::from_millis(500)).is_err());
+    }
+
+    #[test]
+    fn cancel_path_parsing() {
+        assert_eq!(parse_cancel_path("/jobs/12/cancel"), Some(12));
+        assert_eq!(parse_cancel_path("/jobs/cancel"), None);
+        assert_eq!(parse_cancel_path("/jobs/12"), None);
+        assert_eq!(parse_cancel_path("/jobs/-1/cancel"), None);
+        assert_eq!(parse_cancel_path("/shutdown"), None);
+    }
+}

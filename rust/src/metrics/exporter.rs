@@ -94,35 +94,11 @@ fn serve(listener: TcpListener, telemetry: Arc<RunTelemetry>, stop: Arc<AtomicBo
 }
 
 fn handle_connection(mut stream: TcpStream, telemetry: &RunTelemetry) -> std::io::Result<()> {
-    let _ = stream.set_read_timeout(Some(CLIENT_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(CLIENT_TIMEOUT));
-    // Read up to the end of the request head (we only need the request
-    // line; HTTP/1.0-style one-shot exchange).
-    let mut buf = [0u8; 2048];
-    let mut len = 0usize;
-    loop {
-        if len == buf.len() {
-            break; // oversized head: parse what we have
-        }
-        let n = stream.read(&mut buf[len..])?;
-        if n == 0 {
-            break;
-        }
-        len += n;
-        if buf[..len].windows(4).any(|w| w == b"\r\n\r\n") {
-            break;
-        }
-    }
-    let head = String::from_utf8_lossy(&buf[..len]);
-    let request_line = head.lines().next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
-
-    let (status, content_type, body) = if method != "GET" {
+    let req = read_request(&mut stream)?;
+    let (status, content_type, body) = if req.method != "GET" {
         ("405 Method Not Allowed", "text/plain", "only GET is served\n".to_string())
     } else {
-        match path {
+        match req.path.as_str() {
             "/metrics" => ("200 OK", "application/json", telemetry.metrics_json().pretty()),
             "/events" => ("200 OK", "application/jsonl", telemetry.events_jsonl()),
             _ => (
@@ -132,6 +108,77 @@ fn handle_connection(mut stream: TcpStream, telemetry: &RunTelemetry) -> std::io
             ),
         }
     };
+    write_response(&mut stream, status, content_type, &body)
+}
+
+/// One parsed HTTP request: the request line plus (for POSTs) its body.
+pub(crate) struct HttpRequest {
+    /// `GET` / `POST` / ...
+    pub(crate) method: String,
+    /// Request path (`/jobs`, `/metrics`, ...).
+    pub(crate) path: String,
+    /// Request body (empty unless `Content-Length` said otherwise).
+    pub(crate) body: String,
+}
+
+/// Read one HTTP/1.0-style request off `stream`: head until the blank
+/// line, then exactly `Content-Length` body bytes (capped at 64 KiB —
+/// control-plane payloads are tiny). Shared by the metrics exporter and
+/// the `bsf serve` control endpoint.
+pub(crate) fn read_request(stream: &mut TcpStream) -> std::io::Result<HttpRequest> {
+    let _ = stream.set_read_timeout(Some(CLIENT_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CLIENT_TIMEOUT));
+    let mut buf = Vec::with_capacity(2048);
+    let mut chunk = [0u8; 2048];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        if buf.len() >= 64 * 1024 {
+            break buf.len(); // oversized head: parse what we have
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break buf.len();
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let content_length = head
+        .lines()
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse::<usize>().ok())
+        .unwrap_or(0)
+        .min(64 * 1024);
+    let mut body_bytes = buf[head_end..].to_vec();
+    while body_bytes.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        body_bytes.extend_from_slice(&chunk[..n]);
+    }
+    body_bytes.truncate(content_length);
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body_bytes).into_owned(),
+    })
+}
+
+/// Write one HTTP/1.0 response and flush. Shared by the metrics
+/// exporter and the `bsf serve` control endpoint.
+pub(crate) fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
     let response = format!(
         "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -145,14 +192,38 @@ fn handle_connection(mut stream: TcpStream, telemetry: &RunTelemetry) -> std::io
 /// body (status errors become `Err`). This is `bsf top`'s poll primitive
 /// and the integration tests' client — std-only, HTTP/1.0.
 pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<String, BsfError> {
+    let request = format!("GET {path} HTTP/1.0\r\nHost: {addr}\r\n\r\n");
+    http_exchange(addr, path, &request, timeout)
+}
+
+/// One-shot `POST` of a JSON body — the client primitive behind
+/// `bsf submit` / `bsf jobs --cancel` / `bsf shutdown` talking to a
+/// `bsf serve` control endpoint. Std-only, HTTP/1.0; non-200 statuses
+/// become `Err` carrying the response body (the server's error text).
+pub fn http_post(addr: &str, path: &str, body: &str, timeout: Duration) -> Result<String, BsfError> {
+    let request = format!(
+        "POST {path} HTTP/1.0\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    http_exchange(addr, path, &request, timeout)
+}
+
+/// Send one raw HTTP request, read the whole response, return the body
+/// of a 200 (anything else is a typed transport error).
+fn http_exchange(
+    addr: &str,
+    path: &str,
+    request: &str,
+    timeout: Duration,
+) -> Result<String, BsfError> {
     let sock_addr: SocketAddr = addr
         .parse()
-        .map_err(|e| BsfError::config(format!("bad metrics address {addr:?}: {e}")))?;
+        .map_err(|e| BsfError::config(format!("bad endpoint address {addr:?}: {e}")))?;
     let mut stream = TcpStream::connect_timeout(&sock_addr, timeout)
         .map_err(|e| BsfError::transport(format!("connect {addr}: {e}")))?;
     let _ = stream.set_read_timeout(Some(timeout));
     let _ = stream.set_write_timeout(Some(timeout));
-    let request = format!("GET {path} HTTP/1.0\r\nHost: {addr}\r\n\r\n");
     stream
         .write_all(request.as_bytes())
         .map_err(|e| BsfError::transport(format!("send {addr}{path}: {e}")))?;

@@ -8,8 +8,11 @@
 //! The live-telemetry layer sits next to the timers: [`telemetry`] is
 //! the per-run aggregator every engine's `Driver::step` updates, and
 //! [`exporter`] serves it over plain HTTP (`GET /metrics`, `GET
-//! /events`) for `bsf top` and external scrapers.
+//! /events`) for `bsf top` and external scrapers. [`control`] reuses
+//! the same HTTP machinery for the `bsf serve` control plane (submit /
+//! list / cancel jobs, drain the fleet).
 
+pub mod control;
 pub mod exporter;
 pub mod telemetry;
 
@@ -28,10 +31,12 @@ pub enum Phase {
     Process,
 }
 
+/// The four phases in Algorithm-2 order.
 pub const ALL_PHASES: [Phase; 4] =
     [Phase::SendOrder, Phase::Gather, Phase::MasterReduce, Phase::Process];
 
 impl Phase {
+    /// Stable snake_case name (JSON key / report label).
     pub fn name(self) -> &'static str {
         match self {
             Phase::SendOrder => "send_order",
@@ -59,6 +64,7 @@ fn idx(p: Phase) -> usize {
 }
 
 impl PhaseTimers {
+    /// Zeroed timers.
     pub fn new() -> Self {
         Self::default()
     }
@@ -71,19 +77,23 @@ impl PhaseTimers {
         out
     }
 
+    /// Record one sample of `phase`.
     pub fn add(&mut self, phase: Phase, d: Duration) {
         self.totals[idx(phase)] += d;
         self.counts[idx(phase)] += 1;
     }
 
+    /// Accumulated time in `phase`.
     pub fn total(&self, phase: Phase) -> Duration {
         self.totals[idx(phase)]
     }
 
+    /// Number of samples recorded for `phase`.
     pub fn count(&self, phase: Phase) -> u64 {
         self.counts[idx(phase)]
     }
 
+    /// Accumulated time in `phase`, in seconds.
     pub fn total_secs(&self, phase: Phase) -> f64 {
         self.total(phase).as_secs_f64()
     }

@@ -71,6 +71,14 @@ pub enum RunEvent {
     Restart { generation: u64, iter: u64, rank: usize },
     /// The run finished.
     RunEnd { iter: u64, elapsed: f64 },
+    /// A job was admitted to a [`Scheduler`](crate::skeleton::scheduler::Scheduler)
+    /// queue (`requested` = contract workers; 0 means auto).
+    JobSubmitted { id: u64, priority: i64, requested: usize },
+    /// A queued job was dispatched onto its leased physical ranks.
+    JobStarted { id: u64, ranks: Vec<usize> },
+    /// A job reached a terminal state (`outcome` is the lifecycle name:
+    /// `done` / `cancelled` / `failed`).
+    JobEnded { id: u64, outcome: String, iterations: u64, elapsed: f64 },
 }
 
 /// Phase seconds as a stable-keyed JSON object
@@ -114,6 +122,9 @@ impl RunEvent {
             RunEvent::Rejoin { .. } => "rejoin",
             RunEvent::Restart { .. } => "restart",
             RunEvent::RunEnd { .. } => "run_end",
+            RunEvent::JobSubmitted { .. } => "job_submitted",
+            RunEvent::JobStarted { .. } => "job_started",
+            RunEvent::JobEnded { .. } => "job_ended",
         }
     }
 
@@ -155,6 +166,24 @@ impl RunEvent {
             }
             RunEvent::RunEnd { iter, elapsed } => {
                 fields.push(("iter", Json::Num(*iter as f64)));
+                fields.push(("elapsed_seconds", Json::Num(*elapsed)));
+            }
+            RunEvent::JobSubmitted { id, priority, requested } => {
+                fields.push(("id", Json::Num(*id as f64)));
+                fields.push(("priority", Json::Num(*priority as f64)));
+                fields.push(("requested", Json::Num(*requested as f64)));
+            }
+            RunEvent::JobStarted { id, ranks } => {
+                fields.push(("id", Json::Num(*id as f64)));
+                fields.push((
+                    "ranks",
+                    Json::Arr(ranks.iter().map(|&r| Json::Num(r as f64)).collect()),
+                ));
+            }
+            RunEvent::JobEnded { id, outcome, iterations, elapsed } => {
+                fields.push(("id", Json::Num(*id as f64)));
+                fields.push(("outcome", Json::Str(outcome.clone())));
+                fields.push(("iterations", Json::Num(*iterations as f64)));
                 fields.push(("elapsed_seconds", Json::Num(*elapsed)));
             }
         }
@@ -208,6 +237,31 @@ impl RunEvent {
                 iter: field_u64(v, "iter")?,
                 elapsed: field_f64(v, "elapsed_seconds")?,
             }),
+            "job_submitted" => Ok(RunEvent::JobSubmitted {
+                id: field_u64(v, "id")?,
+                priority: field_f64(v, "priority")? as i64,
+                requested: field_u64(v, "requested")? as usize,
+            }),
+            "job_started" => Ok(RunEvent::JobStarted {
+                id: field_u64(v, "id")?,
+                ranks: v
+                    .get("ranks")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing field \"ranks\"")?
+                    .iter()
+                    .map(|r| r.as_u64().map(|n| n as usize).ok_or("non-integer rank"))
+                    .collect::<Result<Vec<_>, _>>()?,
+            }),
+            "job_ended" => Ok(RunEvent::JobEnded {
+                id: field_u64(v, "id")?,
+                outcome: v
+                    .get("outcome")
+                    .and_then(Json::as_str)
+                    .ok_or("missing field \"outcome\"")?
+                    .to_string(),
+                iterations: field_u64(v, "iterations")?,
+                elapsed: field_f64(v, "elapsed_seconds")?,
+            }),
             other => Err(format!("unknown event type {other:?}")),
         }
     }
@@ -253,6 +307,10 @@ struct Inner {
     ring: Vec<RunEvent>,
     head: usize,
     events_total: u64,
+    /// Scheduler-published queue depth + `bsf-jobs/1` rows; `None`
+    /// until a [`Scheduler`](crate::skeleton::scheduler::Scheduler)
+    /// attaches this aggregator (solo runs never grow the document).
+    scheduler: Option<(usize, Vec<Json>)>,
 }
 
 /// The live telemetry aggregator — see the module docs.
@@ -271,6 +329,7 @@ impl Default for RunTelemetry {
 }
 
 impl RunTelemetry {
+    /// A fresh sink with default ring-buffer capacity and no stderr echo.
     pub fn new() -> Self {
         RunTelemetry {
             inner: Mutex::new(Inner {
@@ -292,6 +351,7 @@ impl RunTelemetry {
                 ring: Vec::with_capacity(EVENT_RING),
                 head: 0,
                 events_total: 0,
+                scheduler: None,
             }),
             events_stderr_every: 0,
         }
@@ -401,6 +461,7 @@ impl RunTelemetry {
         }
     }
 
+    /// Record a worker loss event at the current iteration.
     pub fn record_loss(&self, rank: usize) {
         let Some(mut inner) = self.lock() else { return };
         inner.losses += 1;
@@ -411,6 +472,7 @@ impl RunTelemetry {
         Self::push_event(&mut inner, event);
     }
 
+    /// Record a worker rejoin event at the current iteration.
     pub fn record_rejoin(&self, rank: usize) {
         let Some(mut inner) = self.lock() else { return };
         inner.rejoins += 1;
@@ -446,6 +508,50 @@ impl RunTelemetry {
             eprintln!("{}", event.to_json().compact());
         }
         Self::push_event(&mut inner, event);
+    }
+
+    /// A job was admitted to the scheduler queue.
+    pub fn record_job_submitted(&self, id: u64, priority: i64, requested: usize) {
+        let Some(mut inner) = self.lock() else { return };
+        let event = RunEvent::JobSubmitted { id, priority, requested };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// A queued job was dispatched onto its leased ranks.
+    pub fn record_job_started(&self, id: u64, ranks: &[usize]) {
+        let Some(mut inner) = self.lock() else { return };
+        let event = RunEvent::JobStarted { id, ranks: ranks.to_vec() };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// A job reached a terminal state.
+    pub fn record_job_ended(&self, id: u64, outcome: &str, iterations: usize, elapsed: f64) {
+        let Some(mut inner) = self.lock() else { return };
+        let event = RunEvent::JobEnded {
+            id,
+            outcome: outcome.to_string(),
+            iterations: iterations as u64,
+            elapsed,
+        };
+        if self.events_stderr_every > 0 {
+            eprintln!("{}", event.to_json().compact());
+        }
+        Self::push_event(&mut inner, event);
+    }
+
+    /// Publish the scheduler's live queue depth and per-job rows; they
+    /// appear as additive `queue_depth` / `jobs` keys in the
+    /// `bsf-metrics/1` document (absent on solo runs, so the pre-serve
+    /// document shape is unchanged).
+    pub fn set_scheduler_stats(&self, queue_depth: usize, jobs: Vec<Json>) {
+        let Some(mut inner) = self.lock() else { return };
+        inner.scheduler = Some((queue_depth, jobs));
     }
 
     /// Iterations recorded so far (monotone over a run).
@@ -537,7 +643,7 @@ impl RunTelemetry {
             })
             .collect();
         let dropped = inner.events_total.saturating_sub(inner.ring.len() as u64);
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str(METRICS_SCHEMA.into())),
             ("engine", Json::Str(inner.engine.into())),
             ("workers", Json::Num(inner.workers as f64)),
@@ -561,7 +667,12 @@ impl RunTelemetry {
             ("ended", Json::Bool(inner.ended)),
             ("events_total", Json::Num(inner.events_total as f64)),
             ("events_dropped", Json::Num(dropped as f64)),
-        ])
+        ];
+        if let Some((queue_depth, jobs)) = &inner.scheduler {
+            fields.push(("queue_depth", Json::Num(*queue_depth as f64)));
+            fields.push(("jobs", Json::Arr(jobs.clone())));
+        }
+        Json::obj(fields)
     }
 }
 

@@ -69,27 +69,37 @@ impl Codec for ApexReduce {
 
 /// Jobs, named.
 pub const JOB_FEASIBILITY: usize = 0;
+/// Job 1: pursuit — step along the objective direction.
 pub const JOB_PURSUIT: usize = 1;
+/// Job 2: verify — check feasibility of the moved point.
 pub const JOB_VERIFY: usize = 2;
 
+/// The Apex-style multi-job LPP workflow (feasibility → pursuit →
+/// verify, cycled by the job dispatcher).
 pub struct ApexProblem {
+    /// Constraint matrix (one half-space per row).
     pub a: Mat,
+    /// Right-hand sides.
     pub b: Vec<f64>,
     /// Unit objective direction.
     pub c_dir: Vec<f64>,
     w: Vec<f64>,
+    /// Projection relaxation factor λ ∈ (0, 2).
     pub relax: f64,
+    /// Violation tolerance for feasibility checks.
     pub tol: f64,
     /// Stop when a pursuit step is shorter than this.
     pub step_tol: f64,
     /// Master-side FSM state: pursuit steps taken (the dispatcher's
     /// extra state beyond the job number).
     pursuits: Mutex<usize>,
+    /// Cap on pursuit steps before the dispatcher exits.
     pub max_pursuits: usize,
     x0: Vec<f64>,
 }
 
 impl ApexProblem {
+    /// Workflow over `a x <= b`, objective direction `c`, start `x0`.
     pub fn new(a: Mat, b: Vec<f64>, c: Vec<f64>, x0: Vec<f64>) -> Self {
         assert_eq!(a.rows, b.len());
         assert_eq!(a.cols, c.len());
@@ -137,10 +147,12 @@ impl ApexProblem {
         Self::new(a, b, c, x0)
     }
 
+    /// Objective value `c_dir · x`.
     pub fn objective(&self, x: &[f64]) -> f64 {
         dot(&self.c_dir, x)
     }
 
+    /// Number of constraints `x` violates beyond `tol`.
     pub fn violations(&self, x: &[f64]) -> usize {
         (0..self.a.rows)
             .filter(|&i| dot(self.a.row(i), x) - self.b[i] > self.tol)

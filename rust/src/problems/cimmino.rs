@@ -24,10 +24,12 @@ pub struct CimminoProblem {
     w: Vec<f64>,
     /// Relaxation λ (0 < λ < 2; 1.0 = classic Cimmino with averaging).
     pub relax: f64,
+    /// Stop threshold on ||x' - x||².
     pub eps: f64,
 }
 
 impl CimminoProblem {
+    /// Cimmino iteration over `A x = b` with relaxation `relax`.
     pub fn new(a: Mat, b: Vec<f64>, relax: f64, eps: f64) -> Self {
         assert_eq!(a.rows, b.len());
         let w = (0..a.rows)
@@ -49,6 +51,7 @@ impl CimminoProblem {
         (Self::new(a, b, 1.0, eps), x_star)
     }
 
+    /// `(m, n)` of the system.
     pub fn dims(&self) -> (usize, usize) {
         (self.a.rows, self.a.cols)
     }

@@ -24,6 +24,7 @@ use crate::util::rng::SplitMix64;
 /// N-body instance. Positions travel as the order parameter (flat
 /// `[x0,y0,z0, x1,...]`); masses are static problem data.
 pub struct GravityProblem {
+    /// Body masses (static problem data).
     pub masses: Vec<f64>,
     init_positions: Vec<f64>,
     /// Master-side velocities (kick-drift state).
@@ -41,6 +42,8 @@ pub struct GravityProblem {
 }
 
 impl GravityProblem {
+    /// N-body instance from flat `[x0,y0,z0, x1,...]` position and
+    /// velocity arrays; leapfrog step `dt`, run for `steps` steps.
     pub fn new(
         masses: Vec<f64>,
         positions: Vec<f64>,
@@ -73,6 +76,7 @@ impl GravityProblem {
         Self::new(masses, positions, velocities, dt, steps)
     }
 
+    /// Number of bodies.
     pub fn n_bodies(&self) -> usize {
         self.masses.len()
     }

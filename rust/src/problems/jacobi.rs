@@ -47,6 +47,7 @@ impl JacobiProblem {
         (Self::from_system(&a, &b, eps), x_star)
     }
 
+    /// System dimension.
     pub fn n(&self) -> usize {
         self.d.len()
     }

@@ -28,20 +28,25 @@ pub struct JacobiMapProblem {
     /// C in row-major (rows are the worker's unit of work here).
     c: Mat,
     d: Vec<f64>,
+    /// Stop threshold on ||x' - x||².
     pub eps: f64,
 }
 
 impl JacobiMapProblem {
+    /// Build the iteration data (C, d) from `A x = b`.
     pub fn from_system(a: &Mat, b: &[f64], eps: f64) -> Self {
         let (c, d) = jacobi_cd(a, b);
         Self { c, d, eps }
     }
 
+    /// Random strictly-diagonally-dominant instance with known solution.
+    /// Returns (problem, x_star).
     pub fn random(n: usize, eps: f64, seed: u64) -> (Self, Vec<f64>) {
         let (a, b, x_star) = gen_diag_dominant(n, seed);
         (Self::from_system(&a, &b, eps), x_star)
     }
 
+    /// System dimension.
     pub fn n(&self) -> usize {
         self.d.len()
     }

@@ -12,8 +12,12 @@
 use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
 use crate::util::mat::{dot, gen_feasible_halfspaces, Mat};
 
+/// LPP feasibility: find a point satisfying `a_i · x <= b_i` for all
+/// rows by relaxed projections (the paper's LPP demo).
 pub struct LppProblem {
+    /// Constraint matrix (one half-space per row).
     pub a: Mat,
+    /// Right-hand sides.
     pub b: Vec<f64>,
     /// 1/||a_i||² per constraint.
     w: Vec<f64>,
@@ -26,6 +30,7 @@ pub struct LppProblem {
 }
 
 impl LppProblem {
+    /// Feasibility problem over `a x <= b` starting at `x0`.
     pub fn new(a: Mat, b: Vec<f64>, x0: Vec<f64>, relax: f64, tol: f64) -> Self {
         assert_eq!(a.rows, b.len());
         assert_eq!(a.cols, x0.len());

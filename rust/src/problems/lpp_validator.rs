@@ -29,8 +29,11 @@ pub enum Verdict {
 /// Per-constraint report: (worst violation, #violated, #active).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ViolationReport {
+    /// Largest violation `a_i·x - b_i` seen (≤ 0 when feasible).
     pub worst: f64,
+    /// Constraints violated beyond tolerance.
     pub violated: u64,
+    /// Constraints within tolerance of equality.
     pub active: u64,
 }
 
@@ -51,7 +54,9 @@ impl Codec for ViolationReport {
 
 /// One-shot validator problem.
 pub struct LppValidator {
+    /// Constraint matrix under validation.
     pub a: Mat,
+    /// Right-hand sides.
     pub b: Vec<f64>,
     /// The candidate solution being validated.
     pub x_hat: Vec<f64>,
@@ -60,6 +65,7 @@ pub struct LppValidator {
 }
 
 impl LppValidator {
+    /// Validate candidate `x_hat` against `a x <= b` at tolerance `tol`.
     pub fn new(a: Mat, b: Vec<f64>, x_hat: Vec<f64>, tol: f64) -> Self {
         assert_eq!(a.rows, b.len());
         assert_eq!(a.cols, x_hat.len());

@@ -12,6 +12,8 @@
 use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
 use crate::util::rng::SplitMix64;
 
+/// Monte-Carlo π estimation: each map element is a seed block drawing
+/// `samples_per_elem` points per iteration; Reduce sums the hit counts.
 pub struct MonteCarloProblem {
     /// Number of seed blocks (the map-list length).
     pub blocks: usize,
@@ -26,6 +28,7 @@ pub struct MonteCarloProblem {
 }
 
 impl MonteCarloProblem {
+    /// Estimator with `blocks` seed blocks, stopping at standard error `tol`.
     pub fn new(blocks: usize, samples_per_elem: usize, tol: f64) -> Self {
         Self { blocks, samples_per_elem, tol, max_rounds: 10_000, seed: 0x5EED }
     }

@@ -101,6 +101,7 @@ pub struct XlaMapBackend {
 }
 
 impl XlaMapBackend {
+    /// Backend over an [`XlaHandle`], with an empty chunk cache.
     pub fn new(handle: XlaHandle) -> Self {
         Self {
             handle,

@@ -51,6 +51,7 @@ pub struct ArtifactMeta {
 }
 
 impl ArtifactMeta {
+    /// Total output element count (product of `out_dims`).
     pub fn out_len(&self) -> usize {
         self.out_dims.iter().product()
     }
@@ -141,10 +142,12 @@ impl XlaRuntime {
         pjrt::available()
     }
 
+    /// Look an artifact up by exact name.
     pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
         self.manifest.get(name)
     }
 
+    /// All artifact names, sorted.
     pub fn names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
         v.sort();

@@ -62,10 +62,12 @@ impl Literal {
         Ok(self)
     }
 
+    /// Flat element storage.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Shape.
     pub fn dims(&self) -> &[i64] {
         &self.dims
     }

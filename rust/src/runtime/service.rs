@@ -135,6 +135,7 @@ impl XlaService {
         Self::start(default_artifact_dir())
     }
 
+    /// A cloneable, `Send` handle for submitting calls to the service.
     pub fn handle(&self) -> XlaHandle {
         XlaHandle { tx: self.tx.clone() }
     }

@@ -95,6 +95,7 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
+    /// Empty plan: no kills.
     pub fn new() -> Self {
         Self::default()
     }
@@ -143,7 +144,9 @@ impl FaultPlan {
 /// Simulated-run configuration.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Interconnect latency/bandwidth profile.
     pub profile: ClusterProfile,
+    /// How worker compute time is modeled.
     pub compute: ComputeTime,
     /// Intra-worker fork/join overhead, seconds charged per worker per
     /// iteration when the hybrid tier is active (T > 1) — the term the
@@ -155,6 +158,7 @@ pub struct SimConfig {
 }
 
 impl SimConfig {
+    /// Defaults for `profile`: measured compute, no fork/join cost, no faults.
     pub fn new(profile: ClusterProfile) -> Self {
         Self {
             profile,
@@ -164,6 +168,7 @@ impl SimConfig {
         }
     }
 
+    /// Model compute as `t_elem` virtual seconds per list element.
     pub fn per_element(mut self, t_elem: f64) -> Self {
         self.compute = ComputeTime::PerElement(t_elem);
         self
@@ -196,6 +201,7 @@ pub struct IterBreakdown {
 }
 
 impl IterBreakdown {
+    /// Sum of the per-iteration phases.
     pub fn total(&self) -> f64 {
         self.send + self.compute_and_gather + self.master_reduce + self.process_and_exit
     }
@@ -205,7 +211,9 @@ impl IterBreakdown {
 /// into the unified `RunReport`).
 #[derive(Debug, Clone)]
 pub struct SimReport<Param> {
+    /// Final approximation.
     pub param: Param,
+    /// Iterations to convergence.
     pub iterations: usize,
     /// Total virtual seconds on the simulated cluster.
     pub virtual_seconds: f64,
@@ -215,6 +223,7 @@ pub struct SimReport<Param> {
     pub breakdown: IterBreakdown,
     /// Total messages / bytes the simulated transport carried.
     pub messages: u64,
+    /// Total payload bytes the simulated transport carried.
     pub bytes: u64,
     /// Per-tag breakdown of the simulated traffic (orders, folds, exit
     /// flags) — same shape the real transports report.

@@ -16,10 +16,11 @@
 //! in an outer loop around the ordinary Algorithm-2 worker loop:
 //!
 //! ```text
-//! master → worker:  NEWRUN            (reset: begin one more run)
+//! master → worker:  NEWRUN(job id)    (reset: begin one more run)
+//! worker → master:  JOB_ACK(job id)   (echo: this lease, not a stale one)
 //! ... the ordinary order/fold/exit iteration protocol ...
 //! worker → master:  WORKER_REPORT     (end-of-run summary, with pid)
-//! (worker returns to waiting for NEWRUN | SHUTDOWN)
+//! (worker returns to waiting for NEWRUN | SHUTDOWN | FLEET_PING)
 //! master → worker:  SHUTDOWN          (cluster teardown: exit process)
 //! ```
 //!
@@ -29,21 +30,26 @@
 //! spawns. [`WorkerReport::pid`] proves the reuse: consecutive runs on
 //! one cluster report the same worker pids.
 //!
-//! One run at a time: launching while a run is active is a typed config
-//! error ("cluster is busy"). What a mid-run worker loss does depends on
-//! the run's [`FaultPolicy`](crate::skeleton::fault::FaultPolicy): under
-//! `Redistribute` the run completes on the survivors and the pool is
-//! parked **shrunk** — subsequent runs launch with
+//! The workers live in a multi-tenant
+//! [`WorkerPool`](crate::skeleton::scheduler::WorkerPool); a
+//! `Cluster::engine()` run takes an *exclusive* lease over the whole
+//! free fleet, so launching while another run holds workers is the
+//! typed [`BsfError::ClusterBusy`] (a
+//! [`Scheduler`](crate::skeleton::scheduler::Scheduler) queues instead
+//! of racing). What a mid-run worker loss does depends on the run's
+//! [`FaultPolicy`](crate::skeleton::fault::FaultPolicy): under
+//! `Redistribute` the run completes on the survivors and the lease is
+//! released **shrunk** — subsequent runs launch with
 //! `cfg.workers == alive_workers()` on the surviving processes; under
 //! `Abort`/`RestartFromCheckpoint` (a persistent pool cannot respawn its
-//! lost member) the loss poisons the cluster: its core is torn down,
+//! lost member) the loss poisons the cluster: its lease is retired,
 //! children killed, and subsequent launches fail typed rather than
 //! running on a desynchronized pool. Cancellation never poisons: the
 //! workers are released with the exit flag, their reports drained, and
 //! the cluster is ready for the next run.
 
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::BsfError;
@@ -54,16 +60,16 @@ use crate::skeleton::driver::validate_start;
 use crate::skeleton::master::{MasterLoop, MasterOutcome};
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::process::{
-    problem_sig, spawn_and_accept, ChildSet, DEFAULT_CONNECT_TIMEOUT, REAP_TIMEOUT,
-    TAG_WORKER_REPORT,
+    problem_sig, spawn_and_accept, DEFAULT_CONNECT_TIMEOUT, TAG_WORKER_REPORT,
 };
+use crate::skeleton::scheduler::{collect_worker_reports, Lease, WorkerPool};
 use crate::skeleton::report::{Clock, PhaseBreakdown, RunReport};
 use crate::skeleton::runner::validate_run;
 use crate::skeleton::worker::{
     intra_worker_pool, run_worker_guarded_with_pool, WorkerReport,
 };
-use crate::transport::tcp::{connect_worker, ProblemSig, TcpEndpoint};
-use crate::transport::{Communicator, Tag, VolumeByTag};
+use crate::transport::tcp::{connect_worker, TcpEndpoint};
+use crate::transport::{Communicator, VolumeByTag};
 use crate::util::codec::Codec;
 
 /// One cluster run's unified report (shared by the normal and the
@@ -92,7 +98,9 @@ fn cluster_report<Param>(
 
 // Defined in the central `transport::tags` registry; re-exported here
 // so historical import paths keep working.
-pub use crate::transport::tags::{TAG_NEW_RUN, TAG_SHUTDOWN};
+pub use crate::transport::tags::{
+    TAG_FLEET_PING, TAG_FLEET_PONG, TAG_JOB_ACK, TAG_NEW_RUN, TAG_SHUTDOWN,
+};
 
 /// How long the master waits for all K workers to connect + handshake.
 const DEFAULT_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
@@ -140,15 +148,11 @@ impl ClusterSpec {
             self.handshake_timeout,
         )?;
         Ok(Cluster {
-            core: Arc::new(Mutex::new(Some(ClusterCore {
-                ep,
+            pool: Arc::new(WorkerPool::new(
+                Arc::new(ep),
                 children,
-                sig: problem_sig(problem),
-                shut: false,
-                spawn_k: self.workers,
-                alive: (0..self.workers).collect(),
-                lost: Vec::new(),
-            }))),
+                Some(problem_sig(problem)),
+            )),
             workers: self.workers,
         })
     }
@@ -160,7 +164,7 @@ impl ClusterSpec {
 /// with [`shutdown`](Cluster::shutdown) (dropping the last handle also
 /// shuts down, best-effort).
 pub struct Cluster {
-    core: Arc<Mutex<Option<ClusterCore>>>,
+    pool: Arc<WorkerPool>,
     workers: usize,
 }
 
@@ -209,98 +213,48 @@ impl Cluster {
     /// (the pool shrinks instead of being poisoned). `None` while a run
     /// is active or after teardown.
     pub fn alive_workers(&self) -> Option<usize> {
-        let slot = self.core.lock().ok()?;
-        slot.as_ref().map(|core| core.alive.len())
+        if self.pool.is_shut() || self.pool.active_jobs() > 0 {
+            return None;
+        }
+        match self.pool.free_workers() {
+            0 => None, // every worker lost: the fleet is gone
+            n => Some(n),
+        }
+    }
+
+    /// The multi-tenant [`WorkerPool`] behind this cluster — what a
+    /// [`Scheduler`](crate::skeleton::scheduler::Scheduler) leases
+    /// worker subsets from (`bsf serve`). [`engine`](Self::engine)
+    /// sessions and a scheduler share the same pool safely: an
+    /// exclusive engine launch fails typed while scheduler jobs hold
+    /// leases, and vice versa.
+    pub fn pool(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.pool)
     }
 
     /// An engine handle for one session over this cluster. Clonable and
-    /// reusable: each `run()`/`iterate()` borrows the worker pool for
-    /// the duration of the run (one run at a time).
+    /// reusable: each `run()`/`iterate()` leases the *entire* worker
+    /// pool for the duration of the run (one exclusive run at a time).
     pub fn engine(&self) -> ClusterEngine {
-        ClusterEngine { core: Arc::clone(&self.core) }
+        ClusterEngine { pool: Arc::clone(&self.pool) }
     }
 
     /// Graceful teardown: SHUTDOWN every worker, then reap the spawned
     /// children (rendezvous-mode workers exit on their own). A typed
-    /// error when a run is still active or a worker did not exit
-    /// cleanly.
+    /// error when a run is still active ([`BsfError::ClusterBusy`]) or
+    /// a worker did not exit cleanly.
     pub fn shutdown(self) -> Result<(), BsfError> {
-        let mut slot = self
-            .core
-            .lock()
-            .map_err(|_| BsfError::transport("cluster handle poisoned"))?;
-        let mut core = slot.take().ok_or_else(|| {
-            BsfError::config(
-                "cluster cannot shut down: a run is still active, or a lost \
-                 worker already tore it down",
-            )
-        })?;
-        core.send_shutdown();
-        let lost = core.lost.clone();
-        core.children.reap(REAP_TIMEOUT, &lost)
-    }
-}
-
-/// The shared worker-pool state: the master's TCP endpoint plus the
-/// spawned children. Lives in the cluster's slot while idle; moves into
-/// the active [`ClusterDriver`] during a run.
-struct ClusterCore {
-    ep: TcpEndpoint,
-    children: ChildSet,
-    /// The problem fingerprint the workers handshook with — every run
-    /// on this pool must present the same one (the per-run counterpart
-    /// of the process engine's per-spawn HELLO validation).
-    sig: ProblemSig,
-    /// True once SHUTDOWN was broadcast (drop must not re-send).
-    shut: bool,
-    /// Workers originally spawned (physical ranks are `0..spawn_k`).
-    spawn_k: usize,
-    /// Physical ranks still alive, ascending. A redistributed run that
-    /// lost workers parks a *shrunk* pool here instead of poisoning the
-    /// cluster; the next launch runs `alive.len()` logical workers on
-    /// these ranks.
-    alive: Vec<usize>,
-    /// Physical ranks lost across this cluster's lifetime (their child
-    /// processes are expected to have died; reap tolerates them).
-    lost: Vec<usize>,
-}
-
-impl ClusterCore {
-    fn send_shutdown(&mut self) {
-        if self.shut {
-            return;
-        }
-        let workers = self.ep.size() - 1;
-        for w in 0..workers {
-            // Exit(true) first: a worker caught *inside* a run (e.g. a
-            // partially broadcast NEWRUN) unwinds its Algorithm-2 loop
-            // back to idle, where the SHUTDOWN is then honored. An idle
-            // worker simply buffers the unmatched exit flag — rendezvous
-            // workers have no parent to kill them, so this message pair
-            // is the only thing standing between them and a hang.
-            let _ = self.ep.send(w, Tag::Exit, true.to_bytes());
-            let _ = self.ep.send(w, TAG_SHUTDOWN, Vec::new());
-        }
-        self.shut = true;
-    }
-}
-
-impl Drop for ClusterCore {
-    /// Best-effort teardown for abandoned cores: ask the workers to
-    /// exit (rendezvous-mode workers have no parent to kill them), then
-    /// `ChildSet::drop` kills + reaps any spawned children.
-    fn drop(&mut self) {
-        self.send_shutdown();
+        self.pool.shutdown()
     }
 }
 
 /// The [`Engine`](crate::skeleton::engine::Engine) over a persistent
-/// [`Cluster`]: per launch it sends NEWRUN to every idle worker and
-/// drives the same [`MasterLoop`] the process engine uses — no spawn,
-/// no connect, no handshake.
+/// [`Cluster`]: per launch it leases the whole free fleet, sends NEWRUN
+/// to every idle worker and drives the same [`MasterLoop`] the process
+/// engine uses — no spawn, no connect, no handshake.
 #[derive(Clone)]
 pub struct ClusterEngine {
-    core: Arc<Mutex<Option<ClusterCore>>>,
+    pool: Arc<WorkerPool>,
 }
 
 impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
@@ -322,78 +276,65 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
         // not have already fired parameters_output or started a clock.
         validate_run(&*problem, cfg)?;
         validate_start(&*problem, start.as_ref())?;
-        let core = {
-            let mut slot = self
-                .core
-                .lock()
-                .map_err(|_| BsfError::transport("cluster handle poisoned"))?;
-            slot.take().ok_or_else(|| {
-                BsfError::config(
-                    "cluster is busy (a run is active) or was torn down \
-                     (shutdown, or an unrecovered worker loss mid-run)",
-                )
-            })?
-        };
-        // The usable pool is the *surviving* workers: a cluster shrunk
-        // by a redistributed run keeps serving at its reduced K.
-        if cfg.workers != core.alive.len() {
-            let err = BsfError::config(format!(
-                "cfg.workers is {} but this cluster holds {} usable persistent \
-                 workers ({} spawned, {} lost)",
-                cfg.workers,
-                core.alive.len(),
-                core.spawn_k,
-                core.lost.len()
-            ));
-            if let Ok(mut slot) = self.core.lock() {
-                *slot = Some(core);
-            }
-            return Err(err);
-        }
+        // An engine session is one exclusive tenant: lease the whole
+        // free fleet or fail typed (`ClusterBusy` while other jobs hold
+        // leases; a config error on a torn-down pool or a worker-count
+        // mismatch — a cluster shrunk by a redistributed run keeps
+        // serving at its reduced K).
+        let job_id = self.pool.next_job_id();
+        let lease = self.pool.lease_exclusive(job_id, cfg.workers)?;
         // Per-run signature guard — the check the process engine gets
         // from its per-spawn handshake: a session over a *different*
-        // problem instance must fail typed, not corrupt the run. The
-        // core is untouched so far, so it goes straight back.
+        // problem instance must fail typed, not corrupt the run. No
+        // NEWRUN went out yet, so the lease goes straight back.
         let sig = problem_sig(&*problem);
-        if sig != core.sig {
-            let err = BsfError::config(format!(
-                "cluster workers hold a problem with list_size={} job_count={}, \
-                 but this session's problem has list_size={} job_count={}; every \
-                 run on a cluster must rebuild the same problem instance",
-                core.sig.list_size, core.sig.job_count, sig.list_size, sig.job_count
-            ));
-            if let Ok(mut slot) = self.core.lock() {
-                *slot = Some(core);
+        if let Some(pool_sig) = self.pool.sig() {
+            if sig != pool_sig {
+                self.pool.release(job_id, &lease.ranks, &[]);
+                return Err(BsfError::config(format!(
+                    "cluster workers hold a problem with list_size={} job_count={}, \
+                     but this session's problem has list_size={} job_count={}; every \
+                     run on a cluster must rebuild the same problem instance",
+                    pool_sig.list_size, pool_sig.job_count, sig.list_size, sig.job_count
+                )));
             }
-            return Err(err);
         }
 
         // Per-run traffic baseline: the endpoint's counters span the
         // cluster's whole lifetime.
-        let base_volume = core.ep.stats().volume();
+        let base_volume = self.pool.comm().stats().volume();
 
-        // RESET/NEWRUN: wake every idle surviving worker for one more
-        // run.
-        for &w in &core.alive {
-            if let Err(e) = core.ep.send(w, TAG_NEW_RUN, Vec::new()) {
-                // `core` is dropped here: children killed, cluster slot
-                // stays empty (poisoned) — a dead worker must not leave
-                // a half-woken pool behind.
-                return Err(e);
-            }
+        // RESET/NEWRUN + job-id echo: wake every idle surviving worker
+        // for one more run. A member that cannot answer retires the
+        // lease — children killed, ranks marked lost — so a dead worker
+        // never leaves a half-woken pool behind.
+        if let Err(e) = self.pool.begin_run(&lease) {
+            self.pool.retire(job_id);
+            return Err(e);
         }
         // Both validations already passed, so this cannot fail — and
         // the run clock (t0) starts only now, with the workers woken.
         // A shrunk pool forces an up-front REASSIGN: each persistent
         // worker recomputed its split from its spawn-time K at NEWRUN,
         // which no longer matches the shrunk run shape.
-        let shrunk = core.alive.len() != core.spawn_k;
-        let state =
-            MasterLoop::new_with_ranks(&*problem, cfg, start, core.alive.clone(), shrunk)?;
+        let shrunk = lease.ranks.len() != self.pool.spawn_k();
+        let state = match MasterLoop::new_with_ranks(
+            &*problem,
+            cfg,
+            start,
+            lease.ranks.clone(),
+            shrunk,
+        ) {
+            Ok(state) => state,
+            Err(e) => {
+                self.pool.retire(job_id);
+                return Err(e);
+            }
+        };
         Ok(Box::new(ClusterDriver {
             problem,
-            core: Some(core),
-            home: Arc::clone(&self.core),
+            pool: Arc::clone(&self.pool),
+            lease: Some(lease),
             state,
             base_volume,
             parked: None,
@@ -401,20 +342,20 @@ impl<P: BsfProblem> crate::skeleton::engine::Engine<P> for ClusterEngine {
     }
 }
 
-/// The active run over a cluster: owns the [`ClusterCore`] for the
-/// run's duration and parks it back into the cluster slot on a clean
-/// finish, a clean cancellation, or a drop with live workers. Worker
-/// loss / protocol errors tear the core down instead — a
-/// possibly-desynchronized pool is never reused.
+/// The active run over a cluster: holds the exclusive lease for the
+/// run's duration and releases it back to the pool on a clean finish,
+/// a clean cancellation, or a drop with live workers. Worker loss /
+/// protocol errors retire the lease instead — a possibly-desynchronized
+/// pool is never reused.
 struct ClusterDriver<P: BsfProblem> {
     problem: Arc<P>,
-    core: Option<ClusterCore>,
-    home: Arc<Mutex<Option<ClusterCore>>>,
+    pool: Arc<WorkerPool>,
+    lease: Option<Lease>,
     state: MasterLoop<P>,
     base_volume: VolumeByTag,
     /// Worker reports + per-run traffic captured when a cancelled run
-    /// parked the pool early — `finish()` can still produce the partial
-    /// report afterwards, like every other engine.
+    /// released the lease early — `finish()` can still produce the
+    /// partial report afterwards, like every other engine.
     parked: Option<(Vec<WorkerReport>, VolumeByTag)>,
 }
 
@@ -423,32 +364,29 @@ impl<P: BsfProblem> ClusterDriver<P> {
     /// were just released, so the reports are in flight before they
     /// idle again). Lost ranks have none to ship.
     fn collect_reports(&mut self) -> Result<Vec<WorkerReport>, BsfError> {
-        let core = self.core.as_ref().ok_or_else(|| {
-            BsfError::config("cluster run already parked or torn down; no reports to drain")
-        })?;
-        let alive: Vec<usize> = self.state.alive_ranks().to_vec();
-        let mut workers = Vec::with_capacity(alive.len());
-        for &w in &alive {
-            let m = core.ep.recv(w, TAG_WORKER_REPORT)?;
-            workers.push(
-                WorkerReport::from_wire(&m.payload)
-                    .map_err(|e| BsfError::transport(format!("worker {w}: {e}")))?,
-            );
+        if self.lease.is_none() {
+            return Err(BsfError::config(
+                "cluster run already parked or torn down; no reports to drain",
+            ));
         }
-        workers.sort_by_key(|w| w.rank);
-        Ok(workers)
+        collect_worker_reports(self.pool.comm(), self.state.alive_ranks())
     }
 
-    /// Return the (re-idled) worker pool to the cluster slot — shrunk
-    /// to the run's survivors when the run absorbed losses, so the
-    /// cluster stays usable at its reduced K instead of being poisoned.
+    /// Release the lease back to the pool — shrunk to the run's
+    /// survivors when the run absorbed losses, so the cluster stays
+    /// usable at its reduced K instead of being poisoned.
     fn park(&mut self) {
-        if let Some(mut core) = self.core.take() {
-            core.alive = self.state.alive_ranks().to_vec();
-            core.lost.extend(self.state.losses().iter().copied());
-            if let Ok(mut slot) = self.home.lock() {
-                *slot = Some(core);
-            }
+        if let Some(lease) = self.lease.take() {
+            self.pool
+                .release(lease.job_id, self.state.alive_ranks(), self.state.losses());
+        }
+    }
+
+    /// Retire the lease after a protocol failure: children killed,
+    /// ranks marked lost, subsequent exclusive launches fail typed.
+    fn teardown(&mut self) {
+        if let Some(lease) = self.lease.take() {
+            self.pool.retire(lease.job_id);
         }
     }
 }
@@ -459,50 +397,40 @@ impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
     }
 
     fn step(&mut self) -> Result<IterationEvent<P::Param>, BsfError> {
-        // Guard before touching the core: a stopped run must error typed
-        // (not tear the pool down), and a torn-down run has no core.
-        if self.core.is_none() || self.state.done() || self.state.released() {
+        // Guard before touching the lease: a stopped run must error
+        // typed (not tear the pool down), and a torn-down run has none.
+        if self.lease.is_none() || self.state.done() || self.state.released() {
             return Err(BsfError::config(
                 "driver already stopped (finish() it instead of stepping again)",
             ));
         }
-        let result = match self.core.as_ref() {
-            Some(core) => self.state.step_comm(&*self.problem, &core.ep),
-            // unreachable (guarded above), but stay typed rather than panic
-            None => {
-                return Err(BsfError::config(
-                    "driver already stopped (finish() it instead of stepping again)",
-                ))
-            }
-        };
+        let result = self.state.step_comm(&*self.problem, self.pool.comm());
         if let Err(BsfError::Cancelled) = &result {
             // The workers were released with the exit flag; they ship
             // their reports and return to the idle loop. Drain the
             // reports so the next run's gather starts clean, then hand
-            // the pool back — cancellation must not cost the cluster.
+            // the lease back — cancellation must not cost the cluster.
             match self.collect_reports() {
                 Ok(workers) => {
-                    // The drain succeeded, so the core is still present.
-                    if let Some(core) = self.core.as_ref() {
-                        let volume = core.ep.stats().volume().since(&self.base_volume);
-                        // Keep the partial run's data so finish() can
-                        // still report it after the pool is handed back.
-                        self.parked = Some((workers, volume));
-                        self.park();
-                    }
+                    let volume = self.pool.comm().stats().volume().since(&self.base_volume);
+                    // Keep the partial run's data so finish() can still
+                    // report it after the lease is handed back.
+                    self.parked = Some((workers, volume));
+                    self.park();
                 }
                 Err(_) => {
-                    // A worker died mid-drain. Tear down NOW: a partial
+                    // A worker died mid-drain. Retire NOW: a partial
                     // drain is unrepeatable (each worker reports once),
-                    // so nothing may ever re-drain this core.
-                    self.core.take();
+                    // so nothing may ever re-drain this lease.
+                    self.teardown();
                 }
             }
         } else if matches!(&result, Err(_)) {
-            // Transport loss / worker panic / dispatcher bug: the pool's
-            // protocol state is unknown. Tear it down (children killed
-            // by ChildSet::drop); the cluster slot stays empty.
-            self.core.take();
+            // Transport loss / worker panic / dispatcher bug: the
+            // lease's protocol state is unknown. Retire it (children
+            // killed, ranks lost); exclusive launches keep failing
+            // typed.
+            self.teardown();
         }
         result
     }
@@ -512,9 +440,10 @@ impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
     }
 
     fn finish(mut self: Box<Self>) -> Result<RunReport<P::Param>, BsfError> {
-        if self.core.is_none() {
-            // A cancelled run parked the pool early but kept its partial
-            // data — report it, like every other engine's finish().
+        if self.lease.is_none() {
+            // A cancelled run released the lease early but kept its
+            // partial data — report it, like every other engine's
+            // finish().
             if let Some((workers, volume)) = self.parked.take() {
                 return Ok(cluster_report(self.state.outcome(), workers, volume));
             }
@@ -525,25 +454,19 @@ impl<P: BsfProblem> Driver<P> for ClusterDriver<P> {
         // Early finish: release the workers between iterations — they
         // report and go idle, exactly like a normal stop.
         if !self.state.done() {
-            if let Some(core) = self.core.as_ref() {
-                self.state.release(&core.ep);
-            }
+            self.state.release(self.pool.comm());
         }
         let workers = match self.collect_reports() {
             Ok(workers) => workers,
             Err(e) => {
-                // Partial drains are unrepeatable; tear down now so the
+                // Partial drains are unrepeatable; retire now so the
                 // Drop below (and any future launch) cannot hang on a
                 // report that will never come.
-                self.core.take();
+                self.teardown();
                 return Err(e);
             }
         };
-        // The drain above succeeded, so the core is still present.
-        let volume = match self.core.as_ref() {
-            Some(core) => core.ep.stats().volume().since(&self.base_volume),
-            None => VolumeByTag::default(),
-        };
+        let volume = self.pool.comm().stats().volume().since(&self.base_volume);
         self.park();
 
         Ok(cluster_report(self.state.outcome(), workers, volume))
@@ -555,26 +478,27 @@ impl<P: BsfProblem> Drop for ClusterDriver<P> {
     /// pattern, which consumes the `BsfRun` without `finish()`) must not
     /// cost the cluster: release the workers if the run is still going
     /// (they accept an exit order between iterations), drain their
-    /// end-of-run reports, and park the pool for the next run. Only a
-    /// failed drain — a worker that died mid-protocol — tears the core
-    /// down (SHUTDOWN + children killed by the core's drop).
+    /// end-of-run reports, and hand the lease back for the next run.
+    /// Only a failed drain — a worker that died mid-protocol — retires
+    /// the lease (children killed, ranks lost).
     fn drop(&mut self) {
-        if self.core.is_none() {
-            return; // parked (finish/cancel) or already torn down
+        if self.lease.is_none() {
+            return; // released (finish/cancel) or already torn down
         }
-        if let Some(core) = self.core.as_ref() {
-            self.state.release(&core.ep); // no-op after a normal stop
-        }
+        self.state.release(self.pool.comm()); // no-op after a normal stop
         if self.collect_reports().is_ok() {
             self.park();
         } else {
-            self.core.take(); // dropped: SHUTDOWN + kill/reap
+            self.teardown();
         }
     }
 }
 
 /// The persistent worker's outer loop: one ordinary Algorithm-2 worker
-/// run per NEWRUN, sharing a single chunk pool across runs; SHUTDOWN
+/// run per NEWRUN (whose job id is echoed back as [`TAG_JOB_ACK`]
+/// before the run's first order — the multi-tenant lease handshake),
+/// sharing a single chunk pool across runs; [`TAG_FLEET_PING`] gets a
+/// pid-carrying [`TAG_FLEET_PONG`] (idle liveness probe); SHUTDOWN
 /// exits cleanly. Generic over the transport (tests drive it over the
 /// thread transport; `bsf worker --persist` drives it over TCP).
 pub fn serve_worker<P: BsfProblem>(
@@ -588,10 +512,25 @@ pub fn serve_worker<P: BsfProblem>(
     // every run the cluster dispatches.
     let pool = intra_worker_pool(cfg);
     loop {
-        let m = comm.recv_tags(Some(master), &[TAG_NEW_RUN, TAG_SHUTDOWN])?;
+        let m = comm.recv_tags(Some(master), &[TAG_NEW_RUN, TAG_SHUTDOWN, TAG_FLEET_PING])?;
         if m.tag == TAG_SHUTDOWN {
             return Ok(());
         }
+        if m.tag == TAG_FLEET_PING {
+            let pid = std::process::id() as u64;
+            comm.send(master, TAG_FLEET_PONG, pid.to_bytes())?;
+            continue;
+        }
+        // NEWRUN carries the lease's job id; echo it before awaiting
+        // the first order so a scheduler can prove this worker serves
+        // *its* lease (and not a stale one).
+        if m.payload.len() != 8 {
+            return Err(BsfError::transport(format!(
+                "malformed TAG_NEW_RUN payload ({} bytes, want the 8-byte job id)",
+                m.payload.len()
+            )));
+        }
+        comm.send(master, TAG_JOB_ACK, m.payload)?;
         let report = run_worker_guarded_with_pool(problem, backend, comm, cfg, pool.as_ref())?;
         comm.send(master, TAG_WORKER_REPORT, report.to_wire())?;
     }
@@ -659,8 +598,10 @@ mod tests {
         });
 
         let mut totals = Vec::new();
-        for _ in 0..2 {
-            master.send(0, TAG_NEW_RUN, Vec::new()).unwrap();
+        for job_id in [7u64, 8u64] {
+            master.send(0, TAG_NEW_RUN, job_id.to_bytes()).unwrap();
+            let ack = master.recv(0, TAG_JOB_ACK).unwrap();
+            assert_eq!(u64::from_bytes(&ack.payload), job_id, "job-id echo");
             let outcome = crate::skeleton::master::run_master(&p, &master, &cfg).unwrap();
             let m = master.recv(0, TAG_WORKER_REPORT).unwrap();
             let report = WorkerReport::from_wire(&m.payload).unwrap();
@@ -693,14 +634,21 @@ mod tests {
 
         // Begin a run, then release it immediately (exit=true at the top
         // of the worker loop — the early-finish/cancel path).
-        master.send(0, TAG_NEW_RUN, Vec::new()).unwrap();
+        master.send(0, TAG_NEW_RUN, 1u64.to_bytes()).unwrap();
+        master.recv(0, TAG_JOB_ACK).unwrap();
         master.send(0, crate::transport::Tag::Exit, true.to_bytes()).unwrap();
         let m = master.recv(0, TAG_WORKER_REPORT).unwrap();
         let report = WorkerReport::from_wire(&m.payload).unwrap();
         assert_eq!(report.iterations, 0, "released before any order");
 
-        // The worker is idle again: a full run still works.
-        master.send(0, TAG_NEW_RUN, Vec::new()).unwrap();
+        // The worker answers idle liveness probes between leases...
+        master.send(0, TAG_FLEET_PING, Vec::new()).unwrap();
+        let pong = master.recv(0, TAG_FLEET_PONG).unwrap();
+        assert_eq!(u64::from_bytes(&pong.payload), std::process::id() as u64);
+
+        // ... and is idle again: a full run still works.
+        master.send(0, TAG_NEW_RUN, 2u64.to_bytes()).unwrap();
+        master.recv(0, TAG_JOB_ACK).unwrap();
         let outcome = crate::skeleton::master::run_master(&p, &master, &cfg).unwrap();
         assert!(outcome.iterations > 0);
         let m = master.recv(0, TAG_WORKER_REPORT).unwrap();

@@ -73,6 +73,7 @@ impl Default for BsfConfig {
 }
 
 impl BsfConfig {
+    /// Defaults with `workers` workers (the paper's K).
     pub fn with_workers(workers: usize) -> Self {
         Self { workers, ..Self::default() }
     }
@@ -91,11 +92,13 @@ impl BsfConfig {
         self.threads_per_worker(threads)
     }
 
+    /// Print an approximation trace every `every` iterations (0 = off).
     pub fn trace(mut self, every: usize) -> Self {
         self.trace_count = every;
         self
     }
 
+    /// Hard iteration cap (`PP_MAX_ITER_COUNT`).
     pub fn max_iter(mut self, cap: usize) -> Self {
         self.max_iter = cap;
         self

@@ -135,6 +135,7 @@ pub struct StopPolicy {
 }
 
 impl StopPolicy {
+    /// No stops: run to the problem's own convergence criterion.
     pub fn new() -> Self {
         Self::default()
     }
@@ -184,6 +185,7 @@ pub struct CancelToken {
 }
 
 impl CancelToken {
+    /// A fresh, un-cancelled token.
     pub fn new() -> Self {
         Self::default()
     }
@@ -193,6 +195,7 @@ impl CancelToken {
         self.flag.store(true, Ordering::SeqCst);
     }
 
+    /// Whether cancellation has been requested.
     pub fn is_cancelled(&self) -> bool {
         self.flag.load(Ordering::SeqCst)
     }

@@ -458,6 +458,7 @@ impl SimulatedEngine {
         Self { sim }
     }
 
+    /// The simulator configuration this engine will run with.
     pub fn sim_config(&self) -> &SimConfig {
         &self.sim
     }

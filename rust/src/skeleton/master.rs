@@ -332,12 +332,19 @@ impl<P: BsfProblem> MasterLoop<P> {
     /// double-sending or desynchronized worker (typed, best-effort —
     /// only what has already arrived is observable).
     fn stray_fold<C: Communicator + ?Sized>(&self, comm: &C) -> Option<BsfError> {
-        let m = comm.try_recv_tags(None, &[Tag::Fold])?;
-        Some(BsfError::transport(format!(
-            "unexpected fold from rank {} outside a gather round \
-             (duplicate or desynchronized worker)",
-            m.from
-        )))
+        // Rank-scoped (never `from: None`): on a multi-tenant fleet this
+        // master shares the endpoint with concurrent jobs, and a wildcard
+        // receive would steal another lease's in-flight folds.
+        for &w in &self.all_ranks {
+            if let Some(m) = comm.try_recv_tags(Some(w), &[Tag::Fold]) {
+                return Some(BsfError::transport(format!(
+                    "unexpected fold from rank {} outside a gather round \
+                     (duplicate or desynchronized worker)",
+                    m.from
+                )));
+            }
+        }
+        None
     }
 
     /// Between iterations, honor `TAG_REJOIN` announcements from
@@ -349,23 +356,38 @@ impl<P: BsfProblem> MasterLoop<P> {
         if !matches!(self.cfg.fault, FaultPolicy::Redistribute { .. }) {
             return;
         }
-        while let Some(m) = comm.try_recv_tags(None, &[TAG_REJOIN]) {
-            let r = m.from;
-            if self.alive.contains(&r) || !self.all_ranks.contains(&r) {
-                continue; // not a known lost worker: drop the announcement
+        // Probe only this job's own lost ranks (never `from: None`): a
+        // wildcard receive would steal rejoin announcements belonging to
+        // a concurrent job sharing the fleet endpoint.
+        let lost: Vec<usize> = self
+            .all_ranks
+            .iter()
+            .copied()
+            .filter(|r| !self.alive.contains(r))
+            .collect();
+        for probe in lost {
+            while let Some(m) = comm.try_recv_tags(Some(probe), &[TAG_REJOIN]) {
+                let r = m.from;
+                if self.alive.contains(&r) || !self.all_ranks.contains(&r) {
+                    continue; // not a known lost worker: drop the announcement
+                }
+                // Unpark: a rejoiner waits at the top of its loop;
+                // exit=false is benign there, and walks one parked at
+                // step 10 back to the top — where the coming REASSIGN +
+                // order pick it up.
+                let _ = comm.send(r, Tag::Exit, false.to_bytes());
+                let pos = self
+                    .alive
+                    .iter()
+                    .position(|&a| a > r)
+                    .unwrap_or(self.alive.len());
+                self.alive.insert(pos, r);
+                self.rejoined.push(r);
+                if let Some(t) = &self.cfg.telemetry {
+                    t.record_rejoin(r);
+                }
+                self.reassign_pending = true;
             }
-            // Unpark: a rejoiner waits at the top of its loop; exit=false
-            // is benign there, and walks one parked at step 10 back to
-            // the top — where the coming REASSIGN + order pick it up.
-            let _ = comm.send(r, Tag::Exit, false.to_bytes());
-            let pos =
-                self.alive.iter().position(|&a| a > r).unwrap_or(self.alive.len());
-            self.alive.insert(pos, r);
-            self.rejoined.push(r);
-            if let Some(t) = &self.cfg.telemetry {
-                t.record_rejoin(r);
-            }
-            self.reassign_pending = true;
         }
     }
 
@@ -709,10 +731,15 @@ impl<P: BsfProblem> MasterLoop<P> {
         // runs whenever workers are configured to beat — even without a
         // telemetry sink — so beats never accumulate in the mailbox.
         if self.cfg.heartbeat_every > 0 || self.cfg.telemetry.is_some() {
-            while let Some(m) = comm.try_recv_tags(None, &[TAG_HEARTBEAT]) {
-                if let Some(t) = &self.cfg.telemetry {
-                    if let Ok(hb) = WorkerReport::from_wire(&m.payload) {
-                        t.record_heartbeat(hb);
+            // Rank-scoped drain (never `from: None`) so a master sharing
+            // a multi-tenant fleet endpoint only consumes beats from its
+            // own leased workers.
+            for &w in &self.all_ranks {
+                while let Some(m) = comm.try_recv_tags(Some(w), &[TAG_HEARTBEAT]) {
+                    if let Some(t) = &self.cfg.telemetry {
+                        if let Ok(hb) = WorkerReport::from_wire(&m.payload) {
+                            t.record_heartbeat(hb);
+                        }
                     }
                 }
             }

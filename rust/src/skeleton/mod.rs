@@ -37,6 +37,7 @@ pub mod process;
 pub mod reduce;
 pub mod report;
 pub mod runner;
+pub mod scheduler;
 pub mod session;
 pub mod split;
 pub mod variables;
@@ -56,6 +57,9 @@ pub use fault::{FaultPolicy, WorkerAssignment};
 pub use pool::ChunkPool;
 pub use problem::{BsfProblem, MapCtx, StepDecision};
 pub use report::{Clock, PhaseBreakdown, RunReport};
+pub use scheduler::{
+    ControlApi, JobContract, JobSnapshot, JobStatus, Lease, Scheduler, WorkerPool,
+};
 pub use session::{Bsf, BsfRun};
 pub use variables::SkelVars;
 pub use workflow::JobDecision;

@@ -412,6 +412,21 @@ impl ChildSet {
         Ok(())
     }
 
+    /// Kill and reap the children of the given ranks only, leaving the
+    /// rest running — how a [`WorkerPool`](crate::skeleton::scheduler::WorkerPool)
+    /// retires one failed lease without tearing the whole fleet down.
+    /// Ranks with no tracked child (in-process fleets) are ignored.
+    pub(crate) fn kill_ranks(&mut self, ranks: &[usize]) {
+        self.children.retain_mut(|(rank, child)| {
+            if !ranks.contains(rank) {
+                return true;
+            }
+            let _ = child.kill();
+            let _ = child.wait();
+            false
+        });
+    }
+
     /// Wait for every child to exit on its own (they just saw exit=true
     /// and their sockets closed); kill stragglers past `timeout`. A
     /// non-zero exit after an apparently clean run is surfaced — it

@@ -14,15 +14,19 @@
 /// the number of elements that participated (the summed reduce counters).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExtendedFold<R> {
+    /// ⊕-sum of the participating elements; `None` when none did.
     pub value: Option<R>,
+    /// How many elements participated (summed reduce counters).
     pub counter: u64,
 }
 
 impl<R> ExtendedFold<R> {
+    /// No participants yet.
     pub fn empty() -> Self {
         Self { value: None, counter: 0 }
     }
 
+    /// A single participating element (counter 1).
     pub fn single(value: R) -> Self {
         Self { value: Some(value), counter: 1 }
     }

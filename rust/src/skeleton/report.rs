@@ -26,9 +26,13 @@ pub enum Clock {
 /// master-side reduce, process-results (+ exit broadcast).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PhaseBreakdown {
+    /// Master → workers order-broadcast time (s).
     pub send: f64,
+    /// Worker compute + fold-gather time (s).
     pub gather: f64,
+    /// Master-side reduce time (s).
     pub reduce: f64,
+    /// Master-side process-results time (s).
     pub process: f64,
 }
 
@@ -43,6 +47,7 @@ impl PhaseBreakdown {
         }
     }
 
+    /// Sum of the four phases.
     pub fn total(&self) -> f64 {
         self.send + self.gather + self.reduce + self.process
     }
@@ -78,6 +83,7 @@ pub struct RunReport<Param> {
     pub workers: Vec<WorkerReport>,
     /// Transport totals for the whole run.
     pub messages: u64,
+    /// Total transport payload bytes for the whole run.
     pub bytes: u64,
     /// Per-[`Tag`](crate::transport::Tag) breakdown of the transport
     /// totals — the measured comm volume to hold against the cost

@@ -1,0 +1,1347 @@
+//! Multi-tenant job scheduling over one shared persistent worker fleet.
+//!
+//! The paper's master/worker model assumes one run owns the whole
+//! cluster; the ROADMAP's north star is serving many concurrent tenants
+//! from one fleet. This module is the structural unlock: the one-slot
+//! `ClusterCore` became a [`WorkerPool`] that *leases* disjoint worker
+//! subsets to jobs, and a [`Scheduler`] queues submitted jobs (FIFO
+//! within a priority level), admits them against per-job contracts
+//! ([`JobContract`]: worker count, iteration cap, deadline) and runs
+//! each admitted job on its leased ranks via the existing
+//! [`MasterLoop::new_with_ranks`] rank-subset launch — the same
+//! machinery a shrunk fault-tolerant cluster already uses, which is why
+//! a job on leased ranks `[2, 3]` is bit-identical to a solo 2-worker
+//! run.
+//!
+//! ## Leases and the job-id handshake
+//!
+//! A lease is a set of physical worker ranks granted to one job id.
+//! Starting a run on a lease sends each member [`TAG_NEW_RUN`] carrying
+//! the job id (`u64` LE); the worker echoes it back as [`TAG_JOB_ACK`]
+//! before its first order is awaited, so a desynchronized worker —
+//! one still serving a stale lease — fails the launch with a typed
+//! error instead of silently corrupting two tenants' runs. Between
+//! leases the pool can probe idle members with [`TAG_FLEET_PING`] /
+//! [`TAG_FLEET_PONG`] and retire silently dead processes before they
+//! are leased again.
+//!
+//! ## Fault and release semantics
+//!
+//! Scheduler jobs run under
+//! [`FaultPolicy::Redistribute`](crate::skeleton::fault::FaultPolicy)
+//! with a budget of `k - 1`: a worker loss shrinks the *job* (the run
+//! completes on the survivors, bit-identical to a fresh run on the
+//! smaller count) and then shrinks the *fleet* — the lost rank moves to
+//! the pool's `lost` list at release, never to be leased again.
+//! Cancellation ([`Scheduler::cancel`]) releases the job's workers back
+//! to the idle NEWRUN loop; only a hard protocol error retires a whole
+//! lease (its processes are killed) rather than risking a
+//! desynchronized worker poisoning a later tenant.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::costmodel::CostParams;
+use crate::error::BsfError;
+use crate::metrics::telemetry::RunTelemetry;
+use crate::skeleton::config::BsfConfig;
+use crate::skeleton::driver::CancelToken;
+use crate::skeleton::fault::FaultPolicy;
+use crate::skeleton::master::{MasterLoop, MasterOutcome};
+use crate::skeleton::problem::BsfProblem;
+use crate::skeleton::process::{ChildSet, REAP_TIMEOUT};
+use crate::skeleton::worker::WorkerReport;
+use crate::transport::tags::{
+    TAG_FLEET_PING, TAG_FLEET_PONG, TAG_JOB_ACK, TAG_NEW_RUN, TAG_SHUTDOWN,
+    TAG_WORKER_REPORT,
+};
+use crate::transport::tcp::ProblemSig;
+use crate::transport::{Communicator, Tag};
+use crate::util::codec::Codec;
+use crate::util::json::Json;
+
+/// A grant of exclusive use of a set of physical worker ranks to one
+/// job. Obtained from [`WorkerPool::try_lease`]; returned with
+/// [`WorkerPool::release`] (workers go back to the free list) or
+/// [`WorkerPool::retire`] (workers are killed and marked lost).
+#[derive(Debug, Clone)]
+pub struct Lease {
+    /// The job this lease serves; carried in `TAG_NEW_RUN` and echoed
+    /// back as `TAG_JOB_ACK` by every member.
+    pub job_id: u64,
+    /// Physical worker ranks granted, ascending and disjoint from every
+    /// other outstanding lease.
+    pub ranks: Vec<usize>,
+}
+
+/// Internal mutable state of a [`WorkerPool`], behind one mutex so
+/// lease/release/retire transitions are atomic.
+struct PoolState {
+    /// Ranks not currently leased (ascending).
+    free: Vec<usize>,
+    /// Outstanding leases: `(job_id, ranks)`.
+    leases: Vec<(u64, Vec<usize>)>,
+    /// Ranks permanently lost (process died, or retired with a failed
+    /// lease). Never leased again; tolerated at reap time.
+    lost: Vec<usize>,
+    /// Set by [`WorkerPool::shutdown`]; every later operation fails.
+    shut: bool,
+    /// Monotonic job-id source (see [`WorkerPool::next_job_id`]).
+    next_job: u64,
+}
+
+/// A fleet of persistent workers shared by many jobs.
+///
+/// Owns the master-side endpoint of the star topology, the worker child
+/// processes (when the fleet was spawned rather than connected to) and
+/// the lease ledger. One `WorkerPool` is the multi-tenant refactor of
+/// the old single-slot `ClusterCore`: instead of one run owning the
+/// whole fleet, disjoint rank subsets are leased per job and returned
+/// (or retired) at run end.
+///
+/// All methods take `&self`; the pool is `Sync` and meant to live in an
+/// `Arc` shared by a [`Scheduler`], its job threads and a control
+/// server.
+pub struct WorkerPool {
+    comm: Arc<dyn Communicator + Send + Sync>,
+    children: Mutex<ChildSet>,
+    sig: Option<ProblemSig>,
+    spawn_k: usize,
+    state: Mutex<PoolState>,
+}
+
+impl WorkerPool {
+    /// Wrap an established master endpoint (and the worker children it
+    /// spawned, if any — pass `ChildSet::default()` for in-process or
+    /// pre-started fleets). `sig` is the problem signature the workers
+    /// handshook with, used to reject mismatched launches. Public
+    /// callers obtain pools from
+    /// [`Cluster::pool`](crate::skeleton::cluster::Cluster::pool).
+    pub(crate) fn new(
+        comm: Arc<dyn Communicator + Send + Sync>,
+        children: ChildSet,
+        sig: Option<ProblemSig>,
+    ) -> Self {
+        let spawn_k = comm.size() - 1;
+        Self {
+            comm,
+            children: Mutex::new(children),
+            sig,
+            spawn_k,
+            state: Mutex::new(PoolState {
+                free: (0..spawn_k).collect(),
+                leases: Vec::new(),
+                lost: Vec::new(),
+                shut: false,
+                next_job: 1,
+            }),
+        }
+    }
+
+    /// The shared master-side endpoint. Jobs drive their
+    /// [`MasterLoop`] over this one endpoint concurrently; every
+    /// receive in the master loop is rank-scoped, so concurrent jobs on
+    /// disjoint leases never steal each other's messages.
+    pub fn comm(&self) -> &(dyn Communicator) {
+        &*self.comm
+    }
+
+    /// Worker count the fleet was spawned with.
+    pub fn spawn_k(&self) -> usize {
+        self.spawn_k
+    }
+
+    /// Problem signature the workers handshook with (`None` for fleets
+    /// whose transport performs no handshake, e.g. in-process tests).
+    pub fn sig(&self) -> Option<ProblemSig> {
+        self.sig
+    }
+
+    /// Ranks currently free to lease.
+    pub fn free_workers(&self) -> usize {
+        self.state.lock().unwrap().free.len()
+    }
+
+    /// Number of outstanding leases.
+    pub fn active_jobs(&self) -> usize {
+        self.state.lock().unwrap().leases.len()
+    }
+
+    /// Ranks permanently lost (chronological).
+    pub fn lost_workers(&self) -> Vec<usize> {
+        self.state.lock().unwrap().lost.clone()
+    }
+
+    /// Workers that still exist: free + currently leased
+    /// (= spawned − lost). The admission ceiling for a job contract.
+    pub fn usable_workers(&self) -> usize {
+        let s = self.state.lock().unwrap();
+        if s.shut { 0 } else { self.spawn_k - s.lost.len() }
+    }
+
+    /// True after [`shutdown`](Self::shutdown).
+    pub fn is_shut(&self) -> bool {
+        self.state.lock().unwrap().shut
+    }
+
+    /// Draw a fresh job id (monotonic, fleet-unique).
+    pub fn next_job_id(&self) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        let id = s.next_job;
+        s.next_job += 1;
+        id
+    }
+
+    /// Try to lease `k` free ranks to `job_id`: `Ok(Some(lease))` on
+    /// grant, `Ok(None)` when fewer than `k` ranks are free right now
+    /// (try again after a release), an error when the request can never
+    /// succeed (`k == 0`, or the pool is shut).
+    pub fn try_lease(&self, job_id: u64, k: usize) -> Result<Option<Lease>, BsfError> {
+        if k == 0 {
+            return Err(BsfError::config("cannot lease 0 workers"));
+        }
+        let mut s = self.state.lock().unwrap();
+        if s.shut {
+            return Err(BsfError::config("worker pool is shut down"));
+        }
+        if s.free.len() < k {
+            return Ok(None);
+        }
+        let ranks: Vec<usize> = s.free.drain(..k).collect();
+        s.leases.push((job_id, ranks.clone()));
+        Ok(Some(Lease { job_id, ranks }))
+    }
+
+    /// Lease the *entire* free set, failing typed when that is not the
+    /// whole live fleet — the one-job-owns-the-cluster contract of
+    /// [`Cluster::engine`](crate::skeleton::cluster::Cluster::engine).
+    ///
+    /// Errors: [`BsfError::ClusterBusy`] while other jobs hold leases;
+    /// a config error when the pool is shut / fully lost, or when
+    /// `expected_k` does not match the live worker count (run with
+    /// `cfg.workers == ` [`usable_workers`](Self::usable_workers)).
+    pub fn lease_exclusive(&self, job_id: u64, expected_k: usize) -> Result<Lease, BsfError> {
+        let mut s = self.state.lock().unwrap();
+        if !s.leases.is_empty() {
+            return Err(BsfError::ClusterBusy { active_jobs: s.leases.len() });
+        }
+        if s.shut || s.free.is_empty() {
+            return Err(BsfError::config(
+                "cluster was torn down (shutdown, or poisoned by an \
+                 unrecovered worker loss)",
+            ));
+        }
+        if expected_k != s.free.len() {
+            return Err(BsfError::config(format!(
+                "cfg.workers is {} but the cluster has {} usable persistent \
+                 workers ({} spawned, {} lost) — set workers to match",
+                expected_k,
+                s.free.len(),
+                self.spawn_k,
+                s.lost.len()
+            )));
+        }
+        let ranks = std::mem::take(&mut s.free);
+        s.leases.push((job_id, ranks.clone()));
+        Ok(Lease { job_id, ranks })
+    }
+
+    /// Start a run on a lease: send every member [`TAG_NEW_RUN`] with
+    /// the job id, then require each to echo it back as
+    /// [`TAG_JOB_ACK`]. A member that fails to answer — or answers with
+    /// a *different* id (it is serving a stale lease) — fails the
+    /// launch typed; the caller should [`retire`](Self::retire) the
+    /// lease.
+    pub fn begin_run(&self, lease: &Lease) -> Result<(), BsfError> {
+        for &w in &lease.ranks {
+            self.comm.send(w, TAG_NEW_RUN, lease.job_id.to_bytes())?;
+        }
+        for &w in &lease.ranks {
+            let m = self.comm.recv(w, TAG_JOB_ACK)?;
+            if m.payload.len() != 8 {
+                return Err(BsfError::transport(format!(
+                    "worker {w}: malformed TAG_JOB_ACK payload ({} bytes, want 8)",
+                    m.payload.len()
+                )));
+            }
+            let echoed = u64::from_bytes(&m.payload);
+            if echoed != lease.job_id {
+                return Err(BsfError::transport(format!(
+                    "worker {w} acked job {echoed} but was leased to job {} \
+                     — desynchronized fleet member",
+                    lease.job_id
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Return a lease at run end: `survivors` go back to the free list,
+    /// `lost` ranks (died mid-run, absorbed by redistribution) are
+    /// recorded permanently. Unknown job ids are ignored (idempotent).
+    pub fn release(&self, job_id: u64, survivors: &[usize], lost: &[usize]) {
+        let mut s = self.state.lock().unwrap();
+        let Some(pos) = s.leases.iter().position(|(id, _)| *id == job_id) else {
+            return;
+        };
+        s.leases.remove(pos);
+        s.free.extend_from_slice(survivors);
+        s.free.sort_unstable();
+        s.lost.extend_from_slice(lost);
+    }
+
+    /// Tear a lease down after a hard failure: every member is killed
+    /// (when the pool owns child processes) and marked lost — a worker
+    /// that broke protocol mid-run can never be trusted with another
+    /// tenant. Idempotent on unknown job ids.
+    pub fn retire(&self, job_id: u64) {
+        let ranks = {
+            let mut s = self.state.lock().unwrap();
+            let Some(pos) = s.leases.iter().position(|(id, _)| *id == job_id) else {
+                return;
+            };
+            let (_, ranks) = s.leases.remove(pos);
+            s.lost.extend_from_slice(&ranks);
+            ranks
+        };
+        self.children.lock().unwrap().kill_ranks(&ranks);
+    }
+
+    /// Probe every *free* rank with [`TAG_FLEET_PING`] and wait for its
+    /// [`TAG_FLEET_PONG`] (worker pid). A member that cannot answer is
+    /// retired — moved to the lost list, its process killed — before it
+    /// could be leased to a tenant. Returns the number of live free
+    /// ranks. Must not run concurrently with a dispatch that could
+    /// lease the probed ranks (the [`Scheduler`] serializes both).
+    pub fn probe_idle(&self) -> Result<usize, BsfError> {
+        let free: Vec<usize> = self.state.lock().unwrap().free.clone();
+        let mut dead = Vec::new();
+        for &w in &free {
+            let ok = self
+                .comm
+                .send(w, TAG_FLEET_PING, Vec::new())
+                .and_then(|()| self.comm.recv(w, TAG_FLEET_PONG))
+                .is_ok();
+            if !ok {
+                dead.push(w);
+            }
+        }
+        if !dead.is_empty() {
+            let mut s = self.state.lock().unwrap();
+            s.free.retain(|r| !dead.contains(r));
+            s.lost.extend_from_slice(&dead);
+            drop(s);
+            self.children.lock().unwrap().kill_ranks(&dead);
+        }
+        Ok(free.len() - dead.len())
+    }
+
+    /// Tear the whole fleet down: broadcast the exit flag plus
+    /// [`TAG_SHUTDOWN`] to every spawned rank (best-effort — lost
+    /// members are already gone) and reap the child processes.
+    ///
+    /// Errors: [`BsfError::ClusterBusy`] while leases are outstanding
+    /// (cancel or drain them first), a config error when already shut
+    /// or when every worker is already lost.
+    pub fn shutdown(&self) -> Result<(), BsfError> {
+        let lost = {
+            let mut s = self.state.lock().unwrap();
+            if s.shut {
+                return Err(BsfError::config("worker pool is already shut down"));
+            }
+            if !s.leases.is_empty() {
+                return Err(BsfError::ClusterBusy { active_jobs: s.leases.len() });
+            }
+            if s.free.is_empty() {
+                return Err(BsfError::config(
+                    "no live workers left to shut down (the fleet was poisoned \
+                     by unrecovered losses)",
+                ));
+            }
+            s.shut = true;
+            s.free.clear();
+            s.lost.clone()
+        };
+        self.broadcast_shutdown();
+        self.children.lock().unwrap().reap(REAP_TIMEOUT, &lost)
+    }
+
+    /// Best-effort exit + SHUTDOWN to every spawned rank (idle members
+    /// honor SHUTDOWN; one somehow mid-run honors the exit flag).
+    fn broadcast_shutdown(&self) {
+        for w in 0..self.spawn_k {
+            let _ = self.comm.send(w, Tag::Exit, true.to_bytes());
+            let _ = self.comm.send(w, TAG_SHUTDOWN, Vec::new());
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Dropping an un-shut pool broadcasts SHUTDOWN so live workers
+    /// exit cleanly; the owned `ChildSet`'s own drop then kills any
+    /// straggler so no error path leaks a process.
+    fn drop(&mut self) {
+        let already_shut = self.state.lock().unwrap().shut;
+        if !already_shut {
+            self.broadcast_shutdown();
+        }
+    }
+}
+
+/// Receive one end-of-run [`TAG_WORKER_REPORT`] from each rank in
+/// `ranks` and return them sorted by rank — the collection step shared
+/// by scheduler jobs and exclusive cluster runs.
+pub(crate) fn collect_worker_reports<C: Communicator + ?Sized>(
+    comm: &C,
+    ranks: &[usize],
+) -> Result<Vec<WorkerReport>, BsfError> {
+    let mut reports = ranks
+        .iter()
+        .map(|&w| {
+            comm.recv(w, TAG_WORKER_REPORT)
+                .and_then(|m| WorkerReport::from_wire(&m.payload))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    reports.sort_by_key(|r| r.rank);
+    Ok(reports)
+}
+
+/// Per-job resource contract, checked at admission and enforced while
+/// the job runs (the iteration cap and deadline are merged into the
+/// run's [`StopPolicy`](crate::skeleton::driver::StopPolicy)).
+#[derive(Debug, Clone, Default)]
+pub struct JobContract {
+    /// Workers requested; `0` means *auto* — at dispatch the scheduler
+    /// asks the calibrated cost model for the scalability-boundary K
+    /// (clamped to free capacity; the whole free set without a model).
+    pub workers: usize,
+    /// Higher runs first; FIFO within a level. Default 0.
+    pub priority: i64,
+    /// Wall-clock budget for the run itself (queue wait excluded).
+    pub deadline: Option<Duration>,
+    /// Iteration cap for the run (merged with the fleet template's own
+    /// cap; the lower one wins).
+    pub max_iter: Option<usize>,
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Admitted, waiting for enough free workers.
+    Queued,
+    /// Leased and iterating.
+    Running,
+    /// Completed (converged, hit its iteration cap, or hit its
+    /// deadline); the lease was released.
+    Done,
+    /// Cancelled (queued: never started; running: released between
+    /// iterations).
+    Cancelled,
+    /// A hard error ended the run; its lease was retired.
+    Failed,
+}
+
+impl JobStatus {
+    /// Stable lower-case name, as used in `bsf jobs` and the control
+    /// API.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Cancelled => "cancelled",
+            JobStatus::Failed => "failed",
+        }
+    }
+
+    /// True for `Done` / `Cancelled` / `Failed`.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Cancelled | JobStatus::Failed)
+    }
+}
+
+/// Point-in-time public view of one job (see [`Scheduler::jobs`]).
+#[derive(Debug, Clone)]
+pub struct JobSnapshot {
+    /// Fleet-unique job id.
+    pub id: u64,
+    /// The admission contract the job was submitted with.
+    pub contract: JobContract,
+    /// Current lifecycle state.
+    pub status: JobStatus,
+    /// Dispatch order (1-based; `None` until the job starts). Exposes
+    /// the scheduler's actual start ordering to `bsf jobs`.
+    pub started_seq: Option<u64>,
+    /// Physical ranks leased (empty until the job starts).
+    pub granted: Vec<usize>,
+    /// Iterations completed so far (live while running).
+    pub iterations: usize,
+    /// Run wall seconds (final once terminal).
+    pub elapsed: f64,
+    /// Rendered result line (the same text `bsf run` prints after
+    /// `result:`), once done and when the scheduler has a describer.
+    pub result: Option<String>,
+    /// Error text for `Failed` jobs.
+    pub error: Option<String>,
+    /// OS pids of the leased workers (from their end-of-run reports) —
+    /// the witness that consecutive jobs reused one fleet.
+    pub pids: Vec<u64>,
+}
+
+impl JobSnapshot {
+    /// One `bsf-jobs/1` row.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("status", Json::Str(self.status.as_str().into())),
+            ("priority", Json::Num(self.contract.priority as f64)),
+            ("requested", Json::Num(self.contract.workers as f64)),
+            (
+                "granted",
+                Json::Arr(self.granted.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("elapsed", Json::Num(self.elapsed)),
+            (
+                "result",
+                self.result.clone().map_or(Json::Null, Json::Str),
+            ),
+            ("error", self.error.clone().map_or(Json::Null, Json::Str)),
+            (
+                "pids",
+                Json::Arr(self.pids.iter().map(|&p| Json::Num(p as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// One job's ledger entry.
+struct JobEntry {
+    id: u64,
+    contract: JobContract,
+    status: JobStatus,
+    started_seq: Option<u64>,
+    granted: Vec<usize>,
+    iterations: usize,
+    elapsed: f64,
+    result: Option<String>,
+    error: Option<String>,
+    pids: Vec<u64>,
+    cancel: CancelToken,
+}
+
+impl JobEntry {
+    fn snapshot(&self) -> JobSnapshot {
+        JobSnapshot {
+            id: self.id,
+            contract: self.contract.clone(),
+            status: self.status,
+            started_seq: self.started_seq,
+            granted: self.granted.clone(),
+            iterations: self.iterations,
+            elapsed: self.elapsed,
+            result: self.result.clone(),
+            error: self.error.clone(),
+            pids: self.pids.clone(),
+        }
+    }
+}
+
+struct SchedInner {
+    jobs: Vec<JobEntry>,
+    /// Set by [`Scheduler::request_shutdown`]: reject new submissions,
+    /// let queued/running jobs drain.
+    draining: bool,
+    /// When true, queued jobs are not dispatched (maintenance mode /
+    /// deterministic test setup); see [`Scheduler::pause`].
+    paused: bool,
+    /// Dispatch-order counter behind [`JobSnapshot::started_seq`].
+    start_seq: u64,
+}
+
+/// The multi-tenant job scheduler: one per served fleet.
+///
+/// Owns the submission queue and the job ledger; leases workers from
+/// its [`WorkerPool`] and runs each admitted job on a dedicated thread
+/// driving [`MasterLoop`] over the shared endpoint. Meant to live in an
+/// `Arc`: job threads, the serve loop and the control server all share
+/// it.
+///
+/// Scheduling policy: highest [`JobContract::priority`] first, FIFO
+/// within a level, **no backfilling** — when the head job's worker
+/// demand exceeds current free capacity the queue waits for a release
+/// rather than letting smaller jobs jump ahead, so a big job can never
+/// be starved by a stream of small ones.
+pub struct Scheduler<P: BsfProblem> {
+    pool: Arc<WorkerPool>,
+    problem: Arc<P>,
+    problem_name: String,
+    cfg: BsfConfig,
+    describe: Option<Box<dyn Fn(&P::Param) -> String + Send + Sync>>,
+    cost: Option<CostParams>,
+    telemetry: Option<Arc<RunTelemetry>>,
+    inner: Mutex<SchedInner>,
+    idle: Condvar,
+}
+
+impl<P: BsfProblem> Scheduler<P> {
+    /// Build a scheduler for `problem` over an established fleet.
+    /// `cfg` is the per-job template: every job clones it, then
+    /// overrides `workers` (its lease size), `cancel`, the fault policy
+    /// (always `Redistribute` with budget `k − 1`) and its contract's
+    /// stop conditions. Wrap the result in an `Arc` before submitting.
+    pub fn new(pool: Arc<WorkerPool>, problem: Arc<P>, problem_name: &str, cfg: BsfConfig) -> Self {
+        Self {
+            pool,
+            problem,
+            problem_name: problem_name.to_string(),
+            cfg,
+            describe: None,
+            cost: None,
+            telemetry: None,
+            inner: Mutex::new(SchedInner {
+                jobs: Vec::new(),
+                draining: false,
+                paused: false,
+                start_seq: 0,
+            }),
+            idle: Condvar::new(),
+        }
+    }
+
+    /// Attach the result describer (the closure `bsf run` uses to print
+    /// its `result:` line) so completed jobs carry the identical text —
+    /// the byte-compare artifact for solo-vs-scheduled runs.
+    pub fn describe_with(
+        mut self,
+        f: impl Fn(&P::Param) -> String + Send + Sync + 'static,
+    ) -> Self {
+        self.describe = Some(Box::new(f));
+        self
+    }
+
+    /// Attach calibrated cost-model parameters: `--workers auto`
+    /// contracts resolve to the model's optimal K (clamped to free
+    /// capacity) instead of the whole free set.
+    pub fn cost_model(mut self, params: CostParams) -> Self {
+        self.cost = Some(params);
+        self
+    }
+
+    /// Attach a telemetry aggregator: the scheduler records `job_*`
+    /// events and publishes queue depth + per-job rows into its
+    /// `bsf-metrics/1` document.
+    pub fn telemetry(mut self, t: Arc<RunTelemetry>) -> Self {
+        self.telemetry = Some(t);
+        self
+    }
+
+    /// The fleet this scheduler leases from.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Name of the (single) problem this fleet serves; submissions for
+    /// any other name are rejected at the control layer.
+    pub fn problem_name(&self) -> &str {
+        &self.problem_name
+    }
+
+    /// Submit a job. Admission control runs synchronously: a contract
+    /// whose worker demand can never be met by this fleet (more than
+    /// the usable worker count) is rejected typed, as is any submission
+    /// after [`request_shutdown`](Self::request_shutdown). Admitted
+    /// jobs are queued and dispatched as capacity frees up; the
+    /// returned id keys [`cancel`](Self::cancel) and [`job`](Self::job).
+    pub fn submit(self: &Arc<Self>, contract: JobContract) -> Result<u64, BsfError> {
+        {
+            let inner = self.inner.lock().unwrap();
+            if inner.draining {
+                return Err(BsfError::config(
+                    "scheduler is draining (shutdown requested); not accepting \
+                     new jobs",
+                ));
+            }
+        }
+        let usable = self.pool.usable_workers();
+        if usable == 0 {
+            return Err(BsfError::config(
+                "fleet has no usable workers left (shut down or all lost)",
+            ));
+        }
+        if contract.workers > usable {
+            return Err(BsfError::config(format!(
+                "contract requests {} workers but the fleet has only {usable} \
+                 usable ({} spawned, {} lost)",
+                contract.workers,
+                self.pool.spawn_k(),
+                self.pool.lost_workers().len()
+            )));
+        }
+        if contract.max_iter == Some(0) {
+            return Err(BsfError::config("contract max_iter must be >= 1"));
+        }
+        let id = self.pool.next_job_id();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.jobs.push(JobEntry {
+                id,
+                contract: contract.clone(),
+                status: JobStatus::Queued,
+                started_seq: None,
+                granted: Vec::new(),
+                iterations: 0,
+                elapsed: 0.0,
+                result: None,
+                error: None,
+                pids: Vec::new(),
+                cancel: CancelToken::new(),
+            });
+        }
+        if let Some(t) = &self.telemetry {
+            t.record_job_submitted(id, contract.priority, contract.workers);
+        }
+        self.publish_stats();
+        self.dispatch();
+        Ok(id)
+    }
+
+    /// Cancel a job: a queued one terminates immediately; a running one
+    /// has its [`CancelToken`] fired and stops between iterations (its
+    /// workers are released back to the pool). Returns the status
+    /// observed at call time; unknown ids are a config error.
+    pub fn cancel(self: &Arc<Self>, id: u64) -> Result<JobStatus, BsfError> {
+        let (status, newly_terminal) = {
+            let mut inner = self.inner.lock().unwrap();
+            let entry = inner
+                .jobs
+                .iter_mut()
+                .find(|j| j.id == id)
+                .ok_or_else(|| BsfError::config(format!("no such job: {id}")))?;
+            match entry.status {
+                JobStatus::Queued => {
+                    entry.status = JobStatus::Cancelled;
+                    (JobStatus::Cancelled, true)
+                }
+                JobStatus::Running => {
+                    entry.cancel.cancel();
+                    (JobStatus::Running, false)
+                }
+                other => (other, false),
+            }
+        };
+        if newly_terminal {
+            if let Some(t) = &self.telemetry {
+                t.record_job_ended(id, "cancelled", 0, 0.0);
+            }
+            self.publish_stats();
+            self.idle.notify_all();
+        }
+        Ok(status)
+    }
+
+    /// Snapshot one job; `None` for unknown ids.
+    pub fn job(&self, id: u64) -> Option<JobSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.iter().find(|j| j.id == id).map(|j| j.snapshot())
+    }
+
+    /// Snapshot every job ever submitted, in submission order.
+    pub fn jobs(&self) -> Vec<JobSnapshot> {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.iter().map(|j| j.snapshot()).collect()
+    }
+
+    /// Jobs admitted but not yet started.
+    pub fn queue_depth(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.iter().filter(|j| j.status == JobStatus::Queued).count()
+    }
+
+    /// Suspend dispatch (running jobs continue; queued jobs wait).
+    /// Maintenance mode — also what gives tests a deterministic way to
+    /// build a queue before any job starts.
+    pub fn pause(&self) {
+        self.inner.lock().unwrap().paused = true;
+    }
+
+    /// Resume dispatch after [`pause`](Self::pause).
+    pub fn resume(self: &Arc<Self>) {
+        self.inner.lock().unwrap().paused = false;
+        self.dispatch();
+    }
+
+    /// Stop accepting submissions and let the queue drain; pair with
+    /// [`wait_idle`](Self::wait_idle) then
+    /// [`WorkerPool::shutdown`]. Returns true when already idle.
+    pub fn request_shutdown(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.draining = true;
+        let idle = inner.jobs.iter().all(|j| j.status.is_terminal());
+        drop(inner);
+        self.idle.notify_all();
+        idle
+    }
+
+    /// True once [`request_shutdown`](Self::request_shutdown) was
+    /// called (locally or via `POST /shutdown`). The `bsf serve` loop
+    /// polls this to know when to drain and tear the fleet down.
+    pub fn is_draining(&self) -> bool {
+        self.inner.lock().unwrap().draining
+    }
+
+    /// Block until every submitted job is terminal, or `timeout`
+    /// passes. Returns true when idle.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.jobs.iter().all(|j| j.status.is_terminal()) {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.idle.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Start every queued job the free capacity allows, in priority
+    /// order (see the type docs for the no-backfill rule). Called after
+    /// every submit and every release; never blocks on a run.
+    fn dispatch(self: &Arc<Self>) {
+        loop {
+            let Some((id, lease)) = self.try_dispatch_one() else { return };
+            let ranks = lease.ranks.clone();
+            let sched = Arc::clone(self);
+            let spawned = thread::Builder::new()
+                .name(format!("bsf-job-{id}"))
+                .spawn(move || sched.run_job(id, lease));
+            if let Err(e) = spawned {
+                // Could not even start a thread: return the untouched
+                // lease (no NEWRUN was sent) and fail the job.
+                self.pool.release(id, &ranks, &[]);
+                self.fail_job(id, &BsfError::transport(format!("spawn job thread: {e}")));
+            }
+        }
+    }
+
+    /// Pick the next job to start, lease its workers, mark it Running.
+    fn try_dispatch_one(self: &Arc<Self>) -> Option<(u64, Lease)> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.paused {
+            return None;
+        }
+        let start_seq = inner.start_seq + 1;
+        let head = inner
+            .jobs
+            .iter_mut()
+            .filter(|j| j.status == JobStatus::Queued)
+            .max_by_key(|j| (j.contract.priority, std::cmp::Reverse(j.id)))?;
+        let free = self.pool.free_workers();
+        if free == 0 {
+            return None;
+        }
+        let k = if head.contract.workers == 0 {
+            let advised = self.cost.as_ref().map_or(free, |c| c.k_max_argmax(free));
+            advised.clamp(1, free)
+        } else {
+            head.contract.workers
+        };
+        let lease = match self.pool.try_lease(head.id, k) {
+            Ok(Some(lease)) => lease,
+            Ok(None) => return None, // head-of-line blocks: no backfill
+            Err(_) => return None,   // pool shut mid-drain
+        };
+        head.status = JobStatus::Running;
+        head.started_seq = Some(start_seq);
+        head.granted = lease.ranks.clone();
+        let head_id = head.id;
+        inner.start_seq = start_seq;
+        Some((head_id, lease))
+    }
+
+    /// Job thread body: run the lease to completion and settle the
+    /// ledger + pool either way.
+    fn run_job(self: Arc<Self>, id: u64, lease: Lease) {
+        let (cancel, contract) = {
+            let inner = self.inner.lock().unwrap();
+            let entry = inner.jobs.iter().find(|j| j.id == id).expect("job ledger entry");
+            (entry.cancel.clone(), entry.contract.clone())
+        };
+        if let Some(t) = &self.telemetry {
+            t.record_job_started(id, &lease.ranks);
+        }
+        self.publish_stats();
+        match self.execute(id, &lease, &contract, &cancel) {
+            Ok(run) => {
+                self.pool.release(id, &run.survivors, &run.outcome.losses);
+                let status = if run.cancelled { JobStatus::Cancelled } else { JobStatus::Done };
+                let result = self.describe.as_ref().map(|d| d(&run.outcome.param));
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(entry) = inner.jobs.iter_mut().find(|j| j.id == id) {
+                    entry.status = status;
+                    entry.iterations = run.outcome.iterations;
+                    entry.elapsed = run.outcome.elapsed;
+                    entry.result = if run.cancelled { None } else { result };
+                    entry.pids = run.reports.iter().map(|r| r.pid as u64).collect();
+                }
+                drop(inner);
+                if let Some(t) = &self.telemetry {
+                    t.record_job_ended(
+                        id,
+                        status.as_str(),
+                        run.outcome.iterations,
+                        run.outcome.elapsed,
+                    );
+                }
+            }
+            Err(e) => {
+                self.pool.retire(id);
+                self.fail_job(id, &e);
+            }
+        }
+        self.publish_stats();
+        self.idle.notify_all();
+        self.dispatch();
+    }
+
+    /// Drive one leased run: NEWRUN/ACK handshake, rank-subset master
+    /// loop, end-of-run report collection. `Ok` covers both normal
+    /// completion and cancellation (workers released either way); `Err`
+    /// means the lease must be retired.
+    fn execute(
+        &self,
+        id: u64,
+        lease: &Lease,
+        contract: &JobContract,
+        cancel: &CancelToken,
+    ) -> Result<JobRun<P::Param>, BsfError> {
+        self.pool.begin_run(lease)?;
+        let mut cfg = self.cfg.clone();
+        cfg.workers = lease.ranks.len();
+        cfg.cancel = cancel.clone();
+        cfg.telemetry = None; // per-iteration events stay per-run, not interleaved
+        cfg.fault = FaultPolicy::Redistribute { max_losses: lease.ranks.len() - 1 };
+        if let Some(d) = contract.deadline {
+            cfg.stop.deadline = Some(cfg.stop.deadline.map_or(d, |d0| d0.min(d)));
+        }
+        if let Some(n) = contract.max_iter {
+            cfg.stop.max_iter = Some(cfg.stop.max_iter.map_or(n, |m| m.min(n)));
+        }
+        let comm = self.pool.comm();
+        // force_reassign: a leased subset like [2, 3] passes through the
+        // workers' spawn-K self-computed split otherwise.
+        let mut master =
+            MasterLoop::new_with_ranks(&*self.problem, &cfg, None, lease.ranks.clone(), true)?;
+        let cancelled = loop {
+            match master.step_comm(&*self.problem, comm) {
+                Ok(event) => {
+                    {
+                        let mut inner = self.inner.lock().unwrap();
+                        if let Some(entry) = inner.jobs.iter_mut().find(|j| j.id == id) {
+                            entry.iterations = event.iter;
+                        }
+                    }
+                    if event.stop.is_some() {
+                        break false;
+                    }
+                }
+                Err(BsfError::Cancelled) => break true, // workers already released
+                Err(e) => {
+                    // Hard failure: unstick any survivor (best-effort
+                    // exit broadcast), then let the caller retire the
+                    // lease.
+                    master.release(comm);
+                    return Err(e);
+                }
+            }
+        };
+        let survivors = master.alive_ranks().to_vec();
+        let reports = collect_worker_reports(comm, &survivors)?;
+        Ok(JobRun { outcome: master.outcome(), reports, survivors, cancelled })
+    }
+
+    /// Settle a job that failed outside `execute`'s happy paths.
+    fn fail_job(self: &Arc<Self>, id: u64, e: &BsfError) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(entry) = inner.jobs.iter_mut().find(|j| j.id == id) {
+            entry.status = JobStatus::Failed;
+            entry.error = Some(e.to_string());
+        }
+        drop(inner);
+        if let Some(t) = &self.telemetry {
+            t.record_job_ended(id, "failed", 0, 0.0);
+        }
+        self.publish_stats();
+        self.idle.notify_all();
+    }
+
+    /// Push queue depth + per-job rows into the telemetry aggregator
+    /// (surfaces as `queue_depth` / `jobs` in `bsf-metrics/1`).
+    fn publish_stats(&self) {
+        let Some(t) = &self.telemetry else { return };
+        let rows: Vec<Json> = self.jobs().iter().map(|j| j.to_json()).collect();
+        t.set_scheduler_stats(self.queue_depth(), rows);
+    }
+
+    /// The `bsf-jobs/1` document served by `GET /jobs` and printed by
+    /// `bsf jobs`.
+    pub fn jobs_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str("bsf-jobs/1".into())),
+            ("problem", Json::Str(self.problem_name.clone())),
+            ("queue_depth", Json::Num(self.queue_depth() as f64)),
+            (
+                "fleet",
+                Json::obj(vec![
+                    ("spawn_k", Json::Num(self.pool.spawn_k() as f64)),
+                    ("free", Json::Num(self.pool.free_workers() as f64)),
+                    ("active_jobs", Json::Num(self.pool.active_jobs() as f64)),
+                    (
+                        "lost",
+                        Json::Arr(
+                            self.pool
+                                .lost_workers()
+                                .iter()
+                                .map(|&r| Json::Num(r as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "jobs",
+                Json::Arr(self.jobs().iter().map(|j| j.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// What one leased run produced (internal to the job thread).
+struct JobRun<Param> {
+    outcome: MasterOutcome<Param>,
+    reports: Vec<WorkerReport>,
+    survivors: Vec<usize>,
+    cancelled: bool,
+}
+
+/// The scheduler surface a control server needs, object-safe so
+/// `metrics::control::ControlServer` can hold one `Arc<dyn ControlApi>`
+/// regardless of the fleet's problem type.
+pub trait ControlApi: Send + Sync {
+    /// Handle a `POST /jobs` body: `{"problem": str, "workers":
+    /// int|"auto", "priority": int, "deadline_secs": num, "max_iter":
+    /// int}` (all but `problem` optional). Returns `{"id", "status"}`.
+    fn submit_json(&self, req: &Json) -> Result<Json, BsfError>;
+    /// The `bsf-jobs/1` document (`GET /jobs`).
+    fn jobs_json(&self) -> Json;
+    /// Cancel by id (`POST /jobs/<id>/cancel`); returns `{"id",
+    /// "status"}` with the status observed at call time.
+    fn cancel_json(&self, id: u64) -> Result<Json, BsfError>;
+    /// Begin draining (`POST /shutdown`); returns `{"status":
+    /// "draining"}`. The serve loop notices, waits idle and tears the
+    /// fleet down.
+    fn shutdown_json(&self) -> Json;
+    /// The `bsf-metrics/1` document (`GET /metrics`), including
+    /// `queue_depth` + `jobs` rows.
+    fn metrics_json(&self) -> Json;
+    /// The `bsf-events/1` stream (`GET /events`).
+    fn events_jsonl(&self) -> String;
+}
+
+impl<P: BsfProblem> ControlApi for Arc<Scheduler<P>> {
+    fn submit_json(&self, req: &Json) -> Result<Json, BsfError> {
+        let problem = req
+            .get("problem")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| BsfError::usage("submit: missing \"problem\""))?;
+        if problem != self.problem_name() {
+            return Err(BsfError::config(format!(
+                "this fleet serves problem \"{}\", not \"{problem}\" — one \
+                 fleet, one problem (the workers handshook its signature)",
+                self.problem_name()
+            )));
+        }
+        let workers = match req.get("workers") {
+            None => 0,
+            Some(v) if v.as_str() == Some("auto") => 0,
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| BsfError::usage("submit: \"workers\" must be an int or \"auto\""))?
+                as usize,
+        };
+        let contract = JobContract {
+            workers,
+            priority: req.get("priority").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64,
+            deadline: req
+                .get("deadline_secs")
+                .and_then(|v| v.as_f64())
+                .map(Duration::from_secs_f64),
+            max_iter: req
+                .get("max_iter")
+                .and_then(|v| v.as_u64())
+                .map(|n| n as usize),
+        };
+        let id = self.submit(contract)?;
+        Ok(Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("status", Json::Str("queued".into())),
+        ]))
+    }
+
+    fn jobs_json(&self) -> Json {
+        Scheduler::jobs_json(self)
+    }
+
+    fn cancel_json(&self, id: u64) -> Result<Json, BsfError> {
+        let status = self.cancel(id)?;
+        Ok(Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("status", Json::Str(status.as_str().into())),
+        ]))
+    }
+
+    fn shutdown_json(&self) -> Json {
+        let idle = self.request_shutdown();
+        Json::obj(vec![(
+            "status",
+            Json::Str(if idle { "idle" } else { "draining" }.into()),
+        )])
+    }
+
+    fn metrics_json(&self) -> Json {
+        match &self.telemetry {
+            Some(t) => t.metrics_json(),
+            None => Json::obj(vec![
+                ("schema", Json::Str("bsf-metrics/1".into())),
+                ("queue_depth", Json::Num(self.queue_depth() as f64)),
+                (
+                    "jobs",
+                    Json::Arr(self.jobs().iter().map(|j| j.to_json()).collect()),
+                ),
+            ]),
+        }
+    }
+
+    fn events_jsonl(&self) -> String {
+        self.telemetry
+            .as_ref()
+            .map(|t| t.events_jsonl())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::jacobi::JacobiProblem;
+    use crate::skeleton::backend::FusedNativeBackend;
+    use crate::skeleton::cluster::serve_worker;
+    use crate::skeleton::engine::ThreadedEngine;
+    use crate::skeleton::session::Bsf;
+    use crate::transport::build_thread_transport;
+
+    /// In-process fleet: K serve_worker threads over the thread
+    /// transport, each holding its own copy of the jacobi instance.
+    fn fleet(
+        k: usize,
+        n: usize,
+        tol: f64,
+        seed: u64,
+    ) -> (Arc<WorkerPool>, Vec<thread::JoinHandle<Result<(), BsfError>>>) {
+        let mut eps = build_thread_transport(k);
+        let master = eps.pop().unwrap();
+        let handles = eps
+            .into_iter()
+            .map(|ep| {
+                let (p, _) = JacobiProblem::random(n, tol, seed);
+                let cfg = BsfConfig::with_workers(k);
+                thread::spawn(move || serve_worker(&p, &FusedNativeBackend, &ep, &cfg))
+            })
+            .collect();
+        let pool = Arc::new(WorkerPool::new(Arc::new(master), ChildSet::default(), None));
+        (pool, handles)
+    }
+
+    #[test]
+    fn admission_rejects_impossible_contracts() {
+        let mut eps = build_thread_transport(2);
+        let master = eps.pop().unwrap();
+        let _workers = eps; // keep endpoints alive; nothing is dispatched
+        let pool = Arc::new(WorkerPool::new(Arc::new(master), ChildSet::default(), None));
+        let (p, _) = JacobiProblem::random(8, 1e-6, 1);
+        let sched = Arc::new(Scheduler::new(
+            Arc::clone(&pool),
+            Arc::new(p),
+            "jacobi",
+            BsfConfig::with_workers(2),
+        ));
+        let err = sched
+            .submit(JobContract { workers: 3, ..Default::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("usable"), "{err}");
+        let err = sched
+            .submit(JobContract { workers: 1, max_iter: Some(0), ..Default::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("max_iter"), "{err}");
+        assert!(sched.jobs().is_empty(), "rejected submissions never enter the ledger");
+        assert!(matches!(sched.cancel(99), Err(BsfError::Config(_))), "unknown id is typed");
+    }
+
+    #[test]
+    fn dispatch_order_is_priority_then_fifo() {
+        let (pool, handles) = fleet(1, 12, 1e-6, 42);
+        let (p, _) = JacobiProblem::random(12, 1e-6, 42);
+        let sched = Arc::new(
+            Scheduler::new(
+                Arc::clone(&pool),
+                Arc::new(p),
+                "jacobi",
+                BsfConfig::with_workers(1),
+            )
+            .describe_with(|x| format!("{x:?}")),
+        );
+        // pause() lets the whole queue build before any dispatch — the
+        // deterministic way to observe the ordering policy.
+        sched.pause();
+        let a = sched.submit(JobContract { workers: 1, ..Default::default() }).unwrap();
+        let b = sched
+            .submit(JobContract { workers: 1, priority: 5, ..Default::default() })
+            .unwrap();
+        let c = sched
+            .submit(JobContract { workers: 1, priority: 5, ..Default::default() })
+            .unwrap();
+        assert_eq!(sched.queue_depth(), 3);
+        sched.resume();
+        assert!(sched.wait_idle(Duration::from_secs(60)), "queue drained");
+        let job = |id| sched.job(id).unwrap();
+        assert_eq!(job(b).started_seq, Some(1), "highest priority first");
+        assert_eq!(job(c).started_seq, Some(2), "FIFO within a level");
+        assert_eq!(job(a).started_seq, Some(3), "lowest priority last");
+        for id in [a, b, c] {
+            assert_eq!(job(id).status, JobStatus::Done);
+            assert!(job(id).iterations > 0);
+        }
+        // identical submissions on one fleet give identical results
+        assert_eq!(job(a).result, job(b).result);
+        assert_eq!(job(b).result, job(c).result);
+        assert!(sched.request_shutdown(), "all jobs terminal — already idle");
+        let err = sched.submit(JobContract::default()).unwrap_err();
+        assert!(err.to_string().contains("draining"), "{err}");
+        pool.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn cancel_releases_the_lease_for_the_next_job() {
+        // tol = 0.0 never converges (the stop test is `delta < eps`), so
+        // only cancellation can end job 1.
+        let (pool, handles) = fleet(1, 8, 0.0, 7);
+        let (p, _) = JacobiProblem::random(8, 0.0, 7);
+        let mut cfg = BsfConfig::with_workers(1);
+        cfg.max_iter = 50_000_000;
+        let sched = Arc::new(Scheduler::new(Arc::clone(&pool), Arc::new(p), "jacobi", cfg));
+        let id = sched.submit(JobContract { workers: 1, ..Default::default() }).unwrap();
+        let t0 = Instant::now();
+        while sched.job(id).unwrap().status == JobStatus::Queued {
+            assert!(t0.elapsed() < Duration::from_secs(30), "job never started");
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(sched.cancel(id).unwrap(), JobStatus::Running);
+        assert!(sched.wait_idle(Duration::from_secs(60)), "cancel landed");
+        let j = sched.job(id).unwrap();
+        assert_eq!(j.status, JobStatus::Cancelled);
+        assert!(j.result.is_none(), "cancelled jobs carry no result");
+        assert_eq!(pool.free_workers(), 1, "cancellation returned the lease");
+        // the freed worker immediately serves the next tenant
+        let id2 = sched
+            .submit(JobContract { workers: 1, max_iter: Some(3), ..Default::default() })
+            .unwrap();
+        assert!(sched.wait_idle(Duration::from_secs(60)));
+        let j2 = sched.job(id2).unwrap();
+        assert_eq!(j2.status, JobStatus::Done);
+        assert_eq!(j2.iterations, 3, "contract max_iter capped the run");
+        pool.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn two_concurrent_jobs_split_one_fleet_bit_identically() {
+        let n = 16;
+        let (pool, handles) = fleet(4, n, 1e-6, 9);
+        let (p, _) = JacobiProblem::random(n, 1e-6, 9);
+        let sched = Arc::new(
+            Scheduler::new(
+                Arc::clone(&pool),
+                Arc::new(p),
+                "jacobi",
+                BsfConfig::with_workers(4),
+            )
+            .describe_with(|x| format!("{x:?}")),
+        );
+        sched.pause(); // dispatch both jobs in one resume
+        let a = sched.submit(JobContract { workers: 2, ..Default::default() }).unwrap();
+        let b = sched.submit(JobContract { workers: 2, ..Default::default() }).unwrap();
+        sched.resume();
+        assert!(sched.wait_idle(Duration::from_secs(60)), "both jobs drained");
+        let (ja, jb) = (sched.job(a).unwrap(), sched.job(b).unwrap());
+        assert_eq!(ja.status, JobStatus::Done);
+        assert_eq!(jb.status, JobStatus::Done);
+        assert_eq!(ja.granted, vec![0, 1]);
+        assert_eq!(jb.granted, vec![2, 3], "disjoint leases from one fleet");
+        // Leased physical ranks [2, 3] run logical ranks 0..2 (forced
+        // REASSIGN), so both tenants are bit-identical to a solo
+        // 2-worker run of the same instance.
+        let (solo, _) = JacobiProblem::random(n, 1e-6, 9);
+        let reference = Bsf::new(solo).workers(2).engine(ThreadedEngine).run().unwrap();
+        let expect = format!("{:?}", reference.param);
+        assert_eq!(ja.result.as_deref(), Some(expect.as_str()));
+        assert_eq!(jb.result.as_deref(), Some(expect.as_str()));
+        assert_eq!(ja.iterations, reference.iterations);
+        assert_eq!(jb.iterations, reference.iterations);
+        pool.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn loss_shrinks_capacity_and_teardown_paths_are_typed() {
+        let mut eps = build_thread_transport(3);
+        let master = eps.pop().unwrap();
+        let _workers = eps;
+        let pool = WorkerPool::new(Arc::new(master), ChildSet::default(), None);
+        assert_eq!(pool.spawn_k(), 3);
+        let lease = pool.try_lease(1, 2).unwrap().unwrap();
+        assert_eq!(lease.ranks, vec![0, 1]);
+        assert_eq!(pool.free_workers(), 1);
+        assert!(pool.try_lease(2, 2).unwrap().is_none(), "insufficient free ranks wait");
+        // rank 0 died mid-run; redistribution absorbed it
+        pool.release(1, &[1], &[0]);
+        assert_eq!(pool.free_workers(), 2);
+        assert_eq!(pool.usable_workers(), 2, "a lost worker shrinks capacity");
+        assert_eq!(pool.lost_workers(), vec![0]);
+        // exclusive leases demand exactly the live fleet
+        let err = pool.lease_exclusive(3, 3).unwrap_err();
+        assert!(err.to_string().contains("usable"), "{err}");
+        let l2 = pool.try_lease(4, 1).unwrap().unwrap();
+        let err = pool.lease_exclusive(5, 2).unwrap_err();
+        assert!(matches!(err, BsfError::ClusterBusy { active_jobs: 1 }), "{err}");
+        let err = pool.shutdown().unwrap_err();
+        assert!(matches!(err, BsfError::ClusterBusy { .. }), "busy fleets refuse teardown: {err}");
+        pool.release(4, &l2.ranks, &[]);
+        pool.shutdown().unwrap();
+        let err = pool.shutdown().unwrap_err();
+        assert!(err.to_string().contains("already"), "{err}");
+        assert_eq!(pool.usable_workers(), 0);
+        assert!(pool.try_lease(6, 1).is_err(), "a shut pool leases nothing");
+    }
+}

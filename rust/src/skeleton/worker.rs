@@ -43,7 +43,9 @@ use crate::util::codec::Codec;
 /// tier; with `threads == 1` they are zero.
 #[derive(Debug, Clone)]
 pub struct WorkerReport {
+    /// Worker rank (0-based).
     pub rank: usize,
+    /// Iterations this worker participated in.
     pub iterations: usize,
     /// Total seconds spent in Map + local Reduce across all iterations.
     pub map_seconds: f64,

@@ -27,14 +27,17 @@ pub struct JobDecision {
 }
 
 impl JobDecision {
+    /// Keep iterating the current job.
     pub fn stay(job: usize) -> Self {
         Self { next_job: job, exit: false }
     }
 
+    /// Switch to job `job` next iteration.
     pub fn goto(job: usize) -> Self {
         Self { next_job: job, exit: false }
     }
 
+    /// Stop the whole computation.
     pub fn exit() -> Self {
         Self { next_job: 0, exit: true }
     }

@@ -68,8 +68,11 @@ impl Tag {
 /// A single in-flight message.
 #[derive(Debug)]
 pub struct Message {
+    /// Sender rank.
     pub from: usize,
+    /// Protocol tag.
     pub tag: Tag,
+    /// Opaque payload bytes (codec-encoded).
     pub payload: Vec<u8>,
 }
 
@@ -162,12 +165,15 @@ struct TagCounter {
 /// transport reports globally.
 #[derive(Debug, Default)]
 pub struct TransportStats {
+    /// Total messages carried.
     pub messages: AtomicU64,
+    /// Total payload bytes carried.
     pub bytes: AtomicU64,
     per_tag: [TagCounter; 5],
 }
 
 impl TransportStats {
+    /// Record one message of `payload_len` bytes under `tag`.
     pub fn record(&self, tag: Tag, payload_len: usize) {
         self.record_n(tag, 1, payload_len);
     }
@@ -183,18 +189,22 @@ impl TransportStats {
         slot.bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Total messages carried so far.
     pub fn message_count(&self) -> u64 {
         self.messages.load(Ordering::Relaxed)
     }
 
+    /// Total payload bytes carried so far.
     pub fn byte_count(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
     }
 
+    /// Messages carried under `tag`.
     pub fn tag_message_count(&self, tag: Tag) -> u64 {
         self.per_tag[tag.slot()].messages.load(Ordering::Relaxed)
     }
 
+    /// Payload bytes carried under `tag`.
     pub fn tag_byte_count(&self, tag: Tag) -> u64 {
         self.per_tag[tag.slot()].bytes.load(Ordering::Relaxed)
     }
@@ -218,7 +228,9 @@ impl TransportStats {
 /// Message/byte volume of one tag (snapshot).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TagVolume {
+    /// Messages carried under this tag.
     pub messages: u64,
+    /// Payload bytes carried under this tag.
     pub bytes: u64,
 }
 
@@ -237,9 +249,13 @@ impl TagVolume {
 /// fold-transfer (`t_recv`) terms.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct VolumeByTag {
+    /// Master → worker order broadcasts.
     pub order: TagVolume,
+    /// Worker → master fold returns.
     pub fold: TagVolume,
+    /// Exit-flag broadcasts.
     pub exit: TagVolume,
+    /// Abort notifications.
     pub abort: TagVolume,
     /// All `Tag::User(_)` traffic combined.
     pub user: TagVolume,
@@ -259,6 +275,7 @@ impl VolumeByTag {
         }
     }
 
+    /// Messages summed across all four tags.
     pub fn total_messages(&self) -> u64 {
         [self.order, self.fold, self.exit, self.abort, self.user]
             .iter()
@@ -266,6 +283,7 @@ impl VolumeByTag {
             .sum()
     }
 
+    /// Payload bytes summed across all four tags.
     pub fn total_bytes(&self) -> u64 {
         [self.order, self.fold, self.exit, self.abort, self.user]
             .iter()

@@ -14,8 +14,28 @@ use super::Tag;
 
 /// Master → worker: reset for one more run on a persistent cluster (the
 /// outer-loop counterpart of the per-run order messages). Payload: the
-/// run's `BsfConfig` knobs + problem signature.
+/// job id (`u64` LE) of the run the worker is being leased to, so a
+/// worker re-leased across tenants can prove which run it serves (it
+/// echoes the id back as [`TAG_JOB_ACK`]).
 pub const TAG_NEW_RUN: Tag = Tag::User(0x4E52); // "NR"
+
+/// Worker → master: echo of the job id received in [`TAG_NEW_RUN`],
+/// sent before the run's first order is awaited. The scheduler verifies
+/// the echo so a desynchronized worker (serving a stale lease) fails the
+/// launch with a typed error instead of corrupting two tenants' runs.
+/// Payload: the job id (`u64` LE).
+pub const TAG_JOB_ACK: Tag = Tag::User(0x4A41); // "JA"
+
+/// Master → worker: liveness probe of an *idle* fleet member (between
+/// leases — mid-run liveness is the transport's job). The scheduler
+/// probes free workers so a silently dead process is retired before it
+/// is leased to a tenant. Payload: empty.
+pub const TAG_FLEET_PING: Tag = Tag::User(0x5049); // "PI"
+
+/// Worker → master: reply to [`TAG_FLEET_PING`]. Payload: the worker's
+/// OS pid (`u64` LE) — the same reuse witness `WorkerReport::pid`
+/// carries at run end.
+pub const TAG_FLEET_PONG: Tag = Tag::User(0x504F); // "PO"
 
 /// Master → worker: tear the persistent cluster down; the worker
 /// process exits. Payload: empty.
@@ -60,10 +80,13 @@ pub enum Role {
 /// One row of the protocol table: a tag and its wire contract.
 #[derive(Debug, Clone, Copy)]
 pub struct TagSpec {
+    /// The tag itself.
     pub tag: Tag,
     /// Stable name, as used in docs and lint output.
     pub name: &'static str,
+    /// Which side may send it.
     pub sender: Role,
+    /// Which side receives it.
     pub receiver: Role,
     /// Human description of the payload encoding.
     pub payload: &'static str,
@@ -106,7 +129,28 @@ pub const PROTOCOL: &[TagSpec] = &[
         name: "TAG_NEW_RUN",
         sender: Role::Master,
         receiver: Role::Worker,
-        payload: "run config + problem signature",
+        payload: "job id: u64 LE (the lease this run serves)",
+    },
+    TagSpec {
+        tag: TAG_JOB_ACK,
+        name: "TAG_JOB_ACK",
+        sender: Role::Worker,
+        receiver: Role::Master,
+        payload: "job id: u64 LE (echo of TAG_NEW_RUN)",
+    },
+    TagSpec {
+        tag: TAG_FLEET_PING,
+        name: "TAG_FLEET_PING",
+        sender: Role::Master,
+        receiver: Role::Worker,
+        payload: "empty",
+    },
+    TagSpec {
+        tag: TAG_FLEET_PONG,
+        name: "TAG_FLEET_PONG",
+        sender: Role::Worker,
+        receiver: Role::Master,
+        payload: "worker pid: u64 LE",
     },
     TagSpec {
         tag: TAG_SHUTDOWN,
@@ -184,6 +228,9 @@ mod tests {
         assert_eq!(TAG_REASSIGN, ascii(b'R', b'A'));
         assert_eq!(TAG_REJOIN, ascii(b'R', b'J'));
         assert_eq!(TAG_HEARTBEAT, ascii(b'H', b'B'));
+        assert_eq!(TAG_JOB_ACK, ascii(b'J', b'A'));
+        assert_eq!(TAG_FLEET_PING, ascii(b'P', b'I'));
+        assert_eq!(TAG_FLEET_PONG, ascii(b'P', b'O'));
     }
 
     #[test]

@@ -204,7 +204,9 @@ fn short(what: &'static str) -> impl Fn(io::Error) -> io::Error {
 /// instead of producing a silently corrupt run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ProblemSig {
+    /// The problem's map-list length.
     pub list_size: u64,
+    /// Number of workflow jobs the problem declares.
     pub job_count: u64,
 }
 

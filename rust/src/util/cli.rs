@@ -14,6 +14,7 @@ use crate::error::BsfError;
 /// positionals.
 #[derive(Debug, Clone, Default)]
 pub struct ArgMap {
+    /// The leading subcommand word (`run`, `worker`, ...), if any.
     pub subcommand: Option<String>,
     options: BTreeMap<String, String>,
     positionals: Vec<String>,
@@ -52,14 +53,17 @@ impl ArgMap {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// The i-th positional argument after the subcommand.
     pub fn positional(&self, i: usize) -> Option<&str> {
         self.positionals.get(i).map(|s| s.as_str())
     }
 
+    /// `--key` as a `usize`, or `default` when absent.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, BsfError> {
         match self.get(key) {
             None => Ok(default),
@@ -67,6 +71,7 @@ impl ArgMap {
         }
     }
 
+    /// `--key` as a `u64`, or `default` when absent.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, BsfError> {
         match self.get(key) {
             None => Ok(default),
@@ -74,6 +79,7 @@ impl ArgMap {
         }
     }
 
+    /// `--key` as an `f64`, or `default` when absent.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, BsfError> {
         match self.get(key) {
             None => Ok(default),
@@ -81,10 +87,12 @@ impl ArgMap {
         }
     }
 
+    /// `--key` as a string, or `default` when absent.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// True when `--key` was given as a bare flag (or true/1/yes).
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }

@@ -108,6 +108,7 @@ pub struct FaultScript {
 }
 
 impl FaultScript {
+    /// Empty plan: no kills, no heals.
     pub fn new() -> Self {
         Self::default()
     }
@@ -155,6 +156,7 @@ pub struct FlakyTransport<C: Communicator> {
 }
 
 impl<C: Communicator> FlakyTransport<C> {
+    /// Wrap `inner` (the master's endpoint) under `script`.
     pub fn new(inner: C, script: FaultScript) -> Self {
         Self { inner, script }
     }
@@ -270,6 +272,7 @@ pub struct FlakyThreadedEngine {
 }
 
 impl FlakyThreadedEngine {
+    /// Threaded engine that applies `script` to the master endpoint.
     pub fn new(script: FaultScript) -> Self {
         Self { script }
     }
@@ -307,6 +310,7 @@ pub struct DieAfterFolds<C: Communicator> {
 }
 
 impl<C: Communicator> DieAfterFolds<C> {
+    /// Let `budget` folds through `inner`, then die.
     pub fn new(inner: C, budget: usize) -> Self {
         Self { inner, remaining: Mutex::new(budget) }
     }

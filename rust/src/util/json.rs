@@ -13,10 +13,15 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (integers round-trip exactly up to 2^53).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Insertion-ordered (not sorted): stable, diff-friendly output.
     Obj(Vec<(String, Json)>),
@@ -31,6 +36,7 @@ impl Json {
         }
     }
 
+    /// The number inside a `Num`, else `None`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(v) => Some(*v),
@@ -38,6 +44,7 @@ impl Json {
         }
     }
 
+    /// A `Num` as an exact non-negative integer, else `None`.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= 2f64.powi(53) => {
@@ -47,6 +54,7 @@ impl Json {
         }
     }
 
+    /// The string inside a `Str`, else `None`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s.as_str()),
@@ -54,6 +62,7 @@ impl Json {
         }
     }
 
+    /// The bool inside a `Bool`, else `None`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -61,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The items inside an `Arr`, else `None`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(items) => Some(items.as_slice()),

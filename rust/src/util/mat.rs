@@ -10,16 +10,21 @@ use crate::util::rng::SplitMix64;
 /// Dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, `rows * cols` long.
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Build element-wise from `f(i, j)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
         let mut m = Self::zeros(rows, cols);
         for i in 0..rows {
@@ -30,21 +35,25 @@ impl Mat {
         m
     }
 
+    /// Identity matrix.
     pub fn eye(n: usize) -> Self {
         Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
     #[inline]
+    /// Element `(i, j)`.
     pub fn at(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Mutable element `(i, j)`.
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
         &mut self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// i-th row as a contiguous slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }

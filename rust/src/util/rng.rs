@@ -14,11 +14,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seeded PRNG (same seed → same stream).
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;

@@ -35,6 +35,7 @@ pub struct MasterSummary {
     /// `Codec` encoding of the final approximation — byte-for-byte
     /// comparable across schedules (the determinism invariant).
     pub param_bytes: Vec<u8>,
+    /// Iterations the master ran.
     pub iterations: usize,
     /// Physical ranks lost mid-run (fault-injection schedules).
     pub losses: Vec<usize>,
@@ -42,6 +43,7 @@ pub struct MasterSummary {
 
 /// Everything one explored schedule observed.
 pub struct ScheduleResult<Param> {
+    /// The raw drive outcome (schedule, outcome, stats).
     pub drive: DriveResult,
     /// The master's verdict; an error carries the inter-iteration
     /// checkpoint (what `RestartFromCheckpoint` would resume from).
@@ -66,6 +68,7 @@ pub struct DuplicateFold<C: Communicator> {
 }
 
 impl<C: Communicator> DuplicateFold<C> {
+    /// Wrap worker 0's endpoint with the seeded duplicate-fold bug.
     pub fn new(inner: C) -> Self {
         Self { inner, fired: AtomicBool::new(false) }
     }
@@ -242,6 +245,7 @@ impl Default for Dfs {
 }
 
 impl Dfs {
+    /// Fresh DFS starting at the all-defaults schedule.
     pub fn new() -> Self {
         Self { frontier: Some(Vec::new()) }
     }

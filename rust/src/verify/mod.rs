@@ -46,6 +46,7 @@ const MAX_REPORTED: usize = 40;
 /// Optional seeded bug, to prove the checker catches what it claims to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mutation {
+    /// No seeded bug: the real protocol, expected to pass.
     None,
     /// Worker 0 sends its first fold twice (the PR 5 bug class).
     DuplicateFold,
@@ -65,6 +66,7 @@ pub struct VerifyConfig {
     pub max_schedules: usize,
     /// Also explore fault-injection schedules under every policy.
     pub faults: bool,
+    /// Seeded bug to inject (sanity check of the checker itself).
     pub mutation: Mutation,
 }
 
@@ -83,6 +85,7 @@ impl Default for VerifyConfig {
 /// What `run_verify` explored and what it found.
 #[derive(Debug, Clone)]
 pub struct VerifyReport {
+    /// Worker count K the worlds were built with.
     pub workers: usize,
     /// Iterations of the canonical (reference) schedule.
     pub reference_iterations: usize,
@@ -93,7 +96,9 @@ pub struct VerifyReport {
     /// Losses actually injected, per policy (each must be ≥ 1 for the
     /// fault legs to have been exercised).
     pub abort_losses: usize,
+    /// Losses injected under the redistribute policy.
     pub redistribute_losses: usize,
+    /// Losses injected under the restart policy.
     pub restart_losses: usize,
     /// Exploration hit `max_schedules` before exhausting the tree.
     pub truncated: bool,
@@ -105,10 +110,12 @@ pub struct VerifyReport {
 }
 
 impl VerifyReport {
+    /// Total schedules explored (base + fault).
     pub fn schedules(&self) -> usize {
         self.base_schedules + self.fault_schedules
     }
 
+    /// True when no violations were found.
     pub fn ok(&self) -> bool {
         self.violations.is_empty()
     }

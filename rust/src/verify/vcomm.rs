@@ -60,7 +60,9 @@ const POLL: Duration = Duration::from_millis(25);
 /// first-choice (`0`) defaults to enumerate schedules depth-first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Choice {
+    /// Index of the alternative taken.
     pub chosen: usize,
+    /// How many alternatives were available at this point.
     pub arity: usize,
 }
 
@@ -69,7 +71,9 @@ pub struct Choice {
 /// plan reports `fault_fired == false`).
 #[derive(Debug, Clone, Copy)]
 pub struct FaultPlan {
+    /// Rank to kill.
     pub victim: usize,
+    /// Order round (0-based) at which the kill fires.
     pub at_round: usize,
 }
 
@@ -87,6 +91,7 @@ pub enum SchedOutcome {
 /// Everything one `drive` observed.
 #[derive(Debug, Clone)]
 pub struct DriveResult {
+    /// How the schedule terminated.
     pub outcome: SchedOutcome,
     /// The decision sequence actually taken (replay it to reproduce).
     pub trace: Vec<Choice>,

@@ -1,0 +1,190 @@
+//! Integration: the multi-tenant scheduler over one persistent
+//! OS-process fleet (`bsf serve`'s machinery, driven in-process) —
+//! concurrent jobs split the fleet, results stay bit-identical to solo
+//! runs, worker pids prove process reuse across jobs, and the HTTP
+//! control plane round-trips submissions end to end.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bsf::metrics::control::ControlServer;
+use bsf::metrics::exporter::{http_get, http_post};
+use bsf::metrics::telemetry::RunTelemetry;
+use bsf::problems::jacobi::JacobiProblem;
+use bsf::skeleton::{Cluster, ControlApi, JobContract, JobStatus, Scheduler};
+use bsf::util::json::Json;
+use bsf::{Bsf, BsfConfig, ThreadedEngine};
+
+const BSF_BIN: &str = env!("CARGO_BIN_EXE_bsf");
+const N: usize = 24;
+
+fn worker_argv() -> Vec<String> {
+    [
+        "worker", "--problem", "jacobi", "--n", &N.to_string(), "--seed", "7",
+        "--eps", "1e-12",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+fn jacobi() -> JacobiProblem {
+    JacobiProblem::random(N, 1e-12, 7).0
+}
+
+/// What a solo `bsf run --workers K` of the same instance produces (all
+/// engines are bit-identical at equal K, so the threaded engine is a
+/// valid stand-in for a K-worker cluster run).
+fn solo_reference(k: usize) -> (String, usize) {
+    let r = Bsf::new(jacobi()).workers(k).engine(ThreadedEngine).run().unwrap();
+    (format!("{:?}", r.param), r.iterations)
+}
+
+#[test]
+fn concurrent_jobs_split_a_process_fleet_bit_identically() {
+    let cluster = Cluster::spawn(4, worker_argv())
+        .program(BSF_BIN)
+        .start(&jacobi())
+        .unwrap();
+    let sched = Arc::new(
+        Scheduler::new(
+            cluster.pool(),
+            Arc::new(jacobi()),
+            "jacobi",
+            BsfConfig::with_workers(4),
+        )
+        .describe_with(|x| format!("{x:?}")),
+    );
+
+    // Queue two half-fleet jobs while paused so they dispatch together.
+    sched.pause();
+    let a = sched.submit(JobContract { workers: 2, ..Default::default() }).unwrap();
+    let b = sched.submit(JobContract { workers: 2, ..Default::default() }).unwrap();
+    sched.resume();
+    assert!(sched.wait_idle(Duration::from_secs(120)), "jobs must finish");
+
+    let (want, want_iters) = solo_reference(2);
+    let ja = sched.job(a).unwrap();
+    let jb = sched.job(b).unwrap();
+    let mut pids = BTreeSet::new();
+    for j in [&ja, &jb] {
+        assert_eq!(j.status, JobStatus::Done, "{:?}", j.error);
+        assert_eq!(j.iterations, want_iters, "scheduled == solo iteration count");
+        assert_eq!(j.result.as_deref(), Some(want.as_str()), "bit-identical result");
+        assert_eq!(j.granted.len(), 2);
+        assert_eq!(j.pids.len(), 2);
+        for &pid in &j.pids {
+            assert_ne!(pid, 0);
+            assert_ne!(pid, std::process::id() as u64, "real worker processes");
+            pids.insert(pid);
+        }
+    }
+    // Disjoint halves of one fleet: 4 distinct ranks, 4 distinct pids.
+    let ranks: BTreeSet<usize> = ja.granted.iter().chain(&jb.granted).copied().collect();
+    assert_eq!(ranks, (0..4).collect::<BTreeSet<_>>());
+    assert_eq!(pids.len(), 4, "two jobs ran on four distinct worker processes");
+
+    // Round two reuses the same OS processes — the amortization (and
+    // multi-tenancy) witness: one fleet, many jobs, zero respawns.
+    let (want4, want4_iters) = solo_reference(4);
+    let c = sched.submit(JobContract { workers: 4, ..Default::default() }).unwrap();
+    assert!(sched.wait_idle(Duration::from_secs(120)));
+    let jc = sched.job(c).unwrap();
+    assert_eq!(jc.status, JobStatus::Done, "{:?}", jc.error);
+    assert_eq!(jc.iterations, want4_iters);
+    assert_eq!(jc.result.as_deref(), Some(want4.as_str()));
+    let again: BTreeSet<u64> = jc.pids.iter().copied().collect();
+    assert_eq!(again, pids, "the second round must reuse the same worker processes");
+
+    assert!(sched.request_shutdown(), "idle after drain");
+    cluster.shutdown().unwrap();
+}
+
+#[test]
+fn control_endpoint_drives_a_real_fleet_end_to_end() {
+    const T: Duration = Duration::from_secs(5);
+    let cluster = Cluster::spawn(2, worker_argv())
+        .program(BSF_BIN)
+        .start(&jacobi())
+        .unwrap();
+    let sink = Arc::new(RunTelemetry::new());
+    let sched = Arc::new(
+        Scheduler::new(
+            cluster.pool(),
+            Arc::new(jacobi()),
+            "jacobi",
+            BsfConfig::with_workers(2),
+        )
+        .describe_with(|x| format!("{x:?}"))
+        .telemetry(Arc::clone(&sink)),
+    );
+    let server = ControlServer::bind(
+        "127.0.0.1:0",
+        Arc::new(Arc::clone(&sched)) as Arc<dyn ControlApi>,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    // A submission for the wrong problem is rejected with the server's
+    // error text (one fleet serves one problem).
+    let err = http_post(&addr, "/jobs", "{\"problem\": \"lpp\"}", T).unwrap_err();
+    assert!(err.to_string().contains("jacobi"), "{err}");
+
+    // `workers: "auto"` with no cost model takes the whole free fleet.
+    let resp = http_post(
+        &addr,
+        "/jobs",
+        "{\"problem\": \"jacobi\", \"workers\": \"auto\"}",
+        T,
+    )
+    .unwrap();
+    let id = Json::parse(&resp).unwrap().get("id").and_then(Json::as_u64).unwrap();
+
+    // Poll GET /jobs until the job is terminal — exactly what
+    // `bsf submit --wait` does.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let (status, result, iterations) = loop {
+        assert!(Instant::now() < deadline, "job did not finish in time");
+        let body = http_get(&addr, "/jobs", T).unwrap();
+        let doc = Json::parse(&body).unwrap();
+        let rows = doc.get("jobs").and_then(Json::as_arr).expect("jobs array");
+        let row = rows
+            .iter()
+            .find(|r| r.get("id").and_then(Json::as_u64) == Some(id))
+            .expect("submitted job row");
+        let status = row.get("status").and_then(Json::as_str).unwrap().to_string();
+        if status == "queued" || status == "running" {
+            std::thread::sleep(Duration::from_millis(100));
+            continue;
+        }
+        break (
+            status,
+            row.get("result").and_then(Json::as_str).map(str::to_string),
+            row.get("iterations").and_then(Json::as_u64).unwrap_or(0) as usize,
+        );
+    };
+    let (want, want_iters) = solo_reference(2);
+    assert_eq!(status, "done");
+    assert_eq!(result.as_deref(), Some(want.as_str()), "HTTP result == solo result");
+    assert_eq!(iterations, want_iters);
+
+    // The metrics document grew the additive scheduler keys the CI
+    // smoke job curls for, and the job lifecycle is on the event stream.
+    let m = Json::parse(&http_get(&addr, "/metrics", T).unwrap()).unwrap();
+    assert!(m.get("queue_depth").is_some(), "metrics carry queue_depth");
+    assert_eq!(m.get("jobs").and_then(Json::as_arr).map(|j| j.len()), Some(1));
+    let events = http_get(&addr, "/events", T).unwrap();
+    assert!(events.contains("job_submitted"), "{events}");
+    assert!(events.contains("job_started"), "{events}");
+    assert!(events.contains("job_ended"), "{events}");
+
+    // Drain over HTTP: no further submissions, then tear down.
+    let resp = http_post(&addr, "/shutdown", "", T).unwrap();
+    assert!(resp.contains("idle") || resp.contains("draining"), "{resp}");
+    let err = http_post(&addr, "/jobs", "{\"problem\": \"jacobi\"}", T).unwrap_err();
+    assert!(err.to_string().contains("draining"), "{err}");
+    assert!(sched.wait_idle(Duration::from_secs(10)));
+    server.shutdown();
+    cluster.shutdown().unwrap();
+}

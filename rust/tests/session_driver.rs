@@ -451,11 +451,13 @@ fn cluster_is_busy_while_a_run_is_active_and_shuts_down_cleanly() {
     let mut active = Bsf::new(p1).workers(1).engine(cluster.engine()).iterate().unwrap();
     active.step().unwrap();
 
-    // One run at a time: a second launch is a typed config error.
+    // One run at a time: a second launch is the typed busy error,
+    // carrying how many jobs hold the fleet and pointing at `bsf serve`
+    // + `bsf submit` as the non-racing alternative.
     let (p2, _) = JacobiProblem::random(n, 1e-12, 8);
     let err = Bsf::new(p2).workers(1).engine(cluster.engine()).run().unwrap_err();
-    assert!(matches!(err, BsfError::Config(_)), "{err}");
-    assert!(err.to_string().contains("busy"), "{err}");
+    assert!(matches!(err, BsfError::ClusterBusy { active_jobs: 1 }), "{err}");
+    assert!(err.to_string().contains("bsf serve"), "{err}");
 
     // Finishing the active run frees the pool for the next one.
     let r1 = active.run_to_end().unwrap();
