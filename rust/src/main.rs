@@ -44,7 +44,7 @@
 //! missing.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use bsf::bench::harness as bench_harness;
 use bsf::bench::sweep::{print_sweep, speedup_sweep};
@@ -163,7 +163,7 @@ options by subcommand:
   submit (submit one job to a serving fleet):
     <problem>          must equal the problem the fleet serves
     --control A        the fleet's control endpoint (required)
-    --workers N|auto   lease size; auto asks the fleet's calibrated cost
+    --workers N|auto   lease size (N >= 1); auto asks the fleet's calibrated cost
                        model for the scalability-boundary K, clamped to
                        free capacity (default: auto)
     --priority P       higher runs first, FIFO within a level (default 0)
@@ -173,6 +173,8 @@ options by subcommand:
                        applies; the lower one wins)
     --wait             poll until the job ends and print the same `done:`
                        + `result:` lines a solo `bsf run` prints
+    --wait-timeout S   like --wait, but give up (typed error; the job
+                       keeps running on the fleet) after S seconds
   jobs (inspect a serving fleet):
     --control A        the fleet's control endpoint (required)
     --json             print the raw bsf-jobs/1 document instead of the
@@ -855,9 +857,21 @@ fn serve_problem<P: BsfProblem>(
     );
 
     // Serve until a control client POSTs /shutdown, then drain what is
-    // queued or running and tear the fleet down.
+    // queued or running and tear the fleet down. Between control polls
+    // the idle ranks are probed (FLEET_PING/PONG) so a silently dead
+    // worker is retired before it can be leased to a tenant — without
+    // the probe it would only be discovered when a lease's NEWRUN
+    // handshake fails, retiring healthy lease members with it.
+    const PROBE_INTERVAL: Duration = Duration::from_secs(2);
+    let mut last_probe = Instant::now();
     while !sched.is_draining() {
         std::thread::sleep(Duration::from_millis(100));
+        if last_probe.elapsed() >= PROBE_INTERVAL {
+            if let Err(e) = sched.probe_idle() {
+                eprintln!("serve: idle probe failed: {e}");
+            }
+            last_probe = Instant::now();
+        }
     }
     eprintln!("serve: draining ({} job(s) pending)", sched.queue_depth());
     while !sched.wait_idle(Duration::from_secs(60)) {}
@@ -889,11 +903,12 @@ fn control_addr(args: &ArgMap) -> Result<&str, BsfError> {
 }
 
 const SUBMIT_OPTS: &[&str] =
-    &["control", "workers", "k", "priority", "deadline", "max-iter", "wait"];
+    &["control", "workers", "k", "priority", "deadline", "max-iter", "wait", "wait-timeout"];
 
 /// `bsf submit`: POST one job contract to a serving fleet. With
-/// `--wait`, poll until the job is terminal and print the same `done:`
-/// + `result:` lines a solo `bsf run` would.
+/// `--wait` (or `--wait-timeout S`, which implies it), poll until the
+/// job is terminal and print the same `done:` + `result:` lines a solo
+/// `bsf run` would.
 fn cmd_submit(args: &ArgMap) -> Result<(), BsfError> {
     args.ensure_known(SUBMIT_OPTS)?;
     let addr = control_addr(args)?;
@@ -910,6 +925,11 @@ fn cmd_submit(args: &ArgMap) -> Result<(), BsfError> {
                     "--workers expects an integer or \"auto\", got {v:?}"
                 ))
             })?;
+            if k == 0 {
+                return Err(BsfError::usage(
+                    "--workers must be >= 1 (use \"auto\" for the cost-model K)",
+                ));
+            }
             fields.push(("workers", Json::Num(k as f64)));
         }
     }
@@ -929,6 +949,22 @@ fn cmd_submit(args: &ArgMap) -> Result<(), BsfError> {
     if args.get("max-iter").is_some() {
         fields.push(("max_iter", Json::Num(args.usize_or("max-iter", 0)? as f64)));
     }
+    let wait_timeout = match args.get("wait-timeout") {
+        None => None,
+        Some(_) => {
+            let secs = args.f64_or("wait-timeout", 0.0)?;
+            // try_from_secs_f64 rejects NaN/infinite/overflowing values.
+            match Duration::try_from_secs_f64(secs) {
+                Ok(d) if secs > 0.0 => Some(d),
+                _ => {
+                    return Err(BsfError::usage(format!(
+                        "--wait-timeout expects a finite positive number of \
+                         seconds, got {secs}"
+                    )))
+                }
+            }
+        }
+    };
     let body = Json::obj(fields).pretty();
     let resp = http_post(addr, "/jobs", &body, CONTROL_TIMEOUT)?;
     let doc = Json::parse(&resp)
@@ -937,16 +973,19 @@ fn cmd_submit(args: &ArgMap) -> Result<(), BsfError> {
         .get("id")
         .and_then(Json::as_u64)
         .ok_or_else(|| BsfError::transport(format!("submit response has no id: {resp}")))?;
-    if !args.flag("wait") {
+    if !args.flag("wait") && wait_timeout.is_none() {
         println!("submitted: job {id} ({name}) — poll with `bsf jobs --control {addr}`");
         return Ok(());
     }
-    wait_for_job(addr, id)
+    wait_for_job(addr, id, wait_timeout)
 }
 
-/// Poll `GET /jobs` until job `id` is terminal. The printed `result:`
-/// line is the byte-compare artifact for scheduled-vs-solo runs.
-fn wait_for_job(addr: &str, id: u64) -> Result<(), BsfError> {
+/// Poll `GET /jobs` until job `id` is terminal, or `timeout` (when
+/// given) passes — a wedged fleet must not hang `bsf submit --wait`
+/// forever. The printed `result:` line is the byte-compare artifact
+/// for scheduled-vs-solo runs.
+fn wait_for_job(addr: &str, id: u64, timeout: Option<Duration>) -> Result<(), BsfError> {
+    let started = Instant::now();
     loop {
         let body = http_get(addr, "/jobs", CONTROL_TIMEOUT)?;
         let doc = Json::parse(&body)
@@ -981,7 +1020,20 @@ fn wait_for_job(addr: &str, id: u64) -> Result<(), BsfError> {
                     row.get("error").and_then(Json::as_str).unwrap_or("unknown error");
                 return Err(BsfError::config(format!("job {id} failed: {err}")));
             }
-            _ => std::thread::sleep(Duration::from_millis(200)),
+            status => {
+                if let Some(t) = timeout {
+                    if started.elapsed() >= t {
+                        return Err(BsfError::config(format!(
+                            "gave up on job {id} after {:.1}s (--wait-timeout): \
+                             still {status}; it keeps running on the fleet — \
+                             poll `bsf jobs --control {addr}` or cancel it with \
+                             `bsf jobs --control {addr} --cancel {id}`",
+                            t.as_secs_f64()
+                        )));
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
         }
     }
 }

@@ -108,7 +108,19 @@ fn error_body(e: &BsfError) -> String {
 
 fn handle_connection(mut stream: TcpStream, api: &dyn ControlApi) -> std::io::Result<()> {
     let req = read_request(&mut stream)?;
-    let (status, content_type, body) = route(&req, api);
+    // One malformed request must never take the control plane down: a
+    // panic anywhere in a handler becomes a 500 response, not a dead
+    // serving thread (which would leave the fleet unreachable — no
+    // submits, no cancels, no POST /shutdown).
+    let (status, content_type, body) =
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| route(&req, api))) {
+            Ok(resp) => resp,
+            Err(_) => (
+                "500 Internal Server Error",
+                "application/json",
+                "{\"error\": \"internal error handling control request\"}".to_string(),
+            ),
+        };
     write_response(&mut stream, status, content_type, &body)
 }
 

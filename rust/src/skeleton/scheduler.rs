@@ -312,29 +312,46 @@ impl WorkerPool {
     /// [`TAG_FLEET_PONG`] (worker pid). A member that cannot answer is
     /// retired — moved to the lost list, its process killed — before it
     /// could be leased to a tenant. Returns the number of live free
-    /// ranks. Must not run concurrently with a dispatch that could
-    /// lease the probed ranks (the [`Scheduler`] serializes both).
+    /// ranks.
+    ///
+    /// Safe to call concurrently with dispatch: the free set is taken
+    /// atomically for the duration of the probe (a lease request that
+    /// races with it simply waits, exactly as if the ranks were leased)
+    /// and the survivors are returned when the probe ends. Callers that
+    /// queue jobs should re-dispatch afterwards —
+    /// [`Scheduler::probe_idle`] does both.
     pub fn probe_idle(&self) -> Result<usize, BsfError> {
-        let free: Vec<usize> = self.state.lock().unwrap().free.clone();
+        let probing: Vec<usize> = {
+            let mut s = self.state.lock().unwrap();
+            if s.shut {
+                return Ok(0);
+            }
+            std::mem::take(&mut s.free)
+        };
+        let mut live = Vec::new();
         let mut dead = Vec::new();
-        for &w in &free {
+        for &w in &probing {
             let ok = self
                 .comm
                 .send(w, TAG_FLEET_PING, Vec::new())
                 .and_then(|()| self.comm.recv(w, TAG_FLEET_PONG))
                 .is_ok();
-            if !ok {
+            if ok {
+                live.push(w);
+            } else {
                 dead.push(w);
             }
         }
-        if !dead.is_empty() {
+        {
             let mut s = self.state.lock().unwrap();
-            s.free.retain(|r| !dead.contains(r));
+            s.free.extend_from_slice(&live);
+            s.free.sort_unstable();
             s.lost.extend_from_slice(&dead);
-            drop(s);
+        }
+        if !dead.is_empty() {
             self.children.lock().unwrap().kill_ranks(&dead);
         }
-        Ok(free.len() - dead.len())
+        Ok(live.len())
     }
 
     /// Tear the whole fleet down: broadcast the exit flag plus
@@ -772,6 +789,18 @@ impl<P: BsfProblem> Scheduler<P> {
         self.dispatch();
     }
 
+    /// Probe the fleet's idle ranks ([`WorkerPool::probe_idle`]) and
+    /// retire silently dead ones before they can be leased to a tenant,
+    /// then re-run dispatch — queued jobs the shrunk capacity can no
+    /// longer satisfy fail typed instead of wedging the queue. The
+    /// `bsf serve` loop calls this periodically between control polls.
+    /// Returns the number of live free ranks.
+    pub fn probe_idle(self: &Arc<Self>) -> Result<usize, BsfError> {
+        let live = self.pool.probe_idle()?;
+        self.dispatch();
+        Ok(live)
+    }
+
     /// Stop accepting submissions and let the queue drain; pair with
     /// [`wait_idle`](Self::wait_idle) then
     /// [`WorkerPool::shutdown`]. Returns true when already idle.
@@ -809,10 +838,52 @@ impl<P: BsfProblem> Scheduler<P> {
         }
     }
 
+    /// Fail queued jobs whose worker demand can no longer be met:
+    /// admission checked the contract against [`WorkerPool::usable_workers`]
+    /// at *submit* time, but losses while the job waits can shrink the
+    /// fleet below its demand — without this check such a job would
+    /// block the head of the queue forever (no backfill), starving
+    /// every job behind it and wedging the drain loop. `auto`
+    /// (`workers == 0`) contracts only fail when *no* worker is left.
+    fn fail_unsatisfiable(self: &Arc<Self>) {
+        let usable = self.pool.usable_workers();
+        let failed: Vec<u64> = {
+            let mut inner = self.inner.lock().unwrap();
+            let mut failed = Vec::new();
+            for j in inner.jobs.iter_mut() {
+                if j.status == JobStatus::Queued
+                    && (usable == 0 || j.contract.workers > usable)
+                {
+                    j.status = JobStatus::Failed;
+                    j.error = Some(format!(
+                        "contract requests {} worker(s) but the fleet shrank to \
+                         {usable} usable after worker losses — resubmit with a \
+                         smaller contract",
+                        j.contract.workers
+                    ));
+                    failed.push(j.id);
+                }
+            }
+            failed
+        };
+        if !failed.is_empty() {
+            if let Some(t) = &self.telemetry {
+                for &id in &failed {
+                    t.record_job_ended(id, "failed", 0, 0.0);
+                }
+            }
+            self.publish_stats();
+            self.idle.notify_all();
+        }
+    }
+
     /// Start every queued job the free capacity allows, in priority
     /// order (see the type docs for the no-backfill rule). Called after
-    /// every submit and every release; never blocks on a run.
+    /// every submit and every release; never blocks on a run. Queued
+    /// jobs the (possibly shrunk) fleet can never satisfy are failed
+    /// first so the head of the queue always makes progress.
     fn dispatch(self: &Arc<Self>) {
+        self.fail_unsatisfiable();
         loop {
             let Some((id, lease)) = self.try_dispatch_one() else { return };
             let ranks = lease.ranks.clone();
@@ -1034,8 +1105,12 @@ struct JobRun<Param> {
 /// regardless of the fleet's problem type.
 pub trait ControlApi: Send + Sync {
     /// Handle a `POST /jobs` body: `{"problem": str, "workers":
-    /// int|"auto", "priority": int, "deadline_secs": num, "max_iter":
-    /// int}` (all but `problem` optional). Returns `{"id", "status"}`.
+    /// int >= 1 | "auto", "priority": num, "deadline_secs": finite num
+    /// >= 0, "max_iter": int >= 1}` (all but `problem` optional).
+    /// Every field is validated here — raw HTTP clients bypass the CLI's
+    /// checks, and a malformed value must come back as a usage error,
+    /// never reach a panicking conversion on the serving thread.
+    /// Returns `{"id", "status"}`.
     fn submit_json(&self, req: &Json) -> Result<Json, BsfError>;
     /// The `bsf-jobs/1` document (`GET /jobs`).
     fn jobs_json(&self) -> Json;
@@ -1069,22 +1144,53 @@ impl<P: BsfProblem> ControlApi for Arc<Scheduler<P>> {
         let workers = match req.get("workers") {
             None => 0,
             Some(v) if v.as_str() == Some("auto") => 0,
-            Some(v) => v
-                .as_u64()
-                .ok_or_else(|| BsfError::usage("submit: \"workers\" must be an int or \"auto\""))?
-                as usize,
+            Some(v) => {
+                let k = v.as_u64().ok_or_else(|| {
+                    BsfError::usage("submit: \"workers\" must be an int or \"auto\"")
+                })? as usize;
+                // 0 is the internal auto sentinel in `JobContract`;
+                // an explicit 0 on the wire is rejected like
+                // `try_lease` rejects `k == 0`.
+                if k == 0 {
+                    return Err(BsfError::usage(
+                        "submit: \"workers\" must be >= 1 (or \"auto\")",
+                    ));
+                }
+                k
+            }
+        };
+        let deadline = match req.get("deadline_secs") {
+            None => None,
+            Some(v) => {
+                let secs = v.as_f64().ok_or_else(|| {
+                    BsfError::usage("submit: \"deadline_secs\" must be a number")
+                })?;
+                // try_from_secs_f64 rejects negative, NaN and
+                // overflowing values — from_secs_f64 would panic and
+                // take the control-plane serving thread down with it.
+                Some(Duration::try_from_secs_f64(secs).map_err(|_| {
+                    BsfError::usage(format!(
+                        "submit: \"deadline_secs\" must be a finite non-negative \
+                         number of seconds, got {secs}"
+                    ))
+                })?)
+            }
         };
         let contract = JobContract {
             workers,
-            priority: req.get("priority").and_then(|v| v.as_f64()).unwrap_or(0.0) as i64,
-            deadline: req
-                .get("deadline_secs")
-                .and_then(|v| v.as_f64())
-                .map(Duration::from_secs_f64),
-            max_iter: req
-                .get("max_iter")
-                .and_then(|v| v.as_u64())
-                .map(|n| n as usize),
+            priority: match req.get("priority") {
+                None => 0,
+                Some(v) => v.as_f64().ok_or_else(|| {
+                    BsfError::usage("submit: \"priority\" must be a number")
+                })? as i64,
+            },
+            deadline,
+            max_iter: match req.get("max_iter") {
+                None => None,
+                Some(v) => Some(v.as_u64().ok_or_else(|| {
+                    BsfError::usage("submit: \"max_iter\" must be a non-negative int")
+                })? as usize),
+            },
         };
         let id = self.submit(contract)?;
         Ok(Json::obj(vec![
@@ -1190,6 +1296,94 @@ mod tests {
         assert!(err.to_string().contains("max_iter"), "{err}");
         assert!(sched.jobs().is_empty(), "rejected submissions never enter the ledger");
         assert!(matches!(sched.cancel(99), Err(BsfError::Config(_))), "unknown id is typed");
+    }
+
+    #[test]
+    fn submit_json_rejects_malformed_wire_contracts() {
+        // Raw HTTP clients bypass the CLI's validation: every malformed
+        // field must come back typed, never panic the serving thread
+        // (a negative/huge deadline_secs used to reach the panicking
+        // Duration::from_secs_f64).
+        let mut eps = build_thread_transport(2);
+        let master = eps.pop().unwrap();
+        let _workers = eps; // rejected submissions never dispatch
+        let pool = Arc::new(WorkerPool::new(Arc::new(master), ChildSet::default(), None));
+        let (p, _) = JacobiProblem::random(8, 1e-6, 1);
+        let sched = Arc::new(Scheduler::new(
+            Arc::clone(&pool),
+            Arc::new(p),
+            "jacobi",
+            BsfConfig::with_workers(2),
+        ));
+        let body = |fields: Vec<(&str, Json)>| {
+            let mut all = vec![("problem", Json::Str("jacobi".into()))];
+            all.extend(fields);
+            Json::obj(all)
+        };
+        for (field, value, want) in [
+            ("deadline_secs", Json::Num(-1.0), "deadline_secs"),
+            ("deadline_secs", Json::Num(f64::MAX), "deadline_secs"),
+            ("deadline_secs", Json::Str("soon".into()), "deadline_secs"),
+            ("workers", Json::Num(0.0), "workers"),
+            ("workers", Json::Str("some".into()), "workers"),
+            ("workers", Json::Num(-2.0), "workers"),
+            ("priority", Json::Str("high".into()), "priority"),
+            ("max_iter", Json::Num(-3.0), "max_iter"),
+        ] {
+            let err = sched.submit_json(&body(vec![(field, value)])).unwrap_err();
+            assert!(matches!(err, BsfError::Usage(_)), "{field}: {err}");
+            assert!(err.to_string().contains(want), "{field}: {err}");
+        }
+        assert!(sched.jobs().is_empty(), "nothing malformed entered the ledger");
+    }
+
+    #[test]
+    fn queued_job_fails_when_the_fleet_shrinks_below_its_contract() {
+        let (pool, handles) = fleet(2, 8, 1e-6, 11);
+        let (p, _) = JacobiProblem::random(8, 1e-6, 11);
+        let sched = Arc::new(Scheduler::new(
+            Arc::clone(&pool),
+            Arc::new(p),
+            "jacobi",
+            BsfConfig::with_workers(2),
+        ));
+        sched.pause();
+        let id = sched.submit(JobContract { workers: 2, ..Default::default() }).unwrap();
+        // Rank 0 dies while the job is queued: lease it out-of-band and
+        // release it as lost, shrinking usable capacity to 1 — the
+        // queued 2-worker contract can now never be satisfied, and
+        // without re-validation it would wedge the head of the queue
+        // (and the drain loop) forever.
+        let ghost = pool.try_lease(999, 1).unwrap().unwrap();
+        pool.release(999, &[], &ghost.ranks);
+        assert_eq!(pool.usable_workers(), 1);
+        sched.resume();
+        assert!(sched.wait_idle(Duration::from_secs(30)), "queue made progress");
+        let j = sched.job(id).unwrap();
+        assert_eq!(j.status, JobStatus::Failed);
+        assert!(j.error.as_deref().unwrap_or("").contains("shrank"), "{:?}", j.error);
+        // the surviving worker still serves later tenants
+        let id2 = sched
+            .submit(JobContract { workers: 1, max_iter: Some(2), ..Default::default() })
+            .unwrap();
+        assert!(sched.wait_idle(Duration::from_secs(60)));
+        assert_eq!(sched.job(id2).unwrap().status, JobStatus::Done);
+        pool.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn probe_idle_returns_live_ranks_to_the_free_list() {
+        let (pool, handles) = fleet(2, 8, 1e-6, 3);
+        assert_eq!(pool.probe_idle().unwrap(), 2, "both idle workers answered");
+        assert_eq!(pool.free_workers(), 2, "live ranks go back to the free list");
+        assert!(pool.lost_workers().is_empty());
+        pool.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
     }
 
     #[test]
