@@ -37,7 +37,9 @@ use std::sync::Arc;
 use crate::bench::bench;
 use crate::error::BsfError;
 use crate::problems::jacobi::JacobiProblem;
+use crate::problems::kmeans::KMeansProblem;
 use crate::problems::montecarlo::MonteCarloProblem;
+use crate::problems::pagerank::PageRankProblem;
 use crate::skeleton::{
     Bsf, BsfConfig, BsfProblem, Cluster, ProcessEngine, RunReport, SerialEngine,
     ThreadedEngine,
@@ -148,6 +150,9 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
         // timed samples and reuses the same worker processes — the
         // wall-clock gap between the two rows is the per-run launch
         // cost a persistent cluster saves.
+        // The pagerank/kmeans rows exercise the variable-length sparse
+        // wire path (length-prefixed Vec ReduceElems) the fixed-size
+        // jacobi/montecarlo rows never touch.
         "quick" => Ok(vec![
             case("jacobi", "serial", 96, 1, 1, 0),
             case("jacobi", "threaded", 96, 2, 1, 0),
@@ -156,6 +161,10 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
             case("jacobi", "cluster", 96, 2, 2, 0),
             mc_case(case("montecarlo", "serial", 64, 1, 1, 2000)),
             mc_case(case("montecarlo", "threaded", 64, 2, 2, 2000)),
+            case("pagerank", "serial", 64, 1, 1, 0),
+            case("pagerank", "threaded", 64, 2, 2, 0),
+            case("kmeans", "serial", 64, 1, 1, 0),
+            case("kmeans", "threaded", 64, 2, 2, 0),
         ]),
         "full" => Ok(vec![
             case("jacobi", "serial", 384, 1, 1, 0),
@@ -168,6 +177,12 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
             mc_case(case("montecarlo", "serial", 128, 1, 1, 20_000)),
             mc_case(case("montecarlo", "threaded", 128, 2, 2, 20_000)),
             mc_case(case("montecarlo", "threaded", 128, 4, 2, 20_000)),
+            case("pagerank", "serial", 256, 1, 1, 0),
+            case("pagerank", "threaded", 256, 2, 2, 0),
+            case("pagerank", "threaded", 256, 4, 2, 0),
+            case("kmeans", "serial", 256, 1, 1, 0),
+            case("kmeans", "threaded", 256, 2, 2, 0),
+            case("kmeans", "threaded", 256, 4, 2, 0),
         ]),
         other => Err(BsfError::usage(format!("unknown bench mode {other:?} (quick|full)"))),
     }
@@ -187,6 +202,18 @@ pub fn run_case(case: &BenchCase, bsf_bin: Option<&Path>) -> Result<BenchRecord,
             // the same tolerance in its own mk_montecarlo.
             let problem =
                 Arc::new(MonteCarloProblem::new(case.n, case.samples.max(1), case.eps));
+            run_problem(case, problem, bsf_bin)
+        }
+        // Block/cluster counts derive from n exactly as in main.rs's
+        // mk_pagerank / mk_kmeans, so a worker argv built from the case
+        // reconstructs the same instance.
+        "pagerank" => {
+            let problem =
+                Arc::new(PageRankProblem::new(case.n, case.n.clamp(1, 16), case.eps, case.seed));
+            run_problem(case, problem, bsf_bin)
+        }
+        "kmeans" => {
+            let problem = Arc::new(KMeansProblem::new(case.n, 4, case.eps, case.seed));
             run_problem(case, problem, bsf_bin)
         }
         other => Err(BsfError::bench(format!("bench grid names unknown problem {other:?}"))),
@@ -391,6 +418,8 @@ impl BenchSuite {
             let problem = match str_field(item, "problem")?.as_str() {
                 "jacobi" => "jacobi",
                 "montecarlo" => "montecarlo",
+                "pagerank" => "pagerank",
+                "kmeans" => "kmeans",
                 other => {
                     return Err(BsfError::bench(format!("unknown problem {other:?} in record")))
                 }

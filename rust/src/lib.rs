@@ -87,7 +87,10 @@
 //! a [`skeleton::Scheduler`] multiplexes concurrent jobs over one
 //! shared [`skeleton::WorkerPool`] fleet, and
 //! [`metrics::control::ControlServer`] exposes it over plain HTTP (see
-//! docs/operations.md).
+//! docs/operations.md). The [`sweep`] layer drives that scheduler in
+//! batch: `bsf sweep` expands a seed grid into N independent jobs —
+//! embedded or against a remote fleet via [`sweep::HttpControl`] — and
+//! streams `bsf-sweep/1` JSONL (see docs/workloads.md).
 //!
 //! See README.md ("Session lifecycle") for run vs. iterate vs. resume
 //! and the migration table from the seed-era one-shot entry points
@@ -104,6 +107,7 @@ pub mod problems;
 pub mod runtime;
 pub mod simcluster;
 pub mod skeleton;
+pub mod sweep;
 pub mod transport;
 pub mod util;
 pub mod verify;
@@ -120,3 +124,4 @@ pub use skeleton::{
     SerialEngine, SimulatedEngine, StopPolicy, StopReason, ThreadedEngine,
     WorkerPool,
 };
+pub use sweep::{run_sweep, HttpControl, RunRecord, SweepSpec, SweepSummary};

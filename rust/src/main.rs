@@ -13,7 +13,10 @@
 //!                          announce a rank, drive Algorithm 2's worker
 //!                          loop (the distributed-mode child command)
 //! * `sim <problem>`     — shorthand for `run --engine sim` (virtual time)
-//! * `sweep <problem>`   — speedup curve over K: model vs simulation
+//! * `sweep <problem>`   — two modes: speedup curve over K (model vs
+//!                          simulation), or — with `--runs N` — a batch
+//!                          sweep expanding a seed grid into N independent
+//!                          scheduled jobs, streamed as `bsf-sweep/1` JSONL
 //! * `predict <problem>` — calibrate + print the BSF model parameters and
 //!                          the predicted scalability boundary
 //! * `verify`            — bounded model checking of the message protocol:
@@ -34,7 +37,8 @@
 //! * `artifacts`         — list the AOT XLA artifacts
 //!
 //! Problems: `jacobi`, `jacobi-map`, `cimmino`, `gravity`, `montecarlo`,
-//! `lpp`, `apex`. Common options: `--n`, `--k`, `--omp`, `--seed`,
+//! `pagerank`, `kmeans`, `sgd`, `lpp`, `apex`. Common options: `--n`,
+//! `--k`, `--omp`, `--seed`,
 //! `--eps`, `--profile infiniband|gigabit|ideal`,
 //! `--backend native|per-element|xla`.
 //!
@@ -58,18 +62,22 @@ use bsf::problems::cimmino::CimminoProblem;
 use bsf::problems::gravity::GravityProblem;
 use bsf::problems::jacobi::JacobiProblem;
 use bsf::problems::jacobi_map::JacobiMapProblem;
+use bsf::problems::kmeans::KMeansProblem;
 use bsf::problems::lpp::LppProblem;
 use bsf::problems::montecarlo::MonteCarloProblem;
+use bsf::problems::pagerank::PageRankProblem;
+use bsf::problems::sgd::SgdProblem;
 use bsf::runtime::backend::{XlaMapBackend, XlaMapSpec};
 use bsf::runtime::service::XlaService;
 use bsf::runtime::XlaRuntime;
 use bsf::skeleton::cluster::{run_persistent_worker, Cluster};
 use bsf::skeleton::process::run_process_worker;
 use bsf::skeleton::{
-    Bsf, BsfConfig, BsfProblem, ControlApi, FaultPolicy, FusedNativeBackend,
-    JobStatus, MapBackend, PerElementBackend, ProcessEngine, RunReport,
-    Scheduler, SerialEngine, SimulatedEngine, ThreadedEngine,
+    Bsf, BsfConfig, BsfProblem, Checkpoint, ControlApi, FaultPolicy,
+    FusedNativeBackend, JobStatus, MapBackend, PerElementBackend, ProcessEngine,
+    RunReport, Scheduler, SerialEngine, SimulatedEngine, ThreadedEngine,
 };
+use bsf::sweep::{run_sweep, HttpControl, SweepSpec};
 use bsf::util::cli::ArgMap;
 use bsf::util::faultsim::run_flaky_process_worker;
 use bsf::util::json::Json;
@@ -78,7 +86,8 @@ use bsf::verify::{run_verify, Mutation, VerifyConfig};
 const USAGE: &str = "\
 usage: bsf <run|worker|sim|sweep|predict|bench|verify|serve|submit|jobs|shutdown|top|artifacts> [problem] [options]
 
-problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | lpp | apex
+problems: jacobi | jacobi-map | cimmino | gravity | montecarlo | pagerank |
+          kmeans | sgd | lpp | apex
 
 options by subcommand:
   run / sim:
@@ -89,6 +98,10 @@ options by subcommand:
                    K workers x T threads is the hybrid two-level grid
                    (default 1; --omp is an alias)
     --seed S       RNG seed (default 7)
+    --run-seed S   start from the problem's seeded initial parameter
+                   (BsfProblem::seeded_parameter) instead of the default
+                   one — the solo twin of a scheduled job's seed field;
+                   `bsf sweep --runs N` results byte-compare against this
     --eps E        stop threshold (default 1e-12)
     --trace T      print intermediate results every T iterations
     --max-iter I   iteration cap (default 100000)
@@ -129,6 +142,9 @@ options by subcommand:
     --profile P    infiniband | gigabit | ideal    (sim)
     --steps S      leapfrog steps (gravity; default 50)
     --samples S    samples per block (montecarlo; default 10000)
+                   (pagerank/kmeans/sgd size off --n like the others:
+                   pagerank N nodes in min(N,16) degree-weighted blocks,
+                   kmeans N points x 4 clusters, sgd N samples)
   worker (one worker process of a distributed run; ranks 0..K-1,
           the master is rank K — the paper's BC_MpiRun convention):
     --connect A    master address (host:port), required
@@ -159,7 +175,8 @@ options by subcommand:
     --listen A         rendezvous with pre-started `bsf worker --persist`
                        processes on A instead of self-spawning them
     problem options (--n --seed --eps --steps --samples
-    --threads-per-worker --backend --heartbeat) as under run
+    --threads-per-worker --backend --heartbeat) as under run, plus the
+    --kill-rank/--kill-after-folds fault-injection smoke passthrough
   submit (submit one job to a serving fleet):
     <problem>          must equal the problem the fleet serves
     --control A        the fleet's control endpoint (required)
@@ -171,6 +188,8 @@ options by subcommand:
                        excluded)
     --max-iter I       iteration cap (the fleet template's cap still
                        applies; the lower one wins)
+    --seed S           start the job from the problem's seeded initial
+                       parameter (BsfProblem::seeded_parameter)
     --wait             poll until the job ends and print the same `done:`
                        + `result:` lines a solo `bsf run` prints
     --wait-timeout S   like --wait, but give up (typed error; the job
@@ -182,10 +201,26 @@ options by subcommand:
     --cancel ID        cancel a queued or running job instead of listing
   shutdown (drain a serving fleet and let `bsf serve` exit):
     --control A        the fleet's control endpoint (required)
-  sweep:
+  sweep (speedup curve, the default mode):
     --n N (default 512)  --k 1,2,4,...  --seed S  --profile P
     --max-iter I (default 30)  --steps S (gravity; default: max-iter)
     --samples S (montecarlo)
+  sweep --runs N (batch mode: N independent seeded runs over one fleet,
+                  streamed as bsf-sweep/1 JSONL; see docs/workloads.md):
+    --runs N           how many independent runs (required for this mode)
+    --seed-start S     seed of run 0 (default 1)
+    --seed-stride D    seed increment between runs (default 1)
+    --workers-per-run k|auto
+                       lease size per run (default auto = the fleet's
+                       calibrated cost-model K, clamped to free capacity)
+    --out FILE         write the JSONL stream to FILE (default: stdout)
+    --control A        drive a remote `bsf serve` fleet instead of
+                       spawning an embedded one; without it the sweep
+                       spins its own fleet (problem options as under
+                       serve apply: --n --k --seed --eps ... --listen)
+    --max-iter I       per-run iteration cap
+    --timeout S        whole-sweep budget: on expiry outstanding runs are
+                       cancelled and recorded as failed
   predict:
     --n N (default 512)  --seed S  --profile P
     --steps S (gravity; default 10)  --samples S (montecarlo)
@@ -209,8 +244,8 @@ options by subcommand:
     --once             print one snapshot and exit (no screen clearing)
   verify (bounded model checking of the message protocol; see README
           'Verification'):
-    --problem P        jacobi | cimmino  (default jacobi; the model
-                       problem must be small and split-invariant)
+    --problem P        jacobi | cimmino | pagerank  (default jacobi; the
+                       model problem must be small and split-invariant)
     --workers K        model worker count (default 2; the schedule
                        space is exponential in K — keep it small)
     --n N              model problem size (default 12)
@@ -407,6 +442,20 @@ fn mk_montecarlo(c: &Common) -> MonteCarloProblem {
     MonteCarloProblem::new(c.n, c.samples, 1e-3)
 }
 
+fn mk_pagerank(c: &Common) -> PageRankProblem {
+    // The reduce list carries one sparse block per element; cap the
+    // block count at 16 so small graphs still split sensibly.
+    PageRankProblem::new(c.n, c.n.clamp(1, 16), c.eps, c.seed)
+}
+
+fn mk_kmeans(c: &Common) -> KMeansProblem {
+    KMeansProblem::new(c.n, 4, c.eps, c.seed)
+}
+
+fn mk_sgd(c: &Common) -> SgdProblem {
+    SgdProblem::new(c.n, c.eps, c.seed)
+}
+
 fn mk_lpp(c: &Common) -> LppProblem {
     LppProblem::random(4 * c.n, c.n, c.seed)
 }
@@ -490,6 +539,20 @@ fn attach_native_only<P: BsfProblem>(b: Bsf<P>, backend: BackendOpt, name: &str)
     }
 }
 
+/// Result describers shared by `cmd_run`, `cmd_serve` and the embedded
+/// sweep: the same closure renders a solo run's `result:` line, a
+/// scheduled job's `result` field and a sweep record's `result` field,
+/// so the three are byte-comparable (the sweep-smoke CI job does exactly
+/// that).
+fn describe_montecarlo(t: &(u64, u64, u64)) -> String {
+    format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.2)
+}
+
+fn describe_pagerank(x: &[f64]) -> String {
+    let (node, score) = PageRankProblem::top(x);
+    format!("top node {node} (rank {score:.6}); {}", head(x))
+}
+
 fn head(xs: &[f64]) -> String {
     let k = xs.len().min(4);
     let parts: Vec<String> = xs[..k].iter().map(|v| format!("{v:.6}")).collect();
@@ -530,9 +593,9 @@ fn finish<Param>(
 }
 
 const RUN_OPTS: &[&str] = &[
-    "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
-    "max-iter", "deadline", "engine", "backend", "profile", "steps", "samples",
-    "listen", "fault", "max-losses", "kill-rank", "kill-after-folds",
+    "n", "k", "workers", "omp", "threads-per-worker", "seed", "run-seed", "eps",
+    "trace", "max-iter", "deadline", "engine", "backend", "profile", "steps",
+    "samples", "listen", "fault", "max-losses", "kill-rank", "kill-after-folds",
     "metrics-addr", "metrics-interval", "events", "heartbeat",
 ];
 
@@ -555,19 +618,37 @@ fn run_problem<P: BsfProblem>(
         let cal = calibrate(&p, profile_from(args)?, 3);
         t.set_cost_model(&cal.params, c.cfg.workers.max(1));
     }
+    // `--run-seed S` starts from the problem's seeded initial parameter
+    // via the iteration-0 checkpoint path — the solo twin of a scheduled
+    // job's `seed` field, so sweep results byte-compare against it.
+    let start = match args.get("run-seed") {
+        None => None,
+        Some(_) => {
+            let s = args.u64_or("run-seed", 0)?;
+            Some(Checkpoint { param: p.seeded_parameter(s), iter: 0, job: 0 })
+        }
+    };
     if matches!(engine, EngineOpt::Cluster) {
         let spec = match args.get("listen") {
             Some(addr) => Cluster::connect(c.cfg.workers, addr),
             None => Cluster::spawn(c.cfg.workers, worker_args(name, c, args)),
         };
         let cluster = spec.start(&p)?;
-        let session = attach(Bsf::new(p).config(c.cfg.clone()).engine(cluster.engine()));
+        let mut session =
+            attach(Bsf::new(p).config(c.cfg.clone()).engine(cluster.engine()));
+        if let Some(ck) = start {
+            session = session.resume(ck);
+        }
         let report = session.run()?;
         cluster.shutdown()?;
         Ok(report)
     } else {
-        attach(apply_engine(Bsf::new(p).config(c.cfg.clone()), engine, args, name, c))
-            .run()
+        let mut session =
+            attach(apply_engine(Bsf::new(p).config(c.cfg.clone()), engine, args, name, c));
+        if let Some(ck) = start {
+            session = session.resume(ck);
+        }
+        session.run()
     }
 }
 
@@ -659,8 +740,32 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
             run_problem(mk_montecarlo(&c), engine, args, name, &c, |b| {
                 attach_native_only(b, backend, "montecarlo")
             })?,
-            |t| format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1),
+            describe_montecarlo,
         ),
+        "pagerank" => finish(
+            run_problem(mk_pagerank(&c), engine, args, name, &c, |b| {
+                attach_native_only(b, backend, "pagerank")
+            })?,
+            |x| describe_pagerank(x),
+        ),
+        "kmeans" => {
+            let probe = mk_kmeans(&c);
+            finish(
+                run_problem(mk_kmeans(&c), engine, args, name, &c, |b| {
+                    attach_native_only(b, backend, "kmeans")
+                })?,
+                move |x| format!("inertia {:.6}; {}", probe.inertia(x), head(x)),
+            )
+        }
+        "sgd" => {
+            let probe = mk_sgd(&c);
+            finish(
+                run_problem(mk_sgd(&c), engine, args, name, &c, |b| {
+                    attach_native_only(b, backend, "sgd")
+                })?,
+                move |p| format!("loss {:.6}; w = {}", probe.loss(p), head(&p.1)),
+            )
+        }
         "lpp" => finish(
             run_problem(mk_lpp(&c), engine, args, name, &c, |b| {
                 attach_native_only(b, backend, "lpp")
@@ -772,6 +877,9 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
         "montecarlo" => {
             go(&mk_montecarlo(&c), backend, connect, rank, &c.cfg, persist, die)
         }
+        "pagerank" => go(&mk_pagerank(&c), backend, connect, rank, &c.cfg, persist, die),
+        "kmeans" => go(&mk_kmeans(&c), backend, connect, rank, &c.cfg, persist, die),
+        "sgd" => go(&mk_sgd(&c), backend, connect, rank, &c.cfg, persist, die),
         "lpp" => go(&mk_lpp(&c), backend, connect, rank, &c.cfg, persist, die),
         "apex" => go(&mk_apex(&c), backend, connect, rank, &c.cfg, persist, die),
         other => Err(BsfError::usage(format!("unknown problem {other:?} (worker)"))),
@@ -781,7 +889,7 @@ fn cmd_worker(args: &ArgMap) -> Result<(), BsfError> {
 const SERVE_OPTS: &[&str] = &[
     "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
     "max-iter", "deadline", "backend", "profile", "steps", "samples", "listen",
-    "control", "heartbeat",
+    "control", "heartbeat", "kill-rank", "kill-after-folds",
 ];
 
 /// `bsf serve`: start a persistent fleet for one problem and multiplex
@@ -801,9 +909,24 @@ fn cmd_serve(args: &ArgMap) -> Result<(), BsfError> {
         "jacobi-map" => serve_problem(mk_jacobi_map(&c), args, name, &c, |x| head(x)),
         "cimmino" => serve_problem(mk_cimmino(&c), args, name, &c, |x| head(x)),
         "gravity" => serve_problem(mk_gravity(&c), args, name, &c, |x| head(x)),
-        "montecarlo" => serve_problem(mk_montecarlo(&c), args, name, &c, |t| {
-            format!("pi ≈ {:.6} ({} samples)", MonteCarloProblem::estimate(t), t.1)
-        }),
+        "montecarlo" => {
+            serve_problem(mk_montecarlo(&c), args, name, &c, describe_montecarlo)
+        }
+        "pagerank" => {
+            serve_problem(mk_pagerank(&c), args, name, &c, |x| describe_pagerank(x))
+        }
+        "kmeans" => {
+            let probe = mk_kmeans(&c);
+            serve_problem(mk_kmeans(&c), args, name, &c, move |x| {
+                format!("inertia {:.6}; {}", probe.inertia(x), head(x))
+            })
+        }
+        "sgd" => {
+            let probe = mk_sgd(&c);
+            serve_problem(mk_sgd(&c), args, name, &c, move |p| {
+                format!("loss {:.6}; w = {}", probe.loss(p), head(&p.1))
+            })
+        }
         "lpp" => serve_problem(mk_lpp(&c), args, name, &c, |x| head(x)),
         "apex" => serve_problem(mk_apex(&c), args, name, &c, |(x, _)| head(x)),
         other => Err(BsfError::usage(format!("unknown problem {other:?} (serve)"))),
@@ -902,8 +1025,10 @@ fn control_addr(args: &ArgMap) -> Result<&str, BsfError> {
     })
 }
 
-const SUBMIT_OPTS: &[&str] =
-    &["control", "workers", "k", "priority", "deadline", "max-iter", "wait", "wait-timeout"];
+const SUBMIT_OPTS: &[&str] = &[
+    "control", "workers", "k", "priority", "deadline", "max-iter", "seed", "wait",
+    "wait-timeout",
+];
 
 /// `bsf submit`: POST one job contract to a serving fleet. With
 /// `--wait` (or `--wait-timeout S`, which implies it), poll until the
@@ -948,6 +1073,9 @@ fn cmd_submit(args: &ArgMap) -> Result<(), BsfError> {
     }
     if args.get("max-iter").is_some() {
         fields.push(("max_iter", Json::Num(args.usize_or("max-iter", 0)? as f64)));
+    }
+    if args.get("seed").is_some() {
+        fields.push(("seed", Json::Num(args.u64_or("seed", 0)? as f64)));
     }
     let wait_timeout = match args.get("wait-timeout") {
         None => None,
@@ -1144,6 +1272,12 @@ fn cmd_shutdown(args: &ArgMap) -> Result<(), BsfError> {
 }
 
 fn cmd_sweep(args: &ArgMap) -> Result<(), BsfError> {
+    // `--runs N` selects the batch mode (N independent seeded jobs over
+    // one fleet, streamed as bsf-sweep/1 JSONL); without it this is the
+    // seed-era speedup-curve sweep over K.
+    if args.get("runs").is_some() {
+        return cmd_sweep_batch(args);
+    }
     args.ensure_known(&["n", "k", "seed", "profile", "max-iter", "samples", "steps"])?;
     let n = args.usize_or("n", 512)?;
     let seed = args.u64_or("seed", 7)?;
@@ -1188,6 +1322,252 @@ fn cmd_sweep(args: &ArgMap) -> Result<(), BsfError> {
     };
     print_sweep(&format!("sweep {name} n={n}"), &sweep);
     Ok(())
+}
+
+const SWEEP_BATCH_OPTS: &[&str] = &[
+    "runs", "seed-start", "seed-stride", "workers-per-run", "control", "out",
+    "timeout",
+    // Embedded-fleet options, as under serve (ignored with --control):
+    "n", "k", "workers", "omp", "threads-per-worker", "seed", "eps", "trace",
+    "max-iter", "deadline", "backend", "profile", "steps", "samples", "listen",
+    "heartbeat", "kill-rank", "kill-after-folds",
+];
+
+/// `bsf sweep <problem> --runs N`: expand the seed grid into N
+/// independent job contracts and race them over one fleet — a remote
+/// one (`--control`, via [`HttpControl`]) or an embedded one spun up
+/// for the sweep. Each finished run streams one `bsf-sweep/1` JSONL
+/// `run` row (to `--out FILE`, else stdout) in completion order; the
+/// final `summary` row aggregates, and individual run failures never
+/// abort the sweep.
+fn cmd_sweep_batch(args: &ArgMap) -> Result<(), BsfError> {
+    use std::io::Write as _;
+    args.ensure_known(SWEEP_BATCH_OPTS)?;
+    let name = args
+        .positional(0)
+        .ok_or_else(|| BsfError::usage("sweep --runs requires a problem name"))?;
+    let workers_per_run = match args.get("workers-per-run") {
+        None | Some("auto") => 0,
+        Some(v) => {
+            let k: usize = v.parse().map_err(|_| {
+                BsfError::usage(format!(
+                    "--workers-per-run expects an integer or \"auto\", got {v:?}"
+                ))
+            })?;
+            if k == 0 {
+                return Err(BsfError::usage(
+                    "--workers-per-run must be >= 1 (use \"auto\" for the \
+                     cost-model K)",
+                ));
+            }
+            k
+        }
+    };
+    let timeout = match args.get("timeout") {
+        None => None,
+        Some(_) => {
+            let secs = args.f64_or("timeout", 0.0)?;
+            match Duration::try_from_secs_f64(secs) {
+                Ok(d) if secs > 0.0 => Some(d),
+                _ => {
+                    return Err(BsfError::usage(format!(
+                        "--timeout expects a finite positive number of seconds, \
+                         got {secs}"
+                    )))
+                }
+            }
+        }
+    };
+    let spec = SweepSpec {
+        problem: name.to_string(),
+        runs: args.usize_or("runs", 1)?,
+        seed_start: args.u64_or("seed-start", 1)?,
+        seed_stride: args.u64_or("seed-stride", 1)?,
+        workers_per_run,
+        max_iter: match args.get("max-iter") {
+            None => None,
+            Some(_) => Some(args.usize_or("max-iter", 0)?),
+        },
+        timeout,
+    };
+
+    let mut sink: Box<dyn std::io::Write> = match args.get("out") {
+        Some(path) => {
+            let f = std::fs::File::create(path).map_err(|e| BsfError::Io {
+                path: std::path::PathBuf::from(path),
+                source: e,
+            })?;
+            Box::new(std::io::BufWriter::new(f))
+        }
+        None => Box::new(std::io::stdout()),
+    };
+    // `emit` can't return an error through run_sweep's FnMut surface, so
+    // the first write failure is parked here and re-raised after.
+    let mut io_err: Option<std::io::Error> = None;
+    let summary = {
+        let mut emit = |rec: &bsf::sweep::RunRecord| {
+            if io_err.is_some() {
+                return;
+            }
+            if let Err(e) = writeln!(sink, "{}", rec.to_json().compact()) {
+                io_err = Some(e);
+            }
+        };
+        if let Some(addr) = args.get("control") {
+            let api = HttpControl::new(addr);
+            run_sweep(&api, &spec, &mut emit)?
+        } else {
+            let c = common_from(args)?;
+            if c.cfg.workers == 0 {
+                return Err(BsfError::usage("sweep needs at least one worker"));
+            }
+            match name {
+                "jacobi" => {
+                    sweep_embedded(mk_jacobi(&c), args, name, &c, &spec, &mut emit, |x| {
+                        head(x)
+                    })?
+                }
+                "jacobi-map" => sweep_embedded(
+                    mk_jacobi_map(&c),
+                    args,
+                    name,
+                    &c,
+                    &spec,
+                    &mut emit,
+                    |x| head(x),
+                )?,
+                "cimmino" => {
+                    sweep_embedded(mk_cimmino(&c), args, name, &c, &spec, &mut emit, |x| {
+                        head(x)
+                    })?
+                }
+                "gravity" => {
+                    sweep_embedded(mk_gravity(&c), args, name, &c, &spec, &mut emit, |x| {
+                        head(x)
+                    })?
+                }
+                "montecarlo" => sweep_embedded(
+                    mk_montecarlo(&c),
+                    args,
+                    name,
+                    &c,
+                    &spec,
+                    &mut emit,
+                    describe_montecarlo,
+                )?,
+                "pagerank" => sweep_embedded(
+                    mk_pagerank(&c),
+                    args,
+                    name,
+                    &c,
+                    &spec,
+                    &mut emit,
+                    |x| describe_pagerank(x),
+                )?,
+                "kmeans" => {
+                    let probe = mk_kmeans(&c);
+                    sweep_embedded(
+                        mk_kmeans(&c),
+                        args,
+                        name,
+                        &c,
+                        &spec,
+                        &mut emit,
+                        move |x| format!("inertia {:.6}; {}", probe.inertia(x), head(x)),
+                    )?
+                }
+                "sgd" => {
+                    let probe = mk_sgd(&c);
+                    sweep_embedded(
+                        mk_sgd(&c),
+                        args,
+                        name,
+                        &c,
+                        &spec,
+                        &mut emit,
+                        move |p| format!("loss {:.6}; w = {}", probe.loss(p), head(&p.1)),
+                    )?
+                }
+                "lpp" => {
+                    sweep_embedded(mk_lpp(&c), args, name, &c, &spec, &mut emit, |x| {
+                        head(x)
+                    })?
+                }
+                "apex" => sweep_embedded(
+                    mk_apex(&c),
+                    args,
+                    name,
+                    &c,
+                    &spec,
+                    &mut emit,
+                    |(x, _)| head(x),
+                )?,
+                other => {
+                    return Err(BsfError::usage(format!(
+                        "unknown problem {other:?} (sweep)"
+                    )))
+                }
+            }
+        }
+    };
+    if let Err(e) =
+        writeln!(sink, "{}", summary.to_json().compact()).and_then(|()| sink.flush())
+    {
+        io_err = Some(e);
+    }
+    if let Some(e) = io_err {
+        return Err(BsfError::Io {
+            path: std::path::PathBuf::from(args.str_or("out", "stdout")),
+            source: e,
+        });
+    }
+    if let Some(path) = args.get("out") {
+        eprintln!("wrote {path}");
+    }
+    println!("done: {}", summary.digest());
+    Ok(())
+}
+
+/// The embedded half of `bsf sweep --runs`: spin up the same
+/// fleet + scheduler `bsf serve` would (minus the HTTP control server —
+/// the driver talks to the scheduler in-process through the same
+/// `ControlApi` trait), run the sweep, tear the fleet down.
+fn sweep_embedded<P: BsfProblem>(
+    p: P,
+    args: &ArgMap,
+    name: &str,
+    c: &Common,
+    spec: &SweepSpec,
+    emit: &mut dyn FnMut(&bsf::sweep::RunRecord),
+    describe: impl Fn(&P::Param) -> String + Send + Sync + 'static,
+) -> Result<bsf::sweep::SweepSummary, BsfError> {
+    // Calibrate first so `--workers-per-run auto` resolves to the cost
+    // model's scalability-boundary K, exactly as under `bsf serve`.
+    let cal = calibrate(&p, profile_from(args)?, 3);
+    let sink = Arc::new(RunTelemetry::new());
+    sink.run_start("cluster", c.cfg.workers);
+    sink.set_cost_model(&cal.params, c.cfg.workers.max(1));
+
+    let cluster_spec = match args.get("listen") {
+        Some(addr) => Cluster::connect(c.cfg.workers, addr),
+        None => Cluster::spawn(c.cfg.workers, worker_args(name, c, args)),
+    };
+    let cluster = cluster_spec.start(&p)?;
+    let sched = Arc::new(
+        Scheduler::new(cluster.pool(), Arc::new(p), name, c.cfg.clone())
+            .describe_with(describe)
+            .cost_model(cal.params)
+            .telemetry(sink),
+    );
+    eprintln!(
+        "sweep: embedded {name} fleet of {} worker(s), {} run(s)",
+        c.cfg.workers, spec.runs
+    );
+    let summary = run_sweep(&sched, spec, emit);
+    // run_sweep only returns once every submitted job is terminal, so
+    // the fleet is idle here whichever way the sweep went.
+    cluster.shutdown()?;
+    summary
 }
 
 fn cmd_predict(args: &ArgMap) -> Result<(), BsfError> {
@@ -1339,6 +1719,11 @@ fn cmd_verify(args: &ArgMap) -> Result<(), BsfError> {
     let report = match name {
         "jacobi" => run_verify(|| JacobiProblem::random(n, eps, seed).0, &vcfg),
         "cimmino" => run_verify(|| CimminoProblem::random(n, n, eps, seed).0, &vcfg),
+        // A small graph in a handful of degree-weighted blocks: the
+        // variable-length sparse wire path under every schedule.
+        "pagerank" => {
+            run_verify(|| PageRankProblem::new(n, n.clamp(1, 4), eps, seed), &vcfg)
+        }
         other => {
             return Err(BsfError::usage(format!("unknown problem {other:?} (verify)")))
         }

@@ -1,0 +1,241 @@
+//! k-means clustering on the skeleton (Lloyd's algorithm).
+//!
+//! The classic iterative-ML shape for Map/Reduce over lists: Map
+//! assigns one point to its nearest centroid and emits per-centroid
+//! partial sums + counts; ⊕ adds them; `process_results` recomputes the
+//! centroids and stops when the largest centroid shift falls below
+//! `eps`. The reduce element is a length-`k` vector of 4-tuples —
+//! another variable-length (length-prefixed) wire payload.
+//!
+//! Bit-identity: partial sums are fixed-point `i64`
+//! ([`crate::util::fixed`]) because every map element contributes to
+//! the *same* k accumulator rows — overlapping support means f64 adds
+//! would depend on the fold shape. Each point's coordinates are rounded
+//! to fixed-point once; all grouping after that is exact integer
+//! arithmetic. Ties in the nearest-centroid test break to the lowest
+//! index (strict `<`), so assignment is order-free too.
+//!
+//! Seeded runs are the textbook k-means use case: `seeded_parameter`
+//! draws a different set of initial centroids per seed (restarts), and
+//! `bsf sweep kmeans --runs N` races them across a fleet.
+
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::util::fixed::{from_fixed, to_fixed};
+use crate::util::rng::SplitMix64;
+
+/// Spatial dimension (fixed: 3-D points).
+pub const DIM: usize = 3;
+
+/// k-means over a deterministically generated 3-D point cloud.
+pub struct KMeansProblem {
+    /// Point count (the map-list length).
+    pub n: usize,
+    /// Cluster count.
+    pub k: usize,
+    /// Convergence threshold on the max centroid shift.
+    pub eps: f64,
+    /// Iteration cap.
+    pub max_iter: usize,
+    /// Data-generation seed (also keys the default centroid init).
+    pub seed: u64,
+    points: Vec<[f64; DIM]>,
+}
+
+impl KMeansProblem {
+    /// Generate `n` points scattered around `k` well-separated true
+    /// centers in `[0, 10)^3`.
+    pub fn new(n: usize, k: usize, eps: f64, seed: u64) -> Self {
+        assert!(k > 0 && n >= k, "need n >= k >= 1");
+        let mut rng = SplitMix64::new(seed ^ 0x6B6D65616E73); // "kmeans"
+        let centers: Vec<[f64; DIM]> = (0..k)
+            .map(|_| [rng.f64() * 10.0, rng.f64() * 10.0, rng.f64() * 10.0])
+            .collect();
+        let points = (0..n)
+            .map(|_| {
+                let c = centers[(rng.next() % k as u64) as usize];
+                [
+                    c[0] + rng.f64() - 0.5,
+                    c[1] + rng.f64() - 0.5,
+                    c[2] + rng.f64() - 0.5,
+                ]
+            })
+            .collect();
+        Self { n, k, eps, max_iter: 10_000, seed, points }
+    }
+
+    /// Index of the centroid nearest to `p` (ties → lowest index).
+    fn nearest(&self, p: &[f64; DIM], centroids: &[f64]) -> usize {
+        let mut best = (0usize, f64::INFINITY);
+        for c in 0..self.k {
+            let d: f64 = (0..DIM)
+                .map(|j| {
+                    let dx = p[j] - centroids[c * DIM + j];
+                    dx * dx
+                })
+                .sum();
+            if d < best.1 {
+                best = (c, d);
+            }
+        }
+        best.0
+    }
+
+    /// Total within-cluster sum of squared distances (inertia) of the
+    /// dataset under the given flattened centroids — the quantity a
+    /// sweep of seeded restarts minimizes over.
+    pub fn inertia(&self, centroids: &[f64]) -> f64 {
+        self.points
+            .iter()
+            .map(|p| {
+                let c = self.nearest(p, centroids);
+                (0..DIM)
+                    .map(|j| {
+                        let dx = p[j] - centroids[c * DIM + j];
+                        dx * dx
+                    })
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Pick `k` distinct data points as initial centroids, keyed by
+    /// `pick_seed` (linear probing on collisions, so picks are distinct
+    /// whenever `n >= k`).
+    fn centroids_from(&self, pick_seed: u64) -> Vec<f64> {
+        let mut rng = SplitMix64::new(pick_seed ^ 0x696E6974); // "init"
+        let mut used = vec![false; self.n];
+        let mut out = Vec::with_capacity(self.k * DIM);
+        for _ in 0..self.k {
+            let mut idx = (rng.next() % self.n as u64) as usize;
+            while used[idx] {
+                idx = (idx + 1) % self.n;
+            }
+            used[idx] = true;
+            out.extend_from_slice(&self.points[idx]);
+        }
+        out
+    }
+}
+
+impl BsfProblem for KMeansProblem {
+    /// Flattened `k × DIM` centroid coordinates.
+    type Param = Vec<f64>;
+    /// One data point.
+    type MapElem = [f64; DIM];
+    /// Per-centroid `(sum_x, sum_y, sum_z, count)` rows, fixed-point.
+    type ReduceElem = Vec<(i64, i64, i64, u64)>;
+
+    fn list_size(&self) -> usize {
+        self.n
+    }
+
+    fn map_list_elem(&self, i: usize) -> [f64; DIM] {
+        self.points[i]
+    }
+
+    fn init_parameter(&self) -> Vec<f64> {
+        self.centroids_from(self.seed)
+    }
+
+    /// A seeded run is a k-means *restart*: a different initial
+    /// centroid pick per seed. Seed 0 is the default init.
+    fn seeded_parameter(&self, seed: u64) -> Vec<f64> {
+        if seed == 0 {
+            self.init_parameter()
+        } else {
+            self.centroids_from(seed)
+        }
+    }
+
+    fn map_f(
+        &self,
+        p: &[f64; DIM],
+        centroids: &Vec<f64>,
+        _ctx: &MapCtx,
+    ) -> Option<Vec<(i64, i64, i64, u64)>> {
+        let mut rows = vec![(0i64, 0i64, 0i64, 0u64); self.k];
+        let c = self.nearest(p, centroids);
+        rows[c] = (to_fixed(p[0]), to_fixed(p[1]), to_fixed(p[2]), 1);
+        Some(rows)
+    }
+
+    fn reduce_f(
+        &self,
+        x: &Vec<(i64, i64, i64, u64)>,
+        y: &Vec<(i64, i64, i64, u64)>,
+        _job: usize,
+    ) -> Vec<(i64, i64, i64, u64)> {
+        debug_assert_eq!(x.len(), y.len());
+        x.iter()
+            .zip(y.iter())
+            .map(|(a, b)| (a.0 + b.0, a.1 + b.1, a.2 + b.2, a.3 + b.3))
+            .collect()
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&Vec<(i64, i64, i64, u64)>>,
+        _reduce_counter: u64,
+        param: &mut Vec<f64>,
+        ctx: &IterCtx,
+    ) -> StepDecision {
+        let mut shift: f64 = 0.0;
+        if let Some(rows) = reduce_result {
+            for (c, &(sx, sy, sz, count)) in rows.iter().enumerate() {
+                if count == 0 {
+                    continue; // empty cluster keeps its old centroid
+                }
+                let inv = 1.0 / count as f64;
+                let next = [
+                    from_fixed(sx) * inv,
+                    from_fixed(sy) * inv,
+                    from_fixed(sz) * inv,
+                ];
+                for (j, &v) in next.iter().enumerate() {
+                    shift = shift.max((v - param[c * DIM + j]).abs());
+                    param[c * DIM + j] = v;
+                }
+            }
+        }
+        if shift < self.eps || ctx.iter_counter >= self.max_iter {
+            StepDecision::exit()
+        } else {
+            StepDecision::stay(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::Bsf;
+
+    #[test]
+    fn clusters_the_cloud() {
+        let p = KMeansProblem::new(200, 4, 1e-9, 5);
+        let inertia_at_init = p.inertia(&p.init_parameter());
+        let r = Bsf::new(KMeansProblem::new(200, 4, 1e-9, 5))
+            .workers(4)
+            .run()
+            .unwrap();
+        let p2 = KMeansProblem::new(200, 4, 1e-9, 5);
+        assert!(p2.inertia(&r.param) <= inertia_at_init);
+        assert_eq!(r.param.len(), 4 * DIM);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let mk = || KMeansProblem::new(120, 3, 1e-12, 9);
+        let r1 = Bsf::new(mk()).workers(1).run().unwrap();
+        let r4 = Bsf::new(mk()).workers(4).run().unwrap();
+        assert_eq!(r1.iterations, r4.iterations);
+        assert!(r1.param.iter().zip(&r4.param).all(|(a, b)| a == b));
+    }
+
+    #[test]
+    fn seeded_restarts_differ_and_seed_zero_is_default() {
+        let p = KMeansProblem::new(60, 3, 1e-9, 2);
+        assert_eq!(p.seeded_parameter(0), p.init_parameter());
+        assert_ne!(p.seeded_parameter(1), p.seeded_parameter(2));
+    }
+}

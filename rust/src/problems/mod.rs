@@ -12,12 +12,25 @@
 //! * [`lpp_validator`] — one-shot solution validator (BSF-LPP-Validator).
 //! * [`apex`] — Apex-style 3-job workflow (feasibility → pursuit →
 //!   verify), the multi-job `JobDispatcher` demo.
+//!
+//! Beyond the paper's demos, three sparse/ML workloads stress the
+//! variable-length wire path and the batch-sweep mode (docs/workloads.md):
+//!
+//! * [`pagerank`] — sparse graph iteration; variable-length sparse
+//!   reduce elements, out-degree-weighted block split.
+//! * [`kmeans`] — Lloyd's algorithm; per-centroid partial sums + counts,
+//!   seeded restarts.
+//! * [`sgd`] — mini-batch gradient descent; the iteration-reweighted
+//!   list (per-round subsampling via the extended reduce-list).
 
 pub mod apex;
 pub mod cimmino;
 pub mod gravity;
 pub mod jacobi;
 pub mod jacobi_map;
+pub mod kmeans;
 pub mod lpp;
 pub mod lpp_validator;
 pub mod montecarlo;
+pub mod pagerank;
+pub mod sgd;

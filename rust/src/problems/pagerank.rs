@@ -1,0 +1,271 @@
+//! PageRank on the skeleton: sparse graph iteration with
+//! variable-length reduce elements.
+//!
+//! The first problem in this repo where the *list itself* is the big
+//! object: the map-list is a set of contiguous node blocks over a
+//! sparse adjacency list, and the reduce element is a **sparse,
+//! variable-length** vector of rank contributions `(target, delta)` —
+//! sized by how many distinct targets a block touches, not by the
+//! problem dimension. That exercises the length-prefixed `Vec` codec on
+//! the order/report wire path (everything before this was fixed-shape).
+//!
+//! Two determinism decisions worth copying:
+//!
+//! * Contributions are **fixed-point `i64`** ([`crate::util::fixed`]):
+//!   blocks overlap in the targets they touch, so the fold tree adds
+//!   entries for the same node in a grouping-dependent order — integer
+//!   adds make any grouping bit-identical across engines and (K, T).
+//! * Blocks are cut by [`weighted_ranges`] over **out-degree**, not node
+//!   count: the generated graph is skewed (a few hub nodes own a large
+//!   fraction of the edges), so an unweighted split would leave the hub
+//!   block dominating every iteration.
+
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::skeleton::split::weighted_ranges;
+use crate::util::fixed::{from_fixed, to_fixed};
+use crate::util::rng::SplitMix64;
+use std::collections::BTreeMap;
+
+/// PageRank over a deterministically generated sparse directed graph.
+pub struct PageRankProblem {
+    /// Node count.
+    pub n: usize,
+    /// Damping factor (the classic 0.85).
+    pub damping: f64,
+    /// L1 convergence threshold on the rank vector.
+    pub eps: f64,
+    /// Iteration cap.
+    pub max_iter: usize,
+    /// Graph-generation seed.
+    pub seed: u64,
+    /// Out-edge adjacency: `out[u]` lists the targets of node `u`
+    /// (always non-empty — the generator guarantees no dangling nodes).
+    out: Vec<Vec<u32>>,
+    /// Contiguous node blocks (offset, len), cut by out-degree weight.
+    blocks: Vec<(u32, u32)>,
+}
+
+impl PageRankProblem {
+    /// Build an `n`-node skewed random graph split into `num_blocks`
+    /// map elements. Every node gets at least one out-edge (no dangling
+    /// mass) and roughly one node in eleven becomes a hub with ~n/4
+    /// out-edges, so block cuts genuinely depend on the weights.
+    pub fn new(n: usize, num_blocks: usize, eps: f64, seed: u64) -> Self {
+        assert!(n > 0, "pagerank needs at least one node");
+        let num_blocks = num_blocks.clamp(1, n);
+        let mut out = Vec::with_capacity(n);
+        for u in 0..n {
+            let mut rng = SplitMix64::new(
+                seed ^ (u as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let deg = if rng.next() % 11 == 0 {
+                (n / 4).max(1)
+            } else {
+                1 + (rng.next() % 4) as usize
+            };
+            let mut targets = Vec::with_capacity(deg);
+            for _ in 0..deg {
+                targets.push((rng.next() % n as u64) as u32);
+            }
+            out.push(targets);
+        }
+        let weights: Vec<u64> = out.iter().map(|t| t.len() as u64).collect();
+        let blocks = weighted_ranges(&weights, num_blocks)
+            .into_iter()
+            .map(|(off, len)| (off as u32, len as u32))
+            .collect();
+        Self { n, damping: 0.85, eps, max_iter: 10_000, seed, out, blocks }
+    }
+
+    /// Index and value of the highest-ranked node (ties → lowest index).
+    pub fn top(param: &[f64]) -> (usize, f64) {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for (i, &r) in param.iter().enumerate() {
+            if r > best.1 {
+                best = (i, r);
+            }
+        }
+        best
+    }
+
+    /// Total edge count (the weight the block split balances).
+    pub fn edges(&self) -> usize {
+        self.out.iter().map(Vec::len).sum()
+    }
+}
+
+/// Wire shape of the PageRank reduce element: a length-prefixed sparse
+/// vector of `(target, fixed-point delta)` pairs. Variable size by
+/// design — see the module docs. // lint: variable-wire
+type Wire = Vec<(u32, i64)>;
+
+impl BsfProblem for PageRankProblem {
+    /// The full rank vector (broadcast each iteration).
+    type Param = Vec<f64>;
+    /// A contiguous node block: (offset, len) into the adjacency list.
+    type MapElem = (u32, u32);
+    /// Sparse rank contributions, sorted by target node, fixed-point.
+    type ReduceElem = Wire;
+
+    fn list_size(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn map_list_elem(&self, i: usize) -> (u32, u32) {
+        self.blocks[i]
+    }
+
+    fn init_parameter(&self) -> Vec<f64> {
+        vec![1.0 / self.n as f64; self.n]
+    }
+
+    /// A seeded run starts from a random (normalized) rank vector —
+    /// PageRank converges to the same fixed point, so a sweep over
+    /// seeds measures convergence-speed spread across starting points.
+    /// Seed 0 is the uniform legacy start.
+    fn seeded_parameter(&self, seed: u64) -> Vec<f64> {
+        if seed == 0 {
+            return self.init_parameter();
+        }
+        let mut rng = SplitMix64::new(seed);
+        let raw: Vec<f64> = (0..self.n).map(|_| 0.5 + rng.f64()).collect();
+        let total: f64 = raw.iter().sum();
+        raw.into_iter().map(|x| x / total).collect()
+    }
+
+    fn map_f(
+        &self,
+        &(off, len): &(u32, u32),
+        param: &Vec<f64>,
+        _ctx: &MapCtx,
+    ) -> Option<Wire> {
+        // Each node's outgoing mass is rounded to fixed-point once *per
+        // edge set* (one divide per node), then integer-added — so the
+        // per-target sums are identical however blocks land on workers.
+        let mut acc: BTreeMap<u32, i64> = BTreeMap::new();
+        for u in off..off + len {
+            let targets = &self.out[u as usize];
+            let share = to_fixed(param[u as usize] / targets.len() as f64);
+            for &v in targets {
+                *acc.entry(v).or_insert(0) += share;
+            }
+        }
+        Some(acc.into_iter().collect())
+    }
+
+    fn reduce_f(&self, x: &Wire, y: &Wire, _job: usize) -> Wire {
+        // Two-pointer merge of sorted sparse vectors; integer adds keep
+        // ⊕ associative and commutative for any fold shape.
+        let mut out = Vec::with_capacity(x.len() + y.len());
+        let (mut i, mut j) = (0, 0);
+        while i < x.len() && j < y.len() {
+            match x[i].0.cmp(&y[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(x[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(y[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push((x[i].0, x[i].1 + y[j].1));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&x[i..]);
+        out.extend_from_slice(&y[j..]);
+        out
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&Wire>,
+        _reduce_counter: u64,
+        param: &mut Vec<f64>,
+        ctx: &IterCtx,
+    ) -> StepDecision {
+        let teleport = (1.0 - self.damping) / self.n as f64;
+        let mut next = vec![teleport; self.n];
+        if let Some(contrib) = reduce_result {
+            for &(v, fp) in contrib {
+                next[v as usize] += self.damping * from_fixed(fp);
+            }
+        }
+        let l1: f64 =
+            next.iter().zip(param.iter()).map(|(a, b)| (a - b).abs()).sum();
+        *param = next;
+        if l1 < self.eps || ctx.iter_counter >= self.max_iter {
+            StepDecision::exit()
+        } else {
+            StepDecision::stay(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::Bsf;
+
+    #[test]
+    fn converges_to_a_distribution() {
+        let p = PageRankProblem::new(64, 8, 1e-10, 42);
+        let r = Bsf::new(p).workers(4).run().unwrap();
+        let sum: f64 = r.param.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "rank mass drifted: {sum}");
+        assert!(r.param.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let mk = || PageRankProblem::new(48, 6, 1e-12, 7);
+        let r1 = Bsf::new(mk()).workers(1).run().unwrap();
+        let r3 = Bsf::new(mk()).workers(3).run().unwrap();
+        assert_eq!(r1.iterations, r3.iterations);
+        assert!(r1.param.iter().zip(&r3.param).all(|(a, b)| a == b));
+    }
+
+    #[test]
+    fn seeded_starts_reach_the_same_fixed_point() {
+        let mk = || PageRankProblem::new(40, 5, 1e-12, 11);
+        let p = mk();
+        let s7 = p.seeded_parameter(7);
+        assert!((s7.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert_eq!(p.seeded_parameter(0), p.init_parameter());
+        use crate::skeleton::Checkpoint;
+        let r0 = Bsf::new(mk()).workers(2).run().unwrap();
+        let r7 = Bsf::new(mk())
+            .workers(2)
+            .resume(Checkpoint { param: s7, iter: 0, job: 0 })
+            .run()
+            .unwrap();
+        let (t0, _) = PageRankProblem::top(&r0.param);
+        let (t7, _) = PageRankProblem::top(&r7.param);
+        assert_eq!(t0, t7, "same graph, same winner from any start");
+    }
+
+    #[test]
+    fn blocks_balance_edges_not_nodes() {
+        let p = PageRankProblem::new(128, 4, 1e-9, 3);
+        // Sum of per-block out-degree weights should be near edges/4
+        // for each block (weighted split), while node counts may skew.
+        let total = p.edges();
+        for &(off, len) in &p.blocks {
+            let w: usize = (off..off + len)
+                .map(|u| p.out[u as usize].len())
+                .sum();
+            assert!(
+                w <= total / 4 + total / 8 + (n_max(&p) + 1),
+                "block weight {w} far above quantile {}",
+                total / 4
+            );
+        }
+    }
+
+    fn n_max(p: &PageRankProblem) -> usize {
+        p.out.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}

@@ -1,0 +1,249 @@
+//! Mini-batch SGD (linear regression) on the skeleton — the
+//! iteration-reweighted list.
+//!
+//! Every other problem maps its whole list each iteration. SGD maps a
+//! different *subset* per iteration: `map_f` hashes
+//! `(run_seed, element, iteration)` and returns `None` for elements
+//! outside the mini-batch — the paper's extended reduce-list
+//! ("success = 0") reused as stochastic subsampling, so the effective
+//! list weighting changes every round without touching the split. The
+//! reduce element is a variable-length fixed-point gradient vector plus
+//! the batch count.
+//!
+//! The run seed rides inside `Param` (like Monte-Carlo): workers need
+//! it to agree on batch membership, and the ordinary parameter
+//! broadcast delivers it, so `bsf sweep sgd --runs N` races independent
+//! stochastic trajectories with zero wire-protocol changes.
+
+use crate::skeleton::problem::{BsfProblem, IterCtx, MapCtx, StepDecision};
+use crate::util::fixed::{from_fixed, to_fixed};
+use crate::util::rng::SplitMix64;
+
+/// Feature dimension (weights are `FEATURES + 1` with the bias last).
+pub const FEATURES: usize = 3;
+
+/// Mini-batch SGD for linear regression over a deterministic synthetic
+/// dataset drawn from known ground-truth weights.
+pub struct SgdProblem {
+    /// Sample count (the map-list length).
+    pub n: usize,
+    /// Convergence threshold on the mini-batch gradient norm.
+    pub eps: f64,
+    /// Iteration cap.
+    pub max_iter: usize,
+    /// Data-generation seed.
+    pub seed: u64,
+    /// Inclusion modulus: an element joins a batch with probability
+    /// `1/batch_inv` (default 4).
+    pub batch_inv: u64,
+    /// Base learning rate (decays as `lr0 / (1 + 0.01 t)`).
+    pub lr0: f64,
+    data: Vec<(u64, [f64; FEATURES], f64)>,
+    truth: Vec<f64>,
+}
+
+impl SgdProblem {
+    /// Generate `n` samples `y = w·x + b + noise` with ground truth
+    /// drawn from `seed`; features and noise in deterministic streams.
+    pub fn new(n: usize, eps: f64, seed: u64) -> Self {
+        assert!(n > 0, "sgd needs at least one sample");
+        let mut rng = SplitMix64::new(seed ^ 0x736764); // "sgd"
+        let truth: Vec<f64> =
+            (0..=FEATURES).map(|_| rng.f64() * 2.0 - 1.0).collect();
+        let data = (0..n as u64)
+            .map(|i| {
+                let x = [
+                    rng.f64() * 2.0 - 1.0,
+                    rng.f64() * 2.0 - 1.0,
+                    rng.f64() * 2.0 - 1.0,
+                ];
+                let y = x.iter().zip(&truth).map(|(a, b)| a * b).sum::<f64>()
+                    + truth[FEATURES]
+                    + (rng.f64() - 0.5) * 0.01;
+                (i, x, y)
+            })
+            .collect();
+        Self { n, eps, max_iter: 10_000, seed, batch_inv: 4, lr0: 0.5, data, truth }
+    }
+
+    /// Mean squared error of the model over the *full* dataset.
+    pub fn loss(&self, param: &(u64, Vec<f64>)) -> f64 {
+        let w = &param.1;
+        self.data
+            .iter()
+            .map(|(_, x, y)| {
+                let pred = x.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>()
+                    + w[FEATURES];
+                (pred - y) * (pred - y)
+            })
+            .sum::<f64>()
+            / self.n as f64
+    }
+
+    /// Distance of the learned weights from the generating ground truth.
+    pub fn truth_gap(&self, param: &(u64, Vec<f64>)) -> f64 {
+        param
+            .1
+            .iter()
+            .zip(&self.truth)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl BsfProblem for SgdProblem {
+    /// `(run_seed, weights)` — the seed must reach the workers so they
+    /// agree on mini-batch membership; `weights` is `FEATURES + 1` long
+    /// (bias last).
+    type Param = (u64, Vec<f64>);
+    /// `(index, features, target)` — the index keys batch inclusion.
+    type MapElem = (u64, [f64; FEATURES], f64);
+    /// `(fixed-point gradient, batch count)` — variable-length vector.
+    type ReduceElem = (Vec<i64>, u64);
+
+    fn list_size(&self) -> usize {
+        self.n
+    }
+
+    fn map_list_elem(&self, i: usize) -> (u64, [f64; FEATURES], f64) {
+        self.data[i]
+    }
+
+    fn init_parameter(&self) -> (u64, Vec<f64>) {
+        (0, vec![0.0; FEATURES + 1])
+    }
+
+    fn seeded_parameter(&self, seed: u64) -> (u64, Vec<f64>) {
+        (seed, vec![0.0; FEATURES + 1])
+    }
+
+    fn map_f(
+        &self,
+        &(idx, x, y): &(u64, [f64; FEATURES], f64),
+        param: &(u64, Vec<f64>),
+        ctx: &MapCtx,
+    ) -> Option<(Vec<i64>, u64)> {
+        // Batch membership: keyed by (run_seed, element, iteration) so
+        // every worker count sees the identical batch sequence.
+        let mut rng = SplitMix64::new(
+            param.0.wrapping_mul(0xA0761D6478BD642F)
+                ^ idx.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (ctx.iter_counter as u64).wrapping_mul(0xD1B54A32D192ED03)
+                ^ self.seed,
+        );
+        if rng.next() % self.batch_inv != 0 {
+            return None; // outside this iteration's mini-batch
+        }
+        let w = &param.1;
+        let err = x.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>()
+            + w[FEATURES]
+            - y;
+        let mut grad = Vec::with_capacity(FEATURES + 1);
+        for &xi in &x {
+            grad.push(to_fixed(err * xi));
+        }
+        grad.push(to_fixed(err)); // bias term
+        Some((grad, 1))
+    }
+
+    fn reduce_f(
+        &self,
+        xv: &(Vec<i64>, u64),
+        yv: &(Vec<i64>, u64),
+        _job: usize,
+    ) -> (Vec<i64>, u64) {
+        debug_assert_eq!(xv.0.len(), yv.0.len());
+        (
+            xv.0.iter().zip(yv.0.iter()).map(|(a, b)| a + b).collect(),
+            xv.1 + yv.1,
+        )
+    }
+
+    fn process_results(
+        &self,
+        reduce_result: Option<&(Vec<i64>, u64)>,
+        _reduce_counter: u64,
+        param: &mut (u64, Vec<f64>),
+        ctx: &IterCtx,
+    ) -> StepDecision {
+        if ctx.iter_counter >= self.max_iter {
+            return StepDecision::exit();
+        }
+        // An empty mini-batch (every element hashed out) is a no-op
+        // round, not an error — the reweighted list may vanish briefly.
+        let Some(r) = reduce_result else {
+            return StepDecision::stay(0);
+        };
+        let (grad_fp, count) = (&r.0, r.1);
+        if count == 0 {
+            return StepDecision::stay(0);
+        }
+        let lr = self.lr0 / (1.0 + 0.01 * ctx.iter_counter as f64);
+        let inv = 1.0 / count as f64;
+        let mut norm2 = 0.0;
+        for (j, &g) in grad_fp.iter().enumerate() {
+            let gj = from_fixed(g) * inv;
+            norm2 += gj * gj;
+            param.1[j] -= lr * gj;
+        }
+        if norm2.sqrt() < self.eps {
+            StepDecision::exit()
+        } else {
+            StepDecision::stay(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::Bsf;
+
+    #[test]
+    fn learns_the_ground_truth() {
+        let mut p = SgdProblem::new(256, 1e-4, 13);
+        p.max_iter = 2_000;
+        let probe = SgdProblem::new(256, 1e-4, 13);
+        let r = Bsf::new(p).workers(4).run().unwrap();
+        assert!(
+            probe.truth_gap(&r.param) < 0.2,
+            "gap {}",
+            probe.truth_gap(&r.param)
+        );
+        assert!(probe.loss(&r.param) < 0.05);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let mk = || {
+            let mut p = SgdProblem::new(96, 1e-12, 21);
+            p.max_iter = 50;
+            p
+        };
+        let r1 = Bsf::new(mk()).workers(1).run().unwrap();
+        let r3 = Bsf::new(mk()).workers(3).run().unwrap();
+        assert_eq!(r1.iterations, r3.iterations);
+        assert_eq!(r1.param.0, r3.param.0);
+        assert!(r1.param.1.iter().zip(&r3.param.1).all(|(a, b)| a == b));
+    }
+
+    #[test]
+    fn run_seed_changes_the_batch_sequence() {
+        use crate::skeleton::Checkpoint;
+        let mk = || {
+            let mut p = SgdProblem::new(96, 1e-12, 21);
+            p.max_iter = 30;
+            p
+        };
+        let seeded = |s: u64| Checkpoint {
+            param: mk().seeded_parameter(s),
+            iter: 0,
+            job: 0,
+        };
+        let ra = Bsf::new(mk()).workers(2).resume(seeded(5)).run().unwrap();
+        let rb = Bsf::new(mk()).workers(2).resume(seeded(6)).run().unwrap();
+        assert_eq!(ra.param.0, 5);
+        assert_ne!(ra.param.1, rb.param.1);
+    }
+}

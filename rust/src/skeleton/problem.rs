@@ -74,6 +74,21 @@ pub trait BsfProblem: Send + Sync + 'static {
     /// Initial order parameters (`PC_bsf_SetInitParameter`).
     fn init_parameter(&self) -> Self::Param;
 
+    /// Initial order parameters for an independent *seeded* run — the
+    /// batch-sweep entry point (`bsf sweep --runs N`). The skeleton
+    /// delivers the result through the ordinary iteration-0
+    /// [`Checkpoint`](crate::skeleton::Checkpoint) plumbing (master-side
+    /// only — no wire-protocol change), so a seeded run is bit-identical
+    /// whether launched solo (`bsf run --run-seed S`) or as a scheduler
+    /// job (`JobContract::seed`). Problems whose *workers* consume the
+    /// seed (e.g. Monte-Carlo streams) must embed it in `Param`; problems
+    /// where the seed only shapes the starting point (k-means restarts,
+    /// PageRank perturbed ranks) just derive a different initial `Param`.
+    /// Default: ignore the seed (every run identical).
+    fn seeded_parameter(&self, _seed: u64) -> Self::Param {
+        self.init_parameter()
+    }
+
     /// The user function F applied to one map-list element
     /// (`PC_bsf_MapF`). Return `None` for "success = 0": the element is
     /// ignored by Reduce and not counted (extended reduce-list).

@@ -46,7 +46,7 @@ use crate::costmodel::CostParams;
 use crate::error::BsfError;
 use crate::metrics::telemetry::RunTelemetry;
 use crate::skeleton::config::BsfConfig;
-use crate::skeleton::driver::CancelToken;
+use crate::skeleton::driver::{CancelToken, Checkpoint};
 use crate::skeleton::fault::FaultPolicy;
 use crate::skeleton::master::{MasterLoop, MasterOutcome};
 use crate::skeleton::problem::BsfProblem;
@@ -440,6 +440,11 @@ pub struct JobContract {
     /// Iteration cap for the run (merged with the fleet template's own
     /// cap; the lower one wins).
     pub max_iter: Option<usize>,
+    /// Independent-run seed (`bsf sweep`): the job starts from
+    /// [`BsfProblem::seeded_parameter`] instead of `init_parameter`,
+    /// delivered through the ordinary iteration-0 checkpoint plumbing —
+    /// bit-identical to a solo `bsf run --run-seed` of the same seed.
+    pub seed: Option<u64>,
 }
 
 /// Lifecycle of a submitted job.
@@ -517,6 +522,10 @@ impl JobSnapshot {
             (
                 "granted",
                 Json::Arr(self.granted.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+            (
+                "seed",
+                self.contract.seed.map_or(Json::Null, |s| Json::Num(s as f64)),
             ),
             ("iterations", Json::Num(self.iterations as f64)),
             ("elapsed", Json::Num(self.elapsed)),
@@ -1004,10 +1013,18 @@ impl<P: BsfProblem> Scheduler<P> {
             cfg.stop.max_iter = Some(cfg.stop.max_iter.map_or(n, |m| m.min(n)));
         }
         let comm = self.pool.comm();
+        // A seeded (sweep) job starts from the seeded parameter via the
+        // iteration-0 checkpoint path — master-side only, so the same
+        // fleet serves every seed with no wire-protocol change.
+        let start = contract.seed.map(|s| Checkpoint {
+            param: self.problem.seeded_parameter(s),
+            iter: 0,
+            job: 0,
+        });
         // force_reassign: a leased subset like [2, 3] passes through the
         // workers' spawn-K self-computed split otherwise.
         let mut master =
-            MasterLoop::new_with_ranks(&*self.problem, &cfg, None, lease.ranks.clone(), true)?;
+            MasterLoop::new_with_ranks(&*self.problem, &cfg, start, lease.ranks.clone(), true)?;
         let cancelled = loop {
             match master.step_comm(&*self.problem, comm) {
                 Ok(event) => {
@@ -1106,7 +1123,9 @@ struct JobRun<Param> {
 pub trait ControlApi: Send + Sync {
     /// Handle a `POST /jobs` body: `{"problem": str, "workers":
     /// int >= 1 | "auto", "priority": num, "deadline_secs": finite num
-    /// >= 0, "max_iter": int >= 1}` (all but `problem` optional).
+    /// >= 0, "max_iter": int >= 1, "seed": non-negative int}` (all but
+    /// `problem` optional; `seed` makes the job an independent seeded
+    /// run, see [`JobContract::seed`]).
     /// Every field is validated here — raw HTTP clients bypass the CLI's
     /// checks, and a malformed value must come back as a usage error,
     /// never reach a panicking conversion on the serving thread.
@@ -1190,6 +1209,12 @@ impl<P: BsfProblem> ControlApi for Arc<Scheduler<P>> {
                 Some(v) => Some(v.as_u64().ok_or_else(|| {
                     BsfError::usage("submit: \"max_iter\" must be a non-negative int")
                 })? as usize),
+            },
+            seed: match req.get("seed") {
+                None => None,
+                Some(v) => Some(v.as_u64().ok_or_else(|| {
+                    BsfError::usage("submit: \"seed\" must be a non-negative int")
+                })?),
             },
         };
         let id = self.submit(contract)?;
@@ -1329,6 +1354,8 @@ mod tests {
             ("workers", Json::Num(-2.0), "workers"),
             ("priority", Json::Str("high".into()), "priority"),
             ("max_iter", Json::Num(-3.0), "max_iter"),
+            ("seed", Json::Num(-5.0), "seed"),
+            ("seed", Json::Str("lucky".into()), "seed"),
         ] {
             let err = sched.submit_json(&body(vec![(field, value)])).unwrap_err();
             assert!(matches!(err, BsfError::Usage(_)), "{field}: {err}");

@@ -21,6 +21,53 @@ pub fn all_ranges(list_len: usize, workers: usize) -> Vec<(usize, usize)> {
     (0..workers).map(|r| sublist_range(list_len, workers, r)).collect()
 }
 
+/// Split a *weighted* list into `workers` contiguous ranges of roughly
+/// equal total weight (prefix-sum quantile boundaries).
+///
+/// The uniform split above assumes every map element costs the same;
+/// sparse problems (PageRank over a power-law graph, re-weighted SGD
+/// lists) violate that badly. `weighted_ranges` places the K−1 cut
+/// points where the weight prefix sum crosses `total * k / K`, keeping
+/// sublists contiguous (the skeleton's invariant) while balancing
+/// *work* instead of *element count*. Deterministic: integer weights,
+/// integer arithmetic, no ties broken by ordering.
+///
+/// With all weights equal the cuts coincide with [`all_ranges`], so
+/// callers can use this unconditionally. Zero-weight elements attach to
+/// whichever range the quantile walk is in; an all-zero (or empty) list
+/// degrades to the uniform split.
+pub fn weighted_ranges(weights: &[u64], workers: usize) -> Vec<(usize, usize)> {
+    assert!(workers > 0, "need at least one worker");
+    let total: u128 = weights.iter().map(|&w| w as u128).sum();
+    if total == 0 {
+        return all_ranges(weights.len(), workers);
+    }
+    let mut ranges = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    let mut prefix: u128 = 0;
+    let mut i = 0usize;
+    for k in 0..workers {
+        // Advance until the prefix sum reaches the k-th quantile,
+        // leaving at least one element per remaining worker when
+        // elements remain (so no worker starves on skewed weights).
+        let target = total * (k as u128 + 1) / workers as u128;
+        let remaining_workers = workers - k - 1;
+        while i < weights.len()
+            && weights.len() - (i + 1) >= remaining_workers
+            && (i == start || prefix + (weights[i] as u128) <= target)
+        {
+            prefix += weights[i] as u128;
+            i += 1;
+        }
+        if k == workers - 1 {
+            i = weights.len();
+        }
+        ranges.push((start, i - start));
+        start = i;
+    }
+    ranges
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,6 +94,50 @@ mod tests {
         // paper: "list size should be >= number of workers", but the split
         // itself must still be well-formed (zero-length tails).
         assert_eq!(all_ranges(2, 4), vec![(0, 1), (1, 1), (2, 0), (2, 0)]);
+    }
+
+    #[test]
+    fn weighted_uniform_matches_unweighted() {
+        assert_eq!(weighted_ranges(&[1; 8], 4), all_ranges(8, 4));
+        assert_eq!(weighted_ranges(&[7; 10], 4), all_ranges(10, 4));
+    }
+
+    #[test]
+    fn weighted_skew_moves_the_cuts() {
+        // One heavy head element: worker 0 gets just the head, the
+        // remaining light tail spreads over workers 1..K.
+        let w = [100, 1, 1, 1, 1, 1, 1];
+        let r = weighted_ranges(&w, 2);
+        assert_eq!(r, vec![(0, 1), (1, 6)]);
+    }
+
+    #[test]
+    fn weighted_zero_and_empty_degrade_to_uniform() {
+        assert_eq!(weighted_ranges(&[0; 6], 3), all_ranges(6, 3));
+        assert_eq!(weighted_ranges(&[], 3), all_ranges(0, 3));
+    }
+
+    #[test]
+    fn property_weighted_partition_is_exact_and_nonstarving() {
+        qcheck(200, |rng| {
+            let len = size_in(rng, 0, 300);
+            let k = size_in(rng, 1, 32);
+            let weights: Vec<u64> =
+                (0..len).map(|_| size_in(rng, 0, 1000) as u64).collect();
+            let ranges = weighted_ranges(&weights, k);
+            assert_eq!(ranges.len(), k);
+            // contiguous coverage, no gaps/overlaps
+            let mut next = 0;
+            for &(off, l) in &ranges {
+                assert_eq!(off, next);
+                next = off + l;
+            }
+            assert_eq!(next, len);
+            // no starvation: with len >= k every range is non-empty
+            if len >= k {
+                assert!(ranges.iter().all(|&(_, l)| l > 0), "starved: {ranges:?}");
+            }
+        });
     }
 
     #[test]

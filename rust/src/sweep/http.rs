@@ -1,0 +1,90 @@
+//! An HTTP-backed [`ControlApi`]: the client half of the `bsf serve`
+//! control plane.
+//!
+//! [`HttpControl`] implements the same trait the scheduler implements
+//! in-process, by speaking the control server's endpoints (`POST
+//! /jobs`, `GET /jobs`, `POST /jobs/<id>/cancel`, `POST /shutdown`,
+//! `GET /metrics`, `GET /events`) over std-only HTTP/1.0. That makes
+//! the sweep driver — and anything else written against `ControlApi` —
+//! deployment-agnostic: hand it an `Arc<Scheduler>` for an embedded
+//! fleet or an `HttpControl` for a remote one.
+//!
+//! The trait's infallible methods (`jobs_json`, `shutdown_json`,
+//! `metrics_json`, `events_jsonl`) cannot surface a transport error
+//! through their signatures; on failure they return an empty document
+//! carrying an `"error"` field, which callers like
+//! [`run_sweep`](crate::sweep::run_sweep) detect as a malformed
+//! response and turn into a typed error.
+
+use crate::error::BsfError;
+use crate::metrics::exporter::{http_get, http_post};
+use crate::skeleton::ControlApi;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// A remote `bsf serve` control endpoint as a [`ControlApi`].
+pub struct HttpControl {
+    addr: String,
+    timeout: Duration,
+}
+
+impl HttpControl {
+    /// Client for the control server at `addr` (`HOST:PORT`), with a
+    /// per-request timeout of 10 seconds.
+    pub fn new(addr: &str) -> Self {
+        Self { addr: addr.to_string(), timeout: Duration::from_secs(10) }
+    }
+
+    /// Override the per-request timeout.
+    pub fn timeout(mut self, t: Duration) -> Self {
+        self.timeout = t;
+        self
+    }
+
+    fn get_json(&self, path: &str) -> Json {
+        match http_get(&self.addr, path, self.timeout)
+            .and_then(|body| Json::parse(&body).map_err(BsfError::transport))
+        {
+            Ok(doc) => doc,
+            Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+        }
+    }
+}
+
+impl ControlApi for HttpControl {
+    fn submit_json(&self, req: &Json) -> Result<Json, BsfError> {
+        let body = http_post(&self.addr, "/jobs", &req.compact(), self.timeout)?;
+        Json::parse(&body).map_err(BsfError::transport)
+    }
+
+    fn jobs_json(&self) -> Json {
+        self.get_json("/jobs")
+    }
+
+    fn cancel_json(&self, id: u64) -> Result<Json, BsfError> {
+        let body = http_post(
+            &self.addr,
+            &format!("/jobs/{id}/cancel"),
+            "",
+            self.timeout,
+        )?;
+        Json::parse(&body).map_err(BsfError::transport)
+    }
+
+    fn shutdown_json(&self) -> Json {
+        match http_post(&self.addr, "/shutdown", "", self.timeout)
+            .and_then(|body| Json::parse(&body).map_err(BsfError::transport))
+        {
+            Ok(doc) => doc,
+            Err(e) => Json::obj(vec![("error", Json::Str(e.to_string()))]),
+        }
+    }
+
+    fn metrics_json(&self) -> Json {
+        self.get_json("/metrics")
+    }
+
+    fn events_jsonl(&self) -> String {
+        http_get(&self.addr, "/events", self.timeout).unwrap_or_default()
+    }
+}

@@ -1,0 +1,501 @@
+//! Batch-sweep engine: N independent seeded runs over one fleet.
+//!
+//! `bsf sweep <problem> --runs N --seed-start S --seed-stride D` is the
+//! embarrassingly-parallel, high-job-count regime the paper's cost
+//! model covers but single long-running jobs never exercise: the seed
+//! grid `S, S+D, S+2D, ...` expands into N independent
+//! [`JobContract`](crate::skeleton::JobContract)s (each with
+//! [`JobContract::seed`](crate::skeleton::JobContract::seed) set),
+//! submitted through the ordinary scheduler admission path and raced
+//! across whatever worker leases the fleet can grant.
+//!
+//! The driver, [`run_sweep`], is written against the [`ControlApi`]
+//! *JSON* surface — the same trait object the HTTP control server
+//! wraps — so one implementation serves both deployment shapes:
+//!
+//! * **embedded** — `bsf sweep` with no `--control` spawns its own
+//!   fleet and scheduler in-process and hands the driver the
+//!   `Arc<Scheduler>` directly;
+//! * **remote** — `--control HOST:PORT` hands it an [`HttpControl`],
+//!   which speaks the `POST /jobs` / `GET /jobs` endpoints of a running
+//!   `bsf serve`.
+//!
+//! Results stream as schema-versioned JSONL (`bsf-sweep/1`), one `run`
+//! record per finished run **in completion order** plus one final
+//! `summary` record. Individual run failures (a worker killed mid-run,
+//! an admission rejection) are recorded as `"status": "failed"` rows and
+//! the sweep continues — fault tolerance rides the scheduler's existing
+//! `FaultPolicy::Redistribute` plumbing, whose budget for a k-worker
+//! lease is k − 1 losses.
+//!
+//! Because each run's seed flows through
+//! [`BsfProblem::seeded_parameter`](crate::skeleton::BsfProblem::seeded_parameter)
+//! and the iteration-0 checkpoint path, a sweep run's `result` text is
+//! byte-identical to a solo `bsf run <problem> --run-seed SEED` of the
+//! same seed — the CI sweep-smoke job byte-compares exactly that.
+
+mod http;
+
+pub use http::HttpControl;
+
+use crate::error::BsfError;
+use crate::skeleton::ControlApi;
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// Wire-schema tag stamped on every JSONL record the sweep emits.
+pub const SWEEP_SCHEMA: &str = "bsf-sweep/1";
+
+/// How often the driver polls `GET /jobs` for completions.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// What to sweep: the seed grid and the per-run contract knobs.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Problem name (must match what the fleet serves).
+    pub problem: String,
+    /// Number of independent runs.
+    pub runs: usize,
+    /// Seed of run 0.
+    pub seed_start: u64,
+    /// Seed increment between consecutive runs (wrapping).
+    pub seed_stride: u64,
+    /// Workers per run; `0` = auto (the scheduler's cost-model K).
+    pub workers_per_run: usize,
+    /// Optional per-run iteration cap.
+    pub max_iter: Option<usize>,
+    /// Optional whole-sweep wall-clock budget: on expiry the driver
+    /// cancels outstanding jobs and records them as failed.
+    pub timeout: Option<Duration>,
+}
+
+impl SweepSpec {
+    /// Seed of the i-th run: `seed_start + i * seed_stride` (wrapping).
+    pub fn seed_of(&self, run: usize) -> u64 {
+        self.seed_start
+            .wrapping_add(self.seed_stride.wrapping_mul(run as u64))
+    }
+
+    /// The `POST /jobs` body for the i-th run.
+    pub fn submit_body(&self, run: usize) -> Json {
+        let mut fields = vec![
+            ("problem", Json::Str(self.problem.clone())),
+            ("seed", Json::Num(self.seed_of(run) as f64)),
+        ];
+        if self.workers_per_run > 0 {
+            fields.push(("workers", Json::Num(self.workers_per_run as f64)));
+        } else {
+            fields.push(("workers", Json::Str("auto".into())));
+        }
+        if let Some(n) = self.max_iter {
+            fields.push(("max_iter", Json::Num(n as f64)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// One finished (or failed) run of the sweep.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Run index in the seed grid (0-based).
+    pub run: usize,
+    /// The seed this run started from.
+    pub seed: u64,
+    /// Scheduler job id (`None` when the submission itself failed).
+    pub job: Option<u64>,
+    /// Terminal status: `done`, `failed` or `cancelled`.
+    pub status: String,
+    /// Workers actually granted to the run.
+    pub workers: usize,
+    /// Iterations completed.
+    pub iterations: usize,
+    /// Run wall seconds (queue wait excluded).
+    pub elapsed: f64,
+    /// The rendered `result:` line text (byte-identical to the solo
+    /// `bsf run --run-seed` of the same seed), when the run succeeded.
+    pub result: Option<String>,
+    /// Error text for failed runs.
+    pub error: Option<String>,
+}
+
+impl RunRecord {
+    /// One `bsf-sweep/1` JSONL `run` row.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SWEEP_SCHEMA.into())),
+            ("kind", Json::Str("run".into())),
+            ("run", Json::Num(self.run as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("job", self.job.map_or(Json::Null, |id| Json::Num(id as f64))),
+            ("status", Json::Str(self.status.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("elapsed", Json::Num(self.elapsed)),
+            ("result", self.result.clone().map_or(Json::Null, Json::Str)),
+            ("error", self.error.clone().map_or(Json::Null, Json::Str)),
+        ])
+    }
+}
+
+/// Aggregate statistics over the whole sweep.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    /// Problem swept.
+    pub problem: String,
+    /// Runs requested.
+    pub runs: usize,
+    /// Runs that finished `done`.
+    pub done: usize,
+    /// Runs that ended `failed` (including failed submissions).
+    pub failed: usize,
+    /// Runs that ended `cancelled` (sweep timeout).
+    pub cancelled: usize,
+    /// Total iterations across successful runs.
+    pub total_iterations: usize,
+    /// Shortest successful run (seconds); 0 when none succeeded.
+    pub min_run_seconds: f64,
+    /// Longest successful run (seconds).
+    pub max_run_seconds: f64,
+    /// Mean successful-run seconds.
+    pub mean_run_seconds: f64,
+    /// Whole-sweep wall seconds (submission to last completion).
+    pub wall_seconds: f64,
+}
+
+impl SweepSummary {
+    /// The final `bsf-sweep/1` JSONL `summary` row.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SWEEP_SCHEMA.into())),
+            ("kind", Json::Str("summary".into())),
+            ("problem", Json::Str(self.problem.clone())),
+            ("runs", Json::Num(self.runs as f64)),
+            ("done", Json::Num(self.done as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("total_iterations", Json::Num(self.total_iterations as f64)),
+            ("min_run_seconds", Json::Num(self.min_run_seconds)),
+            ("max_run_seconds", Json::Num(self.max_run_seconds)),
+            ("mean_run_seconds", Json::Num(self.mean_run_seconds)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+        ])
+    }
+
+    /// The one-line human digest `bsf sweep` prints after `done:`.
+    pub fn digest(&self) -> String {
+        format!(
+            "swept {} × {}: {} done, {} failed, {} cancelled in {:.3}s",
+            self.runs, self.problem, self.done, self.failed, self.cancelled,
+            self.wall_seconds
+        )
+    }
+}
+
+/// A run the driver is still waiting on.
+struct Pending {
+    run: usize,
+    seed: u64,
+    job: u64,
+}
+
+/// Expand the seed grid, submit every run, and stream completions.
+///
+/// `emit` is called once per run **in completion order** (failed
+/// submissions first, then jobs as they reach a terminal status) and
+/// the aggregated summary is returned. The driver itself never aborts
+/// on a run failure — only on control-plane breakdown (the endpoint
+/// stops answering, or a full poll pass yields undecodable rows).
+pub fn run_sweep(
+    api: &dyn ControlApi,
+    spec: &SweepSpec,
+    emit: &mut dyn FnMut(&RunRecord),
+) -> Result<SweepSummary, BsfError> {
+    if spec.runs == 0 {
+        return Err(BsfError::usage("sweep: --runs must be >= 1"));
+    }
+    let started = Instant::now();
+    let mut records: Vec<RunRecord> = Vec::with_capacity(spec.runs);
+    let mut pending: Vec<Pending> = Vec::with_capacity(spec.runs);
+
+    for run in 0..spec.runs {
+        let seed = spec.seed_of(run);
+        match api.submit_json(&spec.submit_body(run)) {
+            Ok(resp) => {
+                let job = resp.get("id").and_then(Json::as_u64).ok_or_else(|| {
+                    BsfError::transport(format!(
+                        "sweep: submit response without an id: {}",
+                        resp.compact()
+                    ))
+                })?;
+                pending.push(Pending { run, seed, job });
+            }
+            Err(e) => {
+                // The fleet refused this run (admission shrank, bad
+                // contract); record it and keep sweeping the rest.
+                let rec = RunRecord {
+                    run,
+                    seed,
+                    job: None,
+                    status: "failed".into(),
+                    workers: 0,
+                    iterations: 0,
+                    elapsed: 0.0,
+                    result: None,
+                    error: Some(e.to_string()),
+                };
+                emit(&rec);
+                records.push(rec);
+            }
+        }
+    }
+
+    let mut timed_out = false;
+    while !pending.is_empty() {
+        if let Some(budget) = spec.timeout {
+            if started.elapsed() > budget && !timed_out {
+                timed_out = true;
+                for p in &pending {
+                    let _ = api.cancel_json(p.job);
+                }
+            }
+            if started.elapsed() > budget + Duration::from_secs(30) {
+                // Cancellation itself wedged — drain what we know and
+                // record the rest as failed rather than hanging forever.
+                for p in pending.drain(..) {
+                    let rec = RunRecord {
+                        run: p.run,
+                        seed: p.seed,
+                        job: Some(p.job),
+                        status: "failed".into(),
+                        workers: 0,
+                        iterations: 0,
+                        elapsed: 0.0,
+                        result: None,
+                        error: Some("sweep timeout: job never reached a terminal status".into()),
+                    };
+                    emit(&rec);
+                    records.push(rec);
+                }
+                break;
+            }
+        }
+        let doc = api.jobs_json();
+        let rows = doc.get("jobs").and_then(|j| j.as_arr()).ok_or_else(|| {
+            BsfError::transport(format!(
+                "sweep: malformed bsf-jobs document: {}",
+                doc.compact()
+            ))
+        })?;
+        pending.retain(|p| {
+            let Some(row) = rows
+                .iter()
+                .find(|r| r.get("id").and_then(Json::as_u64) == Some(p.job))
+            else {
+                return true; // not visible yet; keep waiting
+            };
+            let status = row
+                .get("status")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            if !matches!(status.as_str(), "done" | "failed" | "cancelled") {
+                return true;
+            }
+            let rec = RunRecord {
+                run: p.run,
+                seed: p.seed,
+                job: Some(p.job),
+                status,
+                workers: row
+                    .get("granted")
+                    .and_then(|g| g.as_arr())
+                    .map_or(0, <[Json]>::len),
+                iterations: row
+                    .get("iterations")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0) as usize,
+                elapsed: row.get("elapsed").and_then(Json::as_f64).unwrap_or(0.0),
+                result: row
+                    .get("result")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                error: row
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+            };
+            emit(&rec);
+            records.push(rec);
+            false
+        });
+        if !pending.is_empty() {
+            std::thread::sleep(POLL_INTERVAL);
+        }
+    }
+
+    let done: Vec<&RunRecord> =
+        records.iter().filter(|r| r.status == "done").collect();
+    let sum_elapsed: f64 = done.iter().map(|r| r.elapsed).sum();
+    Ok(SweepSummary {
+        problem: spec.problem.clone(),
+        runs: spec.runs,
+        done: done.len(),
+        failed: records.iter().filter(|r| r.status == "failed").count(),
+        cancelled: records.iter().filter(|r| r.status == "cancelled").count(),
+        total_iterations: done.iter().map(|r| r.iterations).sum(),
+        min_run_seconds: if done.is_empty() {
+            0.0
+        } else {
+            done.iter().map(|r| r.elapsed).fold(f64::INFINITY, f64::min)
+        },
+        max_run_seconds: done.iter().map(|r| r.elapsed).fold(0.0, f64::max),
+        mean_run_seconds: if done.is_empty() {
+            0.0
+        } else {
+            sum_elapsed / done.len() as f64
+        },
+        wall_seconds: started.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::montecarlo::MonteCarloProblem;
+    use crate::skeleton::backend::FusedNativeBackend;
+    use crate::skeleton::cluster::serve_worker;
+    use crate::skeleton::config::BsfConfig;
+    use crate::skeleton::driver::Checkpoint;
+    use crate::skeleton::process::ChildSet;
+    use crate::skeleton::session::Bsf;
+    use crate::skeleton::{Scheduler, WorkerPool};
+    use crate::transport::build_thread_transport;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn mk() -> MonteCarloProblem {
+        let mut p = MonteCarloProblem::new(8, 200, 1e-9);
+        p.max_rounds = 3;
+        p
+    }
+
+    fn describe(t: &(u64, u64, u64)) -> String {
+        format!(
+            "pi ≈ {:.6} ({} samples)",
+            MonteCarloProblem::estimate(t),
+            t.2
+        )
+    }
+
+    #[test]
+    fn embedded_sweep_matches_solo_seeded_runs() {
+        // In-process fleet: 2 serve_worker threads over the thread
+        // transport, a scheduler on top, and the sweep driver talking
+        // to it through the same ControlApi surface bsf serve exposes.
+        let k = 2;
+        let mut eps = build_thread_transport(k);
+        let master = eps.pop().unwrap();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let p = mk();
+                let cfg = BsfConfig::with_workers(k);
+                thread::spawn(move || serve_worker(&p, &FusedNativeBackend, &ep, &cfg))
+            })
+            .collect();
+        let pool =
+            Arc::new(WorkerPool::new(Arc::new(master), ChildSet::default(), None));
+        let sched = Arc::new(
+            Scheduler::new(
+                Arc::clone(&pool),
+                Arc::new(mk()),
+                "montecarlo",
+                BsfConfig::with_workers(k),
+            )
+            .describe_with(describe),
+        );
+        let spec = SweepSpec {
+            problem: "montecarlo".into(),
+            runs: 3,
+            seed_start: 5,
+            seed_stride: 1,
+            workers_per_run: 1,
+            max_iter: None,
+            timeout: None,
+        };
+        let mut records = Vec::new();
+        let summary =
+            run_sweep(&sched, &spec, &mut |r| records.push(r.clone())).unwrap();
+        assert_eq!(summary.done, 3);
+        assert_eq!(summary.failed + summary.cancelled, 0);
+        assert_eq!(records.len(), 3);
+        for rec in &records {
+            assert_eq!(rec.status, "done");
+            assert_eq!(rec.iterations, 3);
+            // Byte-compare against the solo seeded run of the same seed
+            // — the sweep acceptance invariant.
+            let solo = Bsf::new(mk())
+                .workers(1)
+                .resume(Checkpoint {
+                    param: mk().seeded_parameter(rec.seed),
+                    iter: 0,
+                    job: 0,
+                })
+                .run()
+                .unwrap();
+            assert_eq!(
+                rec.result.as_deref(),
+                Some(describe(&solo.param).as_str()),
+                "seed {} diverged between sweep and solo",
+                rec.seed
+            );
+        }
+        // Distinct seeds drew distinct streams.
+        assert_ne!(records[0].result, records[1].result);
+        pool.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn seed_grid_expands_with_stride() {
+        let spec = SweepSpec {
+            problem: "montecarlo".into(),
+            runs: 4,
+            seed_start: 100,
+            seed_stride: 10,
+            workers_per_run: 0,
+            max_iter: None,
+            timeout: None,
+        };
+        assert_eq!(
+            (0..4).map(|i| spec.seed_of(i)).collect::<Vec<_>>(),
+            vec![100, 110, 120, 130]
+        );
+        let body = spec.submit_body(2);
+        assert_eq!(body.get("seed").and_then(Json::as_u64), Some(120));
+        assert_eq!(body.get("workers").and_then(Json::as_str), Some("auto"));
+    }
+
+    #[test]
+    fn records_round_trip_through_the_schema() {
+        let rec = RunRecord {
+            run: 3,
+            seed: 777,
+            job: Some(12),
+            status: "done".into(),
+            workers: 2,
+            iterations: 40,
+            elapsed: 0.25,
+            result: Some("x = 1".into()),
+            error: None,
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SWEEP_SCHEMA));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("run"));
+        assert_eq!(j.get("seed").and_then(Json::as_u64), Some(777));
+        let reparsed = Json::parse(&j.compact()).unwrap();
+        assert_eq!(reparsed.get("result").and_then(Json::as_str), Some("x = 1"));
+    }
+}

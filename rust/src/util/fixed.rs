@@ -1,0 +1,59 @@
+//! Fixed-point accumulators for grouping-invariant reductions.
+//!
+//! The skeleton's bit-identity guarantee (same result for every engine
+//! and every (K, T) grid) requires the reduce operation ⊕ to be truly
+//! associative. `f64` addition is not: the fold tree groups terms
+//! differently for different worker counts, so problems whose
+//! ReduceElems have *overlapping support* (PageRank rank deltas, k-means
+//! partial sums, SGD gradients) cannot carry raw floats. They carry
+//! scaled `i64` fixed-point values instead — integer addition is exact
+//! and associative, so any fold shape produces the same bits — and
+//! convert to/from `f64` only at map-element granularity (each element's
+//! contribution is rounded once, deterministically) and on the master.
+//!
+//! The scale, 2^32, gives ~9 decimal digits of fraction and ±2^31 of
+//! integer headroom — ample for normalized ranks, unit-cube coordinates
+//! and clipped gradients, and far from `i64` overflow even after
+//! millions of summands.
+
+/// Fraction bits of the fixed-point representation.
+pub const FIXED_BITS: u32 = 32;
+
+/// The scale factor 2^32 as an `f64`.
+pub const FIXED_SCALE: f64 = (1u64 << FIXED_BITS) as f64;
+
+/// Convert an `f64` to fixed-point, rounding to nearest.
+#[inline]
+pub fn to_fixed(x: f64) -> i64 {
+    (x * FIXED_SCALE).round() as i64
+}
+
+/// Convert a fixed-point value back to `f64`.
+#[inline]
+pub fn from_fixed(v: i64) -> f64 {
+    v as f64 / FIXED_SCALE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_close() {
+        for &x in &[0.0, 1.0, -1.0, 0.3333333333, -2.718281828, 1e-6] {
+            assert!((from_fixed(to_fixed(x)) - x).abs() < 1.0 / FIXED_SCALE);
+        }
+    }
+
+    #[test]
+    fn integer_sums_are_grouping_invariant() {
+        // The property f64 lacks: ((a+b)+c) == (a+(b+c)) exactly.
+        let vals: Vec<i64> =
+            (0..100).map(|i| to_fixed((i as f64) * 0.1 - 3.7)).collect();
+        let left: i64 = vals.iter().sum();
+        let right: i64 = vals.iter().rev().sum();
+        let pairs: i64 = vals.chunks(7).map(|c| c.iter().sum::<i64>()).sum();
+        assert_eq!(left, right);
+        assert_eq!(left, pairs);
+    }
+}

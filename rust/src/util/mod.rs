@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod codec;
 pub mod faultsim;
+pub mod fixed;
 pub mod json;
 pub mod mat;
 pub mod qcheck;

@@ -179,7 +179,7 @@ fn prop_codec_roundtrip_every_problem_payload_type() {
         rt((0..n)
             .map(|i| (i as u64, [rng.normal(), rng.normal(), rng.normal()]))
             .collect::<Vec<(u64, [f64; 3])>>());
-        rt((rng.next(), rng.next()));
+        rt((rng.next(), rng.next(), rng.next()));
         rt((rng.normal(), rng.next(), rng.next()));
         rt(ViolationReport { worst: rng.normal(), violated: rng.next(), active: rng.next() });
         // the order envelope (job, iter, param) and fold envelope
@@ -188,6 +188,51 @@ fn prop_codec_roundtrip_every_problem_payload_type() {
         rt((if rng.f64() < 0.2 { None } else { Some(vecf.clone()) }, rng.next()));
         // the worker's end-of-run report envelope
         rt((size_in(rng, 0, 9), size_in(rng, 0, 999), rng.normal(), size_in(rng, 0, 999)));
+    });
+}
+
+#[test]
+fn prop_codec_roundtrip_sparse_workload_payloads() {
+    // The variable-length Param / ReduceElem shapes the sparse and ML
+    // workloads put on the wire — pagerank's sparse (node, fixed-point
+    // mass) rows, kmeans' per-centroid partial-sum rows, sgd's
+    // (run_seed, weights) param and (gradient, batch-count) fold, and
+    // montecarlo's 3-field tally. Nothing here is fixed-size, so the
+    // length-prefixed Vec codec carries the structure end to end.
+    fn rt<T: Codec + PartialEq + std::fmt::Debug>(v: T) {
+        assert_eq!(T::from_bytes(&v.to_bytes()), v);
+    }
+
+    qcheck(60, |rng| {
+        let n = size_in(rng, 0, 16);
+        // montecarlo Param: (run_seed, hits, total)
+        rt((rng.next(), rng.next(), rng.next()));
+        // pagerank ReduceElem: sorted sparse (target, fixed-point mass)
+        rt((0..n)
+            .map(|i| (i as u32 * 3, rng.next() as i64))
+            .collect::<Vec<(u32, i64)>>());
+        // kmeans ReduceElem: one (sx, sy, sz, count) row per centroid
+        rt((0..n)
+            .map(|_| {
+                (rng.next() as i64, rng.next() as i64, rng.next() as i64, rng.below(1000)
+                    as u64)
+            })
+            .collect::<Vec<(i64, i64, i64, u64)>>());
+        // sgd Param (run_seed, weights) and ReduceElem (grad, count)
+        let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        rt((rng.next(), w));
+        rt((
+            (0..n + 1).map(|_| rng.next() as i64).collect::<Vec<i64>>(),
+            rng.below(500) as u64,
+        ));
+        // ...and the fold envelope around a variable-size payload, the
+        // shape the master actually receives per worker
+        let sparse: Option<Vec<(u32, i64)>> = if rng.f64() < 0.2 {
+            None
+        } else {
+            Some((0..n).map(|i| (i as u32, rng.next() as i64)).collect())
+        };
+        rt((sparse, rng.next()));
     });
 }
 
@@ -256,16 +301,78 @@ fn prop_tcp_frames_survive_partial_reads() {
 }
 
 #[test]
-fn prop_checkpoint_codec_roundtrip_all_seven_problems() {
+fn prop_variable_wire_payloads_survive_partial_reads() {
+    // Variable-length ReduceElem payloads (the pagerank/kmeans/sgd wire
+    // shapes) framed back-to-back with *different* sizes per frame, read
+    // off a worst-case trickling socket: each frame must cut exactly at
+    // its length prefix and decode to the original value. This is the
+    // failure mode fixed-size codecs never exercise — a frame boundary
+    // landing inside another element's length prefix.
+    use bsf::transport::tcp::{read_frame, write_frame};
+    use bsf::transport::Tag;
+    use std::io::Read;
+
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.chunk).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    type SparseFold = (Option<Vec<(u32, i64)>>, u64);
+
+    qcheck(40, |rng| {
+        let folds: Vec<SparseFold> = (0..size_in(rng, 1, 5))
+            .map(|_| {
+                let n = size_in(rng, 0, 40);
+                (
+                    if rng.f64() < 0.2 {
+                        None
+                    } else {
+                        Some((0..n).map(|i| (i as u32, rng.next() as i64)).collect())
+                    },
+                    rng.next(),
+                )
+            })
+            .collect();
+        let mut buf = Vec::new();
+        for (i, fold) in folds.iter().enumerate() {
+            write_frame(&mut buf, i, Tag::Fold, &fold.to_bytes()).unwrap();
+        }
+        let chunk = size_in(rng, 1, 3);
+        let mut r = Trickle { data: &buf, pos: 0, chunk };
+        for (i, fold) in folds.iter().enumerate() {
+            let (from, tag, payload) = read_frame(&mut r).unwrap();
+            assert_eq!((from, tag), (i, Tag::Fold));
+            assert_eq!(payload, fold.to_bytes(), "frame bytes shifted");
+            assert_eq!(&SparseFold::from_bytes(&payload), fold);
+        }
+    });
+}
+
+#[test]
+fn prop_checkpoint_codec_roundtrip_every_problem() {
     // A Checkpoint<P::Param> must cross the Codec losslessly for every
     // problem the CLI ships — the same wire the transport uses for the
     // order parameters, plus the checkpoint's magic/version header and
-    // the (iter, job) counters the resume restores.
+    // the (iter, job) counters the resume restores. The seeded variants
+    // matter too: `bsf sweep` jobs start from seeded_parameter(seed)
+    // through exactly this path.
     use bsf::problems::apex::ApexProblem;
     use bsf::problems::cimmino::CimminoProblem;
     use bsf::problems::gravity::GravityProblem;
     use bsf::problems::jacobi_map::JacobiMapProblem;
+    use bsf::problems::kmeans::KMeansProblem;
     use bsf::problems::montecarlo::MonteCarloProblem;
+    use bsf::problems::pagerank::PageRankProblem;
+    use bsf::problems::sgd::SgdProblem;
     use bsf::skeleton::{BsfProblem, Checkpoint};
 
     fn rt<Param>(param: Param, iter: usize, job: usize)
@@ -303,10 +410,24 @@ fn prop_checkpoint_codec_roundtrip_all_seven_problems() {
         let p = LppProblem::random(4 * n, n, seed);
         rt(perturb(p.init_parameter(), rng), iter, 0);
 
-        // Montecarlo's tally param is exactly integral.
+        // Montecarlo's tally param is exactly integral, and its run
+        // seed rides in the first field.
         let p = MonteCarloProblem::new(n, 100, 1e-3);
         let _ = p.init_parameter();
-        rt((rng.next(), rng.next()), iter, 0);
+        rt(p.seeded_parameter(rng.next()), iter, 0);
+        rt((rng.next(), rng.next(), rng.next()), iter, 0);
+
+        // The sparse/ML workloads: seeded starts are exactly what a
+        // sweep job's iteration-0 checkpoint carries.
+        let p = PageRankProblem::new(n, n.clamp(1, 4), 1e-12, seed);
+        rt(p.seeded_parameter(rng.next()), iter, 0);
+
+        let p = KMeansProblem::new(n.max(4), 2, 1e-12, seed);
+        rt(p.seeded_parameter(rng.next()), iter, 0);
+
+        let p = SgdProblem::new(n.max(4), 1e-12, seed);
+        let (rs, w) = p.seeded_parameter(rng.next());
+        rt((rs, perturb(w, rng)), iter, 0);
 
         // Apex is the multi-job workflow: the job case must survive too.
         let p = ApexProblem::random(4 * n, n, seed);

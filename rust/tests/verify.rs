@@ -13,6 +13,7 @@
 //!    handshake (the regression the checker's orphan invariant encodes).
 
 use bsf::problems::jacobi::JacobiProblem;
+use bsf::problems::pagerank::PageRankProblem;
 use bsf::skeleton::master::run_master;
 use bsf::transport::{build_thread_transport, debug_assert_drained, Communicator, Tag};
 use bsf::util::codec::Codec;
@@ -52,6 +53,27 @@ fn healthy_world_verifies_clean() {
     // Jacobi's element-wise disjoint-support reduce is split-invariant,
     // so the strong Redistribute byte-equality check was enforced.
     assert!(report.split_invariant, "jacobi reduce must be split-invariant");
+}
+
+#[test]
+fn pagerank_world_verifies_clean() {
+    // The variable-length wire leg: pagerank's reduce element is a
+    // sparse, length-prefixed `Vec<(u32, i64)>`, so every explored
+    // schedule carries frames whose payload size depends on which
+    // blocks folded where — a shape no fixed-size problem puts on the
+    // wire. The same invariants must hold: no deadlock, no misroute,
+    // no orphan, and bit-identical results across schedules (the
+    // fixed-point contributions make any fold grouping exact).
+    let report = run_verify(|| PageRankProblem::new(8, 2, 1e-30, 7), &small_cfg());
+    assert!(
+        report.ok(),
+        "pagerank world must verify clean, got violations:\n{}",
+        report.violations.join("\n")
+    );
+    assert_eq!(report.reference_iterations, 3, "eps must be unreachable");
+    assert_eq!(report.base_schedules, 8);
+    assert!(report.fault_schedules > 0);
+    assert!(report.redistribute_losses >= 1, "no Redistribute loss fired");
 }
 
 #[test]

@@ -16,7 +16,11 @@
 //! * **L4 — wire-size constants match their decoder shape.** A
 //!   `*_WIRE_BYTES = N * 8` constant must agree with the field count of
 //!   the `type Wire = (…)` tuple it guards, or version-skew rejection
-//!   breaks exactly when the wire format changes.
+//!   breaks exactly when the wire format changes. Variable-length wire
+//!   shapes (length-prefixed `Vec` payloads, e.g. pagerank's sparse
+//!   reduce element) opt out with a `// lint: variable-wire` marker on
+//!   the declaration or the line above it — and a fixed `*_WIRE_BYTES`
+//!   constant guarding a marked shape is itself flagged as drift.
 //! * **L5 — unwrap ratchet.** The count of `.unwrap()`/`.expect(` in
 //!   non-test `skeleton/` + `transport/` code must not exceed the budget
 //!   in `tools/bsf-lint/unwrap-ratchet.txt`. It can only go down: shrink
@@ -295,14 +299,53 @@ fn check_send_recv_coverage(
     }
 }
 
+/// The L4 escape hatch: marks a `type Wire` as variable-length by
+/// design (length-prefixed `Vec` payloads), on the wire line itself or
+/// the line directly above it. A marked shape is exempt from the
+/// fixed-size field-count check — and conversely a `*_WIRE_BYTES`
+/// constant pointing at one is drift, because no fixed byte count can
+/// guard a variable payload.
+const VARIABLE_WIRE_MARKER: &str = "// lint: variable-wire";
+
 /// L4: `*_WIRE_BYTES: usize = N * 8` constants must match the leaf count
-/// of the `type Wire = (…)` decoder shape in the same file.
+/// of the `type Wire = (…)` decoder shape in the same file; a
+/// variable-length `type Wire` (anything carrying a `Vec<` or `String`)
+/// must instead carry the [`VARIABLE_WIRE_MARKER`] escape hatch.
 fn check_wire_sizes(sources: &[SourceFile], v: &mut Vec<String>) {
     const SCALARS: &[&str] = &[
         "usize", "u64", "u32", "u16", "u8", "f64", "f32", "i64", "i32", "i16", "i8", "bool",
     ];
     for s in sources {
-        for (no, line) in non_test_lines(&s.text) {
+        // The file's `type Wire` declarations, each with its marker and
+        // variable-size verdicts (the marker may sit on the preceding
+        // line, typically closing a doc comment).
+        let all: Vec<(usize, &str)> = non_test_lines(&s.text).collect();
+        let wires: Vec<(usize, &str, bool, bool)> = all
+            .iter()
+            .enumerate()
+            .filter_map(|(idx, &(no, l))| {
+                if is_comment(l) || !l.contains("type Wire = ") {
+                    return None;
+                }
+                let marked = l.contains(VARIABLE_WIRE_MARKER)
+                    || (idx > 0 && all[idx - 1].1.contains(VARIABLE_WIRE_MARKER));
+                let variable = l.contains("Vec<") || l.contains("String");
+                Some((no, l, variable, marked))
+            })
+            .collect();
+
+        for &(wno, _, variable, marked) in &wires {
+            if variable && !marked {
+                v.push(format!(
+                    "{}:{wno}: variable-length `type Wire` without the \
+                     `{VARIABLE_WIRE_MARKER}` marker — the fixed-size wire check \
+                     cannot guard it; annotate the shape as variable by design",
+                    s.rel
+                ));
+            }
+        }
+
+        for &(no, line) in &all {
             if is_comment(line) || !line.contains("_WIRE_BYTES: usize") {
                 continue;
             }
@@ -318,15 +361,21 @@ fn check_wire_sizes(sources: &[SourceFile], v: &mut Vec<String>) {
                 ));
                 continue;
             };
-            let wire_line = non_test_lines(&s.text)
-                .find(|(_, l)| !is_comment(l) && l.contains("type Wire = "));
-            match wire_line {
+            match wires.first() {
                 None => v.push(format!(
                     "{}:{no}: wire-size constant has no `type Wire = (…)` decoder \
                      shape in this file to check against",
                     s.rel
                 )),
-                Some((wno, wl)) => {
+                Some(&(wno, _, variable, marked)) if variable || marked => {
+                    v.push(format!(
+                        "{}:{no}: fixed wire-size constant guards the \
+                         variable-wire shape on line {wno} — a byte-count check \
+                         cannot hold for length-prefixed payloads",
+                        s.rel
+                    ));
+                }
+                Some(&(wno, wl, _, _)) => {
                     let leaves = wl
                         .split(|c: char| !c.is_ascii_alphanumeric())
                         .filter(|t| SCALARS.contains(t))
@@ -495,6 +544,55 @@ mod tests {
         let report = lint(&fx, 0);
         assert!(
             report.violations.iter().any(|v| v.contains("encoder/decoder drift")),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn variable_wire_requires_the_marker() {
+        let mut fx = clean_fixture();
+        fx.push(file(
+            "problems/sparse.rs",
+            "type Wire = Vec<(u32, i64)>;\n",
+        ));
+        let report = lint(&fx, 0);
+        assert!(
+            report.violations.iter().any(|v| v.contains("variable-wire")),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn marked_variable_wire_passes_same_line_or_preceding_comment() {
+        let mut fx = clean_fixture();
+        fx.push(file(
+            "problems/sparse.rs",
+            "type Wire = Vec<(u32, i64)>; // lint: variable-wire\n",
+        ));
+        fx.push(file(
+            "problems/sparse2.rs",
+            "/// Sparse by design. // lint: variable-wire\ntype Wire = Vec<(u32, i64)>;\n",
+        ));
+        let report = lint(&fx, 0);
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn fixed_size_constant_over_variable_wire_fails() {
+        let mut fx = clean_fixture();
+        fx.push(file(
+            "problems/sparse.rs",
+            "pub(crate) const SPARSE_WIRE_BYTES: usize = 2 * 8;\n\
+             type Wire = Vec<(u32, i64)>; // lint: variable-wire\n",
+        ));
+        let report = lint(&fx, 0);
+        assert!(
+            report
+                .violations
+                .iter()
+                .any(|v| v.contains("cannot hold for length-prefixed")),
             "{:?}",
             report.violations
         );
