@@ -80,14 +80,25 @@ pub struct BenchCase {
     pub max_iter: usize,
     /// Extra problem knob (montecarlo: samples per block; 0 = unused).
     pub samples: usize,
+    /// Double-buffered orders (`BsfConfig::overlap`): the pooled,
+    /// overlapped hot path. Bit-identical results; a separate grid row
+    /// so its wall-clock is gated independently.
+    pub overlap: bool,
 }
 
 impl BenchCase {
     /// Stable identity of a case inside a suite (the comparison key).
+    /// Overlapped rows get a `/ov` suffix so they never collide with
+    /// their non-overlapped twin at the same (problem, engine, n, K, T).
     pub fn key(&self) -> String {
         format!(
-            "{}/{}/n{}/K{}/T{}",
-            self.problem, self.engine, self.n, self.workers, self.threads_per_worker
+            "{}/{}/n{}/K{}/T{}{}",
+            self.problem,
+            self.engine,
+            self.n,
+            self.workers,
+            self.threads_per_worker,
+            if self.overlap { "/ov" } else { "" }
         )
     }
 }
@@ -136,9 +147,14 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
         eps: GRID_EPS,
         max_iter: GRID_MAX_ITER,
         samples,
+        overlap: false,
     };
     let mc_case = |mut c: BenchCase| {
         c.eps = MC_TOL;
+        c
+    };
+    let ov_case = |mut c: BenchCase| {
+        c.overlap = true;
         c
     };
     match mode {
@@ -153,16 +169,22 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
         // The pagerank/kmeans rows exercise the variable-length sparse
         // wire path (length-prefixed Vec ReduceElems) the fixed-size
         // jacobi/montecarlo rows never touch.
+        // The `/ov` twins run the same case with double-buffered orders
+        // (`BsfConfig::overlap`) — the pooled, overlapped hot path —
+        // next to their synchronous siblings at the largest quick-grid
+        // K, so its throughput is gated by the same tolerance band.
         "quick" => Ok(vec![
             case("jacobi", "serial", 96, 1, 1, 0),
             case("jacobi", "threaded", 96, 2, 1, 0),
             case("jacobi", "threaded", 96, 2, 2, 0),
+            ov_case(case("jacobi", "threaded", 96, 2, 2, 0)),
             case("jacobi", "process", 96, 2, 2, 0),
             case("jacobi", "cluster", 96, 2, 2, 0),
             mc_case(case("montecarlo", "serial", 64, 1, 1, 2000)),
             mc_case(case("montecarlo", "threaded", 64, 2, 2, 2000)),
             case("pagerank", "serial", 64, 1, 1, 0),
             case("pagerank", "threaded", 64, 2, 2, 0),
+            ov_case(case("pagerank", "threaded", 64, 2, 2, 0)),
             case("kmeans", "serial", 64, 1, 1, 0),
             case("kmeans", "threaded", 64, 2, 2, 0),
         ]),
@@ -172,6 +194,7 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
             case("jacobi", "threaded", 384, 4, 1, 0),
             case("jacobi", "threaded", 384, 2, 2, 0),
             case("jacobi", "threaded", 384, 2, 4, 0),
+            ov_case(case("jacobi", "threaded", 384, 4, 1, 0)),
             case("jacobi", "process", 384, 2, 2, 0),
             case("jacobi", "cluster", 384, 2, 2, 0),
             mc_case(case("montecarlo", "serial", 128, 1, 1, 20_000)),
@@ -180,6 +203,7 @@ pub fn grid(mode: &str) -> Result<Vec<BenchCase>, BsfError> {
             case("pagerank", "serial", 256, 1, 1, 0),
             case("pagerank", "threaded", 256, 2, 2, 0),
             case("pagerank", "threaded", 256, 4, 2, 0),
+            ov_case(case("pagerank", "threaded", 256, 4, 2, 0)),
             case("kmeans", "serial", 256, 1, 1, 0),
             case("kmeans", "threaded", 256, 2, 2, 0),
             case("kmeans", "threaded", 256, 4, 2, 0),
@@ -227,7 +251,8 @@ fn run_problem<P: BsfProblem>(
 ) -> Result<BenchRecord, BsfError> {
     let cfg = BsfConfig::with_workers(case.workers)
         .threads_per_worker(case.threads_per_worker)
-        .max_iter(case.max_iter);
+        .max_iter(case.max_iter)
+        .overlapped(case.overlap);
 
     // A cluster case spawns its persistent workers ONCE, outside the
     // timed samples: every run below reuses the same processes and
@@ -367,6 +392,7 @@ impl BenchSuite {
                     ("n", Json::Num(r.case.n as f64)),
                     ("workers", Json::Num(r.case.workers as f64)),
                     ("threads_per_worker", Json::Num(r.case.threads_per_worker as f64)),
+                    ("overlap", Json::Bool(r.case.overlap)),
                     ("iterations", Json::Num(r.iterations as f64)),
                     ("wall_seconds", Json::Num(r.wall_seconds)),
                     (
@@ -453,6 +479,11 @@ impl BenchSuite {
                     eps: GRID_EPS,
                     max_iter: GRID_MAX_ITER,
                     samples: 0,
+                    // Pre-`/ov` baselines omit the field: default false.
+                    overlap: item
+                        .get("overlap")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
                 },
                 iterations: num_field(item, "iterations")? as usize,
                 wall_seconds: num_field(item, "wall_seconds")?,
@@ -622,6 +653,7 @@ mod tests {
                 eps: 1e-12,
                 max_iter: 100_000,
                 samples: 0,
+                overlap: false,
             },
             iterations,
             wall_seconds: wall,
@@ -642,6 +674,26 @@ mod tests {
         assert!(quick.iter().any(|c| c.engine == "process"));
         assert!(grid("full").unwrap().len() > quick.len());
         assert!(grid("nope").is_err());
+        // Both modes carry overlapped rows, and every one sits next to a
+        // non-overlapped twin at the same (problem, engine, n, K, T) so
+        // the gate can see the pooled+overlapped path's relative cost.
+        for mode in ["quick", "full"] {
+            let cases = grid(mode).unwrap();
+            let ov: Vec<_> = cases.iter().filter(|c| c.overlap).collect();
+            assert!(!ov.is_empty(), "{mode}: no overlapped rows");
+            for o in ov {
+                assert!(o.key().ends_with("/ov"), "{}", o.key());
+                assert!(
+                    cases.iter().any(|c| !c.overlap
+                        && c.problem == o.problem
+                        && c.engine == o.engine
+                        && c.n == o.n
+                        && c.workers == o.workers),
+                    "{mode}: overlapped case {} has no synchronous twin",
+                    o.key()
+                );
+            }
+        }
         // Every process case has its amortized cluster twin at the same
         // (problem, n, K, T) — the spawn/connect-saving comparison.
         for mode in ["quick", "full"] {
@@ -670,6 +722,22 @@ mod tests {
         assert_eq!(parsed.records[0].iterations, 117);
         assert_eq!(parsed.records[0].case.key(), "jacobi/serial/n96/K1/T1");
         assert!((parsed.records[0].wall_seconds - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_rides_the_key_and_the_json() {
+        let mut ov = record(96, 117, 0.002);
+        ov.case.overlap = true;
+        assert_eq!(ov.case.key(), "jacobi/serial/n96/K1/T1/ov");
+        let s = suite("pr", vec![record(96, 117, 0.002), ov], false);
+        let parsed = BenchSuite::parse(&s.to_json()).unwrap();
+        assert!(!parsed.records[0].case.overlap);
+        assert!(parsed.records[1].case.overlap);
+        assert_eq!(parsed.records[1].case.key(), "jacobi/serial/n96/K1/T1/ov");
+        // A pre-`/ov` document (no "overlap" field) parses as false.
+        let legacy = s.to_json().replace("\"overlap\": true,", "");
+        let parsed = BenchSuite::parse(&legacy).unwrap();
+        assert!(parsed.records.iter().all(|r| !r.case.overlap));
     }
 
     #[test]

@@ -129,6 +129,10 @@ options by subcommand:
     --heartbeat N  workers report health (TAG_HEARTBEAT) every N
                    iterations; 0 disables (default 0, or 8 when
                    telemetry is on)
+    --overlap      double-buffered orders: pre-send iteration i+1's
+                   order right after deciding iteration i so workers
+                   start the next map early; bit-identical results
+                   (run only; off by default)
     --fault P      abort | redistribute | restart — what to do when a
                    worker is lost mid-run (default abort; redistribute
                    re-splits over the survivors, restart relaunches at
@@ -588,6 +592,12 @@ fn finish<Param>(
         let ranks: Vec<String> = r.rejoined.iter().map(|r| r.to_string()).collect();
         eprintln!("rejoined={}", ranks.join(","));
     }
+    // Best-effort release/unpark sends that failed (recorded instead of
+    // silently swallowed): diagnostics, so stderr like the rest.
+    let teardown = r.teardown_summary();
+    if !teardown.is_empty() {
+        eprintln!("{teardown}");
+    }
     println!("result: {}", describe(&r.param));
     Ok(())
 }
@@ -596,7 +606,7 @@ const RUN_OPTS: &[&str] = &[
     "n", "k", "workers", "omp", "threads-per-worker", "seed", "run-seed", "eps",
     "trace", "max-iter", "deadline", "engine", "backend", "profile", "steps",
     "samples", "listen", "fault", "max-losses", "kill-rank", "kill-after-folds",
-    "metrics-addr", "metrics-interval", "events", "heartbeat",
+    "metrics-addr", "metrics-interval", "events", "heartbeat", "overlap",
 ];
 
 /// Run one problem to completion under the chosen engine. The
@@ -666,6 +676,7 @@ fn cmd_run(args: &ArgMap, engine: EngineOpt) -> Result<(), BsfError> {
         ));
     }
     let mut c = common_from(args)?;
+    c.cfg.overlap = args.flag("overlap");
 
     // Live telemetry: `--events jsonl` streams schema-versioned
     // iteration events to stderr (stdout stays reserved for results);

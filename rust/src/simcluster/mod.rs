@@ -757,8 +757,10 @@ impl<P: BsfProblem> Driver<P> for SimDriver<P> {
             bytes: core.stats.byte_count(),
             volume: core.stats.volume(),
             losses: core.losses,
-            // The simulator's FaultPlan kills; it has no rejoin channel.
+            // The simulator's FaultPlan kills; it has no rejoin channel
+            // and no real transport whose teardown sends could fail.
             rejoined: Vec::new(),
+            teardown_errors: Vec::new(),
         })
     }
 }

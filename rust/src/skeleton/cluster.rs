@@ -93,6 +93,7 @@ fn cluster_report<Param>(
         volume,
         losses: outcome.losses,
         rejoined: outcome.rejoined,
+        teardown_errors: outcome.teardown_errors,
     }
 }
 
@@ -530,7 +531,7 @@ pub fn serve_worker<P: BsfProblem>(
                 m.payload.len()
             )));
         }
-        comm.send(master, TAG_JOB_ACK, m.payload)?;
+        comm.send_frame(master, TAG_JOB_ACK, m.payload)?;
         let report = run_worker_guarded_with_pool(problem, backend, comm, cfg, pool.as_ref())?;
         comm.send(master, TAG_WORKER_REPORT, report.to_wire())?;
     }

@@ -54,6 +54,13 @@ pub struct BsfConfig {
     /// disables heartbeats entirely — no extra messages, bit-identical
     /// traffic to pre-telemetry runs.
     pub heartbeat_every: usize,
+    /// Double-buffered orders: the master pre-sends iteration i+1's
+    /// order right after deciding iteration i, so workers begin their
+    /// next map while the master still drains heartbeats and records
+    /// telemetry. Valid under the BSF model (order i+1 depends only on
+    /// reduce i) and bit-identical to the non-overlapped run — workers
+    /// see the same message sequence, just earlier. Off by default.
+    pub overlap: bool,
 }
 
 impl Default for BsfConfig {
@@ -68,6 +75,7 @@ impl Default for BsfConfig {
             fault: FaultPolicy::Abort,
             telemetry: None,
             heartbeat_every: 0,
+            overlap: false,
         }
     }
 }
@@ -143,6 +151,12 @@ impl BsfConfig {
         self
     }
 
+    /// Enable double-buffered orders (see [`overlap`](Self::overlap)).
+    pub fn overlapped(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
     /// The effective iteration cap: `max_iter` tightened by the stop
     /// policy's cap when one is set.
     pub fn effective_max_iter(&self) -> usize {
@@ -170,6 +184,8 @@ mod tests {
         assert_eq!(c.fault, FaultPolicy::Abort, "abort is the default policy");
         assert!(c.telemetry.is_none(), "telemetry is opt-in");
         assert_eq!(c.heartbeat_every, 0, "heartbeats are opt-in");
+        assert!(!c.overlap, "overlapped orders are opt-in");
+        assert!(BsfConfig::default().overlapped(true).overlap);
     }
 
     #[test]

@@ -432,6 +432,7 @@ impl<P: BsfProblem> Driver<P> for SerialDriver<P> {
             // The serial engine has no separate workers to lose.
             losses: Vec::new(),
             rejoined: Vec::new(),
+            teardown_errors: Vec::new(),
         })
     }
 }

@@ -45,23 +45,33 @@ use crate::skeleton::config::BsfConfig;
 use crate::skeleton::driver::{start_state, Checkpoint, IterationEvent, StopReason};
 use crate::skeleton::fault::{redistribute, FaultPolicy, TAG_REASSIGN, TAG_REJOIN};
 use crate::skeleton::problem::{BsfProblem, IterCtx};
-use crate::skeleton::reduce::{merge_folds, ExtendedFold};
+use crate::skeleton::reduce::ExtendedFold;
 use crate::skeleton::report::Clock;
 use crate::skeleton::runner::validate_run;
 use crate::skeleton::worker::WorkerReport;
 use crate::transport::tags::TAG_HEARTBEAT;
-use crate::transport::{Communicator, Tag, VolumeByTag};
+use crate::transport::{Communicator, FrameBuf, FramePool, Tag, VolumeByTag};
 use crate::util::codec::Codec;
 
-/// Best-effort shutdown broadcast: tell every listed worker to exit,
-/// ignoring unreachable ones. Used on every master-side error path so
-/// surviving (and fault-injected "dead" but parked) workers terminate
-/// instead of blocking the runner's join.
-fn abort_ranks<C: Communicator + ?Sized>(comm: &C, ranks: &[usize]) {
+/// Best-effort shutdown broadcast: tell every listed worker to exit.
+/// Used on every master-side error path so surviving (and fault-injected
+/// "dead" but parked) workers terminate instead of blocking the runner's
+/// join. Unreachable ranks don't stop the broadcast, but their failures
+/// are returned so the caller can record them (the teardown summary)
+/// instead of silently dropping them.
+#[must_use = "teardown send failures must be recorded, not dropped"]
+fn abort_ranks<C: Communicator + ?Sized>(
+    comm: &C,
+    ranks: &[usize],
+) -> Vec<(usize, String)> {
     let payload = true.to_bytes();
+    let mut failed = Vec::new();
     for &w in ranks {
-        let _ = comm.send(w, Tag::Exit, payload.clone());
+        if let Err(e) = comm.send(w, Tag::Exit, payload.clone()) {
+            failed.push((w, e.to_string()));
+        }
     }
+    failed
 }
 
 /// Steps 7-9 of Algorithm 2, shared by every engine: `process_results`
@@ -142,6 +152,12 @@ pub struct MasterOutcome<Param> {
     /// Physical worker ranks re-admitted via `TAG_REJOIN` after a loss
     /// (chronological).
     pub rejoined: Vec<usize>,
+    /// Best-effort teardown/unpark sends that failed (`"rank N: ..."`),
+    /// chronological. Exit/abort broadcasts and rejoin unparks are
+    /// deliberately fire-and-forget — a dead peer must not stop the
+    /// release of the survivors — but the failures are recorded here
+    /// instead of being silently swallowed.
+    pub teardown_errors: Vec<String>,
 }
 
 /// The master's iteration state machine: everything Algorithm 2 keeps
@@ -184,6 +200,30 @@ pub(crate) struct MasterLoop<P: BsfProblem> {
     /// does not inherit the first run's traffic. `None` until telemetry
     /// observes the first iteration (and always `None` telemetry-off).
     telemetry_base: Option<VolumeByTag>,
+    /// Reusable frames for the per-iteration order broadcast: the order
+    /// is encoded once per round into a pooled buffer and the same frame
+    /// is reference-shared to all K workers — steady-state iterations
+    /// allocate nothing on the send side.
+    order_pool: FramePool,
+    /// Pre-encoded `exit=true` / `exit=false` broadcast payloads (the
+    /// flag byte never changes, so neither frame is ever re-encoded).
+    exit_true: FrameBuf,
+    exit_false: FrameBuf,
+    /// Reusable scratch for per-rank send failures: empty in steady
+    /// state (no allocation), drained through `absorb_or_fail` whenever
+    /// a broadcast loses a rank.
+    send_failures: Vec<(usize, BsfError)>,
+    /// Ranks the overlapped (pre-sent) order went to — reusable scratch,
+    /// meaningful only while `order_in_flight`.
+    presend_targets: Vec<usize>,
+    /// True when `cfg.overlap` pre-sent the next round's order at the
+    /// tail of the previous `step_comm` — the next gather must not send
+    /// it again, and the boundary stray-fold guard is void (early folds
+    /// are legitimate).
+    order_in_flight: bool,
+    /// Suppressed best-effort send failures (see
+    /// [`MasterOutcome::teardown_errors`]).
+    teardown: Vec<String>,
 }
 
 impl<P: BsfProblem> MasterLoop<P> {
@@ -240,6 +280,13 @@ impl<P: BsfProblem> MasterLoop<P> {
             released: false,
             elapsed_done: 0.0,
             telemetry_base: None,
+            order_pool: FramePool::new(),
+            exit_true: FrameBuf::from_vec(true.to_bytes()),
+            exit_false: FrameBuf::from_vec(false.to_bytes()),
+            send_failures: Vec::new(),
+            presend_targets: Vec::new(),
+            order_in_flight: false,
+            teardown: Vec::new(),
         })
     }
 
@@ -274,8 +321,32 @@ impl<P: BsfProblem> MasterLoop<P> {
         if self.released {
             return;
         }
-        abort_ranks(comm, &self.all_ranks);
+        // An overlapped order is still in flight: every delivered copy
+        // owes exactly one fold. Collect them before the exit broadcast
+        // so an early finish leaves a drained endpoint (best-effort: a
+        // rank that died, or whose pre-send already failed, is skipped).
+        if std::mem::replace(&mut self.order_in_flight, false) {
+            let targets = std::mem::take(&mut self.presend_targets);
+            for &w in &targets {
+                let undelivered = self.send_failures.iter().any(|&(f, _)| f == w);
+                if !undelivered && self.alive.contains(&w) {
+                    let _ = comm.recv_tags(Some(w), &[Tag::Fold, Tag::Abort]);
+                }
+            }
+            self.presend_targets = targets;
+            self.send_failures.clear();
+        }
+        let failed = abort_ranks(comm, &self.all_ranks);
+        self.record_teardown(failed);
         self.released = true;
+    }
+
+    /// Fold `abort_ranks`/unpark failures into the run's teardown
+    /// summary (surfaced via [`MasterOutcome::teardown_errors`]).
+    fn record_teardown(&mut self, failed: Vec<(usize, String)>) {
+        for (w, reason) in failed {
+            self.teardown.push(format!("rank {w}: release send failed: {reason}"));
+        }
     }
 
     /// Snapshot the outcome (after the stop event, or early — in which
@@ -292,6 +363,7 @@ impl<P: BsfProblem> MasterLoop<P> {
             timers: self.timers.clone(),
             losses: self.losses.clone(),
             rejoined: self.rejoined.clone(),
+            teardown_errors: self.teardown.clone(),
         }
     }
 
@@ -374,8 +446,17 @@ impl<P: BsfProblem> MasterLoop<P> {
                 // Unpark: a rejoiner waits at the top of its loop;
                 // exit=false is benign there, and walks one parked at
                 // step 10 back to the top — where the coming REASSIGN +
-                // order pick it up.
-                let _ = comm.send(r, Tag::Exit, false.to_bytes());
+                // order pick it up. If the unpark itself cannot be
+                // delivered, the rejoiner can't take part in the coming
+                // round: leave it on the lost list (it may announce
+                // again) and record the failure instead of re-admitting
+                // a worker that never woke up.
+                if let Err(e) = comm.send_frame(r, Tag::Exit, self.exit_false.clone())
+                {
+                    self.teardown
+                        .push(format!("rank {r}: rejoin unpark send failed: {e}"));
+                    continue;
+                }
                 let pos = self
                     .alive
                     .iter()
@@ -417,10 +498,10 @@ impl<P: BsfProblem> MasterLoop<P> {
         // Unpark the survivors: exit=false walks a worker parked at
         // step 10 back to the top of its loop; one already at the top
         // treats it as a no-op. The REASSIGN + re-sent order follow.
-        let unpark = false.to_bytes();
+        let unpark = self.exit_false.clone();
         let mut failures: Vec<(usize, BsfError)> = Vec::new();
         for &w in &self.alive {
-            if let Err(e) = comm.send(w, Tag::Exit, unpark.clone()) {
+            if let Err(e) = comm.send_frame(w, Tag::Exit, unpark.clone()) {
                 failures.push((w, e));
             }
         }
@@ -431,15 +512,78 @@ impl<P: BsfProblem> MasterLoop<P> {
         Ok(())
     }
 
-    /// Steps 2 + 5 of Algorithm 2 as one fault-aware unit: broadcast the
-    /// order to the survivors and gather their folds in logical-rank
-    /// order. Any absorbed loss re-plans the split and re-runs the round
-    /// on the survivors, so on success the returned folds always belong
-    /// to one complete, consistent round.
-    fn gather_round<C: Communicator + ?Sized>(
+    /// Encode this round's order once into a pooled frame. Field-wise
+    /// encoding into the reused buffer produces exactly the bytes of
+    /// `(job, iter, param.clone()).to_bytes()` (the tuple codec is plain
+    /// concatenation) without the per-round param clone or fresh `Vec`.
+    fn encode_order(&self) -> FrameBuf {
+        self.order_pool.frame_with(|b| {
+            self.job.encode(b);
+            self.iter.encode(b);
+            self.param.encode(b);
+        })
+    }
+
+    /// Broadcast `frame` under `tag` to every live worker, one reference
+    /// bump per rank; failures land in the `send_failures` scratch
+    /// (empty in steady state — the whole broadcast is allocation-free).
+    fn broadcast_frame<C: Communicator + ?Sized>(
         &mut self,
         comm: &C,
-    ) -> Result<Vec<ExtendedFold<P::ReduceElem>>, BsfError> {
+        tag: Tag,
+        frame: &FrameBuf,
+    ) {
+        debug_assert!(self.send_failures.is_empty(), "stale send failures");
+        let Self { timers, alive, send_failures, .. } = self;
+        timers.time(Phase::SendOrder, || {
+            for &w in alive.iter() {
+                if let Err(e) = comm.send_frame(w, tag, frame.clone()) {
+                    send_failures.push((w, e));
+                }
+            }
+        });
+    }
+
+    /// Drain the `send_failures` scratch through `absorb_or_fail`,
+    /// returning whether any failure was absorbed. The scratch's
+    /// capacity survives (no steady-state allocation on re-use).
+    fn absorb_send_failures(&mut self) -> Result<bool, BsfError> {
+        if self.send_failures.is_empty() {
+            return Ok(false);
+        }
+        let mut failures = std::mem::take(&mut self.send_failures);
+        for (w, e) in failures.drain(..) {
+            self.absorb_or_fail(w, e)?;
+        }
+        self.send_failures = failures;
+        Ok(true)
+    }
+
+    /// Steps 2 + 5 + 6 of Algorithm 2 as one fault-aware unit: broadcast
+    /// the order to the survivors, gather their folds in logical-rank
+    /// order and merge them incrementally with ⊕ (the same left fold
+    /// `merge_folds` computes, absorbed as each fold arrives so the
+    /// round holds no fold list). Any absorbed loss re-plans the split
+    /// and re-runs the round on the survivors, so on success the merged
+    /// fold always belongs to one complete, consistent round.
+    fn gather_round<C: Communicator + ?Sized>(
+        &mut self,
+        problem: &P,
+        comm: &C,
+    ) -> Result<ExtendedFold<P::ReduceElem>, BsfError> {
+        // Overlap hand-off: a pre-sent order stands in for this round's
+        // broadcast — unless a pre-send failure or a rejoin re-shaped
+        // the world after it went out, in which case the delivered
+        // copies' folds are drained and the round re-sends from scratch.
+        let pre_sent = std::mem::replace(&mut self.order_in_flight, false);
+        let mut skip_send = pre_sent;
+        if pre_sent && (!self.send_failures.is_empty() || self.reassign_pending) {
+            self.absorb_send_failures()?;
+            let pending = self.presend_targets.clone();
+            self.drain_and_replan(comm, &pending)?;
+            skip_send = false;
+        }
+
         'round: loop {
             if self.alive.is_empty() {
                 return Err(BsfError::transport(
@@ -447,61 +591,51 @@ impl<P: BsfProblem> MasterLoop<P> {
                 ));
             }
 
-            // Announce the split when it changed (loss, rejoin, or a
-            // persistent cluster resuming on a shrunk pool).
-            if self.reassign_pending {
-                let plan = redistribute(self.list_len, &self.alive);
-                let mut failures: Vec<(usize, BsfError)> = Vec::new();
-                for a in &plan {
-                    let payload =
-                        (a.logical, plan.len(), a.offset, a.length).to_bytes();
-                    if let Err(e) = comm.send(a.physical, TAG_REASSIGN, payload) {
-                        failures.push((a.physical, e));
+            if skip_send {
+                // The overlapped broadcast already delivered this
+                // round's order (and `reassign_pending` is clear, or we
+                // would have re-planned above).
+                skip_send = false;
+            } else {
+                // Announce the split when it changed (loss, rejoin, or a
+                // persistent cluster resuming on a shrunk pool).
+                if self.reassign_pending {
+                    let plan = redistribute(self.list_len, &self.alive);
+                    let mut failures: Vec<(usize, BsfError)> = Vec::new();
+                    for a in &plan {
+                        let payload =
+                            (a.logical, plan.len(), a.offset, a.length).to_bytes();
+                        if let Err(e) = comm.send(a.physical, TAG_REASSIGN, payload) {
+                            failures.push((a.physical, e));
+                        }
                     }
+                    if !failures.is_empty() {
+                        for (w, e) in failures {
+                            self.absorb_or_fail(w, e)?;
+                        }
+                        continue 'round;
+                    }
+                    self.reassign_pending = false;
                 }
-                if !failures.is_empty() {
-                    for (w, e) in failures {
-                        self.absorb_or_fail(w, e)?;
-                    }
+
+                // Step 2: SendToAllWorkers(x^(i)) — the order carries
+                // (job, iterations-completed, param). Shipping the
+                // master's iteration counter keeps the workers'
+                // `SkelVars::iter_counter` equal to the master's even on
+                // a *resumed* run — without it, a worker restarted from
+                // a checkpoint would see a counter rebased to 0 and any
+                // iteration-dependent map (e.g. montecarlo's
+                // counter-seeded RNG) would diverge from the
+                // uninterrupted run. Encoded once; every rank gets a
+                // reference to the same pooled frame.
+                let frame = self.encode_order();
+                self.broadcast_frame(comm, Tag::Order, &frame);
+                if self.absorb_send_failures()? {
+                    // Survivors that did get the order owe a fold.
+                    let ordered = self.alive.clone();
+                    self.drain_and_replan(comm, &ordered)?;
                     continue 'round;
                 }
-                self.reassign_pending = false;
-            }
-
-            // Step 2: SendToAllWorkers(x^(i)) — the order carries (job,
-            // iterations-completed, param). Shipping the master's
-            // iteration counter keeps the workers' `SkelVars::iter_counter`
-            // equal to the master's even on a *resumed* run — without it,
-            // a worker restarted from a checkpoint would see a counter
-            // rebased to 0 and any iteration-dependent map (e.g.
-            // montecarlo's counter-seeded RNG) would diverge from the
-            // uninterrupted run.
-            let payload = (self.job, self.iter, <P::Param as Clone>::clone(&self.param))
-                .to_bytes();
-            let targets = self.alive.clone();
-            let send_results: Vec<(usize, Result<(), BsfError>)> = {
-                let timers = &mut self.timers;
-                timers.time(Phase::SendOrder, || {
-                    targets
-                        .iter()
-                        .map(|&w| (w, comm.send(w, Tag::Order, payload.clone())))
-                        .collect()
-                })
-            };
-            let mut ordered: Vec<usize> = Vec::with_capacity(targets.len());
-            let mut lost_in_send = false;
-            for (w, r) in send_results {
-                match r {
-                    Ok(()) => ordered.push(w),
-                    Err(e) => {
-                        self.absorb_or_fail(w, e)?;
-                        lost_in_send = true;
-                    }
-                }
-            }
-            if lost_in_send {
-                self.drain_and_replan(comm, &ordered)?;
-                continue 'round;
             }
 
             // Step 5: RecvFromWorkers(s_0, ..., s_{K'-1}), received and
@@ -510,9 +644,11 @@ impl<P: BsfProblem> MasterLoop<P> {
             // deterministic (no run-to-run float reassociation from
             // scheduling), and a loss mid-gather names exactly which
             // rank died. Out-of-order arrivals are buffered by the
-            // transport's selective receive.
-            let mut folds: Vec<ExtendedFold<P::ReduceElem>> =
-                Vec::with_capacity(self.alive.len());
+            // transport's selective receive. Step 6 (Reduce) happens
+            // inline: each fold is absorbed into the accumulator as it
+            // arrives — the identical left fold, with the merge cost
+            // still attributed to the MasterReduce phase.
+            let mut merged: ExtendedFold<P::ReduceElem> = ExtendedFold::empty();
             let mut logical = 0usize;
             while logical < self.alive.len() {
                 let w = self.alive[logical];
@@ -532,21 +668,28 @@ impl<P: BsfProblem> MasterLoop<P> {
                         }
                         let (value, counter) =
                             <(Option<P::ReduceElem>, u64)>::from_bytes(&m.payload);
-                        folds.push(ExtendedFold { value, counter });
+                        let job = self.job;
+                        let timers = &mut self.timers;
+                        timers.time(Phase::MasterReduce, || {
+                            merged.absorb(ExtendedFold { value, counter }, |a, b| {
+                                problem.reduce_f(a, b, job)
+                            });
+                        });
                         logical += 1;
                     }
                     Err(e) => {
                         self.absorb_or_fail(w, e)?;
                         // Ranks after `logical` still owe this round's
                         // fold; the ones before already delivered (their
-                        // now-stale folds die with this `folds` vec).
+                        // now-stale partial merge is discarded with this
+                        // round's accumulator).
                         let pending: Vec<usize> = self.alive[logical..].to_vec();
                         self.drain_and_replan(comm, &pending)?;
                         continue 'round;
                     }
                 }
             }
-            return Ok(folds);
+            return Ok(merged);
         }
     }
 
@@ -570,11 +713,11 @@ impl<P: BsfProblem> MasterLoop<P> {
         }
 
         // Cancellation is checked between iterations: release the
-        // workers first (they are blocked waiting for this order), then
-        // surface the typed error.
+        // workers first (they are blocked waiting for this order — or,
+        // under overlap, already mapping it), then surface the typed
+        // error.
         if self.cfg.cancel.is_cancelled() {
-            abort_ranks(comm, &self.all_ranks);
-            self.released = true;
+            self.release(comm);
             return Err(BsfError::Cancelled);
         }
 
@@ -584,34 +727,30 @@ impl<P: BsfProblem> MasterLoop<P> {
         // one means a double-sending or desynchronized worker — the
         // selective per-rank gather would otherwise silently merge it as
         // NEXT round's data, so fail typed here instead (the check the
-        // old gather-from-any loop performed at receive time).
-        if let Some(e) = self.stray_fold(comm) {
-            abort_ranks(comm, &self.all_ranks);
-            self.released = true;
-            return Err(e);
+        // old gather-from-any loop performed at receive time). With an
+        // overlapped order in flight the guard is void: its folds may
+        // legitimately arrive before this step begins.
+        if !self.order_in_flight {
+            if let Some(e) = self.stray_fold(comm) {
+                self.release(comm);
+                return Err(e);
+            }
         }
 
         // Iteration boundary: re-admit lost workers that announced
         // REJOIN while the previous iteration ran.
         self.drain_rejoins(comm);
 
-        // Steps 2 + 5 (fault-aware): one complete round of orders and
-        // folds over the survivors.
-        let folds = match self.gather_round(comm) {
-            Ok(folds) => folds,
+        // Steps 2 + 5 + 6 (fault-aware): one complete round of orders,
+        // folds and the incremental ⊕-merge over the survivors.
+        let merged = match self.gather_round(problem, comm) {
+            Ok(merged) => merged,
             Err(e) => {
                 // Release everyone (survivors included) before reporting.
-                abort_ranks(comm, &self.all_ranks);
-                self.released = true;
+                self.release(comm);
                 return Err(e);
             }
         };
-
-        // Step 6: s := Reduce(⊕, [s_0, ..., s_{K'-1}]).
-        let job = self.job;
-        let merged = self.timers.time(Phase::MasterReduce, || {
-            merge_folds(folds, |a, b| problem.reduce_f(a, b, job))
-        });
 
         // Steps 7-9: Compute / StopCond via process_results + dispatcher
         // + the declarative stop policy.
@@ -647,45 +786,43 @@ impl<P: BsfProblem> MasterLoop<P> {
         // rank lost right here is absorbed under the fault policy (the
         // run is ending, or the next round re-plans without it); an
         // unabsorbed failure still finishes the broadcast before
-        // reporting, so survivors are never stranded.
-        let targets = self.alive.clone();
-        let exit_results: Vec<(usize, Result<(), BsfError>)> = {
-            let timers = &mut self.timers;
-            let payload = exit_flag.to_bytes();
-            timers.time(Phase::SendOrder, || {
-                targets
-                    .iter()
-                    .map(|&w| (w, comm.send(w, Tag::Exit, payload.clone())))
-                    .collect()
-            })
-        };
+        // reporting, so survivors are never stranded. The flag byte is
+        // one of two pre-encoded frames — nothing is allocated.
+        let exit_frame =
+            if exit_flag { self.exit_true.clone() } else { self.exit_false.clone() };
+        self.broadcast_frame(comm, Tag::Exit, &exit_frame);
         let mut fatal: Option<BsfError> = None;
-        for (w, r) in exit_results {
-            if let Err(e) = r {
+        if !self.send_failures.is_empty() {
+            let mut failures = std::mem::take(&mut self.send_failures);
+            for (w, e) in failures.drain(..) {
                 if let Err(e) = self.absorb_or_fail(w, e) {
                     fatal.get_or_insert(e);
                 }
             }
+            self.send_failures = failures;
         }
         if let Some(e) = fatal {
             if !exit_flag {
-                abort_ranks(comm, &self.all_ranks);
+                let failed = abort_ranks(comm, &self.all_ranks);
+                self.record_teardown(failed);
             }
             self.released = true;
             return Err(e);
         }
         if exit_flag {
             // Best-effort release of the *lost* ranks too: a truly dead
-            // peer just errors (ignored), but a fault-injected partition
-            // leaves a real parked worker behind — without this it would
-            // never see exit=true and the driver's join would hang.
+            // peer just errors (recorded in the teardown summary), but a
+            // fault-injected partition leaves a real parked worker
+            // behind — without this it would never see exit=true and
+            // the driver's join would hang.
             let lost: Vec<usize> = self
                 .all_ranks
                 .iter()
                 .copied()
                 .filter(|r| !self.alive.contains(r))
                 .collect();
-            abort_ranks(comm, &lost);
+            let failed = abort_ranks(comm, &lost);
+            self.record_teardown(failed);
             self.released = true;
             // The boundary guard never runs again after the stop event:
             // sweep the final round here so a duplicate fold in the last
@@ -725,6 +862,33 @@ impl<P: BsfProblem> MasterLoop<P> {
             event.param = Some(self.param.clone());
         } else {
             self.job = decision.next_job;
+        }
+
+        // Double-buffered orders (`cfg.overlap`): the next round's order
+        // is fully determined here — param, job and iter are final, and
+        // under the BSF model order i+1 depends only on reduce i — so
+        // pre-send it now and let the workers start mapping while this
+        // step still drains heartbeats and records telemetry. Workers
+        // see the identical message sequence (exit=false, then the
+        // order), just earlier. Skipped when the split is in motion
+        // (a loss during the exit broadcast re-plans first); a pre-send
+        // failure stays in the scratch and is replayed at the next
+        // round's entry.
+        if self.cfg.overlap && !exit_flag && !self.reassign_pending {
+            let frame = self.encode_order();
+            self.presend_targets.clear();
+            self.presend_targets.extend_from_slice(&self.alive);
+            {
+                let Self { timers, presend_targets, send_failures, .. } = self;
+                timers.time(Phase::SendOrder, || {
+                    for &w in presend_targets.iter() {
+                        if let Err(e) = comm.send_frame(w, Tag::Order, frame.clone()) {
+                            send_failures.push((w, e));
+                        }
+                    }
+                });
+            }
+            self.order_in_flight = true;
         }
 
         // Drain worker heartbeats that arrived during the round. This

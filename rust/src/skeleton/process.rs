@@ -322,6 +322,7 @@ impl<P: BsfProblem> Driver<P> for ProcessDriver<P> {
             volume: stats.volume(),
             losses: outcome.losses,
             rejoined: outcome.rejoined,
+            teardown_errors: outcome.teardown_errors,
         })
     }
 }

@@ -99,6 +99,13 @@ pub struct RunReport<Param> {
     /// a loss (chronological; a rank can appear in both lists — lost,
     /// then healed).
     pub rejoined: Vec<usize>,
+    /// Best-effort teardown sends that failed (`"rank N: ..."`). Exit
+    /// and abort broadcasts are deliberately fire-and-forget — a dead
+    /// peer must never stop the release of the survivors — but the
+    /// failures are recorded here instead of being silently swallowed.
+    /// Empty on a clean run; engines without a transport (serial) and
+    /// paths that cannot observe the master's teardown leave it empty.
+    pub teardown_errors: Vec<String>,
 }
 
 impl<Param> RunReport<Param> {
@@ -170,6 +177,21 @@ impl<Param> RunReport<Param> {
             format!("{base} lost={}", ranks.join(","))
         }
     }
+
+    /// One-line summary of suppressed teardown send failures (empty when
+    /// there were none) — diagnostics the CLI keeps on stderr next to
+    /// `phases:`/`traffic:`.
+    pub fn teardown_summary(&self) -> String {
+        if self.teardown_errors.is_empty() {
+            String::new()
+        } else {
+            format!(
+                "teardown: {} undeliverable release send(s): {}",
+                self.teardown_errors.len(),
+                self.teardown_errors.join("; ")
+            )
+        }
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +213,7 @@ mod tests {
             volume: VolumeByTag::default(),
             losses: Vec::new(),
             rejoined: Vec::new(),
+            teardown_errors: Vec::new(),
         }
     }
 

@@ -111,9 +111,11 @@ pub(crate) fn launch_threaded_with<P: BsfProblem>(
     }
     if let Some(e) = spawn_err {
         // Release and reap the workers that did start (they are blocked
-        // waiting for an order) instead of leaking them.
+        // waiting for an order) instead of leaking them. The spawn error
+        // is what the caller needs to see; an unreachable endpoint here
+        // changes nothing about it.
         for (rank, _) in &handles {
-            let _ = master_ep.send(*rank, Tag::Exit, true.to_bytes());
+            let _ = master_ep.send(*rank, Tag::Exit, true.to_bytes()); // lint: teardown-send
         }
         for (_, h) in handles {
             let _ = h.join();
@@ -127,7 +129,7 @@ pub(crate) fn launch_threaded_with<P: BsfProblem>(
         Ok(state) => state,
         Err(e) => {
             for (rank, _) in &handles {
-                let _ = master_ep.send(*rank, Tag::Exit, true.to_bytes());
+                let _ = master_ep.send(*rank, Tag::Exit, true.to_bytes()); // lint: teardown-send
             }
             for (_, h) in handles {
                 let _ = h.join();
@@ -204,6 +206,7 @@ impl<P: BsfProblem> Driver<P> for ThreadedDriver<P> {
             volume: stats.volume(),
             losses: outcome.losses,
             rejoined: outcome.rejoined,
+            teardown_errors: outcome.teardown_errors,
         })
     }
 }

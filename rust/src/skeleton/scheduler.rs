@@ -380,17 +380,32 @@ impl WorkerPool {
             s.free.clear();
             s.lost.clone()
         };
-        self.broadcast_shutdown();
+        // A rank the shutdown broadcast could not reach will never exit
+        // on its own: fold it into the lost set so the reap kills it
+        // without reporting its non-zero exit as an error.
+        let mut lost = lost;
+        for w in self.broadcast_shutdown() {
+            if !lost.contains(&w) {
+                lost.push(w);
+            }
+        }
         self.children.lock().unwrap().reap(REAP_TIMEOUT, &lost)
     }
 
     /// Best-effort exit + SHUTDOWN to every spawned rank (idle members
     /// honor SHUTDOWN; one somehow mid-run honors the exit flag).
-    fn broadcast_shutdown(&self) {
+    /// Returns the ranks that could not be reached — they will not exit
+    /// cleanly and must be treated as lost by the reap.
+    fn broadcast_shutdown(&self) -> Vec<usize> {
+        let mut unreachable = Vec::new();
         for w in 0..self.spawn_k {
-            let _ = self.comm.send(w, Tag::Exit, true.to_bytes());
-            let _ = self.comm.send(w, TAG_SHUTDOWN, Vec::new());
+            let exit = self.comm.send(w, Tag::Exit, true.to_bytes());
+            let shut = self.comm.send(w, TAG_SHUTDOWN, Vec::new());
+            if exit.is_err() && shut.is_err() {
+                unreachable.push(w);
+            }
         }
+        unreachable
     }
 }
 
@@ -401,7 +416,9 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         let already_shut = self.state.lock().unwrap().shut;
         if !already_shut {
-            self.broadcast_shutdown();
+            // Unreachable ranks are stragglers by definition here; the
+            // owned ChildSet's drop kills them right after this.
+            let _unreachable = self.broadcast_shutdown();
         }
     }
 }

@@ -34,7 +34,7 @@ use crate::skeleton::reduce::{fold_extended, ExtendedFold};
 use crate::skeleton::split::sublist_range;
 use crate::skeleton::variables::SkelVars;
 use crate::transport::tags::{TAG_HEARTBEAT, TAG_NEW_RUN, TAG_SHUTDOWN};
-use crate::transport::{debug_assert_drained, Communicator, Tag};
+use crate::transport::{debug_assert_drained, Communicator, FramePool, Tag};
 use crate::util::codec::Codec;
 
 /// Per-worker run summary (used by cost-model calibration, the unified
@@ -185,6 +185,11 @@ pub fn run_worker_with_pool<P: BsfProblem>(
     let mut merge_seconds = 0.0;
     let mut iterations = 0usize;
 
+    // Reusable frames for the per-iteration fold send: once the master's
+    // consumption of iteration i's fold frees its slot, iteration i+1
+    // re-encodes in place — steady state allocates nothing on step 5.
+    let fold_pool = FramePool::new();
+
     let report = |iterations: usize,
                   map_seconds: f64,
                   max_chunk: f64,
@@ -260,9 +265,15 @@ pub fn run_worker_with_pool<P: BsfProblem>(
         merge_seconds += mapped.merge_seconds;
         iterations += 1;
 
-        // Step 5: SendToMaster(s_j).
+        // Step 5: SendToMaster(s_j). Field-wise encoding into the pooled
+        // frame yields exactly the bytes of
+        // `(fold.value, fold.counter).to_bytes()` without a fresh `Vec`.
         let fold = mapped.fold;
-        comm.send(master, Tag::Fold, (fold.value, fold.counter).to_bytes())?;
+        let frame = fold_pool.frame_with(|b| {
+            fold.value.encode(b);
+            fold.counter.encode(b);
+        });
+        comm.send_frame(master, Tag::Fold, frame)?;
 
         // Live telemetry beat: a point-in-time report every N
         // iterations, right behind the fold so the master's
@@ -344,7 +355,17 @@ pub fn run_worker_guarded_with_pool<P: BsfProblem>(
     match run {
         Ok(result) => result,
         Err(_) => {
-            let _ = comm.send(comm.master_rank(), Tag::Abort, Vec::new());
+            // The Abort message is the master's only way to learn of the
+            // panic; if even that cannot be delivered, surface the send
+            // failure alongside the panic instead of pretending the
+            // master was told.
+            if let Err(send_err) = comm.send(comm.master_rank(), Tag::Abort, Vec::new())
+            {
+                return Err(BsfError::transport(format!(
+                    "worker {rank} panicked in map/reduce and the Abort \
+                     notification could not be delivered: {send_err}"
+                )));
+            }
             Err(BsfError::WorkerPanic { rank })
         }
     }

@@ -1,0 +1,260 @@
+//! Shared, reference-counted message frames and the buffer pool behind
+//! the allocation-free hot path (ROADMAP item 2).
+//!
+//! The per-iteration master/worker exchange used to build a fresh
+//! `Vec<u8>` per message per peer: the order payload was encoded once
+//! and then **cloned K times** for the broadcast, and every transport
+//! receive allocated an owned payload vector. [`FrameBuf`] replaces the
+//! owned payload with a cheap `Arc`-backed view — a broadcast encodes
+//! **once** and every worker's mailbox holds a reference-count bump, not
+//! a copy — and [`FramePool`] recycles the backing buffers so a
+//! steady-state iteration performs zero heap allocation on send and
+//! gather (see the pool invariants in `docs/architecture.md`).
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::{Arc, Mutex};
+
+/// An immutable, reference-counted payload frame.
+///
+/// Dereferences to `&[u8]`, so every decode path (`Codec::from_bytes`,
+/// length checks, indexing) reads it exactly like the `Vec<u8>` it
+/// replaced. `Clone` is an `Arc` bump — sharing one frame across a
+/// K-worker broadcast costs K reference increments and zero copies.
+#[derive(Clone)]
+pub struct FrameBuf(Arc<Vec<u8>>);
+
+impl FrameBuf {
+    /// The empty frame (flag-only messages, probes).
+    pub fn empty() -> Self {
+        FrameBuf(Arc::new(Vec::new()))
+    }
+
+    /// Wrap an owned buffer (one allocation, then shared freely).
+    pub fn from_vec(v: Vec<u8>) -> Self {
+        FrameBuf(Arc::new(v))
+    }
+
+    /// Copy the frame out into an owned vector (cold paths only).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.0.as_ref().clone()
+    }
+
+    /// Internal: wrap a pool slot's backing buffer.
+    fn from_arc(a: Arc<Vec<u8>>) -> Self {
+        FrameBuf(a)
+    }
+}
+
+impl Deref for FrameBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.0.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for FrameBuf {
+    fn as_ref(&self) -> &[u8] {
+        self.0.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for FrameBuf {
+    fn from(v: Vec<u8>) -> Self {
+        FrameBuf::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for FrameBuf {
+    fn from(s: &[u8]) -> Self {
+        FrameBuf::from_vec(s.to_vec())
+    }
+}
+
+impl Default for FrameBuf {
+    fn default() -> Self {
+        FrameBuf::empty()
+    }
+}
+
+impl fmt::Debug for FrameBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.0.as_slice(), f)
+    }
+}
+
+impl PartialEq for FrameBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.as_slice() == other.0.as_slice()
+    }
+}
+
+impl Eq for FrameBuf {}
+
+impl PartialEq<Vec<u8>> for FrameBuf {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.0.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<FrameBuf> for Vec<u8> {
+    fn eq(&self, other: &FrameBuf) -> bool {
+        self.as_slice() == other.0.as_slice()
+    }
+}
+
+impl PartialEq<[u8]> for FrameBuf {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.0.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for FrameBuf {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.0.as_slice() == other.as_slice()
+    }
+}
+
+/// A recycling pool of frame backing buffers.
+///
+/// Invariants (the whole contract — see `docs/architecture.md`):
+///
+/// 1. The pool holds one `Arc` per slot forever. A slot is **free**
+///    exactly when its strong count is 1 (every [`FrameBuf`] handed out
+///    from it has been dropped — i.e. every receiver consumed the
+///    message).
+/// 2. [`frame_with`](Self::frame_with) reuses the first free slot:
+///    `clear()` + encode in place. `clear` keeps capacity, so once the
+///    payload size stabilizes (iteration 2 onward for a fixed-size
+///    Param) filling allocates nothing.
+/// 3. Only when **every** slot is still in flight does the pool grow —
+///    that is warm-up, bounded by the protocol's maximum frames in
+///    flight (≤ a couple per peer), never steady state.
+pub struct FramePool {
+    slots: Mutex<Vec<Arc<Vec<u8>>>>,
+}
+
+impl FramePool {
+    /// An empty pool; slots materialize on demand during warm-up.
+    pub fn new() -> Self {
+        FramePool { slots: Mutex::new(Vec::new()) }
+    }
+
+    /// Produce a frame by encoding into a recycled buffer (or a new one
+    /// during warm-up). `fill` receives an empty-but-capacitated buffer.
+    pub fn frame_with(&self, fill: impl FnOnce(&mut Vec<u8>)) -> FrameBuf {
+        match self.try_frame_with::<std::convert::Infallible>(|b| {
+            fill(b);
+            Ok(())
+        }) {
+            Ok(f) => f,
+            Err(never) => match never {},
+        }
+    }
+
+    /// Fallible variant of [`frame_with`](Self::frame_with) for fills
+    /// that can fail mid-way (the TCP reader's `read_exact`). On error
+    /// the slot stays pooled (possibly partially filled — it is cleared
+    /// before its next reuse), and the error is returned untouched.
+    pub fn try_frame_with<E>(
+        &self,
+        fill: impl FnOnce(&mut Vec<u8>) -> Result<(), E>,
+    ) -> Result<FrameBuf, E> {
+        let mut slots = self.slots.lock().unwrap_or_else(|p| p.into_inner());
+        for slot in slots.iter_mut() {
+            if let Some(buf) = Arc::get_mut(slot) {
+                buf.clear();
+                fill(buf)?;
+                return Ok(FrameBuf::from_arc(Arc::clone(slot)));
+            }
+        }
+        // Every slot is in flight: grow (warm-up only, invariant 3).
+        let mut v = Vec::new();
+        fill(&mut v)?;
+        let arc = Arc::new(v);
+        slots.push(Arc::clone(&arc));
+        Ok(FrameBuf::from_arc(arc))
+    }
+
+    /// Number of backing slots currently owned (test introspection).
+    pub fn slot_count(&self) -> usize {
+        self.slots.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
+impl Default for FramePool {
+    fn default() -> Self {
+        FramePool::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_compares_and_derefs_like_a_vec() {
+        let f = FrameBuf::from_vec(vec![1, 2, 3]);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f[1], 2);
+        assert_eq!(f, vec![1, 2, 3]);
+        assert_eq!(vec![1u8, 2, 3], f);
+        assert_eq!(f, [1u8, 2, 3]);
+        assert!(FrameBuf::empty().is_empty());
+        let g = f.clone();
+        assert_eq!(f, g, "clone shares the same bytes");
+    }
+
+    #[test]
+    fn pool_reuses_a_slot_once_the_frame_is_dropped() {
+        let pool = FramePool::new();
+        let a = pool.frame_with(|b| b.extend_from_slice(&[1, 2, 3]));
+        assert_eq!(pool.slot_count(), 1);
+        drop(a);
+        let b = pool.frame_with(|b| b.extend_from_slice(&[9]));
+        assert_eq!(pool.slot_count(), 1, "slot recycled, not regrown");
+        assert_eq!(b, vec![9], "stale bytes cleared before refill");
+    }
+
+    #[test]
+    fn pool_grows_only_while_frames_are_in_flight() {
+        let pool = FramePool::new();
+        let a = pool.frame_with(|b| b.push(1));
+        let b = pool.frame_with(|b| b.push(2));
+        assert_eq!(pool.slot_count(), 2, "both in flight: second slot");
+        assert_eq!((a[0], b[0]), (1, 2));
+        drop(a);
+        drop(b);
+        let c = pool.frame_with(|b| b.push(3));
+        let d = pool.frame_with(|b| b.push(4));
+        assert_eq!(pool.slot_count(), 2, "steady state: no growth");
+        assert_eq!((c[0], d[0]), (3, 4));
+    }
+
+    #[test]
+    fn broadcast_clones_share_one_slot() {
+        let pool = FramePool::new();
+        let order = pool.frame_with(|b| b.extend_from_slice(&[7; 16]));
+        let fanout: Vec<FrameBuf> = (0..8).map(|_| order.clone()).collect();
+        assert_eq!(pool.slot_count(), 1, "K clones, one backing buffer");
+        drop(order);
+        drop(fanout);
+        let reused = pool.frame_with(|b| b.push(1));
+        assert_eq!(pool.slot_count(), 1);
+        assert_eq!(reused, vec![1]);
+    }
+
+    #[test]
+    fn try_frame_with_propagates_errors_and_keeps_the_slot() {
+        let pool = FramePool::new();
+        drop(pool.frame_with(|b| b.push(1))); // seed one slot
+        let r: Result<FrameBuf, &str> = pool.try_frame_with(|b| {
+            b.push(42);
+            Err("short read")
+        });
+        assert_eq!(r.unwrap_err(), "short read");
+        assert_eq!(pool.slot_count(), 1, "failed fill does not leak slots");
+        let ok = pool.frame_with(|b| b.push(5));
+        assert_eq!(ok, vec![5], "partial fill cleared on reuse");
+    }
+}

@@ -22,10 +22,12 @@
 //! Ranks follow the paper's `BC_MpiRun` convention: workers are
 //! `0..K-1`, the **master is rank K** (`MPI_Comm_size - 1`).
 
+pub mod frame;
 pub mod tags;
 pub mod tcp;
 mod thread;
 
+pub use frame::{FrameBuf, FramePool};
 pub use tcp::TcpEndpoint;
 pub use thread::{build as build_thread_transport, ThreadEndpoint};
 
@@ -72,8 +74,9 @@ pub struct Message {
     pub from: usize,
     /// Protocol tag.
     pub tag: Tag,
-    /// Opaque payload bytes (codec-encoded).
-    pub payload: Vec<u8>,
+    /// Opaque payload bytes (codec-encoded), behind a shared frame —
+    /// dereferences to `&[u8]` wherever a decoder reads it.
+    pub payload: FrameBuf,
 }
 
 /// One process's view of the transport.
@@ -86,10 +89,19 @@ pub trait Communicator: Send {
     fn master_rank(&self) -> usize {
         self.size() - 1
     }
-    /// Send `payload` to `to`. Never blocks (buffered channels). Fails
-    /// with [`BsfError::Transport`] when the peer is gone or `to` is out
-    /// of range.
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError>;
+    /// Send a shared frame to `to`. Never blocks (buffered channels).
+    /// Fails with [`BsfError::Transport`] when the peer is gone or `to`
+    /// is out of range. This is the hot-path primitive: a broadcast
+    /// clones the same [`FrameBuf`] per peer (an `Arc` bump), and pooled
+    /// frames make steady-state sends allocation-free.
+    fn send_frame(&self, to: usize, tag: Tag, frame: FrameBuf) -> Result<(), BsfError>;
+    /// Send an owned `payload` to `to` — convenience wrapper over
+    /// [`send_frame`](Self::send_frame) for cold paths (control
+    /// messages, handshakes, tests); allocates the frame's backing
+    /// buffer once.
+    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+        self.send_frame(to, tag, FrameBuf::from_vec(payload))
+    }
     /// Blocking receive of the next message matching any of `tags`, from
     /// `from` (or any peer when `None`). Non-matching arrivals are
     /// buffered, never lost.

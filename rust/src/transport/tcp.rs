@@ -53,7 +53,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::{Communicator, Message, Tag, TransportStats};
+use super::{Communicator, FrameBuf, FramePool, Message, Tag, TransportStats};
 use crate::error::BsfError;
 
 /// Protocol magic, first bytes of both handshake messages.
@@ -155,6 +155,14 @@ pub fn write_frame<W: Write>(
 /// (`"short read ..."`). Both abort the stream — TCP gives no frame
 /// resynchronization.
 pub fn read_frame<R: Read>(r: &mut R) -> io::Result<(usize, Tag, Vec<u8>)> {
+    let (from, tag, len) = read_frame_header(r)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(short("frame payload"))?;
+    Ok((from, tag, payload))
+}
+
+/// Decode and validate one frame header, blocking until it is complete.
+fn read_frame_header<R: Read>(r: &mut R) -> io::Result<(usize, Tag, usize)> {
     let mut header = [0u8; HEADER_LEN];
     // First byte separately: 0 bytes here is a clean close, not an error
     // mid-frame.
@@ -181,8 +189,23 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<(usize, Tag, Vec<u8>)> {
             format!("frame claims a {len}-byte payload (limit {MAX_PAYLOAD})"),
         ));
     }
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload).map_err(short("frame payload"))?;
+    Ok((from, tag, len as usize))
+}
+
+/// [`read_frame`], but the payload lands in a recycled buffer from
+/// `pool` instead of a fresh allocation — the reader threads' hot path.
+/// Once the run's frame sizes stabilize, receiving allocates nothing.
+fn read_frame_pooled<R: Read>(
+    r: &mut R,
+    pool: &FramePool,
+) -> io::Result<(usize, Tag, FrameBuf)> {
+    let (from, tag, len) = read_frame_header(r)?;
+    let payload = pool.try_frame_with(|b| {
+        // `resize` reuses the slot's capacity; only a frame larger than
+        // anything the slot has held allocates.
+        b.resize(len, 0);
+        r.read_exact(b).map_err(short("frame payload"))
+    })?;
     Ok((from, tag, payload))
 }
 
@@ -267,13 +290,22 @@ struct TcpInbox {
     lost: Vec<(usize, String)>,
 }
 
+/// Write half of one connection plus its reusable frame-encoding
+/// scratch: steady-state sends clear and refill the scratch in place,
+/// so encoding a frame allocates nothing once its capacity has grown to
+/// the run's frame size.
+struct Writer {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+}
+
 /// One process's endpoint of the TCP transport.
 pub struct TcpEndpoint {
     rank: usize,
     size: usize,
     /// Write half per peer rank (`None` = no direct connection; the star
     /// topology only wires worker ↔ master).
-    writers: Vec<Option<Mutex<TcpStream>>>,
+    writers: Vec<Option<Mutex<Writer>>>,
     inbox: Mutex<TcpInbox>,
     stats: Arc<TransportStats>,
 }
@@ -286,14 +318,14 @@ impl TcpEndpoint {
     ) -> Result<Self, BsfError> {
         let stats = Arc::new(TransportStats::default());
         let (tx, rx) = channel();
-        let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..size).map(|_| None).collect();
+        let mut writers: Vec<Option<Mutex<Writer>>> = (0..size).map(|_| None).collect();
         for (peer_rank, stream) in peers {
             let _ = stream.set_nodelay(true);
             let reader = stream.try_clone().map_err(|e| {
                 BsfError::transport_io(format!("rank {rank}: clone stream to {peer_rank}"), e)
             })?;
             spawn_reader(reader, peer_rank, tx.clone(), Arc::clone(&stats));
-            writers[peer_rank] = Some(Mutex::new(stream));
+            writers[peer_rank] = Some(Mutex::new(Writer { stream, scratch: Vec::new() }));
         }
         Ok(Self {
             rank,
@@ -376,7 +408,7 @@ impl Communicator for TcpEndpoint {
         self.size
     }
 
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+    fn send_frame(&self, to: usize, tag: Tag, frame: FrameBuf) -> Result<(), BsfError> {
         let writer = self
             .writers
             .get(to)
@@ -387,15 +419,18 @@ impl Communicator for TcpEndpoint {
                     self.rank, self.size
                 ))
             })?;
-        // One buffered write per frame: a header-then-payload pair of
-        // small writes would otherwise hit Nagle/latency pathologies.
-        let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
-        write_frame(&mut buf, self.rank, tag, &payload)
-            .map_err(|e| BsfError::transport_io(format!("rank {}: encode frame", self.rank), e))?;
-        let mut stream = writer.lock().map_err(|_| {
+        let mut w = writer.lock().map_err(|_| {
             BsfError::transport(format!("rank {}: writer to {to} poisoned", self.rank))
         })?;
-        stream.write_all(&buf).map_err(|e| {
+        let Writer { stream, scratch } = &mut *w;
+        // One buffered write per frame: a header-then-payload pair of
+        // small writes would otherwise hit Nagle/latency pathologies.
+        // `clear` keeps the scratch capacity, so steady-state sends
+        // encode without allocating.
+        scratch.clear();
+        write_frame(scratch, self.rank, tag, &frame)
+            .map_err(|e| BsfError::transport_io(format!("rank {}: encode frame", self.rank), e))?;
+        stream.write_all(scratch).map_err(|e| {
             let ctx = format!("rank {}: send {tag:?} to rank {to}", self.rank);
             // A torn connection to a worker is a typed per-rank loss
             // (fault policies re-plan on it); other I/O failures and a
@@ -412,7 +447,7 @@ impl Communicator for TcpEndpoint {
                 BsfError::transport_io(ctx, e)
             }
         })?;
-        self.stats.record(tag, payload.len());
+        self.stats.record(tag, frame.len());
         Ok(())
     }
 
@@ -446,10 +481,12 @@ impl Communicator for TcpEndpoint {
     }
 
     fn undrained(&self) -> Vec<(usize, Tag)> {
-        let mut inbox = match self.inbox.lock() {
-            Ok(g) => g,
-            Err(_) => return Vec::new(),
-        };
+        // Recover a poisoned inbox instead of reporting "drained": this
+        // introspection backs `debug_assert_drained`, and a reader or
+        // receiver thread that panicked must not make that assertion
+        // pass vacuously. The inbox state itself (two plain queues) is
+        // valid regardless of where the panicking thread stopped.
+        let mut inbox = self.inbox.lock().unwrap_or_else(|p| p.into_inner());
         // Pull already-arrived events into the buffers so messages that
         // crossed the reader thread are visible (and stay receivable if
         // the caller continues).
@@ -477,9 +514,13 @@ fn spawn_reader(
     let spawned = std::thread::Builder::new()
         .name(format!("bsf-tcp-rx-{expect_from}"))
         .spawn(move || {
+            // Per-connection pool: steady-state frames are read into
+            // recycled buffers (freed once the receiver consumes the
+            // message), not fresh per-message allocations.
+            let pool = FramePool::new();
             let mut reader = io::BufReader::new(stream);
             loop {
-                match read_frame(&mut reader) {
+                match read_frame_pooled(&mut reader, &pool) {
                     Ok((from, tag, payload)) => {
                         if from != expect_from {
                             let _ = tx.send(Event::Lost {
@@ -835,7 +876,8 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         let m = got.expect("frame delivered");
-        assert_eq!((m.from, m.payload), (0, vec![9]));
+        assert_eq!(m.from, 0);
+        assert_eq!(m.payload, vec![9]);
     }
 
     #[test]
@@ -858,7 +900,8 @@ mod tests {
         assert!(master.try_recv_tags(Some(1), &[Tag::Fold]).is_none());
         // the filtered poll must not have lost the rank-0 message
         let m = master.try_recv_tags(Some(0), &[Tag::Fold]).expect("still buffered");
-        assert_eq!((m.from, m.payload), (0, vec![7]));
+        assert_eq!(m.from, 0);
+        assert_eq!(m.payload, vec![7]);
     }
 
     #[test]

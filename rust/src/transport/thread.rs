@@ -1,93 +1,88 @@
-//! Thread-backed transport: K+1 endpoints over `std::sync::mpsc`.
+//! Thread-backed transport: K+1 endpoints over in-process mailboxes.
 //!
-//! Each endpoint owns one unbounded receiver; every peer holds a cloned
-//! sender to it. `recv(from, tag)` provides MPI-style selective receive
-//! by buffering out-of-order arrivals in a pending queue (messages from
-//! the same peer+tag stay FIFO, matching MPI's non-overtaking guarantee).
+//! Each rank owns one mailbox — a condvar-guarded `VecDeque` of
+//! [`Message`]s — and every peer pushes directly into it. `recv(from,
+//! tag)` provides MPI-style selective receive by scanning the queue in
+//! arrival order (messages from the same peer+tag stay FIFO, matching
+//! MPI's non-overtaking guarantee).
 //!
-//! Failures are typed: a closed channel or out-of-range rank surfaces as
-//! [`BsfError::Transport`] instead of a panic, so the skeleton can report
-//! a torn run to the caller.
+//! The mailboxes replace the previous `std::sync::mpsc` channels for the
+//! hot path's sake: a channel send allocates a queue node per message,
+//! while a warmed `VecDeque` push is allocation-free — which is what
+//! lets a steady-state BSF iteration run without touching the heap
+//! (frames themselves are pooled [`FrameBuf`]s).
+//!
+//! Failures are typed: a closed mailbox (peer endpoint dropped) or an
+//! out-of-range rank surfaces as [`BsfError::Transport`] /
+//! [`BsfError::WorkerLost`] instead of a panic, so the skeleton can
+//! report a torn run to the caller.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
-use super::{Communicator, Message, Tag, TransportStats};
+use super::{Communicator, FrameBuf, Message, Tag, TransportStats};
 use crate::error::BsfError;
+
+/// One rank's mailbox: the queue plus a closed flag set when the owning
+/// endpoint drops (the moment its `mpsc` receiver used to disappear).
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+struct SlotState {
+    queue: VecDeque<Message>,
+    closed: bool,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            state: Mutex::new(SlotState { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Lock the slot, recovering a poisoned guard — a panicking peer
+    /// must not make the mailbox unobservable (the drain assertion and
+    /// teardown sends still need it).
+    fn lock(&self) -> MutexGuard<'_, SlotState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
 
 /// One process's endpoint of the thread transport.
 pub struct ThreadEndpoint {
     rank: usize,
     size: usize,
-    senders: Vec<Sender<Message>>,
-    // Mutex (not &mut) so worker threads can share the endpoint immutably.
-    inbox: Mutex<Inbox>,
+    slots: Vec<Arc<Slot>>,
     stats: Arc<TransportStats>,
-}
-
-struct Inbox {
-    rx: Receiver<Message>,
-    pending: VecDeque<Message>,
 }
 
 /// Build a transport with `workers + 1` endpoints (master is the last).
 pub fn build(workers: usize) -> Vec<ThreadEndpoint> {
     let size = workers + 1;
     let stats = Arc::new(TransportStats::default());
-    let mut txs = Vec::with_capacity(size);
-    let mut rxs = Vec::with_capacity(size);
-    for _ in 0..size {
-        let (tx, rx) = channel();
-        txs.push(tx);
-        rxs.push(rx);
-    }
-    rxs.into_iter()
-        .enumerate()
-        .map(|(rank, rx)| ThreadEndpoint {
+    let slots: Vec<Arc<Slot>> = (0..size).map(|_| Arc::new(Slot::new())).collect();
+    (0..size)
+        .map(|rank| ThreadEndpoint {
             rank,
             size,
-            senders: txs.clone(),
-            inbox: Mutex::new(Inbox { rx, pending: VecDeque::new() }),
+            slots: slots.clone(),
             stats: stats.clone(),
         })
         .collect()
 }
 
-impl ThreadEndpoint {
-    fn take_pending(
-        pending: &mut VecDeque<Message>,
-        from: Option<usize>,
-        tags: &[Tag],
-    ) -> Option<Message> {
-        let idx = pending.iter().position(|m| {
-            tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true)
-        })?;
-        pending.remove(idx)
-    }
-
-    fn recv_matching(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
-        let mut inbox = self.inbox.lock().map_err(|_| {
-            BsfError::transport(format!("rank {}: inbox poisoned", self.rank))
-        })?;
-        if let Some(m) = Self::take_pending(&mut inbox.pending, from, tags) {
-            return Ok(m);
-        }
-        loop {
-            let m = inbox.rx.recv().map_err(|_| {
-                BsfError::transport(format!(
-                    "rank {}: channel closed while receiving {tags:?}",
-                    self.rank
-                ))
-            })?;
-            let matches =
-                tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true);
-            if matches {
-                return Ok(m);
-            }
-            inbox.pending.push_back(m);
-        }
-    }
+fn take_matching(
+    queue: &mut VecDeque<Message>,
+    from: Option<usize>,
+    tags: &[Tag],
+) -> Option<Message> {
+    let idx = queue.iter().position(|m| {
+        tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true)
+    })?;
+    queue.remove(idx)
 }
 
 impl Communicator for ThreadEndpoint {
@@ -99,17 +94,17 @@ impl Communicator for ThreadEndpoint {
         self.size
     }
 
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
-        let sender = self.senders.get(to).ok_or_else(|| {
+    fn send_frame(&self, to: usize, tag: Tag, frame: FrameBuf) -> Result<(), BsfError> {
+        let slot = self.slots.get(to).ok_or_else(|| {
             BsfError::transport(format!(
                 "rank {}: send to rank {to} out of range (size {})",
                 self.rank, self.size
             ))
         })?;
-        let len = payload.len();
-        sender
-            .send(Message { from: self.rank, tag, payload })
-            .map_err(|_| {
+        let len = frame.len();
+        {
+            let mut st = slot.lock();
+            if st.closed {
                 let reason = format!(
                     "rank {}: rank {to} hung up while sending {tag:?}",
                     self.rank
@@ -117,38 +112,41 @@ impl Communicator for ThreadEndpoint {
                 // A vanished *worker* endpoint is a typed per-rank loss
                 // (the fault policies key on the rank); a vanished
                 // master stays a generic transport error.
-                if to + 1 < self.size {
+                return Err(if to + 1 < self.size {
                     BsfError::worker_lost(to, reason)
                 } else {
                     BsfError::transport(reason)
-                }
-            })?;
+                });
+            }
+            st.queue.push_back(Message { from: self.rank, tag, payload: frame });
+            slot.cv.notify_all();
+        }
         self.stats.record(tag, len);
         Ok(())
     }
 
     fn try_recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Option<Message> {
-        let mut inbox = self.inbox.lock().ok()?;
-        if let Some(m) = Self::take_pending(&mut inbox.pending, from, tags) {
-            return Some(m);
-        }
-        loop {
-            match inbox.rx.try_recv() {
-                Ok(m) => {
-                    let matches =
-                        tags.contains(&m.tag) && from.map(|f| m.from == f).unwrap_or(true);
-                    if matches {
-                        return Some(m);
-                    }
-                    inbox.pending.push_back(m);
-                }
-                Err(_) => return None,
-            }
-        }
+        let slot = &self.slots[self.rank];
+        let mut st = slot.lock();
+        take_matching(&mut st.queue, from, tags)
     }
 
     fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
-        self.recv_matching(from, tags)
+        let slot = &self.slots[self.rank];
+        let mut st = slot.lock();
+        loop {
+            if let Some(m) = take_matching(&mut st.queue, from, tags) {
+                return Ok(m);
+            }
+            // Nothing matching yet: park until a sender notifies. The
+            // owning endpoint is alive (we are it), so — like the old
+            // self-held mpsc sender — the wait can only end with a
+            // delivery, never a disconnect.
+            st = slot
+                .cv
+                .wait(st)
+                .unwrap_or_else(|p| p.into_inner());
+        }
     }
 
     fn stats(&self) -> Arc<TransportStats> {
@@ -156,16 +154,18 @@ impl Communicator for ThreadEndpoint {
     }
 
     fn undrained(&self) -> Vec<(usize, Tag)> {
-        let mut inbox = match self.inbox.lock() {
-            Ok(g) => g,
-            Err(_) => return Vec::new(),
-        };
-        // Pull already-arrived messages into the pending buffer so they
-        // are visible (and stay receivable if the caller continues).
-        while let Ok(m) = inbox.rx.try_recv() {
-            inbox.pending.push_back(m);
-        }
-        inbox.pending.iter().map(|m| (m.from, m.tag)).collect()
+        let st = self.slots[self.rank].lock();
+        st.queue.iter().map(|m| (m.from, m.tag)).collect()
+    }
+}
+
+impl Drop for ThreadEndpoint {
+    /// Mark the mailbox closed so peers' sends fail typed — exactly when
+    /// the old per-endpoint `mpsc` receiver would have disconnected.
+    fn drop(&mut self) {
+        let slot = &self.slots[self.rank];
+        slot.lock().closed = true;
+        slot.cv.notify_all();
     }
 }
 
@@ -282,10 +282,10 @@ mod tests {
         let master = eps.pop().unwrap();
         let worker = eps.pop().unwrap();
         drop(worker);
-        // master still holds a sender to itself, so recv would block; send
-        // to the dropped worker instead: its receiver is gone. The rank
-        // is known, so the loss is typed per-rank (fault policies key on
-        // it).
+        // master still holds its own mailbox open, so recv would block;
+        // send to the dropped worker instead: its mailbox is closed. The
+        // rank is known, so the loss is typed per-rank (fault policies
+        // key on it).
         let err = master.send(0, Tag::Order, vec![1]).unwrap_err();
         assert!(matches!(err, BsfError::WorkerLost { rank: 0, .. }), "{err}");
         // a dead *master* is still a generic transport error
@@ -316,7 +316,8 @@ mod tests {
         // rank-0 message.
         assert!(master.try_recv_tags(Some(1), &[Tag::Fold]).is_none());
         let m = master.try_recv_tags(Some(0), &[Tag::Fold]).expect("still buffered");
-        assert_eq!((m.from, m.payload), (0, vec![7]));
+        assert_eq!(m.from, 0);
+        assert_eq!(m.payload, vec![7]);
     }
 
     #[test]
@@ -374,9 +375,32 @@ mod tests {
         worker.send(1, Tag::User(7), vec![2]).unwrap();
         // the non-matching Fold is buffered, the User(7) is returned
         let m = master.try_recv_tags(None, &[Tag::User(7)]).unwrap();
-        assert_eq!((m.from, m.payload), (0, vec![2]));
+        assert_eq!(m.from, 0);
+        assert_eq!(m.payload, vec![2]);
         assert!(master.try_recv_tags(None, &[Tag::User(7)]).is_none());
         // the buffered Fold is still delivered by a blocking recv
         assert_eq!(master.recv(0, Tag::Fold).unwrap().payload, vec![1]);
+    }
+
+    #[test]
+    fn steady_state_send_reuses_pooled_frames_across_ranks() {
+        use crate::transport::FramePool;
+        // The broadcast pattern: one pooled frame, cloned per worker.
+        let mut eps = build(2);
+        let master = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let w0 = eps.pop().unwrap();
+        let pool = FramePool::new();
+        for round in 0..3u8 {
+            let frame = pool.frame_with(|b| b.extend_from_slice(&[round; 8]));
+            master.send_frame(0, Tag::Order, frame.clone()).unwrap();
+            master.send_frame(1, Tag::Order, frame).unwrap();
+            assert_eq!(w0.recv(2, Tag::Order).unwrap().payload, vec![round; 8]);
+            assert_eq!(w1.recv(2, Tag::Order).unwrap().payload, vec![round; 8]);
+        }
+        assert_eq!(pool.slot_count(), 1, "one slot serves every round");
+        let st = master.stats();
+        assert_eq!(st.tag_message_count(Tag::Order), 6);
+        assert_eq!(st.tag_byte_count(Tag::Order), 48);
     }
 }

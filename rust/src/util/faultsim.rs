@@ -39,7 +39,7 @@ use crate::skeleton::fault::TAG_REJOIN;
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::process::run_process_worker_with;
 use crate::skeleton::runner::launch_threaded_with;
-use crate::transport::{Communicator, Message, Tag, TransportStats};
+use crate::transport::{Communicator, FrameBuf, Message, Tag, TransportStats};
 
 /// Exit code a [`DieAfterFolds`]-killed worker process dies with.
 pub const KILLED_EXIT_CODE: i32 = 3;
@@ -175,7 +175,7 @@ impl<C: Communicator> Communicator for FlakyTransport<C> {
         self.inner.size()
     }
 
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+    fn send_frame(&self, to: usize, tag: Tag, frame: FrameBuf) -> Result<(), BsfError> {
         {
             let mut s = self.script.state.lock().expect("fault script lock");
             if tag == Tag::Order {
@@ -194,7 +194,7 @@ impl<C: Communicator> Communicator for FlakyTransport<C> {
                 return Ok(());
             }
         }
-        self.inner.send(to, tag, payload)
+        self.inner.send_frame(to, tag, frame)
     }
 
     fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {
@@ -240,7 +240,7 @@ impl<C: Communicator> Communicator for FlakyTransport<C> {
                     return Some(Message {
                         from: r,
                         tag: TAG_REJOIN,
-                        payload: Vec::new(),
+                        payload: FrameBuf::empty(),
                     });
                 }
             }
@@ -325,7 +325,7 @@ impl<C: Communicator> Communicator for DieAfterFolds<C> {
         self.inner.size()
     }
 
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+    fn send_frame(&self, to: usize, tag: Tag, frame: FrameBuf) -> Result<(), BsfError> {
         if tag == Tag::Fold {
             let mut left = self.remaining.lock().expect("fold budget lock");
             if *left == 0 {
@@ -337,7 +337,7 @@ impl<C: Communicator> Communicator for DieAfterFolds<C> {
             }
             *left -= 1;
         }
-        self.inner.send(to, tag, payload)
+        self.inner.send_frame(to, tag, frame)
     }
 
     fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {

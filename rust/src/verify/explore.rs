@@ -25,7 +25,7 @@ use crate::skeleton::driver::Checkpoint;
 use crate::skeleton::master::MasterLoop;
 use crate::skeleton::problem::BsfProblem;
 use crate::skeleton::worker::run_worker_guarded;
-use crate::transport::{Communicator, Message, Tag, TransportStats};
+use crate::transport::{Communicator, FrameBuf, Message, Tag, TransportStats};
 use crate::util::codec::Codec;
 use crate::verify::vcomm::{Choice, DriveResult, FaultPlan, World};
 
@@ -83,11 +83,13 @@ impl<C: Communicator> Communicator for DuplicateFold<C> {
         self.inner.size()
     }
 
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+    fn send_frame(&self, to: usize, tag: Tag, frame: FrameBuf) -> Result<(), BsfError> {
         if tag == Tag::Fold && !self.fired.swap(true, Ordering::Relaxed) {
-            self.inner.send(to, tag, payload.clone())?;
+            // `FrameBuf::clone` is a reference bump: the duplicate shares
+            // the original's bytes, exactly like a re-sent wire frame.
+            self.inner.send_frame(to, tag, frame.clone())?;
         }
-        self.inner.send(to, tag, payload)
+        self.inner.send_frame(to, tag, frame)
     }
 
     fn recv_tags(&self, from: Option<usize>, tags: &[Tag]) -> Result<Message, BsfError> {

@@ -43,7 +43,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::error::BsfError;
-use crate::transport::{tags, Communicator, Message, Tag, TransportStats};
+use crate::transport::{tags, Communicator, FrameBuf, Message, Tag, TransportStats};
 
 /// How long either side waits before declaring the system wedged. Only
 /// reached when a thread is neither parked in this transport nor making
@@ -464,7 +464,7 @@ impl Communicator for VerifyEndpoint {
         self.world.size
     }
 
-    fn send(&self, to: usize, tag: Tag, payload: Vec<u8>) -> Result<(), BsfError> {
+    fn send_frame(&self, to: usize, tag: Tag, frame: FrameBuf) -> Result<(), BsfError> {
         let mut st = self.world.lock();
         if st.aborting {
             return Err(self.aborted());
@@ -482,11 +482,11 @@ impl Communicator for VerifyEndpoint {
         if st.dead[to] {
             return Err(self.peer_dead(to, &format!("sending {tag:?}")));
         }
-        let len = payload.len();
+        let len = frame.len();
         st.in_flight
             .entry((self.rank, to))
             .or_default()
-            .push_back(Message { from: self.rank, tag, payload });
+            .push_back(Message { from: self.rank, tag, payload: frame });
         self.world.stats.record(tag, len);
         Ok(())
     }

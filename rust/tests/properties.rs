@@ -98,6 +98,48 @@ fn prop_engines_numerics_agree() {
 }
 
 #[test]
+fn prop_overlapped_orders_are_bit_identical() {
+    // The double-buffered order path (`cfg.overlap`) changes *when*
+    // workers receive order i+1, never its bytes: order i+1 depends only
+    // on reduce i, which the master has fully merged before pre-sending.
+    // So for arbitrary (n, K, T) the overlapped run must be bit-identical
+    // to the plain threaded run — same iteration count, bit-equal param,
+    // and the same message count (overlap reorders sends, never adds
+    // any) — for a dense Vec<f64> wire shape (jacobi) and a sparse
+    // variable-length one (pagerank) alike.
+    use bsf::problems::pagerank::PageRankProblem;
+    use bsf::skeleton::BsfConfig;
+
+    qcheck(6, |rng| {
+        let n = size_in(rng, 8, 32);
+        let k = size_in(rng, 1, 6);
+        let t = size_in(rng, 1, 3);
+        let seed = rng.next();
+        let cfg = |overlap: bool| {
+            BsfConfig::with_workers(k)
+                .threads_per_worker(t)
+                .max_iter(300)
+                .overlapped(overlap)
+        };
+
+        let (p_off, _) = JacobiProblem::random(n, 1e-12, seed);
+        let (p_on, _) = JacobiProblem::random(n, 1e-12, seed);
+        let off = Bsf::new(p_off).config(cfg(false)).engine(ThreadedEngine).run().unwrap();
+        let on = Bsf::new(p_on).config(cfg(true)).engine(ThreadedEngine).run().unwrap();
+        assert_eq!(off.iterations, on.iterations);
+        assert_eq!(off.param, on.param, "overlap must be bit-identical");
+        assert_eq!(off.messages, on.messages, "overlap must not add messages");
+
+        let mk = || PageRankProblem::new(n, n.clamp(1, 16), 1e-10, seed);
+        let off = Bsf::new(mk()).config(cfg(false)).engine(ThreadedEngine).run().unwrap();
+        let on = Bsf::new(mk()).config(cfg(true)).engine(ThreadedEngine).run().unwrap();
+        assert_eq!(off.iterations, on.iterations);
+        assert_eq!(off.param, on.param, "sparse payloads must be bit-identical too");
+        assert_eq!(off.messages, on.messages);
+    });
+}
+
+#[test]
 fn prop_extended_reduce_counter_equals_participants() {
     qcheck(100, |rng| {
         let n = size_in(rng, 0, 80);

@@ -25,6 +25,15 @@
 //!   non-test `skeleton/` + `transport/` code must not exceed the budget
 //!   in `tools/bsf-lint/unwrap-ratchet.txt`. It can only go down: shrink
 //!   the budget when you remove one.
+//! * **L6 — no swallowed endpoint sends.** A `let _ = …send…(…, Tag…)`
+//!   in non-test `skeleton/` + `transport/` code silently drops a
+//!   protocol send failure — the class of bug where a dead peer's
+//!   teardown error vanishes instead of landing in the run's teardown
+//!   summary. Deliberate fire-and-forget sites (a spawn-failure cleanup
+//!   whose original error must win) opt out with a
+//!   `// lint: teardown-send` marker on the same line. Channel sends
+//!   (`tx.send(…)` without a tag argument) are not protocol sends and
+//!   are ignored.
 //!
 //! Heuristics are line-based (no rustc, no dependencies): test modules
 //! are recognized by the repo-wide convention that `#[cfg(test)]` starts
@@ -163,6 +172,7 @@ fn lint(sources: &[SourceFile], budget: usize) -> LintReport {
     check_magic_outside_registry(sources, &mut v);
     check_send_recv_coverage(sources, &tag_tokens, &mut v);
     check_wire_sizes(sources, &mut v);
+    check_swallowed_sends(sources, &mut v);
     let unwraps = check_unwrap_ratchet(sources, budget, &mut v, &mut notes);
 
     LintReport { violations: v, notes, files: sources.len(), tags: tag_tokens.len(), unwraps }
@@ -393,6 +403,42 @@ fn check_wire_sizes(sources: &[SourceFile], v: &mut Vec<String>) {
     }
 }
 
+/// The L6 escape hatch: marks a discarded endpoint send as deliberate
+/// fire-and-forget (e.g. a cleanup path whose original error must take
+/// precedence over an unreachable endpoint).
+const TEARDOWN_SEND_MARKER: &str = "// lint: teardown-send";
+
+/// L6: no `let _ = …send…(…, Tag…)` in non-test `skeleton/` +
+/// `transport/` code. Discarding an endpoint send's `Result` swallows a
+/// protocol failure; record it (the master's teardown summary) or mark
+/// the site with [`TEARDOWN_SEND_MARKER`]. The `Tag::`/`TAG_` argument
+/// requirement keeps plain channel sends (`tx.send(value)`) out of
+/// scope — those `Result`s signal a dropped receiver, not a peer loss.
+fn check_swallowed_sends(sources: &[SourceFile], v: &mut Vec<String>) {
+    for s in sources {
+        if !(s.rel.starts_with("skeleton/") || s.rel.starts_with("transport/")) {
+            continue;
+        }
+        for (no, line) in non_test_lines(&s.text) {
+            if is_comment(line) || line.contains(TEARDOWN_SEND_MARKER) {
+                continue;
+            }
+            let discards = line.contains("let _ = ");
+            let endpoint_send = (line.contains(".send(") || line.contains(".send_frame("))
+                && (line.contains("Tag::") || line.contains("TAG_"));
+            if discards && endpoint_send {
+                v.push(format!(
+                    "{}:{no}: discarded endpoint send — a failed protocol send \
+                     must be recorded (teardown summary) or absorbed, not \
+                     swallowed; deliberate fire-and-forget sites carry \
+                     `{TEARDOWN_SEND_MARKER}`",
+                    s.rel
+                ));
+            }
+        }
+    }
+}
+
 /// L5: the unwrap ratchet over `skeleton/` and `transport/` non-test
 /// code. Returns the observed count.
 fn check_unwrap_ratchet(
@@ -596,6 +642,55 @@ mod tests {
             "{:?}",
             report.violations
         );
+    }
+
+    #[test]
+    fn swallowed_endpoint_send_fails() {
+        let mut fx = clean_fixture();
+        fx[1].text.push_str(
+            "fn teardown(comm: &dyn Communicator) {\n    \
+             let _ = comm.send(0, Tag::Exit, vec![]);\n}\n",
+        );
+        let report = lint(&fx, 0);
+        assert!(
+            report.violations.iter().any(|v| v.contains("discarded endpoint send")),
+            "{:?}",
+            report.violations
+        );
+        // send_frame is the same protocol surface.
+        let mut fx = clean_fixture();
+        fx[1].text.push_str("let _ = comm.send_frame(0, Tag::Exit, frame);\n");
+        let report = lint(&fx, 0);
+        assert!(
+            report.violations.iter().any(|v| v.contains("discarded endpoint send")),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn marked_teardown_send_passes() {
+        let mut fx = clean_fixture();
+        fx[1].text.push_str(
+            "let _ = comm.send(0, Tag::Exit, vec![]); // lint: teardown-send\n",
+        );
+        let report = lint(&fx, 0);
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+    }
+
+    #[test]
+    fn channel_sends_and_other_crates_are_out_of_l6_scope() {
+        let mut fx = clean_fixture();
+        // A plain mpsc send has no tag argument: not a protocol send.
+        fx[1].text.push_str("let _ = tx.send(Event::Lost { rank });\n");
+        // Outside skeleton/ + transport/, even a discarded tagged send
+        // is not this lint's business.
+        fx.push(file(
+            "runtime/service.rs",
+            "let _ = comm.send(0, Tag::Exit, vec![]);\n",
+        ));
+        let report = lint(&fx, 0);
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
     }
 
     #[test]
